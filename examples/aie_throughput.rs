@@ -1,0 +1,56 @@
+//! Regenerate the paper's hardware evaluation on the AIE tile model:
+//! Table III (kernel throughput + speedups, both device generations),
+//! the CLB reciprocal ablation (§III-B-c), and Fig. 3 (multi-tile
+//! scaling), with per-stage cycle attribution.
+//!
+//! Run: `cargo run --release --example aie_throughput`
+
+use anyhow::Result;
+
+use hccs::aie_sim::device::{Device, DeviceKind};
+use hccs::aie_sim::kernels::KernelKind;
+use hccs::aie_sim::tile::TileSim;
+use hccs::experiments;
+
+fn main() -> Result<()> {
+    println!("{}", experiments::table3()?);
+    println!("{}", experiments::clb_ablation());
+    println!("{}", experiments::fig3()?);
+
+    // Capacity planning: array share the softmax stage needs for real
+    // encoder workloads (the paper's "a full DNN workload will not
+    // typically allocate such a large portion of the array" remark).
+    println!("softmax tile allocation for encoder inference traces (AIE-MLv2):");
+    let dev = Device::new(DeviceKind::AieMlV2);
+    for kernel in [KernelKind::Bf16Ref, KernelKind::HccsI8Clb] {
+        println!("  {}:", kernel.name());
+        for (name, rate, alloc) in hccs::aie_sim::trace::share_table(&dev, kernel) {
+            println!(
+                "    {name:<18} @ {rate:>7.0}/s -> {:>3} tiles ({:>5.1}% of array), \
+                 occ {:>4.0}%, softmax latency {:.1}us",
+                alloc.tiles,
+                alloc.array_share * 100.0,
+                alloc.occupancy * 100.0,
+                alloc.latency_s * 1e6
+            );
+        }
+    }
+    println!();
+
+    // MAC-utilization view (the §Perf "roofline" for the integer path).
+    println!("int8 MAC utilization (HCCS kernels, n=128):");
+    for kind in [DeviceKind::AieMl, DeviceKind::AieMlV2] {
+        let dev = Device::new(kind);
+        for k in [KernelKind::HccsI16Div, KernelKind::HccsI8Clb] {
+            let sim = TileSim::new(dev, k);
+            println!(
+                "  {:<10} {:<14} {:.1}% of {} MACs/cycle peak",
+                dev.short_name(),
+                k.name(),
+                sim.mac_utilization(128) * 100.0,
+                dev.peak_int8_macs
+            );
+        }
+    }
+    Ok(())
+}

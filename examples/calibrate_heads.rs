@@ -1,0 +1,118 @@
+//! Per-head calibration walkthrough (paper §III-C + Table II intuition).
+//!
+//! Synthesizes three attention heads with very different statistics — a
+//! broad head, a focused head, and a heavy-tailed head — then calibrates
+//! θ_h per-head and globally, showing (i) the grid search adapts slope
+//! and clamp to each head, and (ii) per-head calibration dominates the
+//! shared/global parameterization in KL, which is exactly the Table II
+//! mechanism.  Also loads real artifact calibrations when present.
+//!
+//! Run: `cargo run --release --example calibrate_heads`
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use hccs::coordinator::HeadParamStore;
+use hccs::hccs::calibrate::{calibrate_rows, calibrate_scale, quantize_i8};
+use hccs::hccs::kernel::{hccs_rows, OutputPath, Reciprocal};
+use hccs::hccs::stats::{kl, mean, normalize_phat, softmax};
+use hccs::report::Table;
+use hccs::rng::Xoshiro256;
+
+fn synth_head(rng: &mut Xoshiro256, n: usize, rows: usize, kind: &str) -> Vec<Vec<f64>> {
+    (0..rows)
+        .map(|_| {
+            (0..n)
+                .map(|i| match kind {
+                    // Broad: small logit spread, mass over many keys.
+                    "broad" => (rng.f64() + rng.f64() - 1.0) * 1.5,
+                    // Focused: one dominant key per row.
+                    "focused" => {
+                        if i == (rng.next_u64() % 4) as usize {
+                            6.0 + rng.f64() * 4.0
+                        } else {
+                            (rng.f64() - 0.5) * 2.0
+                        }
+                    }
+                    // Heavy-tailed: occasional large outliers.
+                    _ => {
+                        let v = (rng.f64() + rng.f64() - 1.0) * 2.0;
+                        if rng.chance(1, 16) { v * 6.0 } else { v }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let n = 64usize;
+    let mut rng = Xoshiro256::new(7);
+    let heads: Vec<(&str, Vec<Vec<f64>>)> = vec![
+        ("broad", synth_head(&mut rng, n, 192, "broad")),
+        ("focused", synth_head(&mut rng, n, 192, "focused")),
+        ("heavy-tail", synth_head(&mut rng, n, 192, "tail")),
+    ];
+
+    // Per-head calibration.
+    let mut t = Table::new(
+        "Per-head calibration (synthetic heads, n=64)",
+        &["head", "B", "S", "Dmax", "gamma", "KL per-head", "KL global"],
+    );
+    let pooled: Vec<Vec<f64>> = heads.iter().flat_map(|(_, r)| r.clone()).collect();
+    let g_pool = calibrate_scale(&pooled.iter().flatten().cloned().collect::<Vec<_>>(), 99.9);
+    let global = calibrate_rows(&pooled, n, g_pool);
+
+    for (name, rows) in &heads {
+        let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
+        let gamma = calibrate_scale(&flat, 99.9);
+        let cal = calibrate_rows(rows, n, gamma);
+        // Evaluate the *global* θ on this head's rows for the ablation gap.
+        let xq: Vec<i8> = rows.iter().flat_map(|r| quantize_i8(r, global.gamma)).collect();
+        let phat = hccs_rows(&xq, n, &vec![global.params; rows.len()], OutputPath::I16, Reciprocal::Div);
+        let kl_global = mean(
+            &rows
+                .iter()
+                .enumerate()
+                .map(|(r, row)| kl(&softmax(row), &normalize_phat(&phat[r * n..(r + 1) * n])))
+                .collect::<Vec<_>>(),
+        );
+        t.row(&[
+            name.to_string(),
+            cal.params.b.to_string(),
+            cal.params.s.to_string(),
+            cal.params.dmax.to_string(),
+            format!("{:.4}", cal.gamma),
+            format!("{:.4}", cal.kl),
+            format!("{kl_global:.4}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "global θ = (B={}, S={}, Dmax={}) — note the per-head column never loses,\n\
+         and heterogeneous heads (focused vs broad) gain the most: the Table II effect.\n",
+        global.params.b, global.params.s, global.params.dmax
+    );
+
+    // Real artifacts, if built.
+    let artifacts = PathBuf::from(hccs::ARTIFACTS_DIR);
+    for (model, task, n) in [("bert-tiny", "sst2s", 64usize), ("bert-small", "mnlis", 128)] {
+        for suffix in ["", "_fast"] {
+            let p = artifacts.join(format!("calib_{model}_{task}{suffix}.json"));
+            if p.exists() {
+                let store = HeadParamStore::load(&p, n)?;
+                println!(
+                    "artifact calibration {model}/{task}: {} layers x {} heads, \
+                     mean per-head KL {:.3}, global KL {:.3}",
+                    store.per_head.layers,
+                    store.per_head.heads,
+                    mean(&store.per_head.kl),
+                    mean(&store.global.kl),
+                );
+                break;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Quickstart: the HCCS surrogate end to end in five minutes.
+//!
+//! 1. run the *Rust* integer kernel on a batch of synthetic int8 logits;
+//! 2. load the *Pallas-kernel HLO artifact* and run the same batch
+//!    through PJRT, asserting bit-exact agreement;
+//! 3. compare both against exact float softmax (KL divergence) to show
+//!    the surrogate tracks the real distribution.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use hccs::hccs::stats::{kl, normalize_phat, softmax};
+use hccs::hccs::{hccs_row, HccsParams, OutputPath, Reciprocal};
+use hccs::rng::Xoshiro256;
+use hccs::runtime::{KernelRunner, Runtime};
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| hccs::ARTIFACTS_DIR.to_string()),
+    );
+    let (rows, n) = (8usize, 64usize);
+
+    // Synthetic attention logits: a few sharp rows, a few broad ones.
+    let mut rng = Xoshiro256::new(1);
+    let mut x_f64 = vec![vec![0f64; n]; rows];
+    for (r, row) in x_f64.iter_mut().enumerate() {
+        let spread = if r % 2 == 0 { 2.0 } else { 8.0 };
+        for v in row.iter_mut() {
+            *v = (rng.f64() + rng.f64() - 1.0) * spread;
+        }
+    }
+
+    // Quantize with a simple symmetric scale and pick a feasible θ.
+    let gamma = 8.0 / 127.0;
+    let x_i8: Vec<i8> = x_f64
+        .iter()
+        .flatten()
+        .map(|&v| (v / gamma).round().clamp(-128.0, 127.0) as i8)
+        .collect();
+    let theta = HccsParams::checked(300, 4, 64, n).context("infeasible θ")?;
+    println!("θ = (B={}, S={}, Dmax={}),  n={n},  feasible ✓", theta.b, theta.s, theta.dmax);
+
+    // 1. Rust integer kernel.
+    println!("\n-- Rust HCCS core (i16+div) --");
+    let mut rust_out = Vec::new();
+    for r in 0..rows {
+        let phat = hccs_row(&x_i8[r * n..(r + 1) * n], &theta, OutputPath::I16, Reciprocal::Div);
+        let p_ref = softmax(&x_f64[r]);
+        let d = kl(&p_ref, &normalize_phat(&phat));
+        println!("  row {r}: Σp̂ = {:>5}, KL(softmax ‖ HCCS) = {d:.4} nats", phat.iter().sum::<i32>());
+        rust_out.extend(phat);
+    }
+
+    // 2. The AOT Pallas kernel through PJRT (if artifacts are built).
+    let hlo = artifacts.join("hccs_softmax_i16_div_n64.hlo.txt");
+    if hlo.exists() {
+        println!("\n-- Pallas kernel artifact via PJRT ({}) --", hlo.display());
+        let rt = Rc::new(Runtime::cpu()?);
+        println!("  platform: {}", rt.platform());
+        let runner = KernelRunner::load(rt, &hlo, rows, n)?;
+        let b = vec![theta.b; rows];
+        let s = vec![theta.s; rows];
+        let d = vec![theta.dmax; rows];
+        let xla_out = runner.run(&x_i8, &b, &s, &d)?;
+        assert_eq!(xla_out, rust_out, "PJRT kernel and Rust core disagree!");
+        println!("  bit-exact with the Rust core across {rows}x{n} ✓");
+    } else {
+        println!("\n(skipping PJRT round-trip: run `make artifacts` to build {})", hlo.display());
+    }
+
+    // 3. CLB variant: same ordering, ≤2x overshoot, no divide.
+    println!("\n-- CLB reciprocal variant (i8+CLB) --");
+    let phat_div = hccs_row(&x_i8[..n], &theta, OutputPath::I8, Reciprocal::Div);
+    let phat_clb = hccs_row(&x_i8[..n], &theta, OutputPath::I8, Reciprocal::Clb);
+    println!("  Σp̂ div = {}, Σp̂ clb = {} (CLB overestimates ≤2x, order preserved)",
+        phat_div.iter().sum::<i32>(), phat_clb.iter().sum::<i32>());
+    let rank = |p: &[i32]| {
+        let mut idx: Vec<usize> = (0..p.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(p[i]));
+        idx
+    };
+    assert_eq!(rank(&phat_div)[..5], rank(&phat_clb)[..5], "top-5 rank changed");
+    println!("  top-5 attention ranks identical ✓");
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! End-to-end serving driver (the E2E validation deliverable).
+//!
+//! Loads the QAT-retrained HCCS BERT executable through the coordinator,
+//! generates a live labeled workload with the cross-language generator,
+//! serves it through the dynamic batcher, and reports accuracy,
+//! throughput, and latency percentiles — the serving-paper analogue of
+//! "load a small real model and serve batched requests".
+//!
+//! Run: `make artifacts && cargo run --release --example serve_classifier -- \
+//!        [--model bert-tiny] [--task sst2s] [--variant hccs] [--requests 256]`
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use hccs::cli::Args;
+use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hccs::data::{TaskKind, WorkloadGen};
+
+const KNOWN: &[&str] =
+    &["artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "wait-ms=", "seed="];
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), KNOWN).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", hccs::ARTIFACTS_DIR));
+    let model = args.get_or("model", "bert-tiny").to_string();
+    let task_name = args.get_or("task", "sst2s").to_string();
+    let variant = args.get_or("variant", "hccs").to_string();
+    let requests = args.parse_num("requests", 256usize)?;
+    let batch = args.parse_num("batch", 8usize)?;
+    let wait_ms = args.parse_num("wait-ms", 5u64)?;
+    let seed = args.parse_num("seed", 99u64)?;
+    let task = TaskKind::parse(&task_name).context("bad --task (sst2s|mnlis)")?;
+
+    println!("== serve_classifier: {model}/{task_name}/{variant}, {requests} requests, batch {batch}");
+    let (coord, handle) = Coordinator::start(CoordinatorConfig {
+        artifacts,
+        model,
+        task: task_name.clone(),
+        variant,
+        policy: BatchPolicy {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(wait_ms),
+        },
+        max_in_flight: None,
+    })
+    .context("starting coordinator — did you run `make artifacts`?")?;
+
+    // Open-loop client: submit everything, then collect (the batcher
+    // forms full batches; per-request latency includes queueing).
+    let mut generator = WorkloadGen::new(task, seed);
+    let mut expected = Vec::with_capacity(requests);
+    let mut receivers = Vec::with_capacity(requests);
+    let t0 = Instant::now();
+    for _ in 0..requests {
+        let ex = generator.next_example();
+        expected.push(ex.label);
+        receivers.push(coord.submit(ex.ids, ex.segments)?);
+    }
+    let mut correct = 0usize;
+    let mut latencies_us: Vec<u64> = Vec::with_capacity(requests);
+    for (rx, want) in receivers.into_iter().zip(&expected) {
+        let reply = rx
+            .recv()
+            .context("engine dropped request")?
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        correct += (reply.predicted as i32 == *want) as usize;
+        latencies_us.push(reply.latency.as_micros() as u64);
+    }
+    let wall = t0.elapsed();
+    coord.shutdown();
+    let _ = handle.join();
+
+    latencies_us.sort();
+    let pct = |p: f64| latencies_us[((latencies_us.len() - 1) as f64 * p) as usize];
+    println!("\nresults:");
+    println!("  accuracy    : {:.4} ({correct}/{requests})", correct as f64 / requests as f64);
+    println!("  wall time   : {wall:?}");
+    println!("  throughput  : {:.1} req/s", requests as f64 / wall.as_secs_f64());
+    println!(
+        "  latency     : p50 {}us  p95 {}us  p99 {}us  max {}us",
+        pct(0.50), pct(0.95), pct(0.99), latencies_us.last().unwrap()
+    );
+    println!("\ncoordinator metrics:\n{}", coord.metrics.render());
+    Ok(())
+}

@@ -1,0 +1,413 @@
+"""Build-time orchestrator: train → calibrate → QAT → export artifacts/.
+
+``python -m compile.aot [--out DIR] [--fast]`` runs the entire paper
+pipeline once and writes everything the Rust runtime needs; it is a no-op
+for any stage whose cached output already exists (``artifacts/cache/``),
+so ``make artifacts`` is cheap after the first build.
+
+Pipeline per (model, task) pair — bert-{tiny,small} × {sst2s,mnlis}:
+
+  1. train float32-softmax baseline                    (Table I "Baseline")
+  2. collect per-head attention logits on a calibration split
+  3. grid-search theta_h at per-head / per-layer / global granularity
+  4. evaluate direct HCCS substitution (no retrain)    (Table I "No-retrain")
+  5. QAT-retrain with frozen theta (per-head)          (Table I "Retrained")
+  6. QAT-retrain with global / per-layer theta         (Table II ablation)
+  7. export: model HLOs (float + hccs_int), weights.bin, manifest.json,
+     calib json, eval dataset .bin, attention dumps (Fig. 2), train logs
+
+Model-independent artifacts: vocab.json, standalone Pallas kernel HLOs
+(n = 32/64/128 × 4 modes), golden test vectors shared with the Rust core.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import calibrate as cal
+from . import data as D
+from . import train as T
+from .export import (
+    dump_json,
+    flatten_params,
+    lower_kernel_hlo,
+    lower_model_hlo,
+    write_weights_bin,
+)
+from .kernels import ref
+from .kernels.hccs import VALID_MODES, hccs_softmax
+from .model import (
+    HccsConfig,
+    ModelConfig,
+    bert_small,
+    bert_tiny,
+    encoder_forward,
+    init_params,
+    param_count,
+)
+
+EVAL_EXAMPLES = 512
+CALIB_EXAMPLES = 64  # paper §V-A(d): 64 calibration batch samples
+KERNEL_ROWS = 8
+KERNEL_LENGTHS = (32, 64, 128)
+
+# Training budgets, sized for the single-core CPU in this image (see
+# DESIGN.md §2 and EXPERIMENTS.md).  "fast" divides everything by 10 for
+# smoke runs.
+BUDGETS = {
+    ("bert-tiny", "sst2s"): dict(base=1100, qat=350, abl=175, batch=32),
+    ("bert-tiny", "mnlis"): dict(base=700, qat=250, abl=125, batch=32),
+    ("bert-small", "sst2s"): dict(base=300, qat=100, abl=50, batch=32),
+    ("bert-small", "mnlis"): dict(base=240, qat=70, abl=35, batch=16),
+}
+
+
+def model_for(name: str, task: D.TaskSpec) -> ModelConfig:
+    mk = bert_tiny if name == "bert-tiny" else bert_small
+    return mk(D.VOCAB_SIZE, task.max_len, task.n_classes)
+
+
+# ---------------------------------------------------------------------------
+# Cache plumbing
+# ---------------------------------------------------------------------------
+
+
+class Cache:
+    def __init__(self, root: Path):
+        self.root = root
+        root.mkdir(parents=True, exist_ok=True)
+
+    def load(self, key: str):
+        p = self.root / f"{key}.pkl"
+        if p.exists():
+            with open(p, "rb") as f:
+                return pickle.load(f)
+        return None
+
+    def store(self, key: str, value) -> None:
+        with open(self.root / f"{key}.pkl", "wb") as f:
+            pickle.dump(value, f)
+
+
+def params_to_numpy(params):
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), params)
+
+
+# ---------------------------------------------------------------------------
+# Stage: standalone kernels + golden vectors
+# ---------------------------------------------------------------------------
+
+
+def export_kernels(out: Path) -> None:
+    for n in KERNEL_LENGTHS:
+        for mode in ("i16_div", "i8_clb"):
+            path = out / f"hccs_softmax_{mode}_n{n}.hlo.txt"
+            if not path.exists():
+                lower_kernel_hlo(hccs_softmax, KERNEL_ROWS, n, mode, path)
+                print(f"  kernel HLO {path.name}")
+    # The vendor-style bf16 reference softmax (Table III baseline) for the
+    # Rust-side fidelity comparison harness.
+    bpath = out / "bf16_softmax_n64.hlo.txt"
+    if not bpath.exists():
+        from .kernels.bf16_ref import bf16_softmax
+
+        x = jax.ShapeDtypeStruct((KERNEL_ROWS, 64), jnp.int8)
+        g = jax.ShapeDtypeStruct((KERNEL_ROWS,), jnp.float32)
+        lowered = jax.jit(lambda xq, gamma: (bf16_softmax(xq, gamma),)).lower(x, g)
+        from .export import to_hlo_text
+
+        bpath.write_text(to_hlo_text(lowered))
+        print(f"  kernel HLO {bpath.name}")
+
+
+def random_feasible_theta(rng: np.random.Generator, n: int) -> tuple[int, int, int]:
+    """Sample (B, S, Dmax) uniformly from the paper Eq. (11) feasible set."""
+    while True:
+        dmax = int(rng.integers(1, 128))
+        s = int(rng.integers(0, 17))
+        lo, hi = ref.feasible_B_band(s, dmax, n)
+        if lo <= hi:
+            return int(rng.integers(lo, hi + 1)), s, dmax
+
+
+def export_golden(out: Path) -> None:
+    """Cross-language golden vectors: random + adversarial boundary rows."""
+    gold = out / "golden"
+    gold.mkdir(exist_ok=True)
+    path = gold / "hccs_rows.json"
+    if path.exists():
+        return
+    rng = np.random.default_rng(42)
+    cases = []
+    for n in (2, 3, 32, 64, 128, 200):
+        for case in range(4):
+            B, S, Dmax = random_feasible_theta(rng, n)
+            if case == 0:
+                x = rng.integers(-128, 128, n)  # generic
+            elif case == 1:
+                x = np.full(n, int(rng.integers(-128, 128)))  # all-equal row
+            elif case == 2:
+                x = np.full(n, -128)
+                x[int(rng.integers(0, n))] = 127  # one-hot extreme
+            else:
+                x = np.clip(rng.integers(-8, 9, n).cumsum(), -128, 127)  # drift
+            x = x.astype(np.int8)
+            entry = {"n": n, "x": x.tolist(), "B": B, "S": S, "Dmax": Dmax, "out": {}}
+            for mode in VALID_MODES:
+                o, r = mode.split("_")
+                phat = ref.hccs_int_rows(x, B, S, Dmax, out=o, recip=r)
+                entry["out"][mode] = phat.tolist()
+            cases.append(entry)
+    dump_json(path, {"cases": cases})
+    print(f"  golden vectors: {len(cases)} cases")
+
+
+# ---------------------------------------------------------------------------
+# Stage: per-(model, task) pipeline
+# ---------------------------------------------------------------------------
+
+
+def eval_int(params, cfg, ds, hccs: HccsConfig, mode: str, batch: int = 32) -> float:
+    """Deployment-path accuracy: exact integer HCCS attention."""
+    h = HccsConfig(
+        gamma=np.asarray(hccs.gamma), B=np.asarray(hccs.B), S=np.asarray(hccs.S),
+        Dmax=np.asarray(hccs.Dmax), mode=mode, use_pallas=False,
+    )
+    fn = T.make_eval_fn(cfg, "hccs_int", h)
+    return fn(params, ds, batch=batch)
+
+
+def attention_dump(params, cfg, ds, hccs_j, attn: str, batch: int = 32) -> dict:
+    """Fig. 2 data: per-head mean entropy + rank-sorted mean prob curves."""
+    bi = jnp.asarray(ds["ids"][:batch])
+    bs = jnp.asarray(ds["segments"][:batch])
+    _, aux = encoder_forward(params, cfg, bi, bs, attn=attn, hccs=hccs_j, capture=True)
+    valid = np.asarray(bi != 0)
+    out = {"heads": []}
+    for li, probs in enumerate(aux["attn_probs"]):
+        a = np.asarray(probs)  # (B, H, Q, K)
+        for hi in range(cfg.heads):
+            rows = a[:, hi][valid]  # (n_rows, K) valid-query rows
+            ent = float(np.mean(-np.sum(rows * np.log(np.maximum(rows, 1e-12)), -1)))
+            curve = np.sort(rows, axis=-1)[:, ::-1].mean(axis=0)
+            out["heads"].append(
+                {"layer": li, "head": hi, "entropy": ent, "curve": curve.tolist()}
+            )
+    return out
+
+
+def kl_vs_float(params, cfg, ds, hccs: HccsConfig, batch: int = 32) -> dict:
+    """§V-C: per-head KL(softmax || HCCS) on *fixed* weights."""
+    rows = cal.collect_head_logits(params, cfg, ds["ids"][:batch], ds["segments"][:batch])
+    kls = np.zeros((cfg.layers, cfg.heads))
+    for li in range(cfg.layers):
+        for hi in range(cfg.heads):
+            r = rows[li][hi][:256]
+            xq = np.clip(np.round(r / hccs.gamma[li, hi]), -128, 127).astype(np.int8)
+            phat = ref.hccs_int_rows(xq, hccs.B[li, hi], hccs.S[li, hi], hccs.Dmax[li, hi])
+            kls[li, hi] = float(
+                np.mean(ref.kl_divergence(ref.softmax_f32(r), ref.normalize_phat(phat)))
+            )
+    return {"per_head_kl": kls.tolist(), "mean": float(kls.mean())}
+
+
+def hccs_to_json(h: HccsConfig, kl: np.ndarray) -> dict:
+    return {
+        "gamma": np.asarray(h.gamma).tolist(),
+        "B": np.asarray(h.B).tolist(),
+        "S": np.asarray(h.S).tolist(),
+        "Dmax": np.asarray(h.Dmax).tolist(),
+        "mode": h.mode,
+        "calib_kl": np.asarray(kl).tolist(),
+    }
+
+
+def run_pair(
+    model_name: str, task: D.TaskSpec, out: Path, cache: Cache, fast: bool
+) -> dict:
+    cfg = model_for(model_name, task)
+    budget = BUDGETS[(model_name, task.name)].copy()
+    if fast:
+        for k in ("base", "qat", "abl"):
+            budget[k] = max(10, budget[k] // 10)
+    tag = f"{model_name}_{task.name}" + ("_fast" if fast else "")
+    print(f"== {tag}: {param_count(init_params(jax.random.PRNGKey(0), cfg)):,} params")
+
+    eval_ds = D.make_dataset(task, EVAL_EXAMPLES, seed=2)
+    calib_ds = D.make_dataset(task, CALIB_EXAMPLES, seed=3)
+
+    # -- 1. float32 baseline ------------------------------------------------
+    key = f"{tag}_baseline"
+    hit = cache.load(key)
+    if hit is None:
+        params, log = T.train_model(
+            cfg, task, attn="softmax", steps=budget["base"], batch=budget["batch"],
+            eval_every=max(budget["base"] // 4, 1), eval_ds=eval_ds,
+        )
+        hit = (params_to_numpy(params), log.to_dict())
+        cache.store(key, hit)
+    base_params, base_log = hit
+    eval_fn = T.make_eval_fn(cfg, "softmax", None)
+    acc_base = eval_fn(base_params, eval_ds)
+    print(f"  baseline acc = {acc_base:.3f}")
+
+    # -- 2/3. calibrate -----------------------------------------------------
+    key = f"{tag}_calib"
+    hit = cache.load(key)
+    if hit is None:
+        rows = cal.collect_head_logits(base_params, cfg, calib_ds["ids"], calib_ds["segments"])
+        hit = {
+            g: cal.calibrate_model(rows, cfg, task.max_len, granularity=g)
+            for g in ("per-head", "per-layer", "global")
+        }
+        cache.store(key, hit)
+    calib = hit
+    hccs_ph, kl_ph = calib["per-head"]
+
+    # -- 4. no-retrain eval (deployment path) --------------------------------
+    acc_nort = eval_int(base_params, cfg, eval_ds, hccs_ph, "i16_div")
+    print(f"  no-retrain acc (i16+div) = {acc_nort:.3f}")
+
+    # -- 5/6. QAT retrain at three granularities -----------------------------
+    qat = {}
+    for gran, steps in (("per-head", budget["qat"]), ("global", budget["abl"]),
+                        ("per-layer", budget["abl"])):
+        key = f"{tag}_qat_{gran}"
+        hit = cache.load(key)
+        if hit is None:
+            h, _ = calib[gran]
+            params, log = T.train_model(
+                cfg, task, attn="hccs_qat", hccs=h, steps=steps,
+                batch=budget["batch"], lr=1e-4, warmup=20,
+                eval_every=max(steps // 2, 1), eval_ds=eval_ds,
+                init=jax.tree_util.tree_map(jnp.asarray, base_params),
+            )
+            hit = (params_to_numpy(params), log.to_dict())
+            cache.store(key, hit)
+        qat[gran] = hit
+
+    accs = {}
+    for gran in ("per-head", "global", "per-layer"):
+        h, _ = calib[gran]
+        accs[gran] = eval_int(qat[gran][0], cfg, eval_ds, h, "i16_div")
+        print(f"  retrained[{gran}] acc (i16+div) = {accs[gran]:.3f}")
+    acc_clb = eval_int(qat["per-head"][0], cfg, eval_ds, hccs_ph, "i8_clb")
+    print(f"  retrained[per-head] acc (i8+clb) = {acc_clb:.3f}")
+
+    # -- 7. export ------------------------------------------------------------
+    hccs_j = HccsConfig(
+        gamma=jnp.asarray(hccs_ph.gamma, jnp.float32), B=jnp.asarray(hccs_ph.B),
+        S=jnp.asarray(hccs_ph.S), Dmax=jnp.asarray(hccs_ph.Dmax),
+        mode="i16_div", use_pallas=True,
+    )
+    manifests = {}
+    for variant, params, attn, hj in (
+        ("float", base_params, "softmax", None),
+        ("hccs", qat["per-head"][0], "hccs_int", hccs_j),
+    ):
+        names, arrays = flatten_params(params)
+        wpath = out / f"weights_{tag}_{variant}.bin"
+        if not wpath.exists():
+            write_weights_bin(wpath, names, arrays)
+        for b in (1, 8):
+            hpath = out / f"model_{tag}_{variant}_b{b}.hlo.txt"
+            if not hpath.exists():
+                m = lower_model_hlo(
+                    jax.tree_util.tree_map(jnp.asarray, params), cfg, attn, hj, b, hpath
+                )
+                m["weights"] = wpath.name
+                manifests[f"{variant}_b{b}"] = m
+                print(f"  lowered {hpath.name}")
+            else:
+                names_, arrays_ = flatten_params(params)
+                manifests[f"{variant}_b{b}"] = {
+                    "hlo": hpath.name, "batch": b, "seq_len": cfg.max_len,
+                    "n_classes": cfg.n_classes, "weights": wpath.name,
+                    "params": [{"name": n, "shape": list(a.shape)} for n, a in zip(names_, arrays_)],
+                    "extra_inputs": ["ids:i32", "segments:i32"], "attn": attn,
+                }
+
+    dump_json(out / f"calib_{tag}.json", {
+        g: hccs_to_json(calib[g][0], calib[g][1]) for g in calib
+    })
+
+    # Fig. 2 + §V-C fidelity data
+    hccs_eval_j = HccsConfig(
+        gamma=jnp.asarray(hccs_ph.gamma, jnp.float32), B=jnp.asarray(hccs_ph.B),
+        S=jnp.asarray(hccs_ph.S), Dmax=jnp.asarray(hccs_ph.Dmax), mode="i16_div",
+    )
+    dump_json(out / f"attn_dump_{tag}.json", {
+        "float": attention_dump(base_params, cfg, eval_ds, None, "softmax"),
+        "hccs": attention_dump(qat["per-head"][0], cfg, eval_ds, hccs_eval_j, "hccs_int"),
+        "kl_fixed_weights": kl_vs_float(base_params, cfg, calib_ds, hccs_ph),
+    })
+    dump_json(out / f"train_log_{tag}.json", {
+        "baseline": base_log, "qat": qat["per-head"][1],
+        "qat_global": qat["global"][1], "qat_per_layer": qat["per-layer"][1],
+    })
+
+    summary = {
+        "model": model_name, "task": task.name,
+        "params": param_count(init_params(jax.random.PRNGKey(0), cfg)),
+        "baseline_acc": acc_base, "noretrain_acc": acc_nort,
+        "retrained_acc": accs["per-head"], "retrained_acc_i8clb": acc_clb,
+        "ablation": {"global": accs["global"], "per_layer": accs["per-layer"],
+                     "per_head": accs["per-head"]},
+        "budget": budget,
+        "manifests": manifests,
+    }
+    dump_json(out / f"summary_{tag}.json", summary)
+    return summary
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(Path(__file__).resolve().parents[2] / "artifacts"))
+    ap.add_argument("--fast", action="store_true", help="10x smaller training budgets")
+    ap.add_argument("--pairs", default="all", help="comma list like bert-tiny/sst2s")
+    args = ap.parse_args()
+    t0 = time.time()
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    cache = Cache(out / "cache")
+    fast = args.fast or bool(os.environ.get("FAST"))
+
+    print("== model-independent artifacts")
+    dump_json(out / "vocab.json", {"tokens": D.VOCAB})
+    export_kernels(out)
+    export_golden(out)
+    for task in (D.SST2S, D.MNLIS):
+        p = out / f"eval_{task.name}.bin"
+        if not p.exists():
+            D.write_dataset_bin(str(p), task, D.make_dataset(task, EVAL_EXAMPLES, seed=2))
+            print(f"  dataset {p.name}")
+
+    pairs = [
+        (m, t)
+        for m in ("bert-tiny", "bert-small")
+        for t in (D.SST2S, D.MNLIS)
+        if args.pairs == "all" or f"{m}/{t.name}" in args.pairs
+    ]
+    summaries = []
+    for model_name, task in pairs:
+        summaries.append(run_pair(model_name, task, out, cache, fast))
+
+    dump_json(out / "eval_summary.json", {"pairs": summaries, "fast": fast})
+    print(f"== artifacts complete in {time.time() - t0:.0f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

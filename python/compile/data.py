@@ -1,0 +1,292 @@
+"""Synthetic SST-2-like and MNLI-like datasets (DESIGN.md §2).
+
+The image has no network access, so GLUE cannot be fetched; the paper's
+claims are *deltas* (float baseline vs no-retrain HCCS vs retrained HCCS),
+so we substitute seeded synthetic tasks in which attention is genuinely
+load-bearing:
+
+* **sst2s** — template sentiment with negation scoping: the label is the
+  sign of the sum of sentiment-word polarities, where a preceding "not"
+  flips the polarity of the next sentiment word.  A bag-of-words model
+  cannot resolve the negation binding; attention can.
+* **mnlis** — premise/hypothesis inference with three classes: the
+  hypothesis is an ordered subsequence of the premise (entailment), the
+  same with one entity swapped for its antonym partner (contradiction),
+  or contains an entity absent from the premise (neutral).  Solving it
+  requires cross-segment token matching, i.e. attention.
+
+Everything is generated from a **splitmix64** stream that is mirrored
+bit-for-bit in ``rust/src/rng/`` and ``rust/src/data/`` — the Rust serving
+workload generator produces the *identical* examples for the same seed,
+which doubles as a cross-language integration test.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# splitmix64 — the shared deterministic PRNG (mirrored in rust/src/rng/).
+# ---------------------------------------------------------------------------
+
+_MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Sequential splitmix64; identical outputs to rust/src/rng/splitmix.rs."""
+
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+    def below(self, n: int) -> int:
+        """Uniform in [0, n) by modulo (n << 2^64: bias negligible, and the
+        same construction is used on the Rust side so streams agree)."""
+        return self.next_u64() % n
+
+    def chance(self, num: int, den: int) -> bool:
+        """True with probability num/den (integer-exact across languages)."""
+        return self.below(den) < num
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary — one shared vocab for both tasks (exported to vocab.json).
+# ---------------------------------------------------------------------------
+
+PAD, CLS, SEP, UNK = 0, 1, 2, 3
+
+N_FILLER = 150
+N_SENT = 20  # positive and negative sentiment words each
+N_ENT = 80  # mnlis entities
+N_ANT = 20  # antonym pairs (ant_aXX <-> ant_bXX)
+
+
+def build_vocab() -> list[str]:
+    """Deterministic token list; index == token id."""
+    toks = ["[PAD]", "[CLS]", "[SEP]", "[UNK]"]
+    toks += [f"w{i:03d}" for i in range(N_FILLER)]
+    toks += [f"good{i:02d}" for i in range(N_SENT)]
+    toks += [f"bad{i:02d}" for i in range(N_SENT)]
+    toks += ["not", "very"]
+    toks += [f"e{i:03d}" for i in range(N_ENT)]
+    toks += [f"ant_a{i:02d}" for i in range(N_ANT)]
+    toks += [f"ant_b{i:02d}" for i in range(N_ANT)]
+    return toks
+
+
+VOCAB = build_vocab()
+VOCAB_INDEX = {t: i for i, t in enumerate(VOCAB)}
+VOCAB_SIZE = len(VOCAB)
+
+FILLER0 = 4
+POS0 = FILLER0 + N_FILLER
+NEG0 = POS0 + N_SENT
+NOT_ID = NEG0 + N_SENT
+VERY_ID = NOT_ID + 1
+ENT0 = VERY_ID + 1
+ANT_A0 = ENT0 + N_ENT
+ANT_B0 = ANT_A0 + N_ANT
+
+
+def antonym(tok_id: int) -> int:
+    """Partner of an antonym-pair token (identity for everything else)."""
+    if ANT_A0 <= tok_id < ANT_A0 + N_ANT:
+        return tok_id - ANT_A0 + ANT_B0
+    if ANT_B0 <= tok_id < ANT_B0 + N_ANT:
+        return tok_id - ANT_B0 + ANT_A0
+    return tok_id
+
+
+# ---------------------------------------------------------------------------
+# sst2s — sentiment with negation scoping.
+# ---------------------------------------------------------------------------
+
+
+def score_body(body: list[int]) -> int:
+    """Negation-scoped sentiment score of a token sequence: Σ(±1 per
+    sentiment word, sign flipped when the preceding token is "not").
+    The label is *defined* on the visible (truncated) surface form, so no
+    example can contradict its own evidence."""
+    s = 0
+    for i, t in enumerate(body):
+        if POS0 <= t < POS0 + N_SENT:
+            pol = 1
+        elif NEG0 <= t < NEG0 + N_SENT:
+            pol = -1
+        else:
+            continue
+        if i > 0 and body[i - 1] == NOT_ID:
+            pol = -pol
+        s += pol
+    return s
+
+
+def gen_sst2s(rng: SplitMix64, max_len: int) -> tuple[list[int], int]:
+    """One example: ([CLS] body tokens [SEP]) ids (unpadded), label in {0,1}.
+
+    Body length is 8..(max_len-2); 1..4 sentiment slots, each negated with
+    probability 3/10.  Ties (score 0) are broken by overwriting a filler
+    slot with one extra un-negated sentiment word.
+    """
+    body_len = 8 + rng.below(max_len - 2 - 8 + 1)
+    n_slots = 1 + rng.below(4)
+    body = [FILLER0 + rng.below(N_FILLER) for _ in range(body_len)]
+    # Choose distinct slot positions; a negated slot consumes position-1 too.
+    used: set[int] = set()
+    for _ in range(n_slots):
+        pos = 1 + rng.below(max(body_len - 1, 1))
+        if pos in used or (pos - 1) in used or (pos + 1) in used:
+            continue
+        positive = rng.chance(1, 2)
+        negated = rng.chance(3, 10)
+        word = (POS0 if positive else NEG0) + rng.below(N_SENT)
+        body[pos] = word
+        if negated:
+            body[pos - 1] = NOT_ID
+            used.add(pos - 1)
+        used.add(pos)
+    score = score_body(body)
+    if score == 0:
+        positive = rng.chance(1, 2)
+        word = (POS0 if positive else NEG0) + rng.below(N_SENT)
+        # Overwrite the last plain-filler slot (always exists for a zero
+        # score: either no slots were placed — all filler — or opposing
+        # sentiment words cover at most 8 of >= 8 positions and ties need
+        # an even, hence < maximal, slot count).
+        target = None
+        for j in range(len(body) - 1, -1, -1):
+            if FILLER0 <= body[j] < POS0:
+                target = j
+                break
+        if target is None:  # pathological fallback: flip the first word
+            target = 0
+        body[target] = word
+        score = score_body(body)
+        if score == 0:  # the overwrite landed behind a "not": flip word
+            body[target] = (NEG0 if positive else POS0) + (word - (POS0 if positive else NEG0))
+            score = score_body(body)
+    ids = [CLS] + body + [SEP]
+    return ids, 1 if score > 0 else 0
+
+
+# ---------------------------------------------------------------------------
+# mnlis — premise/hypothesis entailment.
+# ---------------------------------------------------------------------------
+
+ENTAIL, NEUTRAL, CONTRADICT = 0, 1, 2
+
+
+def gen_mnlis(rng: SplitMix64, max_len: int) -> tuple[list[int], list[int], int]:
+    """One example: (ids, segment_ids, label in {0,1,2}).
+
+    Layout: [CLS] premise [SEP] hypothesis [SEP]; segment 0 covers
+    [CLS]..first [SEP], segment 1 the rest.
+    """
+    label = rng.below(3)
+    prem_len = 6 + rng.below(9)  # 6..14 content tokens
+    # Premise: mostly entities, some filler, and always >= 1 antonym-pair
+    # word so the contradiction construction is well-defined.
+    prem: list[int] = []
+    for _ in range(prem_len):
+        if rng.chance(1, 4):
+            prem.append(FILLER0 + rng.below(N_FILLER))
+        else:
+            prem.append(ENT0 + rng.below(N_ENT))
+    ant_pos = rng.below(prem_len)
+    prem[ant_pos] = ANT_A0 + rng.below(N_ANT)
+
+    ent_positions = [i for i, t in enumerate(prem) if t >= ENT0]
+    hyp_len = 2 + rng.below(4)  # 2..5 tokens
+    # Ordered subsequence of premise content tokens.
+    picks = sorted({ent_positions[rng.below(len(ent_positions))] for _ in range(hyp_len)})
+    hyp = [prem[i] for i in picks]
+
+    if label == CONTRADICT:
+        # Swap one antonym-capable token for its partner; guarantee one.
+        idxs = [i for i, t in enumerate(hyp) if antonym(t) != t]
+        if not idxs:
+            hyp[rng.below(len(hyp))] = prem[ant_pos]
+            idxs = [i for i, t in enumerate(hyp) if antonym(t) != t]
+        j = idxs[rng.below(len(idxs))]
+        hyp[j] = antonym(hyp[j])
+    elif label == NEUTRAL:
+        # Inject an entity that is absent from the premise.
+        prem_set = set(prem)
+        while True:
+            cand = ENT0 + rng.below(N_ENT)
+            if cand not in prem_set:
+                break
+        hyp[rng.below(len(hyp))] = cand
+
+    ids = [CLS] + prem + [SEP] + hyp + [SEP]
+    segs = [0] * (2 + len(prem)) + [1] * (len(hyp) + 1)
+    if len(ids) > max_len:
+        ids, segs = ids[:max_len], segs[:max_len]
+    return ids, segs, label
+
+
+# ---------------------------------------------------------------------------
+# Batched dataset construction + binary export (read by rust/src/data/).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    name: str
+    max_len: int
+    n_classes: int
+    has_segments: bool
+
+
+SST2S = TaskSpec("sst2s", 64, 2, False)
+MNLIS = TaskSpec("mnlis", 128, 3, True)
+TASKS = {t.name: t for t in (SST2S, MNLIS)}
+
+
+def make_dataset(task: TaskSpec, n: int, seed: int) -> dict[str, np.ndarray]:
+    """Generate ``n`` padded examples; deterministic in (task, n, seed)."""
+    rng = SplitMix64(seed)
+    ids = np.zeros((n, task.max_len), dtype=np.int32)
+    segs = np.zeros((n, task.max_len), dtype=np.int32)
+    labels = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        if task.name == "sst2s":
+            ex, lab = gen_sst2s(rng, task.max_len)
+            seg = [0] * len(ex)
+        else:
+            ex, seg, lab = gen_mnlis(rng, task.max_len)
+        ids[i, : len(ex)] = ex
+        segs[i, : len(seg)] = seg
+        labels[i] = lab
+    return {"ids": ids, "segments": segs, "labels": labels}
+
+
+MAGIC = b"HCCSDS01"
+
+
+def write_dataset_bin(path: str, task: TaskSpec, ds: dict[str, np.ndarray]) -> None:
+    """Little-endian binary layout consumed by rust/src/data/dataset.rs:
+
+    magic[8] | u32 n | u32 seq_len | u32 n_classes | u32 has_segments
+    then per example: seq_len i32 ids, seq_len i32 segments, i32 label.
+    """
+    n = ds["ids"].shape[0]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        header = np.array(
+            [n, task.max_len, task.n_classes, int(task.has_segments)],
+            dtype="<u4",
+        )
+        f.write(header.tobytes())
+        for i in range(n):
+            f.write(ds["ids"][i].astype("<i4").tobytes())
+            f.write(ds["segments"][i].astype("<i4").tobytes())
+            f.write(np.int32(ds["labels"][i]).astype("<i4").tobytes())

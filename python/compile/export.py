@@ -1,0 +1,130 @@
+"""Artifact serialization helpers: HLO text, weights, golden vectors.
+
+Interchange contracts (consumed by the Rust side):
+
+* **HLO text** — the only computation interchange format.  jax >= 0.5
+  serializes HloModuleProto with 64-bit instruction ids which the image's
+  xla_extension 0.5.1 rejects; the HLO *text* parser reassigns ids and
+  round-trips cleanly (see /opt/xla-example/README.md).
+* **weights .bin** — ``HCCSTW01`` container: flattened parameter leaves in
+  pytree order (path-sorted, deterministic), float32 little-endian.
+  Baking 13M bert-small floats into HLO text as decimal constants would
+  produce ~150 MB artifacts; passing them as runtime operands keeps the
+  HLO small and lets one executable serve any checkpoint.
+* **manifest .json** — names/shapes of the parameter operands in operand
+  order plus model/task metadata, so the Rust runtime can bind
+  weights.bin entries to executable arguments positionally.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+WEIGHTS_MAGIC = b"HCCSTW01"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the proto-id-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params) -> tuple[list[str], list[np.ndarray]]:
+    """Deterministic (names, leaves) for a parameter pytree."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(params)[0]
+    names, arrays = [], []
+    for path, leaf in leaves_with_path:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append("/".join(parts))
+        arrays.append(np.asarray(leaf, dtype=np.float32))
+    return names, arrays
+
+
+def write_weights_bin(path: Path, names: list[str], arrays: list[np.ndarray]) -> None:
+    """HCCSTW01 | u32 count | per tensor: u32 name_len, name bytes,
+    u32 ndim, u32 dims..., f32 data (little-endian)."""
+    with open(path, "wb") as f:
+        f.write(WEIGHTS_MAGIC)
+        f.write(struct.pack("<I", len(names)))
+        for name, arr in zip(names, arrays):
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def lower_model_hlo(params, cfg, attn, hccs_j, batch: int, out_path: Path) -> dict:
+    """Lower ``fn(weights..., ids, segments) -> (class_logits,)`` to HLO text.
+
+    Returns the manifest fragment describing the operand binding.
+    """
+    from .model import encoder_forward  # local import to avoid cycles
+
+    names, arrays = flatten_params(params)
+    treedef = jax.tree_util.tree_structure(params)
+
+    def fn(flat, ids, segments):
+        p = jax.tree_util.tree_unflatten(treedef, flat)
+        logits, _ = encoder_forward(p, cfg, ids, segments, attn=attn, hccs=hccs_j)
+        return (logits,)
+
+    flat_specs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for a in arrays]
+    ids_spec = jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32)
+    seg_spec = jax.ShapeDtypeStruct((batch, cfg.max_len), jnp.int32)
+    lowered = jax.jit(fn).lower(flat_specs, ids_spec, seg_spec)
+    text = to_hlo_text(lowered)
+    out_path.write_text(text)
+    return {
+        "hlo": out_path.name,
+        "batch": batch,
+        "seq_len": cfg.max_len,
+        "n_classes": cfg.n_classes,
+        "params": [{"name": n, "shape": list(a.shape)} for n, a in zip(names, arrays)],
+        "extra_inputs": ["ids:i32", "segments:i32"],
+        "attn": attn,
+    }
+
+
+def lower_kernel_hlo(kernel_fn, r: int, c: int, mode: str, out_path: Path) -> None:
+    """Lower the standalone Pallas HCCS row kernel for a fixed (R, C)."""
+    x = jax.ShapeDtypeStruct((r, c), jnp.int8)
+    p = jax.ShapeDtypeStruct((r,), jnp.int32)
+
+    def fn(x_i8, B, S, D):
+        return (kernel_fn(x_i8, B, S, D, mode=mode),)
+
+    lowered = jax.jit(fn).lower(x, p, p, p)
+    out_path.write_text(to_hlo_text(lowered))
+
+
+def dump_json(path: Path, obj) -> None:
+    def default(o):
+        if isinstance(o, (np.integer,)):
+            return int(o)
+        if isinstance(o, (np.floating,)):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        raise TypeError(f"not jsonable: {type(o)}")
+
+    path.write_text(json.dumps(obj, indent=1, default=default))

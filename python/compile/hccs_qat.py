@@ -1,0 +1,55 @@
+"""Differentiable HCCS forward for quantization-aware training (QAT).
+
+During retraining (paper §III-C / §V-B) the surrogate parameters theta_h =
+(B_h, S_h, Dmax_h) and the logit scale gamma_h are *frozen*; the model
+weights adapt around the fixed nonlinearity.  The forward pass below
+computes the same clipped-linear surrogate the integer kernel computes —
+on the int8 grid via straight-through fake quantization — but keeps the
+normalization in real arithmetic so gradients are well-behaved:
+
+    xq      = fake_quant(x / gamma)                (STE round + clip)
+    delta_i = min(max_j xq_j - xq_i, Dmax_h)       (piecewise-linear)
+    s_i     = B_h - S_h * delta_i                  (>= floor > 0)
+    p_i     = s_i / sum_j s_j
+
+The max, min and clip are differentiable a.e.; the integer truncation of
+the deployment-time reciprocal (rho = floor(T/Z)) contributes < 1/256
+relative error and is deliberately *not* modeled in the QAT forward — the
+int16-vs-uint8 transfer argument of §III-C applies equally here, and
+python/tests/test_qat.py bounds the train/deploy output gap.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .quant import fake_quant_i8
+
+
+def hccs_qat_probs(
+    logits: jnp.ndarray,
+    gamma: jnp.ndarray,
+    B: jnp.ndarray,
+    S: jnp.ndarray,
+    Dmax: jnp.ndarray,
+) -> jnp.ndarray:
+    """HCCS attention probabilities with QAT semantics.
+
+    Parameters
+    ----------
+    logits: (..., heads, q, k) float attention logits (mask already added).
+    gamma:  (heads,) frozen per-head logit quantization scale.
+    B, S, Dmax: (heads,) frozen surrogate parameters (float-castable ints).
+
+    Returns float probabilities of the same shape, rows summing to 1.
+    """
+    g = gamma[..., :, None, None]
+    xq = fake_quant_i8(logits, g)  # int8 grid, float dtype, STE backward
+    b = B[..., :, None, None].astype(logits.dtype)
+    s = S[..., :, None, None].astype(logits.dtype)
+    d = Dmax[..., :, None, None].astype(logits.dtype)
+    m = jnp.max(xq, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - xq, d)
+    scores = b - s * delta  # >= B - S*Dmax >= ceil(256/n) > 0 by calibration
+    z = jnp.sum(scores, axis=-1, keepdims=True)
+    return scores / z

@@ -1,0 +1,73 @@
+"""The vendor-style BF16 reference softmax as a Pallas kernel.
+
+The paper's baseline (AMD IRON bf16 softmax: unpack int8 → bf16,
+max-subtract, exponential, sum, reciprocal, scale, repack to the integer
+grid) implemented in the same Pallas dialect as the HCCS kernel so the two
+can be compared end to end on the same artifacts path — the software
+analogue of Table III's baseline column, and the accuracy oracle for the
+quantize→softmax→requantize pipeline HCCS replaces.
+
+bfloat16 rounding is modeled explicitly (round-to-nearest-even via the
+f32 bit pattern) because the fidelity loss of the bf16 exponential is
+part of what the paper's accuracy comparison absorbs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+T_I16 = 32767
+T_I8 = 255
+
+
+def _to_bf16(x: jnp.ndarray) -> jnp.ndarray:
+    """Round f32 → bf16 → f32 (the precision the AIE datapath carries)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _bf16_softmax_kernel(x_ref, scale_ref, o_ref, *, t: int):
+    """Reference pipeline on one (Rb, C) tile of int8 logits."""
+    x = x_ref[...].astype(jnp.float32)  # unpack int8 -> float
+    gamma = scale_ref[...][:, None]  # per-row dequant scale
+    xf = _to_bf16(x * gamma)  # dequantized logits in bf16
+    m = jnp.max(xf, axis=-1, keepdims=True)  # max-subtract (stability)
+    e = _to_bf16(jnp.exp(_to_bf16(xf - m)))  # bf16 exponential
+    z = jnp.sum(e, axis=-1, keepdims=True)  # bf16 accumulate
+    inv = _to_bf16(1.0 / z)  # bf16 reciprocal
+    p = e * inv
+    # Requantize to the integer probability grid (what the int8 pipeline
+    # downstream consumes) with round-to-nearest.
+    o_ref[...] = jnp.clip(jnp.round(p * t), 0, t).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "block_rows"))
+def bf16_softmax(
+    x_i8: jnp.ndarray,
+    gamma: jnp.ndarray,
+    t: int = T_I16,
+    block_rows: int = 8,
+) -> jnp.ndarray:
+    """Vendor-style bf16 softmax over int8 logits.
+
+    x_i8: (R, C) int8; gamma: (R,) float32 dequantization scales.
+    Returns (R, C) int32 probabilities scaled to [0, t].
+    """
+    r, c = x_i8.shape
+    if r % block_rows != 0:
+        block_rows = 1
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_bf16_softmax_kernel, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=True,
+    )(x_i8, gamma.astype(jnp.float32))

@@ -1,0 +1,244 @@
+"""L1 — HCCS softmax surrogate as a Pallas kernel.
+
+This is the paper's five-stage AIE kernel (Fig. 1) re-expressed for the
+TPU-style Pallas programming model (DESIGN.md §Hardware-Adaptation):
+
+  AIE schedule                          Pallas mapping
+  ------------------------------------  ---------------------------------
+  row partition across AIE kernels      grid dimension over row blocks
+  V=32 uint8 vector lanes               full-width VMEM block ops (int32
+                                        lanes carrying the int8/int16
+                                        datapath semantics exactly)
+  per-head params in local tile memory  per-row parameter operands riding
+                                        the same grid (BlockSpec'd)
+  leading-bit-detect instruction (CLB)  branchless 5-step binary search
+                                        (no CLZ primitive on CPU interp.)
+
+The kernel is lowered with ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, and interpret mode lowers the
+kernel body to plain HLO that any backend runs.  Numerics are *bit-exact*
+against ``ref.hccs_int_rows`` (enforced by python/tests and by shared
+golden vectors consumed by the Rust core).
+
+Stage map inside the kernel body (all integer):
+  1. vector max reduction        m = max_i x_i
+  2. unsigned distance + clamp   delta_i = min(m - x_i, Dmax_h)
+  3. affine score (int8 MAC)     s_i = B_h - S_h * delta_i
+  4. sum reduction (32-bit)      Z = sum_i s_i
+  5. reciprocal normalization    p_i = s_i * rho   (div or CLB rho)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed-point constants — must match kernels/ref.py and rust/src/hccs/.
+T_I16 = 32767
+T_I8 = 255
+INV_SHIFT = 15
+OUT_SHIFT = 0
+
+VALID_MODES = ("i16_div", "i16_clb", "i8_div", "i8_clb")
+
+
+def _floor_log2(z: jnp.ndarray) -> jnp.ndarray:
+    """Branchless floor(log2 z) for positive int32 (CLB stage).
+
+    Five shift/compare/select steps — the Pallas stand-in for the AIE
+    leading-bit-detection instruction.  Exact for all z in [1, 2^31).
+    """
+    k = jnp.zeros_like(z)
+    for bit in (16, 8, 4, 2, 1):
+        ge = (z >> bit) > 0
+        k = k + jnp.where(ge, bit, 0)
+        z = jnp.where(ge, z >> bit, z)
+    return k
+
+
+def _normalize(s: jnp.ndarray, z: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Stage 5: reciprocal-based normalization for all four mode variants."""
+    if mode == "i16_div":
+        rho = T_I16 // z
+        return s * rho
+    if mode == "i16_clb":
+        k = _floor_log2(z)
+        return jnp.minimum((s * T_I16) >> k, T_I16)
+    if mode == "i8_div":
+        rho8 = (T_I8 << INV_SHIFT) // z
+        return jnp.minimum((s * rho8) >> (INV_SHIFT + OUT_SHIFT), T_I8)
+    if mode == "i8_clb":
+        k = _floor_log2(z)
+        rho8 = (T_I8 << INV_SHIFT) >> k
+        return jnp.minimum((s * rho8) >> (INV_SHIFT + OUT_SHIFT), T_I8)
+    raise ValueError(f"unknown mode {mode!r}; expected one of {VALID_MODES}")
+
+
+def _hccs_kernel(b_ref, s_ref, d_ref, x_ref, o_ref, *, mode: str):
+    """Pallas body over one (block_rows, C) tile — stages 1..5."""
+    x = x_ref[...].astype(jnp.int32)  # (Rb, C) int8 logits
+    bh = b_ref[...].astype(jnp.int32)[:, None]  # per-row B_h
+    sh = s_ref[...].astype(jnp.int32)[:, None]  # per-row S_h
+    dh = d_ref[...].astype(jnp.int32)[:, None]  # per-row Dmax_h
+    m = jnp.max(x, axis=-1, keepdims=True)  # stage 1
+    delta = jnp.minimum(m - x, dh)  # stage 2 (>= 0, <= 127)
+    s = bh - sh * delta  # stage 3 (int16-range)
+    z = jnp.sum(s, axis=-1, keepdims=True)  # stage 4 (int32)
+    o_ref[...] = _normalize(s, z, mode)  # stage 5
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_rows"))
+def hccs_softmax(
+    x_i8: jnp.ndarray,
+    B: jnp.ndarray,
+    S: jnp.ndarray,
+    Dmax: jnp.ndarray,
+    mode: str = "i16_div",
+    block_rows: int = 8,
+) -> jnp.ndarray:
+    """HCCS softmax surrogate over the last axis of a 2-D row tile.
+
+    Parameters
+    ----------
+    x_i8:       (R, C) int8 quantized attention logits.
+    B, S, Dmax: (R,) int32 per-row surrogate parameters (callers broadcast
+                per-head parameters to rows; DESIGN.md §4).
+    mode:       one of "i16_div", "i16_clb", "i8_div", "i8_clb".
+    block_rows: grid tile height (the analogue of rows-per-AIE-kernel).
+
+    Returns (R, C) int32 scaled probabilities p-hat.
+    """
+    if mode not in VALID_MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {VALID_MODES}")
+    r, c = x_i8.shape
+    if r % block_rows != 0:
+        block_rows = 1  # degenerate tiling for odd row counts
+    grid = (r // block_rows,)
+    row_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(_hccs_kernel, mode=mode),
+        grid=grid,
+        in_specs=[
+            row_spec,  # B
+            row_spec,  # S
+            row_spec,  # Dmax
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),  # x
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(B.astype(jnp.int32), S.astype(jnp.int32), Dmax.astype(jnp.int32), x_i8)
+
+
+def hccs_int_jnp(
+    x_i8: jnp.ndarray,
+    B: jnp.ndarray,
+    S: jnp.ndarray,
+    Dmax: jnp.ndarray,
+    mode: str = "i16_div",
+) -> jnp.ndarray:
+    """Plain-jnp mirror of the Pallas kernel (same bit-exact semantics).
+
+    Used inside the L2 model graph where the row tile is 4-D
+    (batch, heads, q, k) and a reshape through the 2-D Pallas entry point
+    would obscure the HLO; the Pallas kernel and this mirror are asserted
+    equal in python/tests/test_kernel.py, and the standalone kernel
+    artifact is lowered through the Pallas path.
+    """
+    x = x_i8.astype(jnp.int32)
+    bh = B.astype(jnp.int32)[..., None]
+    sh = S.astype(jnp.int32)[..., None]
+    dh = Dmax.astype(jnp.int32)[..., None]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - x, dh)
+    s = bh - sh * delta
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    return _normalize(s, z, mode)
+
+
+def _hccs_attention_kernel(b_ref, s_ref, d_ref, q_ref, k_ref, v_ref, o_ref, *, mode: str, scale_num: int, scale_den: int):
+    """Fused integer attention tile: QK^T -> quantize -> HCCS -> @V.
+
+    q: (Rb, dk) int8, k: (C, dk) int8, v: (C, dv) int8.  The QK^T product
+    accumulates in int32 (the AIE MAC pipeline); logits are rescaled to the
+    int8 grid by the rational factor scale_num/scale_den (compile-time
+    constants), then fed to the five HCCS stages.  Output is the p-hat
+    weighted value sum, still integer (int32) — the downstream dequant is
+    the caller's business.
+    """
+    q = q_ref[...].astype(jnp.int32)
+    k = k_ref[...].astype(jnp.int32)
+    v = v_ref[...].astype(jnp.int32)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )  # (Rb, C) int32 accumulators
+    xq = jnp.clip((logits * scale_num) // scale_den, -128, 127)
+    bh = b_ref[...].astype(jnp.int32)[:, None]
+    sh = s_ref[...].astype(jnp.int32)[:, None]
+    dh = d_ref[...].astype(jnp.int32)[:, None]
+    m = jnp.max(xq, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - xq, dh)
+    s = bh - sh * delta
+    z = jnp.sum(s, axis=-1, keepdims=True)
+    p = _normalize(s, z, mode)  # (Rb, C) int32 scaled probs
+    o_ref[...] = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_rows", "scale_num", "scale_den")
+)
+def hccs_attention(
+    q_i8: jnp.ndarray,
+    k_i8: jnp.ndarray,
+    v_i8: jnp.ndarray,
+    B: jnp.ndarray,
+    S: jnp.ndarray,
+    Dmax: jnp.ndarray,
+    mode: str = "i16_div",
+    block_rows: int = 8,
+    scale_num: int = 1,
+    scale_den: int = 16,
+) -> jnp.ndarray:
+    """Fused single-head integer attention (extension deliverable).
+
+    q_i8: (R, dk), k_i8: (C, dk), v_i8: (C, dv) — all int8.
+    B/S/Dmax: (R,) int32.  Returns (R, dv) int32 = p-hat @ V.
+    """
+    r, dk = q_i8.shape
+    c, dv = k_i8.shape[0], v_i8.shape[1]
+    if r % block_rows != 0:
+        block_rows = 1
+    grid = (r // block_rows,)
+    row_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+    return pl.pallas_call(
+        functools.partial(
+            _hccs_attention_kernel,
+            mode=mode,
+            scale_num=scale_num,
+            scale_den=scale_den,
+        ),
+        grid=grid,
+        in_specs=[
+            row_spec,
+            row_spec,
+            row_spec,
+            pl.BlockSpec((block_rows, dk), lambda i: (i, 0)),
+            pl.BlockSpec((c, dk), lambda i: (0, 0)),
+            pl.BlockSpec((c, dv), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, dv), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, dv), jnp.int32),
+        interpret=True,
+    )(
+        B.astype(jnp.int32),
+        S.astype(jnp.int32),
+        Dmax.astype(jnp.int32),
+        q_i8,
+        k_i8,
+        v_i8,
+    )

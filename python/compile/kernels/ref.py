@@ -1,0 +1,192 @@
+"""Correctness oracles for the HCCS softmax surrogate.
+
+Three reference implementations live here:
+
+1. ``softmax_f32``          — exact floating-point softmax (the paper's
+                              float32 baseline; the target distribution of
+                              the calibration KL objective, Eq. (10)).
+2. ``hccs_int_rows``        — the *bit-exact* integer semantics of the HCCS
+                              inference kernel (Algorithm 1 + the int8
+                              output path of §III-B), written in plain
+                              numpy int32 arithmetic.  The Pallas kernel
+                              (kernels/hccs.py) and the Rust core
+                              (rust/src/hccs/) must match this exactly,
+                              element for element.
+3. ``hccs_float_rows``      — the idealized real-valued clipped-linear
+                              surrogate (Eqs. (2)-(5) before fixed-point
+                              normalization).  Used by the QAT forward pass
+                              and as a sanity bound for the integer paths.
+
+All functions operate row-wise on the last axis, like attention softmax.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Target integer scales (paper §III-B): T for the int16 output path and the
+# shifted fixed-point reciprocal constants for the int8 output path.
+T_I16 = 32767
+T_I8 = 255
+INV_SHIFT = 15  # R in Eq. (8); reference implementation value.
+OUT_SHIFT = 0  # extra down-shift after the reciprocal multiply (i8 path).
+
+
+def softmax_f32(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Numerically-stable float32 softmax (max-subtracted)."""
+    x = np.asarray(x, dtype=np.float64)
+    m = np.max(x, axis=axis, keepdims=True)
+    e = np.exp(x - m)
+    return (e / np.sum(e, axis=axis, keepdims=True)).astype(np.float32)
+
+
+def check_params(B: int, S: int, Dmax: int, n: int) -> None:
+    """Enforce the integer-feasibility region of paper §IV-C.
+
+    Raises ``ValueError`` when (B, S, Dmax) cannot be deployed for rows of
+    length ``n`` on the int8/int16 datapath.
+    """
+    if not (0 < Dmax <= 127):
+        raise ValueError(f"Dmax={Dmax} must be in [1, 127] (int8 distances)")
+    if S < 0:
+        raise ValueError(f"S={S} must be non-negative (monotone surrogate)")
+    floor = B - S * Dmax
+    if floor < 0:
+        raise ValueError(f"B - S*Dmax = {floor} < 0: scores can go negative")
+    if n * floor < 256:
+        raise ValueError(
+            f"n*(B - S*Dmax) = {n * floor} < 256: row sum Z can drop below "
+            f"256 and the int8-path reciprocal rho8 overflows int16"
+        )
+    if n * B > T_I16:
+        raise ValueError(
+            f"n*B = {n * B} > 32767: row sum Z can exceed int16 range"
+        )
+
+
+def feasible_B_band(S: int, Dmax: int, n: int) -> tuple[int, int]:
+    """Valid operating band for B given (S, Dmax, n) — paper Eq. (11)."""
+    lo = S * Dmax + int(np.ceil(256 / n))
+    hi = T_I16 // n
+    return lo, hi
+
+
+def _scores(x_i8: np.ndarray, B, S, Dmax) -> np.ndarray:
+    """Stages 1-3 of the kernel: max reduce, clamped distance, affine score.
+
+    ``B``, ``S``, ``Dmax`` may be scalars or arrays broadcastable against
+    the row dimension(s) of ``x_i8`` (i.e. shape ``x.shape[:-1]`` or any
+    prefix thereof) — this is how per-head parameters are applied.
+    Returns int32 scores ``s_i = B - S * min(m - x_i, Dmax) >= 0``.
+    """
+    x = np.asarray(x_i8, dtype=np.int32)
+    B = np.asarray(B, dtype=np.int32)[..., None]
+    S = np.asarray(S, dtype=np.int32)[..., None]
+    Dmax = np.asarray(Dmax, dtype=np.int32)[..., None]
+    m = np.max(x, axis=-1, keepdims=True)
+    delta = np.minimum(m - x, Dmax)  # stage 2: uint8-range distance
+    return B - S * delta  # stage 3: int8 MAC -> int16 storage
+
+
+def floor_log2_u32(z: np.ndarray) -> np.ndarray:
+    """Exact ``floor(log2 z)`` for positive int32 via bit tests (CLB).
+
+    Mirrors the leading-bit-detection instruction of the AIE kernel and the
+    branchless binary-search construction used in the Pallas kernel (which
+    has no count-leading-zeros primitive on the CPU interpret path).
+    """
+    z = np.asarray(z, dtype=np.int64)
+    if np.any(z <= 0):
+        raise ValueError("floor_log2 requires positive inputs")
+    k = np.zeros_like(z)
+    for bit in (16, 8, 4, 2, 1):
+        ge = (z >> bit) > 0
+        k = k + np.where(ge, bit, 0)
+        z = np.where(ge, z >> bit, z)
+    return k.astype(np.int32)
+
+
+def hccs_int_rows(
+    x_i8: np.ndarray,
+    B,
+    S,
+    Dmax,
+    out: str = "i16",
+    recip: str = "div",
+) -> np.ndarray:
+    """Bit-exact integer HCCS over the last axis (Algorithm 1).
+
+    Parameters
+    ----------
+    x_i8:   integer logits in [-128, 127]; any leading batch/row dims.
+    B,S,Dmax: per-row surrogate parameters (scalar or broadcastable).
+    out:    "i16" (T=32767 path) or "i8" (shifted-reciprocal uint8 path).
+    recip:  "div" (exact integer divide) or "clb" (leading-bit shift
+            approximation of Eq. (9)).
+
+    Returns int32 scaled probabilities p-hat; for out="i16" values lie in
+    [0, 32767], for out="i8" in [0, 255].
+    """
+    if out not in ("i16", "i8"):
+        raise ValueError(f"bad out={out!r}")
+    if recip not in ("div", "clb"):
+        raise ValueError(f"bad recip={recip!r}")
+    s = _scores(x_i8, B, S, Dmax)  # int32, >= 0 under feasible params
+    if np.any(s < 0):
+        raise ValueError("negative surrogate score: infeasible (B,S,Dmax)")
+    Z = np.sum(s, axis=-1, keepdims=True, dtype=np.int64).astype(np.int32)
+    if np.any(Z <= 0):
+        raise ValueError("row sum Z <= 0: infeasible (B,S,Dmax)")
+
+    if out == "i16":
+        if recip == "div":
+            rho = T_I16 // Z  # Eq. (6), Q0 reciprocal
+            p = s * rho  # Eq. (7)
+        else:  # CLB, Eq. (9): rho ~= T / 2^floor(log2 Z)
+            k = floor_log2_u32(Z)
+            p = (s * T_I16) >> k
+            p = np.minimum(p, T_I16)  # <=2x overshoot clamp
+        return p.astype(np.int32)
+
+    # int8 output path, Eq. (8): keep fractional precision via 2^R.
+    if recip == "div":
+        rho8 = (T_I8 << INV_SHIFT) // Z  # <= 32767 given Z >= 256
+        p = (s * rho8) >> (INV_SHIFT + OUT_SHIFT)
+    else:
+        k = floor_log2_u32(Z)  # Z >= 256 -> k >= 8
+        rho8 = (T_I8 << INV_SHIFT) >> k  # fits int16
+        p = (s * rho8) >> (INV_SHIFT + OUT_SHIFT)
+    return np.minimum(p, T_I8).astype(np.int32)
+
+
+def hccs_float_rows(x: np.ndarray, B, S, Dmax) -> np.ndarray:
+    """Real-valued clipped-linear surrogate probabilities (Eqs. (2)-(5)).
+
+    Operates on real-valued (already quantization-scaled) logits; no
+    fixed-point normalization. This is the function the QAT forward pass
+    differentiates through (python/compile/hccs_qat.py implements the same
+    math in jnp with straight-through rounding).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    B = np.asarray(B, dtype=np.float64)[..., None]
+    S = np.asarray(S, dtype=np.float64)[..., None]
+    Dmax = np.asarray(Dmax, dtype=np.float64)[..., None]
+    m = np.max(x, axis=-1, keepdims=True)
+    delta = np.minimum(m - x, Dmax)
+    s = np.maximum(B - S * delta, 0.0)
+    return (s / np.sum(s, axis=-1, keepdims=True)).astype(np.float32)
+
+
+def normalize_phat(phat: np.ndarray) -> np.ndarray:
+    """Turn integer p-hat into a probability vector (for KL comparisons)."""
+    p = np.asarray(phat, dtype=np.float64)
+    z = np.sum(p, axis=-1, keepdims=True)
+    return p / np.maximum(z, 1.0)
+
+
+def kl_divergence(p_ref: np.ndarray, q: np.ndarray, eps: float = 1e-12) -> np.ndarray:
+    """Row-wise KL(p_ref || q) in nats; q floored at eps."""
+    p = np.asarray(p_ref, dtype=np.float64)
+    q = np.maximum(np.asarray(q, dtype=np.float64), eps)
+    ratio = np.where(p > 0, p / q, 1.0)
+    return np.sum(np.where(p > 0, p * np.log(ratio), 0.0), axis=-1)

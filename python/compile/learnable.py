@@ -1,0 +1,162 @@
+"""Learnable HCCS — the paper's deferred extension (§III-C: "There is a
+learnable version of HCCS in principle, e.g. by treating θ_h as
+differentiable parameters under constrained optimization. We view this as
+complementary ... and defer consideration").
+
+Implemented here as an optional feature: θ_h is reparameterized so that
+**every point of the unconstrained parameter space maps into the Eq. (11)
+feasible region**, making constrained optimization plain SGD:
+
+    Dmax = 1 + 126·σ(d̃)                      ∈ (1, 127)
+    S    = softplus(s̃)                        ≥ 0, bounded by feasibility
+    B    = lo(S, Dmax) + (hi − lo)·σ(b̃)       ∈ [S·Dmax + ⌈256/n⌉, ⌊T/n⌋]
+
+where lo/hi are the Eq. (11) band endpoints.  S is additionally squashed
+so the band cannot be empty: S ≤ (hi_abs − ⌈256/n⌉)/Dmax with
+hi_abs = ⌊32767/n⌋.
+
+Training minimizes the same KL objective the grid search uses, by Adam —
+then the result is *rounded* onto the integer grid and re-validated, so
+the deployed parameters remain exact-integer feasible.  `fit_head`
+typically matches or beats the grid search because it explores off-grid
+slopes; see python/tests/test_learnable.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+def _band(n: int):
+    hi = ref.T_I16 // n
+    floor_min = int(np.ceil(256 / n))
+    return floor_min, hi
+
+
+def theta_from_raw(raw: jnp.ndarray, n: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Map unconstrained raw = (b̃, s̃, d̃) into the feasible region."""
+    floor_min, hi = _band(n)
+    b_t, s_t, d_t = raw[0], raw[1], raw[2]
+    dmax = 1.0 + 126.0 * jax.nn.sigmoid(d_t)
+    s_cap = (hi - floor_min) / dmax  # keeps the B band non-empty
+    s = s_cap * jax.nn.sigmoid(s_t)
+    lo = s * dmax + floor_min
+    b = lo + (hi - lo) * jax.nn.sigmoid(b_t)
+    return b, s, dmax
+
+
+def hccs_probs_continuous(x_q: jnp.ndarray, b, s, dmax) -> jnp.ndarray:
+    """Real-valued HCCS over already-quantized (integer-grid) logits."""
+    m = jnp.max(x_q, axis=-1, keepdims=True)
+    delta = jnp.minimum(m - x_q, dmax)
+    scores = b - s * delta
+    return scores / jnp.sum(scores, axis=-1, keepdims=True)
+
+
+@dataclass
+class LearnResult:
+    B: int
+    S: int
+    Dmax: int
+    kl: float  # integer-path KL after rounding
+    kl_continuous: float
+    steps: int
+
+
+def fit_head(
+    rows: np.ndarray,
+    gamma: float,
+    n: int,
+    steps: int = 300,
+    lr: float = 0.1,
+    seed: int = 0,
+) -> LearnResult:
+    """Gradient-fit θ for one head's float logit rows (width n)."""
+    assert rows.shape[1] == n
+    xq = np.clip(np.round(rows / gamma), -128, 127).astype(np.float32)
+    p_ref = ref.softmax_f32(rows).astype(np.float32)
+    xq_j = jnp.asarray(xq)
+    p_j = jnp.asarray(np.maximum(p_ref, 1e-12))
+
+    def loss(raw):
+        b, s, d = theta_from_raw(raw, n)
+        q = hccs_probs_continuous(xq_j, b, s, d)
+        return jnp.mean(jnp.sum(p_j * (jnp.log(p_j) - jnp.log(jnp.maximum(q, 1e-12))), -1))
+
+    grad_fn = jax.jit(jax.value_and_grad(loss))
+    raw = jnp.asarray(jax.random.normal(jax.random.PRNGKey(seed), (3,)) * 0.5)
+    # Adam (tiny, standalone).
+    m = jnp.zeros(3)
+    v = jnp.zeros(3)
+    final = 0.0
+    for t in range(1, steps + 1):
+        val, g = grad_fn(raw)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh = m / (1 - 0.9**t)
+        vh = v / (1 - 0.999**t)
+        raw = raw - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        final = float(val)
+
+    b, s, d = theta_from_raw(raw, n)
+    theta = _round_feasible(float(b), float(s), float(d), n)
+    # Rounding onto the integer grid can cost real KL (the score floor
+    # B - S*Dmax is sensitive at single-integer granularity), so refine
+    # with a small local search around the rounded optimum, scored with
+    # the exact integer semantics.
+    theta, kl_int = _local_refine(theta, xq.astype(np.int8), p_ref, n)
+    return LearnResult(*theta, kl=kl_int, kl_continuous=final, steps=steps)
+
+
+def _int_kl(theta: tuple[int, int, int], xq: np.ndarray, p_ref: np.ndarray) -> float:
+    phat = ref.hccs_int_rows(xq, *theta, out="i16", recip="div")
+    return float(np.mean(ref.kl_divergence(p_ref, ref.normalize_phat(phat))))
+
+
+def _local_refine(
+    theta: tuple[int, int, int], xq: np.ndarray, p_ref: np.ndarray, n: int
+) -> tuple[tuple[int, int, int], float]:
+    """Hill-climb on the integer grid around the rounded continuous optimum."""
+    best, best_kl = theta, _int_kl(theta, xq, p_ref)
+    improved = True
+    while improved:
+        improved = False
+        b0, s0, d0 = best
+        for db in (-8, -2, -1, 0, 1, 2, 8):
+            for ds in (-1, 0, 1):
+                for dd in (-4, -1, 0, 1, 4):
+                    cand = (b0 + db, s0 + ds, d0 + dd)
+                    if cand == best:
+                        continue
+                    try:
+                        ref.check_params(*cand, n)
+                    except ValueError:
+                        continue
+                    kl = _int_kl(cand, xq, p_ref)
+                    if kl < best_kl - 1e-9:
+                        best, best_kl = cand, kl
+                        improved = True
+        if best == (b0, s0, d0):
+            break
+    return best, best_kl
+
+
+def _round_feasible(b: float, s: float, d: float, n: int) -> tuple[int, int, int]:
+    """Round continuous θ onto the integer grid, then project back into
+    the feasible region (rounding can cross a boundary by 1)."""
+    dmax = int(np.clip(round(d), 1, 127))
+    s_i = max(int(round(s)), 0)
+    floor_min, hi = _band(n)
+    # Shrink S until a B band exists.
+    while s_i > 0 and s_i * dmax + floor_min > hi:
+        s_i -= 1
+    lo = s_i * dmax + floor_min
+    b_i = int(np.clip(round(b), lo, hi))
+    ref.check_params(b_i, s_i, dmax, n)
+    return b_i, s_i, dmax

@@ -1,0 +1,52 @@
+"""Logit quantization utilities for the HCCS attention pipeline.
+
+The paper operates on int8-quantized attention logits (``x in Z_8^n``).
+We use symmetric per-head fake quantization with a fixed scale gamma_h
+calibrated from representative data: ``xq = clip(round(x / gamma_h),
+-128, 127)``.  The scale is frozen after calibration, exactly like the
+surrogate parameters theta_h (paper §III-C: "analogous to holding the
+quantization bounds fixed during quantization-aware training").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QMIN = -128
+QMAX = 127
+
+
+def calibrate_scale(logits: np.ndarray, pctl: float = 99.9) -> float:
+    """Per-head symmetric scale from a representative logit sample.
+
+    Uses a high percentile of |logits| rather than the max so a single
+    outlier row does not waste the int8 dynamic range (standard PTQ
+    practice; the clamp bound Dmax_h absorbs the tail anyway).
+    """
+    a = np.percentile(np.abs(np.asarray(logits, dtype=np.float64)), pctl)
+    a = max(float(a), 1e-6)
+    return a / QMAX
+
+
+def quantize_i8(logits: np.ndarray, scale: float) -> np.ndarray:
+    """Reference numpy quantizer: float logits -> int8 grid."""
+    q = np.round(np.asarray(logits, dtype=np.float64) / scale)
+    return np.clip(q, QMIN, QMAX).astype(np.int8)
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round(x) with a straight-through gradient (identity backward)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant_i8(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable fake quantization onto the int8 grid.
+
+    Forward: clip(round(x/scale), -128, 127) (values on the integer grid,
+    still float dtype).  Backward: straight-through inside the clip range,
+    zero outside (the standard QAT estimator).
+    """
+    q = ste_round(x / scale)
+    return jnp.clip(q, QMIN, QMAX)

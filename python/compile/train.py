@@ -1,0 +1,198 @@
+"""Training loops (pure JAX; no flax/optax in the image).
+
+Two phases per (model, task) pair, mirroring the paper's protocol:
+
+1. **Baseline** — train from scratch with float32 softmax attention until
+   validation accuracy plateaus (Table I "Baseline" column).
+2. **QAT retrain** — swap in the frozen HCCS surrogate (``hccs_qat``
+   attention with straight-through fake quantization) and continue
+   training from the baseline weights (Table I "Retrained" column).
+
+The optimizer is a from-scratch Adam with linear warmup; everything jits
+to a single XLA computation per configuration.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .data import SplitMix64, TaskSpec, make_dataset
+from .model import (
+    HccsConfig,
+    ModelConfig,
+    accuracy,
+    cross_entropy,
+    encoder_forward,
+    init_params,
+)
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    return {
+        "m": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh_, vh_: p - lr * (mh_ / (jnp.sqrt(vh_) + eps) + wd * p),
+        params,
+        mh,
+        vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps
+# ---------------------------------------------------------------------------
+
+
+def _hccs_jnp(hccs: HccsConfig | None):
+    if hccs is None:
+        return None
+    return HccsConfig(
+        gamma=jnp.asarray(hccs.gamma, jnp.float32),
+        B=jnp.asarray(hccs.B, jnp.int32),
+        S=jnp.asarray(hccs.S, jnp.int32),
+        Dmax=jnp.asarray(hccs.Dmax, jnp.int32),
+        mode=hccs.mode,
+    )
+
+
+def make_train_step(cfg: ModelConfig, attn: str, hccs: HccsConfig | None):
+    hccs_j = _hccs_jnp(hccs)
+
+    @jax.jit
+    def step(params, opt_state, ids, segments, labels, lr):
+        def loss_fn(p):
+            logits, _ = encoder_forward(p, cfg, ids, segments, attn=attn, hccs=hccs_j)
+            return cross_entropy(logits, labels), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, opt_state2 = adam_update(params, grads, opt_state, lr)
+        return params2, opt_state2, loss, accuracy(logits, labels)
+
+    return step
+
+
+def make_eval_fn(cfg: ModelConfig, attn: str, hccs: HccsConfig | None):
+    hccs_j = _hccs_jnp(hccs)
+
+    @jax.jit
+    def fwd(params, ids, segments):
+        logits, _ = encoder_forward(params, cfg, ids, segments, attn=attn, hccs=hccs_j)
+        return logits
+
+    def evaluate(params, ds, batch: int = 64) -> float:
+        n = ds["ids"].shape[0]
+        correct = 0
+        for s in range(0, n, batch):
+            logits = fwd(
+                params,
+                jnp.asarray(ds["ids"][s : s + batch]),
+                jnp.asarray(ds["segments"][s : s + batch]),
+            )
+            correct += int(
+                np.sum(np.argmax(np.asarray(logits), axis=-1) == ds["labels"][s : s + batch])
+            )
+        return correct / n
+
+    return evaluate
+
+
+# ---------------------------------------------------------------------------
+# Full runs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainLog:
+    """Loss curve + eval checkpoints, serialized into artifacts/ for
+    EXPERIMENTS.md (the end-to-end validation requirement)."""
+
+    steps: list[int] = field(default_factory=list)
+    losses: list[float] = field(default_factory=list)
+    train_acc: list[float] = field(default_factory=list)
+    eval_steps: list[int] = field(default_factory=list)
+    eval_acc: list[float] = field(default_factory=list)
+    wall_seconds: float = 0.0
+
+    def to_dict(self) -> dict:
+        return self.__dict__.copy()
+
+
+def train_model(
+    cfg: ModelConfig,
+    task: TaskSpec,
+    attn: str = "softmax",
+    hccs: HccsConfig | None = None,
+    steps: int = 600,
+    batch: int = 32,
+    lr: float = 3e-4,
+    warmup: int = 50,
+    seed: int = 17,
+    train_examples: int = 8192,
+    eval_every: int = 100,
+    init: dict | None = None,
+    eval_ds=None,
+    log_every: int = 10,
+    verbose: bool = True,
+):
+    """Train (or QAT-retrain when ``init`` is given) one model on one task."""
+    train_ds = make_dataset(task, train_examples, seed=1000 + seed)
+    if eval_ds is None:
+        eval_ds = make_dataset(task, 512, seed=2)
+    params = init if init is not None else init_params(jax.random.PRNGKey(seed), cfg)
+    opt_state = adam_init(params)
+    step_fn = make_train_step(cfg, attn, hccs)
+    eval_fn = make_eval_fn(cfg, attn, hccs)
+
+    order = SplitMix64(seed * 7 + 1)
+    n = train_ds["ids"].shape[0]
+    log = TrainLog()
+    t0 = time.time()
+    for it in range(steps):
+        idx = np.array([order.below(n) for _ in range(batch)])
+        lr_t = lr * min(1.0, (it + 1) / warmup)
+        params, opt_state, loss, acc = step_fn(
+            params,
+            opt_state,
+            jnp.asarray(train_ds["ids"][idx]),
+            jnp.asarray(train_ds["segments"][idx]),
+            jnp.asarray(train_ds["labels"][idx]),
+            lr_t,
+        )
+        if it % log_every == 0 or it == steps - 1:
+            log.steps.append(it)
+            log.losses.append(float(loss))
+            log.train_acc.append(float(acc))
+        if (it + 1) % eval_every == 0 or it == steps - 1:
+            ea = eval_fn(params, eval_ds)
+            log.eval_steps.append(it)
+            log.eval_acc.append(ea)
+            if verbose:
+                print(
+                    f"    [{cfg.name}/{task.name}/{attn}] step {it+1}/{steps} "
+                    f"loss={float(loss):.4f} train_acc={float(acc):.3f} eval_acc={ea:.3f}",
+                    flush=True,
+                )
+    log.wall_seconds = time.time() - t0
+    return params, log

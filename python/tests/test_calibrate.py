@@ -1,0 +1,93 @@
+"""Calibration grid search: feasibility, objective quality, granularity."""
+
+import numpy as np
+import pytest
+
+from compile import calibrate as C
+from compile.kernels import ref
+
+
+def synth_rows(n, rows, spread, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, spread, (rows, n))
+
+
+def test_calibrate_rows_feasible_and_better_than_uniform():
+    rows = synth_rows(64, 128, 3.0, 0)
+    r = C.calibrate_rows(rows, 64)
+    ref.check_params(r.B, r.S, r.Dmax, 64)  # must not raise
+    assert r.kl >= 0 and np.isfinite(r.kl)
+    # Uniform surrogate (S=0) baseline.
+    gamma = r.gamma
+    xq = np.clip(np.round(rows / gamma), -128, 127).astype(np.int32)
+    s = 500 - 0 * np.minimum(xq.max(-1, keepdims=True) - xq, 64)
+    p_uniform = ref.normalize_phat(s * (ref.T_I16 // s.sum(-1, keepdims=True)))
+    kl_u = float(np.mean(ref.kl_divergence(ref.softmax_f32(rows), p_uniform)))
+    assert r.kl < kl_u
+
+
+def test_focused_head_gets_steeper_effective_decay():
+    """Effective decay per unit logit = S/gamma: sharper distributions
+    need faster decay to match softmax."""
+    broad = C.calibrate_rows(synth_rows(64, 96, 1.0, 1), 64)
+    focused = C.calibrate_rows(synth_rows(64, 96, 8.0, 2), 64)
+    assert focused.kl < 2.0 and broad.kl < 0.5
+    # The focused head's surrogate must kill far keys harder in logit
+    # space (S/gamma larger) or clamp earlier (Dmax*gamma smaller window).
+    eff_broad = broad.S / broad.gamma
+    eff_focused = focused.S / focused.gamma
+    assert eff_focused != eff_broad  # the search reacted to the data
+
+
+def test_calibrate_model_granularities():
+    class Cfg:
+        layers, heads = 2, 2
+        # minimal duck-typed ModelConfig for calibrate_model
+
+    head_rows = [
+        [synth_rows(64, 64, 1.0, 10), synth_rows(64, 64, 6.0, 11)],
+        [synth_rows(64, 64, 2.0, 12), synth_rows(64, 64, 4.0, 13)],
+    ]
+    ph, _ = C.calibrate_model(head_rows, Cfg, 64, "per-head")
+    pl, _ = C.calibrate_model(head_rows, Cfg, 64, "per-layer")
+    gl, _ = C.calibrate_model(head_rows, Cfg, 64, "global")
+    assert ph.B.shape == (2, 2)
+    # per-layer shares params within a layer; global shares everywhere.
+    assert (pl.B[0] == pl.B[0][0]).all()
+    assert (gl.B == gl.B[0, 0]).all()
+
+    # Re-evaluate every granularity on the SAME rows (the built-in `kl`
+    # fields are measured on granularity-specific subsamples and are not
+    # directly comparable): finer granularity must not be worse.
+    def eval_kl(cal):
+        total = 0.0
+        for li in range(2):
+            for hi in range(2):
+                rows = head_rows[li][hi]
+                xq = np.clip(np.round(rows / cal.gamma[li, hi]), -128, 127).astype(np.int8)
+                phat = ref.hccs_int_rows(xq, int(cal.B[li, hi]), int(cal.S[li, hi]), int(cal.Dmax[li, hi]))
+                total += float(np.mean(ref.kl_divergence(ref.softmax_f32(rows), ref.normalize_phat(phat))))
+        return total / 4
+
+    kl_ph, kl_pl, kl_gl = eval_kl(ph), eval_kl(pl), eval_kl(gl)
+    assert kl_ph <= kl_pl + 1e-6, (kl_ph, kl_pl)
+    assert kl_ph <= kl_gl + 1e-6, (kl_ph, kl_gl)
+    with pytest.raises(ValueError):
+        C.calibrate_model(head_rows, Cfg, 64, "per-token")
+
+
+def test_feasible_band_respected_for_long_rows():
+    """n=128 tightens both sides of Eq. (11)."""
+    rows = synth_rows(128, 64, 3.0, 3)
+    r = C.calibrate_rows(rows, 128)
+    assert 128 * r.B <= 32767
+    assert r.B - r.S * r.Dmax >= int(np.ceil(256 / 128))
+
+
+def test_mask_rail_excluded_from_gamma():
+    rows = synth_rows(64, 64, 2.0, 4)
+    rows[:, -10:] = -60.0  # mask bias rail
+    r = C.calibrate_rows(rows, 64)
+    # gamma from valid logits only: ~ p99.9/127 of N(0,2) ~ 0.05, far
+    # below 60/127 ~ 0.47.
+    assert r.gamma < 0.2, r.gamma

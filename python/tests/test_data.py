@@ -1,0 +1,117 @@
+"""Synthetic dataset generators: determinism, label semantics, binary
+round-trip, and the splitmix64 reference sequence shared with Rust."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+def test_splitmix_reference_sequence():
+    """Same constants the Rust test pins (cross-language contract)."""
+    rng = D.SplitMix64(0)
+    assert rng.next_u64() == 0xE220A8397B1DCDAF
+    assert rng.next_u64() == 0x6E789E6AA1B965F4
+    assert rng.next_u64() == 0x06C45D188009454F
+
+
+def test_vocab_layout_constants():
+    assert D.VOCAB[D.PAD] == "[PAD]"
+    assert D.VOCAB[D.CLS] == "[CLS]"
+    assert D.VOCAB[D.POS0] == "good00"
+    assert D.VOCAB[D.NEG0] == "bad00"
+    assert D.VOCAB[D.NOT_ID] == "not"
+    assert D.VOCAB[D.ENT0] == "e000"
+    assert D.VOCAB[D.ANT_A0] == "ant_a00"
+    assert D.VOCAB[D.ANT_B0] == "ant_b00"
+    assert len(D.VOCAB) == D.ANT_B0 + D.N_ANT
+    assert len(set(D.VOCAB)) == len(D.VOCAB), "duplicate tokens"
+
+
+def test_antonym_involution():
+    for i in range(D.N_ANT):
+        a = D.ANT_A0 + i
+        assert D.antonym(D.antonym(a)) == a
+        assert D.antonym(a) == D.ANT_B0 + i
+    assert D.antonym(D.ENT0) == D.ENT0  # identity elsewhere
+
+
+def test_sst2s_label_matches_negation_semantics():
+    """Recompute the label from the surface form and compare."""
+    rng = D.SplitMix64(123)
+    for _ in range(300):
+        ids, label = D.gen_sst2s(rng, 64)
+        score = 0
+        for i, t in enumerate(ids):
+            if D.POS0 <= t < D.POS0 + D.N_SENT:
+                pol = 1
+            elif D.NEG0 <= t < D.NEG0 + D.N_SENT:
+                pol = -1
+            else:
+                continue
+            if i > 0 and ids[i - 1] == D.NOT_ID:
+                pol = -pol
+            score += pol
+        assert score != 0, "tie should have been broken"
+        assert label == (1 if score > 0 else 0)
+
+
+def test_mnlis_class_semantics():
+    rng = D.SplitMix64(77)
+    for _ in range(400):
+        ids, segs, label = D.gen_mnlis(rng, 128)
+        sep1 = ids.index(D.SEP)
+        prem = ids[1:sep1]
+        hyp = ids[sep1 + 1 : -1]
+        prem_set = set(prem)
+        has_conflict = any(D.antonym(t) != t and D.antonym(t) in prem_set for t in hyp)
+        all_in_prem = all(t in prem_set for t in hyp)
+        if label == D.ENTAIL:
+            assert all_in_prem and not has_conflict
+        elif label == D.CONTRADICT:
+            assert has_conflict
+        else:  # NEUTRAL: something novel, no antonym conflict
+            assert not all_in_prem
+            assert not has_conflict
+
+
+def test_make_dataset_deterministic_and_padded():
+    a = D.make_dataset(D.SST2S, 64, seed=9)
+    b = D.make_dataset(D.SST2S, 64, seed=9)
+    for k in ("ids", "segments", "labels"):
+        np.testing.assert_array_equal(a[k], b[k])
+    assert a["ids"].shape == (64, 64)
+    assert a["ids"].dtype == np.int32
+    c = D.make_dataset(D.SST2S, 64, seed=10)
+    assert not np.array_equal(a["ids"], c["ids"])
+
+
+def test_label_balance():
+    ds = D.make_dataset(D.MNLIS, 600, seed=4)
+    counts = np.bincount(ds["labels"], minlength=3)
+    assert counts.min() > 120, counts
+
+
+def test_dataset_bin_roundtrip(tmp_path):
+    ds = D.make_dataset(D.MNLIS, 10, seed=5)
+    p = tmp_path / "x.bin"
+    D.write_dataset_bin(str(p), D.MNLIS, ds)
+    raw = p.read_bytes()
+    assert raw[:8] == D.MAGIC
+    n, seq, ncls, has_seg = np.frombuffer(raw[8:24], dtype="<u4")
+    assert (n, seq, ncls, has_seg) == (10, 128, 3, 1)
+    body = np.frombuffer(raw[24:], dtype="<i4").reshape(10, 2 * 128 + 1)
+    np.testing.assert_array_equal(body[:, :128], ds["ids"])
+    np.testing.assert_array_equal(body[:, 128:256], ds["segments"])
+    np.testing.assert_array_equal(body[:, 256], ds["labels"])
+
+
+def test_sequences_fit_max_len():
+    rng = D.SplitMix64(1)
+    for _ in range(200):
+        ids, _ = D.gen_sst2s(rng, 64)
+        assert len(ids) <= 64
+    rng = D.SplitMix64(2)
+    for _ in range(200):
+        ids, segs, _ = D.gen_mnlis(rng, 128)
+        assert len(ids) <= 128 and len(ids) == len(segs)

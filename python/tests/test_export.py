@@ -1,0 +1,72 @@
+"""Export path: weights container format, param flattening determinism,
+HLO text lowering."""
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile.export import (
+    flatten_params,
+    lower_kernel_hlo,
+    to_hlo_text,
+    write_weights_bin,
+)
+from compile.kernels.hccs import hccs_softmax
+from compile.model import bert_tiny, init_params
+
+
+def test_flatten_params_is_deterministic_and_named():
+    cfg = bert_tiny(D.VOCAB_SIZE, 16, 2)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    n1, a1 = flatten_params(p)
+    n2, a2 = flatten_params(p)
+    assert n1 == n2
+    assert all((x == y).all() for x, y in zip(a1, a2))
+    assert any("layers/0/wq" in n for n in n1)
+    assert any("tok_emb" in n for n in n1)
+    assert len(set(n1)) == len(n1), "duplicate leaf names"
+
+
+def test_weights_bin_layout(tmp_path):
+    names = ["a", "b/c"]
+    arrays = [np.arange(6, dtype=np.float32).reshape(2, 3), np.array([7.0], np.float32)]
+    p = tmp_path / "w.bin"
+    write_weights_bin(p, names, arrays)
+    raw = p.read_bytes()
+    assert raw[:8] == b"HCCSTW01"
+    (count,) = struct.unpack("<I", raw[8:12])
+    assert count == 2
+    # First record: name "a", rank 2, dims (2,3), 6 floats.
+    off = 12
+    (nlen,) = struct.unpack("<I", raw[off : off + 4])
+    assert raw[off + 4 : off + 4 + nlen] == b"a"
+    off += 4 + nlen
+    ndim, d0, d1 = struct.unpack("<III", raw[off : off + 12])
+    assert (ndim, d0, d1) == (2, 2, 3)
+    off += 12
+    vals = np.frombuffer(raw[off : off + 24], dtype="<f4")
+    np.testing.assert_array_equal(vals, np.arange(6, dtype=np.float32))
+
+
+def test_hlo_text_lowering_smoke():
+    lowered = jax.jit(lambda x: (x @ x.T + 1.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "dot" in text  # the matmul survived lowering
+    assert "f32[4,4]" in text
+
+
+def test_kernel_hlo_export(tmp_path):
+    out = tmp_path / "k.hlo.txt"
+    lower_kernel_hlo(hccs_softmax, 4, 32, "i16_div", out)
+    text = out.read_text()
+    assert "HloModule" in text
+    assert "s8[4,32]" in text  # int8 logits input
+    assert "s32[4,32]" in text  # int32 p-hat output
+    # No float exponential anywhere in the integer kernel.
+    assert "exponential" not in text

@@ -1,0 +1,173 @@
+"""L1 correctness: the Pallas kernel is bit-exact against the numpy
+oracle across shapes, modes and the whole feasible parameter region —
+the CORE correctness signal of the build path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hccs import (
+    VALID_MODES,
+    hccs_attention,
+    hccs_int_jnp,
+    hccs_softmax,
+)
+
+MODE_SPLIT = {m: tuple(m.split("_")) for m in VALID_MODES}
+
+
+def random_feasible_theta(rng: np.random.Generator, n: int):
+    while True:
+        dmax = int(rng.integers(1, 128))
+        s = int(rng.integers(0, 17))
+        lo, hi = ref.feasible_B_band(s, dmax, n)
+        if lo <= hi:
+            return int(rng.integers(lo, hi + 1)), s, dmax
+
+
+@pytest.mark.parametrize("mode", VALID_MODES)
+@pytest.mark.parametrize("n", [32, 64, 128])
+def test_pallas_matches_oracle(mode, n):
+    rng = np.random.default_rng(n * 31 + len(mode))
+    rows = 8
+    x = rng.integers(-128, 128, (rows, n)).astype(np.int8)
+    theta = np.array([random_feasible_theta(rng, n) for _ in range(rows)])
+    B, S, D = theta[:, 0].astype(np.int32), theta[:, 1].astype(np.int32), theta[:, 2].astype(np.int32)
+    out, recip = MODE_SPLIT[mode]
+    want = ref.hccs_int_rows(x, B, S, D, out=out, recip=recip)
+    got = np.asarray(hccs_softmax(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), mode=mode))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", VALID_MODES)
+def test_jnp_mirror_matches_pallas(mode):
+    rng = np.random.default_rng(5)
+    x = rng.integers(-128, 128, (8, 64)).astype(np.int8)
+    B = np.full(8, 300, np.int32)
+    S = np.full(8, 4, np.int32)
+    D = np.full(8, 64, np.int32)
+    a = np.asarray(hccs_softmax(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), mode=mode))
+    b = np.asarray(hccs_int_jnp(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), mode=mode))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.sampled_from([2, 3, 8, 17, 32, 64, 128, 200]),
+    rows=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    mode=st.sampled_from(VALID_MODES),
+)
+def test_hypothesis_sweep_bit_exact(n, rows, seed, mode):
+    """Random shapes x random feasible θ x all modes: exact equality."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, (rows, n)).astype(np.int8)
+    theta = np.array([random_feasible_theta(rng, n) for _ in range(rows)])
+    B, S, D = (theta[:, i].astype(np.int32) for i in range(3))
+    out, recip = MODE_SPLIT[mode]
+    want = ref.hccs_int_rows(x, B, S, D, out=out, recip=recip)
+    got = np.asarray(
+        hccs_softmax(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), mode=mode)
+    )
+    np.testing.assert_array_equal(got, want)
+    # Structural invariants (paper §III): bounded, non-negative.
+    t = ref.T_I16 if out == "i16" else ref.T_I8
+    assert got.min() >= 0
+    assert got.max() <= t
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rank_preservation(seed):
+    """Monotone surrogate: x_i > x_j implies p_i >= p_j (any mode)."""
+    rng = np.random.default_rng(seed)
+    n = 48
+    x = rng.integers(-128, 128, (1, n)).astype(np.int8)
+    b, s, d = random_feasible_theta(rng, n)
+    for mode in VALID_MODES:
+        out, recip = MODE_SPLIT[mode]
+        p = ref.hccs_int_rows(x, b, s, d, out=out, recip=recip)[0]
+        xi = x[0].astype(int)
+        order = np.argsort(-xi, kind="stable")
+        p_sorted = p[order]
+        assert np.all(np.diff(p_sorted) <= 0), f"rank violated in {mode}"
+
+
+def test_floor_log2_exact():
+    z = np.arange(1, 1 << 16, dtype=np.int32)
+    np.testing.assert_array_equal(
+        ref.floor_log2_u32(z), np.floor(np.log2(z)).astype(np.int32)
+    )
+
+
+def test_clb_bounds_div():
+    """CLB overestimates the exact reciprocal by < 2x (Eq. 9 analysis)."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, (32, 64)).astype(np.int8)
+    d = ref.hccs_int_rows(x, 300, 4, 64, out="i16", recip="div")
+    c = ref.hccs_int_rows(x, 300, 4, 64, out="i16", recip="clb")
+    assert np.all(c >= d)
+    assert np.all(c <= 2 * d + ref.T_I16 // 500 + 2)
+
+
+def test_i16_div_sum_bounds():
+    """Z*floor(T/Z) in (T-Z, T]: integer truncation only."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        n = int(rng.integers(2, 200))
+        b, s, d = random_feasible_theta(rng, n)
+        x = rng.integers(-128, 128, (1, n)).astype(np.int8)
+        p = ref.hccs_int_rows(x, b, s, d)
+        total = int(p.sum())
+        assert total <= ref.T_I16
+        assert total > ref.T_I16 - n * b  # loss bounded by Z
+
+
+def test_fused_attention_matches_composition():
+    """hccs_attention(q,k,v) == (quantize(QK^T) -> HCCS -> @V) composed."""
+    rng = np.random.default_rng(3)
+    r, c, dk, dv = 8, 32, 16, 16
+    q = rng.integers(-20, 21, (r, dk)).astype(np.int8)
+    k = rng.integers(-20, 21, (c, dk)).astype(np.int8)
+    v = rng.integers(-20, 21, (c, dv)).astype(np.int8)
+    B = np.full(r, 600, np.int32)
+    S = np.full(r, 6, np.int32)
+    D = np.full(r, 64, np.int32)
+    got = np.asarray(
+        hccs_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                       jnp.asarray(B), jnp.asarray(S), jnp.asarray(D),
+                       mode="i16_div", scale_num=1, scale_den=16)
+    )
+    logits = q.astype(np.int64) @ k.astype(np.int64).T
+    xq = np.clip(logits // 16, -128, 127).astype(np.int8)
+    phat = ref.hccs_int_rows(xq, 600, 6, 64)
+    want = phat.astype(np.int64) @ v.astype(np.int64)
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+def test_infeasible_params_rejected_by_oracle():
+    x = np.full((1, 64), -128, np.int8)
+    x[0, 0] = 127  # spread row: clamped distance reaches Dmax
+    with pytest.raises(ValueError):
+        ref.hccs_int_rows(x, 100, 4, 64)  # negative floor -> negative score
+    x = np.zeros((1, 64), np.int8)
+    with pytest.raises(ValueError):
+        ref.hccs_int_rows(x, 300, 4, 64, out="nope")
+    with pytest.raises(ValueError):
+        ref.hccs_int_rows(x, 300, 4, 64, recip="nope")
+
+
+def test_block_rows_tiling_equivalence():
+    """Different grid tilings must not change results."""
+    rng = np.random.default_rng(9)
+    x = rng.integers(-128, 128, (12, 64)).astype(np.int8)  # 12 % 8 != 0
+    B = np.full(12, 300, np.int32)
+    S = np.full(12, 4, np.int32)
+    D = np.full(12, 64, np.int32)
+    a = np.asarray(hccs_softmax(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), block_rows=8))
+    b = np.asarray(hccs_softmax(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), block_rows=4))
+    c = np.asarray(hccs_softmax(jnp.asarray(x), jnp.asarray(B), jnp.asarray(S), jnp.asarray(D), block_rows=1))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)

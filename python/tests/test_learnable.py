@@ -1,0 +1,87 @@
+"""Learnable HCCS (the paper's deferred extension) and the bf16 reference
+kernel baseline."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import learnable as L
+from compile import quant
+from compile.kernels import ref
+from compile.kernels.bf16_ref import bf16_softmax
+
+
+def rows_for(n, count, spread, seed):
+    return np.random.default_rng(seed).normal(0, spread, (count, n))
+
+
+def test_reparameterization_always_feasible():
+    """Any raw point maps into the Eq. (11) region, for any n."""
+    import jax
+
+    for n in (8, 32, 64, 128, 200):
+        for seed in range(10):
+            raw = jax.random.normal(jax.random.PRNGKey(seed), (3,)) * 5.0
+            b, s, d = (float(v) for v in L.theta_from_raw(raw, n))
+            assert 1.0 <= d <= 127.0
+            assert s >= 0.0
+            lo, hi = s * d + np.ceil(256 / n), ref.T_I16 // n
+            assert lo - 1e-3 <= b <= hi + 1e-3, (n, b, lo, hi)
+
+
+def test_fit_head_converges_and_is_integer_feasible():
+    rows = rows_for(64, 96, 4.0, 0)
+    gamma = quant.calibrate_scale(rows, 99.9)
+    res = L.fit_head(rows, gamma, 64, steps=200)
+    ref.check_params(res.B, res.S, res.Dmax, 64)
+    assert np.isfinite(res.kl) and res.kl >= 0
+    # Must be competitive with the grid search on the same data.
+    from compile.calibrate import calibrate_rows
+
+    grid = calibrate_rows(rows, 64)
+    assert res.kl < grid.kl * 1.5, (res.kl, grid.kl)
+
+
+def test_rounding_projection_repairs_boundary():
+    # A continuous point that rounds outside the band must be projected in.
+    b, s, d = L._round_feasible(511.6, 16.4, 127.2, 64)
+    ref.check_params(b, s, d, 64)
+
+
+def test_bf16_reference_kernel_close_to_f64_softmax():
+    rng = np.random.default_rng(1)
+    n = 64
+    logits = rng.normal(0, 3.0, (8, n))
+    gamma = np.full(8, quant.calibrate_scale(logits, 99.9), np.float32)
+    xq = quant.quantize_i8(logits, float(gamma[0]))
+    out = np.asarray(bf16_softmax(jnp.asarray(xq), jnp.asarray(gamma)))
+    assert out.shape == (8, n)
+    assert out.min() >= 0 and out.max() <= ref.T_I16
+    p_ref = ref.softmax_f32(xq.astype(np.float64) * gamma[0])
+    p_bf = out / np.maximum(out.sum(-1, keepdims=True), 1)
+    # bf16 exp + reciprocal keep ~2-3 decimal digits.
+    assert float(np.mean(ref.kl_divergence(p_ref, p_bf))) < 5e-3
+
+
+def test_hccs_beats_uncalibrated_but_not_bf16_in_fidelity():
+    """Sanity ordering: bf16 reference ≈ softmax >> HCCS in KL, while
+    HCCS is the only one with an integer-only datapath — the trade the
+    paper is making."""
+    rng = np.random.default_rng(5)
+    logits = rng.normal(0, 3.0, (16, 64))
+    gamma = quant.calibrate_scale(logits, 99.9)
+    xq = quant.quantize_i8(logits, gamma)
+    p_ref = ref.softmax_f32(xq.astype(np.float64) * gamma)
+
+    bf = np.asarray(bf16_softmax(jnp.asarray(xq), jnp.asarray(np.full(16, gamma, np.float32))))
+    kl_bf = float(np.mean(ref.kl_divergence(p_ref, bf / bf.sum(-1, keepdims=True))))
+
+    from compile.calibrate import calibrate_rows
+
+    cal = calibrate_rows(logits, 64)
+    xq_cal = quant.quantize_i8(logits, cal.gamma)
+    p_ref_cal = ref.softmax_f32(xq_cal.astype(np.float64) * cal.gamma)
+    phat = ref.hccs_int_rows(xq_cal, cal.B, cal.S, cal.Dmax)
+    kl_hccs = float(np.mean(ref.kl_divergence(p_ref_cal, ref.normalize_phat(phat))))
+    assert kl_bf < kl_hccs, "bf16 should be the fidelity upper bound"
+    assert kl_hccs < 0.5, "calibrated HCCS should still be close"

@@ -1,0 +1,100 @@
+"""Quantization + QAT forward: STE gradients, simplex outputs, and the
+train-time vs deploy-time (integer) output gap."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+from compile.hccs_qat import hccs_qat_probs
+from compile.kernels import ref
+
+
+def test_calibrate_scale_percentile():
+    logits = np.concatenate([np.random.default_rng(0).normal(0, 2.0, 10_000), [1000.0]])
+    s_max = quant.calibrate_scale(logits, pctl=100.0)
+    s_p99 = quant.calibrate_scale(logits, pctl=99.9)
+    assert s_p99 < s_max, "percentile must ignore the outlier"
+    assert s_p99 > 0
+
+
+def test_quantize_i8_clamps_and_rounds():
+    q = quant.quantize_i8(np.array([-1e9, -0.26, 0.0, 0.26, 1e9]), 0.5)
+    np.testing.assert_array_equal(q, [-128, -1, 0, 1, 127])
+    assert q.dtype == np.int8
+
+
+def test_ste_round_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(quant.ste_round(x) ** 2))(jnp.array([1.3, -2.7]))
+    # d/dx round(x)^2 with STE = 2*round(x).
+    np.testing.assert_allclose(np.asarray(g), [2.0, -6.0], rtol=1e-6)
+
+
+def test_fake_quant_gradient_masks_clipped_region():
+    f = lambda x: jnp.sum(quant.fake_quant_i8(x, jnp.float32(1.0)))
+    g = jax.grad(f)(jnp.array([0.3, 200.0, -200.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 0.0, 0.0], atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), spread=st.floats(0.5, 10.0))
+def test_qat_probs_are_simplex_and_ordered(seed, spread):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(0, spread, (2, 3, 4, 32)).astype(np.float32))
+    heads = 3
+    gamma = jnp.full((heads,), spread / 32.0, jnp.float32)
+    B = jnp.full((heads,), 300.0)
+    S = jnp.full((heads,), 4.0)
+    D = jnp.full((heads,), 64.0)
+    p = np.asarray(hccs_qat_probs(logits, gamma, B, S, D))
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert (p >= 0).all()
+    # Rank preservation per row on the quantized grid: strictly larger
+    # logits (by > gamma) never get smaller probability.
+    x = np.asarray(logits)
+    g = float(gamma[0])
+    for idx in np.ndindex(x.shape[:-1]):
+        row_x, row_p = x[idx], p[idx]
+        i, j = np.argmax(row_x), np.argmin(row_x)
+        if row_x[i] - row_x[j] > 2 * g:
+            assert row_p[i] >= row_p[j]
+
+
+def test_qat_gradients_flow_to_logits():
+    logits = jnp.linspace(-3, 3, 32).reshape(1, 1, 1, 32)
+    gamma = jnp.asarray([0.05], jnp.float32)
+    B, S, D = jnp.asarray([300.0]), jnp.asarray([4.0]), jnp.asarray([64.0])
+
+    def loss(lg):
+        p = hccs_qat_probs(lg, gamma, B, S, D)
+        return -jnp.log(p[..., -1]).sum()  # pull mass to the last key
+
+    g = np.asarray(jax.grad(loss)(logits))
+    assert np.abs(g).sum() > 0, "no gradient through the surrogate"
+    assert np.isfinite(g).all()
+    # Increasing the target logit must decrease the loss.
+    assert g[..., -1] < 0
+
+
+def test_train_deploy_gap_is_small():
+    """QAT float forward vs exact integer i16+div path on the same inputs:
+    row-wise probabilities agree to within the fixed-point resolution."""
+    rng = np.random.default_rng(11)
+    n, heads = 64, 2
+    logits = rng.normal(0, 4.0, (3, heads, 5, n)).astype(np.float32)
+    gamma = np.full((heads,), 4.0 / 64.0, np.float32)
+    B, S, D = 300, 4, 64
+    p_qat = np.asarray(
+        hccs_qat_probs(
+            jnp.asarray(logits), jnp.asarray(gamma),
+            jnp.full((heads,), float(B)), jnp.full((heads,), float(S)),
+            jnp.full((heads,), float(D)),
+        )
+    )
+    xq = quant.quantize_i8(logits / 1.0, gamma[0])
+    phat = ref.hccs_int_rows(xq, B, S, D)
+    p_int = ref.normalize_phat(phat)
+    # ρ truncation contributes < 1/256 relative error; rounding of the
+    # logits is shared by both paths.
+    assert np.max(np.abs(p_qat - p_int)) < 2e-3

@@ -1,0 +1,48 @@
+//! Microbenchmarks of the coordinator substrate: dynamic batcher ops and
+//! metrics recording — these sit on the per-request hot path, so their
+//! cost must be negligible next to model execution (§Perf L3 criterion).
+
+use std::time::{Duration, Instant};
+
+use hccs::benchkit::{bench, sink};
+use hccs::coordinator::{BatchPolicy, DynamicBatcher};
+use hccs::metrics::Histogram;
+
+fn main() {
+    println!("== batcher/metrics microbenchmarks ==");
+
+    // push+flush cycle at batch 8.
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+    let mut b: DynamicBatcher<u64> = DynamicBatcher::new(policy);
+    let now = Instant::now();
+    let r = bench("batcher push (flush every 8th)", || {
+        if let Some(batch) = b.push(1, now) {
+            sink(batch.items.len());
+        }
+    });
+    println!("{}  -> {:.1} M req/s", r.render(), r.per_second(1.0) / 1e6);
+
+    // Deadline polling on a non-empty queue.
+    let mut b2: DynamicBatcher<u64> = DynamicBatcher::new(BatchPolicy {
+        max_batch: 1024,
+        max_wait: Duration::from_secs(3600),
+    });
+    b2.push(1, now);
+    let r = bench("batcher poll (deadline not due)", || {
+        sink(b2.poll(now).is_some());
+    });
+    println!("{}", r.render());
+
+    // Histogram record (two per request on the serving path).
+    let h = Histogram::new();
+    let d = Duration::from_micros(1234);
+    let r = bench("histogram record", || {
+        h.record(sink(d));
+    });
+    println!("{}  -> {:.1} M records/s", r.render(), r.per_second(1.0) / 1e6);
+
+    let r = bench("histogram p99 query", || {
+        sink(h.percentile_us(99.0));
+    });
+    println!("{}", r.render());
+}

@@ -1,0 +1,40 @@
+//! Bench target for **Fig. 3**: multi-tile scaling sweep on AIE-MLv2 and
+//! the simulator's own row-processing throughput (it must stay far above
+//! what any harness needs — the §Perf L3 criterion for aie_sim).
+
+use hccs::aie_sim::device::{Device, DeviceKind};
+use hccs::aie_sim::kernels::KernelKind;
+use hccs::aie_sim::{scaling, tile::TileSim};
+use hccs::benchkit::{bench, sink};
+use hccs::experiments;
+
+fn main() {
+    println!("{}", experiments::fig3().unwrap());
+
+    let dev = Device::new(DeviceKind::AieMlV2);
+    let r = bench("fig3 full sweep (both kernels, 1..184 tiles)", || {
+        sink(scaling::sweep(&dev, KernelKind::HccsI16Div, 128, dev.array_tiles));
+        sink(scaling::sweep(&dev, KernelKind::HccsI8Clb, 128, dev.array_tiles));
+    });
+    println!("{}", r.render());
+
+    // The tile model is closed-form per (rows, n) batch, so a workload of
+    // any size costs one process() call — bench the call itself plus a
+    // mixed-length workload loop (4096 batches of varying n).
+    let sim = TileSim::new(dev, KernelKind::HccsI8Clb);
+    let r = bench("tile model: process() one batch", || {
+        let mut s = sim.clone();
+        s.process(1_000_000, 128);
+        sink(s.total_cycles());
+    });
+    println!("{}", r.render());
+    let lengths: Vec<usize> = (0..4096).map(|i| 16 + (i % 241)).collect();
+    let r = bench("tile model: 4096 mixed-length batches", || {
+        let mut s = sim.clone();
+        for &n in &lengths {
+            s.process(64, n);
+        }
+        sink(s.throughput_eps());
+    });
+    println!("{}  -> {:.1} M batches/s", r.render(), r.per_second(4096.0) / 1e6);
+}

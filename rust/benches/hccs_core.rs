@@ -1,0 +1,51 @@
+//! Microbenchmarks of the Rust HCCS hot path (benchkit, harness=false):
+//! row kernel across lengths/modes, batched rows, and the calibration
+//! grid search.  These are the §Perf L3 numbers in EXPERIMENTS.md.
+
+use hccs::benchkit::{bench, sink};
+use hccs::hccs::calibrate::{calibrate_rows, calibrate_scale};
+use hccs::hccs::{hccs_row_into, hccs_rows, HccsParams, OutputPath, Reciprocal};
+use hccs::rng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::new(5);
+    println!("== hccs_core microbenchmarks ==");
+
+    for n in [32usize, 64, 128, 512] {
+        // (S=1, Dmax=16) keeps the Eq. (11) band non-empty out to n=512.
+        let (lo, hi) = HccsParams::feasible_b_band(1, 16, n).expect("band");
+        let theta = HccsParams::checked((lo + hi) / 2, 1, 16, n).unwrap();
+        let x: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+        let mut out = vec![0i32; n];
+        for (label, op, rc) in [
+            ("i16+div", OutputPath::I16, Reciprocal::Div),
+            ("i8+clb", OutputPath::I8, Reciprocal::Clb),
+        ] {
+            let r = bench(&format!("hccs_row n={n} {label}"), || {
+                hccs_row_into(sink(&x), &theta, op, rc, &mut out);
+            });
+            println!("{}  -> {:.1} M elem/s", r.render(), r.per_second(n as f64) / 1e6);
+        }
+    }
+
+    // Batched rows with per-row θ (the serving layout: heads x queries).
+    let n = 64usize;
+    let rows = 256usize;
+    let theta = HccsParams::checked(300, 4, 64, n).unwrap();
+    let params = vec![theta; rows];
+    let x: Vec<i8> = (0..rows * n).map(|_| rng.i8()).collect();
+    let r = bench("hccs_rows 256x64 i16+div", || {
+        sink(hccs_rows(&x, n, &params, OutputPath::I16, Reciprocal::Div));
+    });
+    println!("{}  -> {:.1} M elem/s", r.render(), r.per_second((rows * n) as f64) / 1e6);
+
+    // Calibration grid search (offline path, but must stay interactive).
+    let rows_f: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..n).map(|_| (rng.f64() + rng.f64() - 1.0) * 4.0).collect())
+        .collect();
+    let gamma = calibrate_scale(&rows_f.iter().flatten().cloned().collect::<Vec<_>>(), 99.9);
+    let r = bench("calibrate_rows 64x64 full grid", || {
+        sink(calibrate_rows(&rows_f, n, gamma));
+    });
+    println!("{}", r.render());
+}

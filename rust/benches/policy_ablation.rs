@@ -1,0 +1,119 @@
+//! Ablation bench: dynamic-batching policy frontier.
+//!
+//! DESIGN.md calls out the size/deadline batching policy as the main L3
+//! design choice; this harness sweeps (max_batch × max_wait) against the
+//! real bert-tiny HCCS executable and prints the throughput/latency
+//! frontier, plus the backpressure shed behaviour under overload.
+//! Skips when artifacts are missing.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::report::Table;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    ["artifacts", "../artifacts"]
+        .iter()
+        .map(PathBuf::from)
+        .find(|p| p.join("vocab.json").exists())
+}
+
+fn run_policy(artifacts: &PathBuf, max_batch: usize, wait_ms: u64, n_req: usize) -> Option<(f64, u64, u64)> {
+    let (coord, handle) = Coordinator::start(CoordinatorConfig {
+        artifacts: artifacts.clone(),
+        model: "bert-tiny".into(),
+        task: "sst2s".into(),
+        variant: "hccs".into(),
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+        },
+        max_in_flight: None,
+    })
+    .ok()?;
+    let mut generator = WorkloadGen::new(TaskKind::Sst2s, 42);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|_| {
+            let e = generator.next_example();
+            coord.submit(e.ids, e.segments).unwrap()
+        })
+        .collect();
+    let mut lat: Vec<u64> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap().latency.as_micros() as u64)
+        .collect();
+    let wall = t0.elapsed();
+    lat.sort();
+    coord.shutdown();
+    let _ = handle.join();
+    Some((
+        n_req as f64 / wall.as_secs_f64(),
+        lat[n_req / 2],
+        lat[n_req * 99 / 100],
+    ))
+}
+
+fn main() {
+    let Some(artifacts) = artifacts_dir() else {
+        println!("SKIP policy_ablation: no artifacts");
+        return;
+    };
+    if hccs::runtime::manifest::summary_path(&artifacts, "bert-tiny", "sst2s").is_none() {
+        println!("SKIP policy_ablation: bert-tiny/sst2s not built yet");
+        return;
+    }
+
+    // NOTE: the exported executables are b1 and b8; the engine requires a
+    // matching manifest, so the sweep covers those two batch shapes with
+    // several deadlines — the deadline axis only matters under partial
+    // load, which the open-loop burst below creates for small waits.
+    let mut t = Table::new(
+        "batching policy frontier (bert-tiny/sst2s hccs, 128-request burst)",
+        &["max_batch", "deadline ms", "req/s", "p50 us", "p99 us"],
+    );
+    for &(mb, wait) in &[(1usize, 0u64), (1, 5), (8, 0), (8, 2), (8, 5), (8, 20)] {
+        if let Some((rps, p50, p99)) = run_policy(&artifacts, mb, wait, 128) {
+            t.row(&[
+                mb.to_string(),
+                wait.to_string(),
+                format!("{rps:.1}"),
+                p50.to_string(),
+                p99.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // Backpressure: bounded in-flight sheds instead of queueing.
+    let (coord, handle) = Coordinator::start(CoordinatorConfig {
+        artifacts: artifacts.clone(),
+        model: "bert-tiny".into(),
+        task: "sst2s".into(),
+        variant: "hccs".into(),
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        max_in_flight: Some(32),
+    })
+    .unwrap();
+    let mut generator = WorkloadGen::new(TaskKind::Sst2s, 7);
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..512 {
+        let e = generator.next_example();
+        match coord.submit(e.ids, e.segments) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => shed += 1,
+        }
+    }
+    let served = accepted.into_iter().filter(|rx| rx.recv().is_ok()).count();
+    println!(
+        "backpressure (max_in_flight=32): {served} served, {shed} shed at admission, \
+         {} recorded by the controller",
+        coord.shed_count()
+    );
+    assert_eq!(served + shed, 512, "requests must be conserved");
+    coord.shutdown();
+    let _ = handle.join();
+}

@@ -1,0 +1,112 @@
+//! Bench target for **Tables I/II** (the accuracy-table harness) and the
+//! end-to-end serving path: measures PJRT model-execute latency, the
+//! coordinator overhead on top of it, and eval throughput per variant.
+//!
+//! Requires `make artifacts`; prints SKIP lines otherwise so `cargo
+//! bench` stays green on a fresh checkout.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use hccs::benchkit::{bench_with, sink};
+use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::runtime::{manifest::summary_path, ModelRunner, PairSummary, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    for base in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(base);
+        if p.join("vocab.json").exists() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+fn main() {
+    let artifacts = artifacts_dir();
+    let Some(spath) = summary_path(&artifacts, "bert-tiny", "sst2s") else {
+        println!("SKIP serving_e2e: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let summary = PairSummary::load(&spath).unwrap();
+
+    // 1. Raw PJRT execute latency, float vs HCCS variant, b1 and b8.
+    println!("== raw model execute (PJRT, bert-tiny/sst2s) ==");
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let mut generator = WorkloadGen::new(TaskKind::Sst2s, 3);
+    for variant in ["float", "hccs"] {
+        for b in [1usize, 8] {
+            let Some(mani) = summary.manifest(variant, b) else { continue };
+            let runner = ModelRunner::load(rt.clone(), &artifacts, mani.clone()).unwrap();
+            let _l = runner.seq_len();
+            let mut ids = Vec::new();
+            let mut segs = Vec::new();
+            for _ in 0..b {
+                let e = generator.next_example();
+                ids.extend(e.ids);
+                segs.extend(e.segments);
+            }
+            let r = bench_with(
+                &format!("execute {variant} b{b}"),
+                std::time::Duration::from_millis(200),
+                std::time::Duration::from_millis(600),
+                &mut || {
+                    sink(runner.run(&ids, &segs).unwrap());
+                },
+            );
+            println!(
+                "{}  -> {:.1} examples/s",
+                r.render(),
+                r.per_second(b as f64)
+            );
+        }
+    }
+
+    // 2. Coordinator overhead: same model behind the batcher.
+    println!("\n== coordinator end-to-end (batch 8, 5ms deadline) ==");
+    let (coord, handle) = Coordinator::start(CoordinatorConfig {
+        artifacts: artifacts.clone(),
+        model: "bert-tiny".into(),
+        task: "sst2s".into(),
+        variant: "hccs".into(),
+        policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(5) },
+        max_in_flight: None,
+    })
+    .unwrap();
+    let mut generator = WorkloadGen::new(TaskKind::Sst2s, 17);
+    let n_req = 512usize;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|_| {
+            let e = generator.next_example();
+            coord.submit(e.ids, e.segments).unwrap()
+        })
+        .collect();
+    let mut lat_us: Vec<u64> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().unwrap().latency.as_micros() as u64)
+        .collect();
+    let wall = t0.elapsed();
+    lat_us.sort();
+    println!(
+        "  {n_req} requests in {wall:?} -> {:.1} req/s; latency p50 {}us p95 {}us p99 {}us",
+        n_req as f64 / wall.as_secs_f64(),
+        lat_us[n_req / 2],
+        lat_us[n_req * 95 / 100],
+        lat_us[n_req * 99 / 100],
+    );
+    coord.shutdown();
+    let _ = handle.join();
+
+    // 3. Tables I/II accuracy harness timing (the "bench" of an accuracy
+    // table is its regeneration cost).
+    println!("\n== table regeneration ==");
+    let t0 = Instant::now();
+    let t1 = hccs::experiments::table1(&artifacts, 64, true).unwrap();
+    println!("table1 (re-measured over 64 examples/variant): {:?}\n{t1}", t0.elapsed());
+    let t0 = Instant::now();
+    let t2 = hccs::experiments::table2(&artifacts).unwrap();
+    println!("table2: {:?}\n{t2}", t0.elapsed());
+}

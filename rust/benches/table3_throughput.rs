@@ -1,0 +1,71 @@
+//! Bench target for **Table III**: regenerates the kernel-throughput
+//! table on the AIE tile model and cross-checks it against the measured
+//! wall-clock throughput of the Rust reference implementation of the
+//! same five-stage kernel (the shape comparison the paper makes between
+//! its kernel and the BF16 reference).
+
+use hccs::aie_sim::device::{Device, DeviceKind};
+use hccs::aie_sim::kernels::KernelKind;
+use hccs::aie_sim::tile::throughput_eps;
+use hccs::benchkit::{bench, sink};
+use hccs::experiments;
+use hccs::hccs::{hccs_row_into, HccsParams, OutputPath, Reciprocal};
+use hccs::rng::Xoshiro256;
+
+/// Software emulation of the BF16 reference softmax (exp + divide) for a
+/// CPU-side who-wins comparison against the integer surrogate.
+fn bf16_ref_row(x: &[i8], out: &mut [f32]) {
+    let m = x.iter().copied().max().unwrap() as f32;
+    let mut z = 0f32;
+    for (o, &xi) in out.iter_mut().zip(x) {
+        let e = ((xi as f32 - m) * 0.1).exp();
+        *o = e;
+        z += e;
+    }
+    let inv = 1.0 / z;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+fn main() {
+    println!("== Table III (AIE tile model) ==\n{}", experiments::table3().unwrap());
+
+    println!("== CPU cross-check: integer HCCS vs exp-based softmax (this machine) ==");
+    let mut rng = Xoshiro256::new(11);
+    for n in [32usize, 64, 128] {
+        let theta = HccsParams::checked((32767 / n as i32).min(300), 4, 32, n).unwrap();
+        let x: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+        let mut pi = vec![0i32; n];
+        let mut pf = vec![0f32; n];
+        let hccs = bench(&format!("rust hccs i16+div n={n}"), || {
+            hccs_row_into(sink(&x), &theta, OutputPath::I16, Reciprocal::Div, &mut pi);
+        });
+        let bf = bench(&format!("rust exp softmax   n={n}"), || {
+            bf16_ref_row(sink(&x), &mut pf);
+        });
+        let sp = bf.median.as_secs_f64() / hccs.median.as_secs_f64();
+        println!("{}", hccs.render());
+        println!("{}", bf.render());
+        println!("  -> integer surrogate speedup on CPU: {sp:.2}x\n");
+    }
+
+    // Model-vs-paper drift table for EXPERIMENTS.md.
+    println!("== model vs paper (elements/s) ==");
+    let paper: [(DeviceKind, &[(usize, f64, f64, f64)]); 2] = [
+        (DeviceKind::AieMl, &[(32, 0.09e9, 0.41e9, 1.36e9), (64, 0.16e9, 0.78e9, 2.19e9), (128, 0.25e9, 1.37e9, 2.18e9)]),
+        (DeviceKind::AieMlV2, &[(32, 0.24e9, 0.41e9, 1.46e9), (64, 0.46e9, 0.78e9, 2.46e9), (128, 0.77e9, 1.41e9, 2.21e9)]),
+    ];
+    for (kind, rows) in paper {
+        let dev = Device::new(kind);
+        for &(n, p_bf, p_dv, p_cl) in rows {
+            let m_bf = throughput_eps(KernelKind::Bf16Ref, &dev, n);
+            let m_dv = throughput_eps(KernelKind::HccsI16Div, &dev, n);
+            let m_cl = throughput_eps(KernelKind::HccsI8Clb, &dev, n);
+            println!(
+                "  {:<8} n={n:<4} bf16 {:.2}/{:.2}G  div {:.2}/{:.2}G  clb {:.2}/{:.2}G  (model/paper)",
+                dev.short_name(), m_bf / 1e9, p_bf / 1e9, m_dv / 1e9, p_dv / 1e9, m_cl / 1e9, p_cl / 1e9
+            );
+        }
+    }
+}

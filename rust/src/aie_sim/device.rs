@@ -1,0 +1,95 @@
+//! AIE device generation models (AIE-ML on VEK280, AIE-MLv2 on VEK385).
+
+/// Device generation selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// Versal VEK280 — AIE-ML generation: no native bf16 exp (LUT-gather
+    /// exponential, 4 parallel table ports), 32-lane int8 MACs.
+    AieMl,
+    /// Versal VEK385 — AIE-MLv2 generation: native bf16 exponential
+    /// instruction, otherwise the same integer pipeline.
+    AieMlV2,
+}
+
+/// Architectural parameters of one AI Engine tile.
+#[derive(Clone, Copy, Debug)]
+pub struct Device {
+    pub kind: DeviceKind,
+    /// Core clock in GHz (both evaluated devices run at 1.25 GHz).
+    pub freq_ghz: f64,
+    /// int8 vector lanes (uint8 subtract/clamp and int8 MAC width).
+    pub int8_lanes: usize,
+    /// bf16 vector lanes (the reference softmax datapath).
+    pub bf16_lanes: usize,
+    /// Parallel LUT ports for gather-based exponentials (AIE-ML limit).
+    pub lut_ports: usize,
+    /// Native bf16 exponential instruction available (AIE-MLv2).
+    pub native_bf16_exp: bool,
+    /// Scalar integer divide latency (the i16+div reciprocal).
+    pub scalar_div_cycles: u64,
+    /// Leading-bit-detect latency (the CLB reciprocal).
+    pub clb_cycles: u64,
+    /// Peak int8 MACs per cycle (for MAC-utilization reporting).
+    pub peak_int8_macs: u64,
+    /// AIE tiles available on the device array (Fig. 3 scaling ceiling).
+    pub array_tiles: usize,
+}
+
+impl Device {
+    pub fn new(kind: DeviceKind) -> Self {
+        match kind {
+            DeviceKind::AieMl => Device {
+                kind,
+                freq_ghz: 1.25,
+                int8_lanes: 32,
+                bf16_lanes: 16,
+                lut_ports: 4,
+                native_bf16_exp: false,
+                scalar_div_cycles: 56,
+                clb_cycles: 2,
+                peak_int8_macs: 256,
+                array_tiles: 304,
+            },
+            DeviceKind::AieMlV2 => Device {
+                kind,
+                freq_ghz: 1.25,
+                int8_lanes: 32,
+                bf16_lanes: 16,
+                lut_ports: 4,
+                native_bf16_exp: true,
+                scalar_div_cycles: 56,
+                clb_cycles: 2,
+                peak_int8_macs: 256,
+                array_tiles: 184,
+            },
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.kind {
+            DeviceKind::AieMl => "AMD Versal VEK280 (AIE-ML)",
+            DeviceKind::AieMlV2 => "AMD Versal VEK385 (AIE-MLv2)",
+        }
+    }
+
+    pub fn short_name(&self) -> &'static str {
+        match self.kind {
+            DeviceKind::AieMl => "AIE-ML",
+            DeviceKind::AieMlV2 => "AIE-MLv2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generations_differ_where_expected() {
+        let ml = Device::new(DeviceKind::AieMl);
+        let v2 = Device::new(DeviceKind::AieMlV2);
+        assert!(!ml.native_bf16_exp && v2.native_bf16_exp);
+        assert_eq!(ml.int8_lanes, v2.int8_lanes); // same integer pipeline
+        assert_eq!(v2.array_tiles, 184); // Fig. 3 x-axis ceiling
+    }
+}

@@ -1,0 +1,36 @@
+//! Cycle-level performance model of AMD Versal AI Engine tiles.
+//!
+//! The paper evaluates kernel throughput with AMD's cycle-accurate AIE
+//! simulator (Vitis 2025.2) on VEK280 (AIE-ML) and VEK385 (AIE-MLv2)
+//! devices — neither the hardware nor the vendor toolchain exists in this
+//! image, so per DESIGN.md §2 we substitute a cycle-level model of one AIE
+//! tile with the *same structure* the paper's kernels imply:
+//!
+//! * each kernel is a [`schedule::Schedule`] of pipeline stages; a stage
+//!   contributes fixed per-row cycles (horizontal reductions, scalar
+//!   reciprocal, pipeline fill) and per-vector-iteration cycles (streaming
+//!   passes over the row at the device's vector width);
+//! * devices differ in vector lanes per datatype, availability of a native
+//!   bf16 exponential (AIE-MLv2) vs the 4-port LUT-gather approximation
+//!   (AIE-ML), scalar-division latency, and a saturation penalty once a
+//!   row spans enough iterations to exhaust the register file;
+//! * stage constants are **fit parameters** anchored to the cycle numbers
+//!   the paper reports (29 → 69 cycles/row for i8+CLB between n=32 and
+//!   n=128, and the Table III throughput grid); the *shape* of every
+//!   comparison — who wins, crossover with n, ML↔MLv2 baseline gap —
+//!   follows from the schedule structure, not from per-point tuning.
+//!
+//! [`tile::TileSim`] walks a schedule iteration by iteration (a miniature
+//! discrete simulator), [`scaling`] adds the embarrassingly-parallel
+//! multi-tile row partitioning of paper §IV-D / Fig. 3.
+
+pub mod device;
+pub mod kernels;
+pub mod scaling;
+pub mod schedule;
+pub mod tile;
+pub mod trace;
+
+pub use device::{Device, DeviceKind};
+pub use kernels::KernelKind;
+pub use tile::{cycles_per_row, throughput_eps, TileSim};

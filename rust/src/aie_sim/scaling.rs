@@ -1,0 +1,115 @@
+//! Multi-tile scaling (paper §IV-D / Fig. 3).
+//!
+//! Softmax rows are independent; tiles share nothing (per-head parameters
+//! live in each tile's local memory, no inter-tile synchronization), so
+//! aggregate throughput is the single-tile rate times the tile count as
+//! long as enough parallel rows exist to keep every tile busy.
+
+use super::device::Device;
+use super::kernels::KernelKind;
+use super::tile::TileSim;
+
+/// One point of the Fig. 3 sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePoint {
+    pub tiles: usize,
+    /// Aggregate throughput in elements/second.
+    pub eps: f64,
+    /// Fraction of tiles with work (1.0 when rows >= tiles).
+    pub occupancy: f64,
+}
+
+/// Aggregate throughput with `tiles` tiles given `rows` parallel rows of
+/// length `n`.  Rows are partitioned round-robin (Eq. 12); a tile with no
+/// rows contributes nothing, and the slowest (largest-share) tile bounds
+/// completion, which is what the ceiling division models.
+pub fn aggregate(device: &Device, kernel: KernelKind, n: usize, tiles: usize, rows: u64) -> ScalePoint {
+    assert!(tiles >= 1);
+    let sim = TileSim::new(*device, kernel);
+    let busy = tiles.min(rows.max(1) as usize);
+    let rows_per_tile = rows.div_ceil(tiles as u64).max(1);
+    let cycles = rows_per_tile * sim.row_cycles(n);
+    let eps = (rows * n as u64) as f64 * device.freq_ghz * 1e9 / cycles as f64;
+    ScalePoint { tiles, eps, occupancy: busy as f64 / tiles as f64 }
+}
+
+/// The Fig. 3 sweep: tile counts from 1 to the device array size, with an
+/// abundant row supply (the paper's "enough parallel work" regime).
+pub fn sweep(device: &Device, kernel: KernelKind, n: usize, max_tiles: usize) -> Vec<ScalePoint> {
+    let mut out = Vec::new();
+    let mut t = 1usize;
+    while t <= max_tiles {
+        // Saturated supply: rows = many multiples of the tile count.
+        out.push(aggregate(device, kernel, n, t, (t as u64) * 4096));
+        t = next_tick(t);
+    }
+    if out.last().map(|p| p.tiles) != Some(max_tiles) {
+        out.push(aggregate(device, kernel, n, max_tiles, max_tiles as u64 * 4096));
+    }
+    out
+}
+
+fn next_tick(t: usize) -> usize {
+    match t {
+        1 => 2,
+        2 => 4,
+        4 => 8,
+        8 => 16,
+        16 => 32,
+        32 => 64,
+        64 => 96,
+        96 => 128,
+        128 => 160,
+        _ => t + 24,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aie_sim::device::{Device, DeviceKind};
+    use crate::aie_sim::tile::throughput_eps;
+
+    #[test]
+    fn linear_scaling_with_saturated_supply() {
+        let d = Device::new(DeviceKind::AieMlV2);
+        let single = throughput_eps(KernelKind::HccsI8Clb, &d, 128);
+        for t in [1usize, 7, 64, 184] {
+            let p = aggregate(&d, KernelKind::HccsI8Clb, 128, t, t as u64 * 1000);
+            let rel = p.eps / (single * t as f64);
+            assert!((0.99..=1.01).contains(&rel), "tiles={t}: rel {rel}");
+            assert_eq!(p.occupancy, 1.0);
+        }
+    }
+
+    /// Fig. 3 headline: ~259 G elem/s (i16+div) and ~407 G elem/s
+    /// (i8+CLB) at 184 AIE-MLv2 tiles, n=128.
+    #[test]
+    fn fig3_headline_numbers() {
+        let d = Device::new(DeviceKind::AieMlV2);
+        let div = aggregate(&d, KernelKind::HccsI16Div, 128, 184, 184 * 4096).eps / 1e9;
+        let clb = aggregate(&d, KernelKind::HccsI8Clb, 128, 184, 184 * 4096).eps / 1e9;
+        assert!((230.0..=290.0).contains(&div), "i16+div {div} G/s");
+        assert!((370.0..=450.0).contains(&clb), "i8+CLB {clb} G/s");
+    }
+
+    #[test]
+    fn starved_tiles_lose_occupancy() {
+        let d = Device::new(DeviceKind::AieMlV2);
+        let p = aggregate(&d, KernelKind::HccsI8Clb, 128, 184, 10);
+        assert!(p.occupancy < 0.1);
+        // Ten rows on 184 tiles is no faster than ten rows on ten tiles.
+        let p10 = aggregate(&d, KernelKind::HccsI8Clb, 128, 10, 10);
+        assert!((p.eps - p10.eps).abs() / p10.eps < 1e-9);
+    }
+
+    #[test]
+    fn sweep_is_monotone_and_reaches_max() {
+        let d = Device::new(DeviceKind::AieMlV2);
+        let pts = sweep(&d, KernelKind::HccsI16Div, 128, 184);
+        assert_eq!(pts.last().unwrap().tiles, 184);
+        for w in pts.windows(2) {
+            assert!(w[1].eps > w[0].eps);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Kernel schedules: the per-row pipeline as a list of costed stages.
+
+/// How a stage's cost scales with the row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageCost {
+    /// Fixed cycles per row, independent of length (horizontal reductions,
+    /// scalar reciprocal, pipeline fill/drain, precision-crossing setup).
+    PerRow(u64),
+    /// Cycles per vector iteration (one pass over `lanes` elements).
+    PerIter(u64),
+}
+
+/// One pipeline stage of a kernel schedule.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub name: &'static str,
+    pub cost: StageCost,
+}
+
+/// A complete kernel schedule for one device generation.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub kernel_name: &'static str,
+    /// Vector lanes the streaming stages run at (int8: 32, bf16: 16).
+    pub lanes: usize,
+    pub stages: Vec<Stage>,
+    /// Register-file saturation: once a row needs more than
+    /// `sat_after_iters` vector iterations, each additional iteration
+    /// costs `sat_extra` more cycles (spill/bank-conflict pressure).
+    pub sat_after_iters: u64,
+    pub sat_extra: u64,
+    /// int8 MAC instructions issued per vector iteration (utilization).
+    pub macs_per_iter: u64,
+}
+
+impl Schedule {
+    /// Total fixed cycles per row.
+    pub fn fixed_cycles(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| match s.cost {
+                StageCost::PerRow(c) => c,
+                StageCost::PerIter(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Total cycles per vector iteration (before saturation).
+    pub fn iter_cycles(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| match s.cost {
+                StageCost::PerRow(_) => 0,
+                StageCost::PerIter(c) => c,
+            })
+            .sum()
+    }
+
+    /// Vector iterations needed for a row of `n` elements.
+    pub fn iters(&self, n: usize) -> u64 {
+        (n as u64).div_ceil(self.lanes as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_partition() {
+        let s = Schedule {
+            kernel_name: "t",
+            lanes: 32,
+            stages: vec![
+                Stage { name: "a", cost: StageCost::PerRow(10) },
+                Stage { name: "b", cost: StageCost::PerIter(7) },
+                Stage { name: "c", cost: StageCost::PerRow(5) },
+            ],
+            sat_after_iters: 2,
+            sat_extra: 3,
+            macs_per_iter: 1,
+        };
+        assert_eq!(s.fixed_cycles(), 15);
+        assert_eq!(s.iter_cycles(), 7);
+        assert_eq!(s.iters(32), 1);
+        assert_eq!(s.iters(33), 2);
+        assert_eq!(s.iters(128), 4);
+    }
+}

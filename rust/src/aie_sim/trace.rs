@@ -1,0 +1,165 @@
+//! Trace-driven workload simulation: what share of an AIE array does the
+//! softmax stage actually need?
+//!
+//! Fig. 3 shows the scaling *ceiling* with the whole array devoted to
+//! softmax; the paper notes "a full DNN workload will not typically
+//! allocate such a large portion of the AI Engine array to the softmax
+//! stage".  This module quantifies that: given an encoder inference
+//! trace (layers × heads × query rows of length n per request) and a
+//! target request rate, it sizes the softmax tile allocation and reports
+//! per-tile occupancy — the capacity-planning view a deployment would
+//! actually use.
+
+use super::device::Device;
+use super::kernels::KernelKind;
+use super::tile::TileSim;
+
+/// Softmax workload of one encoder inference.
+#[derive(Clone, Copy, Debug)]
+pub struct EncoderTrace {
+    pub layers: usize,
+    pub heads: usize,
+    /// Query positions per attention call (rows).
+    pub queries: usize,
+    /// Key length per row (the softmax n).
+    pub keys: usize,
+}
+
+impl EncoderTrace {
+    /// bert-tiny on sst2s-length sequences.
+    pub fn bert_tiny(seq: usize) -> Self {
+        Self { layers: 2, heads: 2, queries: seq, keys: seq }
+    }
+
+    /// bert-small (paper architecture: 4 layers, 8 heads).
+    pub fn bert_small(seq: usize) -> Self {
+        Self { layers: 4, heads: 8, queries: seq, keys: seq }
+    }
+
+    /// Softmax rows per inference.
+    pub fn rows(&self) -> u64 {
+        (self.layers * self.heads * self.queries) as u64
+    }
+
+    /// Softmax elements per inference.
+    pub fn elements(&self) -> u64 {
+        self.rows() * self.keys as u64
+    }
+}
+
+/// Sizing result for a softmax stage allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct Allocation {
+    /// Tiles needed to sustain the target rate.
+    pub tiles: usize,
+    /// Fraction of the device array those tiles represent.
+    pub array_share: f64,
+    /// Steady-state occupancy of the allocated tiles (0..1].
+    pub occupancy: f64,
+    /// Softmax latency per inference on this allocation (seconds).
+    pub latency_s: f64,
+}
+
+/// Size the softmax tile pool for `rate` inferences/second of `trace`.
+pub fn size_allocation(
+    device: &Device,
+    kernel: KernelKind,
+    trace: &EncoderTrace,
+    rate: f64,
+) -> Allocation {
+    assert!(rate > 0.0);
+    let sim = TileSim::new(*device, kernel);
+    let cycles_per_row = sim.row_cycles(trace.keys) as f64;
+    let rows_per_sec = trace.rows() as f64 * rate;
+    let cycles_per_sec_needed = rows_per_sec * cycles_per_row;
+    let tile_cycles_per_sec = device.freq_ghz * 1e9;
+    let tiles_exact = cycles_per_sec_needed / tile_cycles_per_sec;
+    let tiles = tiles_exact.ceil().max(1.0) as usize;
+    // Rows split round-robin across the pool; latency is the slowest
+    // tile's share of one inference.
+    let rows_per_tile = trace.rows().div_ceil(tiles as u64);
+    Allocation {
+        tiles,
+        array_share: tiles as f64 / device.array_tiles as f64,
+        occupancy: tiles_exact / tiles as f64,
+        latency_s: rows_per_tile as f64 * cycles_per_row / tile_cycles_per_sec,
+    }
+}
+
+/// Convenience: the softmax share table used by the aie_throughput
+/// example (rates in inferences/s).
+pub fn share_table(device: &Device, kernel: KernelKind) -> Vec<(String, f64, Allocation)> {
+    let mut out = Vec::new();
+    for (name, trace) in [
+        ("bert-tiny seq64", EncoderTrace::bert_tiny(64)),
+        ("bert-small seq128", EncoderTrace::bert_small(128)),
+    ] {
+        for rate in [1_000.0, 10_000.0, 100_000.0] {
+            out.push((name.to_string(), rate, size_allocation(device, kernel, &trace, rate)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aie_sim::device::DeviceKind;
+
+    fn v2() -> Device {
+        Device::new(DeviceKind::AieMlV2)
+    }
+
+    #[test]
+    fn trace_row_math() {
+        let t = EncoderTrace::bert_small(128);
+        assert_eq!(t.rows(), 4 * 8 * 128);
+        assert_eq!(t.elements(), 4 * 8 * 128 * 128);
+    }
+
+    #[test]
+    fn allocation_scales_linearly_with_rate() {
+        let t = EncoderTrace::bert_small(128);
+        let a1 = size_allocation(&v2(), KernelKind::HccsI8Clb, &t, 1_000.0);
+        let a10 = size_allocation(&v2(), KernelKind::HccsI8Clb, &t, 10_000.0);
+        // Exact load (tiles x occupancy) is linear in rate; the integer
+        // tile count only ceils it.
+        let load1 = a1.tiles as f64 * a1.occupancy;
+        let load10 = a10.tiles as f64 * a10.occupancy;
+        assert!((load10 / load1 - 10.0).abs() < 1e-6, "{load1} -> {load10}");
+        assert!(a10.tiles >= a1.tiles);
+        assert!(a1.occupancy > 0.0 && a1.occupancy <= 1.0);
+    }
+
+    #[test]
+    fn hccs_needs_far_fewer_tiles_than_bf16() {
+        // The whole point: at the same request rate the HCCS stage fits
+        // in a much smaller array slice than the BF16 reference.
+        let t = EncoderTrace::bert_small(128);
+        let bf = size_allocation(&v2(), KernelKind::Bf16Ref, &t, 50_000.0);
+        let cl = size_allocation(&v2(), KernelKind::HccsI8Clb, &t, 50_000.0);
+        assert!(
+            (bf.tiles as f64) / (cl.tiles as f64) > 2.0,
+            "bf16 {} vs clb {} tiles",
+            bf.tiles,
+            cl.tiles
+        );
+    }
+
+    #[test]
+    fn small_workloads_need_a_tiny_share() {
+        // 1k inferences/s of bert-tiny: well under 5% of the array.
+        let t = EncoderTrace::bert_tiny(64);
+        let a = size_allocation(&v2(), KernelKind::HccsI8Clb, &t, 1_000.0);
+        assert!(a.array_share < 0.05, "share {}", a.array_share);
+        assert!(a.latency_s < 1e-3);
+    }
+
+    #[test]
+    fn latency_shrinks_with_pool_size() {
+        let t = EncoderTrace::bert_small(128);
+        let slow = size_allocation(&v2(), KernelKind::HccsI16Div, &t, 100.0);
+        let fast = size_allocation(&v2(), KernelKind::HccsI16Div, &t, 100_000.0);
+        assert!(fast.latency_s < slow.latency_s);
+    }
+}

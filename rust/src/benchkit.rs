@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warmup + timed iterations with median/p95 reporting and a black-box
+//! sink to defeat dead-code elimination.  Used by `cargo bench` targets
+//! (all declared with `harness = false`) and the §Perf profiling pass.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub p95: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Throughput in "units/s" given units of work per iteration.
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.median.as_secs_f64()
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} median {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}  ({} iters)",
+            self.name, self.median, self.p95, self.min, self.iters
+        )
+    }
+}
+
+/// Benchmark `f`, auto-scaling the iteration count to the budget.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, Duration::from_millis(300), Duration::from_millis(700), &mut f)
+}
+
+/// Benchmark with explicit warmup/measure budgets.
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    measure: Duration,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup and estimate per-iteration cost.
+    let wu_start = Instant::now();
+    let mut wu_iters = 0u64;
+    while wu_start.elapsed() < warmup || wu_iters < 3 {
+        f();
+        wu_iters += 1;
+        if wu_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = wu_start.elapsed() / wu_iters.max(1) as u32;
+
+    // Sample in batches sized to ~1ms so Instant overhead stays < 0.1%.
+    let batch = if per_iter.as_nanos() == 0 {
+        1000
+    } else {
+        (Duration::from_millis(1).as_nanos() / per_iter.as_nanos().max(1)).clamp(1, 100_000) as u64
+    };
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < measure || samples.len() < 8 {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        samples.push(t.elapsed() / batch as u32);
+        iters += batch;
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let median = samples[samples.len() / 2];
+    let p95 = samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)];
+    let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median,
+        p95,
+        mean,
+        min: samples[0],
+    }
+}
+
+/// Re-export of `std::hint::black_box` for benchmark bodies.
+pub fn sink<T>(v: T) -> T {
+    black_box(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench_with(
+            "noop-ish",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            &mut || {
+                acc = sink(acc.wrapping_add(1));
+            },
+        );
+        assert!(r.iters > 100);
+        assert!(r.median.as_nanos() < 10_000);
+        assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn per_second_inverts_duration() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median: Duration::from_millis(10),
+            p95: Duration::from_millis(10),
+            mean: Duration::from_millis(10),
+            min: Duration::from_millis(10),
+        };
+        assert!((r.per_second(1.0) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! Hand-rolled flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments.  Unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value {1:?} for --{0}: {2}")]
+    Invalid(String, String, String),
+}
+
+impl Args {
+    /// Parse `argv` (without the program name). `known` lists accepted
+    /// flag names; names ending in `=` take a value, bare names are
+    /// booleans.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known: &[&str]) -> Result<Args, CliError> {
+        let value_flags: Vec<&str> = known
+            .iter()
+            .filter(|k| k.ends_with('='))
+            .map(|k| k.trim_end_matches('='))
+            .collect();
+        let bool_flags: Vec<&str> = known.iter().filter(|k| !k.ends_with('=')).copied().collect();
+
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if value_flags.contains(&name.as_str()) {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.flags.insert(name, v);
+                } else if bool_flags.contains(&name.as_str()) {
+                    out.flags.insert(name, inline.unwrap_or_else(|| "true".into()));
+                } else {
+                    return Err(CliError::Unknown(name));
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known: &[&str]) -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1), known)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| {
+                CliError::Invalid(name.to_string(), v.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_value_and_bool_flags() {
+        let a = Args::parse(argv("sub --n 64 --fast --mode=i8_clb"), &["n=", "mode=", "fast"]).unwrap();
+        assert_eq!(a.positional(), &["sub".to_string()]);
+        assert_eq!(a.get("n"), Some("64"));
+        assert_eq!(a.get("mode"), Some("i8_clb"));
+        assert!(a.flag("fast"));
+        assert_eq!(a.parse_num("n", 0usize).unwrap(), 64);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(matches!(
+            Args::parse(argv("--nope"), &["n="]),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(
+            Args::parse(argv("--n"), &["n="]),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(argv("--n abc"), &["n="]).unwrap();
+        assert!(a.parse_num("n", 0usize).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Admission control / backpressure for the serving engine.
+//!
+//! The executor drains at a rate fixed by the model; an unbounded inflow
+//! would grow the queue (and tail latency) without bound.  This module
+//! implements a token-bucket-cum-occupancy limiter: at most
+//! `max_in_flight` requests admitted but unanswered, with an optional
+//! shed policy that rejects early instead of queueing (the "fail fast
+//! under overload" serving discipline).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Why a request was not admitted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// In-flight occupancy at capacity.
+    Overloaded,
+}
+
+/// Shared admission state (clone-per-client).
+#[derive(Clone, Debug)]
+pub struct AdmissionControl {
+    max_in_flight: u64,
+    in_flight: Arc<AtomicU64>,
+    admitted: Arc<AtomicU64>,
+    rejected: Arc<AtomicU64>,
+}
+
+/// RAII permit: releases its in-flight slot on drop (even on panic /
+/// error paths, so shedding cannot leak capacity).
+pub struct Permit {
+    in_flight: Arc<AtomicU64>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.in_flight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl AdmissionControl {
+    pub fn new(max_in_flight: usize) -> Self {
+        assert!(max_in_flight >= 1);
+        Self {
+            max_in_flight: max_in_flight as u64,
+            in_flight: Arc::new(AtomicU64::new(0)),
+            admitted: Arc::new(AtomicU64::new(0)),
+            rejected: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Try to admit one request.
+    pub fn try_admit(&self) -> Result<Permit, RejectReason> {
+        let mut cur = self.in_flight.load(Ordering::Acquire);
+        loop {
+            if cur >= self.max_in_flight {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(RejectReason::Overloaded);
+            }
+            match self.in_flight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Permit { in_flight: self.in_flight.clone() });
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Acquire)
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_capacity_then_sheds() {
+        let ac = AdmissionControl::new(3);
+        let p1 = ac.try_admit().unwrap();
+        let _p2 = ac.try_admit().unwrap();
+        let _p3 = ac.try_admit().unwrap();
+        assert_eq!(ac.try_admit().err(), Some(RejectReason::Overloaded));
+        assert_eq!(ac.in_flight(), 3);
+        drop(p1);
+        assert_eq!(ac.in_flight(), 2);
+        let _p4 = ac.try_admit().unwrap();
+        assert_eq!(ac.admitted(), 4);
+        assert_eq!(ac.rejected(), 1);
+    }
+
+    #[test]
+    fn permit_releases_on_panic_path() {
+        let ac = AdmissionControl::new(1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _p = ac.try_admit().unwrap();
+            panic!("boom");
+        }));
+        assert!(r.is_err());
+        assert_eq!(ac.in_flight(), 0, "permit leaked across panic");
+        assert!(ac.try_admit().is_ok());
+    }
+
+    #[test]
+    fn concurrent_admission_never_exceeds_capacity() {
+        let ac = AdmissionControl::new(8);
+        let peak = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let ac = ac.clone();
+                let peak = peak.clone();
+                s.spawn(move || {
+                    for _ in 0..2000 {
+                        if let Ok(_p) = ac.try_admit() {
+                            peak.fetch_max(ac.in_flight(), Ordering::Relaxed);
+                            std::hint::spin_loop();
+                        }
+                    }
+                });
+            }
+        });
+        assert!(peak.load(Ordering::Relaxed) <= 8);
+        assert_eq!(ac.in_flight(), 0);
+    }
+}

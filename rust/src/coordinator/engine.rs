@@ -1,0 +1,265 @@
+//! The serving engine: request channel → dynamic batcher → executor
+//! thread owning the PJRT executable → reply channels.
+//!
+//! The PJRT wrapper types hold raw pointers (`!Send`), so the executable
+//! lives entirely inside the executor thread; the public
+//! [`Coordinator`] handle is `Clone + Send` and communicates over
+//! std::sync::mpsc.  Partial batches are padded with a repeat of the last
+//! row (the executable's batch dimension is fixed at AOT time) and the
+//! padding rows' outputs are discarded.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::Registry;
+use crate::runtime::{manifest::summary_path, ModelRunner, PairSummary, Runtime};
+
+use super::batcher::{BatchPolicy, DynamicBatcher, QueuedRequest};
+
+/// One inference request (already tokenized).
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub id: u64,
+    pub ids: Vec<i32>,
+    pub segments: Vec<i32>,
+}
+
+/// Reply for one request.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub id: u64,
+    pub predicted: usize,
+    pub logits: Vec<f32>,
+    /// Queue + execute latency as seen by the engine.
+    pub latency: Duration,
+}
+
+struct Envelope {
+    req: InferRequest,
+    reply: Sender<Result<InferReply, String>>,
+    /// Admission slot, released when the envelope (and so the reply) is
+    /// done — including on error paths.
+    _permit: Option<super::admission::Permit>,
+}
+
+enum Msg {
+    Infer(Envelope),
+    Shutdown,
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts: PathBuf,
+    pub model: String,
+    pub task: String,
+    /// "float" or "hccs".
+    pub variant: String,
+    pub policy: BatchPolicy,
+    /// Backpressure: maximum admitted-but-unanswered requests (None =
+    /// unbounded; Some(n) sheds with an "overloaded" error beyond n).
+    pub max_in_flight: Option<usize>,
+}
+
+/// Clonable, thread-safe handle to the serving engine.
+#[derive(Clone)]
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    next_id: Arc<AtomicU64>,
+    admission: Option<super::admission::AdmissionControl>,
+    pub metrics: Arc<Registry>,
+}
+
+impl Coordinator {
+    /// Start the executor thread and wait until the model is loaded.
+    pub fn start(cfg: CoordinatorConfig) -> Result<(Coordinator, JoinHandle<()>)> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let metrics = Arc::new(Registry::default());
+        let m = metrics.clone();
+        let admission = cfg.max_in_flight.map(super::admission::AdmissionControl::new);
+        let handle = std::thread::Builder::new()
+            .name("hccs-executor".into())
+            .spawn(move || executor_main(cfg, rx, ready_tx, m))
+            .context("spawning executor")?;
+        ready_rx
+            .recv()
+            .context("executor died before ready")?
+            .map_err(|e| anyhow!("model load failed: {e}"))?;
+        Ok((Coordinator { tx, next_id: Arc::new(AtomicU64::new(1)), admission, metrics }, handle))
+    }
+
+    /// Rejected-by-backpressure count (0 when unbounded).
+    pub fn shed_count(&self) -> u64 {
+        self.admission.as_ref().map_or(0, |a| a.rejected())
+    }
+
+    /// Submit a request; returns the channel the reply will arrive on.
+    pub fn submit(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        let permit = match &self.admission {
+            None => None,
+            Some(ac) => Some(
+                ac.try_admit()
+                    .map_err(|_| anyhow!("overloaded: {} requests in flight", ac.in_flight()))?,
+            ),
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(Envelope {
+                req: InferRequest { id, ids, segments },
+                reply: reply_tx,
+                _permit: permit,
+            }))
+            .map_err(|_| anyhow!("engine is down"))?;
+        Ok(reply_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, ids: Vec<i32>, segments: Vec<i32>) -> Result<InferReply> {
+        let rx = self.submit(ids, segments)?;
+        rx.recv()
+            .context("engine dropped the request")?
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Ask the engine to drain and stop.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+fn executor_main(
+    cfg: CoordinatorConfig,
+    rx: Receiver<Msg>,
+    ready: Sender<Result<(), String>>,
+    metrics: Arc<Registry>,
+) {
+    // Load the model inside this thread (PJRT handles are !Send).
+    let loaded = (|| -> Result<ModelRunner> {
+        let rt = std::rc::Rc::new(Runtime::cpu()?);
+        let spath = summary_path(&cfg.artifacts, &cfg.model, &cfg.task)
+            .with_context(|| format!("no summary for {}/{}", cfg.model, cfg.task))?;
+        let summary = PairSummary::load(&spath)?;
+        let mani = summary
+            .manifest(&cfg.variant, cfg.policy.max_batch)
+            .with_context(|| {
+                format!("no manifest {}_b{} in {}", cfg.variant, cfg.policy.max_batch, spath.display())
+            })?
+            .clone();
+        ModelRunner::load(rt, &cfg.artifacts, mani)
+    })();
+    let runner = match loaded {
+        Ok(r) => {
+            let _ = ready.send(Ok(()));
+            r
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+
+    let mut batcher: DynamicBatcher<Envelope> = DynamicBatcher::new(cfg.policy);
+    let queue_hist = metrics.histogram("coordinator.queue_us");
+    let exec_hist = metrics.histogram("coordinator.execute_us");
+    let batch_ctr = metrics.counter("coordinator.batches");
+    let req_ctr = metrics.counter("coordinator.requests");
+    let pad_ctr = metrics.counter("coordinator.padding_rows");
+
+    loop {
+        let now = Instant::now();
+        let timeout = batcher.next_deadline_in(now).unwrap_or(Duration::from_secs(3600));
+        match rx.recv_timeout(timeout) {
+            Ok(Msg::Infer(env)) => {
+                req_ctr.inc();
+                if let Some(batch) = batcher.push(env, Instant::now()) {
+                    run_batch(&runner, batch.items, &queue_hist, &exec_hist, &pad_ctr);
+                    batch_ctr.inc();
+                }
+            }
+            Ok(Msg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    run_batch(&runner, batch.items, &queue_hist, &exec_hist, &pad_ctr);
+                    batch_ctr.inc();
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // Drain on shutdown: no request is dropped.
+    for batch in batcher.drain() {
+        run_batch(&runner, batch.items, &queue_hist, &exec_hist, &pad_ctr);
+        batch_ctr.inc();
+    }
+}
+
+fn run_batch(
+    runner: &ModelRunner,
+    items: Vec<QueuedRequest<Envelope>>,
+    queue_hist: &crate::metrics::Histogram,
+    exec_hist: &crate::metrics::Histogram,
+    pad_ctr: &crate::metrics::Counter,
+) {
+    let b = runner.batch();
+    let l = runner.seq_len();
+    let c = runner.n_classes();
+    debug_assert!(items.len() <= b);
+    let started = Instant::now();
+    for q in &items {
+        queue_hist.record(started.duration_since(q.arrived));
+    }
+
+    // Assemble the fixed-shape batch, padding with the last real row.
+    let mut ids = Vec::with_capacity(b * l);
+    let mut segs = Vec::with_capacity(b * l);
+    for q in &items {
+        ids.extend_from_slice(&q.payload.req.ids);
+        segs.extend_from_slice(&q.payload.req.segments);
+    }
+    let pad_rows = b - items.len();
+    pad_ctr.add(pad_rows as u64);
+    for _ in 0..pad_rows {
+        let start = (items.len() - 1) * l;
+        ids.extend_from_within(start..start + l);
+        segs.extend_from_within(start..start + l);
+    }
+
+    match runner.run(&ids, &segs) {
+        Ok(logits) => {
+            exec_hist.record(started.elapsed());
+            for (i, q) in items.into_iter().enumerate() {
+                let row = &logits[i * c..(i + 1) * c];
+                let predicted = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                let _ = q.payload.reply.send(Ok(InferReply {
+                    id: q.payload.req.id,
+                    predicted,
+                    logits: row.to_vec(),
+                    latency: q.arrived.elapsed(),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for q in items {
+                let _ = q.payload.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}

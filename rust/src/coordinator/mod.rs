@@ -1,0 +1,22 @@
+//! L3 inference coordinator: request routing, dynamic batching, model
+//! execution, per-head surrogate state.
+//!
+//! The paper's contribution is the kernel + calibration, so the
+//! coordinator is the serving shell around it (DESIGN.md §4): clients
+//! submit tokenized examples; a dynamic batcher groups them under a
+//! size/deadline policy; a single executor thread owns the PJRT
+//! executables (the `xla` wrappers hold raw pointers and are not `Send`,
+//! and this image is single-core anyway) and answers through per-request
+//! channels.  Head-calibration state ([`state::HeadParamStore`]) is the
+//! coordinator-managed analogue of the AIE tiles' local-memory parameter
+//! tables.
+
+pub mod admission;
+pub mod batcher;
+pub mod engine;
+pub mod state;
+
+pub use admission::{AdmissionControl, Permit, RejectReason};
+pub use batcher::{Batch, BatchPolicy, DynamicBatcher, QueuedRequest};
+pub use engine::{Coordinator, CoordinatorConfig, InferReply, InferRequest};
+pub use state::{HeadParamStore, ModelCalib};

@@ -1,0 +1,169 @@
+//! Head-calibration state management.
+//!
+//! The coordinator's analogue of the AIE tiles' local parameter memory
+//! (paper §IV-D: each tile "loads the per-head parameters for its
+//! assigned rows from local tile memory based upon the row's head
+//! identifier").  Loads `calib_<model>_<task>.json`, validates every θ_h
+//! against the row-length feasibility region, and answers row→θ lookups.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hccs::HccsParams;
+use crate::json::Value;
+
+/// Calibration for one granularity: (layers × heads) tables.
+#[derive(Clone, Debug)]
+pub struct ModelCalib {
+    pub granularity: String,
+    pub layers: usize,
+    pub heads: usize,
+    /// Row-major (layer, head).
+    pub params: Vec<HccsParams>,
+    pub gamma: Vec<f64>,
+    /// Achieved calibration KL per head.
+    pub kl: Vec<f64>,
+    pub mode: String,
+}
+
+impl ModelCalib {
+    pub fn at(&self, layer: usize, head: usize) -> (&HccsParams, f64) {
+        let i = layer * self.heads + head;
+        (&self.params[i], self.gamma[i])
+    }
+}
+
+/// All granularities for one (model, task) pair.
+#[derive(Clone, Debug)]
+pub struct HeadParamStore {
+    pub per_head: ModelCalib,
+    pub per_layer: ModelCalib,
+    pub global: ModelCalib,
+    /// Row length (key dimension) the calibration was validated for.
+    pub n: usize,
+}
+
+impl HeadParamStore {
+    pub fn load(path: &Path, n: usize) -> Result<HeadParamStore> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading calib {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing calib json")?;
+        let store = HeadParamStore {
+            per_head: parse_granularity(&v, "per-head", n)?,
+            per_layer: parse_granularity(&v, "per-layer", n)?,
+            global: parse_granularity(&v, "global", n)?,
+            n,
+        };
+        Ok(store)
+    }
+
+    /// θ for a flattened attention row (batch-major rows of q positions
+    /// per head): row index → (layer, head) identifier mapping used by
+    /// the kernel harness.
+    pub fn params_for_rows(
+        &self,
+        layer: usize,
+        heads: usize,
+        rows_per_head: usize,
+    ) -> Vec<HccsParams> {
+        let mut out = Vec::with_capacity(heads * rows_per_head);
+        for h in 0..heads {
+            let (p, _) = self.per_head.at(layer, h);
+            out.extend(std::iter::repeat(*p).take(rows_per_head));
+        }
+        out
+    }
+}
+
+fn parse_granularity(v: &Value, name: &str, n: usize) -> Result<ModelCalib> {
+    let g = v
+        .get(name)
+        .with_context(|| format!("calib json missing granularity {name:?}"))?;
+    let b = g.req("B").rows_f64();
+    let s = g.req("S").rows_f64();
+    let d = g.req("Dmax").rows_f64();
+    let gamma = g.req("gamma").rows_f64();
+    let kl = g.req("calib_kl").rows_f64();
+    let layers = b.len();
+    if layers == 0 {
+        bail!("empty calibration table");
+    }
+    let heads = b[0].len();
+    let mut params = Vec::with_capacity(layers * heads);
+    let mut gammas = Vec::with_capacity(layers * heads);
+    let mut kls = Vec::with_capacity(layers * heads);
+    for li in 0..layers {
+        if b[li].len() != heads || s[li].len() != heads || d[li].len() != heads {
+            bail!("ragged calibration table at layer {li}");
+        }
+        for hi in 0..heads {
+            let p = HccsParams::checked(b[li][hi] as i32, s[li][hi] as i32, d[li][hi] as i32, n)
+                .with_context(|| format!("infeasible θ at layer {li} head {hi} ({name})"))?;
+            params.push(p);
+            gammas.push(gamma[li][hi]);
+            kls.push(kl[li][hi]);
+        }
+    }
+    Ok(ModelCalib {
+        granularity: name.to_string(),
+        layers,
+        heads,
+        params,
+        gamma: gammas,
+        kl: kls,
+        mode: g.req("mode").as_str().unwrap_or("i16_div").to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "per-head":  {"gamma": [[0.4, 0.5]], "B": [[300, 400]], "S": [[4, 2]],
+                    "Dmax": [[64, 96]], "mode": "i16_div", "calib_kl": [[0.1, 0.2]]},
+      "per-layer": {"gamma": [[0.4, 0.4]], "B": [[300, 300]], "S": [[4, 4]],
+                    "Dmax": [[64, 64]], "mode": "i16_div", "calib_kl": [[0.15, 0.15]]},
+      "global":    {"gamma": [[0.4, 0.4]], "B": [[300, 300]], "S": [[4, 4]],
+                    "Dmax": [[64, 64]], "mode": "i16_div", "calib_kl": [[0.2, 0.2]]}
+    }"#;
+
+    fn store() -> HeadParamStore {
+        let tmp = std::env::temp_dir().join(format!("hccs_calib_test_{}.json", std::process::id()));
+        std::fs::write(&tmp, SAMPLE).unwrap();
+        let s = HeadParamStore::load(&tmp, 64).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        s
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let s = store();
+        assert_eq!(s.per_head.layers, 1);
+        assert_eq!(s.per_head.heads, 2);
+        let (p, gamma) = s.per_head.at(0, 1);
+        assert_eq!(p.b, 400);
+        assert_eq!(p.s, 2);
+        assert!((gamma - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_get_their_heads_params() {
+        let s = store();
+        let rows = s.params_for_rows(0, 2, 3);
+        assert_eq!(rows.len(), 6);
+        assert!(rows[..3].iter().all(|p| p.b == 300));
+        assert!(rows[3..].iter().all(|p| p.b == 400));
+    }
+
+    #[test]
+    fn rejects_infeasible_calibration() {
+        // B=600 at n=64 violates n*B <= 32767.
+        let bad = SAMPLE.replace("\"B\": [[300, 400]]", "\"B\": [[600, 400]]");
+        let tmp = std::env::temp_dir().join(format!("hccs_calib_bad_{}.json", std::process::id()));
+        std::fs::write(&tmp, bad).unwrap();
+        assert!(HeadParamStore::load(&tmp, 64).is_err());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,160 @@
+//! Reader for the `HCCSDS01` binary dataset format written by
+//! `compile.data.write_dataset_bin`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"HCCSDS01";
+
+/// Task selector matching the Python `TaskSpec`s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Sst2s,
+    Mnlis,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Sst2s => "sst2s",
+            TaskKind::Mnlis => "mnlis",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sst2s" => Some(TaskKind::Sst2s),
+            "mnlis" => Some(TaskKind::Mnlis),
+            _ => None,
+        }
+    }
+
+    pub fn max_len(&self) -> usize {
+        match self {
+            TaskKind::Sst2s => 64,
+            TaskKind::Mnlis => 128,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            TaskKind::Sst2s => 2,
+            TaskKind::Mnlis => 3,
+        }
+    }
+}
+
+/// One padded, tokenized example.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Example {
+    pub ids: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub label: i32,
+}
+
+/// An in-memory evaluation dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub has_segments: bool,
+    pub examples: Vec<Example>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Dataset> {
+        if bytes.len() < 24 || &bytes[..8] != MAGIC {
+            bail!("bad dataset magic");
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()) as usize;
+        let n = u32_at(8);
+        let seq_len = u32_at(12);
+        let n_classes = u32_at(16);
+        let has_segments = u32_at(20) != 0;
+        let per_ex = seq_len * 4 * 2 + 4;
+        let need = 24 + n * per_ex;
+        if bytes.len() != need {
+            bail!("dataset size mismatch: have {} want {need}", bytes.len());
+        }
+        let i32_at =
+            |o: usize| i32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let mut examples = Vec::with_capacity(n);
+        let mut off = 24;
+        for _ in 0..n {
+            let ids: Vec<i32> = (0..seq_len).map(|i| i32_at(off + i * 4)).collect();
+            off += seq_len * 4;
+            let segments: Vec<i32> = (0..seq_len).map(|i| i32_at(off + i * 4)).collect();
+            off += seq_len * 4;
+            let label = i32_at(off);
+            off += 4;
+            if label < 0 || label as usize >= n_classes {
+                bail!("label {label} out of range");
+            }
+            examples.push(Example { ids, segments, label });
+        }
+        Ok(Dataset { seq_len, n_classes, has_segments, examples })
+    }
+
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_bytes(n: u32, seq: u32) -> Vec<u8> {
+        let mut b = MAGIC.to_vec();
+        b.extend(n.to_le_bytes());
+        b.extend(seq.to_le_bytes());
+        b.extend(2u32.to_le_bytes());
+        b.extend(0u32.to_le_bytes());
+        for e in 0..n {
+            for i in 0..seq {
+                b.extend((i as i32).to_le_bytes());
+            }
+            for _ in 0..seq {
+                b.extend(0i32.to_le_bytes());
+            }
+            b.extend(((e % 2) as i32).to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = Dataset::from_bytes(&synth_bytes(3, 8)).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.seq_len, 8);
+        assert_eq!(ds.examples[1].label, 1);
+        assert_eq!(ds.examples[0].ids[5], 5);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(Dataset::from_bytes(b"NOTMAGIC").is_err());
+        let mut b = synth_bytes(2, 8);
+        b.pop();
+        assert!(Dataset::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        let mut b = synth_bytes(1, 4);
+        let off = b.len() - 4;
+        b[off..].copy_from_slice(&9i32.to_le_bytes());
+        assert!(Dataset::from_bytes(&b).is_err());
+    }
+}

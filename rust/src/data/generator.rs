@@ -1,0 +1,301 @@
+//! Workload generators mirrored from `python/compile/data.py`.
+//!
+//! Every `rng` call below happens in exactly the order of the Python
+//! implementation — the two sides consume the same splitmix64 stream, so
+//! `WorkloadGen::new(task, seed)` reproduces `compile.data.make_dataset`
+//! example-for-example (verified in `tests/cross_language.rs` against the
+//! Python-exported eval split).
+
+use std::collections::BTreeSet;
+
+use crate::rng::SplitMix64;
+
+use super::dataset::{Example, TaskKind};
+
+// Vocabulary layout constants — must match compile/data.py.
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const N_FILLER: i32 = 150;
+pub const N_SENT: i32 = 20;
+pub const N_ENT: i32 = 80;
+pub const N_ANT: i32 = 20;
+pub const FILLER0: i32 = 4;
+pub const POS0: i32 = FILLER0 + N_FILLER; // 154
+pub const NEG0: i32 = POS0 + N_SENT; // 174
+pub const NOT_ID: i32 = NEG0 + N_SENT; // 194
+pub const VERY_ID: i32 = NOT_ID + 1; // 195
+pub const ENT0: i32 = VERY_ID + 1; // 196
+pub const ANT_A0: i32 = ENT0 + N_ENT; // 276
+pub const ANT_B0: i32 = ANT_A0 + N_ANT; // 296
+pub const VOCAB_SIZE: i32 = ANT_B0 + N_ANT; // 316
+
+/// Antonym partner (identity for non-antonym tokens).
+pub fn antonym(tok: i32) -> i32 {
+    if (ANT_A0..ANT_A0 + N_ANT).contains(&tok) {
+        tok - ANT_A0 + ANT_B0
+    } else if (ANT_B0..ANT_B0 + N_ANT).contains(&tok) {
+        tok - ANT_B0 + ANT_A0
+    } else {
+        tok
+    }
+}
+
+/// One generated (unpadded ids, segments, label).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Generated {
+    pub ids: Vec<i32>,
+    pub segments: Vec<i32>,
+    pub label: i32,
+}
+
+/// Negation-scoped sentiment score (mirrors `compile.data.score_body`).
+pub fn score_body(body: &[i32]) -> i64 {
+    let mut s = 0i64;
+    for (i, &t) in body.iter().enumerate() {
+        let mut pol = if (POS0..POS0 + N_SENT).contains(&t) {
+            1i64
+        } else if (NEG0..NEG0 + N_SENT).contains(&t) {
+            -1
+        } else {
+            continue;
+        };
+        if i > 0 && body[i - 1] == NOT_ID {
+            pol = -pol;
+        }
+        s += pol;
+    }
+    s
+}
+
+/// sst2s: sentiment with negation scoping (see the Python docstring).
+pub fn gen_sst2s(rng: &mut SplitMix64, max_len: usize) -> Generated {
+    let body_len = (8 + rng.below((max_len - 2 - 8 + 1) as u64)) as usize;
+    let n_slots = 1 + rng.below(4);
+    let mut body: Vec<i32> = (0..body_len)
+        .map(|_| FILLER0 + rng.below(N_FILLER as u64) as i32)
+        .collect();
+    let mut used: BTreeSet<usize> = BTreeSet::new();
+    for _ in 0..n_slots {
+        let pos = (1 + rng.below((body_len - 1).max(1) as u64)) as usize;
+        if used.contains(&pos) || (pos >= 1 && used.contains(&(pos - 1))) || used.contains(&(pos + 1)) {
+            continue;
+        }
+        let positive = rng.chance(1, 2);
+        let negated = rng.chance(3, 10);
+        let word = if positive { POS0 } else { NEG0 } + rng.below(N_SENT as u64) as i32;
+        body[pos] = word;
+        if negated {
+            body[pos - 1] = NOT_ID;
+            used.insert(pos - 1);
+        }
+        used.insert(pos);
+    }
+    let mut score = score_body(&body);
+    if score == 0 {
+        let positive = rng.chance(1, 2);
+        let word = if positive { POS0 } else { NEG0 } + rng.below(N_SENT as u64) as i32;
+        // Overwrite the last plain-filler slot (mirrors the Python logic).
+        let target = (0..body.len())
+            .rev()
+            .find(|&j| (FILLER0..POS0).contains(&body[j]))
+            .unwrap_or(0);
+        body[target] = word;
+        score = score_body(&body);
+        if score == 0 {
+            // Landed behind a "not": flip the word's polarity class.
+            let base = if positive { POS0 } else { NEG0 };
+            let flip = if positive { NEG0 } else { POS0 };
+            body[target] = flip + (word - base);
+            score = score_body(&body);
+        }
+    }
+    let mut ids = vec![CLS];
+    ids.extend(&body);
+    ids.push(SEP);
+    let segments = vec![0; ids.len()];
+    Generated { ids, segments, label: if score > 0 { 1 } else { 0 } }
+}
+
+pub const ENTAIL: i32 = 0;
+pub const NEUTRAL: i32 = 1;
+pub const CONTRADICT: i32 = 2;
+
+/// mnlis: premise/hypothesis inference (see the Python docstring).
+pub fn gen_mnlis(rng: &mut SplitMix64, max_len: usize) -> Generated {
+    let label = rng.below(3) as i32;
+    let prem_len = (6 + rng.below(9)) as usize;
+    let mut prem: Vec<i32> = (0..prem_len)
+        .map(|_| {
+            if rng.chance(1, 4) {
+                FILLER0 + rng.below(N_FILLER as u64) as i32
+            } else {
+                ENT0 + rng.below(N_ENT as u64) as i32
+            }
+        })
+        .collect();
+    let ant_pos = rng.below(prem_len as u64) as usize;
+    prem[ant_pos] = ANT_A0 + rng.below(N_ANT as u64) as i32;
+
+    let ent_positions: Vec<usize> =
+        (0..prem_len).filter(|&i| prem[i] >= ENT0).collect();
+    let hyp_len = 2 + rng.below(4);
+    let mut picks: BTreeSet<usize> = BTreeSet::new();
+    for _ in 0..hyp_len {
+        picks.insert(ent_positions[rng.below(ent_positions.len() as u64) as usize]);
+    }
+    let mut hyp: Vec<i32> = picks.iter().map(|&i| prem[i]).collect();
+
+    if label == CONTRADICT {
+        let mut idxs: Vec<usize> =
+            (0..hyp.len()).filter(|&i| antonym(hyp[i]) != hyp[i]).collect();
+        if idxs.is_empty() {
+            let j = rng.below(hyp.len() as u64) as usize;
+            hyp[j] = prem[ant_pos];
+            idxs = (0..hyp.len()).filter(|&i| antonym(hyp[i]) != hyp[i]).collect();
+        }
+        let j = idxs[rng.below(idxs.len() as u64) as usize];
+        hyp[j] = antonym(hyp[j]);
+    } else if label == NEUTRAL {
+        let cand = loop {
+            let c = ENT0 + rng.below(N_ENT as u64) as i32;
+            if !prem.contains(&c) {
+                break c;
+            }
+        };
+        let j = rng.below(hyp.len() as u64) as usize;
+        hyp[j] = cand;
+    }
+
+    let mut ids = vec![CLS];
+    ids.extend(&prem);
+    ids.push(SEP);
+    ids.extend(&hyp);
+    ids.push(SEP);
+    let mut segments = vec![0; 2 + prem.len()];
+    segments.extend(vec![1; hyp.len() + 1]);
+    ids.truncate(max_len);
+    segments.truncate(max_len);
+    Generated { ids, segments, label }
+}
+
+/// Streaming labeled-workload generator (one splitmix64 stream per task,
+/// like `compile.data.make_dataset`).
+#[derive(Clone, Debug)]
+pub struct WorkloadGen {
+    task: TaskKind,
+    rng: SplitMix64,
+}
+
+impl WorkloadGen {
+    pub fn new(task: TaskKind, seed: u64) -> Self {
+        Self { task, rng: SplitMix64::new(seed) }
+    }
+
+    /// Next example, padded to the task's max length.
+    pub fn next_example(&mut self) -> Example {
+        let max_len = self.task.max_len();
+        let g = match self.task {
+            TaskKind::Sst2s => gen_sst2s(&mut self.rng, max_len),
+            TaskKind::Mnlis => gen_mnlis(&mut self.rng, max_len),
+        };
+        let mut ids = g.ids;
+        let mut segments = g.segments;
+        ids.resize(max_len, PAD);
+        segments.resize(max_len, 0);
+        Example { ids, segments, label: g.label }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sst2s_shape_and_labels() {
+        let mut rng = SplitMix64::new(7);
+        let mut labels = [0usize; 2];
+        for _ in 0..200 {
+            let g = gen_sst2s(&mut rng, 64);
+            assert!(g.ids.len() <= 64 && g.ids.len() >= 10);
+            assert_eq!(g.ids[0], CLS);
+            assert_eq!(*g.ids.last().unwrap(), SEP);
+            assert!((0..=1).contains(&g.label));
+            labels[g.label as usize] += 1;
+            assert!(g.ids.iter().all(|&t| t > 0 && t < VOCAB_SIZE));
+        }
+        // Both classes occur with reasonable balance.
+        assert!(labels[0] > 40 && labels[1] > 40, "{labels:?}");
+    }
+
+    #[test]
+    fn mnlis_structure() {
+        let mut rng = SplitMix64::new(9);
+        let mut labels = [0usize; 3];
+        for _ in 0..300 {
+            let g = gen_mnlis(&mut rng, 128);
+            labels[g.label as usize] += 1;
+            assert_eq!(g.ids.len(), g.segments.len());
+            assert_eq!(g.ids[0], CLS);
+            // Two SEPs: premise end + hypothesis end.
+            assert_eq!(g.ids.iter().filter(|&&t| t == SEP).count(), 2);
+            // Segment 1 is exactly the hypothesis + trailing SEP.
+            let first_sep = g.ids.iter().position(|&t| t == SEP).unwrap();
+            assert!(g.segments[..=first_sep].iter().all(|&s| s == 0));
+            assert!(g.segments[first_sep + 1..].iter().all(|&s| s == 1));
+        }
+        assert!(labels.iter().all(|&c| c > 60), "{labels:?}");
+    }
+
+    #[test]
+    fn entail_hypothesis_is_subset() {
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..300 {
+            let g = gen_mnlis(&mut rng, 128);
+            if g.label != ENTAIL {
+                continue;
+            }
+            let first_sep = g.ids.iter().position(|&t| t == SEP).unwrap();
+            let prem = &g.ids[1..first_sep];
+            let hyp = &g.ids[first_sep + 1..g.ids.len() - 1];
+            for t in hyp {
+                assert!(prem.contains(t), "entail hyp token {t} not in premise");
+            }
+        }
+    }
+
+    #[test]
+    fn contradict_has_antonym_conflict() {
+        let mut rng = SplitMix64::new(4);
+        for _ in 0..300 {
+            let g = gen_mnlis(&mut rng, 128);
+            if g.label != CONTRADICT {
+                continue;
+            }
+            let first_sep = g.ids.iter().position(|&t| t == SEP).unwrap();
+            let prem = &g.ids[1..first_sep];
+            let hyp = &g.ids[first_sep + 1..g.ids.len() - 1];
+            assert!(
+                hyp.iter().any(|&t| antonym(t) != t && prem.contains(&antonym(t))),
+                "no antonym conflict in contradiction example"
+            );
+        }
+    }
+
+    #[test]
+    fn workload_gen_is_deterministic() {
+        let mut a = WorkloadGen::new(TaskKind::Sst2s, 11);
+        let mut b = WorkloadGen::new(TaskKind::Sst2s, 11);
+        for _ in 0..50 {
+            assert_eq!(a.next_example(), b.next_example());
+        }
+    }
+
+    #[test]
+    fn padded_to_max_len() {
+        let mut g = WorkloadGen::new(TaskKind::Mnlis, 1);
+        let e = g.next_example();
+        assert_eq!(e.ids.len(), 128);
+        assert_eq!(e.segments.len(), 128);
+    }
+}

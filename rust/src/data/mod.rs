@@ -1,0 +1,11 @@
+//! Datasets: binary reader for Python-exported eval sets and a workload
+//! generator mirrored *bit-for-bit* from `python/compile/data.py` (same
+//! splitmix64 stream, same branch structure), so the Rust server can
+//! synthesize unlimited labeled traffic that is statistically identical —
+//! and, for equal seeds, *literally* identical — to the training data.
+
+pub mod dataset;
+pub mod generator;
+
+pub use dataset::{Dataset, Example, TaskKind};
+pub use generator::{gen_mnlis, gen_sst2s, Generated, WorkloadGen};

@@ -1,0 +1,325 @@
+//! Experiment harnesses: regenerate every table and figure of the paper.
+//!
+//! | Paper artifact | Function | What it does |
+//! |---|---|---|
+//! | Table I   | [`table1`] | re-runs eval datasets through the exported float + HCCS executables via PJRT and tabulates baseline / no-retrain / retrained accuracy |
+//! | Table II  | [`table2`] | calibration-granularity ablation (accuracy after QAT at global / per-layer / per-head) |
+//! | Table III | [`table3`] | AIE kernel throughput sweep on the tile model, with speedups vs the BF16 reference |
+//! | Fig. 2    | [`fig2`]   | attention probability curves (broad vs focused heads), float32 vs retrained HCCS |
+//! | Fig. 3    | [`fig3`]   | aggregate throughput vs tile count on AIE-MLv2 |
+//!
+//! Accuracy numbers are *measured here* (Rust + PJRT on the deployed int
+//! path), not copied from the Python build log; the Python-side numbers
+//! in `summary_*.json` are printed alongside for drift detection.
+
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::aie_sim::{
+    device::{Device, DeviceKind},
+    kernels::KernelKind,
+    scaling,
+    tile::{cycles_per_row, throughput_eps, TileSim},
+};
+use crate::data::Dataset;
+use crate::json::Value;
+use crate::report::{fmt_gps, fmt_speedup, AsciiPlot, Table};
+use crate::runtime::{manifest::summary_path, ModelRunner, PairSummary, Runtime};
+
+pub const MODELS: [&str; 2] = ["bert-tiny", "bert-small"];
+pub const TASKS: [&str; 2] = ["sst2s", "mnlis"];
+pub const SEQ_LENGTHS: [usize; 3] = [32, 64, 128];
+
+/// Accuracy of one exported model variant over (a prefix of) the eval set.
+pub fn eval_variant(
+    artifacts: &Path,
+    summary: &PairSummary,
+    variant: &str,
+    limit: usize,
+) -> Result<(f64, f64)> {
+    let batch = 8usize;
+    let mani = summary
+        .manifest(variant, batch)
+        .with_context(|| format!("no manifest {variant}_b{batch}"))?
+        .clone();
+    let ds = Dataset::load(&artifacts.join(format!("eval_{}.bin", summary.task)))?;
+    let rt = Rc::new(Runtime::cpu()?);
+    let runner = ModelRunner::load(rt, artifacts, mani)?;
+    let n = ds.len().min(limit);
+    let l = runner.seq_len();
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let t0 = Instant::now();
+    for chunk in ds.examples[..n].chunks(batch) {
+        let mut ids = Vec::with_capacity(batch * l);
+        let mut segs = Vec::with_capacity(batch * l);
+        for e in chunk {
+            ids.extend_from_slice(&e.ids);
+            segs.extend_from_slice(&e.segments);
+        }
+        // Pad the tail chunk by repeating the last example.
+        for _ in chunk.len()..batch {
+            let last = chunk.last().unwrap();
+            ids.extend_from_slice(&last.ids);
+            segs.extend_from_slice(&last.segments);
+        }
+        let preds = runner.predict(&ids, &segs)?;
+        for (e, &p) in chunk.iter().zip(&preds) {
+            correct += (p as i32 == e.label) as usize;
+            total += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    Ok((correct as f64 / total as f64, total as f64 / secs))
+}
+
+/// Table I — validation accuracy: baseline / no-retrain / retrained / Δ.
+///
+/// The baseline and retrained columns are re-measured here through the
+/// exported executables; the no-retrain column comes from the build-time
+/// eval (exporting a third HLO per pair would double artifact size for a
+/// number the paper only uses as motivation).
+pub fn table1(artifacts: &Path, limit: usize, remeasure: bool) -> Result<String> {
+    let mut t = Table::new(
+        "Table I: validation accuracy (mode: int16+div)",
+        &["Task", "Model", "Baseline", "No-retrain", "Retrained", "Delta", "i8+CLB", "src"],
+    );
+    for task in TASKS {
+        for model in MODELS {
+            let Some(spath) = summary_path(artifacts, model, task) else {
+                continue;
+            };
+            let s = PairSummary::load(&spath)?;
+            let (base, retr, src) = if remeasure {
+                let (b, _) = eval_variant(artifacts, &s, "float", limit)?;
+                let (r, _) = eval_variant(artifacts, &s, "hccs", limit)?;
+                (b, r, "rust/pjrt")
+            } else {
+                (s.baseline_acc, s.retrained_acc, "python")
+            };
+            t.row(&[
+                task.to_string(),
+                model.to_string(),
+                format!("{base:.3}"),
+                format!("{:.3}", s.noretrain_acc),
+                format!("{retr:.3}"),
+                format!("{:+.3}", retr - base),
+                format!("{:.3}", s.retrained_acc_i8clb),
+                src.to_string(),
+            ]);
+        }
+    }
+    Ok(t.render())
+}
+
+/// Table II — calibration-granularity ablation after QAT.
+pub fn table2(artifacts: &Path) -> Result<String> {
+    let mut t = Table::new(
+        "Table II: effect of lower-granularity calibration after QAT",
+        &["Calibration", "sst2s tiny", "sst2s small", "mnlis tiny", "mnlis small"],
+    );
+    let mut grid = vec![vec![String::from("-"); 4]; 3];
+    for (ci, (task, model)) in TASKS
+        .iter()
+        .flat_map(|t| MODELS.iter().map(move |m| (*t, *m)))
+        .enumerate()
+    {
+        let Some(spath) = summary_path(artifacts, model, task) else {
+            continue;
+        };
+        let s = PairSummary::load(&spath)?;
+        grid[0][ci] = format!("{:.3}", s.ablation_global);
+        grid[1][ci] = format!("{:.3}", s.ablation_per_layer);
+        grid[2][ci] = format!("{:.3}", s.ablation_per_head);
+    }
+    for (name, row) in ["Shared/global", "Per-layer", "Per-head (Table I)"].iter().zip(grid) {
+        let mut cells = vec![name.to_string()];
+        cells.extend(row);
+        t.row(&cells);
+    }
+    Ok(t.render())
+}
+
+/// Table III — softmax kernel throughput on the AIE tile model.
+pub fn table3() -> Result<String> {
+    let mut out = String::new();
+    for kind in [DeviceKind::AieMl, DeviceKind::AieMlV2] {
+        let dev = Device::new(kind);
+        let mut t = Table::new(
+            &format!("Table III: softmax kernel throughput — {}", dev.name()),
+            &["n", "BF16", "HCCS i16+div", "speedup", "HCCS i8+CLB", "speedup", "CLB cyc/row"],
+        );
+        for n in SEQ_LENGTHS {
+            let bf = throughput_eps(KernelKind::Bf16Ref, &dev, n);
+            let dv = throughput_eps(KernelKind::HccsI16Div, &dev, n);
+            let cl = throughput_eps(KernelKind::HccsI8Clb, &dev, n);
+            t.row(&[
+                n.to_string(),
+                fmt_gps(bf),
+                fmt_gps(dv),
+                fmt_speedup(dv / bf),
+                fmt_gps(cl),
+                fmt_speedup(cl / bf),
+                cycles_per_row(KernelKind::HccsI8Clb, &dev, n).to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+/// Fig. 2 — attention probability curves from the build-time dumps.
+pub fn fig2(artifacts: &Path, model: &str, task: &str) -> Result<String> {
+    let mut path = artifacts.join(format!("attn_dump_{model}_{task}.json"));
+    if !path.exists() {
+        path = artifacts.join(format!("attn_dump_{model}_{task}_fast.json"));
+    }
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no attention dump {}", path.display()))?;
+    let v = Value::parse(&text)?;
+    let heads = |which: &str| -> Vec<(usize, usize, f64, Vec<f64>)> {
+        v.req(which)
+            .req("heads")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|h| {
+                (
+                    h.req("layer").as_i64().unwrap_or(0) as usize,
+                    h.req("head").as_i64().unwrap_or(0) as usize,
+                    h.req("entropy").as_f64().unwrap_or(0.0),
+                    h.req("curve").flat_f64(),
+                )
+            })
+            .collect()
+    };
+    let float_heads = heads("float");
+    let hccs_heads = heads("hccs");
+    if float_heads.is_empty() {
+        bail!("empty attention dump");
+    }
+    // Broad = max entropy, focused = min entropy (paper §V-C).
+    let broad = float_heads
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1 .2.partial_cmp(&b.1 .2).unwrap())
+        .unwrap()
+        .0;
+    let focused = float_heads
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1 .2.partial_cmp(&b.1 .2).unwrap())
+        .unwrap()
+        .0;
+
+    let mut out = format!("Fig. 2 — attention probability curves ({model} / {task})\n\n");
+    for (label, idx) in [("broad", broad), ("focused", focused)] {
+        let (l, h, ent, ref curve_f) = float_heads[idx];
+        let curve_h = &hccs_heads[idx].3;
+        let mut plot = AsciiPlot::new(&format!(
+            "{label} head: layer {l} head {h} (float entropy {ent:.2} nats), rank-sorted mean prob"
+        ));
+        let take = curve_f.len().min(32);
+        plot.series(
+            "float32 softmax",
+            curve_f[..take].iter().enumerate().map(|(i, &p)| (i as f64, p)).collect(),
+        );
+        plot.series(
+            "HCCS (retrained)",
+            curve_h[..take].iter().enumerate().map(|(i, &p)| (i as f64, p)).collect(),
+        );
+        out.push_str(&plot.render());
+        out.push('\n');
+    }
+    if let Some(kl) = v.get("kl_fixed_weights") {
+        out.push_str(&format!(
+            "mean KL(softmax || HCCS) on fixed weights: {:.3} nats (paper: ~0.1-0.3)\n",
+            kl.req("mean").as_f64().unwrap_or(f64::NAN)
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig. 3 — aggregate throughput vs tile count (AIE-MLv2, n = 128).
+pub fn fig3() -> Result<String> {
+    let dev = Device::new(DeviceKind::AieMlV2);
+    let mut plot = AsciiPlot::new("Fig. 3 — aggregate softmax throughput vs AIE tiles (n=128, AIE-MLv2)");
+    let mut tsv = Table::new("", &["tiles", "i16+div G/s", "i8+CLB G/s"]);
+    let div = scaling::sweep(&dev, KernelKind::HccsI16Div, 128, dev.array_tiles);
+    let clb = scaling::sweep(&dev, KernelKind::HccsI8Clb, 128, dev.array_tiles);
+    plot.series("HCCS i16+div", div.iter().map(|p| (p.tiles as f64, p.eps / 1e9)).collect());
+    plot.series("HCCS i8+CLB", clb.iter().map(|p| (p.tiles as f64, p.eps / 1e9)).collect());
+    for (d, c) in div.iter().zip(&clb) {
+        tsv.row(&[d.tiles.to_string(), format!("{:.1}", d.eps / 1e9), format!("{:.1}", c.eps / 1e9)]);
+    }
+    let last_d = div.last().unwrap();
+    let last_c = clb.last().unwrap();
+    Ok(format!(
+        "{}\n{}\nat {} tiles: {:.0} G elem/s (i16+div), {:.0} G elem/s (i8+CLB)  [paper: 259 / 407]\n",
+        plot.render(),
+        tsv.render(),
+        last_d.tiles,
+        last_d.eps / 1e9,
+        last_c.eps / 1e9,
+    ))
+}
+
+/// §III-B-c — CLB-vs-div reciprocal ablation with stage attribution.
+pub fn clb_ablation() -> String {
+    let dev = Device::new(DeviceKind::AieMl);
+    let mut out = String::from("CLB reciprocal ablation (AIE-ML)\n\n");
+    let mut t = Table::new(
+        "cycles/row by reciprocal realization",
+        &["n", "i8+div", "i8+CLB", "CLB speedup", "i16+div", "i16+CLB"],
+    );
+    for n in SEQ_LENGTHS {
+        let i8d = cycles_per_row(KernelKind::HccsI8Div, &dev, n);
+        let i8c = cycles_per_row(KernelKind::HccsI8Clb, &dev, n);
+        let i16d = cycles_per_row(KernelKind::HccsI16Div, &dev, n);
+        let i16c = cycles_per_row(KernelKind::HccsI16Clb, &dev, n);
+        t.row(&[
+            n.to_string(),
+            i8d.to_string(),
+            i8c.to_string(),
+            fmt_speedup(i8d as f64 / i8c as f64),
+            i16d.to_string(),
+            i16c.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str("\nstage profile, i8+CLB @ n=32:\n");
+    let sim = TileSim::new(dev, KernelKind::HccsI8Clb);
+    for (name, cyc) in sim.row_profile(32) {
+        out.push_str(&format!("  {name:<40} {cyc:>4} cycles\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_renders_expected_shape() {
+        let s = table3().unwrap();
+        assert!(s.contains("VEK280") && s.contains("VEK385"));
+        // 2 devices x (header + sep + 3 rows)
+        assert_eq!(s.lines().filter(|l| l.starts_with('|')).count(), 10);
+    }
+
+    #[test]
+    fn fig3_reports_headline() {
+        let s = fig3().unwrap();
+        assert!(s.contains("184 tiles"));
+    }
+
+    #[test]
+    fn clb_ablation_shows_div_cost() {
+        let s = clb_ablation();
+        assert!(s.contains("scalar reciprocal") || s.contains("CLB"));
+    }
+}

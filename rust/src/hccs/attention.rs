@@ -1,0 +1,221 @@
+//! Fused integer attention: QK^T (int8 MAC) → rescale → HCCS → p̂·V.
+//!
+//! Mirrors the fused Pallas kernel (`python/compile/kernels/hccs.py::
+//! hccs_attention`) with identical integer semantics, so the two are
+//! golden-comparable; used by the Rust-side ablation harnesses and as the
+//! reference for the overflow analysis of paper §IV-A.
+//!
+//! All accumulation is i32 (the AIE MAC pipeline); the logit rescale is a
+//! rational factor `num/den` applied with floor division, matching the
+//! Pallas kernel's compile-time constants.
+
+use super::kernel::{hccs_row_into, OutputPath, Reciprocal};
+use super::params::HccsParams;
+
+/// One attention head's integer tensors, row-major.
+#[derive(Clone, Debug)]
+pub struct AttentionInputs<'a> {
+    /// Queries `(r, dk)` int8.
+    pub q: &'a [i8],
+    /// Keys `(c, dk)` int8.
+    pub k: &'a [i8],
+    /// Values `(c, dv)` int8.
+    pub v: &'a [i8],
+    pub r: usize,
+    pub c: usize,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl<'a> AttentionInputs<'a> {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.q.len() != self.r * self.dk {
+            return Err(format!("q len {} != {}x{}", self.q.len(), self.r, self.dk));
+        }
+        if self.k.len() != self.c * self.dk {
+            return Err(format!("k len {} != {}x{}", self.k.len(), self.c, self.dk));
+        }
+        if self.v.len() != self.c * self.dv {
+            return Err(format!("v len {} != {}x{}", self.v.len(), self.c, self.dv));
+        }
+        if self.r == 0 || self.c == 0 || self.dk == 0 || self.dv == 0 {
+            return Err("empty attention dims".into());
+        }
+        // §IV-A overflow check: |q·k| <= 128*128*dk must fit i32 with the
+        // rescale headroom.
+        if (self.dk as i64) * 128 * 128 > i32::MAX as i64 / 4 {
+            return Err(format!("dk {} too large for i32 accumulation", self.dk));
+        }
+        Ok(())
+    }
+}
+
+/// Scratch buffers reused across rows (allocation-free hot path).
+#[derive(Default)]
+pub struct AttentionScratch {
+    logits: Vec<i32>,
+    xq: Vec<i8>,
+    phat: Vec<i32>,
+}
+
+/// Fused integer attention for one head.
+///
+/// `scale_num/scale_den` maps the i32 QK accumulators onto the int8 logit
+/// grid (floor division, clamped to [-128, 127]).  Output is `(r, dv)`
+/// i32 = p̂ @ V — the caller owns the final dequantization, exactly like
+/// the Pallas kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_attention(
+    inp: &AttentionInputs,
+    params: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    scale_num: i32,
+    scale_den: i32,
+    scratch: &mut AttentionScratch,
+    out: &mut [i32],
+) -> Result<(), String> {
+    inp.validate()?;
+    if scale_den <= 0 || scale_num <= 0 {
+        return Err("rescale factors must be positive".into());
+    }
+    if out.len() != inp.r * inp.dv {
+        return Err(format!("out len {} != {}x{}", out.len(), inp.r, inp.dv));
+    }
+    params.validate(inp.c).map_err(|e| e.to_string())?;
+
+    scratch.logits.resize(inp.c, 0);
+    scratch.xq.resize(inp.c, 0);
+    scratch.phat.resize(inp.c, 0);
+
+    for row in 0..inp.r {
+        let qrow = &inp.q[row * inp.dk..(row + 1) * inp.dk];
+        // Stage 1: QK^T row in i32 (int8 MAC accumulation).
+        for (j, lj) in scratch.logits.iter_mut().enumerate() {
+            let krow = &inp.k[j * inp.dk..(j + 1) * inp.dk];
+            let mut acc = 0i32;
+            for (&a, &b) in qrow.iter().zip(krow) {
+                acc += a as i32 * b as i32;
+            }
+            *lj = acc;
+        }
+        // Stage 2: rescale to the int8 grid (floor division like jnp `//`).
+        for (x, &l) in scratch.xq.iter_mut().zip(&scratch.logits) {
+            let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
+            *x = scaled.clamp(-128, 127) as i8;
+        }
+        // Stages 3-7: the five HCCS stages.
+        hccs_row_into(&scratch.xq, params, out_path, recip, &mut scratch.phat);
+        // Stage 8: p̂ @ V in i32.
+        let orow = &mut out[row * inp.dv..(row + 1) * inp.dv];
+        orow.fill(0);
+        for (j, &p) in scratch.phat.iter().enumerate() {
+            if p == 0 {
+                continue; // sparsity shortcut: clamped tails often hit 0 on the i8 path
+            }
+            let vrow = &inp.v[j * inp.dv..(j + 1) * inp.dv];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += p * vv as i32;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn inputs(rng: &mut Xoshiro256, r: usize, c: usize, dk: usize, dv: usize) -> (Vec<i8>, Vec<i8>, Vec<i8>) {
+        let gen = |n: usize, rng: &mut Xoshiro256| -> Vec<i8> {
+            (0..n).map(|_| (rng.below(41) as i64 - 20) as i8).collect()
+        };
+        (gen(r * dk, rng), gen(c * dk, rng), gen(c * dv, rng))
+    }
+
+    #[test]
+    fn matches_unfused_composition() {
+        let mut rng = Xoshiro256::new(21);
+        let (r, c, dk, dv) = (4usize, 32usize, 16usize, 8usize);
+        let (q, k, v) = inputs(&mut rng, r, c, dk, dv);
+        let inp = AttentionInputs { q: &q, k: &k, v: &v, r, c, dk, dv };
+        let p = HccsParams::checked(600, 6, 64, c).unwrap();
+        let mut scratch = AttentionScratch::default();
+        let mut out = vec![0i32; r * dv];
+        hccs_attention(&inp, &p, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut out)
+            .unwrap();
+
+        // Reference composition.
+        for row in 0..r {
+            let mut logits = vec![0i64; c];
+            for (j, l) in logits.iter_mut().enumerate() {
+                *l = (0..dk)
+                    .map(|t| q[row * dk + t] as i64 * k[j * dk + t] as i64)
+                    .sum();
+            }
+            let xq: Vec<i8> = logits
+                .iter()
+                .map(|&l| l.div_euclid(16).clamp(-128, 127) as i8)
+                .collect();
+            let phat = crate::hccs::hccs_row(&xq, &p, OutputPath::I16, Reciprocal::Div);
+            for t in 0..dv {
+                let want: i32 = (0..c).map(|j| phat[j] * v[j * dv + t] as i32).sum();
+                assert_eq!(out[row * dv + t], want, "row {row} col {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn negative_rescale_uses_floor_semantics() {
+        // div_euclid(-5, 16) == -1 like Python //, not trunc(-0) == 0.
+        assert_eq!((-5i64).div_euclid(16), -1);
+        assert_eq!((5i64).div_euclid(16), 0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_params() {
+        let q = vec![0i8; 8];
+        let k = vec![0i8; 16];
+        let v = vec![0i8; 16];
+        let inp = AttentionInputs { q: &q, k: &k, v: &v, r: 2, c: 4, dk: 4, dv: 4 };
+        let p = HccsParams::checked(600, 6, 64, 4).unwrap_or(HccsParams::new(600, 6, 64));
+        let mut scratch = AttentionScratch::default();
+        let mut out = vec![0i32; 8];
+        // n=4 makes B=600 infeasible (4*600 < 32767 fine, floor 600-384 >= 64 fine) —
+        // construct a genuinely bad θ instead:
+        let bad = HccsParams::new(100000, 6, 64);
+        assert!(
+            hccs_attention(&inp, &bad, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut out)
+                .is_err()
+        );
+        let mut short = vec![0i32; 7];
+        assert!(
+            hccs_attention(&inp, &p, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut short)
+                .is_err()
+        );
+        let bad_inp = AttentionInputs { q: &q, k: &k, v: &v, r: 3, c: 4, dk: 4, dv: 4 };
+        assert!(
+            hccs_attention(&bad_inp, &p, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut out)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn attention_output_bounded_by_overflow_analysis() {
+        // §IV-A: |out| <= Σp̂ * 127 <= T * 127 — verify on random inputs.
+        let mut rng = Xoshiro256::new(33);
+        let (r, c, dk, dv) = (3usize, 64usize, 8usize, 4usize);
+        let (q, k, v) = inputs(&mut rng, r, c, dk, dv);
+        let inp = AttentionInputs { q: &q, k: &k, v: &v, r, c, dk, dv };
+        let p = HccsParams::checked(300, 4, 64, c).unwrap();
+        let mut scratch = AttentionScratch::default();
+        let mut out = vec![0i32; r * dv];
+        for (op, t) in [(OutputPath::I16, 32767i64), (OutputPath::I8, 255i64)] {
+            hccs_attention(&inp, &p, op, Reciprocal::Clb, 1, 8, &mut scratch, &mut out).unwrap();
+            // CLB can overshoot ≤2x on i16 before the clamp-to-T; bound loosely.
+            let bound = 2 * t * 127;
+            assert!(out.iter().all(|&o| (o as i64).abs() <= bound));
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! Offline grid-search calibration (paper §III-C, Eq. 10) in Rust.
+//!
+//! The Python build path calibrates during `make artifacts`
+//! (`python/compile/calibrate.py`); this module provides the same search
+//! at run time so deployments can re-calibrate from captured logit dumps
+//! without touching Python — and so the search itself is covered by the
+//! Rust test suite (both implementations use the identical grid, feasible
+//! band construction and int16-space KL objective).
+
+use super::kernel::{hccs_rows, OutputPath, Reciprocal};
+use super::params::HccsParams;
+use super::stats::{kl, mean, normalize_phat, softmax};
+
+/// Search grid mirrored from `python/compile/calibrate.py`.
+pub const DMAX_GRID: [i32; 8] = [8, 16, 24, 32, 48, 64, 96, 127];
+pub const S_GRID: [i32; 8] = [1, 2, 3, 4, 6, 8, 12, 16];
+pub const N_B_SAMPLES: usize = 6;
+
+/// Result of calibrating one head (or pooled granularity group).
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub params: HccsParams,
+    /// Logit quantization scale γ.
+    pub gamma: f64,
+    /// Achieved mean KL(softmax ‖ HCCS) in int16 space.
+    pub kl: f64,
+    /// Number of (θ) candidates evaluated.
+    pub evaluated: usize,
+}
+
+/// Symmetric int8 scale from a high percentile of |logits|
+/// (mirrors `compile.quant.calibrate_scale`).
+pub fn calibrate_scale(logits: &[f64], pctl: f64) -> f64 {
+    assert!(!logits.is_empty());
+    let mut mags: Vec<f64> = logits.iter().map(|v| v.abs()).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((pctl / 100.0) * (mags.len() - 1) as f64).round() as usize;
+    (mags[idx.min(mags.len() - 1)]).max(1e-6) / 127.0
+}
+
+/// Quantize float logits onto the int8 grid with scale γ.
+pub fn quantize_i8(logits: &[f64], gamma: f64) -> Vec<i8> {
+    logits
+        .iter()
+        .map(|&v| (v / gamma).round().clamp(-128.0, 127.0) as i8)
+        .collect()
+}
+
+/// Grid-search θ for a set of float logit rows of width `n`.
+///
+/// The objective is evaluated with the exact i16+div kernel semantics
+/// (the paper's recommendation: the int16 objective is smoother than the
+/// uint8 one and transfers to the int8 output path).
+pub fn calibrate_rows(rows: &[Vec<f64>], n: usize, gamma: f64) -> Calibration {
+    assert!(rows.iter().all(|r| r.len() == n), "ragged calibration rows");
+    let p_ref: Vec<Vec<f64>> = rows.iter().map(|r| softmax(r)).collect();
+    let xq: Vec<i8> = rows.iter().flat_map(|r| quantize_i8(r, gamma)).collect();
+
+    let mut best: Option<Calibration> = None;
+    let mut evaluated = 0usize;
+    for &dmax in &DMAX_GRID {
+        for &s in &S_GRID {
+            let Some((lo, hi)) = HccsParams::feasible_b_band(s, dmax, n) else {
+                continue;
+            };
+            for b in sample_band(lo, hi, N_B_SAMPLES) {
+                let p = HccsParams::new(b, s, dmax);
+                evaluated += 1;
+                let params_per_row = vec![p; rows.len()];
+                let phat = hccs_rows(&xq, n, &params_per_row, OutputPath::I16, Reciprocal::Div);
+                let kls: Vec<f64> = p_ref
+                    .iter()
+                    .enumerate()
+                    .map(|(r, pr)| kl(pr, &normalize_phat(&phat[r * n..(r + 1) * n])))
+                    .collect();
+                let obj = mean(&kls);
+                if best.as_ref().map_or(true, |b| obj < b.kl) {
+                    best = Some(Calibration { params: p, gamma, kl: obj, evaluated: 0 });
+                }
+            }
+        }
+    }
+    let mut best = best.expect("empty feasible region");
+    best.evaluated = evaluated;
+    best.params.validate(n).expect("search produced infeasible params");
+    best
+}
+
+/// `count` integer samples spanning [lo, hi] inclusive (deduplicated),
+/// mirroring `np.linspace(lo, hi, count)` rounding on the Python side.
+fn sample_band(lo: i32, hi: i32, count: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let t = i as f64 / (count - 1) as f64;
+        let v = (lo as f64 + t * (hi - lo) as f64).round() as i32;
+        if out.last() != Some(&v) {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn synth_rows(n: usize, rows: usize, spread: f64, seed: u64) -> Vec<Vec<f64>> {
+        // Gaussian-ish attention logits via sum of uniforms.
+        let mut rng = Xoshiro256::new(seed);
+        (0..rows)
+            .map(|_| {
+                (0..n)
+                    .map(|_| (rng.f64() + rng.f64() + rng.f64() - 1.5) * spread)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn band_sampling_covers_endpoints() {
+        let s = sample_band(10, 100, 6);
+        assert_eq!(*s.first().unwrap(), 10);
+        assert_eq!(*s.last().unwrap(), 100);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn calibration_beats_worst_candidate_and_is_feasible() {
+        let rows = synth_rows(64, 64, 3.0, 11);
+        let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
+        let gamma = calibrate_scale(&flat, 99.9);
+        let cal = calibrate_rows(&rows, 64, gamma);
+        assert!(cal.kl.is_finite() && cal.kl >= 0.0);
+        assert!(cal.evaluated > 100, "grid too small: {}", cal.evaluated);
+        assert!(cal.params.validate(64).is_ok());
+        // Must do meaningfully better than a flat surrogate (S=0 ⇒ uniform).
+        let uniform = HccsParams::checked(500, 0, 64, 64).unwrap();
+        let xq: Vec<i8> = rows.iter().flat_map(|r| quantize_i8(r, gamma)).collect();
+        let phat = hccs_rows(&xq, 64, &vec![uniform; rows.len()], OutputPath::I16, Reciprocal::Div);
+        let kl_uniform = mean(
+            &rows
+                .iter()
+                .enumerate()
+                .map(|(r, row)| kl(&softmax(row), &normalize_phat(&phat[r * 64..(r + 1) * 64])))
+                .collect::<Vec<_>>(),
+        );
+        assert!(
+            cal.kl < kl_uniform * 0.8,
+            "calibrated {} not better than uniform {}",
+            cal.kl,
+            kl_uniform
+        );
+    }
+
+    #[test]
+    fn sharper_heads_get_steeper_slopes() {
+        // A peaky (high-spread) head needs larger S·γ⁻¹ decay than a broad
+        // one; check the optimizer reacts to the distribution at all.
+        let broad = synth_rows(64, 48, 1.0, 3);
+        let focused = synth_rows(64, 48, 12.0, 4);
+        let gb = calibrate_scale(&broad.iter().flatten().cloned().collect::<Vec<_>>(), 99.9);
+        let gf = calibrate_scale(&focused.iter().flatten().cloned().collect::<Vec<_>>(), 99.9);
+        let cb = calibrate_rows(&broad, 64, gb);
+        let cf = calibrate_rows(&focused, 64, gf);
+        // Effective decay per unit logit = S/γ... compare achieved KL sanity.
+        assert!(cb.kl < 0.5, "broad-head calibration KL too high: {}", cb.kl);
+        assert!(cf.kl.is_finite());
+    }
+
+    #[test]
+    fn quantize_clamps_to_rails() {
+        let q = quantize_i8(&[-1e9, 0.0, 1e9], 0.5);
+        assert_eq!(q, vec![-128, 0, 127]);
+    }
+}

@@ -1,0 +1,280 @@
+//! The five-stage HCCS row kernel (paper Fig. 1 / Algorithm 1).
+//!
+//! Bit-exact with the Pallas kernel and the numpy oracle:
+//!
+//! 1. vector max reduction          `m = max_i x_i`
+//! 2. unsigned distance + clamp     `δ_i = min(m - x_i, Dmax)`  (∈ [0,127])
+//! 3. affine score (int8 MAC)       `s_i = B - S·δ_i`           (int16)
+//! 4. sum reduction                 `Z = Σ s_i`                 (int32)
+//! 5. reciprocal normalization      `p̂_i = s_i · ρ`  with
+//!    * i16+div : `ρ  = ⌊32767/Z⌋`                      (Eq. 6/7)
+//!    * i8 +div : `ρ₈ = ⌊255·2¹⁵/Z⌋`, then `>> 15`      (Eq. 8)
+//!    * CLB     : `ρ ≈ T / 2^⌊log₂ Z⌋` via leading-bit detection (Eq. 9)
+//!
+//! All arithmetic stays in i32 lanes carrying the int8/int16 datapath
+//! semantics; under feasible [`HccsParams`] no stage can overflow (the
+//! §IV-A analysis: `s_i·ρ ≤ 32767`, accumulator headroom ≫ any n).
+
+use super::params::{HccsParams, INV_SHIFT, OUT_SHIFT, T_I16, T_I8};
+
+/// Output integer scale selector (paper §III-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OutputPath {
+    /// `T = 32767`; p̂ ∈ [0, 32767] stored in int16.
+    I16,
+    /// `T = 255` via the shifted fixed-point reciprocal; p̂ ∈ [0, 255].
+    I8,
+}
+
+/// Reciprocal realization for stage 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Reciprocal {
+    /// Exact scalar integer division (one per row, amortized).
+    Div,
+    /// Leading-bit (count-leading-bit, CLB) shift approximation; over-
+    /// estimates ρ by at most 2× (paper §III-B-c), ≥3× faster at short n.
+    Clb,
+}
+
+/// Parse a paper-style mode string ("i16_div", "i8_clb", ...).
+pub fn parse_mode(mode: &str) -> Option<(OutputPath, Reciprocal)> {
+    match mode {
+        "i16_div" => Some((OutputPath::I16, Reciprocal::Div)),
+        "i16_clb" => Some((OutputPath::I16, Reciprocal::Clb)),
+        "i8_div" => Some((OutputPath::I8, Reciprocal::Div)),
+        "i8_clb" => Some((OutputPath::I8, Reciprocal::Clb)),
+        _ => None,
+    }
+}
+
+/// Exact `floor(log2 z)` for `z > 0` — the CLB instruction.
+#[inline]
+pub fn floor_log2(z: i32) -> u32 {
+    debug_assert!(z > 0);
+    31 - (z as u32).leading_zeros()
+}
+
+/// Stage 1: row max.
+#[inline]
+fn row_max(x: &[i8]) -> i32 {
+    debug_assert!(!x.is_empty());
+    let mut m = i8::MIN;
+    for &v in x {
+        m = m.max(v);
+    }
+    m as i32
+}
+
+/// Run HCCS over one row, writing p̂ into `out` (len must equal `x.len()`).
+///
+/// This is the allocation-free hot-path entry point; `scratch`-free because
+/// scores are recomputed in the second pass (two cheap linear passes beat
+/// a scores buffer for cache residency at attention row lengths — see
+/// EXPERIMENTS.md §Perf for the measured comparison).
+pub fn hccs_row_into(
+    x: &[i8],
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    out: &mut [i32],
+) {
+    assert_eq!(x.len(), out.len(), "output length mismatch");
+    assert!(!x.is_empty(), "empty row");
+    let m = row_max(x); // stage 1
+    let (b, s, dmax) = (p.b, p.s, p.dmax);
+
+    // Stages 2-4 fused: distance, clamp, affine score, sum.
+    let mut z: i32 = 0;
+    for (o, &xi) in out.iter_mut().zip(x) {
+        let delta = (m - xi as i32).min(dmax); // stage 2
+        let si = b - s * delta; // stage 3
+        debug_assert!(si >= 0, "infeasible params produced negative score");
+        *o = si;
+        z += si; // stage 4 (i32 accumulator)
+    }
+    debug_assert!(z > 0);
+
+    // Stage 5: reciprocal normalization.
+    match (out_path, recip) {
+        (OutputPath::I16, Reciprocal::Div) => {
+            let rho = T_I16 / z;
+            for o in out.iter_mut() {
+                *o *= rho;
+            }
+        }
+        (OutputPath::I16, Reciprocal::Clb) => {
+            let k = floor_log2(z);
+            for o in out.iter_mut() {
+                *o = ((*o * T_I16) >> k).min(T_I16);
+            }
+        }
+        (OutputPath::I8, Reciprocal::Div) => {
+            let rho8 = (T_I8 << INV_SHIFT) / z;
+            for o in out.iter_mut() {
+                *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
+            }
+        }
+        (OutputPath::I8, Reciprocal::Clb) => {
+            let k = floor_log2(z);
+            let rho8 = (T_I8 << INV_SHIFT) >> k;
+            for o in out.iter_mut() {
+                *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
+            }
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`hccs_row_into`].
+pub fn hccs_row(x: &[i8], p: &HccsParams, out_path: OutputPath, recip: Reciprocal) -> Vec<i32> {
+    let mut out = vec![0i32; x.len()];
+    hccs_row_into(x, p, out_path, recip, &mut out);
+    out
+}
+
+/// Batched rows with per-row parameters (the 2-D tile of paper §IV-D).
+///
+/// `x` is row-major `(rows, n)`; `params` has one θ per row (the AIE
+/// "per-head parameters loaded by row's head identifier" layout).
+pub fn hccs_rows(
+    x: &[i8],
+    n: usize,
+    params: &[HccsParams],
+    out_path: OutputPath,
+    recip: Reciprocal,
+) -> Vec<i32> {
+    assert!(n > 0 && x.len() % n == 0, "x not a whole number of rows");
+    let rows = x.len() / n;
+    assert_eq!(rows, params.len(), "one θ per row required");
+    let mut out = vec![0i32; x.len()];
+    for (r, p) in params.iter().enumerate() {
+        hccs_row_into(&x[r * n..(r + 1) * n], p, out_path, recip, &mut out[r * n..(r + 1) * n]);
+    }
+    out
+}
+
+/// Dequantize integer p̂ to a float simplex (divide by actual row sum) —
+/// what the model datapath does before the `p @ V` mix.
+pub fn phat_to_probs(phat: &[i32]) -> Vec<f32> {
+    let z: i64 = phat.iter().map(|&v| v as i64).sum();
+    let z = (z.max(1)) as f32;
+    phat.iter().map(|&v| v as f32 / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p64() -> HccsParams {
+        HccsParams::checked(300, 4, 64, 64).unwrap()
+    }
+
+    #[test]
+    fn uniform_row_is_uniform() {
+        let x = vec![5i8; 64];
+        let out = hccs_row(&x, &p64(), OutputPath::I16, Reciprocal::Div);
+        assert!(out.windows(2).all(|w| w[0] == w[1]));
+        // Z = 64*300 = 19200, rho = 1, p = 300 each.
+        assert_eq!(out[0], 300);
+    }
+
+    #[test]
+    fn i16_div_sums_near_t() {
+        // Σp̂ = Z·⌊T/Z⌋ ∈ (T - Z, T]; with Z ≤ 32767 the truncation loss is
+        // bounded by Z, and by construction never exceeds T.
+        let mut x = vec![-100i8; 64];
+        x[0] = 90;
+        x[7] = 80;
+        let out = hccs_row(&x, &p64(), OutputPath::I16, Reciprocal::Div);
+        let sum: i32 = out.iter().sum();
+        assert!(sum <= T_I16, "sum {sum} exceeds T");
+        assert!(sum > T_I16 / 2, "sum {sum} too lossy");
+    }
+
+    #[test]
+    fn i8_div_sums_near_255() {
+        let mut x = vec![-30i8; 64];
+        x[3] = 70;
+        let out = hccs_row(&x, &p64(), OutputPath::I8, Reciprocal::Div);
+        let sum: i32 = out.iter().sum();
+        assert!((200..=260).contains(&sum), "sum {sum} outside i8 band");
+        assert!(out.iter().all(|&v| (0..=255).contains(&v)));
+    }
+
+    #[test]
+    fn monotone_rank_preserving() {
+        let x: Vec<i8> = (0..64).map(|i| (i * 2 - 64) as i8).collect();
+        for (op, rc) in [
+            (OutputPath::I16, Reciprocal::Div),
+            (OutputPath::I16, Reciprocal::Clb),
+            (OutputPath::I8, Reciprocal::Div),
+            (OutputPath::I8, Reciprocal::Clb),
+        ] {
+            let out = hccs_row(&x, &p64(), op, rc);
+            for w in out.windows(2) {
+                assert!(w[0] <= w[1], "order violated under {op:?}/{rc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn clb_overestimates_div_by_at_most_2x() {
+        let mut rng = crate::rng::Xoshiro256::new(99);
+        for _ in 0..200 {
+            let x: Vec<i8> = (0..64).map(|_| rng.i8()).collect();
+            let d = hccs_row(&x, &p64(), OutputPath::I16, Reciprocal::Div);
+            let c = hccs_row(&x, &p64(), OutputPath::I16, Reciprocal::Clb);
+            for (a, b) in d.iter().zip(&c) {
+                // CLB uses 2^k <= Z, so p_clb >= p_div and < 2x + rounding.
+                assert!(b >= a, "clb {b} < div {a}");
+                assert!(*b as i64 <= 2 * *a as i64 + T_I16 as i64 / 1000 + 2);
+            }
+        }
+    }
+
+    #[test]
+    fn floor_log2_matches_f64() {
+        for z in 1..100_000 {
+            assert_eq!(floor_log2(z), (z as f64).log2().floor() as u32, "z={z}");
+        }
+    }
+
+    #[test]
+    fn clamp_saturates_distance() {
+        // Everything below m - Dmax gets the same (floor) score.
+        let mut x = vec![-128i8; 64];
+        x[0] = 127;
+        let out = hccs_row(&x, &p64(), OutputPath::I16, Reciprocal::Div);
+        assert!(out[1..].windows(2).all(|w| w[0] == w[1]));
+        assert!(out[0] > out[1]);
+        // floor = 300 - 4*64 = 44; Z = 300 + 63*44 = 3072; rho = 10.
+        assert_eq!(out[1], 44 * (T_I16 / 3072));
+        assert_eq!(out[0], 300 * (T_I16 / 3072));
+    }
+
+    #[test]
+    fn rows_with_per_row_params() {
+        let n = 32;
+        let p1 = HccsParams::checked(900, 8, 96, n).unwrap();
+        let p2 = HccsParams::checked(500, 2, 127, n).unwrap();
+        let mut rng = crate::rng::Xoshiro256::new(5);
+        let x: Vec<i8> = (0..2 * n).map(|_| rng.i8()).collect();
+        let out = hccs_rows(&x, n, &[p1, p2], OutputPath::I16, Reciprocal::Div);
+        assert_eq!(out[..n], hccs_row(&x[..n], &p1, OutputPath::I16, Reciprocal::Div)[..]);
+        assert_eq!(out[n..], hccs_row(&x[n..], &p2, OutputPath::I16, Reciprocal::Div)[..]);
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        let x: Vec<i8> = (0..64).map(|i| i as i8).collect();
+        let phat = hccs_row(&x, &p64(), OutputPath::I16, Reciprocal::Div);
+        let p = phat_to_probs(&phat);
+        let s: f32 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty row")]
+    fn empty_row_panics() {
+        hccs_row(&[], &p64(), OutputPath::I16, Reciprocal::Div);
+    }
+}

@@ -1,0 +1,21 @@
+//! Bit-exact integer HCCS core (paper §III, Algorithm 1).
+//!
+//! This is the same computation as the Pallas kernel
+//! (`python/compile/kernels/hccs.py`) and the numpy oracle
+//! (`python/compile/kernels/ref.py`); equality is enforced on the shared
+//! golden vectors in `artifacts/golden/` (see `tests/golden.rs`).
+//!
+//! Submodules:
+//! * [`params`]    — θ_h = (B, S, Dmax) with the Eq. (11) feasibility region
+//! * [`kernel`]    — the five-stage row kernel, both output paths, div/CLB
+//! * [`calibrate`] — offline grid-search calibration from logit samples
+//! * [`stats`]     — softmax / KL utilities shared by calibration & reports
+
+pub mod attention;
+pub mod calibrate;
+pub mod kernel;
+pub mod params;
+pub mod stats;
+
+pub use kernel::{hccs_row, hccs_row_into, hccs_rows, OutputPath, Reciprocal};
+pub use params::{HccsParams, ParamError, T_I16, T_I8};

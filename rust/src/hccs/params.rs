@@ -1,0 +1,152 @@
+//! Surrogate parameters θ_h and the integer feasibility region.
+//!
+//! Paper §IV-C: to guarantee a correct, overflow-free int8/int16 datapath
+//! the calibrated parameters must satisfy, for row length `n`:
+//!
+//! * `1 <= Dmax <= 127`                 (distances representable in int8)
+//! * `S >= 0`                           (monotone, decreasing surrogate)
+//! * `B - S*Dmax >= ceil(256/n)`        (score floor → Z >= 256 → the int8
+//!                                       path reciprocal ρ₈ fits in int16)
+//! * `n*B <= 32767`                     (Z <= 32767 → ρ = ⌊32767/Z⌋ >= 1)
+//!
+//! which yields the valid operating band for B (Eq. 11):
+//! `S*Dmax + ceil(256/n) <= B <= floor(32767/n)`.
+
+/// Target integer scale of the int16 output path.
+pub const T_I16: i32 = 32767;
+/// Target integer scale of the uint8 output path.
+pub const T_I8: i32 = 255;
+/// `R` of Eq. (8): fractional bits kept by the int8-path reciprocal.
+pub const INV_SHIFT: u32 = 15;
+/// Extra down-shift applied after the reciprocal multiply on the int8 path.
+pub const OUT_SHIFT: u32 = 0;
+
+/// Per-head surrogate parameters θ_h = (B, S, Dmax).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HccsParams {
+    /// Affine intercept B_h (max score, attained at δ = 0).
+    pub b: i32,
+    /// Slope S_h (score decay per unit of clamped distance).
+    pub s: i32,
+    /// Distance clamp bound D_max,h.
+    pub dmax: i32,
+}
+
+/// Violation of the §IV-C feasibility region.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ParamError {
+    #[error("Dmax={0} outside [1, 127]")]
+    DmaxRange(i32),
+    #[error("S={0} negative")]
+    NegativeSlope(i32),
+    #[error("score floor B - S*Dmax = {0} below {1} (row length {2})")]
+    FloorTooLow(i32, i32, usize),
+    #[error("n*B = {0} exceeds 32767 (row length {1})")]
+    RowSumOverflow(i64, usize),
+}
+
+impl HccsParams {
+    /// Construct without validation (tests & deserialization).
+    pub const fn new(b: i32, s: i32, dmax: i32) -> Self {
+        Self { b, s, dmax }
+    }
+
+    /// Construct and validate against the feasibility region for rows of
+    /// length `n`.
+    pub fn checked(b: i32, s: i32, dmax: i32, n: usize) -> Result<Self, ParamError> {
+        let p = Self { b, s, dmax };
+        p.validate(n)?;
+        Ok(p)
+    }
+
+    /// Score floor `B - S*Dmax` — the value every fully-clamped (masked /
+    /// far-tail) position receives.
+    pub const fn floor(&self) -> i32 {
+        self.b - self.s * self.dmax
+    }
+
+    /// Validate θ for rows of length `n` (paper §IV-C, Eq. 11).
+    pub fn validate(&self, n: usize) -> Result<(), ParamError> {
+        if self.dmax < 1 || self.dmax > 127 {
+            return Err(ParamError::DmaxRange(self.dmax));
+        }
+        if self.s < 0 {
+            return Err(ParamError::NegativeSlope(self.s));
+        }
+        let need = ceil_div(256, n as i32);
+        if self.floor() < need {
+            return Err(ParamError::FloorTooLow(self.floor(), need, n));
+        }
+        let nb = n as i64 * self.b as i64;
+        if nb > T_I16 as i64 {
+            return Err(ParamError::RowSumOverflow(nb, n));
+        }
+        Ok(())
+    }
+
+    /// The Eq. (11) band of feasible B for a given (S, Dmax, n), or `None`
+    /// if the band is empty (slope too steep for the row length).
+    pub fn feasible_b_band(s: i32, dmax: i32, n: usize) -> Option<(i32, i32)> {
+        let lo = s * dmax + ceil_div(256, n as i32);
+        let hi = T_I16 / n as i32;
+        (lo <= hi).then_some((lo, hi))
+    }
+}
+
+#[inline]
+pub(crate) const fn ceil_div(a: i32, b: i32) -> i32 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_band_endpoints_are_feasible() {
+        // For n=64: ceil(256/64)=4, floor(32767/64)=511.
+        let (lo, hi) = HccsParams::feasible_b_band(4, 64, 64).unwrap();
+        assert_eq!(lo, 4 * 64 + 4);
+        assert_eq!(hi, 511);
+        assert!(HccsParams::checked(lo, 4, 64, 64).is_ok());
+        assert!(HccsParams::checked(hi, 4, 64, 64).is_ok());
+        assert!(HccsParams::checked(lo - 1, 4, 64, 64).is_err());
+        assert!(HccsParams::checked(hi + 1, 4, 64, 64).is_err());
+    }
+
+    #[test]
+    fn rejects_each_violation() {
+        assert!(matches!(
+            HccsParams::checked(300, 4, 0, 64),
+            Err(ParamError::DmaxRange(0))
+        ));
+        assert!(matches!(
+            HccsParams::checked(300, 4, 128, 64),
+            Err(ParamError::DmaxRange(128))
+        ));
+        assert!(matches!(
+            HccsParams::checked(300, -1, 64, 64),
+            Err(ParamError::NegativeSlope(-1))
+        ));
+        assert!(matches!(
+            HccsParams::checked(100, 4, 64, 64), // floor = -156
+            Err(ParamError::FloorTooLow(-156, 4, 64))
+        ));
+        assert!(matches!(
+            HccsParams::checked(600, 1, 64, 64), // 64*600 > 32767
+            Err(ParamError::RowSumOverflow(38400, 64))
+        ));
+    }
+
+    #[test]
+    fn empty_band_when_slope_too_steep() {
+        // n=128: hi = 255; S=16, Dmax=127 -> lo = 2034 > hi.
+        assert!(HccsParams::feasible_b_band(16, 127, 128).is_none());
+    }
+
+    #[test]
+    fn floor_is_min_score() {
+        let p = HccsParams::new(300, 4, 64);
+        assert_eq!(p.floor(), 300 - 256);
+    }
+}

@@ -1,0 +1,75 @@
+//! Softmax / entropy / KL utilities shared by calibration and reports.
+
+/// Numerically-stable softmax over a float row.
+pub fn softmax(x: &[f64]) -> Vec<f64> {
+    let m = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = x.iter().map(|&v| (v - m).exp()).collect();
+    let z: f64 = e.iter().sum();
+    e.iter().map(|&v| v / z).collect()
+}
+
+/// Normalize integer p̂ to a probability vector.
+pub fn normalize_phat(phat: &[i32]) -> Vec<f64> {
+    let z: i64 = phat.iter().map(|&v| v as i64).sum();
+    let z = z.max(1) as f64;
+    phat.iter().map(|&v| v as f64 / z).collect()
+}
+
+/// KL(p ‖ q) in nats, q floored at `1e-12`.
+pub fn kl(p: &[f64], q: &[f64]) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    p.iter()
+        .zip(q)
+        .filter(|(&pi, _)| pi > 0.0)
+        .map(|(&pi, &qi)| pi * (pi / qi.max(1e-12)).ln())
+        .sum()
+}
+
+/// Shannon entropy of a probability row, in nats.
+pub fn entropy(p: &[f64]) -> f64 {
+    -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f64>()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_is_simplex_and_ordered() {
+        let p = softmax(&[1.0, 3.0, 2.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[1] > p[2] && p[2] > p[0]);
+    }
+
+    #[test]
+    fn softmax_handles_extremes() {
+        let p = softmax(&[-1e30, 0.0, 1e30]);
+        assert!((p[2] - 1.0).abs() < 1e-12);
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let p = softmax(&[0.5, 1.5, -0.2]);
+        assert!(kl(&p, &p) < 1e-12);
+        let q = softmax(&[1.5, 0.5, -0.2]);
+        assert!(kl(&p, &q) > 0.0);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let uniform = vec![0.25; 4];
+        assert!((entropy(&uniform) - (4.0f64).ln()).abs() < 1e-12);
+        let onehot = vec![1.0, 0.0, 0.0, 0.0];
+        assert!(entropy(&onehot).abs() < 1e-12);
+    }
+}

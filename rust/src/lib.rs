@@ -1,0 +1,51 @@
+//! # HCCS — Head-Calibrated Clipped-Linear Softmax
+//!
+//! Production reproduction of *"Taming the Exponential: A Fast Softmax
+//! Surrogate for Integer-Native Edge Inference"* (CS.LG 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build time) — the HCCS surrogate as a Pallas kernel
+//!   (`python/compile/kernels/hccs.py`), bit-exact with [`hccs`] here.
+//! * **Layer 2** (build time) — compact BERT encoders with pluggable
+//!   attention normalizers, AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate) — the runtime: a PJRT-backed model
+//!   [`runtime`], the integer [`hccs`] core, the AIE performance model
+//!   [`aie_sim`] used to regenerate the paper's throughput tables, and a
+//!   batching inference [`coordinator`]/[`server`].
+//!
+//! Python never runs on the request path: after `make artifacts` every
+//! binary in this crate is self-contained.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use hccs::hccs::{HccsParams, OutputPath, Reciprocal, hccs_row};
+//!
+//! // Feasible per-head parameters for rows of length 64 (paper Eq. 11).
+//! let p = HccsParams::checked(300, 4, 64, 64).unwrap();
+//! let logits: Vec<i8> = (0..64).map(|i| (i as i8).wrapping_mul(3)).collect();
+//! let phat = hccs_row(&logits, &p, OutputPath::I16, Reciprocal::Div);
+//! assert!(phat.iter().all(|&v| v >= 0 && v <= 32767));
+//! ```
+//!
+//! See `examples/` for the end-to-end serving driver and the experiment
+//! harnesses that regenerate every table and figure of the paper.
+
+pub mod aie_sim;
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hccs;
+pub mod json;
+pub mod metrics;
+pub mod proptest_lite;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+
+/// Default artifacts directory (relative to the repo root / CWD).
+pub const ARTIFACTS_DIR: &str = "artifacts";

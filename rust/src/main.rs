@@ -1,0 +1,179 @@
+//! `hccs` — the leader binary: serve, eval, calibrate, sim, tables.
+//!
+//! ```text
+//! hccs tables  [--artifacts DIR] [--table 1|2|3] [--fig 2|3] [--limit N] [--remeasure]
+//! hccs eval    [--artifacts DIR] [--model M] [--task T] [--variant float|hccs] [--limit N]
+//! hccs serve   [--artifacts DIR] [--model M] [--task T] [--variant V] [--batch B] [--wait-ms W]
+//! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T]
+//! hccs calibrate [--n N] [--rows R] [--spread X]   (synthetic logit demo)
+//! ```
+
+use std::io::{stdin, stdout, BufWriter};
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use hccs::aie_sim::device::{Device, DeviceKind};
+use hccs::aie_sim::kernels::KernelKind;
+use hccs::aie_sim::{scaling, tile};
+use hccs::cli::Args;
+use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hccs::data::TaskKind;
+use hccs::experiments;
+use hccs::hccs::calibrate::{calibrate_rows, calibrate_scale};
+use hccs::report::fmt_gps;
+use hccs::rng::Xoshiro256;
+use hccs::server;
+use hccs::tokenizer::Tokenizer;
+
+const KNOWN: &[&str] = &[
+    "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
+    "batch=", "wait-ms=", "device=", "kernel=", "n=", "tiles=", "rows=", "spread=", "help",
+];
+
+fn main() -> Result<()> {
+    let args = Args::from_env(KNOWN).map_err(|e| anyhow::anyhow!("{e}\n{}", usage()))?;
+    if args.flag("help") || args.positional().is_empty() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.get_or("artifacts", hccs::ARTIFACTS_DIR));
+    match args.positional()[0].as_str() {
+        "tables" => cmd_tables(&args, &artifacts),
+        "eval" => cmd_eval(&args, &artifacts),
+        "serve" => cmd_serve(&args, &artifacts),
+        "sim" => cmd_sim(&args),
+        "calibrate" => cmd_calibrate(&args),
+        other => bail!("unknown subcommand {other:?}\n{}", usage()),
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: hccs <tables|eval|serve|sim|calibrate> [flags]\n\
+     run with a subcommand; see module docs (src/main.rs) for flags"
+}
+
+fn cmd_tables(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let limit = args.parse_num("limit", 512usize)?;
+    let remeasure = args.flag("remeasure");
+    let which_table = args.get("table");
+    let which_fig = args.get("fig");
+    let all = which_table.is_none() && which_fig.is_none();
+    if all || which_table == Some("1") {
+        println!("{}", experiments::table1(artifacts, limit, remeasure)?);
+    }
+    if all || which_table == Some("2") {
+        println!("{}", experiments::table2(artifacts)?);
+    }
+    if all || which_table == Some("3") {
+        println!("{}", experiments::table3()?);
+        println!("{}", experiments::clb_ablation());
+    }
+    if all || which_fig == Some("2") {
+        for model in experiments::MODELS {
+            for task in experiments::TASKS {
+                match experiments::fig2(artifacts, model, task) {
+                    Ok(s) => println!("{s}"),
+                    Err(e) => eprintln!("fig2 {model}/{task}: {e:#}"),
+                }
+            }
+        }
+    }
+    if all || which_fig == Some("3") {
+        println!("{}", experiments::fig3()?);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let model = args.get_or("model", "bert-tiny");
+    let task = args.get_or("task", "sst2s");
+    let variant = args.get_or("variant", "hccs");
+    let limit = args.parse_num("limit", 512usize)?;
+    let spath = hccs::runtime::manifest::summary_path(artifacts, model, task)
+        .with_context(|| format!("no artifacts for {model}/{task} — run `make artifacts`"))?;
+    let summary = hccs::runtime::PairSummary::load(&spath)?;
+    let (acc, eps) = experiments::eval_variant(artifacts, &summary, variant, limit)?;
+    println!("{model}/{task}/{variant}: accuracy {acc:.4} over {limit} examples ({eps:.1} ex/s)");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
+    let model = args.get_or("model", "bert-tiny").to_string();
+    let task_name = args.get_or("task", "sst2s");
+    let task = TaskKind::parse(task_name).context("bad --task")?;
+    let cfg = CoordinatorConfig {
+        artifacts: artifacts.clone(),
+        model,
+        task: task_name.to_string(),
+        variant: args.get_or("variant", "hccs").to_string(),
+        policy: BatchPolicy {
+            max_batch: args.parse_num("batch", 8usize)?,
+            max_wait: std::time::Duration::from_millis(args.parse_num("wait-ms", 5u64)?),
+        },
+        max_in_flight: None,
+    };
+    let tokenizer = Tokenizer::load(&artifacts.join("vocab.json"))?;
+    let (coord, handle) = Coordinator::start(cfg)?;
+    eprintln!("serving on stdin (one request per line; Ctrl-D to finish)");
+    let n = server::serve(&coord, &tokenizer, task, stdin().lock(), BufWriter::new(stdout().lock()))?;
+    coord.shutdown();
+    let _ = handle.join();
+    eprintln!("served {n} requests\n{}", coord.metrics.render());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let device = match args.get_or("device", "mlv2") {
+        "ml" => Device::new(DeviceKind::AieMl),
+        "mlv2" => Device::new(DeviceKind::AieMlV2),
+        other => bail!("unknown device {other:?} (ml|mlv2)"),
+    };
+    let kernel = match args.get_or("kernel", "i8_clb") {
+        "bf16" => KernelKind::Bf16Ref,
+        "i16_div" => KernelKind::HccsI16Div,
+        "i16_clb" => KernelKind::HccsI16Clb,
+        "i8_div" => KernelKind::HccsI8Div,
+        "i8_clb" => KernelKind::HccsI8Clb,
+        other => bail!("unknown kernel {other:?}"),
+    };
+    let n = args.parse_num("n", 64usize)?;
+    let tiles = args.parse_num("tiles", 1usize)?;
+    let cycles = tile::cycles_per_row(kernel, &device, n);
+    let single = tile::throughput_eps(kernel, &device, n);
+    println!("{} / {} @ n={n}:", device.name(), kernel.name());
+    println!("  {cycles} cycles/row, single tile {}", fmt_gps(single));
+    if tiles > 1 {
+        let p = scaling::aggregate(&device, kernel, n, tiles, tiles as u64 * 4096);
+        println!("  {tiles} tiles: {} (occupancy {:.0}%)", fmt_gps(p.eps), p.occupancy * 100.0);
+    }
+    let sim = tile::TileSim::new(device, kernel);
+    println!("  stage profile:");
+    for (name, cyc) in sim.row_profile(n) {
+        println!("    {name:<44} {cyc:>5}");
+    }
+    if kernel.is_hccs() {
+        println!("  int8 MAC utilization: {:.1}%", sim.mac_utilization(n) * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let n = args.parse_num("n", 64usize)?;
+    let rows = args.parse_num("rows", 256usize)?;
+    let spread: f64 = args.parse_num("spread", 4.0f64)?;
+    let mut rng = Xoshiro256::new(42);
+    let data: Vec<Vec<f64>> = (0..rows)
+        .map(|_| (0..n).map(|_| (rng.f64() + rng.f64() + rng.f64() - 1.5) * spread).collect())
+        .collect();
+    let flat: Vec<f64> = data.iter().flatten().cloned().collect();
+    let gamma = calibrate_scale(&flat, 99.9);
+    let cal = calibrate_rows(&data, n, gamma);
+    println!(
+        "calibrated over {rows} synthetic rows (n={n}, spread={spread}):\n  \
+         theta = (B={}, S={}, Dmax={})  gamma={:.4}\n  \
+         mean KL(softmax || HCCS) = {:.4} nats over {} candidates",
+        cal.params.b, cal.params.s, cal.params.dmax, cal.gamma, cal.kl, cal.evaluated
+    );
+    Ok(())
+}

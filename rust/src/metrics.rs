@@ -1,0 +1,211 @@
+//! Lightweight metrics: counters, gauges, and latency histograms with
+//! percentile queries.  Shared by the server, the coordinator, and the
+//! benchmark harnesses.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Monotonic event counter (lock-free).
+#[derive(Default, Debug)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (microsecond resolution,
+/// ~4% relative bucket width, covers 1 µs .. ~1.2 h).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+const BUCKETS_PER_OCTAVE: usize = 16;
+const N_BUCKETS: usize = 32 * BUCKETS_PER_OCTAVE;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us <= 1 {
+            return 0;
+        }
+        let log2 = 63 - us.leading_zeros() as u64;
+        let frac = (us >> log2.saturating_sub(4)) & 0xF; // 4 fractional bits
+        ((log2 as usize) * BUCKETS_PER_OCTAVE / 1 + frac as usize * BUCKETS_PER_OCTAVE / 16)
+            .min(N_BUCKETS - 1)
+    }
+
+    /// Upper edge (µs) represented by bucket `i` (inverse of `bucket_of`).
+    fn bucket_value(i: usize) -> u64 {
+        let log2 = i / BUCKETS_PER_OCTAVE;
+        let frac = i % BUCKETS_PER_OCTAVE;
+        (1u64 << log2) + ((1u64 << log2) >> 4) * frac as u64
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile in microseconds (p in [0, 100]).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// Named registry so binaries can dump everything at exit.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::new()))
+            .clone()
+    }
+
+    /// Human-readable dump, sorted by name.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} = {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}: n={} mean={:.1}us p50={}us p95={}us p99={}us max={}us\n",
+                h.count(),
+                h.mean_us(),
+                h.percentile_us(50.0),
+                h.percentile_us(95.0),
+                h.percentile_us(99.0),
+                h.max_us()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_adds() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.percentile_us(50.0);
+        let p95 = h.percentile_us(95.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // ~4% bucket resolution.
+        assert!((450..=560).contains(&p50), "p50={p50}");
+        assert!((880..=1060).contains(&p95), "p95={p95}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(0));
+        h.record(Duration::from_secs(3600));
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile_us(100.0) >= 1_000_000);
+    }
+
+    #[test]
+    fn registry_is_shared() {
+        let r = Registry::default();
+        r.counter("x").inc();
+        r.counter("x").inc();
+        assert_eq!(r.counter("x").get(), 2);
+        assert!(r.render().contains("x = 2"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny property-testing harness (proptest is unavailable offline).
+//!
+//! A property runs against `cases` randomly generated inputs; on failure
+//! the harness greedily *shrinks* the failing input via a caller-provided
+//! shrink function before panicking with the minimal reproduction and the
+//! seed needed to replay it.
+
+use crate::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    pub max_shrink_steps: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed overridable for replay: PROPTEST_SEED=1234 cargo test ...
+        let seed = std::env::var("PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Self { cases: 256, seed, max_shrink_steps: 500 }
+    }
+}
+
+/// Check `prop` on `cases` inputs drawn by `gen`; shrink failures with
+/// `shrink` (return candidate smaller inputs; first still-failing one is
+/// taken, repeatedly, until none fail or the step budget is exhausted).
+pub fn check<T, G, S, P>(name: &str, cfg: Config, mut gen: G, shrink: S, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}\n  replay: PROPTEST_SEED={seed}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Standard shrinker for vectors: halve, drop chunks, simplify elements.
+pub fn shrink_vec<T: Clone>(v: &[T], simplify: impl Fn(&T) -> Option<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+        let mut dropped = v.to_vec();
+        dropped.remove(0);
+        out.push(dropped);
+    }
+    for (i, item) in v.iter().enumerate() {
+        if let Some(simpler) = simplify(item) {
+            let mut c = v.to_vec();
+            c[i] = simpler;
+            out.push(c);
+            if out.len() > 16 {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Shrink an integer toward zero.
+pub fn shrink_int(v: i64) -> Vec<i64> {
+    if v == 0 {
+        vec![]
+    } else {
+        vec![0, v / 2, v - v.signum()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "sum-commutes",
+            Config { cases: 64, ..Default::default() },
+            |rng| (rng.range_i64(-100, 100), rng.range_i64(-100, 100)),
+            |_| vec![],
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(
+            "all-below-50",
+            Config { cases: 256, ..Default::default() },
+            |rng| rng.range_i64(0, 100),
+            |&v| shrink_int(v).into_iter().filter(|&x| x >= 0).collect(),
+            |&v| if v < 50 { Ok(()) } else { Err(format!("{v} >= 50")) },
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_candidates() {
+        let v = vec![5, 6, 7, 8];
+        let cands = shrink_vec(&v, |&x| if x > 0 { Some(x - 1) } else { None });
+        assert!(cands.iter().any(|c| c.len() == 2));
+        assert!(cands.iter().all(|c| c.len() <= v.len()));
+    }
+}

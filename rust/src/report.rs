@@ -1,0 +1,194 @@
+//! Table and figure rendering shared by the experiment harnesses:
+//! aligned-markdown tables, TSV emission, and ASCII line plots for the
+//! figure reproductions.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "ragged table row");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as a markdown-style aligned table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+
+    /// Tab-separated emission (for plotting tools).
+    pub fn to_tsv(&self) -> String {
+        let mut out = self.header.join("\t");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// ASCII line plot for figure reproductions (log-ish friendly).
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    series: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: &str) -> Self {
+        Self { title: title.to_string(), width: 72, height: 20, series: Vec::new() }
+    }
+
+    pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push((name.to_string(), points));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        const MARKS: &[char] = &['*', 'o', '+', 'x', '#'];
+        let all: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        if all.is_empty() {
+            return format!("{}\n(no data)\n", self.title);
+        }
+        let (xmin, xmax) = min_max(all.iter().map(|p| p.0));
+        let (ymin, ymax) = min_max(all.iter().map(|p| p.1));
+        let xspan = (xmax - xmin).max(1e-12);
+        let yspan = (ymax - ymin).max(1e-12);
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (si, (_, pts)) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            for &(x, y) in pts {
+                let cx = (((x - xmin) / xspan) * (self.width - 1) as f64).round() as usize;
+                let cy = (((y - ymin) / yspan) * (self.height - 1) as f64).round() as usize;
+                grid[self.height - 1 - cy][cx] = mark;
+            }
+        }
+        let mut out = format!("{}\n", self.title);
+        out.push_str(&format!("  y: {ymin:.3e} .. {ymax:.3e}\n"));
+        for row in grid {
+            out.push_str("  |");
+            out.extend(row);
+            out.push('\n');
+        }
+        out.push_str(&format!("  +{}\n", "-".repeat(self.width)));
+        out.push_str(&format!("   x: {xmin:.1} .. {xmax:.1}\n"));
+        for (si, (name, _)) in self.series.iter().enumerate() {
+            out.push_str(&format!("   {} {}\n", MARKS[si % MARKS.len()], name));
+        }
+        out
+    }
+}
+
+fn min_max(it: impl Iterator<Item = f64>) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for v in it {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    (lo, hi)
+}
+
+/// Format a throughput in elements/s the way the paper does ("2.19G/s").
+pub fn fmt_gps(eps: f64) -> String {
+    format!("{:.2}G/s", eps / 1e9)
+}
+
+/// Format a speedup ("15.1x").
+pub fn fmt_speedup(x: f64) -> String {
+    if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "long-header"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("## T"));
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() == 4);
+        let widths: Vec<usize> =
+            s.lines().filter(|l| l.starts_with('|')).map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "ragged render");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn plot_renders_all_series() {
+        let mut p = AsciiPlot::new("fig");
+        p.series("lin", (0..10).map(|i| (i as f64, i as f64)).collect());
+        p.series("quad", (0..10).map(|i| (i as f64, (i * i) as f64)).collect());
+        let s = p.render();
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("lin") && s.contains("quad"));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_gps(2.19e9), "2.19G/s");
+        assert_eq!(fmt_speedup(15.1), "15.1x");
+        assert_eq!(fmt_speedup(4.6), "4.60x");
+    }
+}

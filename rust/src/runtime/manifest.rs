@@ -1,0 +1,151 @@
+//! Model manifests: which HLO file, which weights, operand binding order.
+//!
+//! Manifests live inside the per-pair `summary_<model>_<task>.json`
+//! written by `compile.aot` under the `"manifests"` key, one entry per
+//! `(variant, batch)` — e.g. `"hccs_b8"`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+
+/// Shape spec of one weight operand (positional).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Everything needed to load and call one model executable.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    /// Key within the summary ("float_b8", "hccs_b1", ...).
+    pub key: String,
+    pub hlo: String,
+    pub weights: String,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub params: Vec<ParamSpec>,
+    /// Attention normalizer the artifact was lowered with.
+    pub attn: String,
+}
+
+/// The whole per-pair summary (accuracy numbers + manifests).
+#[derive(Clone, Debug)]
+pub struct PairSummary {
+    pub model: String,
+    pub task: String,
+    pub baseline_acc: f64,
+    pub noretrain_acc: f64,
+    pub retrained_acc: f64,
+    pub retrained_acc_i8clb: f64,
+    pub ablation_global: f64,
+    pub ablation_per_layer: f64,
+    pub ablation_per_head: f64,
+    pub manifests: Vec<ModelManifest>,
+}
+
+impl PairSummary {
+    pub fn load(path: &Path) -> Result<PairSummary> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading summary {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing summary json")?;
+        let abl = v.req("ablation");
+        let mut manifests = Vec::new();
+        if let Value::Obj(m) = v.req("manifests") {
+            for (key, mv) in m {
+                manifests.push(parse_manifest(key, mv)?);
+            }
+        }
+        Ok(PairSummary {
+            model: v.req("model").as_str().unwrap_or("").to_string(),
+            task: v.req("task").as_str().unwrap_or("").to_string(),
+            baseline_acc: v.req("baseline_acc").as_f64().unwrap_or(0.0),
+            noretrain_acc: v.req("noretrain_acc").as_f64().unwrap_or(0.0),
+            retrained_acc: v.req("retrained_acc").as_f64().unwrap_or(0.0),
+            retrained_acc_i8clb: v.req("retrained_acc_i8clb").as_f64().unwrap_or(0.0),
+            ablation_global: abl.req("global").as_f64().unwrap_or(0.0),
+            ablation_per_layer: abl.req("per_layer").as_f64().unwrap_or(0.0),
+            ablation_per_head: abl.req("per_head").as_f64().unwrap_or(0.0),
+            manifests,
+        })
+    }
+
+    pub fn manifest(&self, variant: &str, batch: usize) -> Option<&ModelManifest> {
+        let key = format!("{variant}_b{batch}");
+        self.manifests.iter().find(|m| m.key == key)
+    }
+}
+
+fn parse_manifest(key: &str, v: &Value) -> Result<ModelManifest> {
+    let params = v
+        .req("params")
+        .as_arr()
+        .context("manifest params")?
+        .iter()
+        .map(|p| ParamSpec {
+            name: p.req("name").as_str().unwrap_or("").to_string(),
+            shape: p.req("shape").flat_f64().iter().map(|&d| d as usize).collect(),
+        })
+        .collect();
+    Ok(ModelManifest {
+        key: key.to_string(),
+        hlo: v.req("hlo").as_str().context("manifest hlo")?.to_string(),
+        weights: v.req("weights").as_str().context("manifest weights")?.to_string(),
+        batch: v.req("batch").as_i64().context("batch")? as usize,
+        seq_len: v.req("seq_len").as_i64().context("seq_len")? as usize,
+        n_classes: v.req("n_classes").as_i64().context("n_classes")? as usize,
+        params,
+        attn: v.req("attn").as_str().unwrap_or("").to_string(),
+    })
+}
+
+/// Locate the summary file for a (model, task) pair, tolerating the
+/// `_fast` suffix emitted by smoke builds.
+pub fn summary_path(artifacts: &Path, model: &str, task: &str) -> Option<std::path::PathBuf> {
+    for suffix in ["", "_fast"] {
+        let p = artifacts.join(format!("summary_{model}_{task}{suffix}.json"));
+        if p.exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "bert-tiny", "task": "sst2s", "params": 462722,
+      "baseline_acc": 0.825, "noretrain_acc": 0.619,
+      "retrained_acc": 0.822, "retrained_acc_i8clb": 0.820,
+      "ablation": {"global": 0.817, "per_layer": 0.819, "per_head": 0.822},
+      "budget": {},
+      "manifests": {
+        "hccs_b8": {
+          "hlo": "model_x_hccs_b8.hlo.txt", "weights": "weights_x_hccs.bin",
+          "batch": 8, "seq_len": 64, "n_classes": 2,
+          "params": [{"name": "cls/b", "shape": [2]}, {"name": "cls/w", "shape": [128, 2]}],
+          "extra_inputs": ["ids:i32", "segments:i32"], "attn": "hccs_int"
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_summary() {
+        let tmp = std::env::temp_dir().join("hccs_manifest_test.json");
+        std::fs::write(&tmp, SAMPLE).unwrap();
+        let s = PairSummary::load(&tmp).unwrap();
+        assert_eq!(s.model, "bert-tiny");
+        assert!((s.baseline_acc - 0.825).abs() < 1e-9);
+        let m = s.manifest("hccs", 8).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].shape, vec![128, 2]);
+        assert!(s.manifest("hccs", 4).is_none());
+        std::fs::remove_file(&tmp).ok();
+    }
+}

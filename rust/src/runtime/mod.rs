@@ -1,0 +1,205 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The interchange contract with the Python build path
+//! (`python/compile/aot.py`, see /opt/xla-example/README.md for why HLO
+//! *text* and not serialized protos):
+//!
+//! * computations arrive as `artifacts/*.hlo.txt`;
+//! * model weights arrive as `weights_*.bin` (`HCCSTW01` container) and
+//!   are bound positionally per the manifest inside `summary_*.json`;
+//! * every lowered function returns a 1-tuple (lowered with
+//!   `return_tuple=True`), unwrapped here with `to_tuple1`.
+//!
+//! Weights are uploaded to device once per [`ModelRunner`] and reused
+//! across calls via `execute_b` — only the (ids, segments) tensors cross
+//! the host/device boundary per request.
+
+pub mod manifest;
+pub mod weights;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ModelManifest, PairSummary};
+pub use weights::{Tensor, Weights};
+
+/// Shared PJRT CPU client + HLO loading.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime (the only backend in this image).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+
+    /// Upload a host tensor to the device.
+    pub fn upload<T: xla::ArrayElement>(&self, data: &[T], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device upload: {e}"))
+    }
+}
+
+/// A compiled computation plus provenance.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl Executable {
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with device-resident buffers; returns the unwrapped 1-tuple
+    /// result as a literal.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::Literal> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e}", self.path.display()))?;
+        let lit = outs
+            .first()
+            .and_then(|r| r.first())
+            .context("no output buffer")?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("unwrapping 1-tuple: {e}"))
+    }
+}
+
+/// A ready-to-serve model: executable + device-resident weights.
+pub struct ModelRunner {
+    pub manifest: ModelManifest,
+    exe: Executable,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    runtime: std::rc::Rc<Runtime>,
+}
+
+impl ModelRunner {
+    /// Load a model variant from the artifacts directory.
+    pub fn load(runtime: std::rc::Rc<Runtime>, artifacts: &Path, manifest: ModelManifest) -> Result<Self> {
+        let exe = runtime.load_hlo(&artifacts.join(&manifest.hlo))?;
+        let w = Weights::load(&artifacts.join(&manifest.weights))?;
+        // Bind weights positionally, verifying name/shape against the
+        // manifest so a stale weights file fails loudly.
+        let mut weight_bufs = Vec::with_capacity(manifest.params.len());
+        for spec in &manifest.params {
+            let t = w
+                .get(&spec.name)
+                .with_context(|| format!("weights missing tensor {:?}", spec.name))?;
+            if t.dims != spec.shape {
+                bail!(
+                    "tensor {:?}: weights shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.dims,
+                    spec.shape
+                );
+            }
+            weight_bufs.push(runtime.upload(&t.data, &t.dims)?);
+        }
+        Ok(Self { manifest, exe, weight_bufs, runtime })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.manifest.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.manifest.seq_len
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.manifest.n_classes
+    }
+
+    /// Run one batch. `ids` and `segments` are row-major
+    /// `(batch, seq_len)`; returns row-major `(batch, n_classes)` logits.
+    pub fn run(&self, ids: &[i32], segments: &[i32]) -> Result<Vec<f32>> {
+        let (b, l) = (self.manifest.batch, self.manifest.seq_len);
+        if ids.len() != b * l || segments.len() != b * l {
+            bail!("input shape mismatch: want {}x{l}, got {} / {}", b, ids.len(), segments.len());
+        }
+        let ids_buf = self.runtime.upload(ids, &[b, l])?;
+        let seg_buf = self.runtime.upload(segments, &[b, l])?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&ids_buf);
+        args.push(&seg_buf);
+        let lit = self.exe.run_buffers(&args)?;
+        let out = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("logits to_vec: {e}"))?;
+        if out.len() != b * self.manifest.n_classes {
+            bail!("logits shape mismatch: {} != {}", out.len(), b * self.manifest.n_classes);
+        }
+        Ok(out)
+    }
+
+    /// Argmax convenience over [`run`]: per-example predicted class.
+    pub fn predict(&self, ids: &[i32], segments: &[i32]) -> Result<Vec<usize>> {
+        let logits = self.run(ids, segments)?;
+        let c = self.manifest.n_classes;
+        Ok(logits
+            .chunks(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect())
+    }
+}
+
+/// Runner for the standalone HCCS row-kernel artifact
+/// (`hccs_softmax_{mode}_n{N}.hlo.txt`): inputs (B, S, Dmax, x) per the
+/// Pallas entry point, output `(R, N)` int32 p-hat.
+pub struct KernelRunner {
+    exe: Executable,
+    runtime: std::rc::Rc<Runtime>,
+    pub rows: usize,
+    pub n: usize,
+}
+
+impl KernelRunner {
+    pub fn load(runtime: std::rc::Rc<Runtime>, path: &Path, rows: usize, n: usize) -> Result<Self> {
+        let exe = runtime.load_hlo(path)?;
+        Ok(Self { exe, runtime, rows, n })
+    }
+
+    pub fn run(&self, x: &[i8], b: &[i32], s: &[i32], d: &[i32]) -> Result<Vec<i32>> {
+        if x.len() != self.rows * self.n || b.len() != self.rows {
+            bail!("kernel input shape mismatch");
+        }
+        let xb = self.runtime.upload(x, &[self.rows, self.n])?;
+        let bb = self.runtime.upload(b, &[self.rows])?;
+        let sb = self.runtime.upload(s, &[self.rows])?;
+        let db = self.runtime.upload(d, &[self.rows])?;
+        // Operand order matches compile.export.lower_kernel_hlo: (x, B, S, D).
+        let lit = self.exe.run_buffers(&[&xb, &bb, &sb, &db])?;
+        lit.to_vec::<i32>().map_err(|e| anyhow!("phat to_vec: {e}"))
+    }
+}

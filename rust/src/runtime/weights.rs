@@ -1,0 +1,157 @@
+//! Reader for the `HCCSTW01` weights container written by
+//! `compile.export.write_weights_bin`.
+//!
+//! Layout (little-endian):
+//! `HCCSTW01 | u32 count | { u32 name_len, name, u32 ndim, u32 dims[ndim],
+//! f32 data[prod(dims)] }*count`
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"HCCSTW01";
+
+/// One named float32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A loaded weights file with name lookup.
+#[derive(Debug, Default)]
+pub struct Weights {
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Weights> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading weights {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Weights> {
+        let mut r = Reader { b: bytes, off: 0 };
+        if r.take(8)? != MAGIC {
+            bail!("bad weights magic");
+        }
+        let count = r.u32()? as usize;
+        let mut out = Weights::default();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            if name_len > 4096 {
+                bail!("implausible tensor name length {name_len}");
+            }
+            let name = String::from_utf8(r.take(name_len)?.to_vec()).context("tensor name utf8")?;
+            let ndim = r.u32()? as usize;
+            if ndim > 8 {
+                bail!("implausible rank {ndim} for {name}");
+            }
+            let dims: Vec<usize> = (0..ndim).map(|_| r.u32().map(|v| v as usize)).collect::<Result<_>>()?;
+            let numel: usize = dims.iter().product();
+            let raw = r.take(numel * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            out.index.insert(name.clone(), out.tensors.len());
+            out.tensors.push(Tensor { name, dims, data });
+        }
+        if r.off != bytes.len() {
+            bail!("trailing bytes in weights file");
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Tensor> {
+        self.tensors.iter()
+    }
+
+    /// Total parameter count across all tensors.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.data.len()).sum()
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.off + n > self.b.len() {
+            bail!("weights file truncated at byte {}", self.off);
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth() -> Vec<u8> {
+        let mut b = MAGIC.to_vec();
+        b.extend(2u32.to_le_bytes());
+        for (name, dims, vals) in [
+            ("w/a", vec![2u32, 3u32], vec![1f32, 2., 3., 4., 5., 6.]),
+            ("bias", vec![4u32], vec![0.5f32, -0.5, 0.25, 0.0]),
+        ] {
+            b.extend((name.len() as u32).to_le_bytes());
+            b.extend(name.as_bytes());
+            b.extend((dims.len() as u32).to_le_bytes());
+            for d in &dims {
+                b.extend(d.to_le_bytes());
+            }
+            for v in &vals {
+                b.extend(v.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let w = Weights::from_bytes(&synth()).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.param_count(), 10);
+        let t = w.get("w/a").unwrap();
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data[4], 5.0);
+        assert!(w.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_truncation_and_garbage() {
+        let mut b = synth();
+        b.truncate(b.len() - 2);
+        assert!(Weights::from_bytes(&b).is_err());
+        assert!(Weights::from_bytes(b"XXXXXXXX").is_err());
+        let mut b2 = synth();
+        b2.push(0); // trailing byte
+        assert!(Weights::from_bytes(&b2).is_err());
+    }
+}

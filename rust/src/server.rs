@@ -1,0 +1,115 @@
+//! Text-protocol serving front end over the coordinator.
+//!
+//! Protocol (one request per line on the input stream):
+//!
+//! ```text
+//! sst2s: w012 not good03 w044          -> "1 <p0> <p1>"
+//! mnlis: e001 e002 [SEP] e001 ant_a00  -> "2 <p0> <p1> <p2>"
+//! ```
+//!
+//! The server tokenizes with the shared artifact vocabulary, submits to
+//! the [`crate::coordinator::Coordinator`], and writes one response line
+//! per request in input order.  Designed for `stdin`/`stdout` piping and
+//! for in-process use by the examples (pass any `BufRead`/`Write`).
+
+use std::io::{BufRead, Write};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::data::TaskKind;
+use crate::tokenizer::Tokenizer;
+
+/// Serve until EOF; returns the number of requests answered.
+pub fn serve<R: BufRead, W: Write>(
+    coordinator: &Coordinator,
+    tokenizer: &Tokenizer,
+    task: TaskKind,
+    input: R,
+    mut output: W,
+) -> Result<u64> {
+    let max_len = task.max_len();
+    let mut pending = Vec::new();
+    for line in input.lines() {
+        let line = line.context("reading request line")?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (ids, segments) = encode_request(tokenizer, task, line, max_len);
+        pending.push(coordinator.submit(ids, segments)?);
+    }
+    let mut served = 0u64;
+    for rx in pending {
+        let reply = rx
+            .recv()
+            .context("engine dropped request")?
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let probs = softmax_f32(&reply.logits);
+        let cells: Vec<String> = probs.iter().map(|p| format!("{p:.4}")).collect();
+        writeln!(output, "{} {}", reply.predicted, cells.join(" "))?;
+        served += 1;
+    }
+    Ok(served)
+}
+
+/// Tokenize one request line; `[SEP]` in the text splits premise from
+/// hypothesis for pair tasks.
+pub fn encode_request(
+    tokenizer: &Tokenizer,
+    task: TaskKind,
+    line: &str,
+    max_len: usize,
+) -> (Vec<i32>, Vec<i32>) {
+    match task {
+        TaskKind::Sst2s => tokenizer.encode(line, max_len),
+        TaskKind::Mnlis => match line.split_once("[SEP]") {
+            Some((a, b)) => tokenizer.encode_pair(a.trim(), b.trim(), max_len),
+            None => tokenizer.encode(line, max_len),
+        },
+    }
+}
+
+fn softmax_f32(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let e: Vec<f32> = logits.iter().map(|&v| (v - m).exp()).collect();
+    let z: f32 = e.iter().sum();
+    e.iter().map(|&v| v / z).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tokenizer::{Tokenizer, CLS, SEP};
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_tokens(
+            ["[PAD]", "[CLS]", "[SEP]", "[UNK]", "w000", "e001", "ant_a00"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pair_request_splits_on_sep() {
+        let (ids, segs) = encode_request(&tok(), TaskKind::Mnlis, "e001 [SEP] ant_a00", 8);
+        assert_eq!(ids[..5], [CLS, 5, SEP, 6, SEP]);
+        assert_eq!(segs[..5], [0, 0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn single_request_is_one_segment() {
+        let (ids, segs) = encode_request(&tok(), TaskKind::Sst2s, "w000 w000", 8);
+        assert_eq!(ids[..4], [CLS, 4, 4, SEP]);
+        assert!(segs.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax_f32(&[0.0, 1.0, 2.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+}

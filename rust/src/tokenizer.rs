@@ -1,0 +1,175 @@
+//! Whitespace/word-id tokenizer matching `python/compile/data.py`.
+//!
+//! The synthetic vocabulary is closed (every generated token is a vocab
+//! word), so tokenization is an exact dictionary lookup with `[UNK]`
+//! fallback, plus the `[CLS]`/`[SEP]` framing and padding the encoder
+//! expects.  The vocab is loaded from `artifacts/vocab.json` so Rust and
+//! Python can never drift.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const UNK: i32 = 3;
+
+/// Closed-vocabulary tokenizer.
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    tokens: Vec<String>,
+    index: HashMap<String, i32>,
+}
+
+impl Tokenizer {
+    pub fn from_tokens(tokens: Vec<String>) -> Result<Self> {
+        if tokens.len() < 4 || tokens[0] != "[PAD]" || tokens[1] != "[CLS]" {
+            bail!("vocab must start with [PAD] [CLS] [SEP] [UNK]");
+        }
+        let index = tokens
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as i32))
+            .collect();
+        Ok(Self { tokens, index })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading vocab {}", path.display()))?;
+        let v = Value::parse(&text).context("parsing vocab.json")?;
+        let tokens = v
+            .req("tokens")
+            .as_arr()
+            .context("vocab.tokens must be an array")?
+            .iter()
+            .map(|t| t.as_str().unwrap_or("").to_string())
+            .collect();
+        Self::from_tokens(tokens)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn id(&self, token: &str) -> i32 {
+        *self.index.get(token).unwrap_or(&UNK)
+    }
+
+    pub fn token(&self, id: i32) -> &str {
+        self.tokens
+            .get(id as usize)
+            .map(|s| s.as_str())
+            .unwrap_or("[UNK]")
+    }
+
+    /// Encode a single segment: `[CLS] tokens... [SEP]`, padded/truncated
+    /// to `max_len`.  Returns (ids, segment_ids all zero).
+    pub fn encode(&self, text: &str, max_len: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = vec![CLS];
+        for tok in text.split_whitespace() {
+            if ids.len() >= max_len - 1 {
+                break;
+            }
+            ids.push(self.id(tok));
+        }
+        ids.push(SEP);
+        ids.resize(max_len, PAD);
+        let segs = vec![0; max_len];
+        (ids, segs)
+    }
+
+    /// Encode a pair: `[CLS] a [SEP] b [SEP]` with segment ids 0/1.
+    pub fn encode_pair(&self, a: &str, b: &str, max_len: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut ids = vec![CLS];
+        for tok in a.split_whitespace() {
+            if ids.len() >= max_len.saturating_sub(2) {
+                break;
+            }
+            ids.push(self.id(tok));
+        }
+        ids.push(SEP);
+        let seg0 = ids.len();
+        for tok in b.split_whitespace() {
+            if ids.len() >= max_len - 1 {
+                break;
+            }
+            ids.push(self.id(tok));
+        }
+        ids.push(SEP);
+        let used = ids.len();
+        ids.resize(max_len, PAD);
+        let mut segs = vec![0; max_len];
+        for s in segs.iter_mut().take(used).skip(seg0) {
+            *s = 1;
+        }
+        (ids, segs)
+    }
+
+    /// Decode ids back to a readable string (debugging / server echo).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .filter(|&&i| i != PAD)
+            .map(|&i| self.token(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_tokens(
+            ["[PAD]", "[CLS]", "[SEP]", "[UNK]", "w000", "good01", "not"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_frames_and_pads() {
+        let (ids, segs) = tok().encode("w000 not good01", 8);
+        assert_eq!(ids, vec![CLS, 4, 6, 5, SEP, PAD, PAD, PAD]);
+        assert_eq!(segs, vec![0; 8]);
+    }
+
+    #[test]
+    fn unknown_token_maps_to_unk() {
+        let (ids, _) = tok().encode("zzz", 4);
+        assert_eq!(ids[1], UNK);
+    }
+
+    #[test]
+    fn encode_pair_sets_segments() {
+        let (ids, segs) = tok().encode_pair("w000", "good01 not", 8);
+        assert_eq!(ids, vec![CLS, 4, SEP, 5, 6, SEP, PAD, PAD]);
+        assert_eq!(segs, vec![0, 0, 0, 1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn truncation_respects_max_len() {
+        let (ids, _) = tok().encode("w000 w000 w000 w000 w000", 4);
+        assert_eq!(ids.len(), 4);
+        assert_eq!(ids[3], SEP);
+    }
+
+    #[test]
+    fn decode_roundtrips_tokens() {
+        let t = tok();
+        let (ids, _) = t.encode("w000 good01", 6);
+        assert_eq!(t.decode(&ids), "[CLS] w000 good01 [SEP]");
+    }
+
+    #[test]
+    fn rejects_bad_vocab() {
+        assert!(Tokenizer::from_tokens(vec!["a".into()]).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! End-to-end integration: coordinator + PJRT + artifacts, plus failure
+//! injection on the load path.  Artifact-dependent cases skip loudly when
+//! `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::server;
+use hccs::tokenizer::Tokenizer;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    for base in ["artifacts", "../artifacts"] {
+        let p = PathBuf::from(base);
+        if p.join("vocab.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn tiny_ready(artifacts: &PathBuf) -> bool {
+    hccs::runtime::manifest::summary_path(artifacts, "bert-tiny", "sst2s").is_some()
+}
+
+#[test]
+fn coordinator_serves_batches_and_preserves_request_identity() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("SKIP e2e: no artifacts");
+        return;
+    };
+    if !tiny_ready(&artifacts) {
+        eprintln!("SKIP e2e: bert-tiny/sst2s summary not built yet");
+        return;
+    }
+    let (coord, handle) = Coordinator::start(CoordinatorConfig {
+        artifacts,
+        model: "bert-tiny".into(),
+        task: "sst2s".into(),
+        variant: "hccs".into(),
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        max_in_flight: None,
+    })
+    .expect("start coordinator");
+
+    // 40 requests: includes a partial final batch (deadline flush).
+    let mut generator = WorkloadGen::new(TaskKind::Sst2s, 5);
+    let examples: Vec<_> = (0..40).map(|_| generator.next_example()).collect();
+    let rxs: Vec<_> = examples
+        .iter()
+        .map(|e| coord.submit(e.ids.clone(), e.segments.clone()).unwrap())
+        .collect();
+    let mut correct = 0;
+    for (rx, e) in rxs.into_iter().zip(&examples) {
+        let reply = rx.recv().unwrap().expect("inference ok");
+        assert!(reply.predicted < 2);
+        assert_eq!(reply.logits.len(), 2);
+        assert!(reply.logits.iter().all(|v| v.is_finite()));
+        correct += (reply.predicted as i32 == e.label) as usize;
+    }
+    // The QAT model must be far above chance on its own task.
+    assert!(correct >= 24, "only {correct}/40 correct — model not serving properly");
+
+    // Submitting identical inputs twice must give identical outputs
+    // (determinism through the whole batching + PJRT stack).
+    let e = &examples[0];
+    let a = coord.infer(e.ids.clone(), e.segments.clone()).unwrap();
+    let b = coord.infer(e.ids.clone(), e.segments.clone()).unwrap();
+    assert_eq!(a.predicted, b.predicted);
+    assert_eq!(a.logits, b.logits);
+
+    coord.shutdown();
+    handle.join().unwrap();
+    assert!(coord.metrics.counter("coordinator.requests").get() >= 42);
+    assert!(coord.metrics.counter("coordinator.batches").get() >= 6);
+}
+
+#[test]
+fn text_server_round_trip() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("SKIP server test: no artifacts");
+        return;
+    };
+    if !tiny_ready(&artifacts) {
+        eprintln!("SKIP server test: summary not built yet");
+        return;
+    }
+    let tokenizer = Tokenizer::load(&artifacts.join("vocab.json")).unwrap();
+    let (coord, handle) = Coordinator::start(CoordinatorConfig {
+        artifacts,
+        model: "bert-tiny".into(),
+        task: "sst2s".into(),
+        variant: "hccs".into(),
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+        max_in_flight: None,
+    })
+    .unwrap();
+    let input = "good01 good02 w003\nnot good01 bad04 bad05\n# comment\n\n";
+    let mut out = Vec::new();
+    let n = server::serve(
+        &coord,
+        &tokenizer,
+        TaskKind::Sst2s,
+        std::io::BufReader::new(input.as_bytes()),
+        &mut out,
+    )
+    .unwrap();
+    assert_eq!(n, 2);
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2);
+    for line in &lines {
+        let mut parts = line.split_whitespace();
+        let pred: usize = parts.next().unwrap().parse().unwrap();
+        assert!(pred < 2);
+        let probs: Vec<f32> = parts.map(|p| p.parse().unwrap()).collect();
+        assert_eq!(probs.len(), 2);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+    }
+    coord.shutdown();
+    handle.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn missing_artifacts_fail_loudly_not_silently() {
+    let err = Coordinator::start(CoordinatorConfig {
+        artifacts: PathBuf::from("/nonexistent"),
+        model: "bert-tiny".into(),
+        task: "sst2s".into(),
+        variant: "hccs".into(),
+        policy: BatchPolicy::default(),
+        max_in_flight: None,
+    })
+    .err()
+    .expect("must not start without artifacts");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bert-tiny"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_weights_rejected_at_load() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("SKIP corrupt-weights test: no artifacts");
+        return;
+    };
+    let Some(spath) = hccs::runtime::manifest::summary_path(&artifacts, "bert-tiny", "sst2s")
+    else {
+        eprintln!("SKIP corrupt-weights test: summary not built yet");
+        return;
+    };
+    // Copy artifacts view into a temp dir with truncated weights.
+    let tmp = std::env::temp_dir().join(format!("hccs_corrupt_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    let summary = hccs::runtime::PairSummary::load(&spath).unwrap();
+    let mani = summary.manifest("hccs", 8).unwrap();
+    std::fs::copy(artifacts.join(&mani.hlo), tmp.join(&mani.hlo)).unwrap();
+    let wbytes = std::fs::read(artifacts.join(&mani.weights)).unwrap();
+    std::fs::write(tmp.join(&mani.weights), &wbytes[..wbytes.len() / 2]).unwrap();
+    let rt = std::rc::Rc::new(hccs::runtime::Runtime::cpu().unwrap());
+    let err = hccs::runtime::ModelRunner::load(rt, &tmp, mani.clone()).err();
+    assert!(err.is_some(), "truncated weights must not load");
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn wrong_shape_inputs_rejected_at_run() {
+    let Some(artifacts) = artifacts_dir() else {
+        eprintln!("SKIP shape test: no artifacts");
+        return;
+    };
+    let Some(spath) = hccs::runtime::manifest::summary_path(&artifacts, "bert-tiny", "sst2s")
+    else {
+        eprintln!("SKIP shape test: summary not built yet");
+        return;
+    };
+    let summary = hccs::runtime::PairSummary::load(&spath).unwrap();
+    let mani = summary.manifest("hccs", 1).unwrap().clone();
+    let rt = std::rc::Rc::new(hccs::runtime::Runtime::cpu().unwrap());
+    let runner = hccs::runtime::ModelRunner::load(rt, &artifacts, mani).unwrap();
+    assert!(runner.run(&[1, 2, 3], &[0, 0, 0]).is_err(), "short input must error");
+}

@@ -1,0 +1,279 @@
+//! Property-based tests (proptest_lite) on the coordinator and kernel
+//! invariants called out in DESIGN.md §7.
+
+use std::time::{Duration, Instant};
+
+use hccs::coordinator::{BatchPolicy, DynamicBatcher};
+use hccs::hccs::{hccs_row, HccsParams, OutputPath, Reciprocal, T_I16, T_I8};
+use hccs::proptest_lite::{check, shrink_int, Config};
+use hccs::rng::Xoshiro256;
+
+/// Draw a feasible θ uniformly from the Eq. (11) region for length n.
+fn feasible_theta(rng: &mut Xoshiro256, n: usize) -> HccsParams {
+    loop {
+        let dmax = rng.range_i64(1, 127) as i32;
+        let s = rng.range_i64(0, 16) as i32;
+        if let Some((lo, hi)) = HccsParams::feasible_b_band(s, dmax, n) {
+            let b = rng.range_i64(lo as i64, hi as i64) as i32;
+            return HccsParams::checked(b, s, dmax, n).unwrap();
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct RowCase {
+    x: Vec<i8>,
+    theta: HccsParams,
+}
+
+fn gen_row(rng: &mut Xoshiro256) -> RowCase {
+    let n = *[2usize, 3, 8, 32, 64, 128, 200, 256]
+        .get(rng.below(8) as usize)
+        .unwrap();
+    let theta = feasible_theta(rng, n);
+    let x = (0..n).map(|_| rng.i8()).collect();
+    RowCase { x, theta }
+}
+
+fn shrink_row(c: &RowCase) -> Vec<RowCase> {
+    let mut out = Vec::new();
+    if c.x.len() > 2 {
+        let half = c.x[..c.x.len() / 2].to_vec();
+        // Re-validate θ for the shorter row; keep only if still feasible.
+        if c.theta.validate(half.len()).is_ok() {
+            out.push(RowCase { x: half, theta: c.theta });
+        }
+    }
+    let mut zeroed = c.clone();
+    if zeroed.x.iter().any(|&v| v != 0) {
+        for v in zeroed.x.iter_mut() {
+            *v /= 2;
+        }
+        out.push(zeroed);
+    }
+    out
+}
+
+/// For every feasible θ and every int8 row: all four HCCS modes produce
+/// non-negative, bounded, rank-preserving output whose sum is close to T.
+#[test]
+fn prop_hccs_simplex_and_order() {
+    check(
+        "hccs-simplex-order",
+        Config { cases: 400, ..Default::default() },
+        gen_row,
+        shrink_row,
+        |case| {
+            let n = case.x.len();
+            for (op, rc, t) in [
+                (OutputPath::I16, Reciprocal::Div, T_I16),
+                (OutputPath::I16, Reciprocal::Clb, T_I16),
+                (OutputPath::I8, Reciprocal::Div, T_I8),
+                (OutputPath::I8, Reciprocal::Clb, T_I8),
+            ] {
+                let p = hccs_row(&case.x, &case.theta, op, rc);
+                if p.iter().any(|&v| v < 0) {
+                    return Err(format!("negative output under {op:?}/{rc:?}"));
+                }
+                if p.iter().any(|&v| v > t) {
+                    return Err(format!("output exceeds T={t} under {op:?}/{rc:?}"));
+                }
+                // Rank preservation: x_i > x_j ⇒ p_i >= p_j.
+                for i in 0..n {
+                    for j in 0..n {
+                        if case.x[i] > case.x[j] && p[i] < p[j] {
+                            return Err(format!(
+                                "rank violated under {op:?}/{rc:?}: x[{i}]={} > x[{j}]={} but p {} < {}",
+                                case.x[i], case.x[j], p[i], p[j]
+                            ));
+                        }
+                    }
+                }
+                // Divide paths keep Σp̂ within (T - Z, T] (truncation only).
+                if rc == Reciprocal::Div && op == OutputPath::I16 {
+                    let sum: i64 = p.iter().map(|&v| v as i64).sum();
+                    if sum > t as i64 {
+                        return Err(format!("i16 sum {sum} > T"));
+                    }
+                    if sum * 2 < t as i64 {
+                        return Err(format!("i16 sum {sum} < T/2 — over-lossy"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Equal inputs must receive equal probabilities (lane symmetry).
+#[test]
+fn prop_hccs_symmetry() {
+    check(
+        "hccs-symmetry",
+        Config { cases: 300, ..Default::default() },
+        gen_row,
+        shrink_row,
+        |case| {
+            let p = hccs_row(&case.x, &case.theta, OutputPath::I16, Reciprocal::Div);
+            for i in 0..case.x.len() {
+                for j in (i + 1)..case.x.len() {
+                    if case.x[i] == case.x[j] && p[i] != p[j] {
+                        return Err(format!("x[{i}]==x[{j}] but p {} != {}", p[i], p[j]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shifting every logit by a constant must not change the output
+/// (max-centering invariance) as long as values stay in int8.
+#[test]
+fn prop_hccs_shift_invariance() {
+    check(
+        "hccs-shift-invariance",
+        Config { cases: 300, ..Default::default() },
+        |rng| {
+            let mut c = gen_row(rng);
+            // Confine logits so a shift of ±16 cannot clip.
+            for v in c.x.iter_mut() {
+                *v = (*v / 2).clamp(-100, 100);
+            }
+            (c, rng.range_i64(-16, 16) as i8)
+        },
+        |_| vec![],
+        |(case, shift)| {
+            let shifted: Vec<i8> = case.x.iter().map(|&v| v + shift).collect();
+            let a = hccs_row(&case.x, &case.theta, OutputPath::I16, Reciprocal::Div);
+            let b = hccs_row(&shifted, &case.theta, OutputPath::I16, Reciprocal::Div);
+            if a != b {
+                return Err("output changed under constant logit shift".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct BatchScript {
+    max_batch: usize,
+    /// (request id, offset_us since start, poll_after) events.
+    events: Vec<(u64, u64, bool)>,
+}
+
+fn gen_script(rng: &mut Xoshiro256) -> BatchScript {
+    let max_batch = 1 + rng.below(12) as usize;
+    let n = 1 + rng.below(64);
+    let mut t = 0u64;
+    let events = (0..n)
+        .map(|i| {
+            t += rng.below(4000);
+            (i, t, rng.below(3) == 0)
+        })
+        .collect();
+    BatchScript { max_batch, events }
+}
+
+/// Conservation + FIFO + size-bound under arbitrary push/poll schedules.
+#[test]
+fn prop_batcher_conserves_and_orders() {
+    check(
+        "batcher-conservation",
+        Config { cases: 300, ..Default::default() },
+        gen_script,
+        |s| {
+            let mut out = Vec::new();
+            if s.events.len() > 1 {
+                out.push(BatchScript {
+                    max_batch: s.max_batch,
+                    events: s.events[..s.events.len() / 2].to_vec(),
+                });
+            }
+            if s.max_batch > 1 {
+                out.push(BatchScript { max_batch: s.max_batch / 2 + 1, events: s.events.clone() });
+            }
+            out
+        },
+        |script| {
+            let policy = BatchPolicy {
+                max_batch: script.max_batch,
+                max_wait: Duration::from_micros(2000),
+            };
+            let mut b = DynamicBatcher::new(policy);
+            let t0 = Instant::now();
+            let mut flushed: Vec<u64> = Vec::new();
+            let mut collect = |batch: hccs::coordinator::Batch<u64>| {
+                if batch.items.len() > script.max_batch {
+                    return Err(format!("batch of {} > max {}", batch.items.len(), script.max_batch));
+                }
+                if batch.items.is_empty() {
+                    return Err("empty batch".into());
+                }
+                flushed.extend(batch.items.iter().map(|q| q.payload));
+                Ok(())
+            };
+            for &(id, off, poll) in &script.events {
+                let now = t0 + Duration::from_micros(off);
+                if let Some(batch) = b.push(id, now) {
+                    collect(batch)?;
+                }
+                if poll {
+                    if let Some(batch) = b.poll(now + Duration::from_micros(100)) {
+                        collect(batch)?;
+                    }
+                }
+            }
+            for batch in b.drain() {
+                collect(batch)?;
+            }
+            // Conservation: every id exactly once, FIFO order.
+            let want: Vec<u64> = script.events.iter().map(|e| e.0).collect();
+            if flushed != want {
+                return Err(format!("order/conservation violated: {flushed:?} != {want:?}"));
+            }
+            if !b.is_empty() {
+                return Err("requests left in queue after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Deadline guarantee: once `poll` is called at/after head+max_wait, the
+/// head request must flush.
+#[test]
+fn prop_batcher_deadline() {
+    check(
+        "batcher-deadline",
+        Config { cases: 200, ..Default::default() },
+        |rng| (1 + rng.below(7) as usize, rng.below(10_000)),
+        |&(mb, w)| {
+            shrink_int(w as i64)
+                .into_iter()
+                .filter(|&v| v >= 0)
+                .map(|v| (mb, v as u64))
+                .collect()
+        },
+        |&(max_batch, wait_us)| {
+            let policy =
+                BatchPolicy { max_batch, max_wait: Duration::from_micros(wait_us) };
+            let mut b = DynamicBatcher::new(policy);
+            let t0 = Instant::now();
+            if b.push(7u64, t0).is_some() {
+                // max_batch == 1: size flush is immediate; fine.
+                return Ok(());
+            }
+            let at_deadline = t0 + Duration::from_micros(wait_us);
+            match b.poll(at_deadline) {
+                Some(batch) if batch.items[0].payload == 7 => Ok(()),
+                Some(_) => Err("wrong request flushed".into()),
+                None => Err(format!("deadline {wait_us}us not honored")),
+            }
+        },
+    );
+}
