@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo run --release --example aie_throughput`
 
-use anyhow::Result;
+use hccs::error::Result;
 
 use hccs::aie_sim::device::{Device, DeviceKind};
 use hccs::aie_sim::kernels::KernelKind;

@@ -11,7 +11,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use hccs::error::Result;
 
 use hccs::coordinator::HeadParamStore;
 use hccs::hccs::calibrate::{calibrate_rows, calibrate_scale, quantize_i8};

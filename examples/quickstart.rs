@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use hccs::error::{Context, Result};
 
 use hccs::hccs::stats::{kl, normalize_phat, softmax};
 use hccs::hccs::{hccs_row, HccsParams, OutputPath, Reciprocal};

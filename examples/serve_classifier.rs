@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use hccs::error::{anyhow, Context, Result};
 
 use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
@@ -22,7 +22,7 @@ const KNOWN: &[&str] =
     &["artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "wait-ms=", "seed="];
 
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), KNOWN).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let args = Args::parse(std::env::args().skip(1), KNOWN).map_err(|e| anyhow!("{e}"))?;
     let artifacts = PathBuf::from(args.get_or("artifacts", hccs::ARTIFACTS_DIR));
     let model = args.get_or("model", "bert-tiny").to_string();
     let task_name = args.get_or("task", "sst2s").to_string();
@@ -64,7 +64,7 @@ fn main() -> Result<()> {
         let reply = rx
             .recv()
             .context("engine dropped request")?
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            .map_err(|e| anyhow!("{e}"))?;
         correct += (reply.predicted as i32 == *want) as usize;
         latencies_us.push(reply.latency.as_micros() as u64);
     }

@@ -1,0 +1,112 @@
+//! Bench target for the **batched HCCS engine** (`hccs_batch_into`):
+//! scalar row-at-a-time vs batched tile throughput across
+//! `n ∈ {16, 64, 128, 256}` and `B ∈ {1, 8, 32, 128}`, for the paper's
+//! two headline modes (i16+div, i8+CLB).
+//!
+//! Prints one table row per (mode, n, B) with rows/s for both paths and
+//! the batched/scalar speedup, then a machine-readable JSON document
+//! (see EXPERIMENTS.md §batch_kernel for the schema and §Perf for how
+//! these numbers are read).
+
+use hccs::benchkit::{bench, sink};
+use hccs::hccs::{hccs_batch_into, hccs_row_into, HccsParams, OutputPath, Reciprocal};
+use hccs::json::Value;
+use hccs::report::Table;
+use hccs::rng::Xoshiro256;
+
+const NS: [usize; 4] = [16, 64, 128, 256];
+const BS: [usize; 4] = [1, 8, 32, 128];
+
+fn theta(n: usize) -> HccsParams {
+    // (S=1, Dmax=16) keeps the Eq. (11) band non-empty out to n=256.
+    let (lo, hi) = HccsParams::feasible_b_band(1, 16, n).expect("band");
+    HccsParams::checked((lo + hi) / 2, 1, 16, n).unwrap()
+}
+
+fn main() {
+    let mut rng = Xoshiro256::new(23);
+    let modes: [(&str, OutputPath, Reciprocal); 2] = [
+        ("i16_div", OutputPath::I16, Reciprocal::Div),
+        ("i8_clb", OutputPath::I8, Reciprocal::Clb),
+    ];
+
+    let mut table = Table::new(
+        "batched vs scalar HCCS kernel (rows/s, this machine)",
+        &["mode", "n", "B", "scalar rows/s", "batched rows/s", "speedup"],
+    );
+    let mut cases: Vec<Value> = Vec::new();
+
+    for (mode, op, rc) in modes {
+        for n in NS {
+            let p = theta(n);
+            for b in BS {
+                let x: Vec<i8> = (0..b * n).map(|_| rng.i8()).collect();
+                let mut out = vec![0i32; b * n];
+
+                // Scalar path: one row-kernel call per row, exactly what
+                // the pre-batching serving layers did.
+                let scalar = bench(&format!("scalar {mode} n={n} B={b}"), || {
+                    let x = sink(&x);
+                    for r in 0..b {
+                        let (lo, hi) = (r * n, (r + 1) * n);
+                        hccs_row_into(&x[lo..hi], &p, op, rc, &mut out[lo..hi]);
+                    }
+                });
+                // Batched path: the whole B x n tile in one call.
+                let batched = bench(&format!("batched {mode} n={n} B={b}"), || {
+                    hccs_batch_into(sink(&x), b, n, &p, op, rc, &mut out);
+                });
+
+                // Bit-exactness spot check alongside the measurement.
+                let want: Vec<i32> = {
+                    let mut w = vec![0i32; b * n];
+                    for r in 0..b {
+                        let (lo, hi) = (r * n, (r + 1) * n);
+                        hccs_row_into(&x[lo..hi], &p, op, rc, &mut w[lo..hi]);
+                    }
+                    w
+                };
+                let mut got = vec![0i32; b * n];
+                hccs_batch_into(&x, b, n, &p, op, rc, &mut got);
+                assert_eq!(got, want, "batched output diverged at {mode} n={n} B={b}");
+
+                let s_rps = scalar.per_second(b as f64);
+                let t_rps = batched.per_second(b as f64);
+                let speedup = t_rps / s_rps;
+                table.row(&[
+                    mode.to_string(),
+                    n.to_string(),
+                    b.to_string(),
+                    format!("{s_rps:.3e}"),
+                    format!("{t_rps:.3e}"),
+                    format!("{speedup:.2}x"),
+                ]);
+
+                let mut case = std::collections::BTreeMap::new();
+                case.insert("mode".to_string(), Value::from(mode));
+                case.insert("n".to_string(), Value::from(n as i64));
+                case.insert("batch".to_string(), Value::from(b as i64));
+                case.insert("scalar_rows_per_s".to_string(), Value::from(s_rps));
+                case.insert("batched_rows_per_s".to_string(), Value::from(t_rps));
+                case.insert("speedup".to_string(), Value::from(speedup));
+                case.insert(
+                    "scalar_median_ns".to_string(),
+                    Value::from(scalar.median.as_nanos() as i64),
+                );
+                case.insert(
+                    "batched_median_ns".to_string(),
+                    Value::from(batched.median.as_nanos() as i64),
+                );
+                cases.push(Value::Obj(case));
+            }
+        }
+    }
+
+    println!("{}", table.render());
+
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("bench".to_string(), Value::from("batch_kernel"));
+    doc.insert("units".to_string(), Value::from("rows_per_second"));
+    doc.insert("cases".to_string(), Value::Arr(cases));
+    println!("{}", Value::Obj(doc).to_string_pretty());
+}

@@ -1,4 +1,8 @@
-// Perf experiment: three candidate implementations of the HCCS row kernel.
+//! Perf experiment behind the row kernel's design choice: three
+//! candidate implementations of the five HCCS stages — (A) the current
+//! two-pass structure, (B) a scores-buffer three-pass variant, (C) a
+//! per-row 256-entry LUT gather.  See EXPERIMENTS.md §Perf for how to
+//! read the results.
 use hccs::benchkit::{bench, sink};
 use hccs::hccs::{hccs_row_into, HccsParams, OutputPath, Reciprocal};
 use hccs::rng::Xoshiro256;

@@ -15,6 +15,12 @@
 //! Table III throughput grid at 1.25 GHz; the schedule *structure* (which
 //! stages exist, what scales per-iteration vs per-row, which instructions
 //! each generation has) is what produces the paper's relative results.
+//!
+//! Schedules also model the **batched tile regime** (paper §IV-D): the
+//! pipeline fill/drain stages are marked `tile_amortized`, so
+//! [`super::tile::TileSim::tile_cycles`] charges them once per resident
+//! `B x n` tile rather than once per row — cycle counts per tile, not
+//! per row, mirroring the Rust runtime's `hccs_batch_into` engine.
 
 use super::device::{Device, DeviceKind};
 use super::schedule::{Schedule, Stage, StageCost};
@@ -62,11 +68,18 @@ impl KernelKind {
 }
 
 fn row(name: &'static str, c: u64) -> Stage {
-    Stage { name, cost: StageCost::PerRow(c) }
+    Stage { name, cost: StageCost::PerRow(c), tile_amortized: false }
+}
+
+/// Per-row setup cost that a batched `B x n` tile pays only once:
+/// pipeline fill/drain (a resident tile streams rows back-to-back
+/// through the primed pipeline, so fill is per-tile, not per-row).
+fn fill(name: &'static str, c: u64) -> Stage {
+    Stage { name, cost: StageCost::PerRow(c), tile_amortized: true }
 }
 
 fn iter(name: &'static str, c: u64) -> Stage {
-    Stage { name, cost: StageCost::PerIter(c) }
+    Stage { name, cost: StageCost::PerIter(c), tile_amortized: false }
 }
 
 /// Build the schedule for `kernel` on `device`.
@@ -97,7 +110,7 @@ fn bf16_ref(device: &Device) -> Schedule {
     ];
     if device.native_bf16_exp {
         // AIE-MLv2: exp issues vectorized; modest pipeline fill.
-        stages.push(row("pipeline fill/drain", 33));
+        stages.push(fill("pipeline fill/drain", 33));
         stages.push(iter("load+max-sub", 1));
         stages.push(iter("bf16 exp (native)", 1));
         stages.push(iter("sum+scale+store", 2));
@@ -113,9 +126,9 @@ fn bf16_ref(device: &Device) -> Schedule {
         // AIE-ML: 16-bit-granularity LUT gathers, 4 parallel ports, deep
         // access pipeline whose fill dominates short rows (this is why the
         // VEK280 baseline is so slow at n=32 — paper §V-D).
-        stages.push(row("LUT exp pipeline fill", 170));
+        stages.push(fill("LUT exp pipeline fill", 170));
         stages.push(row("LUT bank-conflict stalls", 80));
-        stages.push(row("pipeline fill/drain", 12));
+        stages.push(fill("pipeline fill/drain", 12));
         stages.push(iter("load+max-sub", 4));
         stages.push(iter("exp LUT gather (16 lanes / 4 ports)", 16));
         stages.push(iter("sum+scale+store", 8));
@@ -140,11 +153,11 @@ fn hccs_int(device: &Device, out_i16: bool, div: bool) -> Schedule {
     if div {
         stages.push(row("scalar reciprocal (int div)", device.scalar_div_cycles));
         stages.push(row("rho broadcast", 3));
-        stages.push(row("pipeline fill/drain", if out_i16 { 18 } else { 9 }));
+        stages.push(fill("pipeline fill/drain", if out_i16 { 18 } else { 9 }));
     } else {
         stages.push(row("leading-bit detect (CLB)", device.clb_cycles));
         stages.push(row("rho broadcast", 1));
-        stages.push(row("pipeline fill/drain", if out_i16 { 12 } else { 3 }));
+        stages.push(fill("pipeline fill/drain", if out_i16 { 12 } else { 3 }));
     }
     // Streaming passes: load, vector max, unsigned distance+clamp, int8
     // MAC (affine score), normalize multiply (+shift/pack for uint8 out).
@@ -210,5 +223,30 @@ mod tests {
         let v2 = schedule(KernelKind::Bf16Ref, &Device::new(DeviceKind::AieMlV2));
         assert!(ml.fixed_cycles() > v2.fixed_cycles());
         assert!(ml.iter_cycles() > v2.iter_cycles());
+    }
+
+    #[test]
+    fn every_kernel_amortizes_some_fill_in_tiles() {
+        let d = Device::new(DeviceKind::AieMl);
+        for kind in KernelKind::ALL {
+            let s = schedule(kind, &d);
+            let amort = s.tile_amortized_cycles();
+            assert!(amort > 0, "{kind:?} has no tile-amortized fill");
+            assert!(amort < s.fixed_cycles(), "{kind:?} amortizes everything");
+        }
+    }
+
+    #[test]
+    fn reciprocal_stays_per_row_in_batched_schedule() {
+        // The scalar divide depends on each row's Z, so it must remain a
+        // per-row (non-amortized) cost even in the tile regime.
+        let d = Device::new(DeviceKind::AieMl);
+        let s = schedule(KernelKind::HccsI16Div, &d);
+        let div_stage = s
+            .stages
+            .iter()
+            .find(|st| st.name.contains("scalar reciprocal"))
+            .expect("div schedule must contain the scalar reciprocal");
+        assert!(!div_stage.tile_amortized);
     }
 }

@@ -33,4 +33,4 @@ pub mod trace;
 
 pub use device::{Device, DeviceKind};
 pub use kernels::KernelKind;
-pub use tile::{cycles_per_row, throughput_eps, TileSim};
+pub use tile::{batched_throughput_eps, cycles_per_row, cycles_per_tile, throughput_eps, TileSim};

@@ -15,6 +15,12 @@ pub enum StageCost {
 pub struct Stage {
     pub name: &'static str,
     pub cost: StageCost,
+    /// Whether a batched tile amortizes this per-row cost: pipeline
+    /// fill/drain style setup is paid once for a resident `B x n` tile
+    /// (the rows stream through a primed pipeline), while genuine
+    /// per-row work (reductions, the scalar reciprocal) is not.
+    /// Meaningless for [`StageCost::PerIter`] stages.
+    pub tile_amortized: bool,
 }
 
 /// A complete kernel schedule for one device generation.
@@ -60,6 +66,18 @@ impl Schedule {
     pub fn iters(&self, n: usize) -> u64 {
         (n as u64).div_ceil(self.lanes as u64)
     }
+
+    /// Per-row fixed cycles a batched tile pays only once (the
+    /// `tile_amortized` subset of [`Self::fixed_cycles`]).
+    pub fn tile_amortized_cycles(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| match s.cost {
+                StageCost::PerRow(c) if s.tile_amortized => c,
+                _ => 0,
+            })
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -72,9 +90,9 @@ mod tests {
             kernel_name: "t",
             lanes: 32,
             stages: vec![
-                Stage { name: "a", cost: StageCost::PerRow(10) },
-                Stage { name: "b", cost: StageCost::PerIter(7) },
-                Stage { name: "c", cost: StageCost::PerRow(5) },
+                Stage { name: "a", cost: StageCost::PerRow(10), tile_amortized: false },
+                Stage { name: "b", cost: StageCost::PerIter(7), tile_amortized: false },
+                Stage { name: "c", cost: StageCost::PerRow(5), tile_amortized: true },
             ],
             sat_after_iters: 2,
             sat_extra: 3,
@@ -82,6 +100,7 @@ mod tests {
         };
         assert_eq!(s.fixed_cycles(), 15);
         assert_eq!(s.iter_cycles(), 7);
+        assert_eq!(s.tile_amortized_cycles(), 5);
         assert_eq!(s.iters(32), 1);
         assert_eq!(s.iters(33), 2);
         assert_eq!(s.iters(128), 4);

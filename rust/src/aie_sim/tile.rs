@@ -65,9 +65,27 @@ impl TileSim {
         out
     }
 
-    /// Feed `rows` rows of length `n` through the tile.
+    /// Cycles to process a batched `rows x n` tile in one kernel
+    /// invocation: fill/drain stages (marked `tile_amortized` in the
+    /// schedule) are paid once per tile, everything else per row.
+    /// `tile_cycles(1, n) == row_cycles(n)` by construction.
+    pub fn tile_cycles(&self, rows: u64, n: usize) -> u64 {
+        assert!(rows >= 1, "empty tile");
+        let amortized = self.sched.tile_amortized_cycles();
+        amortized + rows * (self.row_cycles(n) - amortized)
+    }
+
+    /// Feed `rows` rows of length `n` through the tile row-at-a-time.
     pub fn process(&mut self, rows: u64, n: usize) {
         self.cycles += rows * self.row_cycles(n);
+        self.rows += rows;
+        self.elements += rows * n as u64;
+    }
+
+    /// Feed one batched `rows x n` tile (single kernel invocation, fill
+    /// amortized across the tile) through the simulator.
+    pub fn process_tile(&mut self, rows: u64, n: usize) {
+        self.cycles += self.tile_cycles(rows, n);
         self.rows += rows;
         self.elements += rows * n as u64;
     }
@@ -100,6 +118,18 @@ pub fn cycles_per_row(kernel: KernelKind, device: &Device, n: usize) -> u64 {
 /// Steady-state single-tile throughput in elements/second.
 pub fn throughput_eps(kernel: KernelKind, device: &Device, n: usize) -> f64 {
     n as f64 * device.freq_ghz * 1e9 / cycles_per_row(kernel, device, n) as f64
+}
+
+/// Cycles to process a batched `rows x n` tile (convenience).
+pub fn cycles_per_tile(kernel: KernelKind, device: &Device, rows: u64, n: usize) -> u64 {
+    TileSim::new(*device, kernel).tile_cycles(rows, n)
+}
+
+/// Throughput in elements/second when rows arrive as batched `rows x n`
+/// tiles instead of one row at a time.
+pub fn batched_throughput_eps(kernel: KernelKind, device: &Device, rows: u64, n: usize) -> f64 {
+    (rows * n as u64) as f64 * device.freq_ghz * 1e9
+        / cycles_per_tile(kernel, device, rows, n) as f64
 }
 
 #[cfg(test)]
@@ -187,6 +217,48 @@ mod tests {
                 assert_eq!(total, sim.row_cycles(n), "{kind:?} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn tile_cycles_amortize_fill_but_not_row_work() {
+        for kind in KernelKind::ALL {
+            let sim = TileSim::new(ml(), kind);
+            for n in [32usize, 64, 128] {
+                let row = sim.row_cycles(n);
+                // A 1-row tile is exactly one row.
+                assert_eq!(sim.tile_cycles(1, n), row, "{kind:?} n={n}");
+                // Batching strictly beats row-at-a-time, but can never
+                // beat the per-row streaming floor.
+                let b = 32u64;
+                let tile = sim.tile_cycles(b, n);
+                assert!(tile < b * row, "{kind:?} n={n}: no amortization");
+                let amort = sim.schedule().tile_amortized_cycles();
+                assert_eq!(tile, b * (row - amort) + amort, "{kind:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_throughput_monotone_in_batch() {
+        let d = v2();
+        for kind in [KernelKind::HccsI16Div, KernelKind::HccsI8Clb] {
+            let mut prev = throughput_eps(kind, &d, 64);
+            for b in [1u64, 8, 32, 128] {
+                let t = batched_throughput_eps(kind, &d, b, 64);
+                assert!(t >= prev * 0.999, "{kind:?} B={b}: {t} < {prev}");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn process_tile_accumulates_tile_cycles() {
+        let mut sim = TileSim::new(ml(), KernelKind::HccsI8Clb);
+        sim.process_tile(32, 64);
+        sim.process_tile(1, 64);
+        let want = sim.tile_cycles(32, 64) + sim.tile_cycles(1, 64);
+        assert_eq!(sim.total_cycles(), want);
+        assert!(sim.throughput_eps() > 0.0);
     }
 
     #[test]

@@ -11,15 +11,26 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value {1:?} for --{0}: {2}")]
     Invalid(String, String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown flag --{name}"),
+            CliError::MissingValue(name) => write!(f, "flag --{name} requires a value"),
+            CliError::Invalid(name, value, why) => {
+                write!(f, "invalid value {value:?} for --{name}: {why}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse `argv` (without the program name). `known` lists accepted

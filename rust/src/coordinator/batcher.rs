@@ -38,6 +38,10 @@ pub enum FlushReason {
     Drain,
 }
 
+/// A flushed batch: FIFO-ordered items plus the trigger.  Consumers
+/// (`engine::batching_event_loop` callbacks) walk `items` directly —
+/// the `arrived` stamps feed the queue-latency histograms, and the
+/// payloads are copied in order into the engine's contiguous tile.
 #[derive(Debug)]
 pub struct Batch<T> {
     pub items: Vec<QueuedRequest<T>>,

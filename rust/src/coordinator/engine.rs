@@ -1,12 +1,20 @@
-//! The serving engine: request channel → dynamic batcher → executor
-//! thread owning the PJRT executable → reply channels.
+//! The serving engines: request channel → dynamic batcher → executor
+//! thread → reply channels.
 //!
-//! The PJRT wrapper types hold raw pointers (`!Send`), so the executable
-//! lives entirely inside the executor thread; the public
-//! [`Coordinator`] handle is `Clone + Send` and communicates over
-//! std::sync::mpsc.  Partial batches are padded with a repeat of the last
-//! row (the executable's batch dimension is fixed at AOT time) and the
-//! padding rows' outputs are discarded.
+//! Two engines share the batching substrate:
+//!
+//! * [`Coordinator`] — full-model inference through the PJRT executable.
+//!   The PJRT wrapper types hold raw pointers (`!Send`), so the
+//!   executable lives entirely inside the executor thread; the public
+//!   handle is `Clone + Send` and communicates over std::sync::mpsc.
+//!   Partial batches are padded with a repeat of the last row (the
+//!   executable's batch dimension is fixed at AOT time) and the padding
+//!   rows' outputs are discarded.
+//! * [`ScoreEngine`] — raw HCCS softmax scoring.  Flushed batches are
+//!   assembled into one contiguous `B x n` int8 tile and handed straight
+//!   to the batched kernel ([`crate::hccs::hccs_batch_into`]), so the
+//!   serving layer pays one kernel dispatch per batch instead of one per
+//!   row.  No padding: the batched kernel takes any row count.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -15,8 +23,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{anyhow, Context, Result};
+use crate::hccs::{hccs_batch_into, HccsParams, OutputPath, Reciprocal};
 use crate::metrics::Registry;
 use crate::runtime::{manifest::summary_path, ModelRunner, PairSummary, Runtime};
 
@@ -48,9 +56,63 @@ struct Envelope {
     _permit: Option<super::admission::Permit>,
 }
 
-enum Msg {
-    Infer(Envelope),
+/// Message to an executor thread: one unit of work, or stop.
+enum EngineMsg<T> {
+    Work(T),
     Shutdown,
+}
+
+/// How long an idle executor sleeps when no deadline is pending.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(3600);
+
+/// Acquire an admission permit (`Ok(None)` when unbounded), shedding
+/// with an "overloaded" error at capacity.  Shared by both engine
+/// handles so backpressure behaviour cannot drift between them.
+fn try_permit(
+    admission: &Option<super::admission::AdmissionControl>,
+    unit: &str,
+) -> Result<Option<super::admission::Permit>> {
+    match admission {
+        None => Ok(None),
+        Some(ac) => ac
+            .try_admit()
+            .map(Some)
+            .map_err(|_| anyhow!("overloaded: {} {unit} in flight", ac.in_flight())),
+    }
+}
+
+/// The shared executor event loop: receive → batch → flush on size or
+/// deadline → drain on shutdown/disconnect (no request is dropped).
+/// Both engines run this with their own `run` callback.
+fn batching_event_loop<T>(
+    policy: BatchPolicy,
+    rx: Receiver<EngineMsg<T>>,
+    req_ctr: &crate::metrics::Counter,
+    mut run: impl FnMut(Vec<QueuedRequest<T>>),
+) {
+    let mut batcher: DynamicBatcher<T> = DynamicBatcher::new(policy);
+    loop {
+        let now = Instant::now();
+        let timeout = batcher.next_deadline_in(now).unwrap_or(IDLE_TIMEOUT);
+        match rx.recv_timeout(timeout) {
+            Ok(EngineMsg::Work(item)) => {
+                req_ctr.inc();
+                if let Some(batch) = batcher.push(item, Instant::now()) {
+                    run(batch.items);
+                }
+            }
+            Ok(EngineMsg::Shutdown) => break,
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    run(batch.items);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    for batch in batcher.drain() {
+        run(batch.items);
+    }
 }
 
 /// Engine configuration.
@@ -70,7 +132,7 @@ pub struct CoordinatorConfig {
 /// Clonable, thread-safe handle to the serving engine.
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: Sender<Msg>,
+    tx: Sender<EngineMsg<Envelope>>,
     next_id: Arc<AtomicU64>,
     admission: Option<super::admission::AdmissionControl>,
     pub metrics: Arc<Registry>,
@@ -79,7 +141,7 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start the executor thread and wait until the model is loaded.
     pub fn start(cfg: CoordinatorConfig) -> Result<(Coordinator, JoinHandle<()>)> {
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let (tx, rx) = mpsc::channel::<EngineMsg<Envelope>>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
         let metrics = Arc::new(Registry::default());
         let m = metrics.clone();
@@ -106,17 +168,11 @@ impl Coordinator {
         ids: Vec<i32>,
         segments: Vec<i32>,
     ) -> Result<Receiver<Result<InferReply, String>>> {
-        let permit = match &self.admission {
-            None => None,
-            Some(ac) => Some(
-                ac.try_admit()
-                    .map_err(|_| anyhow!("overloaded: {} requests in flight", ac.in_flight()))?,
-            ),
-        };
+        let permit = try_permit(&self.admission, "requests")?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer(Envelope {
+            .send(EngineMsg::Work(Envelope {
                 req: InferRequest { id, ids, segments },
                 reply: reply_tx,
                 _permit: permit,
@@ -135,13 +191,13 @@ impl Coordinator {
 
     /// Ask the engine to drain and stop.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.tx.send(EngineMsg::Shutdown);
     }
 }
 
 fn executor_main(
     cfg: CoordinatorConfig,
-    rx: Receiver<Msg>,
+    rx: Receiver<EngineMsg<Envelope>>,
     ready: Sender<Result<(), String>>,
     metrics: Arc<Registry>,
 ) {
@@ -170,39 +226,16 @@ fn executor_main(
         }
     };
 
-    let mut batcher: DynamicBatcher<Envelope> = DynamicBatcher::new(cfg.policy);
     let queue_hist = metrics.histogram("coordinator.queue_us");
     let exec_hist = metrics.histogram("coordinator.execute_us");
     let batch_ctr = metrics.counter("coordinator.batches");
     let req_ctr = metrics.counter("coordinator.requests");
     let pad_ctr = metrics.counter("coordinator.padding_rows");
 
-    loop {
-        let now = Instant::now();
-        let timeout = batcher.next_deadline_in(now).unwrap_or(Duration::from_secs(3600));
-        match rx.recv_timeout(timeout) {
-            Ok(Msg::Infer(env)) => {
-                req_ctr.inc();
-                if let Some(batch) = batcher.push(env, Instant::now()) {
-                    run_batch(&runner, batch.items, &queue_hist, &exec_hist, &pad_ctr);
-                    batch_ctr.inc();
-                }
-            }
-            Ok(Msg::Shutdown) => break,
-            Err(RecvTimeoutError::Timeout) => {
-                if let Some(batch) = batcher.poll(Instant::now()) {
-                    run_batch(&runner, batch.items, &queue_hist, &exec_hist, &pad_ctr);
-                    batch_ctr.inc();
-                }
-            }
-            Err(RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    // Drain on shutdown: no request is dropped.
-    for batch in batcher.drain() {
-        run_batch(&runner, batch.items, &queue_hist, &exec_hist, &pad_ctr);
+    batching_event_loop(cfg.policy, rx, &req_ctr, |items| {
+        run_batch(&runner, items, &queue_hist, &exec_hist, &pad_ctr);
         batch_ctr.inc();
-    }
+    });
 }
 
 fn run_batch(
@@ -261,5 +294,225 @@ fn run_batch(
                 let _ = q.payload.reply.send(Err(msg.clone()));
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ScoreEngine: batched HCCS softmax scoring
+// ---------------------------------------------------------------------------
+
+/// Reply for one scoring request.
+#[derive(Clone, Debug)]
+pub struct ScoreReply {
+    /// Integer p̂ row (length n, semantics per the configured mode).
+    pub phat: Vec<i32>,
+    /// Queue + execute latency as seen by the engine.
+    pub latency: Duration,
+}
+
+/// Configuration for the batched scoring engine.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreConfig {
+    /// Row length every request must match (the softmax n).
+    pub n: usize,
+    /// Shared surrogate parameters θ (validated against `n` at start).
+    pub params: HccsParams,
+    pub out_path: OutputPath,
+    pub recip: Reciprocal,
+    pub policy: BatchPolicy,
+    /// Backpressure, as in [`CoordinatorConfig::max_in_flight`].
+    pub max_in_flight: Option<usize>,
+}
+
+struct ScoreEnvelope {
+    x: Vec<i8>,
+    reply: Sender<Result<ScoreReply, String>>,
+    _permit: Option<super::admission::Permit>,
+}
+
+/// Clonable handle to the batched HCCS scoring engine.
+///
+/// The executor thread owns a reusable tile buffer; every flushed batch
+/// is copied into it contiguously and normalized with a single
+/// [`hccs_batch_into`] call — the coordinator-level analogue of the AIE
+/// tile streaming a resident batch (paper §IV-D).
+#[derive(Clone)]
+pub struct ScoreEngine {
+    tx: Sender<EngineMsg<ScoreEnvelope>>,
+    n: usize,
+    admission: Option<super::admission::AdmissionControl>,
+    pub metrics: Arc<Registry>,
+}
+
+impl ScoreEngine {
+    /// Validate θ and start the executor thread.
+    pub fn start(cfg: ScoreConfig) -> Result<(ScoreEngine, JoinHandle<()>)> {
+        cfg.params
+            .validate(cfg.n)
+            .map_err(|e| anyhow!("infeasible θ for n={}: {e}", cfg.n))?;
+        let (tx, rx) = mpsc::channel::<EngineMsg<ScoreEnvelope>>();
+        let metrics = Arc::new(Registry::default());
+        let m = metrics.clone();
+        let admission = cfg.max_in_flight.map(super::admission::AdmissionControl::new);
+        let handle = std::thread::Builder::new()
+            .name("hccs-scorer".into())
+            .spawn(move || score_executor_main(cfg, rx, m))
+            .context("spawning score executor")?;
+        Ok((ScoreEngine { tx, n: cfg.n, admission, metrics }, handle))
+    }
+
+    /// Rejected-by-backpressure count (0 when unbounded).
+    pub fn shed_count(&self) -> u64 {
+        self.admission.as_ref().map_or(0, |a| a.rejected())
+    }
+
+    /// Submit one int8 logit row; returns the reply channel.
+    pub fn submit(&self, x: Vec<i8>) -> Result<Receiver<Result<ScoreReply, String>>> {
+        if x.len() != self.n {
+            return Err(anyhow!("row length {} != engine n {}", x.len(), self.n));
+        }
+        let permit = try_permit(&self.admission, "rows")?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(EngineMsg::Work(ScoreEnvelope { x, reply: reply_tx, _permit: permit }))
+            .map_err(|_| anyhow!("score engine is down"))?;
+        Ok(reply_rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn score(&self, x: Vec<i8>) -> Result<ScoreReply> {
+        let rx = self.submit(x)?;
+        rx.recv()
+            .context("score engine dropped the request")?
+            .map_err(|e| anyhow!("{e}"))
+    }
+
+    /// Ask the engine to drain and stop.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+    }
+}
+
+fn score_executor_main(
+    cfg: ScoreConfig,
+    rx: Receiver<EngineMsg<ScoreEnvelope>>,
+    metrics: Arc<Registry>,
+) {
+    // Reused across batches: the contiguous input tile and its output.
+    let mut tile: Vec<i8> = Vec::with_capacity(cfg.policy.max_batch * cfg.n);
+    let mut phat: Vec<i32> = vec![0; cfg.policy.max_batch * cfg.n];
+    let queue_hist = metrics.histogram("scorer.queue_us");
+    let exec_hist = metrics.histogram("scorer.execute_us");
+    let batch_ctr = metrics.counter("scorer.batches");
+    let req_ctr = metrics.counter("scorer.requests");
+    let row_ctr = metrics.counter("scorer.rows_scored");
+
+    batching_event_loop(cfg.policy, rx, &req_ctr, |items| {
+        let rows = items.len();
+        debug_assert!(rows >= 1 && rows <= cfg.policy.max_batch);
+        let started = Instant::now();
+        tile.clear();
+        for q in &items {
+            queue_hist.record(started.duration_since(q.arrived));
+            tile.extend_from_slice(&q.payload.x);
+        }
+        let out = &mut phat[..rows * cfg.n];
+        hccs_batch_into(&tile, rows, cfg.n, &cfg.params, cfg.out_path, cfg.recip, out);
+        exec_hist.record(started.elapsed());
+        batch_ctr.inc();
+        row_ctr.add(rows as u64);
+        for (i, q) in items.into_iter().enumerate() {
+            let _ = q.payload.reply.send(Ok(ScoreReply {
+                phat: out[i * cfg.n..(i + 1) * cfg.n].to_vec(),
+                latency: q.arrived.elapsed(),
+            }));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hccs::hccs_row;
+    use crate::rng::Xoshiro256;
+
+    fn cfg(n: usize, max_batch: usize, wait_ms: u64) -> ScoreConfig {
+        ScoreConfig {
+            n,
+            params: HccsParams::checked(300, 4, 64, n).unwrap(),
+            out_path: OutputPath::I16,
+            recip: Reciprocal::Div,
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            max_in_flight: None,
+        }
+    }
+
+    #[test]
+    fn batched_scoring_is_bit_exact_with_row_kernel() {
+        let n = 64usize;
+        let c = cfg(n, 8, 1);
+        let (engine, handle) = ScoreEngine::start(c).unwrap();
+        let mut rng = Xoshiro256::new(77);
+        // 21 rows: two full size-flushes plus a partial deadline flush.
+        let rows: Vec<Vec<i8>> = (0..21)
+            .map(|_| (0..n).map(|_| rng.i8()).collect())
+            .collect();
+        let rxs: Vec<_> = rows.iter().map(|x| engine.submit(x.clone()).unwrap()).collect();
+        for (rx, x) in rxs.into_iter().zip(&rows) {
+            let reply = rx.recv().unwrap().expect("scoring ok");
+            let want = hccs_row(x, &c.params, c.out_path, c.recip);
+            assert_eq!(reply.phat, want);
+        }
+        engine.shutdown();
+        handle.join().unwrap();
+        assert_eq!(engine.metrics.counter("scorer.rows_scored").get(), 21);
+        assert!(engine.metrics.counter("scorer.batches").get() >= 3);
+    }
+
+    #[test]
+    fn rejects_wrong_row_length_and_infeasible_theta() {
+        let (engine, handle) = ScoreEngine::start(cfg(64, 4, 1)).unwrap();
+        assert!(engine.submit(vec![0i8; 32]).is_err());
+        engine.shutdown();
+        handle.join().unwrap();
+
+        let mut bad = cfg(64, 4, 1);
+        bad.params = HccsParams::new(100_000, 4, 64);
+        let err = ScoreEngine::start(bad).err().expect("infeasible θ must not start");
+        assert!(format!("{err:#}").contains("infeasible"), "{err:#}");
+    }
+
+    #[test]
+    fn drains_pending_rows_on_shutdown() {
+        // Huge deadline + large batch: nothing flushes until shutdown.
+        let c = cfg(16, 64, 10_000);
+        let (engine, handle) = ScoreEngine::start(c).unwrap();
+        let rxs: Vec<_> = (0..5)
+            .map(|i| engine.submit(vec![i as i8; 16]).unwrap())
+            .collect();
+        engine.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok(), "request dropped on shutdown");
+        }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn backpressure_sheds_beyond_max_in_flight() {
+        let mut c = cfg(16, 128, 10_000);
+        c.max_in_flight = Some(4);
+        let (engine, handle) = ScoreEngine::start(c).unwrap();
+        // Nothing drains (deadline far away), so the 5th submit must shed.
+        let held: Vec<_> = (0..4).map(|_| engine.submit(vec![0i8; 16]).unwrap()).collect();
+        assert!(engine.submit(vec![0i8; 16]).is_err());
+        assert_eq!(engine.shed_count(), 1);
+        engine.shutdown();
+        for rx in held {
+            let _ = rx.recv();
+        }
+        handle.join().unwrap();
     }
 }

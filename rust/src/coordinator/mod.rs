@@ -10,6 +10,12 @@
 //! channels.  Head-calibration state ([`state::HeadParamStore`]) is the
 //! coordinator-managed analogue of the AIE tiles' local-memory parameter
 //! tables.
+//!
+//! Alongside the full-model [`engine::Coordinator`], the
+//! [`engine::ScoreEngine`] serves raw HCCS scoring: each flushed batch is
+//! assembled into one contiguous `B x n` tile and handed straight to the
+//! batched kernel (`crate::hccs::hccs_batch_into`), one dispatch per
+//! batch instead of one per row.
 
 pub mod admission;
 pub mod batcher;
@@ -18,5 +24,7 @@ pub mod state;
 
 pub use admission::{AdmissionControl, Permit, RejectReason};
 pub use batcher::{Batch, BatchPolicy, DynamicBatcher, QueuedRequest};
-pub use engine::{Coordinator, CoordinatorConfig, InferReply, InferRequest};
+pub use engine::{
+    Coordinator, CoordinatorConfig, InferReply, InferRequest, ScoreConfig, ScoreEngine, ScoreReply,
+};
 pub use state::{HeadParamStore, ModelCalib};

@@ -8,7 +8,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::hccs::HccsParams;
 use crate::json::Value;

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 const MAGIC: &[u8; 8] = b"HCCSDS01";
 

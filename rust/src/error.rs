@@ -1,0 +1,198 @@
+//! Minimal `anyhow`-compatible error handling (crates.io is unreachable
+//! in this image, so `anyhow`/`thiserror` are unavailable).
+//!
+//! Provides the subset of the `anyhow` API this crate uses with the same
+//! semantics:
+//!
+//! * [`Error`] — an opaque, context-carrying error value; notably it does
+//!   **not** implement `std::error::Error`, which is what allows the
+//!   blanket `From<E: std::error::Error>` conversion (the `?` operator on
+//!   any standard error type), exactly like `anyhow::Error`.
+//! * [`Result<T>`] — alias with the error type defaulted to [`Error`].
+//! * [`Context`] — `.context(...)` / `.with_context(...)` on `Result` and
+//!   `Option`, layering human-readable context onto the cause chain.
+//! * [`anyhow!`] / [`bail!`] — ad-hoc error construction macros.
+//!
+//! Display behaviour matches `anyhow`: `{}` prints the outermost message
+//! only, `{:#}` prints the whole chain separated by `": "`.
+
+use std::fmt;
+
+/// An opaque error: an ordered chain of messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Layer a new outermost context message onto the chain.
+    pub fn push_context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, `outer: inner: root`.
+            for (i, m) in self.chain.iter().enumerate() {
+                if i > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Mirror anyhow's Debug: message plus a "Caused by" trail, so
+        // `.unwrap()`/`.expect()` failures stay readable.
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for m in &self.chain[1..] {
+                write!(f, "\n    {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Blanket conversion from any standard error (enables `?`), capturing
+/// its `source()` chain.  Sound for the same reason as in `anyhow`:
+/// [`Error`] itself does not implement `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context layering for `Result` and `Option`, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+// Let callers write `use crate::error::{anyhow, bail}` even though
+// `#[macro_export]` hoists the macros to the crate root.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("loading weights")
+            .err()
+            .unwrap();
+        assert_eq!(format!("{e}"), "loading weights");
+        assert_eq!(format!("{e:#}"), "loading weights: file gone");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err::<(), _>(io_err())?;
+            Ok(())
+        }
+        let e = inner().err().unwrap();
+        assert_eq!(format!("{e:#}"), "file gone");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("missing value").err().unwrap();
+        assert_eq!(format!("{e}"), "missing value");
+        let e = anyhow!("bad {} at {}", "thing", 7);
+        assert_eq!(format!("{e}"), "bad thing at 7");
+        fn bails() -> Result<()> {
+            bail!("stop: {}", 42);
+        }
+        assert_eq!(format!("{:#}", bails().err().unwrap()), "stop: 42");
+    }
+
+    #[test]
+    fn with_context_layers_outermost_first() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading")
+            .context("starting engine")
+            .err()
+            .unwrap();
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["starting engine", "reading", "file gone"]);
+        assert_eq!(e.root_cause(), "file gone");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+}

@@ -1,5 +1,10 @@
 //! Fused integer attention: QK^T (int8 MAC) → rescale → HCCS → p̂·V.
 //!
+//! Scores whole attention matrices per head: the full `(r, c)` logit
+//! tile is built, rescaled, and normalized through one
+//! [`super::batch::hccs_batch_into`] call rather than looping the row
+//! kernel `r` times — bit-exact with the row-at-a-time composition.
+//!
 //! Mirrors the fused Pallas kernel (`python/compile/kernels/hccs.py::
 //! hccs_attention`) with identical integer semantics, so the two are
 //! golden-comparable; used by the Rust-side ablation harnesses and as the
@@ -9,7 +14,8 @@
 //! rational factor `num/den` applied with floor division, matching the
 //! Pallas kernel's compile-time constants.
 
-use super::kernel::{hccs_row_into, OutputPath, Reciprocal};
+use super::batch::hccs_batch_into;
+use super::kernel::{OutputPath, Reciprocal};
 use super::params::HccsParams;
 
 /// One attention head's integer tensors, row-major.
@@ -50,7 +56,11 @@ impl<'a> AttentionInputs<'a> {
     }
 }
 
-/// Scratch buffers reused across rows (allocation-free hot path).
+/// Scratch buffers reused across calls (allocation-free hot path).
+/// `xq`/`phat` hold the whole `(r, c)` head matrix so the five HCCS
+/// stages run once per head through the batched engine instead of once
+/// per row; `logits` stays one row wide — each QK^T row is rescaled
+/// into the tile while still cache-hot.
 #[derive(Default)]
 pub struct AttentionScratch {
     logits: Vec<i32>,
@@ -85,12 +95,14 @@ pub fn hccs_attention(
     params.validate(inp.c).map_err(|e| e.to_string())?;
 
     scratch.logits.resize(inp.c, 0);
-    scratch.xq.resize(inp.c, 0);
-    scratch.phat.resize(inp.c, 0);
+    scratch.xq.resize(inp.r * inp.c, 0);
+    scratch.phat.resize(inp.r * inp.c, 0);
 
-    for row in 0..inp.r {
+    // Stages 1-2 per row: QK^T in i32 (int8 MAC accumulation), then
+    // rescale to the int8 grid (floor division like jnp `//`) into the
+    // row's slice of the xq tile while the logits are still cache-hot.
+    for (row, xrow) in scratch.xq.chunks_exact_mut(inp.c).enumerate() {
         let qrow = &inp.q[row * inp.dk..(row + 1) * inp.dk];
-        // Stage 1: QK^T row in i32 (int8 MAC accumulation).
         for (j, lj) in scratch.logits.iter_mut().enumerate() {
             let krow = &inp.k[j * inp.dk..(j + 1) * inp.dk];
             let mut acc = 0i32;
@@ -99,17 +111,20 @@ pub fn hccs_attention(
             }
             *lj = acc;
         }
-        // Stage 2: rescale to the int8 grid (floor division like jnp `//`).
-        for (x, &l) in scratch.xq.iter_mut().zip(&scratch.logits) {
+        for (x, &l) in xrow.iter_mut().zip(&scratch.logits) {
             let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
             *x = scaled.clamp(-128, 127) as i8;
         }
-        // Stages 3-7: the five HCCS stages.
-        hccs_row_into(&scratch.xq, params, out_path, recip, &mut scratch.phat);
-        // Stage 8: p̂ @ V in i32.
+    }
+    // Stages 3-7: one batched HCCS call over the head's full (r, c)
+    // matrix — all rows of a head share θ, so this is the batched
+    // engine's home case.
+    hccs_batch_into(&scratch.xq, inp.r, inp.c, params, out_path, recip, &mut scratch.phat);
+    // Stage 8: p̂ @ V in i32, row by row.
+    for (row, prow) in scratch.phat.chunks_exact(inp.c).enumerate() {
         let orow = &mut out[row * inp.dv..(row + 1) * inp.dv];
         orow.fill(0);
-        for (j, &p) in scratch.phat.iter().enumerate() {
+        for (j, &p) in prow.iter().enumerate() {
             if p == 0 {
                 continue; // sparsity shortcut: clamped tails often hit 0 on the i8 path
             }

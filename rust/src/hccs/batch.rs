@@ -1,0 +1,273 @@
+//! Batched multi-row HCCS engine: the five-stage kernel over a
+//! contiguous `rows x cols` int8 logits tile in one call.
+//!
+//! [`super::kernel::hccs_row_into`] is the scalar reference: correct and
+//! tight, but the serving layers around it (attention heads, the
+//! coordinator's dynamic batcher) naturally produce whole tiles of rows
+//! sharing one θ — a head's full attention matrix, or a flushed batch of
+//! scoring requests.  Calling the row kernel in a loop pays per-row call
+//! and loop-setup overhead on every row and leaves the stage-5 reciprocal
+//! divisions serialized behind each row's pass.  This module processes
+//! the whole tile with a single pass structure instead (the AIE tile
+//! mapping of paper §IV-D, where a resident tile streams many rows
+//! through a primed pipeline):
+//!
+//! 1. per-row max via chunked, 8-wide unrolled reductions;
+//! 2. fused distance/clamp/affine-score/sum in 8-wide i32 lanes (manual
+//!    unrolling so LLVM autovectorizes the int8 MAC structure to
+//!    SSE/NEON);
+//! 3. a vectorized stage-5 normalization that first computes *all* row
+//!    reciprocals in one tight loop (pipelining the scalar divides that
+//!    the row-at-a-time path serializes) and then scales the tile.
+//!
+//! **Bit-exactness:** every row of [`hccs_batch_into`] is the same
+//! integer computation, in the same per-element order, as
+//! `hccs_row_into`; only loop structure differs.  (The stage-4 sum uses
+//! eight lane accumulators, which is exact because i32 addition is
+//! associative modulo 2³² and under feasible [`HccsParams`] cannot
+//! overflow at all.)  The equivalence is property-tested across all four
+//! `OutputPath` × `Reciprocal` modes in `tests/proptests.rs` and unit
+//! tested below, so the paper's golden vectors hold for both entry
+//! points.
+
+use super::kernel::{floor_log2, OutputPath, Reciprocal};
+use super::params::{HccsParams, INV_SHIFT, OUT_SHIFT, T_I16, T_I8};
+
+/// Stage 1: row max with eight independent accumulators (breaks the
+/// serial max dependency chain so the reduction vectorizes).
+#[inline]
+fn row_max_unrolled(row: &[i8]) -> i32 {
+    let mut chunks = row.chunks_exact(8);
+    let mut m = [i8::MIN; 8];
+    for c in chunks.by_ref() {
+        for l in 0..8 {
+            m[l] = m[l].max(c[l]);
+        }
+    }
+    let mut acc = i8::MIN;
+    for l in m {
+        acc = acc.max(l);
+    }
+    for &v in chunks.remainder() {
+        acc = acc.max(v);
+    }
+    acc as i32
+}
+
+/// Stages 2-4 fused for one row: distance, clamp, affine score into
+/// `out`, returning the score sum Z.  Eight-wide unrolled body.
+#[inline]
+fn fused_scores(row: &[i8], out: &mut [i32], m: i32, p: &HccsParams) -> i32 {
+    debug_assert_eq!(row.len(), out.len());
+    let (b, s, dmax) = (p.b, p.s, p.dmax);
+    let mut zacc = [0i32; 8];
+    let mut oc = out.chunks_exact_mut(8);
+    let mut xc = row.chunks_exact(8);
+    for (o8, x8) in oc.by_ref().zip(xc.by_ref()) {
+        for l in 0..8 {
+            let delta = (m - x8[l] as i32).min(dmax); // stage 2
+            let si = b - s * delta; // stage 3
+            debug_assert!(si >= 0, "infeasible params produced negative score");
+            o8[l] = si;
+            zacc[l] += si; // stage 4, lane accumulator
+        }
+    }
+    let mut z: i32 = zacc.iter().sum();
+    for (o, &xi) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        let delta = (m - xi as i32).min(dmax);
+        let si = b - s * delta;
+        debug_assert!(si >= 0, "infeasible params produced negative score");
+        *o = si;
+        z += si;
+    }
+    z
+}
+
+/// Row-sum scratch held on the stack for the common tile heights
+/// (attention matrices and batcher flushes are well under 64 rows), so
+/// the kernel stays allocation-free on the hot paths; taller tiles
+/// spill to one heap allocation.
+const Z_INLINE_ROWS: usize = 64;
+
+/// Run HCCS over a contiguous row-major `rows x cols` tile of int8
+/// logits sharing one θ, writing p̂ into `out` (same shape).
+///
+/// Bit-exact with calling [`super::kernel::hccs_row_into`] on each row;
+/// see the module docs for why the batched structure is faster.
+/// Allocation-free for tiles up to `Z_INLINE_ROWS` (64) rows.
+pub fn hccs_batch_into(
+    x: &[i8],
+    rows: usize,
+    cols: usize,
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    out: &mut [i32],
+) {
+    assert!(rows > 0, "empty tile (rows = 0)");
+    assert!(cols > 0, "empty row");
+    assert_eq!(x.len(), rows * cols, "x is not a rows x cols tile");
+    assert_eq!(out.len(), x.len(), "output length mismatch");
+
+    // Stages 1-4 over the whole tile; z holds one stage-4 sum per row.
+    let mut z_inline = [0i32; Z_INLINE_ROWS];
+    let mut z_spill: Vec<i32>;
+    let z: &mut [i32] = if rows <= Z_INLINE_ROWS {
+        &mut z_inline[..rows]
+    } else {
+        z_spill = vec![0i32; rows];
+        &mut z_spill
+    };
+    for ((xr, or), zr) in x
+        .chunks_exact(cols)
+        .zip(out.chunks_exact_mut(cols))
+        .zip(z.iter_mut())
+    {
+        let m = row_max_unrolled(xr);
+        *zr = fused_scores(xr, or, m, p);
+        debug_assert!(*zr > 0);
+    }
+
+    // Stage 5: reciprocal normalization across the tile.  The divide
+    // variants turn z into ρ in one tight loop first — B back-to-back
+    // scalar divisions pipeline, where the row-at-a-time path pays the
+    // full divide latency between rows.
+    match (out_path, recip) {
+        (OutputPath::I16, Reciprocal::Div) => {
+            for zr in z.iter_mut() {
+                *zr = T_I16 / *zr;
+            }
+            for (or, &rho) in out.chunks_exact_mut(cols).zip(z.iter()) {
+                for o in or {
+                    *o *= rho;
+                }
+            }
+        }
+        (OutputPath::I16, Reciprocal::Clb) => {
+            for (or, &zr) in out.chunks_exact_mut(cols).zip(z.iter()) {
+                let k = floor_log2(zr);
+                for o in or {
+                    *o = ((*o * T_I16) >> k).min(T_I16);
+                }
+            }
+        }
+        (OutputPath::I8, Reciprocal::Div) => {
+            for zr in z.iter_mut() {
+                *zr = (T_I8 << INV_SHIFT) / *zr;
+            }
+            for (or, &rho8) in out.chunks_exact_mut(cols).zip(z.iter()) {
+                for o in or {
+                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
+                }
+            }
+        }
+        (OutputPath::I8, Reciprocal::Clb) => {
+            for (or, &zr) in out.chunks_exact_mut(cols).zip(z.iter()) {
+                let rho8 = (T_I8 << INV_SHIFT) >> floor_log2(zr);
+                for o in or {
+                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
+                }
+            }
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`hccs_batch_into`].
+pub fn hccs_batch(
+    x: &[i8],
+    rows: usize,
+    cols: usize,
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+) -> Vec<i32> {
+    let mut out = vec![0i32; x.len()];
+    hccs_batch_into(x, rows, cols, p, out_path, recip, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::kernel::hccs_row_into;
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    const MODES: [(OutputPath, Reciprocal); 4] = [
+        (OutputPath::I16, Reciprocal::Div),
+        (OutputPath::I16, Reciprocal::Clb),
+        (OutputPath::I8, Reciprocal::Div),
+        (OutputPath::I8, Reciprocal::Clb),
+    ];
+
+    fn rowwise(
+        x: &[i8],
+        rows: usize,
+        cols: usize,
+        p: &HccsParams,
+        op: OutputPath,
+        rc: Reciprocal,
+    ) -> Vec<i32> {
+        let mut out = vec![0i32; x.len()];
+        for r in 0..rows {
+            let (lo, hi) = (r * cols, (r + 1) * cols);
+            hccs_row_into(&x[lo..hi], p, op, rc, &mut out[lo..hi]);
+        }
+        out
+    }
+
+    #[test]
+    fn batch_matches_rowwise_all_modes() {
+        let mut rng = Xoshiro256::new(17);
+        // Includes ragged (non-multiple-of-8) widths and a single-column
+        // edge case.
+        let shapes = [(1usize, 64usize), (3, 1), (4, 7), (8, 32), (5, 33), (32, 64), (2, 200)];
+        for (rows, cols) in shapes {
+            let (lo, hi) = HccsParams::feasible_b_band(1, 16, cols).expect("band");
+            let p = HccsParams::checked((lo + hi) / 2, 1, 16, cols).unwrap();
+            let x: Vec<i8> = (0..rows * cols).map(|_| rng.i8()).collect();
+            for (op, rc) in MODES {
+                let got = hccs_batch(&x, rows, cols, &p, op, rc);
+                let want = rowwise(&x, rows, cols, &p, op, rc);
+                assert_eq!(got, want, "rows={rows} cols={cols} {op:?}/{rc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_row_matches_row_kernel_exactly() {
+        let mut rng = Xoshiro256::new(9);
+        let n = 64;
+        let p = HccsParams::checked(300, 4, 64, n).unwrap();
+        let x: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+        for (op, rc) in MODES {
+            let mut want = vec![0i32; n];
+            hccs_row_into(&x, &p, op, rc, &mut want);
+            assert_eq!(hccs_batch(&x, 1, n, &p, op, rc), want, "{op:?}/{rc:?}");
+        }
+    }
+
+    #[test]
+    fn unrolled_max_matches_naive() {
+        let mut rng = Xoshiro256::new(3);
+        for n in [1usize, 2, 7, 8, 9, 15, 16, 17, 64, 127] {
+            let x: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
+            let naive = *x.iter().max().unwrap() as i32;
+            assert_eq!(row_max_unrolled(&x), naive, "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rows x cols")]
+    fn rejects_non_tile_input() {
+        let p = HccsParams::new(300, 4, 64);
+        let mut out = vec![0i32; 10];
+        hccs_batch_into(&[0i8; 10], 3, 4, &p, OutputPath::I16, Reciprocal::Div, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty tile")]
+    fn rejects_zero_rows() {
+        let p = HccsParams::new(300, 4, 64);
+        hccs_batch_into(&[], 0, 4, &p, OutputPath::I16, Reciprocal::Div, &mut []);
+    }
+}

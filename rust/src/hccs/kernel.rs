@@ -135,6 +135,11 @@ pub fn hccs_row(x: &[i8], p: &HccsParams, out_path: OutputPath, recip: Reciproca
 ///
 /// `x` is row-major `(rows, n)`; `params` has one θ per row (the AIE
 /// "per-head parameters loaded by row's head identifier" layout).
+/// Consecutive rows sharing a θ — the common serving layout, where all
+/// query rows of one head carry that head's parameters — are grouped into
+/// one [`super::batch::hccs_batch_into`] tile call, so uniform runs get
+/// the batched engine's amortization while mixed-θ inputs degrade
+/// gracefully to per-row tiles.  Bit-exact with the row-at-a-time loop.
 pub fn hccs_rows(
     x: &[i8],
     n: usize,
@@ -146,8 +151,22 @@ pub fn hccs_rows(
     let rows = x.len() / n;
     assert_eq!(rows, params.len(), "one θ per row required");
     let mut out = vec![0i32; x.len()];
-    for (r, p) in params.iter().enumerate() {
-        hccs_row_into(&x[r * n..(r + 1) * n], p, out_path, recip, &mut out[r * n..(r + 1) * n]);
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let mut r1 = r0 + 1;
+        while r1 < rows && params[r1] == params[r0] {
+            r1 += 1;
+        }
+        super::batch::hccs_batch_into(
+            &x[r0 * n..r1 * n],
+            r1 - r0,
+            n,
+            &params[r0],
+            out_path,
+            recip,
+            &mut out[r0 * n..r1 * n],
+        );
+        r0 = r1;
     }
     out
 }

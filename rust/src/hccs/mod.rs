@@ -8,14 +8,17 @@
 //! Submodules:
 //! * [`params`]    — θ_h = (B, S, Dmax) with the Eq. (11) feasibility region
 //! * [`kernel`]    — the five-stage row kernel, both output paths, div/CLB
+//! * [`batch`]     — the batched multi-row engine over contiguous tiles
 //! * [`calibrate`] — offline grid-search calibration from logit samples
 //! * [`stats`]     — softmax / KL utilities shared by calibration & reports
 
 pub mod attention;
+pub mod batch;
 pub mod calibrate;
 pub mod kernel;
 pub mod params;
 pub mod stats;
 
+pub use batch::{hccs_batch, hccs_batch_into};
 pub use kernel::{hccs_row, hccs_row_into, hccs_rows, OutputPath, Reciprocal};
 pub use params::{HccsParams, ParamError, T_I16, T_I8};

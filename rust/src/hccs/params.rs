@@ -33,17 +33,30 @@ pub struct HccsParams {
 }
 
 /// Violation of the §IV-C feasibility region.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ParamError {
-    #[error("Dmax={0} outside [1, 127]")]
     DmaxRange(i32),
-    #[error("S={0} negative")]
     NegativeSlope(i32),
-    #[error("score floor B - S*Dmax = {0} below {1} (row length {2})")]
     FloorTooLow(i32, i32, usize),
-    #[error("n*B = {0} exceeds 32767 (row length {1})")]
     RowSumOverflow(i64, usize),
 }
+
+impl std::fmt::Display for ParamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParamError::DmaxRange(d) => write!(f, "Dmax={d} outside [1, 127]"),
+            ParamError::NegativeSlope(s) => write!(f, "S={s} negative"),
+            ParamError::FloorTooLow(floor, need, n) => {
+                write!(f, "score floor B - S*Dmax = {floor} below {need} (row length {n})")
+            }
+            ParamError::RowSumOverflow(nb, n) => {
+                write!(f, "n*B = {nb} exceeds 32767 (row length {n})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ParamError {}
 
 impl HccsParams {
     /// Construct without validation (tests & deserialization).

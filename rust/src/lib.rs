@@ -30,12 +30,30 @@
 //!
 //! See `examples/` for the end-to-end serving driver and the experiment
 //! harnesses that regenerate every table and figure of the paper.
+//!
+//! ## Documentation map
+//!
+//! * `README.md` — paper summary, three-layer architecture, quickstart.
+//! * `docs/ARCHITECTURE.md` — module responsibilities and the request
+//!   lifecycle from admission through batched kernel dispatch.
+//! * `EXPERIMENTS.md` — what each bench in `rust/benches/` regenerates,
+//!   how to run it, and the §Perf scalar-vs-batched methodology.
+//!
+//! Module inventory (each links its own docs):
+//! [`hccs`] (integer kernel + batched engine + calibration),
+//! [`aie_sim`] (AIE cycle model), [`coordinator`] (serving engines),
+//! [`runtime`] (artifact loading / PJRT), [`server`] (text protocol),
+//! [`data`] / [`tokenizer`] (workloads), [`experiments`] / [`report`] /
+//! [`benchkit`] / [`metrics`] (harnesses), [`error`] / [`json`] /
+//! [`rng`] / [`proptest_lite`] / [`cli`] / [`xla_stub`] (offline
+//! stand-ins for anyhow / serde / rand / proptest / clap / xla).
 
 pub mod aie_sim;
 pub mod benchkit;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod experiments;
 pub mod hccs;
 pub mod json;
@@ -46,6 +64,7 @@ pub mod rng;
 pub mod runtime;
 pub mod server;
 pub mod tokenizer;
+pub mod xla_stub;
 
 /// Default artifacts directory (relative to the repo root / CWD).
 pub const ARTIFACTS_DIR: &str = "artifacts";

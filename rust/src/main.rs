@@ -11,7 +11,7 @@
 use std::io::{stdin, stdout, BufWriter};
 use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+use hccs::error::{anyhow, bail, Context, Result};
 
 use hccs::aie_sim::device::{Device, DeviceKind};
 use hccs::aie_sim::kernels::KernelKind;
@@ -32,7 +32,7 @@ const KNOWN: &[&str] = &[
 ];
 
 fn main() -> Result<()> {
-    let args = Args::from_env(KNOWN).map_err(|e| anyhow::anyhow!("{e}\n{}", usage()))?;
+    let args = Args::from_env(KNOWN).map_err(|e| anyhow!("{e}\n{}", usage()))?;
     if args.flag("help") || args.positional().is_empty() {
         println!("{}", usage());
         return Ok(());

@@ -6,7 +6,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::json::Value;
 

@@ -19,7 +19,10 @@ pub mod weights;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{anyhow, bail, Context, Result};
+// The real `xla` crate is unavailable offline; see the stub's module docs
+// for how to swap it back in.
+use crate::xla_stub as xla;
 
 pub use manifest::{ModelManifest, PairSummary};
 pub use weights::{Tensor, Weights};

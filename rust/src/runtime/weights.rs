@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 const MAGIC: &[u8; 8] = b"HCCSTW01";
 

@@ -14,7 +14,7 @@
 
 use std::io::{BufRead, Write};
 
-use anyhow::{Context, Result};
+use crate::error::{anyhow, Context, Result};
 
 use crate::coordinator::Coordinator;
 use crate::data::TaskKind;
@@ -44,7 +44,7 @@ pub fn serve<R: BufRead, W: Write>(
         let reply = rx
             .recv()
             .context("engine dropped request")?
-            .map_err(|e| anyhow::anyhow!("{e}"))?;
+            .map_err(|e| anyhow!("{e}"))?;
         let probs = softmax_f32(&reply.logits);
         let cells: Vec<String> = probs.iter().map(|p| format!("{p:.4}")).collect();
         writeln!(output, "{} {}", reply.predicted, cells.join(" "))?;

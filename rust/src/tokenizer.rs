@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 use crate::json::Value;
 

@@ -4,7 +4,9 @@
 use std::time::{Duration, Instant};
 
 use hccs::coordinator::{BatchPolicy, DynamicBatcher};
-use hccs::hccs::{hccs_row, HccsParams, OutputPath, Reciprocal, T_I16, T_I8};
+use hccs::hccs::{
+    hccs_batch, hccs_row, hccs_row_into, HccsParams, OutputPath, Reciprocal, T_I16, T_I8,
+};
 use hccs::proptest_lite::{check, shrink_int, Config};
 use hccs::rng::Xoshiro256;
 
@@ -149,6 +151,103 @@ fn prop_hccs_shift_invariance() {
             let b = hccs_row(&shifted, &case.theta, OutputPath::I16, Reciprocal::Div);
             if a != b {
                 return Err("output changed under constant logit shift".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batched kernel engine
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct TileCase {
+    x: Vec<i8>,
+    rows: usize,
+    cols: usize,
+    theta: HccsParams,
+}
+
+fn gen_tile(rng: &mut Xoshiro256) -> TileCase {
+    // Widths cover single-column, sub-lane, ragged (non-multiple-of-8)
+    // and wide rows; row counts cover the single-row edge case and the
+    // ragged last tile a deadline flush produces.
+    let cols = *[1usize, 2, 5, 8, 13, 32, 64, 100, 128]
+        .get(rng.below(9) as usize)
+        .unwrap();
+    let rows = 1 + rng.below(33) as usize;
+    let theta = feasible_theta(rng, cols);
+    let x = (0..rows * cols).map(|_| rng.i8()).collect();
+    TileCase { x, rows, cols, theta }
+}
+
+fn shrink_tile(c: &TileCase) -> Vec<TileCase> {
+    let mut out = Vec::new();
+    if c.rows > 1 {
+        // Halve the row count (θ stays feasible: cols is unchanged).
+        let rows = c.rows / 2;
+        out.push(TileCase {
+            x: c.x[..rows * c.cols].to_vec(),
+            rows,
+            cols: c.cols,
+            theta: c.theta,
+        });
+    }
+    let mut damped = c.clone();
+    if damped.x.iter().any(|&v| v != 0) {
+        for v in damped.x.iter_mut() {
+            *v /= 2;
+        }
+        out.push(damped);
+    }
+    out
+}
+
+/// The batched engine must be bit-exact with the row-at-a-time kernel on
+/// every tile shape, for all four OutputPath x Reciprocal modes —
+/// including single-row tiles and ragged widths.  This is what keeps the
+/// paper's golden vectors valid for both entry points.
+#[test]
+fn prop_batch_bit_exact_with_row_kernel() {
+    check(
+        "batch-vs-row-bit-exact",
+        Config { cases: 300, ..Default::default() },
+        gen_tile,
+        shrink_tile,
+        |case| {
+            for (op, rc) in [
+                (OutputPath::I16, Reciprocal::Div),
+                (OutputPath::I16, Reciprocal::Clb),
+                (OutputPath::I8, Reciprocal::Div),
+                (OutputPath::I8, Reciprocal::Clb),
+            ] {
+                let got = hccs_batch(&case.x, case.rows, case.cols, &case.theta, op, rc);
+                let mut want = vec![0i32; case.x.len()];
+                for r in 0..case.rows {
+                    hccs_row_into(
+                        &case.x[r * case.cols..(r + 1) * case.cols],
+                        &case.theta,
+                        op,
+                        rc,
+                        &mut want[r * case.cols..(r + 1) * case.cols],
+                    );
+                }
+                if got != want {
+                    let bad = got
+                        .iter()
+                        .zip(&want)
+                        .position(|(a, b)| a != b)
+                        .unwrap_or(0);
+                    return Err(format!(
+                        "divergence under {op:?}/{rc:?} at flat index {bad} \
+                         (row {}, col {}): batched {} != rowwise {}",
+                        bad / case.cols,
+                        bad % case.cols,
+                        got[bad],
+                        want[bad]
+                    ));
+                }
             }
             Ok(())
         },
