@@ -70,7 +70,8 @@ fn main() -> Result<()> {
         let cal = calibrate_rows(rows, n, gamma);
         // Evaluate the *global* θ on this head's rows for the ablation gap.
         let xq: Vec<i8> = rows.iter().flat_map(|r| quantize_i8(r, global.gamma)).collect();
-        let phat = hccs_rows(&xq, n, &vec![global.params; rows.len()], OutputPath::I16, Reciprocal::Div);
+        let thetas = vec![global.params; rows.len()];
+        let phat = hccs_rows(&xq, n, &thetas, OutputPath::I16, Reciprocal::Div);
         let kl_global = mean(
             &rows
                 .iter()

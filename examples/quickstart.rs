@@ -51,7 +51,8 @@ fn main() -> Result<()> {
         let phat = hccs_row(&x_i8[r * n..(r + 1) * n], &theta, OutputPath::I16, Reciprocal::Div);
         let p_ref = softmax(&x_f64[r]);
         let d = kl(&p_ref, &normalize_phat(&phat));
-        println!("  row {r}: Σp̂ = {:>5}, KL(softmax ‖ HCCS) = {d:.4} nats", phat.iter().sum::<i32>());
+        let sum: i32 = phat.iter().sum();
+        println!("  row {r}: Σp̂ = {sum:>5}, KL(softmax ‖ HCCS) = {d:.4} nats");
         rust_out.extend(phat);
     }
 

@@ -18,8 +18,10 @@ use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::{TaskKind, WorkloadGen};
 
-const KNOWN: &[&str] =
-    &["artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "wait-ms=", "seed="];
+const KNOWN: &[&str] = &[
+    "artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "wait-ms=", "seed=",
+    "shards=",
+];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), KNOWN).map_err(|e| anyhow!("{e}"))?;
@@ -31,9 +33,13 @@ fn main() -> Result<()> {
     let batch = args.parse_num("batch", 8usize)?;
     let wait_ms = args.parse_num("wait-ms", 5u64)?;
     let seed = args.parse_num("seed", 99u64)?;
+    let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let task = TaskKind::parse(&task_name).context("bad --task (sst2s|mnlis)")?;
 
-    println!("== serve_classifier: {model}/{task_name}/{variant}, {requests} requests, batch {batch}");
+    println!(
+        "== serve_classifier: {model}/{task_name}/{variant}, {requests} requests, \
+         batch {batch}, {shards} shard(s)"
+    );
     let (coord, handle) = Coordinator::start(CoordinatorConfig {
         artifacts,
         model,
@@ -44,6 +50,7 @@ fn main() -> Result<()> {
             max_wait: std::time::Duration::from_millis(wait_ms),
         },
         max_in_flight: None,
+        shards,
     })
     .context("starting coordinator — did you run `make artifacts`?")?;
 

@@ -6,9 +6,11 @@
 //! Prints one table row per (mode, n, B) with rows/s for both paths and
 //! the batched/scalar speedup, then a machine-readable JSON document
 //! (see EXPERIMENTS.md §batch_kernel for the schema and §Perf for how
-//! these numbers are read).
+//! these numbers are read).  When `HCCS_BENCH_JSON` is set the document
+//! is also written to `BENCH_batch_kernel.json` (the CI bench
+//! trajectory artifact); budgets honor `HCCS_BENCH_*_MS`.
 
-use hccs::benchkit::{bench, sink};
+use hccs::benchkit::{bench, sink, write_json};
 use hccs::hccs::{hccs_batch_into, hccs_row_into, HccsParams, OutputPath, Reciprocal};
 use hccs::json::Value;
 use hccs::report::Table;
@@ -108,5 +110,7 @@ fn main() {
     doc.insert("bench".to_string(), Value::from("batch_kernel"));
     doc.insert("units".to_string(), Value::from("rows_per_second"));
     doc.insert("cases".to_string(), Value::Arr(cases));
-    println!("{}", Value::Obj(doc).to_string_pretty());
+    let doc = Value::Obj(doc);
+    println!("{}", doc.to_string_pretty());
+    write_json("batch_kernel", &doc);
 }

@@ -10,21 +10,28 @@ use hccs::rng::Xoshiro256;
 // Variant B: scores buffer reused (3 passes, no recompute)  [current = A]
 fn variant_b(x: &[i8], p: &HccsParams, out: &mut [i32]) {
     let mut m = i8::MIN;
-    for &v in x { m = m.max(v); }
+    for &v in x {
+        m = m.max(v);
+    }
     let m = m as i32;
     let mut z = 0i32;
     for (o, &xi) in out.iter_mut().zip(x) {
         let s = p.b - p.s * (m - xi as i32).min(p.dmax);
-        *o = s; z += s;
+        *o = s;
+        z += s;
     }
     let rho = 32767 / z;
-    for o in out.iter_mut() { *o *= rho; }
+    for o in out.iter_mut() {
+        *o *= rho;
+    }
 }
 
 // Variant C: 256-entry score LUT built per row, then gather.
 fn variant_c(x: &[i8], p: &HccsParams, out: &mut [i32], lut: &mut [i32; 256]) {
     let mut m = i8::MIN;
-    for &v in x { m = m.max(v); }
+    for &v in x {
+        m = m.max(v);
+    }
     let m = m as i32;
     for q in -128i32..128 {
         lut[(q + 128) as usize] = p.b - p.s * (m - q).min(p.dmax);
@@ -32,10 +39,13 @@ fn variant_c(x: &[i8], p: &HccsParams, out: &mut [i32], lut: &mut [i32; 256]) {
     let mut z = 0i32;
     for (o, &xi) in out.iter_mut().zip(x) {
         let s = lut[(xi as i32 + 128) as usize];
-        *o = s; z += s;
+        *o = s;
+        z += s;
     }
     let rho = 32767 / z;
-    for o in out.iter_mut() { *o *= rho; }
+    for o in out.iter_mut() {
+        *o *= rho;
+    }
 }
 
 fn main() {
@@ -46,7 +56,9 @@ fn main() {
         let x: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
         let mut out = vec![0i32; n];
         let mut lut = [0i32; 256];
-        let a = bench(&format!("A current n={n}"), || hccs_row_into(sink(&x), &p, OutputPath::I16, Reciprocal::Div, &mut out));
+        let a = bench(&format!("A current n={n}"), || {
+            hccs_row_into(sink(&x), &p, OutputPath::I16, Reciprocal::Div, &mut out)
+        });
         let b = bench(&format!("B fused    n={n}"), || variant_b(sink(&x), &p, &mut out));
         let c = bench(&format!("C lut      n={n}"), || variant_c(sink(&x), &p, &mut out, &mut lut));
         println!("{}\n{}\n{}", a.render(), b.render(), c.render());

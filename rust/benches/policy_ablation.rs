@@ -6,7 +6,7 @@
 //! frontier, plus the backpressure shed behaviour under overload.
 //! Skips when artifacts are missing.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
@@ -20,9 +20,14 @@ fn artifacts_dir() -> Option<PathBuf> {
         .find(|p| p.join("vocab.json").exists())
 }
 
-fn run_policy(artifacts: &PathBuf, max_batch: usize, wait_ms: u64, n_req: usize) -> Option<(f64, u64, u64)> {
+fn run_policy(
+    artifacts: &Path,
+    max_batch: usize,
+    wait_ms: u64,
+    n_req: usize,
+) -> Option<(f64, u64, u64)> {
     let (coord, handle) = Coordinator::start(CoordinatorConfig {
-        artifacts: artifacts.clone(),
+        artifacts: artifacts.to_path_buf(),
         model: "bert-tiny".into(),
         task: "sst2s".into(),
         variant: "hccs".into(),
@@ -31,6 +36,7 @@ fn run_policy(artifacts: &PathBuf, max_batch: usize, wait_ms: u64, n_req: usize)
             max_wait: Duration::from_millis(wait_ms),
         },
         max_in_flight: None,
+        shards: 1,
     })
     .ok()?;
     let mut generator = WorkloadGen::new(TaskKind::Sst2s, 42);
@@ -95,6 +101,7 @@ fn main() {
         variant: "hccs".into(),
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
         max_in_flight: Some(32),
+        shards: 1,
     })
     .unwrap();
     let mut generator = WorkloadGen::new(TaskKind::Sst2s, 7);

@@ -73,6 +73,7 @@ fn main() {
         variant: "hccs".into(),
         policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(5) },
         max_in_flight: None,
+        shards: 1,
     })
     .unwrap();
     let mut generator = WorkloadGen::new(TaskKind::Sst2s, 17);

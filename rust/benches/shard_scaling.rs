@@ -1,0 +1,153 @@
+//! Bench target for the **sharded coordinator**: multi-shard
+//! [`ScoreEngine`] throughput (rows/s) at `shards ∈ {1, 2, 4, 8}` for
+//! the paper's two headline modes, with a fixed open-loop client pool
+//! so the only variable is the shard count.  On a multi-core host,
+//! rows/s must rise monotonically from 1 to 4 shards (the CI
+//! acceptance shape); 8 may flatten once the host runs out of cores.
+//!
+//! Prints one table row per (mode, shards) with measured rows/s, the
+//! speedup vs one shard, and the `aie_sim::MultiTileSim` projected
+//! speedup for the same shard count (dispatch-aware, so it also
+//! flattens — at the feeder's issue bound rather than the core count).
+//! Then emits a machine-readable JSON document (see EXPERIMENTS.md
+//! §shard_scaling) and, when `HCCS_BENCH_JSON` is set, writes it to
+//! `BENCH_shard_scaling.json` for the CI bench trajectory.
+
+use hccs::aie_sim::{Device, DeviceKind, KernelKind, MultiTileSim};
+use hccs::benchkit::{bench, write_json};
+use hccs::coordinator::{BatchPolicy, EngineHandle, ScoreConfig, ScoreEngine};
+use hccs::hccs::{hccs_row, HccsParams, OutputPath, Reciprocal};
+use hccs::json::Value;
+use hccs::report::Table;
+use hccs::rng::Xoshiro256;
+use std::time::Duration;
+
+const N: usize = 256;
+const SHARDS: [usize; 4] = [1, 2, 4, 8];
+const CLIENTS: usize = 4;
+const ROWS_PER_CLIENT: usize = 512;
+
+fn theta() -> HccsParams {
+    let (lo, hi) = HccsParams::feasible_b_band(1, 16, N).expect("band");
+    HccsParams::checked((lo + hi) / 2, 1, 16, N).unwrap()
+}
+
+fn engine(mode: (&str, OutputPath, Reciprocal), shards: usize) -> (ScoreEngine, EngineHandle) {
+    ScoreEngine::start(ScoreConfig {
+        n: N,
+        params: theta(),
+        out_path: mode.1,
+        recip: mode.2,
+        policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
+        max_in_flight: None,
+        shards,
+    })
+    .expect("engine start")
+}
+
+/// Simulated dispatch-aware speedup for `shards` on the AIE model.
+fn sim_speedup(kernel: KernelKind, shards: usize, tiles: u64) -> f64 {
+    let d = Device::new(DeviceKind::AieMlV2);
+    let serial = hccs::aie_sim::cycles_per_tile(kernel, &d, 64, N) * tiles;
+    let mut m = MultiTileSim::new(d, kernel, shards);
+    for _ in 0..tiles {
+        m.dispatch_tile(64, N);
+    }
+    serial as f64 / m.makespan_cycles() as f64
+}
+
+fn main() {
+    let host = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!("host parallelism: {host} (need > 1 for shard speedup)");
+    let modes: [(&str, OutputPath, Reciprocal, KernelKind); 2] = [
+        ("i16_div", OutputPath::I16, Reciprocal::Div, KernelKind::HccsI16Div),
+        ("i8_clb", OutputPath::I8, Reciprocal::Clb, KernelKind::HccsI8Clb),
+    ];
+
+    // Per-client request pools, reused (cloned) every iteration.
+    let mut rng = Xoshiro256::new(31);
+    let pools: Vec<Vec<Vec<i8>>> = (0..CLIENTS)
+        .map(|_| {
+            (0..ROWS_PER_CLIENT)
+                .map(|_| (0..N).map(|_| rng.i8()).collect())
+                .collect()
+        })
+        .collect();
+    let probe_rows: Vec<Vec<i8>> = (0..8).map(|_| (0..N).map(|_| rng.i8()).collect()).collect();
+    let total_rows = (CLIENTS * ROWS_PER_CLIENT) as f64;
+
+    let mut table = Table::new(
+        "sharded ScoreEngine throughput (rows/s, this machine)",
+        &["mode", "shards", "rows/s", "speedup", "sim speedup (AIE)"],
+    );
+    let mut cases: Vec<Value> = Vec::new();
+
+    for (mode, op, rc, kernel) in modes {
+        let mut base_rps = 0.0f64;
+        for shards in SHARDS {
+            let (eng, handle) = engine((mode, op, rc), shards);
+
+            // Bit-exactness alongside the measurement: sharded serving
+            // must match the row kernel for every shard count.
+            for x in &probe_rows {
+                let got = eng.score(x.clone()).expect("probe scored").phat;
+                assert_eq!(got, hccs_row(x, &theta(), op, rc), "{mode} shards={shards}");
+            }
+
+            let r = bench(&format!("{mode} shards={shards}"), || {
+                std::thread::scope(|s| {
+                    for pool in &pools {
+                        let eng = eng.clone();
+                        s.spawn(move || {
+                            let rxs: Vec<_> = pool
+                                .iter()
+                                .map(|x| eng.submit(x.clone()).expect("submit"))
+                                .collect();
+                            for rx in rxs {
+                                rx.recv().expect("reply").expect("scored");
+                            }
+                        });
+                    }
+                });
+            });
+            eng.shutdown();
+            handle.join().unwrap();
+
+            let rps = r.per_second(total_rows);
+            if shards == 1 {
+                base_rps = rps;
+            }
+            let speedup = rps / base_rps;
+            let sim = sim_speedup(kernel, shards, 256);
+            table.row(&[
+                mode.to_string(),
+                shards.to_string(),
+                format!("{rps:.3e}"),
+                format!("{speedup:.2}x"),
+                format!("{sim:.2}x"),
+            ]);
+
+            let mut case = std::collections::BTreeMap::new();
+            case.insert("mode".to_string(), Value::from(mode));
+            case.insert("shards".to_string(), Value::from(shards as i64));
+            case.insert("rows_per_s".to_string(), Value::from(rps));
+            case.insert("speedup_vs_1".to_string(), Value::from(speedup));
+            case.insert("sim_speedup".to_string(), Value::from(sim));
+            case.insert("median_ns".to_string(), Value::from(r.median.as_nanos() as i64));
+            cases.push(Value::Obj(case));
+        }
+    }
+
+    println!("{}", table.render());
+
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("bench".to_string(), Value::from("shard_scaling"));
+    doc.insert("units".to_string(), Value::from("rows_per_second"));
+    doc.insert("n".to_string(), Value::from(N as i64));
+    doc.insert("clients".to_string(), Value::from(CLIENTS as i64));
+    doc.insert("host_parallelism".to_string(), Value::from(host as i64));
+    doc.insert("cases".to_string(), Value::Arr(cases));
+    let doc = Value::Obj(doc);
+    println!("{}", doc.to_string_pretty());
+    write_json("shard_scaling", &doc);
+}

@@ -53,8 +53,22 @@ fn main() {
     // Model-vs-paper drift table for EXPERIMENTS.md.
     println!("== model vs paper (elements/s) ==");
     let paper: [(DeviceKind, &[(usize, f64, f64, f64)]); 2] = [
-        (DeviceKind::AieMl, &[(32, 0.09e9, 0.41e9, 1.36e9), (64, 0.16e9, 0.78e9, 2.19e9), (128, 0.25e9, 1.37e9, 2.18e9)]),
-        (DeviceKind::AieMlV2, &[(32, 0.24e9, 0.41e9, 1.46e9), (64, 0.46e9, 0.78e9, 2.46e9), (128, 0.77e9, 1.41e9, 2.21e9)]),
+        (
+            DeviceKind::AieMl,
+            &[
+                (32, 0.09e9, 0.41e9, 1.36e9),
+                (64, 0.16e9, 0.78e9, 2.19e9),
+                (128, 0.25e9, 1.37e9, 2.18e9),
+            ],
+        ),
+        (
+            DeviceKind::AieMlV2,
+            &[
+                (32, 0.24e9, 0.41e9, 1.46e9),
+                (64, 0.46e9, 0.78e9, 2.46e9),
+                (128, 0.77e9, 1.41e9, 2.21e9),
+            ],
+        ),
     ];
     for (kind, rows) in paper {
         let dev = Device::new(kind);
@@ -64,7 +78,13 @@ fn main() {
             let m_cl = throughput_eps(KernelKind::HccsI8Clb, &dev, n);
             println!(
                 "  {:<8} n={n:<4} bf16 {:.2}/{:.2}G  div {:.2}/{:.2}G  clb {:.2}/{:.2}G  (model/paper)",
-                dev.short_name(), m_bf / 1e9, p_bf / 1e9, m_dv / 1e9, p_dv / 1e9, m_cl / 1e9, p_cl / 1e9
+                dev.short_name(),
+                m_bf / 1e9,
+                p_bf / 1e9,
+                m_dv / 1e9,
+                p_dv / 1e9,
+                m_cl / 1e9,
+                p_cl / 1e9
             );
         }
     }

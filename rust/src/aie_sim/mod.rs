@@ -22,7 +22,12 @@
 //!
 //! [`tile::TileSim`] walks a schedule iteration by iteration (a miniature
 //! discrete simulator), [`scaling`] adds the embarrassingly-parallel
-//! multi-tile row partitioning of paper §IV-D / Fig. 3.
+//! multi-tile row partitioning of paper §IV-D / Fig. 3, and
+//! [`tile::MultiTileSim`] adds the shard-parallel dispatch schedule
+//! (central feeder, least-busy placement, makespan accounting) that
+//! mirrors the serving coordinator's shard router —
+//! [`schedule::DispatchModel`] carries the serialized per-tile issue
+//! cost that bounds scaling at high shard counts.
 
 pub mod device;
 pub mod kernels;
@@ -33,4 +38,7 @@ pub mod trace;
 
 pub use device::{Device, DeviceKind};
 pub use kernels::KernelKind;
-pub use tile::{batched_throughput_eps, cycles_per_row, cycles_per_tile, throughput_eps, TileSim};
+pub use schedule::DispatchModel;
+pub use tile::{
+    batched_throughput_eps, cycles_per_row, cycles_per_tile, throughput_eps, MultiTileSim, TileSim,
+};

@@ -23,7 +23,13 @@ pub struct ScalePoint {
 /// length `n`.  Rows are partitioned round-robin (Eq. 12); a tile with no
 /// rows contributes nothing, and the slowest (largest-share) tile bounds
 /// completion, which is what the ceiling division models.
-pub fn aggregate(device: &Device, kernel: KernelKind, n: usize, tiles: usize, rows: u64) -> ScalePoint {
+pub fn aggregate(
+    device: &Device,
+    kernel: KernelKind,
+    n: usize,
+    tiles: usize,
+    rows: u64,
+) -> ScalePoint {
     assert!(tiles >= 1);
     let sim = TileSim::new(*device, kernel);
     let busy = tiles.min(rows.max(1) as usize);

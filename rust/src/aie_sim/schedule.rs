@@ -1,4 +1,5 @@
-//! Kernel schedules: the per-row pipeline as a list of costed stages.
+//! Kernel schedules: the per-row pipeline as a list of costed stages,
+//! plus the dispatch cost model for shard-parallel execution.
 
 /// How a stage's cost scales with the row.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,6 +22,29 @@ pub struct Stage {
     /// per-row work (reductions, the scalar reciprocal) is not.
     /// Meaningless for [`StageCost::PerIter`] stages.
     pub tile_amortized: bool,
+}
+
+/// Dispatch cost model for shard-parallel execution: a central feeder
+/// (the sharded coordinator's router, or the PL-side tile feeder on
+/// hardware) issues one batched-tile descriptor every `issue_cycles`.
+/// Execution across shards is fully parallel, but issue is serialized,
+/// so aggregate throughput is bounded by
+/// `min(shards x per-tile rate, 1 / issue_cycles)` — adding shards past
+/// the issue bound buys nothing, which is exactly the saturation shape
+/// a real router exhibits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DispatchModel {
+    /// Cycles between consecutive tile dispatches from the feeder
+    /// (descriptor setup + DMA kick, paid serially per tile).
+    pub issue_cycles: u64,
+}
+
+impl Default for DispatchModel {
+    fn default() -> Self {
+        // Small vs any real tile's cycle count (a 32x64 i8+CLB tile runs
+        // ~1-2k cycles), so dispatch only binds at high shard counts.
+        Self { issue_cycles: 32 }
+    }
 }
 
 /// A complete kernel schedule for one device generation.
@@ -104,5 +128,12 @@ mod tests {
         assert_eq!(s.iters(32), 1);
         assert_eq!(s.iters(33), 2);
         assert_eq!(s.iters(128), 4);
+    }
+
+    #[test]
+    fn dispatch_default_is_cheap_but_nonzero() {
+        let d = DispatchModel::default();
+        assert!(d.issue_cycles > 0, "free dispatch would hide the issue bound");
+        assert!(d.issue_cycles < 100, "dispatch must stay far below tile cost");
     }
 }

@@ -1,8 +1,10 @@
-//! Single-tile simulation: walk a kernel schedule row by row.
+//! Single-tile simulation: walk a kernel schedule row by row — plus
+//! [`MultiTileSim`], the shard-parallel dispatch schedule over several
+//! identical tiles.
 
 use super::device::Device;
 use super::kernels::{schedule, KernelKind};
-use super::schedule::Schedule;
+use super::schedule::{DispatchModel, Schedule};
 
 /// A single AI Engine tile executing one softmax kernel in steady state.
 ///
@@ -107,6 +109,109 @@ impl TileSim {
     pub fn mac_utilization(&self, n: usize) -> f64 {
         let macs = self.sched.macs_per_iter * self.sched.iters(n);
         macs as f64 / (self.row_cycles(n) as f64 * self.device.peak_int8_macs as f64)
+    }
+}
+
+/// Shard-parallel dispatch schedule over `k` identical compute tiles —
+/// the `aie_sim` mirror of the sharded coordinator: a central feeder
+/// issues one batched `rows x n` tile every
+/// [`DispatchModel::issue_cycles`] and each lands on the least-busy
+/// tile (the router's least-outstanding-work policy).  The simulated
+/// cycle count for the workload is the **makespan** — the last tile's
+/// finish cycle — so shard-parallel dispatch, issue serialization, and
+/// load imbalance all show up in the number, unlike the ideal
+/// `k x` scaling of [`super::scaling::aggregate`].
+#[derive(Clone, Debug)]
+pub struct MultiTileSim {
+    sim: TileSim,
+    dispatch: DispatchModel,
+    /// Finish cycle of the work queued on each tile so far.
+    busy_until: Vec<u64>,
+    /// Pure compute cycles accumulated per tile (excludes idle gaps).
+    work: Vec<u64>,
+    issued: u64,
+    rows: u64,
+    elements: u64,
+}
+
+impl MultiTileSim {
+    pub fn new(device: Device, kernel: KernelKind, tiles: usize) -> Self {
+        Self::with_dispatch(device, kernel, tiles, DispatchModel::default())
+    }
+
+    pub fn with_dispatch(
+        device: Device,
+        kernel: KernelKind,
+        tiles: usize,
+        dispatch: DispatchModel,
+    ) -> Self {
+        assert!(tiles >= 1, "need at least one tile");
+        Self {
+            sim: TileSim::new(device, kernel),
+            dispatch,
+            busy_until: vec![0; tiles],
+            work: vec![0; tiles],
+            issued: 0,
+            rows: 0,
+            elements: 0,
+        }
+    }
+
+    pub fn tiles(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    /// The shared per-tile cost model.
+    pub fn tile_sim(&self) -> &TileSim {
+        &self.sim
+    }
+
+    /// Dispatch one batched `rows x n` tile: issued at the feeder's next
+    /// slot, executed on the least-busy compute tile.  Returns the tile
+    /// index the work landed on.
+    pub fn dispatch_tile(&mut self, rows: u64, n: usize) -> usize {
+        let issue_at = self.issued * self.dispatch.issue_cycles;
+        self.issued += 1;
+        let t = self
+            .busy_until
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, busy)| **busy)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let cost = self.sim.tile_cycles(rows, n);
+        let start = self.busy_until[t].max(issue_at);
+        self.busy_until[t] = start + cost;
+        self.work[t] += cost;
+        self.rows += rows;
+        self.elements += rows * n as u64;
+        t
+    }
+
+    /// Cycles until the last tile finishes everything dispatched so far.
+    pub fn makespan_cycles(&self) -> u64 {
+        self.busy_until.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Fraction of the `tiles x makespan` cycle budget spent computing
+    /// (1.0 = perfectly balanced, no issue stalls).
+    pub fn occupancy(&self) -> f64 {
+        let span = self.makespan_cycles();
+        if span == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self.work.iter().sum();
+        busy as f64 / (span as f64 * self.tiles() as f64)
+    }
+
+    /// Elements per second at the device clock for the dispatched
+    /// workload, charged against the makespan.
+    pub fn throughput_eps(&self) -> f64 {
+        let span = self.makespan_cycles();
+        if span == 0 {
+            return 0.0;
+        }
+        self.elements as f64 * self.sim.device.freq_ghz * 1e9 / span as f64
     }
 }
 
@@ -259,6 +364,76 @@ mod tests {
         let want = sim.tile_cycles(32, 64) + sim.tile_cycles(1, 64);
         assert_eq!(sim.total_cycles(), want);
         assert!(sim.throughput_eps() > 0.0);
+    }
+
+    #[test]
+    fn one_shard_dispatch_matches_serial_tile_stream() {
+        // With one compute tile and the default (cheap) issue cost, the
+        // dispatch schedule degenerates to the serial per-tile stream:
+        // the sharded model is a strict generalization.
+        let mut m = MultiTileSim::new(ml(), KernelKind::HccsI8Clb, 1);
+        for _ in 0..16 {
+            assert_eq!(m.dispatch_tile(32, 64), 0);
+        }
+        let serial = 16 * m.tile_sim().tile_cycles(32, 64);
+        assert_eq!(m.makespan_cycles(), serial);
+        assert!((m.occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sharded_dispatch_scales_and_is_bounded() {
+        let serial = TileSim::new(v2(), KernelKind::HccsI8Clb).tile_cycles(32, 64) * 64;
+        let mut prev_span = u64::MAX;
+        let mut prev_speedup = 0.0;
+        for k in [1usize, 2, 4, 8] {
+            let mut m = MultiTileSim::new(v2(), KernelKind::HccsI8Clb, k);
+            let mut used = vec![false; k];
+            for _ in 0..64 {
+                used[m.dispatch_tile(32, 64)] = true;
+            }
+            assert!(used.iter().all(|&u| u), "{k} shards: a shard sat idle");
+            let span = m.makespan_cycles();
+            let speedup = serial as f64 / span as f64;
+            assert!(span <= prev_span, "{k} shards slower than fewer");
+            assert!(speedup > prev_speedup, "{k} shards: no gain ({speedup:.2}x)");
+            assert!(speedup <= k as f64 + 1e-9, "{k} shards: superlinear {speedup:.2}x");
+            assert!(m.occupancy() > 0.9, "{k} shards: occupancy {:.2}", m.occupancy());
+            prev_span = span;
+            prev_speedup = speedup;
+        }
+    }
+
+    #[test]
+    fn issue_serialization_bounds_shard_scaling() {
+        // When the feeder is slower than a tile, extra shards buy
+        // nothing: the makespan is pinned by the issue sequence.
+        let cost = TileSim::new(ml(), KernelKind::HccsI16Div).tile_cycles(8, 64);
+        let slow = DispatchModel { issue_cycles: 2 * cost };
+        let span_of = |k: usize| {
+            let mut m = MultiTileSim::with_dispatch(ml(), KernelKind::HccsI16Div, k, slow);
+            for _ in 0..32 {
+                m.dispatch_tile(8, 64);
+            }
+            m.makespan_cycles()
+        };
+        let s1 = span_of(1);
+        assert_eq!(s1, span_of(8), "dispatch-bound makespan must not depend on shards");
+        assert_eq!(s1, 31 * slow.issue_cycles + cost);
+    }
+
+    #[test]
+    fn uneven_tiles_stay_load_balanced() {
+        let mut m = MultiTileSim::new(v2(), KernelKind::HccsI8Clb, 4);
+        for i in 0..40u64 {
+            let rows = if i % 2 == 0 { 8 } else { 64 };
+            m.dispatch_tile(rows, 64);
+        }
+        let serial: u64 = (0..40u64)
+            .map(|i| m.tile_sim().tile_cycles(if i % 2 == 0 { 8 } else { 64 }, 64))
+            .sum();
+        assert!(m.makespan_cycles() < serial / 3, "least-busy routing failed to parallelize");
+        assert!(m.occupancy() > 0.7, "occupancy {:.2}", m.occupancy());
+        assert!(m.throughput_eps() > 0.0);
     }
 
     #[test]

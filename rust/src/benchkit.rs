@@ -3,9 +3,20 @@
 //! Warmup + timed iterations with median/p95 reporting and a black-box
 //! sink to defeat dead-code elimination.  Used by `cargo bench` targets
 //! (all declared with `harness = false`) and the §Perf profiling pass.
+//!
+//! Two environment hooks feed the CI bench-trajectory pipeline:
+//!
+//! * `HCCS_BENCH_WARMUP_MS` / `HCCS_BENCH_MEASURE_MS` shrink the default
+//!   [`bench`] budgets so the `bench-smoke` CI job finishes in seconds;
+//! * `HCCS_BENCH_JSON=<dir>` makes [`write_json`] persist each bench's
+//!   machine-readable document as `<dir>/BENCH_<name>.json` (the
+//!   trajectory artifacts uploaded by CI) in addition to stdout.
 
 use std::hint::black_box;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::json::Value;
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -32,9 +43,46 @@ impl BenchResult {
     }
 }
 
+fn env_ms(name: &str, default_ms: u64) -> Duration {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(default_ms))
+}
+
+/// Default warmup/measure budgets: 300ms/700ms, overridable with
+/// `HCCS_BENCH_WARMUP_MS` / `HCCS_BENCH_MEASURE_MS` (the CI smoke job
+/// sets both low — noisier numbers, same schema).
+pub fn budgets() -> (Duration, Duration) {
+    (env_ms("HCCS_BENCH_WARMUP_MS", 300), env_ms("HCCS_BENCH_MEASURE_MS", 700))
+}
+
 /// Benchmark `f`, auto-scaling the iteration count to the budget.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    bench_with(name, Duration::from_millis(300), Duration::from_millis(700), &mut f)
+    let (warmup, measure) = budgets();
+    bench_with(name, warmup, measure, &mut f)
+}
+
+/// Persist a bench's JSON document as `BENCH_<name>.json` under the
+/// directory named by `HCCS_BENCH_JSON`; no-op (returns `None`) when
+/// the variable is unset.  Write failures are reported on stderr, not
+/// fatal — a bench run must never die on artifact IO.
+pub fn write_json(bench_name: &str, doc: &Value) -> Option<PathBuf> {
+    let dir = std::env::var_os("HCCS_BENCH_JSON")?;
+    let path = PathBuf::from(dir).join(format!("BENCH_{bench_name}.json"));
+    let mut text = doc.to_string_pretty();
+    text.push('\n');
+    match std::fs::write(&path, text) {
+        Ok(()) => {
+            eprintln!("bench json -> {}", path.display());
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("bench json write failed ({}): {e}", path.display());
+            None
+        }
+    }
 }
 
 /// Benchmark with explicit warmup/measure budgets.
@@ -113,6 +161,25 @@ mod tests {
         assert!(r.iters > 100);
         assert!(r.median.as_nanos() < 10_000);
         assert!(r.min <= r.median && r.median <= r.p95);
+    }
+
+    #[test]
+    fn budgets_are_positive() {
+        let (w, m) = budgets();
+        assert!(w.as_millis() > 0 && m.as_millis() > 0);
+    }
+
+    #[test]
+    fn write_json_honors_env() {
+        let dir = std::env::temp_dir().join(format!("hccs_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("HCCS_BENCH_JSON", &dir);
+        let path = write_json("unit_test", &Value::from("hello")).expect("json written");
+        std::env::remove_var("HCCS_BENCH_JSON");
+        assert_eq!(path, dir.join("BENCH_unit_test.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("hello"), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -36,7 +36,10 @@ impl Args {
     /// Parse `argv` (without the program name). `known` lists accepted
     /// flag names; names ending in `=` take a value, bare names are
     /// booleans.
-    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known: &[&str]) -> Result<Args, CliError> {
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known: &[&str],
+    ) -> Result<Args, CliError> {
         let value_flags: Vec<&str> = known
             .iter()
             .filter(|k| k.ends_with('='))
@@ -98,6 +101,24 @@ impl Args {
         }
     }
 
+    /// Like [`Self::parse_num`], but rejects values below `min` (e.g.
+    /// `--shards 0` must fail fast rather than start a dead engine).
+    pub fn parse_num_at_least<T>(&self, name: &str, default: T, min: T) -> Result<T, CliError>
+    where
+        T: std::str::FromStr + PartialOrd + std::fmt::Display + Copy,
+        T::Err: std::fmt::Display,
+    {
+        let v = self.parse_num(name, default)?;
+        if v < min {
+            return Err(CliError::Invalid(
+                name.to_string(),
+                v.to_string(),
+                format!("must be >= {min}"),
+            ));
+        }
+        Ok(v)
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -113,7 +134,8 @@ mod tests {
 
     #[test]
     fn parses_value_and_bool_flags() {
-        let a = Args::parse(argv("sub --n 64 --fast --mode=i8_clb"), &["n=", "mode=", "fast"]).unwrap();
+        let a =
+            Args::parse(argv("sub --n 64 --fast --mode=i8_clb"), &["n=", "mode=", "fast"]).unwrap();
         assert_eq!(a.positional(), &["sub".to_string()]);
         assert_eq!(a.get("n"), Some("64"));
         assert_eq!(a.get("mode"), Some("i8_clb"));
@@ -141,5 +163,16 @@ mod tests {
     fn bad_number_is_error() {
         let a = Args::parse(argv("--n abc"), &["n="]).unwrap();
         assert!(a.parse_num("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn lower_bound_is_enforced() {
+        let a = Args::parse(argv("--shards 0"), &["shards="]).unwrap();
+        assert!(a.parse_num_at_least("shards", 1usize, 1).is_err());
+        let a = Args::parse(argv("--shards 4"), &["shards="]).unwrap();
+        assert_eq!(a.parse_num_at_least("shards", 1usize, 1).unwrap(), 4);
+        // Default is used (and checked) when the flag is absent.
+        let a = Args::parse(argv(""), &["shards="]).unwrap();
+        assert_eq!(a.parse_num_at_least("shards", 2usize, 1).unwrap(), 2);
     }
 }

@@ -4,6 +4,11 @@
 //! property-testable: FIFO order within the queue, batches never exceed
 //! `max_batch`, no request waits past `max_wait` once `poll` is called at
 //! or after its deadline, and no request is lost or duplicated.
+//!
+//! In the sharded engines every executor shard owns its own
+//! `DynamicBatcher` (one instance per shard thread, never shared), so
+//! these invariants hold per shard; cross-shard ordering is irrelevant
+//! because replies travel on per-request channels.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};

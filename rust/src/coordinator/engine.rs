@@ -1,20 +1,33 @@
-//! The serving engines: request channel → dynamic batcher → executor
-//! thread → reply channels.
+//! The serving engines: request channel → load-aware shard router →
+//! per-shard dynamic batcher → executor thread → reply channels.
 //!
-//! Two engines share the batching substrate:
+//! Two engines share the sharded batching substrate:
 //!
 //! * [`Coordinator`] — full-model inference through the PJRT executable.
-//!   The PJRT wrapper types hold raw pointers (`!Send`), so the
-//!   executable lives entirely inside the executor thread; the public
-//!   handle is `Clone + Send` and communicates over std::sync::mpsc.
-//!   Partial batches are padded with a repeat of the last row (the
-//!   executable's batch dimension is fixed at AOT time) and the padding
-//!   rows' outputs are discarded.
-//! * [`ScoreEngine`] — raw HCCS softmax scoring.  Flushed batches are
-//!   assembled into one contiguous `B x n` int8 tile and handed straight
-//!   to the batched kernel ([`crate::hccs::hccs_batch_into`]), so the
-//!   serving layer pays one kernel dispatch per batch instead of one per
-//!   row.  No padding: the batched kernel takes any row count.
+//!   The PJRT wrapper types hold raw pointers (`!Send`), so each shard's
+//!   executable lives entirely inside that shard's executor thread; the
+//!   public handle is `Clone + Send` and communicates over
+//!   std::sync::mpsc.  Partial batches are padded with a repeat of the
+//!   last row (the executable's batch dimension is fixed at AOT time)
+//!   and the padding rows' outputs are discarded.
+//! * [`ScoreEngine`] — raw HCCS softmax scoring.  Each shard owns a
+//!   reusable tile buffer; flushed batches are assembled into one
+//!   contiguous `B x n` int8 tile and handed straight to the batched
+//!   kernel ([`crate::hccs::hccs_batch_into`]), so the serving layer
+//!   pays one kernel dispatch per batch instead of one per row.  No
+//!   padding: the batched kernel takes any row count.
+//!
+//! **Sharding.** `shards = 1` reproduces the original single-executor
+//! engine exactly (same thread structure, same batching, bit-exact
+//! outputs — pinned by tests).  With `shards = N`, submissions are
+//! routed by [`super::router::ShardRouter`] to the shard with the least
+//! outstanding work (round-robin among ties); every shard runs its own
+//! batcher and model/tile state, and per-request reply channels keep
+//! response ordering independent of shard completion order.  Metrics
+//! land in one shared [`Registry`] under both the aggregate name
+//! (`scorer.requests`) and the per-shard name
+//! (`scorer.requests.shard0`), so `Registry::sum_counters` can verify
+//! the rollup.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,10 +38,11 @@ use std::time::{Duration, Instant};
 
 use crate::error::{anyhow, Context, Result};
 use crate::hccs::{hccs_batch_into, HccsParams, OutputPath, Reciprocal};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Histogram, Registry};
 use crate::runtime::{manifest::summary_path, ModelRunner, PairSummary, Runtime};
 
 use super::batcher::{BatchPolicy, DynamicBatcher, QueuedRequest};
+use super::router::{ShardRouter, ShardTicket};
 
 /// One inference request (already tokenized).
 #[derive(Clone, Debug)]
@@ -54,12 +68,42 @@ struct Envelope {
     /// Admission slot, released when the envelope (and so the reply) is
     /// done — including on error paths.
     _permit: Option<super::admission::Permit>,
+    /// Router claim on this request's shard, released with the envelope
+    /// so the load view tracks completion, not dispatch.
+    _ticket: ShardTicket,
 }
 
 /// Message to an executor thread: one unit of work, or stop.
 enum EngineMsg<T> {
     Work(T),
     Shutdown,
+}
+
+/// Joins every shard executor of an engine (what `start` hands back in
+/// place of the old single `JoinHandle`).
+pub struct EngineHandle {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl EngineHandle {
+    /// Wait for all shard executors to exit; the first panic payload (if
+    /// any) is propagated after every thread has been joined.
+    pub fn join(self) -> std::thread::Result<()> {
+        let mut first_err = None;
+        for h in self.handles {
+            if let Err(e) = h.join() {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.handles.len()
+    }
 }
 
 /// How long an idle executor sleeps when no deadline is pending.
@@ -81,13 +125,54 @@ fn try_permit(
     }
 }
 
-/// The shared executor event loop: receive → batch → flush on size or
-/// deadline → drain on shutdown/disconnect (no request is dropped).
-/// Both engines run this with their own `run` callback.
+/// One metric kept under both its aggregate name and a per-shard
+/// suffixed name (`<name>.shard<K>`); every event lands in both, so
+/// [`Registry::sum_counters`] over `"<name>.shard"` equals the
+/// aggregate counter (the rollup invariant, pinned by tests).
+struct RolledCounter {
+    total: Arc<Counter>,
+    shard: Arc<Counter>,
+}
+
+impl RolledCounter {
+    fn new(reg: &Registry, name: &str, shard: usize) -> Self {
+        Self { total: reg.counter(name), shard: reg.counter(&format!("{name}.shard{shard}")) }
+    }
+
+    fn inc(&self) {
+        self.add(1);
+    }
+
+    fn add(&self, n: u64) {
+        self.total.add(n);
+        self.shard.add(n);
+    }
+}
+
+/// Histogram analogue of [`RolledCounter`].
+struct RolledHistogram {
+    total: Arc<Histogram>,
+    shard: Arc<Histogram>,
+}
+
+impl RolledHistogram {
+    fn new(reg: &Registry, name: &str, shard: usize) -> Self {
+        Self { total: reg.histogram(name), shard: reg.histogram(&format!("{name}.shard{shard}")) }
+    }
+
+    fn record(&self, d: Duration) {
+        self.total.record(d);
+        self.shard.record(d);
+    }
+}
+
+/// The shared per-shard executor event loop: receive → batch → flush on
+/// size or deadline → drain on shutdown/disconnect (no request is
+/// dropped).  Both engines run this with their own `run` callback.
 fn batching_event_loop<T>(
     policy: BatchPolicy,
     rx: Receiver<EngineMsg<T>>,
-    req_ctr: &crate::metrics::Counter,
+    req_ctr: &RolledCounter,
     mut run: impl FnMut(Vec<QueuedRequest<T>>),
 ) {
     let mut batcher: DynamicBatcher<T> = DynamicBatcher::new(policy);
@@ -127,34 +212,71 @@ pub struct CoordinatorConfig {
     /// Backpressure: maximum admitted-but-unanswered requests (None =
     /// unbounded; Some(n) sheds with an "overloaded" error beyond n).
     pub max_in_flight: Option<usize>,
+    /// Executor shards (>= 1).  Each shard owns its own model instance
+    /// and dynamic batcher; 1 reproduces the single-executor engine.
+    pub shards: usize,
 }
 
 /// Clonable, thread-safe handle to the serving engine.
 #[derive(Clone)]
 pub struct Coordinator {
-    tx: Sender<EngineMsg<Envelope>>,
+    txs: Vec<Sender<EngineMsg<Envelope>>>,
+    router: ShardRouter,
     next_id: Arc<AtomicU64>,
     admission: Option<super::admission::AdmissionControl>,
     pub metrics: Arc<Registry>,
 }
 
 impl Coordinator {
-    /// Start the executor thread and wait until the model is loaded.
-    pub fn start(cfg: CoordinatorConfig) -> Result<(Coordinator, JoinHandle<()>)> {
-        let (tx, rx) = mpsc::channel::<EngineMsg<Envelope>>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    /// Start one executor thread per shard and wait until every shard
+    /// has loaded its model.
+    pub fn start(cfg: CoordinatorConfig) -> Result<(Coordinator, EngineHandle)> {
+        if cfg.shards == 0 {
+            return Err(anyhow!("shards must be >= 1"));
+        }
         let metrics = Arc::new(Registry::default());
-        let m = metrics.clone();
         let admission = cfg.max_in_flight.map(super::admission::AdmissionControl::new);
-        let handle = std::thread::Builder::new()
-            .name("hccs-executor".into())
-            .spawn(move || executor_main(cfg, rx, ready_tx, m))
-            .context("spawning executor")?;
-        ready_rx
-            .recv()
-            .context("executor died before ready")?
-            .map_err(|e| anyhow!("model load failed: {e}"))?;
-        Ok((Coordinator { tx, next_id: Arc::new(AtomicU64::new(1)), admission, metrics }, handle))
+        let router = ShardRouter::new(cfg.shards);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = mpsc::channel::<EngineMsg<Envelope>>();
+            let c = cfg.clone();
+            let m = metrics.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("hccs-executor-{shard}"))
+                .spawn(move || executor_main(c, shard, rx, ready, m))
+                .with_context(|| format!("spawning executor shard {shard}"))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..cfg.shards {
+            ready_rx
+                .recv()
+                .context("executor died before ready")?
+                .map_err(|e| anyhow!("model load failed: {e}"))?;
+        }
+        let coordinator = Coordinator {
+            txs,
+            router,
+            next_id: Arc::new(AtomicU64::new(1)),
+            admission,
+            metrics,
+        };
+        Ok((coordinator, EngineHandle { handles }))
+    }
+
+    /// Number of executor shards.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Requests routed to `shard` and not yet answered.
+    pub fn outstanding(&self, shard: usize) -> u64 {
+        self.router.outstanding(shard)
     }
 
     /// Rejected-by-backpressure count (0 when unbounded).
@@ -171,11 +293,13 @@ impl Coordinator {
         let permit = try_permit(&self.admission, "requests")?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
+        let ticket = self.router.route();
+        self.txs[ticket.shard()]
             .send(EngineMsg::Work(Envelope {
                 req: InferRequest { id, ids, segments },
                 reply: reply_tx,
                 _permit: permit,
+                _ticket: ticket,
             }))
             .map_err(|_| anyhow!("engine is down"))?;
         Ok(reply_rx)
@@ -189,19 +313,23 @@ impl Coordinator {
             .map_err(|e| anyhow!("{e}"))
     }
 
-    /// Ask the engine to drain and stop.
+    /// Ask every shard to drain and stop.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(EngineMsg::Shutdown);
+        for tx in &self.txs {
+            let _ = tx.send(EngineMsg::Shutdown);
+        }
     }
 }
 
 fn executor_main(
     cfg: CoordinatorConfig,
+    shard: usize,
     rx: Receiver<EngineMsg<Envelope>>,
     ready: Sender<Result<(), String>>,
     metrics: Arc<Registry>,
 ) {
-    // Load the model inside this thread (PJRT handles are !Send).
+    // Load the model inside this thread (PJRT handles are !Send); each
+    // shard owns a full executable instance.
     let loaded = (|| -> Result<ModelRunner> {
         let rt = std::rc::Rc::new(Runtime::cpu()?);
         let spath = summary_path(&cfg.artifacts, &cfg.model, &cfg.task)
@@ -210,7 +338,12 @@ fn executor_main(
         let mani = summary
             .manifest(&cfg.variant, cfg.policy.max_batch)
             .with_context(|| {
-                format!("no manifest {}_b{} in {}", cfg.variant, cfg.policy.max_batch, spath.display())
+                format!(
+                    "no manifest {}_b{} in {}",
+                    cfg.variant,
+                    cfg.policy.max_batch,
+                    spath.display()
+                )
             })?
             .clone();
         ModelRunner::load(rt, &cfg.artifacts, mani)
@@ -226,11 +359,11 @@ fn executor_main(
         }
     };
 
-    let queue_hist = metrics.histogram("coordinator.queue_us");
-    let exec_hist = metrics.histogram("coordinator.execute_us");
-    let batch_ctr = metrics.counter("coordinator.batches");
-    let req_ctr = metrics.counter("coordinator.requests");
-    let pad_ctr = metrics.counter("coordinator.padding_rows");
+    let queue_hist = RolledHistogram::new(&metrics, "coordinator.queue_us", shard);
+    let exec_hist = RolledHistogram::new(&metrics, "coordinator.execute_us", shard);
+    let batch_ctr = RolledCounter::new(&metrics, "coordinator.batches", shard);
+    let req_ctr = RolledCounter::new(&metrics, "coordinator.requests", shard);
+    let pad_ctr = RolledCounter::new(&metrics, "coordinator.padding_rows", shard);
 
     batching_event_loop(cfg.policy, rx, &req_ctr, |items| {
         run_batch(&runner, items, &queue_hist, &exec_hist, &pad_ctr);
@@ -241,9 +374,9 @@ fn executor_main(
 fn run_batch(
     runner: &ModelRunner,
     items: Vec<QueuedRequest<Envelope>>,
-    queue_hist: &crate::metrics::Histogram,
-    exec_hist: &crate::metrics::Histogram,
-    pad_ctr: &crate::metrics::Counter,
+    queue_hist: &RolledHistogram,
+    exec_hist: &RolledHistogram,
+    pad_ctr: &RolledCounter,
 ) {
     let b = runner.batch();
     let l = runner.seq_len();
@@ -322,43 +455,70 @@ pub struct ScoreConfig {
     pub policy: BatchPolicy,
     /// Backpressure, as in [`CoordinatorConfig::max_in_flight`].
     pub max_in_flight: Option<usize>,
+    /// Executor shards (>= 1), as in [`CoordinatorConfig::shards`].
+    pub shards: usize,
 }
 
 struct ScoreEnvelope {
     x: Vec<i8>,
     reply: Sender<Result<ScoreReply, String>>,
     _permit: Option<super::admission::Permit>,
+    _ticket: ShardTicket,
 }
 
-/// Clonable handle to the batched HCCS scoring engine.
+/// Clonable handle to the sharded, batched HCCS scoring engine.
 ///
-/// The executor thread owns a reusable tile buffer; every flushed batch
-/// is copied into it contiguously and normalized with a single
-/// [`hccs_batch_into`] call — the coordinator-level analogue of the AIE
-/// tile streaming a resident batch (paper §IV-D).
+/// Each shard's executor thread owns a reusable tile buffer; every
+/// flushed batch is copied into it contiguously and normalized with a
+/// single [`hccs_batch_into`] call — the coordinator-level analogue of
+/// an AIE tile streaming a resident batch (paper §IV-D), and the shard
+/// fan-out is the analogue of the paper's multi-tile row partitioning
+/// (§IV-D / Fig. 3: rows are independent, so shards share nothing).
 #[derive(Clone)]
 pub struct ScoreEngine {
-    tx: Sender<EngineMsg<ScoreEnvelope>>,
+    txs: Vec<Sender<EngineMsg<ScoreEnvelope>>>,
+    router: ShardRouter,
     n: usize,
     admission: Option<super::admission::AdmissionControl>,
     pub metrics: Arc<Registry>,
 }
 
 impl ScoreEngine {
-    /// Validate θ and start the executor thread.
-    pub fn start(cfg: ScoreConfig) -> Result<(ScoreEngine, JoinHandle<()>)> {
+    /// Validate θ and start one executor thread per shard.
+    pub fn start(cfg: ScoreConfig) -> Result<(ScoreEngine, EngineHandle)> {
+        if cfg.shards == 0 {
+            return Err(anyhow!("shards must be >= 1"));
+        }
         cfg.params
             .validate(cfg.n)
             .map_err(|e| anyhow!("infeasible θ for n={}: {e}", cfg.n))?;
-        let (tx, rx) = mpsc::channel::<EngineMsg<ScoreEnvelope>>();
         let metrics = Arc::new(Registry::default());
-        let m = metrics.clone();
         let admission = cfg.max_in_flight.map(super::admission::AdmissionControl::new);
-        let handle = std::thread::Builder::new()
-            .name("hccs-scorer".into())
-            .spawn(move || score_executor_main(cfg, rx, m))
-            .context("spawning score executor")?;
-        Ok((ScoreEngine { tx, n: cfg.n, admission, metrics }, handle))
+        let router = ShardRouter::new(cfg.shards);
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = mpsc::channel::<EngineMsg<ScoreEnvelope>>();
+            let m = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("hccs-scorer-{shard}"))
+                .spawn(move || score_executor_main(cfg, shard, rx, m))
+                .with_context(|| format!("spawning score executor shard {shard}"))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        let engine = ScoreEngine { txs, router, n: cfg.n, admission, metrics };
+        Ok((engine, EngineHandle { handles }))
+    }
+
+    /// Number of executor shards.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Rows routed to `shard` and not yet answered.
+    pub fn outstanding(&self, shard: usize) -> u64 {
+        self.router.outstanding(shard)
     }
 
     /// Rejected-by-backpressure count (0 when unbounded).
@@ -373,8 +533,14 @@ impl ScoreEngine {
         }
         let permit = try_permit(&self.admission, "rows")?;
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(EngineMsg::Work(ScoreEnvelope { x, reply: reply_tx, _permit: permit }))
+        let ticket = self.router.route();
+        self.txs[ticket.shard()]
+            .send(EngineMsg::Work(ScoreEnvelope {
+                x,
+                reply: reply_tx,
+                _permit: permit,
+                _ticket: ticket,
+            }))
             .map_err(|_| anyhow!("score engine is down"))?;
         Ok(reply_rx)
     }
@@ -387,29 +553,33 @@ impl ScoreEngine {
             .map_err(|e| anyhow!("{e}"))
     }
 
-    /// Ask the engine to drain and stop.
+    /// Ask every shard to drain and stop.
     pub fn shutdown(&self) {
-        let _ = self.tx.send(EngineMsg::Shutdown);
+        for tx in &self.txs {
+            let _ = tx.send(EngineMsg::Shutdown);
+        }
     }
 }
 
 fn score_executor_main(
     cfg: ScoreConfig,
+    shard: usize,
     rx: Receiver<EngineMsg<ScoreEnvelope>>,
     metrics: Arc<Registry>,
 ) {
-    // Reused across batches: the contiguous input tile and its output.
+    // Reused across batches: this shard's contiguous input tile and its
+    // output.
     let mut tile: Vec<i8> = Vec::with_capacity(cfg.policy.max_batch * cfg.n);
     let mut phat: Vec<i32> = vec![0; cfg.policy.max_batch * cfg.n];
-    let queue_hist = metrics.histogram("scorer.queue_us");
-    let exec_hist = metrics.histogram("scorer.execute_us");
-    let batch_ctr = metrics.counter("scorer.batches");
-    let req_ctr = metrics.counter("scorer.requests");
-    let row_ctr = metrics.counter("scorer.rows_scored");
+    let queue_hist = RolledHistogram::new(&metrics, "scorer.queue_us", shard);
+    let exec_hist = RolledHistogram::new(&metrics, "scorer.execute_us", shard);
+    let batch_ctr = RolledCounter::new(&metrics, "scorer.batches", shard);
+    let req_ctr = RolledCounter::new(&metrics, "scorer.requests", shard);
+    let row_ctr = RolledCounter::new(&metrics, "scorer.rows_scored", shard);
 
     batching_event_loop(cfg.policy, rx, &req_ctr, |items| {
         let rows = items.len();
-        debug_assert!(rows >= 1 && rows <= cfg.policy.max_batch);
+        debug_assert!((1..=cfg.policy.max_batch).contains(&rows));
         let started = Instant::now();
         tile.clear();
         for q in &items {
@@ -447,9 +617,14 @@ mod tests {
                 max_wait: Duration::from_millis(wait_ms),
             },
             max_in_flight: None,
+            shards: 1,
         }
     }
 
+    /// `shards = 1` must be bit-exact with the row kernel — which is
+    /// exactly what the pre-sharding single-executor engine produced
+    /// (its own copy of this test), so a pass here pins the sharded
+    /// engine as a strict generalization of the old path.
     #[test]
     fn batched_scoring_is_bit_exact_with_row_kernel() {
         let n = 64usize;
@@ -472,6 +647,67 @@ mod tests {
         assert!(engine.metrics.counter("scorer.batches").get() >= 3);
     }
 
+    /// Any shard count produces the same per-row outputs as one shard:
+    /// rows are independent, so routing cannot change results, only
+    /// which thread computes them.
+    #[test]
+    fn multi_shard_matches_single_shard_bit_exact() {
+        let n = 48usize;
+        let mut rng = Xoshiro256::new(4242);
+        let rows: Vec<Vec<i8>> = (0..64)
+            .map(|_| (0..n).map(|_| rng.i8()).collect())
+            .collect();
+        let mut single: Option<Vec<Vec<i32>>> = None;
+        for shards in [1usize, 2, 4] {
+            let mut c = cfg(n, 8, 1);
+            c.shards = shards;
+            let (engine, handle) = ScoreEngine::start(c).unwrap();
+            let rxs: Vec<_> = rows.iter().map(|x| engine.submit(x.clone()).unwrap()).collect();
+            let got: Vec<Vec<i32>> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().expect("scoring ok").phat)
+                .collect();
+            engine.shutdown();
+            handle.join().unwrap();
+            match &single {
+                None => single = Some(got),
+                Some(want) => assert_eq!(&got, want, "{shards} shards diverged from 1"),
+            }
+        }
+    }
+
+    /// With nothing flushing, outstanding work accumulates and the
+    /// least-loaded router must spread requests across every shard; the
+    /// per-shard counters must roll up to the aggregate.
+    #[test]
+    fn router_spreads_load_and_metrics_roll_up() {
+        let mut c = cfg(16, 64, 10_000);
+        c.shards = 4;
+        let (engine, handle) = ScoreEngine::start(c).unwrap();
+        let rxs: Vec<_> = (0..16)
+            .map(|i| engine.submit(vec![i as i8; 16]).unwrap())
+            .collect();
+        for shard in 0..4 {
+            assert_eq!(engine.outstanding(shard), 4, "shard {shard} load imbalance");
+        }
+        engine.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        handle.join().unwrap();
+        let m = &engine.metrics;
+        assert_eq!(m.counter("scorer.requests").get(), 16);
+        assert_eq!(m.sum_counters("scorer.requests.shard"), 16, "rollup mismatch");
+        for shard in 0..4 {
+            let per = m.counter(&format!("scorer.requests.shard{shard}")).get();
+            assert_eq!(per, 4, "shard {shard} served {per} requests");
+        }
+        // All answered, so the router load view must have drained.
+        for shard in 0..4 {
+            assert_eq!(engine.outstanding(shard), 0);
+        }
+    }
+
     #[test]
     fn rejects_wrong_row_length_and_infeasible_theta() {
         let (engine, handle) = ScoreEngine::start(cfg(64, 4, 1)).unwrap();
@@ -483,12 +719,18 @@ mod tests {
         bad.params = HccsParams::new(100_000, 4, 64);
         let err = ScoreEngine::start(bad).err().expect("infeasible θ must not start");
         assert!(format!("{err:#}").contains("infeasible"), "{err:#}");
+
+        let mut zero = cfg(64, 4, 1);
+        zero.shards = 0;
+        assert!(ScoreEngine::start(zero).is_err(), "0 shards must not start");
     }
 
     #[test]
     fn drains_pending_rows_on_shutdown() {
-        // Huge deadline + large batch: nothing flushes until shutdown.
-        let c = cfg(16, 64, 10_000);
+        // Huge deadline + large batch: nothing flushes until shutdown;
+        // with 2 shards both must drain.
+        let mut c = cfg(16, 64, 10_000);
+        c.shards = 2;
         let (engine, handle) = ScoreEngine::start(c).unwrap();
         let rxs: Vec<_> = (0..5)
             .map(|i| engine.submit(vec![i as i8; 16]).unwrap())
@@ -504,8 +746,10 @@ mod tests {
     fn backpressure_sheds_beyond_max_in_flight() {
         let mut c = cfg(16, 128, 10_000);
         c.max_in_flight = Some(4);
+        c.shards = 2;
         let (engine, handle) = ScoreEngine::start(c).unwrap();
-        // Nothing drains (deadline far away), so the 5th submit must shed.
+        // Nothing drains (deadline far away), so the 5th submit must
+        // shed — admission is engine-wide, not per shard.
         let held: Vec<_> = (0..4).map(|_| engine.submit(vec![0i8; 16]).unwrap()).collect();
         assert!(engine.submit(vec![0i8; 16]).is_err());
         assert_eq!(engine.shed_count(), 1);

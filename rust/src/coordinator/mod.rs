@@ -1,15 +1,20 @@
-//! L3 inference coordinator: request routing, dynamic batching, model
-//! execution, per-head surrogate state.
+//! L3 inference coordinator: load-aware shard routing, dynamic
+//! batching, model execution, per-head surrogate state.
 //!
 //! The paper's contribution is the kernel + calibration, so the
 //! coordinator is the serving shell around it (DESIGN.md §4): clients
-//! submit tokenized examples; a dynamic batcher groups them under a
-//! size/deadline policy; a single executor thread owns the PJRT
-//! executables (the `xla` wrappers hold raw pointers and are not `Send`,
-//! and this image is single-core anyway) and answers through per-request
-//! channels.  Head-calibration state ([`state::HeadParamStore`]) is the
+//! submit tokenized examples; a [`router::ShardRouter`] sends each one
+//! to the executor shard with the least outstanding work (round-robin
+//! among ties); that shard's dynamic batcher groups requests under a
+//! size/deadline policy; and each shard's executor thread owns its own
+//! PJRT executables (the `xla` wrappers hold raw pointers and are not
+//! `Send`) and answers through per-request channels — so response
+//! ordering never depends on shard completion order.  `shards = 1`
+//! reproduces the original single-executor engine bit-exactly.
+//! Head-calibration state ([`state::HeadParamStore`]) is the
 //! coordinator-managed analogue of the AIE tiles' local-memory parameter
-//! tables.
+//! tables, and the shard fan-out mirrors the paper's multi-tile row
+//! partitioning (§IV-D): rows are independent, shards share nothing.
 //!
 //! Alongside the full-model [`engine::Coordinator`], the
 //! [`engine::ScoreEngine`] serves raw HCCS scoring: each flushed batch is
@@ -20,11 +25,14 @@
 pub mod admission;
 pub mod batcher;
 pub mod engine;
+pub mod router;
 pub mod state;
 
 pub use admission::{AdmissionControl, Permit, RejectReason};
 pub use batcher::{Batch, BatchPolicy, DynamicBatcher, QueuedRequest};
 pub use engine::{
-    Coordinator, CoordinatorConfig, InferReply, InferRequest, ScoreConfig, ScoreEngine, ScoreReply,
+    Coordinator, CoordinatorConfig, EngineHandle, InferReply, InferRequest, ScoreConfig,
+    ScoreEngine, ScoreReply,
 };
+pub use router::{ShardRouter, ShardTicket};
 pub use state::{HeadParamStore, ModelCalib};

@@ -1,0 +1,174 @@
+//! Load-aware routing across executor shards.
+//!
+//! The sharded engines ([`super::engine::Coordinator`],
+//! [`super::engine::ScoreEngine`]) spawn one executor thread per shard;
+//! this module decides which shard each submitted request lands on.
+//! Policy: **least outstanding work**, with a rotating scan start so
+//! ties degrade to round-robin (a cold engine distributes evenly; a
+//! shard stuck behind a slow batch stops receiving new work until it
+//! catches up).
+//!
+//! Outstanding work is tracked with RAII [`ShardTicket`]s, mirroring
+//! [`super::admission::Permit`]: the ticket rides inside the request
+//! envelope and releases its shard's slot when the envelope is dropped
+//! — reply delivered, error path, or executor panic alike — so the
+//! router's view of load cannot leak.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Routes each unit of work to the least-loaded shard, breaking ties
+/// round-robin.  Clone-per-client; clones share the same load view.
+#[derive(Clone, Debug)]
+pub struct ShardRouter {
+    outstanding: Arc<[AtomicU64]>,
+    cursor: Arc<AtomicUsize>,
+}
+
+/// RAII claim on one unit of outstanding work for one shard; dropping
+/// it releases the claim (on every path, including panics).
+#[derive(Debug)]
+pub struct ShardTicket {
+    outstanding: Arc<[AtomicU64]>,
+    shard: usize,
+}
+
+impl ShardTicket {
+    /// Which shard this ticket's work was routed to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+}
+
+impl Drop for ShardTicket {
+    fn drop(&mut self) {
+        self.outstanding[self.shard].fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+impl ShardRouter {
+    pub fn new(shards: usize) -> Self {
+        assert!(shards >= 1, "router needs at least one shard");
+        Self {
+            outstanding: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            cursor: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Outstanding (routed but not yet completed) work on one shard.
+    pub fn outstanding(&self, shard: usize) -> u64 {
+        self.outstanding[shard].load(Ordering::Acquire)
+    }
+
+    /// Total outstanding work across all shards.
+    pub fn total_outstanding(&self) -> u64 {
+        self.outstanding.iter().map(|c| c.load(Ordering::Acquire)).sum()
+    }
+
+    /// Pick the shard with the least outstanding work (scan start
+    /// rotates so ties fall back to round-robin), claim one unit on it,
+    /// and return the claim ticket.  The pick is a benign race under
+    /// concurrent clients: two simultaneous routes may both observe the
+    /// same minimum, which at worst routes both to one shard — load
+    /// stays approximately, not perfectly, balanced.
+    pub fn route(&self) -> ShardTicket {
+        let n = self.outstanding.len();
+        let start = if n > 1 { self.cursor.fetch_add(1, Ordering::Relaxed) % n } else { 0 };
+        let mut best = start;
+        let mut best_load = self.outstanding[start].load(Ordering::Acquire);
+        for step in 1..n {
+            let idx = (start + step) % n;
+            let load = self.outstanding[idx].load(Ordering::Acquire);
+            if load < best_load {
+                best = idx;
+                best_load = load;
+            }
+        }
+        self.outstanding[best].fetch_add(1, Ordering::AcqRel);
+        ShardTicket { outstanding: self.outstanding.clone(), shard: best }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_router_round_robins() {
+        let r = ShardRouter::new(4);
+        let tickets: Vec<ShardTicket> = (0..4).map(|_| r.route()).collect();
+        let mut shards: Vec<usize> = tickets.iter().map(|t| t.shard()).collect();
+        shards.sort();
+        assert_eq!(shards, vec![0, 1, 2, 3], "idle shards must take turns");
+        assert_eq!(r.total_outstanding(), 4);
+    }
+
+    #[test]
+    fn routes_around_loaded_shards() {
+        let r = ShardRouter::new(2);
+        let a = r.route();
+        let b = r.route();
+        assert_ne!(a.shard(), b.shard());
+        // Hold shard `a`, free shard `b`: new work must go to b's shard.
+        let freed = b.shard();
+        drop(b);
+        for _ in 0..3 {
+            let t = r.route();
+            assert_eq!(t.shard(), freed, "must prefer the idle shard");
+        }
+        assert_eq!(r.outstanding(a.shard()), 1);
+    }
+
+    #[test]
+    fn ticket_releases_on_drop_and_panic() {
+        let r = ShardRouter::new(1);
+        let t = r.route();
+        assert_eq!(r.outstanding(0), 1);
+        drop(t);
+        assert_eq!(r.outstanding(0), 0);
+
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _t = r.route();
+            panic!("boom");
+        }));
+        assert!(caught.is_err());
+        assert_eq!(r.outstanding(0), 0, "ticket leaked across panic");
+    }
+
+    #[test]
+    fn single_shard_always_routes_to_zero() {
+        let r = ShardRouter::new(1);
+        for _ in 0..16 {
+            assert_eq!(r.route().shard(), 0);
+        }
+    }
+
+    #[test]
+    fn concurrent_routing_stays_balanced() {
+        let r = ShardRouter::new(4);
+        let held: std::sync::Mutex<Vec<ShardTicket>> = std::sync::Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = r.clone();
+                let held = &held;
+                s.spawn(move || {
+                    for _ in 0..256 {
+                        held.lock().unwrap().push(r.route());
+                    }
+                });
+            }
+        });
+        assert_eq!(r.total_outstanding(), 4 * 256);
+        // Least-loaded routing keeps the spread tight even under races.
+        for shard in 0..4 {
+            let o = r.outstanding(shard);
+            assert!((200..=312).contains(&o), "shard {shard} holds {o}");
+        }
+        held.lock().unwrap().clear();
+        assert_eq!(r.total_outstanding(), 0);
+    }
+}

@@ -70,7 +70,9 @@ impl HeadParamStore {
         let mut out = Vec::with_capacity(heads * rows_per_head);
         for h in 0..heads {
             let (p, _) = self.per_head.at(layer, h);
-            out.extend(std::iter::repeat(*p).take(rows_per_head));
+            for _ in 0..rows_per_head {
+                out.push(*p);
+            }
         }
         out
     }

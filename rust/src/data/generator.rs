@@ -78,7 +78,10 @@ pub fn gen_sst2s(rng: &mut SplitMix64, max_len: usize) -> Generated {
     let mut used: BTreeSet<usize> = BTreeSet::new();
     for _ in 0..n_slots {
         let pos = (1 + rng.below((body_len - 1).max(1) as u64)) as usize;
-        if used.contains(&pos) || (pos >= 1 && used.contains(&(pos - 1))) || used.contains(&(pos + 1)) {
+        if used.contains(&pos)
+            || (pos >= 1 && used.contains(&(pos - 1)))
+            || used.contains(&(pos + 1))
+        {
             continue;
         }
         let positive = rng.chance(1, 2);

@@ -247,14 +247,19 @@ pub fn fig2(artifacts: &Path, model: &str, task: &str) -> Result<String> {
 /// Fig. 3 — aggregate throughput vs tile count (AIE-MLv2, n = 128).
 pub fn fig3() -> Result<String> {
     let dev = Device::new(DeviceKind::AieMlV2);
-    let mut plot = AsciiPlot::new("Fig. 3 — aggregate softmax throughput vs AIE tiles (n=128, AIE-MLv2)");
+    let mut plot =
+        AsciiPlot::new("Fig. 3 — aggregate softmax throughput vs AIE tiles (n=128, AIE-MLv2)");
     let mut tsv = Table::new("", &["tiles", "i16+div G/s", "i8+CLB G/s"]);
     let div = scaling::sweep(&dev, KernelKind::HccsI16Div, 128, dev.array_tiles);
     let clb = scaling::sweep(&dev, KernelKind::HccsI8Clb, 128, dev.array_tiles);
     plot.series("HCCS i16+div", div.iter().map(|p| (p.tiles as f64, p.eps / 1e9)).collect());
     plot.series("HCCS i8+CLB", clb.iter().map(|p| (p.tiles as f64, p.eps / 1e9)).collect());
     for (d, c) in div.iter().zip(&clb) {
-        tsv.row(&[d.tiles.to_string(), format!("{:.1}", d.eps / 1e9), format!("{:.1}", c.eps / 1e9)]);
+        tsv.row(&[
+            d.tiles.to_string(),
+            format!("{:.1}", d.eps / 1e9),
+            format!("{:.1}", c.eps / 1e9),
+        ]);
     }
     let last_d = div.last().unwrap();
     let last_c = clb.last().unwrap();

@@ -33,7 +33,7 @@ pub struct AttentionInputs<'a> {
     pub dv: usize,
 }
 
-impl<'a> AttentionInputs<'a> {
+impl AttentionInputs<'_> {
     pub fn validate(&self) -> Result<(), String> {
         if self.q.len() != self.r * self.dk {
             return Err(format!("q len {} != {}x{}", self.q.len(), self.r, self.dk));
@@ -142,7 +142,13 @@ mod tests {
     use super::*;
     use crate::rng::Xoshiro256;
 
-    fn inputs(rng: &mut Xoshiro256, r: usize, c: usize, dk: usize, dv: usize) -> (Vec<i8>, Vec<i8>, Vec<i8>) {
+    fn inputs(
+        rng: &mut Xoshiro256,
+        r: usize,
+        c: usize,
+        dk: usize,
+        dv: usize,
+    ) -> (Vec<i8>, Vec<i8>, Vec<i8>) {
         let gen = |n: usize, rng: &mut Xoshiro256| -> Vec<i8> {
             (0..n).map(|_| (rng.below(41) as i64 - 20) as i8).collect()
         };
@@ -200,20 +206,41 @@ mod tests {
         // n=4 makes B=600 infeasible (4*600 < 32767 fine, floor 600-384 >= 64 fine) —
         // construct a genuinely bad θ instead:
         let bad = HccsParams::new(100000, 6, 64);
-        assert!(
-            hccs_attention(&inp, &bad, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut out)
-                .is_err()
+        let res = hccs_attention(
+            &inp,
+            &bad,
+            OutputPath::I16,
+            Reciprocal::Div,
+            1,
+            16,
+            &mut scratch,
+            &mut out,
         );
+        assert!(res.is_err());
         let mut short = vec![0i32; 7];
-        assert!(
-            hccs_attention(&inp, &p, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut short)
-                .is_err()
+        let res = hccs_attention(
+            &inp,
+            &p,
+            OutputPath::I16,
+            Reciprocal::Div,
+            1,
+            16,
+            &mut scratch,
+            &mut short,
         );
+        assert!(res.is_err());
         let bad_inp = AttentionInputs { q: &q, k: &k, v: &v, r: 3, c: 4, dk: 4, dv: 4 };
-        assert!(
-            hccs_attention(&bad_inp, &p, OutputPath::I16, Reciprocal::Div, 1, 16, &mut scratch, &mut out)
-                .is_err()
+        let res = hccs_attention(
+            &bad_inp,
+            &p,
+            OutputPath::I16,
+            Reciprocal::Div,
+            1,
+            16,
+            &mut scratch,
+            &mut out,
         );
+        assert!(res.is_err());
     }
 
     #[test]

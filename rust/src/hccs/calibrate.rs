@@ -74,7 +74,7 @@ pub fn calibrate_rows(rows: &[Vec<f64>], n: usize, gamma: f64) -> Calibration {
                     .map(|(r, pr)| kl(pr, &normalize_phat(&phat[r * n..(r + 1) * n])))
                     .collect();
                 let obj = mean(&kls);
-                if best.as_ref().map_or(true, |b| obj < b.kl) {
+                if best.as_ref().is_none_or(|b| obj < b.kl) {
                     best = Some(Calibration { params: p, gamma, kl: obj, evaluated: 0 });
                 }
             }

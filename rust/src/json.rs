@@ -126,9 +126,9 @@ impl Value {
             Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Value::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                    out.push_str(&(*n as i64).to_string());
                 } else {
-                    out.push_str(&format!("{n}"));
+                    out.push_str(&n.to_string());
                 }
             }
             Value::Str(s) => write_escaped(out, s),
@@ -231,7 +231,7 @@ struct Parser<'a> {
     i: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
     }
@@ -338,7 +338,9 @@ impl<'a> Parser<'a> {
                         }
                         self.i += 1;
                     }
-                    s.push_str(std::str::from_utf8(&self.b[start..self.i]).map_err(|_| self.err("bad utf8"))?);
+                    let run = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|_| self.err("bad utf8"))?;
+                    s.push_str(run);
                 }
             }
         }

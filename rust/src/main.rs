@@ -4,12 +4,13 @@
 //! hccs tables  [--artifacts DIR] [--table 1|2|3] [--fig 2|3] [--limit N] [--remeasure]
 //! hccs eval    [--artifacts DIR] [--model M] [--task T] [--variant float|hccs] [--limit N]
 //! hccs serve   [--artifacts DIR] [--model M] [--task T] [--variant V] [--batch B] [--wait-ms W]
-//! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T]
+//!              [--shards S]
+//! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
 //! hccs calibrate [--n N] [--rows R] [--spread X]   (synthetic logit demo)
 //! ```
 
 use std::io::{stdin, stdout, BufWriter};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use hccs::error::{anyhow, bail, Context, Result};
 
@@ -28,7 +29,8 @@ use hccs::tokenizer::Tokenizer;
 
 const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
-    "batch=", "wait-ms=", "device=", "kernel=", "n=", "tiles=", "rows=", "spread=", "help",
+    "batch=", "wait-ms=", "shards=", "device=", "kernel=", "n=", "tiles=", "rows=", "spread=",
+    "help",
 ];
 
 fn main() -> Result<()> {
@@ -53,7 +55,7 @@ fn usage() -> &'static str {
      run with a subcommand; see module docs (src/main.rs) for flags"
 }
 
-fn cmd_tables(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn cmd_tables(args: &Args, artifacts: &Path) -> Result<()> {
     let limit = args.parse_num("limit", 512usize)?;
     let remeasure = args.flag("remeasure");
     let which_table = args.get("table");
@@ -85,7 +87,7 @@ fn cmd_tables(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn cmd_eval(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.get_or("model", "bert-tiny");
     let task = args.get_or("task", "sst2s");
     let variant = args.get_or("variant", "hccs");
@@ -98,12 +100,13 @@ fn cmd_eval(args: &Args, artifacts: &PathBuf) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
+fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.get_or("model", "bert-tiny").to_string();
     let task_name = args.get_or("task", "sst2s");
     let task = TaskKind::parse(task_name).context("bad --task")?;
+    let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let cfg = CoordinatorConfig {
-        artifacts: artifacts.clone(),
+        artifacts: artifacts.to_path_buf(),
         model,
         task: task_name.to_string(),
         variant: args.get_or("variant", "hccs").to_string(),
@@ -112,11 +115,18 @@ fn cmd_serve(args: &Args, artifacts: &PathBuf) -> Result<()> {
             max_wait: std::time::Duration::from_millis(args.parse_num("wait-ms", 5u64)?),
         },
         max_in_flight: None,
+        shards,
     };
     let tokenizer = Tokenizer::load(&artifacts.join("vocab.json"))?;
     let (coord, handle) = Coordinator::start(cfg)?;
-    eprintln!("serving on stdin (one request per line; Ctrl-D to finish)");
-    let n = server::serve(&coord, &tokenizer, task, stdin().lock(), BufWriter::new(stdout().lock()))?;
+    eprintln!("serving on stdin across {shards} shard(s) (one request per line; Ctrl-D to finish)");
+    let n = server::serve(
+        &coord,
+        &tokenizer,
+        task,
+        stdin().lock(),
+        BufWriter::new(stdout().lock()),
+    )?;
     coord.shutdown();
     let _ = handle.join();
     eprintln!("served {n} requests\n{}", coord.metrics.render());
@@ -139,6 +149,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
     };
     let n = args.parse_num("n", 64usize)?;
     let tiles = args.parse_num("tiles", 1usize)?;
+    let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let cycles = tile::cycles_per_row(kernel, &device, n);
     let single = tile::throughput_eps(kernel, &device, n);
     println!("{} / {} @ n={n}:", device.name(), kernel.name());
@@ -146,6 +157,24 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if tiles > 1 {
         let p = scaling::aggregate(&device, kernel, n, tiles, tiles as u64 * 4096);
         println!("  {tiles} tiles: {} (occupancy {:.0}%)", fmt_gps(p.eps), p.occupancy * 100.0);
+    }
+    if shards > 1 {
+        // Shard-parallel dispatch model (the coordinator analogue): a
+        // central feeder issues batched tiles to the least-busy shard.
+        let (n_tiles, rows_per_tile) = (64u64, 32u64);
+        let mut msim = tile::MultiTileSim::new(device, kernel, shards);
+        for _ in 0..n_tiles {
+            msim.dispatch_tile(rows_per_tile, n);
+        }
+        let serial = tile::cycles_per_tile(kernel, &device, rows_per_tile, n) * n_tiles;
+        println!(
+            "  {shards} shards, {n_tiles} tiles x {rows_per_tile} rows: makespan {} cycles \
+             ({:.2}x vs 1 shard, occupancy {:.0}%), {}",
+            msim.makespan_cycles(),
+            serial as f64 / msim.makespan_cycles() as f64,
+            msim.occupancy() * 100.0,
+            fmt_gps(msim.throughput_eps()),
+        );
     }
     let sim = tile::TileSim::new(device, kernel);
     println!("  stage profile:");

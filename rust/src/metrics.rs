@@ -62,7 +62,7 @@ impl Histogram {
         }
         let log2 = 63 - us.leading_zeros() as u64;
         let frac = (us >> log2.saturating_sub(4)) & 0xF; // 4 fractional bits
-        ((log2 as usize) * BUCKETS_PER_OCTAVE / 1 + frac as usize * BUCKETS_PER_OCTAVE / 16)
+        ((log2 as usize) * BUCKETS_PER_OCTAVE + frac as usize * BUCKETS_PER_OCTAVE / 16)
             .min(N_BUCKETS - 1)
     }
 
@@ -142,6 +142,21 @@ impl Registry {
             .clone()
     }
 
+    /// Sum of every counter whose name starts with `prefix` — the
+    /// aggregate view over a per-shard family (the sharded engines
+    /// register `<name>` plus `<name>.shard<K>` for each shard, so
+    /// `sum_counters("scorer.requests.shard")` must equal the
+    /// `scorer.requests` aggregate).
+    pub fn sum_counters(&self, prefix: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .map(|(_, c)| c.get())
+            .sum()
+    }
+
     /// Human-readable dump, sorted by name.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -207,5 +222,17 @@ mod tests {
         r.counter("x").inc();
         assert_eq!(r.counter("x").get(), 2);
         assert!(r.render().contains("x = 2"));
+    }
+
+    #[test]
+    fn sum_counters_rolls_up_a_shard_family() {
+        let r = Registry::default();
+        r.counter("eng.requests").add(7);
+        r.counter("eng.requests.shard0").add(3);
+        r.counter("eng.requests.shard1").add(4);
+        r.counter("eng.batches.shard0").add(99); // different family
+        assert_eq!(r.sum_counters("eng.requests.shard"), 7);
+        assert_eq!(r.sum_counters("eng.requests"), 14, "prefix includes the aggregate");
+        assert_eq!(r.sum_counters("nope"), 0);
     }
 }

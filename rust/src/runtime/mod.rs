@@ -58,7 +58,11 @@ impl Runtime {
     }
 
     /// Upload a host tensor to the device.
-    pub fn upload<T: xla::ArrayElement>(&self, data: &[T], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    pub fn upload<T: xla::ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(data, dims, None)
             .map_err(|e| anyhow!("host->device upload: {e}"))
@@ -103,7 +107,11 @@ pub struct ModelRunner {
 
 impl ModelRunner {
     /// Load a model variant from the artifacts directory.
-    pub fn load(runtime: std::rc::Rc<Runtime>, artifacts: &Path, manifest: ModelManifest) -> Result<Self> {
+    pub fn load(
+        runtime: std::rc::Rc<Runtime>,
+        artifacts: &Path,
+        manifest: ModelManifest,
+    ) -> Result<Self> {
         let exe = runtime.load_hlo(&artifacts.join(&manifest.hlo))?;
         let w = Weights::load(&artifacts.join(&manifest.weights))?;
         // Bind weights positionally, verifying name/shape against the

@@ -51,7 +51,8 @@ impl Weights {
             if ndim > 8 {
                 bail!("implausible rank {ndim} for {name}");
             }
-            let dims: Vec<usize> = (0..ndim).map(|_| r.u32().map(|v| v as usize)).collect::<Result<_>>()?;
+            let dims: Vec<usize> =
+                (0..ndim).map(|_| r.u32().map(|v| v as usize)).collect::<Result<_>>()?;
             let numel: usize = dims.iter().product();
             let raw = r.take(numel * 4)?;
             let data: Vec<f32> = raw

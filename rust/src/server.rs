@@ -8,21 +8,49 @@
 //! ```
 //!
 //! The server tokenizes with the shared artifact vocabulary, submits to
-//! the [`crate::coordinator::Coordinator`], and writes one response line
-//! per request in input order.  Designed for `stdin`/`stdout` piping and
-//! for in-process use by the examples (pass any `BufRead`/`Write`).
+//! an [`InferBackend`] (the sharded [`Coordinator`] in production), and
+//! writes one response line per request **in input order** — each
+//! request carries its own reply channel and the server collects them
+//! FIFO, so ordering holds no matter which shard answers first.
+//! Designed for `stdin`/`stdout` piping and for in-process use by the
+//! examples and tests (pass any `BufRead`/`Write`).
 
 use std::io::{BufRead, Write};
+use std::sync::mpsc::Receiver;
 
 use crate::error::{anyhow, Context, Result};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, InferReply};
 use crate::data::TaskKind;
 use crate::tokenizer::Tokenizer;
 
+/// Anything that can answer tokenized inference requests through a
+/// per-request reply channel.  Production uses the sharded
+/// [`Coordinator`]; tests substitute lighter engines (e.g. a
+/// [`crate::coordinator::ScoreEngine`] adapter) so the full serve loop
+/// — including multi-shard reply ordering — runs without PJRT
+/// artifacts.
+pub trait InferBackend {
+    fn submit_request(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+    ) -> Result<Receiver<Result<InferReply, String>>>;
+}
+
+impl InferBackend for Coordinator {
+    fn submit_request(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        self.submit(ids, segments)
+    }
+}
+
 /// Serve until EOF; returns the number of requests answered.
-pub fn serve<R: BufRead, W: Write>(
-    coordinator: &Coordinator,
+pub fn serve<E: InferBackend, R: BufRead, W: Write>(
+    coordinator: &E,
     tokenizer: &Tokenizer,
     task: TaskKind,
     input: R,
@@ -37,7 +65,7 @@ pub fn serve<R: BufRead, W: Write>(
             continue;
         }
         let (ids, segments) = encode_request(tokenizer, task, line, max_len);
-        pending.push(coordinator.submit(ids, segments)?);
+        pending.push(coordinator.submit_request(ids, segments)?);
     }
     let mut served = 0u64;
     for rx in pending {

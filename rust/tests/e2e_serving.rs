@@ -2,7 +2,7 @@
 //! injection on the load path.  Artifact-dependent cases skip loudly when
 //! `make artifacts` has not run.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
@@ -20,7 +20,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     None
 }
 
-fn tiny_ready(artifacts: &PathBuf) -> bool {
+fn tiny_ready(artifacts: &Path) -> bool {
     hccs::runtime::manifest::summary_path(artifacts, "bert-tiny", "sst2s").is_some()
 }
 
@@ -41,6 +41,7 @@ fn coordinator_serves_batches_and_preserves_request_identity() {
         variant: "hccs".into(),
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
         max_in_flight: None,
+        shards: 1,
     })
     .expect("start coordinator");
 
@@ -94,6 +95,7 @@ fn text_server_round_trip() {
         variant: "hccs".into(),
         policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
         max_in_flight: None,
+        shards: 1,
     })
     .unwrap();
     let input = "good01 good02 w003\nnot good01 bad04 bad05\n# comment\n\n";
@@ -135,6 +137,7 @@ fn missing_artifacts_fail_loudly_not_silently() {
         variant: "hccs".into(),
         policy: BatchPolicy::default(),
         max_in_flight: None,
+        shards: 1,
     })
     .err()
     .expect("must not start without artifacts");

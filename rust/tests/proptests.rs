@@ -308,7 +308,11 @@ fn prop_batcher_conserves_and_orders() {
             let mut flushed: Vec<u64> = Vec::new();
             let mut collect = |batch: hccs::coordinator::Batch<u64>| {
                 if batch.items.len() > script.max_batch {
-                    return Err(format!("batch of {} > max {}", batch.items.len(), script.max_batch));
+                    return Err(format!(
+                        "batch of {} > max {}",
+                        batch.items.len(),
+                        script.max_batch
+                    ));
                 }
                 if batch.items.is_empty() {
                     return Err("empty batch".into());

@@ -1,0 +1,190 @@
+//! Integration: `server::serve` end-to-end through a **multi-shard**
+//! engine, with no PJRT artifacts required.
+//!
+//! An adapter implements [`server::InferBackend`] over the sharded
+//! [`ScoreEngine`]: the first real token of each request selects the
+//! hot logit position of a synthetic int8 row, so the reply's argmax
+//! tags exactly which request it answers.  A deterministic per-request
+//! jitter delays reply delivery by different amounts, scrambling
+//! completion order across shards — the server must still emit one
+//! response line per request **in input order**, while skipping
+//! comment/empty lines and serving malformed (all-`[UNK]`) ones.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::time::Duration;
+
+use hccs::coordinator::{BatchPolicy, EngineHandle, InferReply, ScoreConfig, ScoreEngine};
+use hccs::data::TaskKind;
+use hccs::error::Result;
+use hccs::hccs::{HccsParams, OutputPath, Reciprocal};
+use hccs::server::{self, InferBackend};
+use hccs::tokenizer::Tokenizer;
+
+const N: usize = 32;
+
+fn tokenizer() -> Tokenizer {
+    let mut toks: Vec<String> = ["[PAD]", "[CLS]", "[SEP]", "[UNK]"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for i in 0..N {
+        toks.push(format!("t{i:03}"));
+    }
+    Tokenizer::from_tokens(toks).unwrap()
+}
+
+fn start_engine(shards: usize) -> (ScoreEngine, EngineHandle) {
+    ScoreEngine::start(ScoreConfig {
+        n: N,
+        params: HccsParams::checked(300, 4, 16, N).unwrap(),
+        out_path: OutputPath::I16,
+        recip: Reciprocal::Div,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        max_in_flight: None,
+        shards,
+    })
+    .unwrap()
+}
+
+/// Logit position lit up for a tokenized request: its first real token
+/// id, shifted past the 4 specials ([UNK] requests land on position 0).
+fn hot_position(ids: &[i32]) -> usize {
+    (ids.get(1).copied().unwrap_or(0).max(0) as usize).saturating_sub(4) % N
+}
+
+/// Adapter: tokenized request → synthetic int8 row → sharded scoring.
+struct ScoreFront {
+    engine: ScoreEngine,
+    seq: AtomicU64,
+}
+
+impl InferBackend for ScoreFront {
+    fn submit_request(
+        &self,
+        ids: Vec<i32>,
+        _segments: Vec<i32>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        let mut row = vec![-60i8; N];
+        row[hot_position(&ids)] = 60;
+        let score_rx = self.engine.submit(row)?;
+        let k = self.seq.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        // Bridge thread: map the score reply into an InferReply, after a
+        // per-request jitter that scrambles delivery order.
+        std::thread::spawn(move || {
+            let reply = score_rx.recv();
+            std::thread::sleep(Duration::from_millis((k * 7) % 23));
+            let mapped = match reply {
+                Ok(Ok(r)) => {
+                    let logits: Vec<f32> =
+                        r.phat.iter().map(|&v| v as f32 / 32767.0).collect();
+                    let predicted = logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(j, _)| j)
+                        .unwrap_or(0);
+                    Ok(InferReply { id: k, predicted, logits, latency: r.latency })
+                }
+                Ok(Err(e)) => Err(e),
+                Err(_) => Err("score engine dropped request".to_string()),
+            };
+            let _ = tx.send(mapped);
+        });
+        Ok(rx)
+    }
+}
+
+/// The serve input: request lines interleaved with comments, blanks,
+/// and malformed (unknown-token) lines.  Returns (input, expected hot
+/// positions of the lines that must be served, in input order).
+fn build_input(tok: &Tokenizer, requests: usize) -> (String, Vec<usize>) {
+    let max_len = TaskKind::Sst2s.max_len();
+    let mut input = String::from("# leading comment\n\n");
+    let mut lines: Vec<String> = Vec::new();
+    for k in 0..requests {
+        lines.push(format!("t{:03}", (requests - 1 - k) % N));
+        if k % 5 == 2 {
+            lines.push("# interleaved comment".to_string());
+        }
+        if k % 7 == 3 {
+            lines.push(String::new());
+        }
+        if k % 11 == 4 {
+            lines.push("??? totally unknown $tokens".to_string());
+        }
+    }
+    let mut expected = Vec::new();
+    for line in &lines {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            input.push_str(line);
+            input.push('\n');
+            continue;
+        }
+        let (ids, _) = server::encode_request(tok, TaskKind::Sst2s, t, max_len);
+        expected.push(hot_position(&ids));
+        input.push_str(line);
+        input.push('\n');
+    }
+    (input, expected)
+}
+
+fn serve_through(shards: usize, input: &str, tok: &Tokenizer) -> (u64, String, ScoreEngine) {
+    let (engine, handle) = start_engine(shards);
+    let front = ScoreFront { engine: engine.clone(), seq: AtomicU64::new(0) };
+    let mut out = Vec::new();
+    let served = server::serve(
+        &front,
+        tok,
+        TaskKind::Sst2s,
+        std::io::BufReader::new(input.as_bytes()),
+        &mut out,
+    )
+    .unwrap();
+    engine.shutdown();
+    handle.join().unwrap();
+    (served, String::from_utf8(out).unwrap(), engine)
+}
+
+#[test]
+fn multi_shard_serve_preserves_input_order_under_scrambled_completion() {
+    let tok = tokenizer();
+    let (input, expected) = build_input(&tok, 48);
+    let (served, text, engine) = serve_through(4, &input, &tok);
+    assert_eq!(served as usize, expected.len(), "comment/blank lines must be skipped");
+
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), expected.len());
+    for (i, (line, want)) in lines.iter().zip(&expected).enumerate() {
+        let mut parts = line.split_whitespace();
+        let predicted: usize = parts.next().unwrap().parse().unwrap();
+        assert_eq!(
+            predicted, *want,
+            "line {i}: reply order diverged from input order"
+        );
+        let probs: Vec<f32> = parts.map(|p| p.parse().unwrap()).collect();
+        assert_eq!(probs.len(), N);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-2);
+    }
+
+    // The workload must actually have exercised every shard.
+    let m = &engine.metrics;
+    assert_eq!(m.counter("scorer.requests").get(), served);
+    for shard in 0..4 {
+        let per = m.counter(&format!("scorer.requests.shard{shard}")).get();
+        assert!(per > 0, "shard {shard} never served a request");
+    }
+    assert_eq!(m.sum_counters("scorer.requests.shard"), served);
+}
+
+#[test]
+fn multi_shard_serve_output_is_identical_to_single_shard() {
+    let tok = tokenizer();
+    let (input, _) = build_input(&tok, 40);
+    let (served1, text1, _) = serve_through(1, &input, &tok);
+    let (served4, text4, _) = serve_through(4, &input, &tok);
+    assert_eq!(served1, served4);
+    assert_eq!(text1, text4, "sharding must not change served bytes");
+}
