@@ -1,61 +1,44 @@
 //! End-to-end serving driver (the E2E validation deliverable).
 //!
-//! Loads the QAT-retrained HCCS BERT executable through the coordinator,
-//! generates a live labeled workload with the cross-language generator,
-//! serves it through the dynamic batcher, and reports accuracy,
-//! throughput, and latency percentiles — the serving-paper analogue of
-//! "load a small real model and serve batched requests".
+//! Generates a live labeled workload with the cross-language generator,
+//! serves it, and reports accuracy, throughput, and latency
+//! percentiles.  Two backends behind the same [`InferBackend`] trait:
 //!
-//! Run: `make artifacts && cargo run --release --example serve_classifier -- \
-//!        [--model bert-tiny] [--task sst2s] [--variant hccs] [--requests 256]`
+//! * `--backend native` (default) — the pure-Rust integer encoder
+//!   (`rust/src/model/`), seeded + calibrated at startup: runs on a
+//!   fresh clone with **zero artifacts**.  `--mode` picks the softmax
+//!   backend (i16_div | i16_clb | i8_div | i8_clb | f32).
+//! * `--backend pjrt` — the QAT-retrained HCCS BERT executable through
+//!   the sharded coordinator (requires `make artifacts`).
+//!
+//! Run: `cargo run --release --example serve_classifier -- \
+//!        [--backend native|pjrt] [--model bert-tiny] [--task sst2s] [--requests 256]`
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use hccs::error::{anyhow, Context, Result};
 
 use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::{TaskKind, WorkloadGen};
+use hccs::model::{ModelConfig, NativeBackend, NativeModel, SoftmaxBackend};
+use hccs::server::InferBackend;
 
 const KNOWN: &[&str] = &[
     "artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "wait-ms=", "seed=",
-    "shards=",
+    "shards=", "backend=", "mode=", "model-seed=",
 ];
 
-fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1), KNOWN).map_err(|e| anyhow!("{e}"))?;
-    let artifacts = PathBuf::from(args.get_or("artifacts", hccs::ARTIFACTS_DIR));
-    let model = args.get_or("model", "bert-tiny").to_string();
-    let task_name = args.get_or("task", "sst2s").to_string();
-    let variant = args.get_or("variant", "hccs").to_string();
-    let requests = args.parse_num("requests", 256usize)?;
-    let batch = args.parse_num("batch", 8usize)?;
-    let wait_ms = args.parse_num("wait-ms", 5u64)?;
-    let seed = args.parse_num("seed", 99u64)?;
-    let shards = args.parse_num_at_least("shards", 1usize, 1)?;
-    let task = TaskKind::parse(&task_name).context("bad --task (sst2s|mnlis)")?;
-
-    println!(
-        "== serve_classifier: {model}/{task_name}/{variant}, {requests} requests, \
-         batch {batch}, {shards} shard(s)"
-    );
-    let (coord, handle) = Coordinator::start(CoordinatorConfig {
-        artifacts,
-        model,
-        task: task_name.clone(),
-        variant,
-        policy: BatchPolicy {
-            max_batch: batch,
-            max_wait: std::time::Duration::from_millis(wait_ms),
-        },
-        max_in_flight: None,
-        shards,
-    })
-    .context("starting coordinator — did you run `make artifacts`?")?;
-
-    // Open-loop client: submit everything, then collect (the batcher
-    // forms full batches; per-request latency includes queueing).
+/// Open-loop client over any inference backend: submit everything,
+/// then collect (per-request latency includes queueing where the
+/// backend batches).
+fn run_workload<B: InferBackend>(
+    backend: &B,
+    task: TaskKind,
+    requests: usize,
+    seed: u64,
+) -> Result<(usize, Vec<u64>, Duration)> {
     let mut generator = WorkloadGen::new(task, seed);
     let mut expected = Vec::with_capacity(requests);
     let mut receivers = Vec::with_capacity(requests);
@@ -63,7 +46,7 @@ fn main() -> Result<()> {
     for _ in 0..requests {
         let ex = generator.next_example();
         expected.push(ex.label);
-        receivers.push(coord.submit(ex.ids, ex.segments)?);
+        receivers.push(backend.submit_request(ex.ids, ex.segments)?);
     }
     let mut correct = 0usize;
     let mut latencies_us: Vec<u64> = Vec::with_capacity(requests);
@@ -72,13 +55,13 @@ fn main() -> Result<()> {
             .recv()
             .context("engine dropped request")?
             .map_err(|e| anyhow!("{e}"))?;
-        correct += (reply.predicted as i32 == *want) as usize;
+        correct += usize::from(reply.predicted as i32 == *want);
         latencies_us.push(reply.latency.as_micros() as u64);
     }
-    let wall = t0.elapsed();
-    coord.shutdown();
-    let _ = handle.join();
+    Ok((correct, latencies_us, t0.elapsed()))
+}
 
+fn report(requests: usize, correct: usize, mut latencies_us: Vec<u64>, wall: Duration) {
     latencies_us.sort();
     let pct = |p: f64| latencies_us[((latencies_us.len() - 1) as f64 * p) as usize];
     println!("\nresults:");
@@ -87,8 +70,78 @@ fn main() -> Result<()> {
     println!("  throughput  : {:.1} req/s", requests as f64 / wall.as_secs_f64());
     println!(
         "  latency     : p50 {}us  p95 {}us  p99 {}us  max {}us",
-        pct(0.50), pct(0.95), pct(0.99), latencies_us.last().unwrap()
+        pct(0.50),
+        pct(0.95),
+        pct(0.99),
+        latencies_us.last().unwrap()
     );
-    println!("\ncoordinator metrics:\n{}", coord.metrics.render());
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), KNOWN).map_err(|e| anyhow!("{e}"))?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", hccs::ARTIFACTS_DIR));
+    let model = args.get_or("model", "bert-tiny").to_string();
+    let task_name = args.get_or("task", "sst2s").to_string();
+    let variant = args.get_or("variant", "hccs").to_string();
+    let requests = args.parse_num_at_least("requests", 256usize, 1)?;
+    let batch = args.parse_num("batch", 8usize)?;
+    let wait_ms = args.parse_num("wait-ms", 5u64)?;
+    let seed = args.parse_num("seed", 99u64)?;
+    let shards = args.parse_num_at_least("shards", 1usize, 1)?;
+    let task = TaskKind::parse(&task_name).context("bad --task (sst2s|mnlis)")?;
+
+    match args.get_or("backend", "native") {
+        "native" => {
+            // Same misconfiguration guard as `hccs serve`: don't let
+            // pjrt-only flags be dropped silently.
+            for flag in ["variant", "shards", "batch", "wait-ms", "artifacts"] {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "warning: --{flag} only applies to --backend pjrt; \
+                         ignored by the native backend"
+                    );
+                }
+            }
+            let mode = SoftmaxBackend::parse(args.get_or("mode", "i16_div"))
+                .context("bad --mode (i16_div|i16_clb|i8_div|i8_clb|f32)")?;
+            let model_seed = args.parse_num("model-seed", 42u64)?;
+            let cfg = ModelConfig::parse(&model, task)
+                .with_context(|| format!("unknown --model {model:?} (bert-tiny|bert-small)"))?;
+            println!(
+                "== serve_classifier: native {model}/{task_name} softmax={}, \
+                 {requests} requests (zero artifacts)",
+                mode.name()
+            );
+            let native = NativeModel::new(cfg, task, model_seed)?;
+            let front = NativeBackend::new(std::sync::Arc::new(native), mode);
+            let (correct, latencies, wall) = run_workload(&front, task, requests, seed)?;
+            report(requests, correct, latencies, wall);
+        }
+        "pjrt" => {
+            println!(
+                "== serve_classifier: pjrt {model}/{task_name}/{variant}, {requests} requests, \
+                 batch {batch}, {shards} shard(s)"
+            );
+            let (coord, handle) = Coordinator::start(CoordinatorConfig {
+                artifacts,
+                model,
+                task: task_name.clone(),
+                variant,
+                policy: BatchPolicy {
+                    max_batch: batch,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+                max_in_flight: None,
+                shards,
+            })
+            .context("starting coordinator — did you run `make artifacts`?")?;
+            let (correct, latencies, wall) = run_workload(&coord, task, requests, seed)?;
+            coord.shutdown();
+            let _ = handle.join();
+            report(requests, correct, latencies, wall);
+            println!("\ncoordinator metrics:\n{}", coord.metrics.render());
+        }
+        other => return Err(anyhow!("unknown --backend {other:?} (native|pjrt)")),
+    }
     Ok(())
 }

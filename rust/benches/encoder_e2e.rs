@@ -1,0 +1,103 @@
+//! Bench target for the **native full-model path**: end-to-end
+//! examples/s of the integer encoder under every softmax backend
+//! (f32 reference vs all four HCCS modes), on the real bert-tiny
+//! shapes.
+//!
+//! Prints one table row per backend with examples/s, speedup vs the
+//! f32 reference, and the backend's prediction agreement on the bench
+//! workload, then a machine-readable JSON document (see EXPERIMENTS.md
+//! §encoder_e2e for the schema).  When `HCCS_BENCH_JSON` is set the
+//! document is also written to `BENCH_encoder_e2e.json`; budgets honor
+//! `HCCS_BENCH_*_MS`.
+
+use hccs::aie_sim::trace::EncoderTrace;
+use hccs::benchkit::{bench, sink, write_json};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::json::Value;
+use hccs::model::{eval_native, EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
+use hccs::report::Table;
+
+const BENCH_EXAMPLES: usize = 32;
+const AGREEMENT_EXAMPLES: usize = 32;
+
+fn main() {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig::bert_tiny(task);
+    eprintln!("calibrating native bert-tiny/{}...", task.name());
+    let model = NativeModel::new(cfg, task, 42).expect("model build");
+    // Shapes for the AIE capacity projection come from the actual
+    // model config, not hardcoded values.
+    let trace = EncoderTrace::from_config(&cfg);
+
+    let mut generator = WorkloadGen::new(task, 7);
+    let examples: Vec<_> = (0..BENCH_EXAMPLES).map(|_| generator.next_example()).collect();
+
+    let backends: Vec<SoftmaxBackend> = std::iter::once(SoftmaxBackend::F32Ref)
+        .chain(SoftmaxBackend::hccs_modes())
+        .collect();
+    let agreement = eval_native(
+        &model,
+        "bert-tiny",
+        &SoftmaxBackend::hccs_modes(),
+        AGREEMENT_EXAMPLES,
+    )
+    .expect("agreement eval");
+
+    let mut table = Table::new(
+        "native encoder end-to-end (bert-tiny/sst2s, this machine)",
+        &["backend", "examples/s", "vs f32", "agreement"],
+    );
+    let mut cases: Vec<Value> = Vec::new();
+    let mut f32_eps = 0.0f64;
+    for backend in backends {
+        let mut scratch = EncoderScratch::default();
+        let mut i = 0usize;
+        let r = bench(&format!("encoder {}", backend.name()), || {
+            let ex = &examples[i % examples.len()];
+            i += 1;
+            let inf = model
+                .forward(&ex.ids, &ex.segments, backend, &mut scratch)
+                .expect("forward");
+            sink(inf.predicted);
+        });
+        let eps = r.per_second(1.0);
+        if backend == SoftmaxBackend::F32Ref {
+            f32_eps = eps;
+        }
+        let agree = agreement.mode(backend.name()).map(|m| m.agreement);
+        table.row(&[
+            backend.name().to_string(),
+            format!("{eps:.1}"),
+            format!("{:.2}x", eps / f32_eps.max(1e-9)),
+            agree.map_or("(reference)".to_string(), |a| format!("{a:.4}")),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("backend".to_string(), Value::from(backend.name()));
+        case.insert("examples_per_s".to_string(), Value::from(eps));
+        case.insert("median_ns".to_string(), Value::from(r.median.as_nanos() as i64));
+        case.insert(
+            "speedup_vs_f32".to_string(),
+            Value::from(eps / f32_eps.max(1e-9)),
+        );
+        if let Some(a) = agree {
+            case.insert("agreement_vs_f32".to_string(), Value::from(a));
+        }
+        cases.push(Value::Obj(case));
+    }
+    println!("{}", table.render());
+
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("bench".to_string(), Value::from("encoder_e2e"));
+    doc.insert("model".to_string(), Value::from("bert-tiny"));
+    doc.insert("task".to_string(), Value::from(task.name()));
+    doc.insert("units".to_string(), Value::from("examples_per_second"));
+    doc.insert("softmax_rows_per_example".to_string(), Value::from(trace.rows() as i64));
+    doc.insert(
+        "agreement_examples".to_string(),
+        Value::from(AGREEMENT_EXAMPLES as i64),
+    );
+    doc.insert("cases".to_string(), Value::Arr(cases));
+    let doc = Value::Obj(doc);
+    println!("{}", doc.to_string_pretty());
+    write_json("encoder_e2e", &doc);
+}

@@ -36,6 +36,18 @@ impl EncoderTrace {
         Self { layers: 4, heads: 8, queries: seq, keys: seq }
     }
 
+    /// Trace of an actual native-model configuration, so capacity
+    /// planning and the `encoder_e2e` bench use the real shapes
+    /// instead of hardcoded ones.
+    pub fn from_config(cfg: &crate::model::ModelConfig) -> Self {
+        Self {
+            layers: cfg.layers,
+            heads: cfg.heads,
+            queries: cfg.seq_len,
+            keys: cfg.seq_len,
+        }
+    }
+
     /// Softmax rows per inference.
     pub fn rows(&self) -> u64 {
         (self.layers * self.heads * self.queries) as u64
@@ -87,13 +99,18 @@ pub fn size_allocation(
 }
 
 /// Convenience: the softmax share table used by the aie_throughput
-/// example (rates in inferences/s).
+/// example (rates in inferences/s).  Traces come from the actual
+/// native-model configurations, so the capacity table always matches
+/// the shapes `hccs eval` runs.
 pub fn share_table(device: &Device, kernel: KernelKind) -> Vec<(String, f64, Allocation)> {
+    use crate::data::TaskKind;
+    use crate::model::ModelConfig;
     let mut out = Vec::new();
-    for (name, trace) in [
-        ("bert-tiny seq64", EncoderTrace::bert_tiny(64)),
-        ("bert-small seq128", EncoderTrace::bert_small(128)),
+    for (name, cfg) in [
+        ("bert-tiny seq64", ModelConfig::bert_tiny(TaskKind::Sst2s)),
+        ("bert-small seq128", ModelConfig::bert_small(TaskKind::Mnlis)),
     ] {
+        let trace = EncoderTrace::from_config(&cfg);
         for rate in [1_000.0, 10_000.0, 100_000.0] {
             out.push((name.to_string(), rate, size_allocation(device, kernel, &trace, rate)));
         }
@@ -115,6 +132,18 @@ mod tests {
         let t = EncoderTrace::bert_small(128);
         assert_eq!(t.rows(), 4 * 8 * 128);
         assert_eq!(t.elements(), 4 * 8 * 128 * 128);
+    }
+
+    #[test]
+    fn from_config_matches_presets() {
+        use crate::data::TaskKind;
+        use crate::model::ModelConfig;
+        let tiny = EncoderTrace::from_config(&ModelConfig::bert_tiny(TaskKind::Sst2s));
+        let preset = EncoderTrace::bert_tiny(64);
+        assert_eq!(tiny.rows(), preset.rows());
+        assert_eq!(tiny.elements(), preset.elements());
+        let small = EncoderTrace::from_config(&ModelConfig::bert_small(TaskKind::Mnlis));
+        assert_eq!(small.rows(), EncoderTrace::bert_small(128).rows());
     }
 
     #[test]

@@ -45,6 +45,62 @@ pub struct HeadParamStore {
 }
 
 impl HeadParamStore {
+    /// Build a store from run-time per-head calibrations (the
+    /// artifact-free path used by [`crate::model::NativeModel`]).
+    ///
+    /// `params`/`gamma`/`kl` are `(layer, head)` row-major with
+    /// `layers * heads` entries.  The per-layer and global granularities
+    /// are summaries: each pools its group onto the member head with the
+    /// lowest achieved calibration KL (no re-search — the grid search
+    /// already ran per head, and Table II shows coarser granularities
+    /// only ever do worse).
+    pub fn from_per_head(
+        layers: usize,
+        heads: usize,
+        params: &[HccsParams],
+        gamma: &[f64],
+        kl: &[f64],
+        n: usize,
+    ) -> Result<HeadParamStore> {
+        let count = layers * heads;
+        if count == 0 || params.len() != count || gamma.len() != count || kl.len() != count {
+            bail!("per-head tables must be layers x heads = {count} entries");
+        }
+        for (i, p) in params.iter().enumerate() {
+            p.validate(n).with_context(|| {
+                format!("infeasible θ at layer {} head {}", i / heads, i % heads)
+            })?;
+        }
+        let best_in = |range: std::ops::Range<usize>| {
+            range
+                .clone()
+                .min_by(|&a, &b| kl[a].partial_cmp(&kl[b]).unwrap_or(std::cmp::Ordering::Equal))
+                .unwrap_or(range.start)
+        };
+        let calib = |granularity: &str, pick: Vec<usize>| ModelCalib {
+            granularity: granularity.to_string(),
+            layers,
+            heads,
+            params: pick.iter().map(|&i| params[i]).collect(),
+            gamma: pick.iter().map(|&i| gamma[i]).collect(),
+            kl: pick.iter().map(|&i| kl[i]).collect(),
+            mode: "i16_div".to_string(),
+        };
+        let per_layer: Vec<usize> = (0..layers)
+            .flat_map(|li| {
+                let best = best_in(li * heads..(li + 1) * heads);
+                std::iter::repeat_n(best, heads)
+            })
+            .collect();
+        let global = vec![best_in(0..count); count];
+        Ok(HeadParamStore {
+            per_head: calib("per-head", (0..count).collect()),
+            per_layer: calib("per-layer", per_layer),
+            global: calib("global", global),
+            n,
+        })
+    }
+
     pub fn load(path: &Path, n: usize) -> Result<HeadParamStore> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading calib {}", path.display()))?;
@@ -157,6 +213,34 @@ mod tests {
         assert_eq!(rows.len(), 6);
         assert!(rows[..3].iter().all(|p| p.b == 300));
         assert!(rows[3..].iter().all(|p| p.b == 400));
+    }
+
+    #[test]
+    fn from_per_head_builds_all_granularities() {
+        let params = [
+            HccsParams::new(300, 4, 64),
+            HccsParams::new(400, 2, 96),
+            HccsParams::new(350, 4, 64),
+            HccsParams::new(420, 2, 96),
+        ];
+        let gamma = [0.4, 0.5, 0.6, 0.7];
+        let kl = [0.3, 0.1, 0.05, 0.2];
+        let s = HeadParamStore::from_per_head(2, 2, &params, &gamma, &kl, 64).unwrap();
+        assert_eq!(s.per_head.params, params.to_vec());
+        // Layer 0 pools onto head 1 (kl 0.1), layer 1 onto head 0 (0.05).
+        assert_eq!(s.per_layer.params[0], params[1]);
+        assert_eq!(s.per_layer.params[1], params[1]);
+        assert_eq!(s.per_layer.params[2], params[2]);
+        assert_eq!(s.per_layer.params[3], params[2]);
+        // Global pools onto the overall best (index 2).
+        assert!(s.global.params.iter().all(|p| *p == params[2]));
+        assert_eq!(s.n, 64);
+        // Infeasible θ for n=64 must be rejected (n*B > 32767).
+        let bad = [HccsParams::new(600, 1, 64); 4];
+        assert!(HeadParamStore::from_per_head(2, 2, &bad, &gamma, &kl, 64).is_err());
+        // Shape mismatch.
+        assert!(HeadParamStore::from_per_head(2, 2, &params[..3], &gamma[..3], &kl[..3], 64)
+            .is_err());
     }
 
     #[test]

@@ -30,6 +30,24 @@ pub const ANT_A0: i32 = ENT0 + N_ENT; // 276
 pub const ANT_B0: i32 = ANT_A0 + N_ANT; // 296
 pub const VOCAB_SIZE: i32 = ANT_B0 + N_ANT; // 316
 
+/// The canonical synthetic vocabulary, index == token id (mirrors
+/// `compile.data.build_vocab`, which writes `artifacts/vocab.json`).
+/// Lets artifact-free paths (the native model server) construct the
+/// exact tokenizer the Python exporter would have produced.
+pub fn build_vocab() -> Vec<String> {
+    let mut toks: Vec<String> =
+        ["[PAD]", "[CLS]", "[SEP]", "[UNK]"].iter().map(|s| s.to_string()).collect();
+    toks.extend((0..N_FILLER).map(|i| format!("w{i:03}")));
+    toks.extend((0..N_SENT).map(|i| format!("good{i:02}")));
+    toks.extend((0..N_SENT).map(|i| format!("bad{i:02}")));
+    toks.push("not".to_string());
+    toks.push("very".to_string());
+    toks.extend((0..N_ENT).map(|i| format!("e{i:03}")));
+    toks.extend((0..N_ANT).map(|i| format!("ant_a{i:02}")));
+    toks.extend((0..N_ANT).map(|i| format!("ant_b{i:02}")));
+    toks
+}
+
 /// Antonym partner (identity for non-antonym tokens).
 pub fn antonym(tok: i32) -> i32 {
     if (ANT_A0..ANT_A0 + N_ANT).contains(&tok) {
@@ -213,6 +231,26 @@ impl WorkloadGen {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn vocab_layout_matches_id_constants() {
+        let v = build_vocab();
+        assert_eq!(v.len(), VOCAB_SIZE as usize);
+        assert_eq!(v[PAD as usize], "[PAD]");
+        assert_eq!(v[CLS as usize], "[CLS]");
+        assert_eq!(v[SEP as usize], "[SEP]");
+        assert_eq!(v[FILLER0 as usize], "w000");
+        assert_eq!(v[POS0 as usize], "good00");
+        assert_eq!(v[NEG0 as usize], "bad00");
+        assert_eq!(v[NOT_ID as usize], "not");
+        assert_eq!(v[VERY_ID as usize], "very");
+        assert_eq!(v[ENT0 as usize], "e000");
+        assert_eq!(v[ANT_A0 as usize], "ant_a00");
+        assert_eq!(v[ANT_B0 as usize], "ant_b00");
+        // Every token is unique (closed exact-lookup vocabulary).
+        let set: std::collections::BTreeSet<&String> = v.iter().collect();
+        assert_eq!(set.len(), v.len());
+    }
 
     #[test]
     fn sst2s_shape_and_labels() {

@@ -8,4 +8,4 @@ pub mod dataset;
 pub mod generator;
 
 pub use dataset::{Dataset, Example, TaskKind};
-pub use generator::{gen_mnlis, gen_sst2s, Generated, WorkloadGen};
+pub use generator::{build_vocab, gen_mnlis, gen_sst2s, Generated, WorkloadGen, VOCAB_SIZE};

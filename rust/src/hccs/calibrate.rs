@@ -88,7 +88,13 @@ pub fn calibrate_rows(rows: &[Vec<f64>], n: usize, gamma: f64) -> Calibration {
 
 /// `count` integer samples spanning [lo, hi] inclusive (deduplicated),
 /// mirroring `np.linspace(lo, hi, count)` rounding on the Python side.
-fn sample_band(lo: i32, hi: i32, count: usize) -> Vec<i32> {
+/// Degenerate requests (`count <= 1`, or a collapsed band) return the
+/// single point `lo` instead of dividing by `count - 1 == 0`.
+pub(crate) fn sample_band(lo: i32, hi: i32, count: usize) -> Vec<i32> {
+    debug_assert!(lo <= hi);
+    if count <= 1 || lo == hi {
+        return vec![lo];
+    }
     let mut out = Vec::with_capacity(count);
     for i in 0..count {
         let t = i as f64 / (count - 1) as f64;
@@ -123,6 +129,16 @@ mod tests {
         assert_eq!(*s.first().unwrap(), 10);
         assert_eq!(*s.last().unwrap(), 100);
         assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn band_sampling_degenerate_requests() {
+        // Regression: count = 1 used to divide by zero (count - 1) and
+        // emit a NaN-cast garbage sample instead of the band's low end.
+        assert_eq!(sample_band(10, 100, 1), vec![10]);
+        assert_eq!(sample_band(42, 42, 6), vec![42]);
+        assert_eq!(sample_band(7, 7, 1), vec![7]);
+        assert_eq!(sample_band(3, 4, 0), vec![3]);
     }
 
     #[test]

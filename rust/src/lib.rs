@@ -41,6 +41,8 @@
 //!
 //! Module inventory (each links its own docs):
 //! [`hccs`] (integer kernel + batched engine + calibration),
+//! [`model`] (native integer encoder — the artifact-free full-model
+//! path with pluggable HCCS/f32 softmax backends),
 //! [`aie_sim`] (AIE cycle model), [`coordinator`] (serving engines),
 //! [`runtime`] (artifact loading / PJRT), [`server`] (text protocol),
 //! [`data`] / [`tokenizer`] (workloads), [`experiments`] / [`report`] /
@@ -58,6 +60,7 @@ pub mod experiments;
 pub mod hccs;
 pub mod json;
 pub mod metrics;
+pub mod model;
 pub mod proptest_lite;
 pub mod report;
 pub mod rng;

@@ -2,12 +2,18 @@
 //!
 //! ```text
 //! hccs tables  [--artifacts DIR] [--table 1|2|3] [--fig 2|3] [--limit N] [--remeasure]
-//! hccs eval    [--artifacts DIR] [--model M] [--task T] [--variant float|hccs] [--limit N]
-//! hccs serve   [--artifacts DIR] [--model M] [--task T] [--variant V] [--batch B] [--wait-ms W]
-//!              [--shards S]
+//! hccs eval    [--backend native|pjrt] [--model M] [--task T] [--limit N] [--seed S]
+//!              [--modes i16_div,i8_clb,...]          (native: zero artifacts needed)
+//!              [--artifacts DIR] [--variant float|hccs]          (pjrt backend only)
+//! hccs serve   [--backend native|pjrt] [--model M] [--task T] [--seed S] [--mode i16_div|f32]
+//!              [--artifacts DIR] [--variant V] [--batch B] [--wait-ms W] [--shards S]
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
 //! hccs calibrate [--n N] [--rows R] [--spread X]   (synthetic logit demo)
 //! ```
+//!
+//! `eval` and `serve` default to the **native** backend: a pure-Rust
+//! integer encoder seeded and calibrated at startup, so both run on a
+//! fresh clone with no `make artifacts` step (see `rust/src/model/`).
 
 use std::io::{stdin, stdout, BufWriter};
 use std::path::{Path, PathBuf};
@@ -22,6 +28,7 @@ use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::TaskKind;
 use hccs::experiments;
 use hccs::hccs::calibrate::{calibrate_rows, calibrate_scale};
+use hccs::model::{eval_native, ModelConfig, NativeBackend, NativeModel, SoftmaxBackend};
 use hccs::report::fmt_gps;
 use hccs::rng::Xoshiro256;
 use hccs::server;
@@ -30,7 +37,7 @@ use hccs::tokenizer::Tokenizer;
 const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
     "batch=", "wait-ms=", "shards=", "device=", "kernel=", "n=", "tiles=", "rows=", "spread=",
-    "help",
+    "backend=", "seed=", "modes=", "mode=", "help",
 ];
 
 fn main() -> Result<()> {
@@ -88,6 +95,43 @@ fn cmd_tables(args: &Args, artifacts: &Path) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args, artifacts: &Path) -> Result<()> {
+    match args.get_or("backend", "native") {
+        "native" => cmd_eval_native(args),
+        "pjrt" => cmd_eval_pjrt(args, artifacts),
+        other => bail!("unknown --backend {other:?} (native|pjrt)"),
+    }
+}
+
+/// Artifact-free accuracy + HCCS-vs-f32 agreement on the native model.
+fn cmd_eval_native(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "bert-tiny");
+    let task = TaskKind::parse(args.get_or("task", "sst2s")).context("bad --task")?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let limit = args.parse_num_at_least("limit", 256usize, 1)?;
+    let cfg = ModelConfig::parse(model_name, task)
+        .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
+    if args.get("variant").is_some() {
+        eprintln!("warning: --variant only applies to --backend pjrt; ignored");
+    }
+    let modes: Vec<SoftmaxBackend> = match args.get("modes") {
+        None => SoftmaxBackend::hccs_modes().to_vec(),
+        Some(csv) => csv
+            .split(',')
+            .map(|m| {
+                SoftmaxBackend::parse(m.trim())
+                    .with_context(|| format!("unknown mode {m:?} in --modes"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    eprintln!("building + calibrating {model_name}/{} (seed {seed})...", task.name());
+    let model = NativeModel::new(cfg, task, seed)?;
+    let report = eval_native(&model, model_name, &modes, limit)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+/// Accuracy of the exported PJRT executables (requires `make artifacts`).
+fn cmd_eval_pjrt(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.get_or("model", "bert-tiny");
     let task = args.get_or("task", "sst2s");
     let variant = args.get_or("variant", "hccs");
@@ -104,6 +148,19 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     let model = args.get_or("model", "bert-tiny").to_string();
     let task_name = args.get_or("task", "sst2s");
     let task = TaskKind::parse(task_name).context("bad --task")?;
+    if args.get_or("backend", "native") == "native" {
+        // Surface misconfiguration instead of silently dropping flags
+        // that only the PJRT coordinator understands.
+        for flag in ["variant", "shards", "batch", "wait-ms", "artifacts"] {
+            if args.get(flag).is_some() {
+                eprintln!(
+                    "warning: --{flag} only applies to --backend pjrt; \
+                     ignored by the native backend"
+                );
+            }
+        }
+        return cmd_serve_native(args, &model, task);
+    }
     let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let cfg = CoordinatorConfig {
         artifacts: artifacts.to_path_buf(),
@@ -130,6 +187,33 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     coord.shutdown();
     let _ = handle.join();
     eprintln!("served {n} requests\n{}", coord.metrics.render());
+    Ok(())
+}
+
+/// Serve the native integer model from stdin — zero artifacts needed.
+fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()> {
+    let seed = args.parse_num("seed", 42u64)?;
+    let mode = SoftmaxBackend::parse(args.get_or("mode", "i16_div"))
+        .context("bad --mode (i16_div|i16_clb|i8_div|i8_clb|f32)")?;
+    let cfg = ModelConfig::parse(model_name, task)
+        .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
+    eprintln!(
+        "building + calibrating native {model_name}/{} (seed {seed}, softmax {})...",
+        task.name(),
+        mode.name()
+    );
+    let model = NativeModel::new(cfg, task, seed)?;
+    let tokenizer = Tokenizer::from_tokens(hccs::data::build_vocab())?;
+    let backend = NativeBackend::new(std::sync::Arc::new(model), mode);
+    eprintln!("serving on stdin (one request per line; Ctrl-D to finish)");
+    let n = server::serve(
+        &backend,
+        &tokenizer,
+        task,
+        stdin().lock(),
+        BufWriter::new(stdout().lock()),
+    )?;
+    eprintln!("served {n} requests");
     Ok(())
 }
 

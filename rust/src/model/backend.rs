@@ -1,0 +1,144 @@
+//! Pluggable softmax backend + the artifact-free serving adapter.
+//!
+//! [`SoftmaxBackend`] selects how each attention head normalizes its
+//! logit rows; [`NativeBackend`] exposes a [`NativeModel`] behind the
+//! [`crate::server::InferBackend`] trait so `server::serve` (and the
+//! `serve_classifier` example) can answer full-model traffic with no
+//! PJRT artifacts on disk.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::InferReply;
+use crate::error::Result;
+use crate::hccs::kernel::parse_mode;
+use crate::hccs::{OutputPath, Reciprocal};
+use crate::server::InferBackend;
+
+use super::encoder::{EncoderScratch, NativeModel};
+
+/// How attention probability rows are produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SoftmaxBackend {
+    /// The paper's integer surrogate, per-head calibrated.
+    Hccs { out_path: OutputPath, recip: Reciprocal },
+    /// Exact f32 softmax on the same int8 logit grid (the accuracy
+    /// reference every HCCS mode is compared against).
+    F32Ref,
+}
+
+impl SoftmaxBackend {
+    /// Parse "f32" / "f32_ref" or a kernel mode string ("i16_div", ...).
+    pub fn parse(s: &str) -> Option<SoftmaxBackend> {
+        match s {
+            "f32" | "f32_ref" => Some(SoftmaxBackend::F32Ref),
+            _ => parse_mode(s).map(|(out_path, recip)| SoftmaxBackend::Hccs { out_path, recip }),
+        }
+    }
+
+    /// Canonical name (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SoftmaxBackend::F32Ref => "f32_ref",
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div } => "i16_div",
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Clb } => "i16_clb",
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Div } => "i8_div",
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb } => "i8_clb",
+        }
+    }
+
+    /// The four HCCS kernel modes, in paper order.
+    pub fn hccs_modes() -> [SoftmaxBackend; 4] {
+        [
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Clb },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Div },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb },
+        ]
+    }
+}
+
+/// Serving adapter: a calibrated [`NativeModel`] answering tokenized
+/// requests through per-request reply channels.  Inference runs
+/// synchronously at submit time (the model is pure CPU integer math);
+/// the channel interface keeps it drop-in compatible with the sharded
+/// [`crate::coordinator::Coordinator`] in `server::serve`.
+pub struct NativeBackend {
+    model: Arc<NativeModel>,
+    backend: SoftmaxBackend,
+    scratch: Mutex<EncoderScratch>,
+    next_id: AtomicU64,
+}
+
+impl NativeBackend {
+    pub fn new(model: Arc<NativeModel>, backend: SoftmaxBackend) -> NativeBackend {
+        NativeBackend {
+            model,
+            backend,
+            scratch: Mutex::new(EncoderScratch::default()),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    pub fn backend(&self) -> SoftmaxBackend {
+        self.backend
+    }
+}
+
+impl InferBackend for NativeBackend {
+    fn submit_request(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        let started = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let outcome = {
+            let mut scratch = self.scratch.lock().expect("scratch lock poisoned");
+            self.model.forward(&ids, &segments, self.backend, &mut scratch)
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let msg = match outcome {
+            Ok(inf) => Ok(InferReply {
+                id,
+                predicted: inf.predicted,
+                logits: inf.logits,
+                latency: started.elapsed(),
+            }),
+            Err(e) => Err(format!("{e:#}")),
+        };
+        let _ = tx.send(msg);
+        Ok(rx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip() {
+        for name in ["f32_ref", "i16_div", "i16_clb", "i8_div", "i8_clb"] {
+            let b = SoftmaxBackend::parse(name).unwrap();
+            assert_eq!(b.name(), name);
+        }
+        assert_eq!(SoftmaxBackend::parse("f32"), Some(SoftmaxBackend::F32Ref));
+        assert!(SoftmaxBackend::parse("bf16").is_none());
+    }
+
+    #[test]
+    fn hccs_modes_are_distinct() {
+        let modes = SoftmaxBackend::hccs_modes();
+        for (i, a) in modes.iter().enumerate() {
+            for b in &modes[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Encoder shape configurations.
+//!
+//! The two named presets mirror the paper's workload models (and the
+//! [`crate::aie_sim::trace::EncoderTrace`] shapes): a 2-layer/2-head
+//! tiny encoder and a 4-layer/8-head small one.  Dimensions are sized
+//! so the whole forward stays in i32 MAC accumulators with the §IV-A
+//! headroom (`dk·128² ≪ 2³¹`).
+
+use crate::data::{TaskKind, VOCAB_SIZE};
+use crate::error::{bail, Result};
+
+/// Shape of a native integer encoder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub layers: usize,
+    pub heads: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    /// Sequence length == attention row length n (the softmax width
+    /// every per-head θ is calibrated and validated for).
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+}
+
+impl ModelConfig {
+    /// bert-tiny: 2 layers × 2 heads, d_model 64.
+    pub fn bert_tiny(task: TaskKind) -> Self {
+        Self {
+            layers: 2,
+            heads: 2,
+            d_model: 64,
+            d_ff: 128,
+            seq_len: task.max_len(),
+            vocab: VOCAB_SIZE as usize,
+            n_classes: task.n_classes(),
+        }
+    }
+
+    /// bert-small: 4 layers × 8 heads, d_model 128 (paper architecture).
+    pub fn bert_small(task: TaskKind) -> Self {
+        Self {
+            layers: 4,
+            heads: 8,
+            d_model: 128,
+            d_ff: 256,
+            seq_len: task.max_len(),
+            vocab: VOCAB_SIZE as usize,
+            n_classes: task.n_classes(),
+        }
+    }
+
+    /// Preset by model name ("bert-tiny" | "bert-small").
+    pub fn parse(model: &str, task: TaskKind) -> Option<Self> {
+        match model {
+            "bert-tiny" => Some(Self::bert_tiny(task)),
+            "bert-small" => Some(Self::bert_small(task)),
+            _ => None,
+        }
+    }
+
+    /// Per-head key/value width.
+    pub fn dk(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Shape sanity + §IV-A overflow headroom.
+    pub fn validate(&self) -> Result<()> {
+        if self.layers == 0
+            || self.heads == 0
+            || self.d_model == 0
+            || self.d_ff == 0
+            || self.seq_len == 0
+            || self.vocab == 0
+            || self.n_classes == 0
+        {
+            bail!("all ModelConfig dimensions must be positive: {self:?}");
+        }
+        if self.d_model % self.heads != 0 {
+            bail!("d_model {} not divisible by heads {}", self.d_model, self.heads);
+        }
+        // i32 MAC headroom for the widest accumulation (the FFN read).
+        let widest = self.d_model.max(self.d_ff) as i64;
+        if widest * 128 * 128 > i64::from(i32::MAX) / 4 {
+            bail!("d_model/d_ff {} too large for i32 accumulation", widest);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid_and_task_shaped() {
+        for task in [TaskKind::Sst2s, TaskKind::Mnlis] {
+            for name in ["bert-tiny", "bert-small"] {
+                let cfg = ModelConfig::parse(name, task).unwrap();
+                cfg.validate().unwrap();
+                assert_eq!(cfg.seq_len, task.max_len());
+                assert_eq!(cfg.n_classes, task.n_classes());
+                assert_eq!(cfg.dk() * cfg.heads, cfg.d_model);
+            }
+        }
+        assert!(ModelConfig::parse("bert-huge", TaskKind::Sst2s).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let mut cfg = ModelConfig::bert_tiny(TaskKind::Sst2s);
+        cfg.heads = 3; // 64 % 3 != 0
+        assert!(cfg.validate().is_err());
+        cfg.heads = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ModelConfig::bert_tiny(TaskKind::Sst2s);
+        cfg.d_ff = 1 << 20;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,774 @@
+//! The native integer encoder: seeded weights, construction-time
+//! calibration, and the dual-backend forward pass.
+//!
+//! ## Datapath (per layer, post-LN BERT)
+//!
+//! ```text
+//! ids ── int8 embed (tok+pos+seg) ── int LN ──> x (i8, RMS≈32)
+//! x ──[Wq|Wk|Wv i8 MAC]── requant ──> q,k,v (i8)
+//! per head h:  QK^T (i32) ──÷d_h──> int8 logit grid xq
+//!              xq ──[HCCS θ_h | f32 softmax·γ_h]──> p̂ (int)
+//!              ctx = 256·(p̂·V)/Σp̂      (sum-normalized integer mix)
+//! ctx ── requant ──[Wo]── requant(damped) ──+x── int LN ──> x
+//! x ──[W1]── requant ── relu ──[W2]── requant(damped) ──+x── int LN ──> x
+//! mean-pool over positions ──[Wcls]── −bias ──> class logits (i32)
+//! ```
+//!
+//! The HCCS path routes each head through
+//! [`crate::hccs::attention::hccs_attention`] (scale 1/d_h, V augmented
+//! with a ones column so the true row sum Σp̂ comes back with the mix —
+//! the [`crate::hccs::kernel::phat_to_probs`] dequantization contract,
+//! in integer form).  The f32 path computes the exact softmax over the
+//! *same* int8 grid `γ_h·xq` and floors onto the same integer
+//! probability scale, so the two backends differ **only** in the
+//! normalizer shape.
+//!
+//! ## Calibration (in [`NativeModel::new`])
+//!
+//! One batch of [`CALIB_EXAMPLES`] generated examples runs through the
+//! f32 path; every requant divisor is set from the 99.9th percentile of
+//! the observed accumulators; each head gets `d_h` (logit grid), `γ_h`
+//! (softmax temperature hitting a unit logit std — flat enough that the
+//! clipped-linear surrogate tracks softmax closely, Eq. 10), and θ_h
+//! via [`crate::hccs::calibrate::calibrate_rows`] on its actual rows.
+//! The attention/FFN residual writes are damped 4× relative to the
+//! percentile grid so the (unperturbed) embedding stream keeps its
+//! margin over surrogate noise — the untrained-model stand-in for the
+//! paper's QAT retraining step.  The classifier subtracts a calibrated
+//! integer bias so predictions are example-driven, not init-driven.
+
+use crate::coordinator::HeadParamStore;
+use crate::data::{TaskKind, WorkloadGen};
+use crate::error::{anyhow, bail, Result};
+use crate::hccs::attention::{hccs_attention, AttentionInputs, AttentionScratch};
+use crate::hccs::calibrate::calibrate_rows;
+use crate::hccs::{HccsParams, T_I16};
+use crate::rng::Xoshiro256;
+
+use super::backend::SoftmaxBackend;
+use super::config::ModelConfig;
+use super::norm::{layernorm_rows, matmul_i8, quant_div, requant};
+
+/// Examples drawn from the workload generator for calibration.
+pub const CALIB_EXAMPLES: usize = 8;
+/// Cap on logit rows fed to the per-head θ grid search (stride-sampled).
+const CALIB_ROWS_CAP: usize = 96;
+/// Target std of the dequantized attention logits γ_h·xq.
+const TGT_LOGIT_STD: f64 = 1.0;
+/// Residual-write damping: attention/FFN outputs are scaled down this
+/// factor past the percentile grid (see module docs).
+const OUT_DAMP: i32 = 4;
+/// Numerator of the sum-normalized attention mix `256·(p̂·V)/Σp̂`.
+const CTX_NORM: i64 = 256;
+/// Target std of the reported float class logits.
+const CLS_LOGIT_STD: f64 = 2.0;
+
+/// One encoder layer's seeded weights (row-major `(out, in)`).
+struct LayerWeights {
+    wq: Vec<i8>,
+    wk: Vec<i8>,
+    wv: Vec<i8>,
+    wo: Vec<i8>,
+    ln1_gamma: Vec<i8>,
+    ln1_beta: Vec<i8>,
+    w1: Vec<i8>,
+    w2: Vec<i8>,
+    ln2_gamma: Vec<i8>,
+    ln2_beta: Vec<i8>,
+}
+
+/// All seeded weights.
+struct EncoderWeights {
+    tok_emb: Vec<i8>,
+    pos_emb: Vec<i8>,
+    seg_emb: Vec<i8>,
+    ln_emb_gamma: Vec<i8>,
+    ln_emb_beta: Vec<i8>,
+    layers: Vec<LayerWeights>,
+    w_cls: Vec<i8>,
+}
+
+fn fill_i8(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.i8()).collect()
+}
+
+fn fill_ln_gamma(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (48 + rng.below(33) as i64) as i8).collect()
+}
+
+fn fill_ln_beta(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(17) as i64 - 8) as i8).collect()
+}
+
+impl EncoderWeights {
+    /// Deterministic init: one xoshiro256** stream, fixed draw order.
+    fn seeded(cfg: &ModelConfig, seed: u64) -> EncoderWeights {
+        let mut rng = Xoshiro256::new(seed);
+        let d = cfg.d_model;
+        let tok_emb = fill_i8(&mut rng, cfg.vocab * d);
+        let pos_emb = fill_i8(&mut rng, cfg.seq_len * d);
+        let seg_emb = fill_i8(&mut rng, 2 * d);
+        let ln_emb_gamma = fill_ln_gamma(&mut rng, d);
+        let ln_emb_beta = fill_ln_beta(&mut rng, d);
+        let layers = (0..cfg.layers)
+            .map(|_| LayerWeights {
+                wq: fill_i8(&mut rng, d * d),
+                wk: fill_i8(&mut rng, d * d),
+                wv: fill_i8(&mut rng, d * d),
+                wo: fill_i8(&mut rng, d * d),
+                ln1_gamma: fill_ln_gamma(&mut rng, d),
+                ln1_beta: fill_ln_beta(&mut rng, d),
+                w1: fill_i8(&mut rng, cfg.d_ff * d),
+                w2: fill_i8(&mut rng, d * cfg.d_ff),
+                ln2_gamma: fill_ln_gamma(&mut rng, d),
+                ln2_beta: fill_ln_beta(&mut rng, d),
+            })
+            .collect();
+        let w_cls = fill_i8(&mut rng, cfg.n_classes * d);
+        EncoderWeights {
+            tok_emb,
+            pos_emb,
+            seg_emb,
+            ln_emb_gamma,
+            ln_emb_beta,
+            layers,
+            w_cls,
+        }
+    }
+}
+
+/// Requant divisor slots of one layer.
+#[derive(Clone, Copy, Debug, Default)]
+struct LayerDivs([i32; 7]);
+
+#[derive(Clone, Copy)]
+enum Slot {
+    Q = 0,
+    K,
+    V,
+    Ctx,
+    O,
+    F1,
+    F2,
+}
+
+/// Calibration products: divisors, per-head grid/temperature, θ store,
+/// classifier bias/scale.
+struct Calibrated {
+    divs: Vec<LayerDivs>,
+    /// Per (layer, head): logit grid divisor d_h.
+    dh: Vec<i32>,
+    /// Per-head θ_h + γ_h, validated for rows of length `seq_len`.
+    store: HeadParamStore,
+    cls_bias: Vec<i32>,
+    cls_scale: f64,
+}
+
+/// State accumulated while the calibration batch runs forward.
+#[derive(Default)]
+struct CalibBuilder {
+    divs: Vec<LayerDivs>,
+    dh: Vec<i32>,
+    thetas: Vec<HccsParams>,
+    gammas: Vec<f64>,
+    kls: Vec<f64>,
+    cls_bias: Vec<i32>,
+    cls_scale: f64,
+}
+
+/// Shared access point of the forward pass: read fixed calibration, or
+/// derive-and-record it while the calibration batch streams through.
+enum CalibCtx<'a> {
+    Run(&'a Calibrated),
+    Build(&'a mut CalibBuilder),
+}
+
+impl CalibCtx<'_> {
+    fn div(&mut self, li: usize, slot: Slot, damp: i32, accs: &[i32]) -> i32 {
+        match self {
+            CalibCtx::Run(c) => c.divs[li].0[slot as usize],
+            CalibCtx::Build(b) => {
+                let d = quant_div(accs) * damp;
+                b.divs[li].0[slot as usize] = d;
+                d
+            }
+        }
+    }
+
+    /// Per-head calibration from the head's full (batch·q, k) logit
+    /// accumulator tile; `n` is the attention row length.
+    fn head(&mut self, li: usize, h: usize, heads: usize, accs: &[i32], n: usize) -> Result<Head> {
+        match self {
+            CalibCtx::Run(c) => {
+                let i = li * heads + h;
+                let (p, gamma) = c.store.per_head.at(li, h);
+                Ok(Head { dh: c.dh[i], gamma, theta: *p })
+            }
+            CalibCtx::Build(b) => {
+                let dh = quant_div(accs);
+                let xq: Vec<f64> = accs.iter().map(|&a| f64::from(logit_grid(a, dh))).collect();
+                let mean = xq.iter().sum::<f64>() / xq.len() as f64;
+                let var = xq.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                    / xq.len() as f64;
+                let gamma = TGT_LOGIT_STD / var.sqrt().max(1e-6);
+                let total_rows = xq.len() / n;
+                let stride = total_rows.div_ceil(CALIB_ROWS_CAP).max(1);
+                let rows: Vec<Vec<f64>> = xq
+                    .chunks_exact(n)
+                    .step_by(stride)
+                    .map(|r| r.iter().map(|&v| v * gamma).collect())
+                    .collect();
+                let cal = calibrate_rows(&rows, n, gamma);
+                cal.params
+                    .validate(n)
+                    .map_err(|e| anyhow!("calibrated θ infeasible at L{li}H{h}: {e}"))?;
+                b.dh.push(dh);
+                b.thetas.push(cal.params);
+                b.gammas.push(gamma);
+                b.kls.push(cal.kl);
+                Ok(Head { dh, gamma, theta: cal.params })
+            }
+        }
+    }
+}
+
+/// One head's runtime parameters.
+#[derive(Clone, Copy)]
+struct Head {
+    dh: i32,
+    gamma: f64,
+    theta: HccsParams,
+}
+
+/// Reusable forward-pass buffers (allocation-free after warmup).
+#[derive(Default)]
+pub struct EncoderScratch {
+    x: Vec<i8>,
+    x32: Vec<i32>,
+    acc: Vec<i32>,
+    q8: Vec<i8>,
+    k8: Vec<i8>,
+    v8: Vec<i8>,
+    c8: Vec<i8>,
+    h8: Vec<i8>,
+    ctx32: Vec<i32>,
+    acc_head: Vec<i32>,
+    qh: Vec<i8>,
+    kh: Vec<i8>,
+    vh: Vec<i8>,
+    out_aug: Vec<i32>,
+    phat: Vec<i32>,
+    grid: Vec<f64>,
+    exps: Vec<f64>,
+    attn: AttentionScratch,
+}
+
+/// Result of one forward pass.
+#[derive(Clone, Debug)]
+pub struct Inference {
+    /// Argmax class (first index on ties, like the eval harnesses).
+    pub predicted: usize,
+    /// Bias-corrected integer class logits.
+    pub logits_i32: Vec<i32>,
+    /// The same logits on the calibrated float scale (for serving
+    /// probability output).
+    pub logits: Vec<f32>,
+}
+
+/// A fully calibrated native integer encoder.
+pub struct NativeModel {
+    pub cfg: ModelConfig,
+    pub task: TaskKind,
+    pub seed: u64,
+    weights: EncoderWeights,
+    calib: Calibrated,
+}
+
+impl NativeModel {
+    /// Seed the weights and calibrate on [`CALIB_EXAMPLES`] generated
+    /// examples.  The calibration stream seed is `seed + 1`, skipping
+    /// over [`super::eval::EVAL_SEED`] if it lands there — so the eval
+    /// stream never replays the calibration examples for any seed.
+    pub fn new(cfg: ModelConfig, task: TaskKind, seed: u64) -> Result<NativeModel> {
+        cfg.validate()?;
+        if cfg.seq_len != task.max_len() {
+            bail!("cfg.seq_len {} != task max_len {}", cfg.seq_len, task.max_len());
+        }
+        let weights = EncoderWeights::seeded(&cfg, seed);
+        let mut calib_seed = seed.wrapping_add(1);
+        if calib_seed == super::eval::EVAL_SEED {
+            calib_seed = calib_seed.wrapping_add(1);
+        }
+        let mut generator = WorkloadGen::new(task, calib_seed);
+        let mut ids = Vec::with_capacity(CALIB_EXAMPLES * cfg.seq_len);
+        let mut segs = Vec::with_capacity(CALIB_EXAMPLES * cfg.seq_len);
+        for _ in 0..CALIB_EXAMPLES {
+            let ex = generator.next_example();
+            ids.extend_from_slice(&ex.ids);
+            segs.extend_from_slice(&ex.segments);
+        }
+        let mut builder = CalibBuilder {
+            divs: vec![LayerDivs::default(); cfg.layers],
+            ..CalibBuilder::default()
+        };
+        let mut scratch = EncoderScratch::default();
+        forward_impl(
+            &cfg,
+            &weights,
+            &ids,
+            &segs,
+            SoftmaxBackend::F32Ref,
+            &mut CalibCtx::Build(&mut builder),
+            &mut scratch,
+        )?;
+        let store = HeadParamStore::from_per_head(
+            cfg.layers,
+            cfg.heads,
+            &builder.thetas,
+            &builder.gammas,
+            &builder.kls,
+            cfg.seq_len,
+        )?;
+        Ok(NativeModel {
+            cfg,
+            task,
+            seed,
+            weights,
+            calib: Calibrated {
+                divs: builder.divs,
+                dh: builder.dh,
+                store,
+                cls_bias: builder.cls_bias,
+                cls_scale: builder.cls_scale,
+            },
+        })
+    }
+
+    /// The calibrated per-head parameter store (θ_h, γ_h, KL).
+    pub fn params(&self) -> &HeadParamStore {
+        &self.calib.store
+    }
+
+    /// Forward one example (`ids`/`segments` of length `seq_len`).
+    pub fn forward(
+        &self,
+        ids: &[i32],
+        segments: &[i32],
+        backend: SoftmaxBackend,
+        scratch: &mut EncoderScratch,
+    ) -> Result<Inference> {
+        if ids.len() != self.cfg.seq_len || segments.len() != self.cfg.seq_len {
+            bail!(
+                "expected {} ids/segments, got {}/{}",
+                self.cfg.seq_len,
+                ids.len(),
+                segments.len()
+            );
+        }
+        let logits_i32 = forward_impl(
+            &self.cfg,
+            &self.weights,
+            ids,
+            segments,
+            backend,
+            &mut CalibCtx::Run(&self.calib),
+            scratch,
+        )?;
+        let predicted = argmax_first(&logits_i32);
+        let logits = logits_i32
+            .iter()
+            .map(|&v| (f64::from(v) * self.calib.cls_scale) as f32)
+            .collect();
+        Ok(Inference { predicted, logits_i32, logits })
+    }
+}
+
+/// First-max argmax (mirrors numpy semantics, unlike `max_by` which
+/// keeps the last maximum).
+fn argmax_first(v: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Gather one head's `(seq, dk)` slice of a `(seq, d_model)` tensor.
+fn gather_head(src: &[i8], d: usize, off: usize, dk: usize, dst: &mut Vec<i8>) {
+    dst.clear();
+    for row in src.chunks_exact(d) {
+        dst.extend_from_slice(&row[off..off + dk]);
+    }
+}
+
+/// int8 MAC dot product (i32 accumulation).
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += i32::from(x) * i32::from(y);
+    }
+    acc
+}
+
+/// The int8 attention-logit grid: QK accumulator → floor division by
+/// the head's grid divisor d_h, clamped to the rails.  This is the ONE
+/// mapping every consumer reads logits off — the calibration tile, the
+/// f32 reference softmax, and (with `scale_num = 1`, `scale_den = d_h`)
+/// the rescale inside `hccs_attention` — which is what makes backend
+/// prediction disagreement attributable to the normalizer alone.
+#[inline]
+fn logit_grid(acc: i32, dh: i32) -> i32 {
+    acc.div_euclid(dh).clamp(-128, 127)
+}
+
+/// The shared forward pass over a batch of `ids.len() / seq_len`
+/// examples; returns bias-corrected class logits, `(examples, classes)`
+/// row-major.  `CalibCtx::Build` derives divisors/θ as it goes (batch
+/// statistics), `CalibCtx::Run` replays them on any batch size.
+fn forward_impl(
+    cfg: &ModelConfig,
+    w: &EncoderWeights,
+    ids: &[i32],
+    segs: &[i32],
+    backend: SoftmaxBackend,
+    calib: &mut CalibCtx,
+    s: &mut EncoderScratch,
+) -> Result<Vec<i32>> {
+    let (l, d, ff) = (cfg.seq_len, cfg.d_model, cfg.d_ff);
+    let (heads, dk) = (cfg.heads, cfg.dk());
+    if l == 0 || ids.len() % l != 0 || ids.len() != segs.len() || ids.is_empty() {
+        bail!("ids/segments must be a whole number of length-{l} examples");
+    }
+    let nb = ids.len() / l;
+
+    // Embedding: tok + pos + seg in i32, then integer LayerNorm.
+    s.x32.resize(nb * l * d, 0);
+    for (row, (&id, &seg)) in ids.iter().zip(segs).enumerate() {
+        if id < 0 || id as usize >= cfg.vocab {
+            bail!("token id {id} outside vocab 0..{}", cfg.vocab);
+        }
+        if !(0..2).contains(&seg) {
+            bail!("segment id {seg} outside 0..2");
+        }
+        let t = row % l;
+        let tok = &w.tok_emb[id as usize * d..(id as usize + 1) * d];
+        let pos = &w.pos_emb[t * d..(t + 1) * d];
+        let sg = &w.seg_emb[seg as usize * d..(seg as usize + 1) * d];
+        for (j, o) in s.x32[row * d..(row + 1) * d].iter_mut().enumerate() {
+            *o = i32::from(tok[j]) + i32::from(pos[j]) + i32::from(sg[j]);
+        }
+    }
+    layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
+
+    for (li, lay) in w.layers.iter().enumerate() {
+        // Q/K/V projections.
+        matmul_i8(&s.x, d, &lay.wq, d, &mut s.acc);
+        let div = calib.div(li, Slot::Q, 1, &s.acc);
+        requant(&s.acc, div, &mut s.q8);
+        matmul_i8(&s.x, d, &lay.wk, d, &mut s.acc);
+        let div = calib.div(li, Slot::K, 1, &s.acc);
+        requant(&s.acc, div, &mut s.k8);
+        matmul_i8(&s.x, d, &lay.wv, d, &mut s.acc);
+        let div = calib.div(li, Slot::V, 1, &s.acc);
+        requant(&s.acc, div, &mut s.v8);
+
+        // Attention, head by head (whole batch per head so calibration
+        // sees the head's full logit tile).
+        s.ctx32.resize(nb * l * d, 0);
+        for h in 0..heads {
+            let off = h * dk;
+            if matches!(calib, CalibCtx::Build(_)) {
+                // Batch QK^T tile for divisor/γ/θ calibration.
+                s.acc_head.resize(nb * l * l, 0);
+                for b in 0..nb {
+                    let base = b * l;
+                    for r in 0..l {
+                        let qlo = (base + r) * d + off;
+                        let qrow = &s.q8[qlo..qlo + dk];
+                        let alo = (base + r) * l;
+                        for (c, o) in s.acc_head[alo..alo + l].iter_mut().enumerate() {
+                            let klo = (base + c) * d + off;
+                            *o = dot_i8(qrow, &s.k8[klo..klo + dk]);
+                        }
+                    }
+                }
+            }
+            let head = calib.head(li, h, heads, &s.acc_head, l)?;
+
+            for b in 0..nb {
+                let base = b * l;
+                match backend {
+                    SoftmaxBackend::Hccs { out_path, recip } => {
+                        // Route through the fused attention kernel; V is
+                        // augmented with a ones column so out[:, dk] is
+                        // the true Σp̂ of each row.
+                        gather_head(&s.q8[base * d..(base + l) * d], d, off, dk, &mut s.qh);
+                        gather_head(&s.k8[base * d..(base + l) * d], d, off, dk, &mut s.kh);
+                        s.vh.clear();
+                        for row in s.v8[base * d..(base + l) * d].chunks_exact(d) {
+                            s.vh.extend_from_slice(&row[off..off + dk]);
+                            s.vh.push(1);
+                        }
+                        let inp = AttentionInputs {
+                            q: &s.qh,
+                            k: &s.kh,
+                            v: &s.vh,
+                            r: l,
+                            c: l,
+                            dk,
+                            dv: dk + 1,
+                        };
+                        s.out_aug.resize(l * (dk + 1), 0);
+                        hccs_attention(
+                            &inp,
+                            &head.theta,
+                            out_path,
+                            recip,
+                            1,
+                            head.dh,
+                            &mut s.attn,
+                            &mut s.out_aug,
+                        )
+                        .map_err(|e| anyhow!("hccs_attention L{li}H{h}: {e}"))?;
+                        for r in 0..l {
+                            let orow = &s.out_aug[r * (dk + 1)..(r + 1) * (dk + 1)];
+                            let srow = i64::from(orow[dk]).max(1);
+                            let clo = (base + r) * d + off;
+                            let dst = &mut s.ctx32[clo..clo + dk];
+                            for (o, &raw) in dst.iter_mut().zip(&orow[..dk]) {
+                                *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            }
+                        }
+                    }
+                    SoftmaxBackend::F32Ref => {
+                        // Same grid, exact softmax, same integer mix.
+                        for r in 0..l {
+                            let qlo = (base + r) * d + off;
+                            let qrow = &s.q8[qlo..qlo + dk];
+                            s.phat.resize(l, 0);
+                            s.grid.clear();
+                            if matches!(calib, CalibCtx::Build(_)) {
+                                let alo = (base + r) * l;
+                                let rowacc = &s.acc_head[alo..alo + l];
+                                s.grid.extend(rowacc.iter().map(|&a| {
+                                    f64::from(logit_grid(a, head.dh)) * head.gamma
+                                }));
+                            } else {
+                                for c in 0..l {
+                                    let klo = (base + c) * d + off;
+                                    let acc = dot_i8(qrow, &s.k8[klo..klo + dk]);
+                                    s.grid.push(f64::from(logit_grid(acc, head.dh)) * head.gamma);
+                                }
+                            }
+                            let m = s.grid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                            s.exps.clear();
+                            s.exps.extend(s.grid.iter().map(|&v| (v - m).exp()));
+                            let z: f64 = s.exps.iter().sum();
+                            let mut srow = 0i64;
+                            for (p, &e) in s.phat.iter_mut().zip(&s.exps) {
+                                *p = (e / z * f64::from(T_I16)).floor() as i32;
+                                srow += i64::from(*p);
+                            }
+                            let srow = srow.max(1);
+                            let clo = (base + r) * d + off;
+                            for (j, dst) in s.ctx32[clo..clo + dk].iter_mut().enumerate() {
+                                let mut raw = 0i32;
+                                for (c, &p) in s.phat.iter().enumerate() {
+                                    if p != 0 {
+                                        raw += p * i32::from(s.v8[(base + c) * d + off + j]);
+                                    }
+                                }
+                                *dst = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Attention output projection + damped residual write.
+        let div = calib.div(li, Slot::Ctx, 1, &s.ctx32);
+        requant(&s.ctx32, div, &mut s.c8);
+        matmul_i8(&s.c8, d, &lay.wo, d, &mut s.acc);
+        let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
+        requant(&s.acc, div, &mut s.c8);
+        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+            *o = i32::from(a) + i32::from(b);
+        }
+        layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+
+        // FFN + damped residual write.
+        matmul_i8(&s.x, d, &lay.w1, ff, &mut s.acc);
+        let div = calib.div(li, Slot::F1, 1, &s.acc);
+        requant(&s.acc, div, &mut s.h8);
+        for v in s.h8.iter_mut() {
+            *v = (*v).max(0);
+        }
+        matmul_i8(&s.h8, ff, &lay.w2, d, &mut s.acc);
+        let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
+        requant(&s.acc, div, &mut s.c8);
+        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+            *o = i32::from(a) + i32::from(b);
+        }
+        layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
+    }
+
+    // Mean-pool over positions, classify, subtract the calibrated bias.
+    let nc = cfg.n_classes;
+    let mut logits = vec![0i32; nb * nc];
+    let mut pooled = vec![0i32; d];
+    for b in 0..nb {
+        for (j, p) in pooled.iter_mut().enumerate() {
+            let mut sum = 0i64;
+            for t in 0..l {
+                sum += i64::from(s.x[(b * l + t) * d + j]);
+            }
+            *p = sum.div_euclid(l as i64) as i32;
+        }
+        for (c, o) in logits[b * nc..(b + 1) * nc].iter_mut().enumerate() {
+            let wrow = &w.w_cls[c * d..(c + 1) * d];
+            let mut acc = 0i64;
+            for (&wv, &pv) in wrow.iter().zip(&pooled) {
+                acc += i64::from(wv) * i64::from(pv);
+            }
+            *o = acc as i32;
+        }
+    }
+    match calib {
+        CalibCtx::Build(b) => {
+            let mut bias = vec![0i64; nc];
+            for row in logits.chunks_exact(nc) {
+                for (acc, &v) in bias.iter_mut().zip(row) {
+                    *acc += i64::from(v);
+                }
+            }
+            b.cls_bias = bias.iter().map(|&v| v.div_euclid(nb as i64) as i32).collect();
+            let vals: Vec<f64> = logits.iter().map(|&v| f64::from(v)).collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                / vals.len() as f64;
+            b.cls_scale = CLS_LOGIT_STD / var.sqrt().max(1e-6);
+            for row in logits.chunks_exact_mut(nc) {
+                for (v, &bb) in row.iter_mut().zip(&b.cls_bias) {
+                    *v -= bb;
+                }
+            }
+        }
+        CalibCtx::Run(c) => {
+            for row in logits.chunks_exact_mut(nc) {
+                for (v, &bb) in row.iter_mut().zip(&c.cls_bias) {
+                    *v -= bb;
+                }
+            }
+        }
+    }
+    Ok(logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hccs::{OutputPath, Reciprocal};
+
+    fn tiny_cfg() -> ModelConfig {
+        // Small custom shape so construction stays fast in debug CI.
+        ModelConfig {
+            layers: 2,
+            heads: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: TaskKind::Sst2s.max_len(),
+            vocab: crate::data::VOCAB_SIZE as usize,
+            n_classes: 2,
+        }
+    }
+
+    fn example(seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, seed);
+        let ex = generator.next_example();
+        (ex.ids, ex.segments)
+    }
+
+    #[test]
+    fn same_seed_same_model_bit_exact() {
+        let a = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 11).unwrap();
+        let b = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 11).unwrap();
+        let (ids, segs) = example(5);
+        let mut sa = EncoderScratch::default();
+        let mut sb = EncoderScratch::default();
+        for backend in [
+            SoftmaxBackend::F32Ref,
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb },
+        ] {
+            let ra = a.forward(&ids, &segs, backend, &mut sa).unwrap();
+            let rb = b.forward(&ids, &segs, backend, &mut sb).unwrap();
+            assert_eq!(ra.logits_i32, rb.logits_i32, "{backend:?}");
+            assert_eq!(ra.predicted, rb.predicted);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 1).unwrap();
+        let b = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 2).unwrap();
+        let (ids, segs) = example(5);
+        let mut s = EncoderScratch::default();
+        let ra = a.forward(&ids, &segs, SoftmaxBackend::F32Ref, &mut s).unwrap();
+        let rb = b.forward(&ids, &segs, SoftmaxBackend::F32Ref, &mut s).unwrap();
+        assert_ne!(ra.logits_i32, rb.logits_i32);
+    }
+
+    #[test]
+    fn calibrated_store_is_feasible_per_head() {
+        let m = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 3).unwrap();
+        let store = m.params();
+        assert_eq!(store.per_head.layers, 2);
+        assert_eq!(store.per_head.heads, 2);
+        assert_eq!(store.n, TaskKind::Sst2s.max_len());
+        for p in &store.per_head.params {
+            p.validate(store.n).unwrap();
+        }
+        assert!(store.per_head.kl.iter().all(|&k| k.is_finite() && k >= 0.0));
+        // γ is a positive temperature.
+        assert!(store.per_head.gamma.iter().all(|&g| g > 0.0));
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let m = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 3).unwrap();
+        let mut s = EncoderScratch::default();
+        let n = m.cfg.seq_len;
+        let backend = SoftmaxBackend::F32Ref;
+        assert!(m.forward(&vec![1; n - 1], &vec![0; n - 1], backend, &mut s).is_err());
+        assert!(m.forward(&vec![-1; n], &vec![0; n], backend, &mut s).is_err());
+        assert!(m.forward(&vec![100_000; n], &vec![0; n], backend, &mut s).is_err());
+        assert!(m.forward(&vec![1; n], &vec![7; n], backend, &mut s).is_err());
+    }
+
+    #[test]
+    fn logits_are_bias_centered_and_scaled() {
+        let m = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 9).unwrap();
+        let mut s = EncoderScratch::default();
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, 77);
+        let mut preds = [0usize; 2];
+        for _ in 0..16 {
+            let ex = generator.next_example();
+            let inf = m.forward(&ex.ids, &ex.segments, SoftmaxBackend::F32Ref, &mut s).unwrap();
+            assert_eq!(inf.logits.len(), 2);
+            preds[inf.predicted] += 1;
+        }
+        // The calibrated bias keeps logits centered enough that both
+        // classes actually occur over a small workload.
+        assert!(preds[0] > 0 && preds[1] > 0, "degenerate predictions {preds:?}");
+    }
+
+    #[test]
+    fn argmax_is_first_max() {
+        assert_eq!(argmax_first(&[3, 7, 7, 1]), 1);
+        assert_eq!(argmax_first(&[-5]), 0);
+    }
+}

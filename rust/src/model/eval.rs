@@ -1,0 +1,151 @@
+//! Accuracy + agreement harness over the synthetic eval stream.
+//!
+//! Shared by the `hccs eval` CLI subcommand, the `encoder_e2e` bench,
+//! and the CI integration test pinning the HCCS-vs-f32 agreement band
+//! (see EXPERIMENTS.md §encoder_e2e for the expected numbers).
+
+use crate::data::WorkloadGen;
+use crate::error::Result;
+use crate::report::Table;
+
+use super::backend::SoftmaxBackend;
+use super::encoder::{EncoderScratch, NativeModel};
+
+/// Seed of the evaluation example stream — the same stream the binary
+/// eval artifacts are generated from (`make_dataset(task, n, seed=2)`),
+/// so native and PJRT evals see identical examples.
+pub const EVAL_SEED: u64 = 2;
+
+/// One softmax backend's eval result.
+#[derive(Clone, Debug)]
+pub struct ModeReport {
+    pub backend: SoftmaxBackend,
+    /// Label accuracy over the eval set.
+    pub accuracy: f64,
+    /// Fraction of examples where this backend's argmax equals the
+    /// f32-softmax reference argmax — the in-repo accuracy-preservation
+    /// measure.
+    pub agreement: f64,
+}
+
+/// Full eval report for one model.
+#[derive(Clone, Debug)]
+pub struct NativeEvalReport {
+    pub model: String,
+    pub task: &'static str,
+    pub seed: u64,
+    pub examples: usize,
+    /// Accuracy of the f32-softmax reference backend.
+    pub reference_accuracy: f64,
+    pub modes: Vec<ModeReport>,
+}
+
+impl NativeEvalReport {
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!(
+                "native {}/{}: {} examples (model seed {}, eval seed {})",
+                self.model, self.task, self.examples, self.seed, EVAL_SEED
+            ),
+            &["backend", "accuracy", "agreement vs f32"],
+        );
+        t.row(&[
+            "f32_ref".to_string(),
+            format!("{:.4}", self.reference_accuracy),
+            "(reference)".to_string(),
+        ]);
+        for m in &self.modes {
+            t.row(&[
+                m.backend.name().to_string(),
+                format!("{:.4}", m.accuracy),
+                format!("{:.4}", m.agreement),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Report for one backend by canonical name.
+    pub fn mode(&self, name: &str) -> Option<&ModeReport> {
+        self.modes.iter().find(|m| m.backend.name() == name)
+    }
+}
+
+/// Evaluate `limit` examples from the shared eval stream under the f32
+/// reference and every backend in `modes`.
+pub fn eval_native(
+    model: &NativeModel,
+    model_name: &str,
+    modes: &[SoftmaxBackend],
+    limit: usize,
+) -> Result<NativeEvalReport> {
+    let mut generator = WorkloadGen::new(model.task, EVAL_SEED);
+    let examples: Vec<_> = (0..limit).map(|_| generator.next_example()).collect();
+    let mut scratch = EncoderScratch::default();
+
+    let mut ref_preds = Vec::with_capacity(limit);
+    let mut ref_correct = 0usize;
+    for ex in &examples {
+        let inf = model.forward(&ex.ids, &ex.segments, SoftmaxBackend::F32Ref, &mut scratch)?;
+        ref_correct += usize::from(inf.predicted as i32 == ex.label);
+        ref_preds.push(inf.predicted);
+    }
+
+    let mut reports = Vec::with_capacity(modes.len());
+    for &backend in modes {
+        if backend == SoftmaxBackend::F32Ref {
+            continue; // already the reference column
+        }
+        let mut correct = 0usize;
+        let mut matched = 0usize;
+        for (ex, &rp) in examples.iter().zip(&ref_preds) {
+            let inf = model.forward(&ex.ids, &ex.segments, backend, &mut scratch)?;
+            correct += usize::from(inf.predicted as i32 == ex.label);
+            matched += usize::from(inf.predicted == rp);
+        }
+        reports.push(ModeReport {
+            backend,
+            accuracy: correct as f64 / limit as f64,
+            agreement: matched as f64 / limit as f64,
+        });
+    }
+    Ok(NativeEvalReport {
+        model: model_name.to_string(),
+        task: model.task.name(),
+        seed: model.seed,
+        examples: limit,
+        reference_accuracy: ref_correct as f64 / limit as f64,
+        modes: reports,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskKind;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn report_renders_and_indexes_modes() {
+        // Small custom config keeps this a fast smoke test; the full
+        // bert-tiny agreement pin lives in tests/native_model.rs.
+        let cfg = ModelConfig {
+            layers: 1,
+            heads: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: TaskKind::Sst2s.max_len(),
+            vocab: crate::data::VOCAB_SIZE as usize,
+            n_classes: 2,
+        };
+        let model = NativeModel::new(cfg, TaskKind::Sst2s, 5).unwrap();
+        let modes = [SoftmaxBackend::parse("i16_div").unwrap()];
+        let r = eval_native(&model, "custom", &modes, 8).unwrap();
+        assert_eq!(r.examples, 8);
+        assert_eq!(r.modes.len(), 1);
+        let m = r.mode("i16_div").unwrap();
+        assert!((0.0..=1.0).contains(&m.accuracy));
+        assert!((0.0..=1.0).contains(&m.agreement));
+        let text = r.render();
+        assert!(text.contains("i16_div") && text.contains("f32_ref"), "{text}");
+    }
+}

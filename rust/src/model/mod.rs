@@ -1,0 +1,49 @@
+//! Native integer BERT encoder — the artifact-free full-model path.
+//!
+//! The PJRT-backed [`crate::runtime`] path demonstrates the paper's
+//! deployment story but needs `make artifacts`; everything here runs
+//! from a seed alone, so the repo's headline claim — HCCS calibrated
+//! per head preserves task-level predictions of a quantized MHA
+//! workload — is exercised (and CI-tested) with zero build-time
+//! artifacts.
+//!
+//! The encoder is integer-native end to end, mirroring the int8 MAC
+//! datapath of paper §IV: int8 embeddings and weights, i32 matmul
+//! accumulation, rational rescales with `div_euclid` (floor) semantics
+//! identical to [`crate::hccs::attention`], integer LayerNorm
+//! (integer mean/variance + Newton `isqrt`), and a **pluggable softmax
+//! backend** per attention head:
+//!
+//! * [`SoftmaxBackend::Hccs`] — every head routed through
+//!   [`crate::hccs::attention::hccs_attention`] with that head's
+//!   calibrated θ_h from the [`crate::coordinator::HeadParamStore`];
+//! * [`SoftmaxBackend::F32Ref`] — the exact float softmax on the same
+//!   int8 logit grid, re-quantized to the integer probability scale.
+//!
+//! Both backends share every other integer op bit for bit, so
+//! prediction disagreement measures exactly the softmax surrogate —
+//! the in-repo analogue of the paper's accuracy-preservation claim
+//! (see `hccs eval` and EXPERIMENTS.md §encoder_e2e).
+//!
+//! Calibration happens at construction ([`NativeModel::new`]): a small
+//! workload batch is run through the f32-softmax path once, static
+//! requant divisors are read off activation percentiles, and every
+//! head's θ_h is grid-searched with
+//! [`crate::hccs::calibrate::calibrate_rows`] on that head's actual
+//! logit rows — the runtime mirror of the paper's offline §III-C step.
+//!
+//! Submodules: [`config`] (model shapes), [`norm`] (integer LN /
+//! requant helpers), [`encoder`] (weights + calibration + forward),
+//! [`backend`] (softmax backend + the serving [`NativeBackend`]),
+//! [`eval`] (accuracy/agreement harness shared by CLI, bench, tests).
+
+pub mod backend;
+pub mod config;
+pub mod encoder;
+pub mod eval;
+pub mod norm;
+
+pub use backend::{NativeBackend, SoftmaxBackend};
+pub use config::ModelConfig;
+pub use encoder::{EncoderScratch, Inference, NativeModel, CALIB_EXAMPLES};
+pub use eval::{eval_native, ModeReport, NativeEvalReport, EVAL_SEED};

@@ -1,0 +1,175 @@
+//! Integer normalization / requantization primitives of the native
+//! encoder datapath.
+//!
+//! Everything here is floor-division (`div_euclid`) arithmetic — the
+//! same semantics as the attention logit rescale in
+//! [`crate::hccs::attention`] — so the whole encoder stays bit-exactly
+//! reproducible from a seed on any platform.
+
+/// LayerNorm output target RMS: a normalized activation row has
+/// (approximately) this integer standard deviation, which keeps every
+/// downstream int8 MAC input well inside the rails.
+pub(crate) const LN_TARGET: i64 = 32;
+
+/// Fixed-point denominator of the LayerNorm gain: `gamma = 64` is the
+/// identity gain, seeded gains live in [48, 80] (±25%).
+pub(crate) const LN_GAMMA_DIV: i64 = 64;
+
+/// Exact `floor(sqrt(n))` by Newton iteration (no fp round-trip, so
+/// the result is platform-independent for the full u64 range).  The
+/// seed `n/2 + 1` ≥ √n avoids the `n + 1` overflow at `u64::MAX`, and
+/// the iterates stay below it, so nothing here can wrap.
+pub(crate) fn isqrt_u64(n: u64) -> u64 {
+    if n < 2 {
+        return n;
+    }
+    let mut x = n / 2 + 1;
+    let mut y = (x + n / x) / 2;
+    while y < x {
+        x = y;
+        y = (x + n / x) / 2;
+    }
+    x
+}
+
+/// Static requant divisor from observed i32 accumulators: the 99.9th
+/// percentile of |acc| is mapped onto the int8 rail (so outliers clamp
+/// instead of crushing the grid).  Deterministic: percentile by sorted
+/// index, no interpolation.
+pub(crate) fn quant_div(accs: &[i32]) -> i32 {
+    assert!(!accs.is_empty(), "quant_div over empty activations");
+    let mut mags: Vec<i64> = accs.iter().map(|&v| i64::from(v).abs()).collect();
+    mags.sort_unstable();
+    let idx = 999 * (mags.len() - 1) / 1000;
+    mags[idx].div_ceil(127).max(1) as i32
+}
+
+/// Rescale i32 accumulators onto the int8 grid: floor division by a
+/// positive divisor, clamped to the rails — identical semantics to the
+/// QK^T logit rescale inside `hccs_attention` (scale_num = 1).
+pub(crate) fn requant(accs: &[i32], div: i32, out: &mut Vec<i8>) {
+    debug_assert!(div > 0);
+    out.clear();
+    out.extend(accs.iter().map(|&v| v.div_euclid(div).clamp(-128, 127) as i8));
+}
+
+/// Row-major int8 matmul with i32 accumulation: `x` is `(rows, d_in)`,
+/// `w` is `(d_out, d_in)` (one output unit per row), `out` becomes
+/// `(rows, d_out)`.  The int8 MAC loop of paper §IV, on the CPU.
+pub(crate) fn matmul_i8(x: &[i8], d_in: usize, w: &[i8], d_out: usize, out: &mut Vec<i32>) {
+    debug_assert!(d_in > 0 && x.len() % d_in == 0);
+    debug_assert_eq!(w.len(), d_out * d_in);
+    let rows = x.len() / d_in;
+    out.resize(rows * d_out, 0);
+    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+        for (o, wrow) in orow.iter_mut().zip(w.chunks_exact(d_in)) {
+            let mut acc = 0i32;
+            for (&a, &b) in xrow.iter().zip(wrow) {
+                acc += i32::from(a) * i32::from(b);
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Integer LayerNorm over each width-`d` row of `x32`: integer mean,
+/// integer variance, Newton `isqrt`, then a fixed-point gain/bias.
+/// Output rows have RMS ≈ [`LN_TARGET`] before the ±25% seeded gain.
+pub(crate) fn layernorm_rows(x32: &[i32], d: usize, gamma: &[i8], beta: &[i8], out: &mut Vec<i8>) {
+    debug_assert!(d > 0 && x32.len() % d == 0);
+    debug_assert_eq!(gamma.len(), d);
+    debug_assert_eq!(beta.len(), d);
+    out.resize(x32.len(), 0);
+    for (xr, or) in x32.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let sum: i64 = xr.iter().map(|&v| i64::from(v)).sum();
+        let mean = sum.div_euclid(d as i64);
+        let var = xr
+            .iter()
+            .map(|&v| {
+                let c = i64::from(v) - mean;
+                c * c
+            })
+            .sum::<i64>()
+            .div_euclid(d as i64);
+        let sd = (isqrt_u64(var as u64) as i64).max(1);
+        for ((o, &v), (&g, &b)) in or.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+            let y = ((i64::from(v) - mean) * LN_TARGET).div_euclid(sd);
+            let y = (y * i64::from(g)).div_euclid(LN_GAMMA_DIV) + i64::from(b);
+            *o = y.clamp(-128, 127) as i8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isqrt_is_exact_floor() {
+        for n in 0u64..100_000 {
+            let r = isqrt_u64(n);
+            assert!(r * r <= n, "n={n}");
+            assert!((r + 1) * (r + 1) > n, "n={n}");
+        }
+        for n in [u64::MAX, u64::MAX - 1, 1 << 62, (1 << 32) - 1, 1 << 32] {
+            let r = isqrt_u64(n);
+            assert!(r.checked_mul(r).is_some_and(|s| s <= n));
+            assert!((r + 1).checked_mul(r + 1).is_none_or(|s| s > n));
+        }
+    }
+
+    #[test]
+    fn quant_div_maps_percentile_to_rail() {
+        // 1000 values 0..999: the 99.9th percentile index is 998.
+        let accs: Vec<i32> = (0..1000).collect();
+        let d = quant_div(&accs);
+        assert_eq!(d, 8); // ceil(998 / 127)
+        // All-zero activations degrade to the identity divisor.
+        assert_eq!(quant_div(&[0, 0, 0]), 1);
+        // Sign does not matter.
+        assert_eq!(quant_div(&[-1270, 0]), quant_div(&[1270, 0]));
+    }
+
+    #[test]
+    fn requant_uses_floor_division_and_clamps() {
+        let mut out = Vec::new();
+        requant(&[-5, 5, 10_000, -10_000, 16], 16, &mut out);
+        assert_eq!(out, vec![-1, 0, 127, -128, 1]);
+    }
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        // x = [[1, 2], [3, -4]], w = [[1, 0], [0, 1], [2, 2]] (3 out units).
+        let x: Vec<i8> = vec![1, 2, 3, -4];
+        let w: Vec<i8> = vec![1, 0, 0, 1, 2, 2];
+        let mut out = Vec::new();
+        matmul_i8(&x, 2, &w, 3, &mut out);
+        assert_eq!(out, vec![1, 2, 6, 3, -4, -2]);
+    }
+
+    #[test]
+    fn layernorm_standardizes_rows() {
+        // A high-variance row and a shifted copy must normalize to the
+        // same output (shift invariance of (x - mean) / sd).
+        let row: Vec<i32> = (0..64).map(|i| i * 50 - 1600).collect();
+        let shifted: Vec<i32> = row.iter().map(|v| v + 700).collect();
+        let gamma = vec![64i8; 64];
+        let beta = vec![0i8; 64];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        layernorm_rows(&row, 64, &gamma, &beta, &mut a);
+        layernorm_rows(&shifted, 64, &gamma, &beta, &mut b);
+        assert_eq!(a, b);
+        // RMS lands near LN_TARGET.
+        let rms = (a.iter().map(|&v| f64::from(v) * f64::from(v)).sum::<f64>() / 64.0).sqrt();
+        assert!((20.0..=44.0).contains(&rms), "rms {rms}");
+    }
+
+    #[test]
+    fn layernorm_constant_row_is_beta() {
+        let gamma = vec![64i8; 4];
+        let beta = vec![7i8; 4];
+        let mut out = Vec::new();
+        layernorm_rows(&[5, 5, 5, 5], 4, &gamma, &beta, &mut out);
+        assert_eq!(out, vec![7, 7, 7, 7]);
+    }
+}

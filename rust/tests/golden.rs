@@ -5,7 +5,7 @@
 //! Skips (with a loud message) when artifacts have not been built yet;
 //! `make artifacts && cargo test` exercises the full chain.
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use hccs::hccs::{hccs_row, HccsParams, OutputPath, Reciprocal};
 use hccs::json::Value;
@@ -180,9 +180,4 @@ fn calibration_artifacts_are_feasible() {
     if found == 0 {
         eprintln!("SKIP calibration artifact test: no calib_*.json yet");
     }
-}
-
-#[allow(dead_code)]
-fn path_exists(p: &Path) -> bool {
-    p.exists()
 }

@@ -1,0 +1,133 @@
+//! Artifact-free golden suite: the bit-exactness contract runs in CI
+//! unconditionally (unlike `tests/golden.rs`, which needs `make
+//! artifacts` and skips without it).
+//!
+//! `golden_vectors.json` is committed in-repo: 23 cases × all four
+//! `OutputPath` × `Reciprocal` modes, generated once from the numpy
+//! oracle (`python/compile/kernels/ref.py`) with every case re-derived
+//! from the §III equations at generation time (see the file header and
+//! the generator assertions).  Here each stored vector is checked
+//! three ways:
+//!
+//! 1. against an **independent straight-line i64 oracle** reimplemented
+//!    below (no shared code with `hccs::kernel`);
+//! 2. bit-exactly against [`hccs_row`] (the scalar kernel);
+//! 3. bit-exactly against [`hccs_batch`] (the batched engine, 1×n).
+
+use hccs::hccs::kernel::parse_mode;
+use hccs::hccs::{hccs_batch, hccs_row, HccsParams, OutputPath, Reciprocal};
+use hccs::json::Value;
+
+const GOLDEN: &str = include_str!("golden_vectors.json");
+
+/// Straight-line i64 reimplementation of Algorithm 1 (§III).  Written
+/// deliberately without reusing any kernel code: plain max, clamp,
+/// affine score, sum, and the three reciprocal realizations, all in
+/// i64 so any i32-range bug in the kernel would show as a mismatch.
+fn oracle_row(x: &[i8], b: i64, s: i64, dmax: i64, op: OutputPath, rc: Reciprocal) -> Vec<i64> {
+    let m = x.iter().map(|&v| i64::from(v)).max().expect("non-empty row");
+    let scores: Vec<i64> = x
+        .iter()
+        .map(|&v| {
+            let delta = (m - i64::from(v)).min(dmax);
+            b - s * delta
+        })
+        .collect();
+    assert!(scores.iter().all(|&v| v >= 0), "infeasible golden params");
+    let z: i64 = scores.iter().sum();
+    assert!(z > 0 && z <= 32767, "Z={z} outside the feasible band");
+    let floor_log2 = |v: i64| 63 - v.leading_zeros() as i64;
+    match (op, rc) {
+        (OutputPath::I16, Reciprocal::Div) => {
+            let rho = 32767 / z;
+            scores.iter().map(|&v| v * rho).collect()
+        }
+        (OutputPath::I16, Reciprocal::Clb) => {
+            let k = floor_log2(z);
+            scores.iter().map(|&v| ((v * 32767) >> k).min(32767)).collect()
+        }
+        (OutputPath::I8, Reciprocal::Div) => {
+            let rho8 = (255 << 15) / z;
+            scores.iter().map(|&v| ((v * rho8) >> 15).min(255)).collect()
+        }
+        (OutputPath::I8, Reciprocal::Clb) => {
+            let rho8 = (255 << 15) >> floor_log2(z);
+            scores.iter().map(|&v| ((v * rho8) >> 15).min(255)).collect()
+        }
+    }
+}
+
+fn load_cases() -> Vec<Value> {
+    let golden = Value::parse(GOLDEN).expect("golden_vectors.json must parse");
+    golden.req("cases").as_arr().expect("cases array").to_vec()
+}
+
+#[test]
+fn golden_suite_is_substantial() {
+    let cases = load_cases();
+    assert!(cases.len() >= 20, "only {} golden cases", cases.len());
+    // Every case carries all four modes.
+    for case in &cases {
+        let Value::Obj(outs) = case.req("out") else {
+            panic!("case.out must be an object")
+        };
+        assert_eq!(outs.len(), 4, "expected 4 modes per case");
+        for mode in outs.keys() {
+            parse_mode(mode).expect("known mode name");
+        }
+    }
+}
+
+#[test]
+fn kernel_matches_committed_vectors_and_independent_oracle() {
+    let mut checked = 0usize;
+    for case in load_cases() {
+        let n = case.req("n").as_i64().unwrap() as usize;
+        let x: Vec<i8> = case.req("x").flat_f64().iter().map(|&v| v as i8).collect();
+        assert_eq!(x.len(), n);
+        let (b, s, dmax) = (
+            case.req("B").as_i64().unwrap(),
+            case.req("S").as_i64().unwrap(),
+            case.req("Dmax").as_i64().unwrap(),
+        );
+        let p = HccsParams::checked(b as i32, s as i32, dmax as i32, n)
+            .expect("golden params feasible");
+        let Value::Obj(outs) = case.req("out") else { unreachable!() };
+        for (mode, want_v) in outs {
+            let (op, rc) = parse_mode(mode).unwrap();
+            let want: Vec<i64> = want_v.flat_f64().iter().map(|&v| v as i64).collect();
+            // 1. Independent i64 oracle agrees with the committed file.
+            assert_eq!(oracle_row(&x, b, s, dmax, op, rc), want, "oracle n={n} {mode}");
+            // 2. Scalar kernel is bit-exact.
+            let got: Vec<i64> = hccs_row(&x, &p, op, rc).iter().map(|&v| i64::from(v)).collect();
+            assert_eq!(got, want, "hccs_row n={n} {mode} θ=({b},{s},{dmax})");
+            // 3. Batched engine is bit-exact on the same row.
+            let batch: Vec<i64> =
+                hccs_batch(&x, 1, n, &p, op, rc).iter().map(|&v| i64::from(v)).collect();
+            assert_eq!(batch, want, "hccs_batch n={n} {mode}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 80, "only {checked} golden vectors checked");
+}
+
+/// The committed file must contain the §III worked example with the
+/// hand-derived values (guards against regenerating the file with a
+/// broken generator).
+#[test]
+fn hand_checked_case_is_present() {
+    // n=64, θ=(300,4,64), x = all −100 except x0=90, x7=80:
+    // m=90 → δ0=0, δ7=10, rest clamp at 64 → scores 300, 260, 44;
+    // Z = 300 + 260 + 62·44 = 3288; ρ = ⌊32767/3288⌋ = 9.
+    let cases = load_cases();
+    let found = cases.iter().any(|case| {
+        let x: Vec<i64> = case.req("x").flat_f64().iter().map(|&v| v as i64).collect();
+        if x.len() != 64 || x[0] != 90 || x[7] != 80 || x[1] != -100 {
+            return false;
+        }
+        let out: Vec<i64> =
+            case.req("out").req("i16_div").flat_f64().iter().map(|&v| v as i64).collect();
+        out[0] == 300 * 9 && out[7] == 260 * 9 && out[1] == 44 * 9
+    });
+    assert!(found, "hand-checked worked example missing from golden_vectors.json");
+}

@@ -1,0 +1,135 @@
+//! Integration: the native full-model path, end to end and artifact
+//! free — these tests **run** in CI (no skip path).
+//!
+//! Pins the repo's headline in-repo number: on the synthetic sst2s
+//! eval stream, the per-head-calibrated HCCS i16+div backend agrees
+//! with the f32-softmax reference on ≥ 90% of predictions (acceptance
+//! band of EXPERIMENTS.md §encoder_e2e; the measured value at this
+//! seed is ≈ 0.97, so the pin has real margin without being brittle).
+
+use std::io::BufReader;
+use std::sync::{Arc, OnceLock};
+
+use hccs::data::{build_vocab, TaskKind};
+use hccs::model::{
+    eval_native, EncoderScratch, ModelConfig, NativeBackend, NativeModel, SoftmaxBackend,
+};
+use hccs::server::{self, InferBackend};
+use hccs::tokenizer::Tokenizer;
+
+/// The `hccs eval --task sst2s` setup at CI-sized eval scale.
+const EVAL_LIMIT: usize = 64;
+const MODEL_SEED: u64 = 42;
+
+/// One shared bert-tiny build (calibration is the expensive step).
+fn tiny_model() -> Arc<NativeModel> {
+    static MODEL: OnceLock<Arc<NativeModel>> = OnceLock::new();
+    MODEL
+        .get_or_init(|| {
+            let task = TaskKind::Sst2s;
+            Arc::new(NativeModel::new(ModelConfig::bert_tiny(task), task, MODEL_SEED).unwrap())
+        })
+        .clone()
+}
+
+#[test]
+fn hccs_agreement_band_holds_on_sst2s() {
+    let model = tiny_model();
+    let report = eval_native(&model, "bert-tiny", &SoftmaxBackend::hccs_modes(), EVAL_LIMIT)
+        .unwrap();
+    // Accuracy is reported for every backend and must be a sane
+    // probability (the untrained synthetic model sits near chance).
+    assert!((0.2..=0.8).contains(&report.reference_accuracy), "{report:?}");
+    for m in &report.modes {
+        assert!((0.0..=1.0).contains(&m.accuracy));
+        // Every mode stays in a loose agreement band...
+        assert!(
+            m.agreement >= 0.85,
+            "{} agreement {:.4} below the floor",
+            m.backend.name(),
+            m.agreement
+        );
+    }
+    // ...and the acceptance-pinned mode clears 90%.
+    let div = report.mode("i16_div").expect("i16_div evaluated");
+    assert!(
+        div.agreement >= 0.90,
+        "i16_div agreement {:.4} < 0.90 over {EVAL_LIMIT} examples",
+        div.agreement
+    );
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let model = tiny_model();
+    let modes = [SoftmaxBackend::parse("i16_div").unwrap()];
+    let a = eval_native(&model, "bert-tiny", &modes, 12).unwrap();
+    let b = eval_native(&model, "bert-tiny", &modes, 12).unwrap();
+    assert_eq!(a.reference_accuracy, b.reference_accuracy);
+    assert_eq!(a.modes[0].accuracy, b.modes[0].accuracy);
+    assert_eq!(a.modes[0].agreement, b.modes[0].agreement);
+}
+
+/// Full-model serving with zero artifacts: `server::serve` over a
+/// [`NativeBackend`], real tokenizer built from the canonical vocab.
+#[test]
+fn native_backend_serves_text_protocol() {
+    let task = TaskKind::Sst2s;
+    let model = tiny_model();
+    let tokenizer = Tokenizer::from_tokens(build_vocab()).unwrap();
+    let backend =
+        NativeBackend::new(model.clone(), SoftmaxBackend::parse("i16_div").unwrap());
+
+    let input = "# native serving smoke\n\
+                 good00 good01 w003 w004\n\
+                 \n\
+                 bad00 bad01 not good02 w000\n\
+                 totally unknown tokens here\n\
+                 w010 w011 w012 good05\n";
+    let mut out = Vec::new();
+    let served =
+        server::serve(&backend, &tokenizer, task, BufReader::new(input.as_bytes()), &mut out)
+            .unwrap();
+    assert_eq!(served, 4, "comment/blank lines skipped, unknown tokens served");
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4);
+    for line in &lines {
+        let mut parts = line.split_whitespace();
+        let predicted: usize = parts.next().unwrap().parse().unwrap();
+        assert!(predicted < task.n_classes());
+        let probs: Vec<f32> = parts.map(|p| p.parse().unwrap()).collect();
+        assert_eq!(probs.len(), task.n_classes());
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-2, "{line}");
+    }
+
+    // Serving is deterministic: a second pass produces identical bytes.
+    let mut again = Vec::new();
+    let backend2 = NativeBackend::new(model, SoftmaxBackend::parse("i16_div").unwrap());
+    server::serve(&backend2, &tokenizer, task, BufReader::new(input.as_bytes()), &mut again)
+        .unwrap();
+    assert_eq!(text, String::from_utf8(again).unwrap());
+}
+
+/// The serving reply must reflect the same forward pass as a direct
+/// model call (backend plumbing adds nothing).
+#[test]
+fn serving_reply_matches_direct_forward() {
+    let task = TaskKind::Sst2s;
+    let model = tiny_model();
+    let tokenizer = Tokenizer::from_tokens(build_vocab()).unwrap();
+    let mode = SoftmaxBackend::parse("i8_clb").unwrap();
+    let backend = NativeBackend::new(model.clone(), mode);
+
+    let (ids, segs) = server::encode_request(&tokenizer, task, "good00 not bad03 w001", 64);
+    let reply = backend
+        .submit_request(ids.clone(), segs.clone())
+        .unwrap()
+        .recv()
+        .unwrap()
+        .expect("native inference ok");
+    let mut scratch = EncoderScratch::default();
+    let direct = model.forward(&ids, &segs, mode, &mut scratch).unwrap();
+    assert_eq!(reply.predicted, direct.predicted);
+    assert_eq!(reply.logits, direct.logits);
+}

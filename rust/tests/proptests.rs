@@ -1,12 +1,15 @@
-//! Property-based tests (proptest_lite) on the coordinator and kernel
-//! invariants called out in DESIGN.md §7.
+//! Property-based tests (proptest_lite) on the coordinator, kernel,
+//! attention, and native-encoder invariants called out in DESIGN.md §7.
 
 use std::time::{Duration, Instant};
 
 use hccs::coordinator::{BatchPolicy, DynamicBatcher};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::hccs::attention::{hccs_attention, AttentionInputs, AttentionScratch};
 use hccs::hccs::{
     hccs_batch, hccs_row, hccs_row_into, HccsParams, OutputPath, Reciprocal, T_I16, T_I8,
 };
+use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
 use hccs::proptest_lite::{check, shrink_int, Config};
 use hccs::rng::Xoshiro256;
 
@@ -130,7 +133,9 @@ fn prop_hccs_symmetry() {
 }
 
 /// Shifting every logit by a constant must not change the output
-/// (max-centering invariance) as long as values stay in int8.
+/// (max-centering invariance, paper §III: only distances from the row
+/// max enter the surrogate) — for **all four** kernel modes, as long
+/// as values stay in int8.
 #[test]
 fn prop_hccs_shift_invariance() {
     check(
@@ -147,10 +152,187 @@ fn prop_hccs_shift_invariance() {
         |_| vec![],
         |(case, shift)| {
             let shifted: Vec<i8> = case.x.iter().map(|&v| v + shift).collect();
-            let a = hccs_row(&case.x, &case.theta, OutputPath::I16, Reciprocal::Div);
-            let b = hccs_row(&shifted, &case.theta, OutputPath::I16, Reciprocal::Div);
-            if a != b {
-                return Err("output changed under constant logit shift".into());
+            for (op, rc) in [
+                (OutputPath::I16, Reciprocal::Div),
+                (OutputPath::I16, Reciprocal::Clb),
+                (OutputPath::I8, Reciprocal::Div),
+                (OutputPath::I8, Reciprocal::Clb),
+            ] {
+                let a = hccs_row(&case.x, &case.theta, op, rc);
+                let b = hccs_row(&shifted, &case.theta, op, rc);
+                if a != b {
+                    return Err(format!(
+                        "output changed under constant shift {shift} ({op:?}/{rc:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fused attention invariants
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct AttnCase {
+    q: Vec<i8>,
+    k: Vec<i8>,
+    v: Vec<i8>,
+    r: usize,
+    c: usize,
+    dk: usize,
+    dv: usize,
+    theta: HccsParams,
+    perm: Vec<usize>,
+    scale_den: i32,
+}
+
+fn gen_attn(rng: &mut Xoshiro256) -> AttnCase {
+    let r = 1 + rng.below(6) as usize;
+    let c = 2 + rng.below(31) as usize;
+    let dk = 1 + rng.below(16) as usize;
+    let dv = 1 + rng.below(8) as usize;
+    let theta = feasible_theta(rng, c);
+    let gen = |n: usize, rng: &mut Xoshiro256| -> Vec<i8> {
+        (0..n).map(|_| (rng.below(61) as i64 - 30) as i8).collect()
+    };
+    let q = gen(r * dk, rng);
+    let k = gen(c * dk, rng);
+    let v = gen(c * dv, rng);
+    // Fisher-Yates permutation of the key/value rows.
+    let mut perm: Vec<usize> = (0..c).collect();
+    for i in (1..c).rev() {
+        perm.swap(i, rng.below(i as u64 + 1) as usize);
+    }
+    AttnCase { q, k, v, r, c, dk, dv, theta, perm, scale_den: 1 + rng.below(32) as i32 }
+}
+
+/// Attention is permutation-equivariant over key/value rows: applying
+/// the same permutation to K's and V's rows leaves `p̂ @ V` unchanged
+/// (row max, Z, and the per-key probabilities all travel with the
+/// permutation) — for every kernel mode.
+#[test]
+fn prop_attention_key_value_permutation_equivariance() {
+    check(
+        "attention-kv-permutation",
+        Config { cases: 200, ..Default::default() },
+        gen_attn,
+        |_| vec![],
+        |case| {
+            let mut kp = vec![0i8; case.k.len()];
+            let mut vp = vec![0i8; case.v.len()];
+            for (dst, &src) in case.perm.iter().enumerate() {
+                kp[dst * case.dk..(dst + 1) * case.dk]
+                    .copy_from_slice(&case.k[src * case.dk..(src + 1) * case.dk]);
+                vp[dst * case.dv..(dst + 1) * case.dv]
+                    .copy_from_slice(&case.v[src * case.dv..(src + 1) * case.dv]);
+            }
+            let base = AttentionInputs {
+                q: &case.q,
+                k: &case.k,
+                v: &case.v,
+                r: case.r,
+                c: case.c,
+                dk: case.dk,
+                dv: case.dv,
+            };
+            let permuted = AttentionInputs { k: &kp, v: &vp, ..base.clone() };
+            let mut scratch = AttentionScratch::default();
+            let mut out_a = vec![0i32; case.r * case.dv];
+            let mut out_b = vec![0i32; case.r * case.dv];
+            for (op, rc) in [
+                (OutputPath::I16, Reciprocal::Div),
+                (OutputPath::I16, Reciprocal::Clb),
+                (OutputPath::I8, Reciprocal::Div),
+                (OutputPath::I8, Reciprocal::Clb),
+            ] {
+                hccs_attention(
+                    &base,
+                    &case.theta,
+                    op,
+                    rc,
+                    1,
+                    case.scale_den,
+                    &mut scratch,
+                    &mut out_a,
+                )
+                .map_err(|e| format!("base attention failed: {e}"))?;
+                hccs_attention(
+                    &permuted,
+                    &case.theta,
+                    op,
+                    rc,
+                    1,
+                    case.scale_den,
+                    &mut scratch,
+                    &mut out_b,
+                )
+                .map_err(|e| format!("permuted attention failed: {e}"))?;
+                if out_a != out_b {
+                    return Err(format!(
+                        "p̂·V changed under K/V row permutation ({op:?}/{rc:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Native encoder determinism
+// ---------------------------------------------------------------------------
+
+/// Two models built from the same seed are the same function: equal
+/// calibration, equal integer logits on fresh inputs, for HCCS and f32
+/// backends alike.
+#[test]
+fn prop_native_encoder_deterministic_per_seed() {
+    check(
+        "native-encoder-determinism",
+        Config { cases: 3, ..Default::default() },
+        |rng| (rng.below(1000), rng.below(u64::MAX)),
+        |_| vec![],
+        |&(model_seed, input_seed)| {
+            let task = TaskKind::Sst2s;
+            let cfg = ModelConfig {
+                layers: 1,
+                heads: 2,
+                d_model: 32,
+                d_ff: 64,
+                seq_len: task.max_len(),
+                vocab: hccs::data::VOCAB_SIZE as usize,
+                n_classes: 2,
+            };
+            let a = NativeModel::new(cfg, task, model_seed)
+                .map_err(|e| format!("model build failed: {e}"))?;
+            let b = NativeModel::new(cfg, task, model_seed)
+                .map_err(|e| format!("model rebuild failed: {e}"))?;
+            let mut generator = WorkloadGen::new(task, input_seed);
+            let mut sa = EncoderScratch::default();
+            let mut sb = EncoderScratch::default();
+            for _ in 0..3 {
+                let ex = generator.next_example();
+                for backend in [
+                    SoftmaxBackend::F32Ref,
+                    SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div },
+                    SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb },
+                ] {
+                    let ra = a
+                        .forward(&ex.ids, &ex.segments, backend, &mut sa)
+                        .map_err(|e| format!("forward a: {e}"))?;
+                    let rb = b
+                        .forward(&ex.ids, &ex.segments, backend, &mut sb)
+                        .map_err(|e| format!("forward b: {e}"))?;
+                    if ra.logits_i32 != rb.logits_i32 || ra.predicted != rb.predicted {
+                        return Err(format!(
+                            "same-seed forwards diverged under {backend:?}: {:?} vs {:?}",
+                            ra.logits_i32, rb.logits_i32
+                        ));
+                    }
+                }
             }
             Ok(())
         },
