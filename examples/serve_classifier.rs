@@ -7,7 +7,9 @@
 //! * `--backend native` (default) — the pure-Rust integer encoder
 //!   (`rust/src/model/`), seeded + calibrated at startup: runs on a
 //!   fresh clone with **zero artifacts**.  `--mode` picks the softmax
-//!   backend (i16_div | i16_clb | i8_div | i8_clb | f32).
+//!   backend (i16_div | i16_clb | i8_div | i8_clb | f32); `--shards`,
+//!   `--max-batch`, and `--wait-ms` configure the sharded executor
+//!   pool batching requests into `forward_batch` tiles.
 //! * `--backend pjrt` — the QAT-retrained HCCS BERT executable through
 //!   the sharded coordinator (requires `make artifacts`).
 //!
@@ -22,12 +24,12 @@ use hccs::error::{anyhow, Context, Result};
 use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::{TaskKind, WorkloadGen};
-use hccs::model::{ModelConfig, NativeBackend, NativeModel, SoftmaxBackend};
+use hccs::model::{ModelConfig, NativeBackend, NativeModel, NativeServeConfig, SoftmaxBackend};
 use hccs::server::InferBackend;
 
 const KNOWN: &[&str] = &[
-    "artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "wait-ms=", "seed=",
-    "shards=", "backend=", "mode=", "model-seed=",
+    "artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "max-batch=",
+    "wait-ms=", "seed=", "shards=", "backend=", "mode=", "model-seed=",
 ];
 
 /// Open-loop client over any inference backend: submit everything,
@@ -93,8 +95,9 @@ fn main() -> Result<()> {
     match args.get_or("backend", "native") {
         "native" => {
             // Same misconfiguration guard as `hccs serve`: don't let
-            // pjrt-only flags be dropped silently.
-            for flag in ["variant", "shards", "batch", "wait-ms", "artifacts"] {
+            // pjrt-only flags be dropped silently.  (--shards,
+            // --max-batch, and --wait-ms apply to the native backend.)
+            for flag in ["variant", "batch", "artifacts"] {
                 if args.get(flag).is_some() {
                     eprintln!(
                         "warning: --{flag} only applies to --backend pjrt; \
@@ -105,17 +108,31 @@ fn main() -> Result<()> {
             let mode = SoftmaxBackend::parse(args.get_or("mode", "i16_div"))
                 .context("bad --mode (i16_div|i16_clb|i8_div|i8_clb|f32)")?;
             let model_seed = args.parse_num("model-seed", 42u64)?;
+            let max_batch = args.parse_num_at_least("max-batch", 8usize, 1)?;
             let cfg = ModelConfig::parse(&model, task)
                 .with_context(|| format!("unknown --model {model:?} (bert-tiny|bert-small)"))?;
             println!(
                 "== serve_classifier: native {model}/{task_name} softmax={}, \
-                 {requests} requests (zero artifacts)",
+                 {requests} requests, max batch {max_batch}, {shards} shard(s) \
+                 (zero artifacts)",
                 mode.name()
             );
             let native = NativeModel::new(cfg, task, model_seed)?;
-            let front = NativeBackend::new(std::sync::Arc::new(native), mode);
+            let front = NativeBackend::with_config(
+                std::sync::Arc::new(native),
+                mode,
+                NativeServeConfig {
+                    policy: BatchPolicy {
+                        max_batch,
+                        max_wait: Duration::from_millis(wait_ms),
+                    },
+                    shards,
+                },
+            )?;
             let (correct, latencies, wall) = run_workload(&front, task, requests, seed)?;
+            front.shutdown();
             report(requests, correct, latencies, wall);
+            println!("\nnative backend metrics:\n{}", front.metrics.render());
         }
         "pjrt" => {
             println!(

@@ -5,11 +5,16 @@
 //!
 //! Prints one table row per backend with examples/s, speedup vs the
 //! f32 reference, and the backend's prediction agreement on the bench
-//! workload, then a machine-readable JSON document (see EXPERIMENTS.md
-//! §encoder_e2e for the schema).  When `HCCS_BENCH_JSON` is set the
-//! document is also written to `BENCH_encoder_e2e.json`; budgets honor
+//! workload, then a **batch-axis sweep**: `forward_batch` examples/s at
+//! batch ∈ {1, 2, 4, 8, 16} on the pinned i16_div mode, showing the
+//! stacked-GEMM + single-HCCS-dispatch-per-head win over the
+//! one-example baseline.  Ends with a machine-readable JSON document
+//! (see EXPERIMENTS.md §encoder_e2e for the schema, including the
+//! `batch_sweep` array).  When `HCCS_BENCH_JSON` is set the document is
+//! also written to `BENCH_encoder_e2e.json`; budgets honor
 //! `HCCS_BENCH_*_MS`.
 
+use hccs::aie_sim::gemm::encoder_macro_tiles;
 use hccs::aie_sim::trace::EncoderTrace;
 use hccs::benchkit::{bench, sink, write_json};
 use hccs::data::{TaskKind, WorkloadGen};
@@ -86,6 +91,44 @@ fn main() {
     }
     println!("{}", table.render());
 
+    // Batch-axis sweep: the same examples, stacked `bs` at a time into
+    // one forward_batch call (bit-exact with per-example forward —
+    // proptest-pinned — so this measures pure batching efficiency).
+    let sweep_backend = SoftmaxBackend::parse("i16_div").expect("known mode");
+    let mut sweep_table = Table::new(
+        "forward_batch batch-size sweep (i16_div)",
+        &["batch", "examples/s", "vs batch=1"],
+    );
+    let mut sweep: Vec<Value> = Vec::new();
+    let mut scratch = EncoderScratch::default();
+    let mut b1_eps = 0.0f64;
+    for &bs in &[1usize, 2, 4, 8, 16] {
+        let mut ids = Vec::with_capacity(bs * model.cfg.seq_len);
+        let mut segs = Vec::with_capacity(bs * model.cfg.seq_len);
+        for ex in examples.iter().cycle().take(bs) {
+            ids.extend_from_slice(&ex.ids);
+            segs.extend_from_slice(&ex.segments);
+        }
+        let r = bench(&format!("forward_batch b={bs}"), || {
+            let inferences = model
+                .forward_batch(&ids, &segs, sweep_backend, &mut scratch)
+                .expect("forward_batch");
+            sink(inferences.len());
+        });
+        let eps = r.per_second(bs as f64);
+        if bs == 1 {
+            b1_eps = eps;
+        }
+        let speedup = eps / b1_eps.max(1e-9);
+        sweep_table.row(&[bs.to_string(), format!("{eps:.1}"), format!("{speedup:.2}x")]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("batch".to_string(), Value::from(bs as i64));
+        case.insert("examples_per_s".to_string(), Value::from(eps));
+        case.insert("speedup_vs_b1".to_string(), Value::from(speedup));
+        sweep.push(Value::Obj(case));
+    }
+    println!("{}", sweep_table.render());
+
     let mut doc = std::collections::BTreeMap::new();
     doc.insert("bench".to_string(), Value::from("encoder_e2e"));
     doc.insert("model".to_string(), Value::from("bert-tiny"));
@@ -93,10 +136,15 @@ fn main() {
     doc.insert("units".to_string(), Value::from("examples_per_second"));
     doc.insert("softmax_rows_per_example".to_string(), Value::from(trace.rows() as i64));
     doc.insert(
+        "gemm_macro_tiles_per_example".to_string(),
+        Value::from(encoder_macro_tiles(&cfg) as i64),
+    );
+    doc.insert(
         "agreement_examples".to_string(),
         Value::from(AGREEMENT_EXAMPLES as i64),
     );
     doc.insert("cases".to_string(), Value::Arr(cases));
+    doc.insert("batch_sweep".to_string(), Value::Arr(sweep));
     let doc = Value::Obj(doc);
     println!("{}", doc.to_string_pretty());
     write_json("encoder_e2e", &doc);

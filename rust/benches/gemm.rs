@@ -1,0 +1,129 @@
+//! Bench target for the **linalg packed GEMM core**: blocked
+//! [`PackedGemm`] vs the scalar reference oracle on the encoder's real
+//! shapes, plus a batch-axis row sweep showing how stacking activation
+//! rows (what `NativeModel::forward_batch` does) amortizes the packed
+//! panel streaming.
+//!
+//! Prints one table row per shape with MMAC/s for both kernels and the
+//! speedup, then a machine-readable JSON document (see EXPERIMENTS.md
+//! §gemm for the schema).  When `HCCS_BENCH_JSON` is set the document
+//! is also written to `BENCH_gemm.json`; budgets honor
+//! `HCCS_BENCH_*_MS`.  Every case asserts packed == scalar before
+//! timing, so the bench doubles as an oracle smoke test.
+
+use hccs::aie_sim::gemm::{mac_utilization, GemmShape};
+use hccs::aie_sim::{Device, DeviceKind};
+use hccs::benchkit::{bench, sink, write_json};
+use hccs::json::Value;
+use hccs::linalg::{matmul_i8_ref, PackedGemm};
+use hccs::report::Table;
+use hccs::rng::Xoshiro256;
+
+/// Encoder shapes: bert-tiny/-small projections, FFN halves, and a
+/// classifier-style skinny GEMM ((m, k, n) = activations (m, k) times
+/// weights (n, k)).
+const SHAPES: [(&str, usize, usize, usize); 6] = [
+    ("tiny proj 64x64x64", 64, 64, 64),
+    ("tiny ffn-up 64x64x128", 64, 64, 128),
+    ("tiny ffn-down 64x128x64", 64, 128, 64),
+    ("small proj 128x128x128", 128, 128, 128),
+    ("small ffn-up 128x128x256", 128, 128, 256),
+    ("classifier 1x64x2", 1, 64, 2),
+];
+
+fn main() {
+    let mut rng = Xoshiro256::new(2024);
+    let device = Device::new(DeviceKind::AieMlV2);
+    let mut table = Table::new(
+        "packed GEMM vs scalar oracle (this machine)",
+        &["shape", "scalar MMAC/s", "packed MMAC/s", "speedup", "aie MAC%"],
+    );
+    let mut cases: Vec<Value> = Vec::new();
+
+    for (name, m, k, n) in SHAPES {
+        let x: Vec<i8> = (0..m * k).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
+        let packed = PackedGemm::pack(&w, n, k);
+        // Oracle check before timing: the bench never reports a number
+        // for a kernel that disagrees with the reference.
+        let (mut got, mut want) = (Vec::new(), Vec::new());
+        packed.gemm_into(&x, &mut got);
+        matmul_i8_ref(&x, k, &w, n, &mut want);
+        assert_eq!(got, want, "{name}: packed GEMM diverged from the scalar oracle");
+
+        let macs = (m * k * n) as f64;
+        let mut out = Vec::new();
+        let rs = bench(&format!("scalar {name}"), || {
+            matmul_i8_ref(&x, k, &w, n, &mut out);
+            sink(out.len());
+        });
+        let rp = bench(&format!("packed {name}"), || {
+            packed.gemm_into(&x, &mut out);
+            sink(out.len());
+        });
+        let scalar_mps = rs.per_second(macs) / 1e6;
+        let packed_mps = rp.per_second(macs) / 1e6;
+        let speedup = packed_mps / scalar_mps.max(1e-9);
+        let shape = GemmShape::new(m, k, n);
+        table.row(&[
+            name.to_string(),
+            format!("{scalar_mps:.0}"),
+            format!("{packed_mps:.0}"),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", mac_utilization(&device, &shape) * 100.0),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("name".to_string(), Value::from(name));
+        case.insert("m".to_string(), Value::from(m as i64));
+        case.insert("k".to_string(), Value::from(k as i64));
+        case.insert("n".to_string(), Value::from(n as i64));
+        case.insert("scalar_macs_per_s".to_string(), Value::from(scalar_mps * 1e6));
+        case.insert("packed_macs_per_s".to_string(), Value::from(packed_mps * 1e6));
+        case.insert("speedup_vs_scalar".to_string(), Value::from(speedup));
+        case.insert("macro_tiles".to_string(), Value::from(shape.macro_tiles() as i64));
+        cases.push(Value::Obj(case));
+    }
+    println!("{}", table.render());
+
+    // Batch-axis row sweep: one packed weight, growing activation row
+    // counts — the GEMM-side source of the forward_batch win.
+    let (k, n) = (64usize, 64usize);
+    let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
+    let packed = PackedGemm::pack(&w, n, k);
+    let mut sweep: Vec<Value> = Vec::new();
+    let mut sweep_table =
+        Table::new("packed GEMM row sweep (k=64, n=64)", &["rows", "MMAC/s", "vs 1 row"]);
+    let mut one_row = 0.0f64;
+    for rows in [1usize, 4, 16, 64, 256] {
+        let x: Vec<i8> = (0..rows * k).map(|_| rng.i8()).collect();
+        let mut out = Vec::new();
+        let r = bench(&format!("packed rows={rows}"), || {
+            packed.gemm_into(&x, &mut out);
+            sink(out.len());
+        });
+        let mps = r.per_second((rows * k * n) as f64) / 1e6;
+        if rows == 1 {
+            one_row = mps;
+        }
+        sweep_table.row(&[
+            rows.to_string(),
+            format!("{mps:.0}"),
+            format!("{:.2}x", mps / one_row.max(1e-9)),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("rows".to_string(), Value::from(rows as i64));
+        case.insert("macs_per_s".to_string(), Value::from(mps * 1e6));
+        case.insert("speedup_vs_one_row".to_string(), Value::from(mps / one_row.max(1e-9)));
+        sweep.push(Value::Obj(case));
+    }
+    println!("{}", sweep_table.render());
+
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("bench".to_string(), Value::from("gemm"));
+    doc.insert("units".to_string(), Value::from("macs_per_second"));
+    doc.insert("cases".to_string(), Value::Arr(cases));
+    doc.insert("row_sweep".to_string(), Value::Arr(sweep));
+    let doc = Value::Obj(doc);
+    println!("{}", doc.to_string_pretty());
+    write_json("gemm", &doc);
+}

@@ -1,0 +1,176 @@
+//! Int8 GEMM macro-tile cycle model — the `aie_sim` mirror of the
+//! runtime's [`crate::linalg`] packed GEMM.
+//!
+//! The softmax schedules in [`super::kernels`] model the *normalizer*;
+//! with the encoder's matmuls refactored onto one GEMM core, the rest
+//! of the attention/FFN datapath is GEMM-shaped and can be costed the
+//! same way AIE GEMM kernels are scheduled: the output matrix is cut
+//! into [`MACRO_M`]`×`[`MACRO_N`] **macro-tiles**; each macro-tile
+//! streams the shared-k dimension through the int8 MAC array in
+//! `ceil(k / lanes)` vector iterations and pays a fixed fill/drain cost
+//! ([`MACRO_TILE_FILL`]: accumulator init, operand pointer setup,
+//! result store).  Batch-axis stacking (`forward_batch`) grows `m`,
+//! which amortizes partial macro-rows and raises MAC utilization —
+//! exactly the effect `benches/gemm.rs` and the `encoder_e2e` batch
+//! sweep measure on the CPU.
+//!
+//! Like the softmax schedules, the per-tile constants are fit
+//! parameters; what the model is *for* is relative structure — which
+//! shapes dominate an inference, how macro-tile count scales with
+//! batch, and how far each shape sits from the MAC roofline.
+
+use super::device::Device;
+use crate::model::ModelConfig;
+
+/// Macro-tile output rows (activation rows per tile).
+pub const MACRO_M: usize = 8;
+/// Macro-tile output columns: tied to the runtime kernel's panel width
+/// so the cycle model cannot silently diverge from the GEMM it mirrors.
+pub const MACRO_N: usize = crate::linalg::gemm::NR;
+/// Fixed cycles per macro-tile: accumulator init, operand pointer
+/// setup, and the result store burst.
+pub const MACRO_TILE_FILL: u64 = 12;
+
+/// One GEMM's shape: `(m, k) × (k, n) → (m, n)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    /// Output rows (activation rows; the batch axis scales this).
+    pub m: usize,
+    /// Shared (reduction) dimension.
+    pub k: usize,
+    /// Output columns (weight units / keys).
+    pub n: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, k: usize, n: usize) -> GemmShape {
+        assert!(m > 0 && k > 0 && n > 0, "empty GEMM shape");
+        GemmShape { m, k, n }
+    }
+
+    /// Total int8 MACs.
+    pub fn macs(&self) -> u64 {
+        (self.m * self.k * self.n) as u64
+    }
+
+    /// `MACRO_M × MACRO_N` output macro-tiles (ceiling partitioned — a
+    /// ragged edge still occupies a whole tile, which is where the
+    /// batch-axis amortization comes from).
+    pub fn macro_tiles(&self) -> u64 {
+        (self.m.div_ceil(MACRO_M) * self.n.div_ceil(MACRO_N)) as u64
+    }
+
+    /// The same GEMM with `batch` activation tiles stacked on the row
+    /// axis (what `forward_batch` dispatches).
+    pub fn stacked(&self, batch: usize) -> GemmShape {
+        GemmShape::new(self.m * batch.max(1), self.k, self.n)
+    }
+}
+
+/// Cycles to run `shape` on one tile of `device`.
+pub fn gemm_cycles(device: &Device, shape: &GemmShape) -> u64 {
+    let iters = (shape.k as u64).div_ceil(device.int8_lanes as u64);
+    // MACs issued per macro-tile per k-iteration, bounded by the MAC
+    // array width.
+    let per_iter =
+        ((MACRO_M * MACRO_N * device.int8_lanes) as u64).div_ceil(device.peak_int8_macs);
+    shape.macro_tiles() * (MACRO_TILE_FILL + iters * per_iter)
+}
+
+/// Fraction of the MAC-array roofline `shape` achieves (0..1].
+pub fn mac_utilization(device: &Device, shape: &GemmShape) -> f64 {
+    shape.macs() as f64 / (gemm_cycles(device, shape) as f64 * device.peak_int8_macs as f64)
+}
+
+/// The GEMM workload of one native-encoder inference:
+/// `(label, shape, calls per inference)`.  Shapes come from the actual
+/// model config, mirroring `forward_impl` call for call.
+pub fn encoder_gemms(cfg: &ModelConfig) -> Vec<(&'static str, GemmShape, u64)> {
+    let (l, d, ff, dk) = (cfg.seq_len, cfg.d_model, cfg.d_ff, cfg.dk());
+    let layers = cfg.layers as u64;
+    let heads = (cfg.layers * cfg.heads) as u64;
+    vec![
+        ("q/k/v projection", GemmShape::new(l, d, d), 3 * layers),
+        ("attn out projection", GemmShape::new(l, d, d), layers),
+        ("ffn up", GemmShape::new(l, d, ff), layers),
+        ("ffn down", GemmShape::new(l, ff, d), layers),
+        ("QK^T (per head)", GemmShape::new(l, dk, l), heads),
+        ("p̂·V (per head, +Σ column)", GemmShape::new(l, l, dk + 1), heads),
+        ("classifier", GemmShape::new(1, d, cfg.n_classes), 1),
+    ]
+}
+
+/// Total GEMM macro-tiles per inference (the capacity-planning count
+/// `encoder_e2e` reports next to softmax rows).
+pub fn encoder_macro_tiles(cfg: &ModelConfig) -> u64 {
+    encoder_gemms(cfg).iter().map(|(_, s, count)| count * s.macro_tiles()).sum()
+}
+
+/// Total GEMM cycles per inference on one tile of `device`.
+pub fn encoder_gemm_cycles(device: &Device, cfg: &ModelConfig) -> u64 {
+    encoder_gemms(cfg).iter().map(|(_, s, count)| count * gemm_cycles(device, s)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aie_sim::device::DeviceKind;
+    use crate::data::TaskKind;
+
+    fn ml() -> Device {
+        Device::new(DeviceKind::AieMl)
+    }
+
+    #[test]
+    fn macro_tile_count_is_ceiling_partitioned() {
+        assert_eq!(GemmShape::new(8, 16, 8).macro_tiles(), 1);
+        assert_eq!(GemmShape::new(9, 16, 8).macro_tiles(), 2);
+        assert_eq!(GemmShape::new(8, 16, 9).macro_tiles(), 2);
+        assert_eq!(GemmShape::new(64, 64, 64).macro_tiles(), 64);
+        assert_eq!(GemmShape::new(1, 1, 1).macro_tiles(), 1);
+    }
+
+    #[test]
+    fn batch_stacking_amortizes_ragged_macro_rows() {
+        // A 1-row GEMM (the classifier) occupies a whole macro-row per
+        // call; 8 stacked calls fit the same macro-row.
+        let s = GemmShape::new(1, 64, 8);
+        let single = 8 * gemm_cycles(&ml(), &s);
+        let stacked = gemm_cycles(&ml(), &s.stacked(8));
+        assert!(stacked < single, "stacked {stacked} !< 8x single {single}");
+        assert!(mac_utilization(&ml(), &s.stacked(8)) > mac_utilization(&ml(), &s));
+    }
+
+    #[test]
+    fn utilization_bounded_and_rises_with_k() {
+        for k in [8usize, 32, 64, 256] {
+            let u = mac_utilization(&ml(), &GemmShape::new(64, k, 64));
+            assert!(u > 0.0 && u <= 1.0, "k={k}: {u}");
+        }
+        let shallow = mac_utilization(&ml(), &GemmShape::new(64, 8, 64));
+        let deep = mac_utilization(&ml(), &GemmShape::new(64, 256, 64));
+        assert!(deep > shallow, "fill must amortize over k: {shallow} vs {deep}");
+    }
+
+    #[test]
+    fn encoder_workload_scales_with_model_size() {
+        let tiny = ModelConfig::bert_tiny(TaskKind::Sst2s);
+        let small = ModelConfig::bert_small(TaskKind::Mnlis);
+        assert!(encoder_macro_tiles(&small) > 4 * encoder_macro_tiles(&tiny));
+        assert!(encoder_gemm_cycles(&ml(), &small) > 4 * encoder_gemm_cycles(&ml(), &tiny));
+        // Every listed GEMM contributes at least one macro-tile.
+        for (label, shape, count) in encoder_gemms(&tiny) {
+            assert!(count >= 1, "{label}");
+            assert!(shape.macro_tiles() >= 1, "{label}");
+        }
+    }
+
+    #[test]
+    fn cycles_monotone_in_every_dim() {
+        let base = GemmShape::new(16, 32, 16);
+        let c0 = gemm_cycles(&ml(), &base);
+        assert!(gemm_cycles(&ml(), &GemmShape::new(32, 32, 16)) > c0);
+        assert!(gemm_cycles(&ml(), &GemmShape::new(16, 64, 16)) > c0);
+        assert!(gemm_cycles(&ml(), &GemmShape::new(16, 32, 32)) > c0);
+    }
+}

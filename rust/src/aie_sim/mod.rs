@@ -21,7 +21,10 @@
 //!   follows from the schedule structure, not from per-point tuning.
 //!
 //! [`tile::TileSim`] walks a schedule iteration by iteration (a miniature
-//! discrete simulator), [`scaling`] adds the embarrassingly-parallel
+//! discrete simulator), [`gemm`] costs the encoder's matmul workload in
+//! GEMM macro-tiles (the `aie_sim` mirror of the `linalg` packed GEMM —
+//! `hccs sim --model M` prints the per-shape table), [`scaling`] adds
+//! the embarrassingly-parallel
 //! multi-tile row partitioning of paper §IV-D / Fig. 3, and
 //! [`tile::MultiTileSim`] adds the shard-parallel dispatch schedule
 //! (central feeder, least-busy placement, makespan accounting) that
@@ -30,6 +33,7 @@
 //! cost that bounds scaling at high shard counts.
 
 pub mod device;
+pub mod gemm;
 pub mod kernels;
 pub mod scaling;
 pub mod schedule;

@@ -73,8 +73,11 @@ struct Envelope {
     _ticket: ShardTicket,
 }
 
-/// Message to an executor thread: one unit of work, or stop.
-enum EngineMsg<T> {
+/// Message to an executor thread: one unit of work, or stop.  Shared
+/// with the native model's sharded serving backend
+/// (`crate::model::backend`), which runs the same executor event loop
+/// over its own envelope type.
+pub(crate) enum EngineMsg<T> {
     Work(T),
     Shutdown,
 }
@@ -129,47 +132,56 @@ fn try_permit(
 /// suffixed name (`<name>.shard<K>`); every event lands in both, so
 /// [`Registry::sum_counters`] over `"<name>.shard"` equals the
 /// aggregate counter (the rollup invariant, pinned by tests).
-struct RolledCounter {
+pub(crate) struct RolledCounter {
     total: Arc<Counter>,
     shard: Arc<Counter>,
 }
 
 impl RolledCounter {
-    fn new(reg: &Registry, name: &str, shard: usize) -> Self {
+    pub(crate) fn new(reg: &Registry, name: &str, shard: usize) -> Self {
         Self { total: reg.counter(name), shard: reg.counter(&format!("{name}.shard{shard}")) }
     }
 
-    fn inc(&self) {
+    pub(crate) fn inc(&self) {
         self.add(1);
     }
 
-    fn add(&self, n: u64) {
+    pub(crate) fn add(&self, n: u64) {
         self.total.add(n);
         self.shard.add(n);
     }
 }
 
 /// Histogram analogue of [`RolledCounter`].
-struct RolledHistogram {
+pub(crate) struct RolledHistogram {
     total: Arc<Histogram>,
     shard: Arc<Histogram>,
 }
 
 impl RolledHistogram {
-    fn new(reg: &Registry, name: &str, shard: usize) -> Self {
+    pub(crate) fn new(reg: &Registry, name: &str, shard: usize) -> Self {
         Self { total: reg.histogram(name), shard: reg.histogram(&format!("{name}.shard{shard}")) }
     }
 
-    fn record(&self, d: Duration) {
+    pub(crate) fn record(&self, d: Duration) {
         self.total.record(d);
         self.shard.record(d);
+    }
+
+    /// Record a raw (unit-less) value — e.g. an observed batch size.
+    pub(crate) fn record_value(&self, v: u64) {
+        self.total.record_value(v);
+        self.shard.record_value(v);
     }
 }
 
 /// The shared per-shard executor event loop: receive → batch → flush on
 /// size or deadline → drain on shutdown/disconnect (no request is
-/// dropped).  Both engines run this with their own `run` callback.
-fn batching_event_loop<T>(
+/// dropped).  All three sharded engines — [`Coordinator`],
+/// [`ScoreEngine`], and the native model's
+/// `crate::model::NativeBackend` — run this with their own `run`
+/// callback.
+pub(crate) fn batching_event_loop<T>(
     policy: BatchPolicy,
     rx: Receiver<EngineMsg<T>>,
     req_ctr: &RolledCounter,
@@ -186,7 +198,22 @@ fn batching_event_loop<T>(
                     run(batch.items);
                 }
             }
-            Ok(EngineMsg::Shutdown) => break,
+            Ok(EngineMsg::Shutdown) => {
+                // Drain work already sitting in the channel behind the
+                // shutdown signal, so a submit that succeeded before
+                // shutdown was observed still gets its reply.  (A submit
+                // racing *after* this drain can still lose its reply
+                // channel — callers see `recv()` fail, not a hang.)
+                for msg in rx.try_iter() {
+                    if let EngineMsg::Work(item) = msg {
+                        req_ctr.inc();
+                        if let Some(batch) = batcher.push(item, Instant::now()) {
+                            run(batch.items);
+                        }
+                    }
+                }
+                break;
+            }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(batch) = batcher.poll(Instant::now()) {
                     run(batch.items);

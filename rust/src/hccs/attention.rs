@@ -1,9 +1,14 @@
 //! Fused integer attention: QK^T (int8 MAC) → rescale → HCCS → p̂·V.
 //!
 //! Scores whole attention matrices per head: the full `(r, c)` logit
-//! tile is built, rescaled, and normalized through one
-//! [`super::batch::hccs_batch_into`] call rather than looping the row
-//! kernel `r` times — bit-exact with the row-at-a-time composition.
+//! tile is built by the [`crate::linalg`] A·Bᵀ GEMM, rescaled, and
+//! normalized through one [`super::batch::hccs_batch_into`] call rather
+//! than looping the row kernel `r` times — bit-exact with the
+//! row-at-a-time composition.  [`hccs_attention_from_acc`] is the
+//! batch-axis entry point: `groups` independent calls sharing one θ
+//! (one head across a stacked batch) run stages 2-7 as a single tile
+//! pass, which is what `NativeModel::forward_batch` dispatches per head
+//! per layer.
 //!
 //! Mirrors the fused Pallas kernel (`python/compile/kernels/hccs.py::
 //! hccs_attention`) with identical integer semantics, so the two are
@@ -17,6 +22,7 @@
 use super::batch::hccs_batch_into;
 use super::kernel::{OutputPath, Reciprocal};
 use super::params::HccsParams;
+use crate::linalg;
 
 /// One attention head's integer tensors, row-major.
 #[derive(Clone, Debug)]
@@ -57,10 +63,11 @@ impl AttentionInputs<'_> {
 }
 
 /// Scratch buffers reused across calls (allocation-free hot path).
-/// `xq`/`phat` hold the whole `(r, c)` head matrix so the five HCCS
-/// stages run once per head through the batched engine instead of once
-/// per row; `logits` stays one row wide — each QK^T row is rescaled
-/// into the tile while still cache-hot.
+/// `xq`/`phat` hold the whole stacked `(rows, c)` matrix so the five
+/// HCCS stages run once per call through the batched engine instead of
+/// once per row; `logits` holds the `(r, c)` QK^T accumulator tile of
+/// the single-head entry point ([`hccs_attention_from_acc`] takes the
+/// tile from the caller instead).
 #[derive(Default)]
 pub struct AttentionScratch {
     logits: Vec<i32>,
@@ -86,53 +93,100 @@ pub fn hccs_attention(
     out: &mut [i32],
 ) -> Result<(), String> {
     inp.validate()?;
+    // Stage 1: QK^T through the linalg A·Bᵀ kernel (int8 MAC, i32
+    // accumulation — bit-exact with the old inline dot loop).
+    let mut logits = std::mem::take(&mut scratch.logits);
+    logits.resize(inp.r * inp.c, 0);
+    linalg::gemm_nt_into(inp.q, inp.k, inp.r, inp.c, inp.dk, &mut logits);
+    // Stages 2-8 on the accumulator tile.
+    let res = hccs_attention_from_acc(
+        &logits,
+        inp.v,
+        1,
+        inp.r,
+        inp.c,
+        inp.dv,
+        params,
+        out_path,
+        recip,
+        scale_num,
+        scale_den,
+        scratch,
+        out,
+    );
+    scratch.logits = logits;
+    res
+}
+
+/// Fused integer attention from precomputed QK^T accumulators, over a
+/// **batch axis** of `groups` independent attention calls sharing one θ
+/// (the same head across a stacked batch of examples).
+///
+/// `acc` is the stacked `(groups·r, c)` i32 accumulator tile (each
+/// group's `(r, c)` block is one example's QK^T for this head — the
+/// blocks are block-diagonal: no cross-example products exist).  `v` is
+/// the stacked `(groups·c, dv)` int8 value tensor.  The logit rescale
+/// (stage 2) and the five HCCS stages (3-7) run over **all**
+/// `groups·r` rows in one [`hccs_batch_into`] call — the batch-axis
+/// amortization `NativeModel::forward_batch` is built on — and stage 8
+/// mixes each group against its own V slice.  Bit-exact with calling
+/// [`hccs_attention`] once per group (rows are independent in every
+/// stage).
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_attention_from_acc(
+    acc: &[i32],
+    v: &[i8],
+    groups: usize,
+    r: usize,
+    c: usize,
+    dv: usize,
+    params: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    scale_num: i32,
+    scale_den: i32,
+    scratch: &mut AttentionScratch,
+    out: &mut [i32],
+) -> Result<(), String> {
+    if groups == 0 || r == 0 || c == 0 || dv == 0 {
+        return Err("empty attention dims".into());
+    }
     if scale_den <= 0 || scale_num <= 0 {
         return Err("rescale factors must be positive".into());
     }
-    if out.len() != inp.r * inp.dv {
-        return Err(format!("out len {} != {}x{}", out.len(), inp.r, inp.dv));
+    let rows = groups * r;
+    if acc.len() != rows * c {
+        return Err(format!("acc len {} != {rows}x{c}", acc.len()));
     }
-    params.validate(inp.c).map_err(|e| e.to_string())?;
-
-    scratch.logits.resize(inp.c, 0);
-    scratch.xq.resize(inp.r * inp.c, 0);
-    scratch.phat.resize(inp.r * inp.c, 0);
-
-    // Stages 1-2 per row: QK^T in i32 (int8 MAC accumulation), then
-    // rescale to the int8 grid (floor division like jnp `//`) into the
-    // row's slice of the xq tile while the logits are still cache-hot.
-    for (row, xrow) in scratch.xq.chunks_exact_mut(inp.c).enumerate() {
-        let qrow = &inp.q[row * inp.dk..(row + 1) * inp.dk];
-        for (j, lj) in scratch.logits.iter_mut().enumerate() {
-            let krow = &inp.k[j * inp.dk..(j + 1) * inp.dk];
-            let mut acc = 0i32;
-            for (&a, &b) in qrow.iter().zip(krow) {
-                acc += a as i32 * b as i32;
-            }
-            *lj = acc;
-        }
-        for (x, &l) in xrow.iter_mut().zip(&scratch.logits) {
-            let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
-            *x = scaled.clamp(-128, 127) as i8;
-        }
+    if v.len() != groups * c * dv {
+        return Err(format!("v len {} != {}x{dv}", v.len(), groups * c));
     }
-    // Stages 3-7: one batched HCCS call over the head's full (r, c)
-    // matrix — all rows of a head share θ, so this is the batched
-    // engine's home case.
-    hccs_batch_into(&scratch.xq, inp.r, inp.c, params, out_path, recip, &mut scratch.phat);
-    // Stage 8: p̂ @ V in i32, row by row.
-    for (row, prow) in scratch.phat.chunks_exact(inp.c).enumerate() {
-        let orow = &mut out[row * inp.dv..(row + 1) * inp.dv];
-        orow.fill(0);
-        for (j, &p) in prow.iter().enumerate() {
-            if p == 0 {
-                continue; // sparsity shortcut: clamped tails often hit 0 on the i8 path
-            }
-            let vrow = &inp.v[j * inp.dv..(j + 1) * inp.dv];
-            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                *o += p * vv as i32;
-            }
-        }
+    if out.len() != rows * dv {
+        return Err(format!("out len {} != {rows}x{dv}", out.len()));
+    }
+    params.validate(c).map_err(|e| e.to_string())?;
+
+    scratch.xq.resize(rows * c, 0);
+    scratch.phat.resize(rows * c, 0);
+    // Stage 2: rescale the whole stacked tile onto the int8 logit grid
+    // (floor division like jnp `//`).
+    for (x, &l) in scratch.xq.iter_mut().zip(acc) {
+        let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
+        *x = scaled.clamp(-128, 127) as i8;
+    }
+    // Stages 3-7: ONE batched HCCS call over every row of every group —
+    // all rows share θ, so this is the batched engine's home case.
+    hccs_batch_into(&scratch.xq, rows, c, params, out_path, recip, &mut scratch.phat);
+    // Stage 8: p̂ @ V per group, against that group's V slice.
+    for g in 0..groups {
+        linalg::gemm_pv_into(
+            &scratch.phat[g * r * c..(g + 1) * r * c],
+            &v[g * c * dv..(g + 1) * c * dv],
+            r,
+            c,
+            dv,
+            &mut out[g * r * dv..(g + 1) * r * dv],
+        );
     }
     Ok(())
 }
@@ -241,6 +295,88 @@ mod tests {
             &mut out,
         );
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn grouped_matches_per_group_attention_calls() {
+        // hccs_attention_from_acc over a stacked batch must equal one
+        // hccs_attention per group, bit for bit, in every mode.
+        let mut rng = Xoshiro256::new(55);
+        let (groups, r, c, dk, dv) = (3usize, 4usize, 16usize, 8usize, 5usize);
+        let p = HccsParams::checked(900, 8, 64, c).unwrap();
+        let cases: Vec<(Vec<i8>, Vec<i8>, Vec<i8>)> =
+            (0..groups).map(|_| inputs(&mut rng, r, c, dk, dv)).collect();
+        // Stacked accumulator tile + stacked V.
+        let mut acc = vec![0i32; groups * r * c];
+        let mut v_all = Vec::new();
+        for (g, (q, k, v)) in cases.iter().enumerate() {
+            crate::linalg::gemm_nt_into(q, k, r, c, dk, &mut acc[g * r * c..(g + 1) * r * c]);
+            v_all.extend_from_slice(v);
+        }
+        let mut scratch = AttentionScratch::default();
+        for (op, rc) in [
+            (OutputPath::I16, Reciprocal::Div),
+            (OutputPath::I16, Reciprocal::Clb),
+            (OutputPath::I8, Reciprocal::Div),
+            (OutputPath::I8, Reciprocal::Clb),
+        ] {
+            let mut got = vec![0i32; groups * r * dv];
+            hccs_attention_from_acc(
+                &acc,
+                &v_all,
+                groups,
+                r,
+                c,
+                dv,
+                &p,
+                op,
+                rc,
+                1,
+                8,
+                &mut scratch,
+                &mut got,
+            )
+            .unwrap();
+            for (g, (q, k, v)) in cases.iter().enumerate() {
+                let inp = AttentionInputs { q, k, v, r, c, dk, dv };
+                let mut want = vec![0i32; r * dv];
+                let mut s = AttentionScratch::default();
+                hccs_attention(&inp, &p, op, rc, 1, 8, &mut s, &mut want).unwrap();
+                assert_eq!(got[g * r * dv..(g + 1) * r * dv], want[..], "group {g} {op:?}/{rc:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn from_acc_rejects_bad_shapes() {
+        let p = HccsParams::checked(300, 4, 16, 4).unwrap();
+        let mut scratch = AttentionScratch::default();
+        let acc = vec![0i32; 2 * 3 * 4];
+        let v = vec![0i8; 2 * 4 * 2];
+        let mut out = vec![0i32; 2 * 3 * 2];
+        let mut short = vec![0i32; 5];
+        let mut call = |v: &[i8], den: i32, out: &mut [i32]| {
+            hccs_attention_from_acc(
+                &acc,
+                v,
+                2,
+                3,
+                4,
+                2,
+                &p,
+                OutputPath::I16,
+                Reciprocal::Div,
+                1,
+                den,
+                &mut scratch,
+                out,
+            )
+        };
+        assert!(call(&v, 1, &mut out).is_ok());
+        // Zero scale / wrong v length / wrong out length all reject.
+        assert!(call(&v, 0, &mut out).is_err());
+        assert!(call(&v[1..], 1, &mut out).is_err());
+        assert!(call(&v, 1, &mut short).is_err());
     }
 
     #[test]

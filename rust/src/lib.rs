@@ -41,6 +41,7 @@
 //!
 //! Module inventory (each links its own docs):
 //! [`hccs`] (integer kernel + batched engine + calibration),
+//! [`linalg`] (packed int8 GEMM core — every MAC loop in the stack),
 //! [`model`] (native integer encoder — the artifact-free full-model
 //! path with pluggable HCCS/f32 softmax backends),
 //! [`aie_sim`] (AIE cycle model), [`coordinator`] (serving engines),
@@ -59,6 +60,7 @@ pub mod error;
 pub mod experiments;
 pub mod hccs;
 pub mod json;
+pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod proptest_lite;

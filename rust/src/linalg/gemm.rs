@@ -1,0 +1,307 @@
+//! The int8 GEMM kernels (see the module docs in [`super`]).
+//!
+//! Bit-exactness contract: every output cell of every kernel here is
+//! the i32 sum `Σ_k a[k]·b[k]` accumulated in **ascending k order** in
+//! a single i32 accumulator — exactly what [`dot_i8`] computes — so the
+//! blocked kernels, the scalar reference, and the old per-site loops
+//! all agree bit for bit (i32 addition of in-range products cannot
+//! overflow under the §IV-A shape limits enforced by
+//! [`crate::model::ModelConfig::validate`]).
+
+/// Output units per packed panel (the register-block width of the
+/// weights-stationary kernel; 8 i32 accumulator lanes vectorize to one
+/// or two SIMD registers on every target we care about).
+pub const NR: usize = 8;
+
+/// Activation rows per cache block: a panel (`d_in · NR` int8, ≤ 2 KiB
+/// at the repo's widest `d_in = 256`) stays L1-resident while `MC` rows
+/// stream through it.
+pub const MC: usize = 64;
+
+/// int8 MAC dot product (i32 accumulation, ascending k) — the canonical
+/// scalar implementation every kernel in this module reduces to.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += i32::from(x) * i32::from(y);
+    }
+    acc
+}
+
+/// Scalar reference GEMM — the oracle the blocked kernels are
+/// property-tested against.  Row-major `x` is `(rows, d_in)`, `w` is
+/// `(d_out, d_in)` (one output unit per row), `out` becomes
+/// `(rows, d_out)`.  This is the old `norm.rs::matmul_i8` loop, kept
+/// verbatim as the obviously-correct baseline (and the scalar side of
+/// `benches/gemm.rs`).
+pub fn matmul_i8_ref(x: &[i8], d_in: usize, w: &[i8], d_out: usize, out: &mut Vec<i32>) {
+    debug_assert!(d_in > 0 && x.len() % d_in == 0);
+    debug_assert_eq!(w.len(), d_out * d_in);
+    let rows = x.len() / d_in;
+    out.resize(rows * d_out, 0);
+    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
+        for (o, wrow) in orow.iter_mut().zip(w.chunks_exact(d_in)) {
+            *o = dot_i8(xrow, wrow);
+        }
+    }
+}
+
+/// A weight matrix transposed and packed for the blocked GEMM.
+///
+/// Packing layout (done once, at model construction): output units are
+/// grouped into panels of [`NR`]; within a panel the weights are stored
+/// k-major with the `NR` units interleaved —
+///
+/// ```text
+/// packed[panel][k][lane] = w[panel·NR + lane][k]      (0 past d_out)
+/// ```
+///
+/// so the inner loop reads one contiguous `NR`-wide stripe per k and
+/// broadcasts one activation against it.  The last panel is zero-padded
+/// to `NR` (an all-zero weight column contributes nothing, so padding
+/// never changes results).
+pub struct PackedGemm {
+    /// `ceil(d_out / NR)` panels of `d_in · NR` int8 each.
+    packed: Vec<i8>,
+    d_in: usize,
+    d_out: usize,
+}
+
+impl PackedGemm {
+    /// Pack row-major `w` of shape `(d_out, d_in)`.
+    pub fn pack(w: &[i8], d_out: usize, d_in: usize) -> PackedGemm {
+        assert!(d_in > 0 && d_out > 0, "empty GEMM operand");
+        assert_eq!(w.len(), d_out * d_in, "w is not (d_out, d_in)");
+        let panels = d_out.div_ceil(NR);
+        let mut packed = vec![0i8; panels * d_in * NR];
+        for p in 0..panels {
+            let base = p * d_in * NR;
+            for lane in 0..NR {
+                let unit = p * NR + lane;
+                if unit >= d_out {
+                    break; // zero padding already in place
+                }
+                let wrow = &w[unit * d_in..(unit + 1) * d_in];
+                for (k, &wv) in wrow.iter().enumerate() {
+                    packed[base + k * NR + lane] = wv;
+                }
+            }
+        }
+        PackedGemm { packed, d_in, d_out }
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    /// Blocked GEMM: `x` is row-major `(rows, d_in)`, `out` becomes
+    /// `(rows, d_out)` with `out[r][o] = Σ_k x[r][k]·w[o][k]`.
+    ///
+    /// Loop nest (row block → panel → row → k): the packed panel stays
+    /// L1-resident for a whole [`MC`]-row block, each activation row is
+    /// read once per panel, and the inner k-loop issues `NR`
+    /// independent broadcast-MACs per element.  Bit-exact with
+    /// [`matmul_i8_ref`] (same per-cell accumulation order).
+    pub fn gemm_into(&self, x: &[i8], out: &mut Vec<i32>) {
+        assert!(x.len() % self.d_in == 0, "x is not a whole number of d_in rows");
+        let rows = x.len() / self.d_in;
+        out.resize(rows * self.d_out, 0);
+        let d_in = self.d_in;
+        let d_out = self.d_out;
+        let mut rb = 0usize;
+        while rb < rows {
+            let rend = (rb + MC).min(rows);
+            for (p, panel) in self.packed.chunks_exact(d_in * NR).enumerate() {
+                let o0 = p * NR;
+                let take = NR.min(d_out - o0);
+                for r in rb..rend {
+                    let xrow = &x[r * d_in..(r + 1) * d_in];
+                    let mut acc = [0i32; NR];
+                    for (k, &xv) in xrow.iter().enumerate() {
+                        let stripe = &panel[k * NR..(k + 1) * NR];
+                        let xv = i32::from(xv);
+                        for (a, &wv) in acc.iter_mut().zip(stripe) {
+                            *a += xv * i32::from(wv);
+                        }
+                    }
+                    out[r * d_out + o0..r * d_out + o0 + take].copy_from_slice(&acc[..take]);
+                }
+            }
+            rb = rend;
+        }
+    }
+}
+
+/// A·Bᵀ for two row-major int8 operands: `a` is `(m, kd)`, `b` is
+/// `(n, kd)`, `out` (len `m·n`) gets `out[i][j] = Σ_t a[i][t]·b[j][t]`.
+///
+/// This is the QK^T stage: both sides are activations, so there is no
+/// pack step — instead four B rows are register-blocked per pass, so
+/// each A row is loaded once per four output columns.  Bit-exact with
+/// `dot_i8` per cell.
+pub fn gemm_nt_into(a: &[i8], b: &[i8], m: usize, n: usize, kd: usize, out: &mut [i32]) {
+    assert!(m > 0 && n > 0 && kd > 0, "empty GEMM operand");
+    assert_eq!(a.len(), m * kd, "a is not (m, kd)");
+    assert_eq!(b.len(), n * kd, "b is not (n, kd)");
+    assert_eq!(out.len(), m * n, "out is not (m, n)");
+    for (arow, orow) in a.chunks_exact(kd).zip(out.chunks_exact_mut(n)) {
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let b0 = &b[j * kd..(j + 1) * kd];
+            let b1 = &b[(j + 1) * kd..(j + 2) * kd];
+            let b2 = &b[(j + 2) * kd..(j + 3) * kd];
+            let b3 = &b[(j + 3) * kd..(j + 4) * kd];
+            let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+            for (t, &av) in arow.iter().enumerate() {
+                let av = i32::from(av);
+                s0 += av * i32::from(b0[t]);
+                s1 += av * i32::from(b1[t]);
+                s2 += av * i32::from(b2[t]);
+                s3 += av * i32::from(b3[t]);
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        for (o, brow) in orow[j..].iter_mut().zip(b[j * kd..].chunks_exact(kd)) {
+            *o = dot_i8(arow, brow);
+        }
+    }
+}
+
+/// The probability mix p̂·V: `p` is row-major `(m, c)` i32, `v` is
+/// `(c, dv)` int8, `out` (len `m·dv`) gets `out[i][:] = Σ_j p[i][j]·v[j][:]`.
+///
+/// Rows with `p̂ = 0` (clamped HCCS tails, frequent on the i8 path) are
+/// skipped — the sparsity shortcut the old inline attention loop had.
+/// Accumulation order per output cell is ascending j, matching that
+/// loop bit for bit.
+pub fn gemm_pv_into(p: &[i32], v: &[i8], m: usize, c: usize, dv: usize, out: &mut [i32]) {
+    assert!(m > 0 && c > 0 && dv > 0, "empty GEMM operand");
+    assert_eq!(p.len(), m * c, "p is not (m, c)");
+    assert_eq!(v.len(), c * dv, "v is not (c, dv)");
+    assert_eq!(out.len(), m * dv, "out is not (m, dv)");
+    for (prow, orow) in p.chunks_exact(c).zip(out.chunks_exact_mut(dv)) {
+        orow.fill(0);
+        for (j, &pv) in prow.iter().enumerate() {
+            if pv == 0 {
+                continue;
+            }
+            let vrow = &v[j * dv..(j + 1) * dv];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += pv * i32::from(vv);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn rand_i8(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.i8()).collect()
+    }
+
+    #[test]
+    fn packed_matches_scalar_on_ragged_shapes() {
+        let mut rng = Xoshiro256::new(7);
+        // Includes panel-exact, sub-panel, and ragged d_out; ragged d_in;
+        // 1-row and multi-block row counts.
+        for (rows, d_in, d_out) in [
+            (1usize, 1usize, 1usize),
+            (1, 7, 8),
+            (3, 8, 5),
+            (4, 13, 17),
+            (64, 64, 64),
+            (65, 32, 24),
+            (130, 5, 9),
+        ] {
+            let x = rand_i8(&mut rng, rows * d_in);
+            let w = rand_i8(&mut rng, d_out * d_in);
+            let packed = PackedGemm::pack(&w, d_out, d_in);
+            assert_eq!(packed.d_in(), d_in);
+            assert_eq!(packed.d_out(), d_out);
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            packed.gemm_into(&x, &mut got);
+            matmul_i8_ref(&x, d_in, &w, d_out, &mut want);
+            assert_eq!(got, want, "rows={rows} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    #[test]
+    fn gemm_into_reuses_caller_scratch() {
+        let mut rng = Xoshiro256::new(11);
+        let w = rand_i8(&mut rng, 6 * 4);
+        let packed = PackedGemm::pack(&w, 6, 4);
+        let mut out = vec![99i32; 64]; // stale, over-sized scratch
+        let x = rand_i8(&mut rng, 2 * 4);
+        packed.gemm_into(&x, &mut out);
+        assert_eq!(out.len(), 2 * 6);
+        let mut want = Vec::new();
+        matmul_i8_ref(&x, 4, &w, 6, &mut want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn nt_matches_per_cell_dots() {
+        let mut rng = Xoshiro256::new(3);
+        for (m, n, kd) in [(1usize, 1usize, 1usize), (2, 3, 5), (4, 7, 16), (5, 9, 33)] {
+            let a = rand_i8(&mut rng, m * kd);
+            let b = rand_i8(&mut rng, n * kd);
+            let mut out = vec![0i32; m * n];
+            gemm_nt_into(&a, &b, m, n, kd, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = dot_i8(&a[i * kd..(i + 1) * kd], &b[j * kd..(j + 1) * kd]);
+                    assert_eq!(out[i * n + j], want, "m={m} n={n} kd={kd} cell ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pv_matches_naive_mix_and_skips_zero_rows() {
+        let mut rng = Xoshiro256::new(5);
+        let (m, c, dv) = (3usize, 8usize, 5usize);
+        let mut p: Vec<i32> = (0..m * c).map(|_| rng.range_i64(0, 300) as i32).collect();
+        p[1] = 0;
+        p[c + 3] = 0;
+        let v = rand_i8(&mut rng, c * dv);
+        let mut out = vec![7i32; m * dv];
+        gemm_pv_into(&p, &v, m, c, dv, &mut out);
+        for i in 0..m {
+            for t in 0..dv {
+                let want: i32 = (0..c).map(|j| p[i * c + j] * i32::from(v[j * dv + t])).sum();
+                assert_eq!(out[i * dv + t], want, "cell ({i},{t})");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_hand_computation() {
+        assert_eq!(dot_i8(&[1, 2, 3], &[4, -5, 6]), 4 - 10 + 18);
+        assert_eq!(dot_i8(&[], &[]), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "whole number")]
+    fn gemm_rejects_ragged_input() {
+        let packed = PackedGemm::pack(&[1i8; 12], 3, 4);
+        packed.gemm_into(&[0i8; 5], &mut Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "not (m, kd)")]
+    fn nt_rejects_shape_mismatch() {
+        gemm_nt_into(&[0i8; 5], &[0i8; 8], 2, 2, 4, &mut [0i32; 4]);
+    }
+}

@@ -1,0 +1,40 @@
+//! Integer linear algebra core: the one place every MAC loop in the
+//! stack lives.
+//!
+//! Before this module existed the encoder computed each projection,
+//! FFN, QK^T, and p̂·V through its own scalar dot loop (`norm.rs` had a
+//! `matmul_i8`, `encoder.rs` a private `dot_i8`, `attention.rs` two
+//! inline MAC loops).  Everything now routes through three kernels with
+//! a shared contract — i32 accumulation, **k-ascending per-cell order**
+//! so every entry point is bit-exact with the scalar reference:
+//!
+//! * [`PackedGemm`] — weights-stationary int8×int8→i32 GEMM.  The
+//!   weight matrix is transposed and packed **once** (at
+//!   [`crate::model::NativeModel`] construction) into column panels of
+//!   [`gemm::NR`] output units interleaved along k; the kernel then
+//!   walks activation rows in blocks of [`gemm::MC`] so a panel stays
+//!   L1-resident while a row block streams through it.  This is the
+//!   paper-§IV MAC-array mapping on the CPU: the inner loop is a
+//!   broadcast-multiply-accumulate over `NR` independent i32 lanes,
+//!   which LLVM autovectorizes the same way the batched HCCS kernel's
+//!   8-wide stages do.
+//! * [`gemm_nt_into`] — A·Bᵀ for two row-major int8 operands (both
+//!   sides are *activations*: Q against K).  No packing — K changes
+//!   every call — but the kernel register-blocks four B rows per pass
+//!   so each A row is loaded once per four outputs.
+//! * [`gemm_pv_into`] — the i32×int8 probability mix p̂·V, with the
+//!   p̂ = 0 sparsity shortcut the clamped HCCS tails make profitable.
+//!
+//! [`matmul_i8_ref`] is the scalar reference oracle (the old
+//! `norm.rs::matmul_i8` loop, verbatim): slow, obviously correct, and
+//! property-tested against [`PackedGemm`] over ragged shapes in
+//! `tests/proptests.rs`.  [`dot_i8`] is the canonical int8 dot product
+//! every other helper folds down to.
+//!
+//! See `docs/ARCHITECTURE.md` §"Layer: linalg" for the packing diagram
+//! and the batch-axis dataflow, and `benches/gemm.rs` for the measured
+//! packed-vs-scalar win (`BENCH_gemm.json`).
+
+pub mod gemm;
+
+pub use gemm::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, PackedGemm};

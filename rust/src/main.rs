@@ -6,8 +6,10 @@
 //!              [--modes i16_div,i8_clb,...]          (native: zero artifacts needed)
 //!              [--artifacts DIR] [--variant float|hccs]          (pjrt backend only)
 //! hccs serve   [--backend native|pjrt] [--model M] [--task T] [--seed S] [--mode i16_div|f32]
-//!              [--artifacts DIR] [--variant V] [--batch B] [--wait-ms W] [--shards S]
+//!              [--shards S] [--max-batch B] [--wait-ms W]      (native sharded executor pool)
+//!              [--artifacts DIR] [--variant V] [--batch B]               (pjrt backend only)
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
+//!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile table)
 //! hccs calibrate [--n N] [--rows R] [--spread X]   (synthetic logit demo)
 //! ```
 //!
@@ -22,7 +24,7 @@ use hccs::error::{anyhow, bail, Context, Result};
 
 use hccs::aie_sim::device::{Device, DeviceKind};
 use hccs::aie_sim::kernels::KernelKind;
-use hccs::aie_sim::{scaling, tile};
+use hccs::aie_sim::{gemm, scaling, tile};
 use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::TaskKind;
@@ -36,8 +38,8 @@ use hccs::tokenizer::Tokenizer;
 
 const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
-    "batch=", "wait-ms=", "shards=", "device=", "kernel=", "n=", "tiles=", "rows=", "spread=",
-    "backend=", "seed=", "modes=", "mode=", "help",
+    "batch=", "max-batch=", "wait-ms=", "shards=", "device=", "kernel=", "n=", "tiles=",
+    "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "help",
 ];
 
 fn main() -> Result<()> {
@@ -150,8 +152,9 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     let task = TaskKind::parse(task_name).context("bad --task")?;
     if args.get_or("backend", "native") == "native" {
         // Surface misconfiguration instead of silently dropping flags
-        // that only the PJRT coordinator understands.
-        for flag in ["variant", "shards", "batch", "wait-ms", "artifacts"] {
+        // that only the PJRT coordinator understands.  (--shards,
+        // --max-batch, and --wait-ms now apply to the native backend.)
+        for flag in ["variant", "batch", "artifacts"] {
             if args.get(flag).is_some() {
                 eprintln!(
                     "warning: --{flag} only applies to --backend pjrt; \
@@ -160,6 +163,12 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
             }
         }
         return cmd_serve_native(args, &model, task);
+    }
+    if args.get("max-batch").is_some() {
+        eprintln!(
+            "warning: --max-batch applies to --backend native; the pjrt \
+             coordinator's batch dimension is --batch (fixed at AOT time)"
+        );
     }
     let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let cfg = CoordinatorConfig {
@@ -191,10 +200,16 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
 }
 
 /// Serve the native integer model from stdin — zero artifacts needed.
+/// `--shards`, `--max-batch`, and `--wait-ms` configure the sharded
+/// executor pool (each shard batches flushed requests into one
+/// `forward_batch` tile).
 fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()> {
     let seed = args.parse_num("seed", 42u64)?;
     let mode = SoftmaxBackend::parse(args.get_or("mode", "i16_div"))
         .context("bad --mode (i16_div|i16_clb|i8_div|i8_clb|f32)")?;
+    let shards = args.parse_num_at_least("shards", 1usize, 1)?;
+    let max_batch = args.parse_num_at_least("max-batch", 8usize, 1)?;
+    let wait_ms = args.parse_num("wait-ms", 2u64)?;
     let cfg = ModelConfig::parse(model_name, task)
         .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
     eprintln!(
@@ -204,8 +219,21 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
     );
     let model = NativeModel::new(cfg, task, seed)?;
     let tokenizer = Tokenizer::from_tokens(hccs::data::build_vocab())?;
-    let backend = NativeBackend::new(std::sync::Arc::new(model), mode);
-    eprintln!("serving on stdin (one request per line; Ctrl-D to finish)");
+    let backend = NativeBackend::with_config(
+        std::sync::Arc::new(model),
+        mode,
+        hccs::model::NativeServeConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(wait_ms),
+            },
+            shards,
+        },
+    )?;
+    eprintln!(
+        "serving on stdin across {shards} shard(s), max batch {max_batch} \
+         (one request per line; Ctrl-D to finish)"
+    );
     let n = server::serve(
         &backend,
         &tokenizer,
@@ -213,7 +241,8 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
         stdin().lock(),
         BufWriter::new(stdout().lock()),
     )?;
-    eprintln!("served {n} requests");
+    backend.shutdown();
+    eprintln!("served {n} requests\n{}", backend.metrics.render());
     Ok(())
 }
 
@@ -267,6 +296,36 @@ fn cmd_sim(args: &Args) -> Result<()> {
     }
     if kernel.is_hccs() {
         println!("  int8 MAC utilization: {:.1}%", sim.mac_utilization(n) * 100.0);
+    }
+    if let Some(model_name) = args.get("model") {
+        // Encoder GEMM macro-tile table: the matmul side of an
+        // inference (the softmax side is the schedule above).
+        let task = TaskKind::parse(args.get_or("task", "sst2s")).context("bad --task")?;
+        let cfg = ModelConfig::parse(model_name, task)
+            .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
+        println!("  encoder GEMM workload ({model_name}/{}, per inference):", task.name());
+        println!(
+            "    {:<28} {:>14} {:>6} {:>12} {:>10} {:>7}",
+            "gemm", "m x k x n", "calls", "macro-tiles", "cycles", "MAC%"
+        );
+        for (label, shape, count) in gemm::encoder_gemms(&cfg) {
+            println!(
+                "    {:<28} {:>14} {:>6} {:>12} {:>10} {:>6.1}%",
+                label,
+                format!("{}x{}x{}", shape.m, shape.k, shape.n),
+                count,
+                count * shape.macro_tiles(),
+                count * gemm::gemm_cycles(&device, &shape),
+                gemm::mac_utilization(&device, &shape) * 100.0,
+            );
+        }
+        let total_tiles = gemm::encoder_macro_tiles(&cfg);
+        let total_cycles = gemm::encoder_gemm_cycles(&device, &cfg);
+        let inf_per_s = device.freq_ghz * 1e9 / total_cycles as f64;
+        println!(
+            "    total: {total_tiles} macro-tiles, {total_cycles} cycles \
+             ({inf_per_s:.0} inf/s GEMM-bound on one tile)"
+        );
     }
     Ok(())
 }

@@ -27,8 +27,11 @@ impl Counter {
     }
 }
 
-/// Fixed-bucket log-scale latency histogram (microsecond resolution,
-/// ~4% relative bucket width, covers 1 µs .. ~1.2 h).
+/// Fixed-bucket log-scale value histogram (~4% relative bucket width,
+/// covers 1 .. ~2³²).  Latencies are recorded in microseconds via
+/// [`Histogram::record`]; unit-less values (e.g. observed batch sizes)
+/// go through [`Histogram::record_value`].  By convention the metric
+/// *name* carries the unit (`coordinator.queue_us`, `native.batch_rows`).
 #[derive(Debug)]
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
@@ -74,11 +77,15 @@ impl Histogram {
     }
 
     pub fn record(&self, d: Duration) {
-        let us = d.as_micros() as u64;
-        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.record_value(d.as_micros() as u64);
+    }
+
+    /// Record a raw value (the unit is whatever the metric name says).
+    pub fn record_value(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
+        self.max_us.fetch_max(v, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
@@ -164,8 +171,10 @@ impl Registry {
             out.push_str(&format!("{name} = {}\n", c.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
+            // Unit lives in the metric name by convention (`_us` for
+            // latencies), so values print bare.
             out.push_str(&format!(
-                "{name}: n={} mean={:.1}us p50={}us p95={}us p99={}us max={}us\n",
+                "{name}: n={} mean={:.1} p50={} p95={} p99={} max={}\n",
                 h.count(),
                 h.mean_us(),
                 h.percentile_us(50.0),
@@ -213,6 +222,17 @@ mod tests {
         h.record(Duration::from_secs(3600));
         assert_eq!(h.count(), 2);
         assert!(h.percentile_us(100.0) >= 1_000_000);
+    }
+
+    #[test]
+    fn record_value_feeds_the_same_buckets_as_durations() {
+        let h = Histogram::new();
+        h.record_value(8);
+        h.record(Duration::from_micros(8));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile_us(100.0), 8);
+        assert_eq!(h.max_us(), 8);
+        assert!((h.mean_us() - 8.0).abs() < 1e-9);
     }
 
     #[test]

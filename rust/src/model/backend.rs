@@ -1,20 +1,33 @@
-//! Pluggable softmax backend + the artifact-free serving adapter.
+//! Pluggable softmax backend + the artifact-free sharded serving
+//! engine.
 //!
 //! [`SoftmaxBackend`] selects how each attention head normalizes its
-//! logit rows; [`NativeBackend`] exposes a [`NativeModel`] behind the
-//! [`crate::server::InferBackend`] trait so `server::serve` (and the
-//! `serve_classifier` example) can answer full-model traffic with no
-//! PJRT artifacts on disk.
+//! logit rows.  [`NativeBackend`] serves a [`NativeModel`] behind the
+//! [`crate::server::InferBackend`] trait with the **same sharded
+//! executor substrate as the coordinator engines**: submissions route
+//! through a load-aware [`ShardRouter`] to per-shard executor threads,
+//! each owning its own [`EncoderScratch`] and
+//! [`crate::coordinator::DynamicBatcher`]; every flushed batch runs as
+//! one [`NativeModel::forward_batch`] call over the stacked
+//! `(batch·seq, d)` tile.  `shards = 1` with `max_batch = 1` reproduces
+//! the old synchronous single-mutex backend's outputs bit for bit —
+//! and so does every other configuration, because `forward_batch` is
+//! batch-composition-invariant (pinned in `tests/proptests.rs`), which
+//! is what lets `--shards`/`--max-batch` finally apply to native
+//! serving without any bit-drift risk.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::InferReply;
-use crate::error::Result;
+use crate::coordinator::engine::{batching_event_loop, EngineMsg, RolledCounter, RolledHistogram};
+use crate::coordinator::{BatchPolicy, InferReply, QueuedRequest, ShardRouter, ShardTicket};
+use crate::error::{anyhow, Context, Result};
 use crate::hccs::kernel::parse_mode;
 use crate::hccs::{OutputPath, Reciprocal};
+use crate::metrics::Registry;
 use crate::server::InferBackend;
 
 use super::encoder::{EncoderScratch, NativeModel};
@@ -60,26 +73,98 @@ impl SoftmaxBackend {
     }
 }
 
-/// Serving adapter: a calibrated [`NativeModel`] answering tokenized
-/// requests through per-request reply channels.  Inference runs
-/// synchronously at submit time (the model is pure CPU integer math);
-/// the channel interface keeps it drop-in compatible with the sharded
-/// [`crate::coordinator::Coordinator`] in `server::serve`.
+/// Serving knobs of the sharded native backend.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeServeConfig {
+    /// Per-shard dynamic batching policy (`max_batch` is the cap on
+    /// examples stacked into one `forward_batch` tile).
+    pub policy: BatchPolicy,
+    /// Executor shards (>= 1); each owns a scratch and a batcher.
+    pub shards: usize,
+}
+
+impl Default for NativeServeConfig {
+    fn default() -> Self {
+        // A short flush deadline keeps single-request latency near the
+        // old synchronous backend while still batching concurrent load.
+        Self {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
+            shards: 1,
+        }
+    }
+}
+
+struct NativeEnvelope {
+    id: u64,
+    ids: Vec<i32>,
+    segments: Vec<i32>,
+    reply: Sender<std::result::Result<InferReply, String>>,
+    /// Router claim, released when the envelope is dropped (after the
+    /// reply is sent) so the load view tracks completion.
+    _ticket: ShardTicket,
+}
+
+/// Sharded serving adapter for a calibrated [`NativeModel`]: tokenized
+/// requests are validated at submit, routed to the least-loaded shard,
+/// batched, and answered through per-request reply channels.  Metrics
+/// land under `native.*` with per-shard rollups
+/// (`native.requests.shard0`, ...), including a `native.batch_rows`
+/// histogram of observed batch sizes.
 pub struct NativeBackend {
     model: Arc<NativeModel>,
     backend: SoftmaxBackend,
-    scratch: Mutex<EncoderScratch>,
+    txs: Vec<Sender<EngineMsg<NativeEnvelope>>>,
+    router: ShardRouter,
     next_id: AtomicU64,
+    handles: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Registry>,
 }
 
 impl NativeBackend {
+    /// Single-shard engine with the default batching policy (the
+    /// drop-in replacement for the old synchronous backend).
     pub fn new(model: Arc<NativeModel>, backend: SoftmaxBackend) -> NativeBackend {
-        NativeBackend {
+        Self::with_config(model, backend, NativeServeConfig::default())
+            .expect("default native serve config is valid")
+    }
+
+    /// Start one executor thread per shard.
+    pub fn with_config(
+        model: Arc<NativeModel>,
+        backend: SoftmaxBackend,
+        cfg: NativeServeConfig,
+    ) -> Result<NativeBackend> {
+        if cfg.shards == 0 {
+            return Err(anyhow!("shards must be >= 1"));
+        }
+        if cfg.policy.max_batch == 0 {
+            return Err(anyhow!("max_batch must be >= 1"));
+        }
+        let metrics = Arc::new(Registry::default());
+        let router = ShardRouter::new(cfg.shards);
+        let mut txs = Vec::with_capacity(cfg.shards);
+        let mut handles = Vec::with_capacity(cfg.shards);
+        for shard in 0..cfg.shards {
+            let (tx, rx) = mpsc::channel::<EngineMsg<NativeEnvelope>>();
+            let m = model.clone();
+            let reg = metrics.clone();
+            let policy = cfg.policy;
+            let handle = std::thread::Builder::new()
+                .name(format!("hccs-native-{shard}"))
+                .spawn(move || native_executor_main(m, backend, shard, policy, rx, reg))
+                .with_context(|| format!("spawning native executor shard {shard}"))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(NativeBackend {
             model,
             backend,
-            scratch: Mutex::new(EncoderScratch::default()),
+            txs,
+            router,
             next_id: AtomicU64::new(1),
-        }
+            handles,
+            metrics,
+        })
     }
 
     pub fn model(&self) -> &NativeModel {
@@ -89,6 +174,40 @@ impl NativeBackend {
     pub fn backend(&self) -> SoftmaxBackend {
         self.backend
     }
+
+    /// Number of executor shards.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Requests routed to `shard` and not yet answered.
+    pub fn outstanding(&self, shard: usize) -> u64 {
+        self.router.outstanding(shard)
+    }
+
+    /// Ask every shard to drain and stop (idempotent; also runs on
+    /// drop).
+    pub fn shutdown(&self) {
+        for tx in &self.txs {
+            let _ = tx.send(EngineMsg::Shutdown);
+        }
+    }
+}
+
+impl Drop for NativeBackend {
+    fn drop(&mut self) {
+        // Shut down, release the senders, and join so no executor
+        // outlives the backend.  Each shard drains its queue and any
+        // work already enqueued behind the shutdown signal; a submit
+        // racing with drop can still lose its reply channel, which its
+        // caller observes as a failed `recv()`, never a hang.
+        for tx in self.txs.drain(..) {
+            let _ = tx.send(EngineMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 impl InferBackend for NativeBackend {
@@ -96,31 +215,91 @@ impl InferBackend for NativeBackend {
         &self,
         ids: Vec<i32>,
         segments: Vec<i32>,
-    ) -> Result<Receiver<Result<InferReply, String>>> {
-        let started = Instant::now();
+    ) -> Result<Receiver<std::result::Result<InferReply, String>>> {
         let (tx, rx) = mpsc::channel();
-        let outcome = {
-            let mut scratch = self.scratch.lock().expect("scratch lock poisoned");
-            self.model.forward(&ids, &segments, self.backend, &mut scratch)
-        };
+        // Per-request admission check: a malformed request is answered
+        // on its own channel (matching the old synchronous backend)
+        // instead of poisoning the batch it would have been stacked in.
+        if let Err(e) = self.model.check_request(&ids, &segments) {
+            let _ = tx.send(Err(format!("{e:#}")));
+            return Ok(rx);
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let msg = match outcome {
-            Ok(inf) => Ok(InferReply {
+        let ticket = self.router.route();
+        self.txs[ticket.shard()]
+            .send(EngineMsg::Work(NativeEnvelope {
                 id,
-                predicted: inf.predicted,
-                logits: inf.logits,
-                latency: started.elapsed(),
-            }),
-            Err(e) => Err(format!("{e:#}")),
-        };
-        let _ = tx.send(msg);
+                ids,
+                segments,
+                reply: tx,
+                _ticket: ticket,
+            }))
+            .map_err(|_| anyhow!("native engine is down"))?;
         Ok(rx)
     }
+}
+
+fn native_executor_main(
+    model: Arc<NativeModel>,
+    backend: SoftmaxBackend,
+    shard: usize,
+    policy: BatchPolicy,
+    rx: Receiver<EngineMsg<NativeEnvelope>>,
+    metrics: Arc<Registry>,
+) {
+    // This shard's private forward-pass scratch and request staging
+    // buffers, reused across batches.
+    let mut scratch = EncoderScratch::default();
+    let seq = model.cfg.seq_len;
+    let mut ids_tile: Vec<i32> = Vec::with_capacity(policy.max_batch * seq);
+    let mut segs_tile: Vec<i32> = Vec::with_capacity(policy.max_batch * seq);
+
+    let queue_hist = RolledHistogram::new(&metrics, "native.queue_us", shard);
+    let exec_hist = RolledHistogram::new(&metrics, "native.execute_us", shard);
+    let batch_rows = RolledHistogram::new(&metrics, "native.batch_rows", shard);
+    let batch_ctr = RolledCounter::new(&metrics, "native.batches", shard);
+    let req_ctr = RolledCounter::new(&metrics, "native.requests", shard);
+
+    batching_event_loop(policy, rx, &req_ctr, |items: Vec<QueuedRequest<NativeEnvelope>>| {
+        let started = Instant::now();
+        ids_tile.clear();
+        segs_tile.clear();
+        for q in &items {
+            queue_hist.record(started.duration_since(q.arrived));
+            ids_tile.extend_from_slice(&q.payload.ids);
+            segs_tile.extend_from_slice(&q.payload.segments);
+        }
+        batch_rows.record_value(items.len() as u64);
+        batch_ctr.inc();
+        match model.forward_batch(&ids_tile, &segs_tile, backend, &mut scratch) {
+            Ok(inferences) => {
+                exec_hist.record(started.elapsed());
+                for (q, inf) in items.into_iter().zip(inferences) {
+                    let _ = q.payload.reply.send(Ok(InferReply {
+                        id: q.payload.id,
+                        predicted: inf.predicted,
+                        logits: inf.logits,
+                        latency: q.arrived.elapsed(),
+                    }));
+                }
+            }
+            Err(e) => {
+                // Requests are pre-validated at submit, so this is an
+                // internal failure; every rider gets the message.
+                let msg = format!("{e:#}");
+                for q in items {
+                    let _ = q.payload.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::TaskKind;
+    use crate::model::ModelConfig;
 
     #[test]
     fn backend_names_round_trip() {
@@ -140,5 +319,74 @@ mod tests {
                 assert_ne!(a, b);
             }
         }
+    }
+
+    fn tiny_model() -> Arc<NativeModel> {
+        let task = TaskKind::Sst2s;
+        let cfg = ModelConfig {
+            layers: 1,
+            heads: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: task.max_len(),
+            vocab: crate::data::VOCAB_SIZE as usize,
+            n_classes: 2,
+        };
+        Arc::new(NativeModel::new(cfg, task, 5).unwrap())
+    }
+
+    #[test]
+    fn sharded_backend_answers_and_rolls_up_metrics() {
+        let model = tiny_model();
+        let mode = SoftmaxBackend::parse("i16_div").unwrap();
+        let backend = NativeBackend::with_config(
+            model.clone(),
+            mode,
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards: 2,
+            },
+        )
+        .unwrap();
+        assert_eq!(backend.shards(), 2);
+        let n = model.cfg.seq_len;
+        let rxs: Vec<_> = (0..10)
+            .map(|i| backend.submit_request(vec![1 + i as i32; n], vec![0; n]).unwrap())
+            .collect();
+        let mut scratch = EncoderScratch::default();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let reply = rx.recv().unwrap().expect("inference ok");
+            let ids = vec![1 + i as i32; n];
+            let want = model.forward(&ids, &vec![0; n], mode, &mut scratch).unwrap();
+            assert_eq!(reply.predicted, want.predicted, "request {i}");
+            assert_eq!(reply.logits, want.logits, "request {i}");
+        }
+        backend.shutdown();
+        assert_eq!(backend.metrics.counter("native.requests").get(), 10);
+        assert_eq!(backend.metrics.sum_counters("native.requests.shard"), 10);
+        assert!(backend.metrics.histogram("native.batch_rows").count() >= 1);
+    }
+
+    #[test]
+    fn malformed_request_is_rejected_alone() {
+        let model = tiny_model();
+        let backend = NativeBackend::new(model.clone(), SoftmaxBackend::F32Ref);
+        let n = model.cfg.seq_len;
+        // Bad length and bad vocab id both get an Err reply on their own
+        // channel without failing the engine...
+        let bad_len = backend.submit_request(vec![1; n - 1], vec![0; n - 1]).unwrap();
+        assert!(bad_len.recv().unwrap().is_err());
+        let bad_id = backend.submit_request(vec![-1; n], vec![0; n]).unwrap();
+        assert!(bad_id.recv().unwrap().is_err());
+        // ...and a valid request still succeeds afterwards.
+        let ok = backend.submit_request(vec![1; n], vec![0; n]).unwrap();
+        assert!(ok.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let model = tiny_model();
+        let cfg = NativeServeConfig { shards: 0, ..Default::default() };
+        assert!(NativeBackend::with_config(model, SoftmaxBackend::F32Ref, cfg).is_err());
     }
 }

@@ -14,14 +14,18 @@
 //! mean-pool over positions ──[Wcls]── −bias ──> class logits (i32)
 //! ```
 //!
-//! The HCCS path routes each head through
-//! [`crate::hccs::attention::hccs_attention`] (scale 1/d_h, V augmented
-//! with a ones column so the true row sum Σp̂ comes back with the mix —
-//! the [`crate::hccs::kernel::phat_to_probs`] dequantization contract,
-//! in integer form).  The f32 path computes the exact softmax over the
-//! *same* int8 grid `γ_h·xq` and floors onto the same integer
-//! probability scale, so the two backends differ **only** in the
-//! normalizer shape.
+//! Every matmul — projections, FFN, classifier, and the QK^T / p̂·V
+//! stages — runs through [`crate::linalg`] (weights packed once at
+//! construction, activations processed as whole `(nb·seq, ·)` tiles),
+//! and the HCCS path routes each head through
+//! [`crate::hccs::attention::hccs_attention_from_acc`] (scale 1/d_h, V
+//! augmented with a ones column so the true row sum Σp̂ comes back with
+//! the mix — the [`crate::hccs::kernel::phat_to_probs`] dequantization
+//! contract, in integer form): one batched HCCS dispatch per head per
+//! layer covers the whole batch.  The f32 path computes the exact
+//! softmax over the *same* int8 grid `γ_h·xq` and floors onto the same
+//! integer probability scale, so the two backends differ **only** in
+//! the normalizer shape.
 //!
 //! ## Calibration (in [`NativeModel::new`])
 //!
@@ -40,14 +44,15 @@
 use crate::coordinator::HeadParamStore;
 use crate::data::{TaskKind, WorkloadGen};
 use crate::error::{anyhow, bail, Result};
-use crate::hccs::attention::{hccs_attention, AttentionInputs, AttentionScratch};
+use crate::hccs::attention::{hccs_attention_from_acc, AttentionScratch};
 use crate::hccs::calibrate::calibrate_rows;
 use crate::hccs::{HccsParams, T_I16};
+use crate::linalg::{gemm_nt_into, PackedGemm};
 use crate::rng::Xoshiro256;
 
 use super::backend::SoftmaxBackend;
 use super::config::ModelConfig;
-use super::norm::{layernorm_rows, matmul_i8, quant_div, requant};
+use super::norm::{layernorm_rows, quant_div, requant};
 
 /// Examples drawn from the workload generator for calibration.
 pub const CALIB_EXAMPLES: usize = 8;
@@ -63,16 +68,19 @@ const CTX_NORM: i64 = 256;
 /// Target std of the reported float class logits.
 const CLS_LOGIT_STD: f64 = 2.0;
 
-/// One encoder layer's seeded weights (row-major `(out, in)`).
+/// One encoder layer's seeded weights.  Every linear weight is drawn
+/// row-major `(out, in)` from the seed stream and then **packed once**
+/// into the [`PackedGemm`] panel layout — construction-time transpose +
+/// pack, so the forward pass never touches an unpacked weight.
 struct LayerWeights {
-    wq: Vec<i8>,
-    wk: Vec<i8>,
-    wv: Vec<i8>,
-    wo: Vec<i8>,
+    wq: PackedGemm,
+    wk: PackedGemm,
+    wv: PackedGemm,
+    wo: PackedGemm,
     ln1_gamma: Vec<i8>,
     ln1_beta: Vec<i8>,
-    w1: Vec<i8>,
-    w2: Vec<i8>,
+    w1: PackedGemm,
+    w2: PackedGemm,
     ln2_gamma: Vec<i8>,
     ln2_beta: Vec<i8>,
 }
@@ -85,7 +93,7 @@ struct EncoderWeights {
     ln_emb_gamma: Vec<i8>,
     ln_emb_beta: Vec<i8>,
     layers: Vec<LayerWeights>,
-    w_cls: Vec<i8>,
+    w_cls: PackedGemm,
 }
 
 fn fill_i8(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
@@ -100,6 +108,14 @@ fn fill_ln_beta(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
     (0..n).map(|_| (rng.below(17) as i64 - 8) as i8).collect()
 }
 
+/// Draw a row-major `(d_out, d_in)` weight from the seed stream and
+/// pack it for the blocked GEMM.  The draw order is identical to the
+/// pre-linalg layout, so every seed reproduces the same model.
+fn fill_packed(rng: &mut Xoshiro256, d_out: usize, d_in: usize) -> PackedGemm {
+    let raw = fill_i8(rng, d_out * d_in);
+    PackedGemm::pack(&raw, d_out, d_in)
+}
+
 impl EncoderWeights {
     /// Deterministic init: one xoshiro256** stream, fixed draw order.
     fn seeded(cfg: &ModelConfig, seed: u64) -> EncoderWeights {
@@ -112,19 +128,19 @@ impl EncoderWeights {
         let ln_emb_beta = fill_ln_beta(&mut rng, d);
         let layers = (0..cfg.layers)
             .map(|_| LayerWeights {
-                wq: fill_i8(&mut rng, d * d),
-                wk: fill_i8(&mut rng, d * d),
-                wv: fill_i8(&mut rng, d * d),
-                wo: fill_i8(&mut rng, d * d),
+                wq: fill_packed(&mut rng, d, d),
+                wk: fill_packed(&mut rng, d, d),
+                wv: fill_packed(&mut rng, d, d),
+                wo: fill_packed(&mut rng, d, d),
                 ln1_gamma: fill_ln_gamma(&mut rng, d),
                 ln1_beta: fill_ln_beta(&mut rng, d),
-                w1: fill_i8(&mut rng, cfg.d_ff * d),
-                w2: fill_i8(&mut rng, d * cfg.d_ff),
+                w1: fill_packed(&mut rng, cfg.d_ff, d),
+                w2: fill_packed(&mut rng, d, cfg.d_ff),
                 ln2_gamma: fill_ln_gamma(&mut rng, d),
                 ln2_beta: fill_ln_beta(&mut rng, d),
             })
             .collect();
-        let w_cls = fill_i8(&mut rng, cfg.n_classes * d);
+        let w_cls = fill_packed(&mut rng, cfg.n_classes, d);
         EncoderWeights {
             tok_emb,
             pos_emb,
@@ -240,7 +256,9 @@ struct Head {
     theta: HccsParams,
 }
 
-/// Reusable forward-pass buffers (allocation-free after warmup).
+/// Reusable forward-pass buffers (allocation-free after warmup).  All
+/// tensors carry the whole stacked batch — `(nb·seq, ·)` tiles — so a
+/// scratch warmed on one batch size re-warms once when the batch grows.
 #[derive(Default)]
 pub struct EncoderScratch {
     x: Vec<i8>,
@@ -252,11 +270,13 @@ pub struct EncoderScratch {
     c8: Vec<i8>,
     h8: Vec<i8>,
     ctx32: Vec<i32>,
+    /// Stacked per-head QK^T accumulators, `(nb·seq, seq)`.
     acc_head: Vec<i32>,
     qh: Vec<i8>,
     kh: Vec<i8>,
     vh: Vec<i8>,
     out_aug: Vec<i32>,
+    pool8: Vec<i8>,
     phat: Vec<i32>,
     grid: Vec<f64>,
     exps: Vec<f64>,
@@ -365,7 +385,35 @@ impl NativeModel {
                 segments.len()
             );
         }
-        let logits_i32 = forward_impl(
+        let mut batch = self.forward_batch(ids, segments, backend, scratch)?;
+        Ok(batch.pop().expect("one example in, one inference out"))
+    }
+
+    /// Forward a stacked batch of `ids.len() / seq_len` examples in one
+    /// pass: every projection/FFN GEMM runs on the whole `(nb·seq, d)`
+    /// activation tile, and each head's attention is one
+    /// [`hccs_attention_from_acc`] call (one batched HCCS dispatch per
+    /// head per layer across the batch).  **Bit-exact with calling
+    /// [`Self::forward`] per example** — every stage is row- or
+    /// example-independent, and the calibrated divisors are fixed at
+    /// construction, so batch composition cannot change any output
+    /// (property-pinned in `tests/proptests.rs`).
+    pub fn forward_batch(
+        &self,
+        ids: &[i32],
+        segments: &[i32],
+        backend: SoftmaxBackend,
+        scratch: &mut EncoderScratch,
+    ) -> Result<Vec<Inference>> {
+        let l = self.cfg.seq_len;
+        if ids.is_empty() || ids.len() % l != 0 || ids.len() != segments.len() {
+            bail!(
+                "batch must be a whole number of length-{l} examples, got {}/{} ids/segments",
+                ids.len(),
+                segments.len()
+            );
+        }
+        let logits = forward_impl(
             &self.cfg,
             &self.weights,
             ids,
@@ -374,13 +422,55 @@ impl NativeModel {
             &mut CalibCtx::Run(&self.calib),
             scratch,
         )?;
-        let predicted = argmax_first(&logits_i32);
-        let logits = logits_i32
-            .iter()
-            .map(|&v| (f64::from(v) * self.calib.cls_scale) as f32)
-            .collect();
-        Ok(Inference { predicted, logits_i32, logits })
+        let nc = self.cfg.n_classes;
+        Ok(logits
+            .chunks_exact(nc)
+            .map(|row| {
+                let logits_i32 = row.to_vec();
+                let predicted = argmax_first(&logits_i32);
+                let logits = row
+                    .iter()
+                    .map(|&v| (f64::from(v) * self.calib.cls_scale) as f32)
+                    .collect();
+                Inference { predicted, logits_i32, logits }
+            })
+            .collect())
     }
+
+    /// Validate one request's shape and token ranges without running the
+    /// model — the per-request admission check the sharded
+    /// [`super::backend::NativeBackend`] applies at submit time, so one
+    /// malformed request can be rejected alone instead of failing the
+    /// whole flushed batch it would have ridden in.
+    pub fn check_request(&self, ids: &[i32], segments: &[i32]) -> Result<()> {
+        if ids.len() != self.cfg.seq_len || segments.len() != self.cfg.seq_len {
+            bail!(
+                "expected {} ids/segments, got {}/{}",
+                self.cfg.seq_len,
+                ids.len(),
+                segments.len()
+            );
+        }
+        for (&id, &seg) in ids.iter().zip(segments) {
+            check_token(id, seg, self.cfg.vocab)?;
+        }
+        Ok(())
+    }
+}
+
+/// One token's validity (vocab range + segment range) — the single
+/// definition shared by the submit-time admission check
+/// ([`NativeModel::check_request`]) and the forward pass's embed loop,
+/// so the two can never drift apart.
+#[inline]
+fn check_token(id: i32, seg: i32, vocab: usize) -> Result<()> {
+    if id < 0 || id as usize >= vocab {
+        bail!("token id {id} outside vocab 0..{vocab}");
+    }
+    if !(0..2).contains(&seg) {
+        bail!("segment id {seg} outside 0..2");
+    }
+    Ok(())
 }
 
 /// First-max argmax (mirrors numpy semantics, unlike `max_by` which
@@ -401,16 +491,6 @@ fn gather_head(src: &[i8], d: usize, off: usize, dk: usize, dst: &mut Vec<i8>) {
     for row in src.chunks_exact(d) {
         dst.extend_from_slice(&row[off..off + dk]);
     }
-}
-
-/// int8 MAC dot product (i32 accumulation).
-#[inline]
-fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    let mut acc = 0i32;
-    for (&x, &y) in a.iter().zip(b) {
-        acc += i32::from(x) * i32::from(y);
-    }
-    acc
 }
 
 /// The int8 attention-logit grid: QK accumulator → floor division by
@@ -437,7 +517,7 @@ fn forward_impl(
     calib: &mut CalibCtx,
     s: &mut EncoderScratch,
 ) -> Result<Vec<i32>> {
-    let (l, d, ff) = (cfg.seq_len, cfg.d_model, cfg.d_ff);
+    let (l, d) = (cfg.seq_len, cfg.d_model);
     let (heads, dk) = (cfg.heads, cfg.dk());
     if l == 0 || ids.len() % l != 0 || ids.len() != segs.len() || ids.is_empty() {
         bail!("ids/segments must be a whole number of length-{l} examples");
@@ -447,12 +527,7 @@ fn forward_impl(
     // Embedding: tok + pos + seg in i32, then integer LayerNorm.
     s.x32.resize(nb * l * d, 0);
     for (row, (&id, &seg)) in ids.iter().zip(segs).enumerate() {
-        if id < 0 || id as usize >= cfg.vocab {
-            bail!("token id {id} outside vocab 0..{}", cfg.vocab);
-        }
-        if !(0..2).contains(&seg) {
-            bail!("segment id {seg} outside 0..2");
-        }
+        check_token(id, seg, cfg.vocab)?;
         let t = row % l;
         let tok = &w.tok_emb[id as usize * d..(id as usize + 1) * d];
         let pos = &w.pos_emb[t * d..(t + 1) * d];
@@ -464,125 +539,106 @@ fn forward_impl(
     layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
 
     for (li, lay) in w.layers.iter().enumerate() {
-        // Q/K/V projections.
-        matmul_i8(&s.x, d, &lay.wq, d, &mut s.acc);
+        // Q/K/V projections: one packed GEMM each over the whole
+        // stacked (nb·l, d) activation tile.
+        lay.wq.gemm_into(&s.x, &mut s.acc);
         let div = calib.div(li, Slot::Q, 1, &s.acc);
         requant(&s.acc, div, &mut s.q8);
-        matmul_i8(&s.x, d, &lay.wk, d, &mut s.acc);
+        lay.wk.gemm_into(&s.x, &mut s.acc);
         let div = calib.div(li, Slot::K, 1, &s.acc);
         requant(&s.acc, div, &mut s.k8);
-        matmul_i8(&s.x, d, &lay.wv, d, &mut s.acc);
+        lay.wv.gemm_into(&s.x, &mut s.acc);
         let div = calib.div(li, Slot::V, 1, &s.acc);
         requant(&s.acc, div, &mut s.v8);
 
-        // Attention, head by head (whole batch per head so calibration
-        // sees the head's full logit tile).
+        // Attention, head by head across the whole batch: gather the
+        // head's Q/K, build the stacked block-diagonal (nb·l, l) QK^T
+        // accumulator tile (one linalg A·Bᵀ GEMM per example), then
+        // normalize every row of every example in ONE batched HCCS (or
+        // f32 softmax) pass.  Calibration reads the same tile.
         s.ctx32.resize(nb * l * d, 0);
         for h in 0..heads {
             let off = h * dk;
-            if matches!(calib, CalibCtx::Build(_)) {
-                // Batch QK^T tile for divisor/γ/θ calibration.
-                s.acc_head.resize(nb * l * l, 0);
-                for b in 0..nb {
-                    let base = b * l;
-                    for r in 0..l {
-                        let qlo = (base + r) * d + off;
-                        let qrow = &s.q8[qlo..qlo + dk];
-                        let alo = (base + r) * l;
-                        for (c, o) in s.acc_head[alo..alo + l].iter_mut().enumerate() {
-                            let klo = (base + c) * d + off;
-                            *o = dot_i8(qrow, &s.k8[klo..klo + dk]);
-                        }
-                    }
-                }
+            gather_head(&s.q8, d, off, dk, &mut s.qh);
+            gather_head(&s.k8, d, off, dk, &mut s.kh);
+            s.acc_head.resize(nb * l * l, 0);
+            for b in 0..nb {
+                gemm_nt_into(
+                    &s.qh[b * l * dk..(b + 1) * l * dk],
+                    &s.kh[b * l * dk..(b + 1) * l * dk],
+                    l,
+                    l,
+                    dk,
+                    &mut s.acc_head[b * l * l..(b + 1) * l * l],
+                );
             }
             let head = calib.head(li, h, heads, &s.acc_head, l)?;
 
-            for b in 0..nb {
-                let base = b * l;
-                match backend {
-                    SoftmaxBackend::Hccs { out_path, recip } => {
-                        // Route through the fused attention kernel; V is
-                        // augmented with a ones column so out[:, dk] is
-                        // the true Σp̂ of each row.
-                        gather_head(&s.q8[base * d..(base + l) * d], d, off, dk, &mut s.qh);
-                        gather_head(&s.k8[base * d..(base + l) * d], d, off, dk, &mut s.kh);
-                        s.vh.clear();
-                        for row in s.v8[base * d..(base + l) * d].chunks_exact(d) {
-                            s.vh.extend_from_slice(&row[off..off + dk]);
-                            s.vh.push(1);
-                        }
-                        let inp = AttentionInputs {
-                            q: &s.qh,
-                            k: &s.kh,
-                            v: &s.vh,
-                            r: l,
-                            c: l,
-                            dk,
-                            dv: dk + 1,
-                        };
-                        s.out_aug.resize(l * (dk + 1), 0);
-                        hccs_attention(
-                            &inp,
-                            &head.theta,
-                            out_path,
-                            recip,
-                            1,
-                            head.dh,
-                            &mut s.attn,
-                            &mut s.out_aug,
-                        )
-                        .map_err(|e| anyhow!("hccs_attention L{li}H{h}: {e}"))?;
-                        for r in 0..l {
-                            let orow = &s.out_aug[r * (dk + 1)..(r + 1) * (dk + 1)];
-                            let srow = i64::from(orow[dk]).max(1);
-                            let clo = (base + r) * d + off;
-                            let dst = &mut s.ctx32[clo..clo + dk];
-                            for (o, &raw) in dst.iter_mut().zip(&orow[..dk]) {
-                                *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
-                            }
+            match backend {
+                SoftmaxBackend::Hccs { out_path, recip } => {
+                    // V augmented with a ones column so out[:, dk] is
+                    // the true Σp̂ of each row; one grouped attention
+                    // call covers the whole batch.
+                    s.vh.clear();
+                    for row in s.v8.chunks_exact(d) {
+                        s.vh.extend_from_slice(&row[off..off + dk]);
+                        s.vh.push(1);
+                    }
+                    s.out_aug.resize(nb * l * (dk + 1), 0);
+                    hccs_attention_from_acc(
+                        &s.acc_head,
+                        &s.vh,
+                        nb,
+                        l,
+                        l,
+                        dk + 1,
+                        &head.theta,
+                        out_path,
+                        recip,
+                        1,
+                        head.dh,
+                        &mut s.attn,
+                        &mut s.out_aug,
+                    )
+                    .map_err(|e| anyhow!("hccs_attention L{li}H{h}: {e}"))?;
+                    for (row, orow) in s.out_aug.chunks_exact(dk + 1).enumerate() {
+                        let srow = i64::from(orow[dk]).max(1);
+                        let clo = row * d + off;
+                        let dst = &mut s.ctx32[clo..clo + dk];
+                        for (o, &raw) in dst.iter_mut().zip(&orow[..dk]) {
+                            *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
                         }
                     }
-                    SoftmaxBackend::F32Ref => {
-                        // Same grid, exact softmax, same integer mix.
-                        for r in 0..l {
-                            let qlo = (base + r) * d + off;
-                            let qrow = &s.q8[qlo..qlo + dk];
-                            s.phat.resize(l, 0);
-                            s.grid.clear();
-                            if matches!(calib, CalibCtx::Build(_)) {
-                                let alo = (base + r) * l;
-                                let rowacc = &s.acc_head[alo..alo + l];
-                                s.grid.extend(rowacc.iter().map(|&a| {
-                                    f64::from(logit_grid(a, head.dh)) * head.gamma
-                                }));
-                            } else {
-                                for c in 0..l {
-                                    let klo = (base + c) * d + off;
-                                    let acc = dot_i8(qrow, &s.k8[klo..klo + dk]);
-                                    s.grid.push(f64::from(logit_grid(acc, head.dh)) * head.gamma);
+                }
+                SoftmaxBackend::F32Ref => {
+                    // Same grid, exact softmax, same integer mix — row
+                    // by row over the same stacked accumulator tile.
+                    for (row, rowacc) in s.acc_head.chunks_exact(l).enumerate() {
+                        let base = (row / l) * l; // this example's first row
+                        s.phat.resize(l, 0);
+                        s.grid.clear();
+                        s.grid.extend(
+                            rowacc.iter().map(|&a| f64::from(logit_grid(a, head.dh)) * head.gamma),
+                        );
+                        let m = s.grid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                        s.exps.clear();
+                        s.exps.extend(s.grid.iter().map(|&v| (v - m).exp()));
+                        let z: f64 = s.exps.iter().sum();
+                        let mut srow = 0i64;
+                        for (p, &e) in s.phat.iter_mut().zip(&s.exps) {
+                            *p = (e / z * f64::from(T_I16)).floor() as i32;
+                            srow += i64::from(*p);
+                        }
+                        let srow = srow.max(1);
+                        let clo = row * d + off;
+                        for (j, dst) in s.ctx32[clo..clo + dk].iter_mut().enumerate() {
+                            let mut raw = 0i32;
+                            for (c, &p) in s.phat.iter().enumerate() {
+                                if p != 0 {
+                                    raw += p * i32::from(s.v8[(base + c) * d + off + j]);
                                 }
                             }
-                            let m = s.grid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                            s.exps.clear();
-                            s.exps.extend(s.grid.iter().map(|&v| (v - m).exp()));
-                            let z: f64 = s.exps.iter().sum();
-                            let mut srow = 0i64;
-                            for (p, &e) in s.phat.iter_mut().zip(&s.exps) {
-                                *p = (e / z * f64::from(T_I16)).floor() as i32;
-                                srow += i64::from(*p);
-                            }
-                            let srow = srow.max(1);
-                            let clo = (base + r) * d + off;
-                            for (j, dst) in s.ctx32[clo..clo + dk].iter_mut().enumerate() {
-                                let mut raw = 0i32;
-                                for (c, &p) in s.phat.iter().enumerate() {
-                                    if p != 0 {
-                                        raw += p * i32::from(s.v8[(base + c) * d + off + j]);
-                                    }
-                                }
-                                *dst = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
-                            }
+                            *dst = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
                         }
                     }
                 }
@@ -592,7 +648,7 @@ fn forward_impl(
         // Attention output projection + damped residual write.
         let div = calib.div(li, Slot::Ctx, 1, &s.ctx32);
         requant(&s.ctx32, div, &mut s.c8);
-        matmul_i8(&s.c8, d, &lay.wo, d, &mut s.acc);
+        lay.wo.gemm_into(&s.c8, &mut s.acc);
         let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
         requant(&s.acc, div, &mut s.c8);
         for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
@@ -601,13 +657,13 @@ fn forward_impl(
         layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
 
         // FFN + damped residual write.
-        matmul_i8(&s.x, d, &lay.w1, ff, &mut s.acc);
+        lay.w1.gemm_into(&s.x, &mut s.acc);
         let div = calib.div(li, Slot::F1, 1, &s.acc);
         requant(&s.acc, div, &mut s.h8);
         for v in s.h8.iter_mut() {
             *v = (*v).max(0);
         }
-        matmul_i8(&s.h8, ff, &lay.w2, d, &mut s.acc);
+        lay.w2.gemm_into(&s.h8, &mut s.acc);
         let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
         requant(&s.acc, div, &mut s.c8);
         for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
@@ -616,27 +672,23 @@ fn forward_impl(
         layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
     }
 
-    // Mean-pool over positions, classify, subtract the calibrated bias.
+    // Mean-pool over positions (each pooled value is a floor mean of
+    // int8 activations, so it stays on the int8 grid), then classify
+    // with one packed GEMM over the (nb, d) pooled tile.  i32
+    // accumulation is exact here: |pooled·w| ≤ 127·128·d ≪ 2³¹.
     let nc = cfg.n_classes;
-    let mut logits = vec![0i32; nb * nc];
-    let mut pooled = vec![0i32; d];
+    s.pool8.clear();
     for b in 0..nb {
-        for (j, p) in pooled.iter_mut().enumerate() {
+        for j in 0..d {
             let mut sum = 0i64;
             for t in 0..l {
                 sum += i64::from(s.x[(b * l + t) * d + j]);
             }
-            *p = sum.div_euclid(l as i64) as i32;
-        }
-        for (c, o) in logits[b * nc..(b + 1) * nc].iter_mut().enumerate() {
-            let wrow = &w.w_cls[c * d..(c + 1) * d];
-            let mut acc = 0i64;
-            for (&wv, &pv) in wrow.iter().zip(&pooled) {
-                acc += i64::from(wv) * i64::from(pv);
-            }
-            *o = acc as i32;
+            s.pool8.push(sum.div_euclid(l as i64) as i8);
         }
     }
+    w.w_cls.gemm_into(&s.pool8, &mut s.acc);
+    let mut logits = s.acc[..nb * nc].to_vec();
     match calib {
         CalibCtx::Build(b) => {
             let mut bias = vec![0i64; nc];
@@ -747,6 +799,45 @@ mod tests {
         assert!(m.forward(&vec![-1; n], &vec![0; n], backend, &mut s).is_err());
         assert!(m.forward(&vec![100_000; n], &vec![0; n], backend, &mut s).is_err());
         assert!(m.forward(&vec![1; n], &vec![7; n], backend, &mut s).is_err());
+        // check_request mirrors the forward validation without running.
+        assert!(m.check_request(&vec![1; n], &vec![0; n]).is_ok());
+        assert!(m.check_request(&vec![1; n - 1], &vec![0; n - 1]).is_err());
+        assert!(m.check_request(&vec![-1; n], &vec![0; n]).is_err());
+        assert!(m.check_request(&vec![1; n], &vec![7; n]).is_err());
+    }
+
+    #[test]
+    fn forward_batch_matches_per_example_forward() {
+        let m = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 13).unwrap();
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, 21);
+        let examples: Vec<_> = (0..5).map(|_| generator.next_example()).collect();
+        let mut ids = Vec::new();
+        let mut segs = Vec::new();
+        for ex in &examples {
+            ids.extend_from_slice(&ex.ids);
+            segs.extend_from_slice(&ex.segments);
+        }
+        for backend in [
+            SoftmaxBackend::F32Ref,
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb },
+        ] {
+            let mut sb = EncoderScratch::default();
+            let batch = m.forward_batch(&ids, &segs, backend, &mut sb).unwrap();
+            assert_eq!(batch.len(), 5);
+            let mut ss = EncoderScratch::default();
+            for (inf, ex) in batch.iter().zip(&examples) {
+                let single = m.forward(&ex.ids, &ex.segments, backend, &mut ss).unwrap();
+                assert_eq!(inf.logits_i32, single.logits_i32, "{backend:?}");
+                assert_eq!(inf.predicted, single.predicted);
+                assert_eq!(inf.logits, single.logits);
+            }
+        }
+        // Empty / ragged batches reject.
+        let mut s = EncoderScratch::default();
+        assert!(m.forward_batch(&[], &[], SoftmaxBackend::F32Ref, &mut s).is_err());
+        let (short_ids, short_segs) = (&ids[..ids.len() - 1], &segs[..segs.len() - 1]);
+        assert!(m.forward_batch(short_ids, short_segs, SoftmaxBackend::F32Ref, &mut s).is_err());
     }
 
     #[test]

@@ -32,9 +32,20 @@
 //! [`crate::hccs::calibrate::calibrate_rows`] on that head's actual
 //! logit rows — the runtime mirror of the paper's offline §III-C step.
 //!
+//! Every matmul in the forward pass — projections, FFN, classifier,
+//! QK^T, p̂·V — runs on the [`crate::linalg`] packed-GEMM core (weights
+//! transposed + packed once at construction), and
+//! [`NativeModel::forward_batch`] stacks a whole batch into one
+//! `(batch·seq, d)` tile per layer so every head pays one batched HCCS
+//! dispatch per layer across the batch.  [`NativeBackend`] serves that
+//! path through per-shard executor workers (router + dynamic batcher,
+//! same substrate as the coordinator engines), so `--shards` and
+//! `--max-batch` apply to native serving.
+//!
 //! Submodules: [`config`] (model shapes), [`norm`] (integer LN /
 //! requant helpers), [`encoder`] (weights + calibration + forward),
-//! [`backend`] (softmax backend + the serving [`NativeBackend`]),
+//! [`backend`] (softmax backend + the sharded serving
+//! [`NativeBackend`]),
 //! [`eval`] (accuracy/agreement harness shared by CLI, bench, tests).
 
 pub mod backend;
@@ -43,7 +54,7 @@ pub mod encoder;
 pub mod eval;
 pub mod norm;
 
-pub use backend::{NativeBackend, SoftmaxBackend};
+pub use backend::{NativeBackend, NativeServeConfig, SoftmaxBackend};
 pub use config::ModelConfig;
 pub use encoder::{EncoderScratch, Inference, NativeModel, CALIB_EXAMPLES};
 pub use eval::{eval_native, ModeReport, NativeEvalReport, EVAL_SEED};

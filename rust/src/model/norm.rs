@@ -4,7 +4,9 @@
 //! Everything here is floor-division (`div_euclid`) arithmetic — the
 //! same semantics as the attention logit rescale in
 //! [`crate::hccs::attention`] — so the whole encoder stays bit-exactly
-//! reproducible from a seed on any platform.
+//! reproducible from a seed on any platform.  The matmuls themselves
+//! live in [`crate::linalg`] (the packed GEMM core); this module keeps
+//! only the normalization/requantization stages between them.
 
 /// LayerNorm output target RMS: a normalized activation row has
 /// (approximately) this integer standard deviation, which keeps every
@@ -51,25 +53,6 @@ pub(crate) fn requant(accs: &[i32], div: i32, out: &mut Vec<i8>) {
     debug_assert!(div > 0);
     out.clear();
     out.extend(accs.iter().map(|&v| v.div_euclid(div).clamp(-128, 127) as i8));
-}
-
-/// Row-major int8 matmul with i32 accumulation: `x` is `(rows, d_in)`,
-/// `w` is `(d_out, d_in)` (one output unit per row), `out` becomes
-/// `(rows, d_out)`.  The int8 MAC loop of paper §IV, on the CPU.
-pub(crate) fn matmul_i8(x: &[i8], d_in: usize, w: &[i8], d_out: usize, out: &mut Vec<i32>) {
-    debug_assert!(d_in > 0 && x.len() % d_in == 0);
-    debug_assert_eq!(w.len(), d_out * d_in);
-    let rows = x.len() / d_in;
-    out.resize(rows * d_out, 0);
-    for (xrow, orow) in x.chunks_exact(d_in).zip(out.chunks_exact_mut(d_out)) {
-        for (o, wrow) in orow.iter_mut().zip(w.chunks_exact(d_in)) {
-            let mut acc = 0i32;
-            for (&a, &b) in xrow.iter().zip(wrow) {
-                acc += i32::from(a) * i32::from(b);
-            }
-            *o = acc;
-        }
-    }
 }
 
 /// Integer LayerNorm over each width-`d` row of `x32`: integer mean,
@@ -135,16 +118,6 @@ mod tests {
         let mut out = Vec::new();
         requant(&[-5, 5, 10_000, -10_000, 16], 16, &mut out);
         assert_eq!(out, vec![-1, 0, 127, -128, 1]);
-    }
-
-    #[test]
-    fn matmul_matches_hand_computation() {
-        // x = [[1, 2], [3, -4]], w = [[1, 0], [0, 1], [2, 2]] (3 out units).
-        let x: Vec<i8> = vec![1, 2, 3, -4];
-        let w: Vec<i8> = vec![1, 0, 0, 1, 2, 2];
-        let mut out = Vec::new();
-        matmul_i8(&x, 2, &w, 3, &mut out);
-        assert_eq!(out, vec![1, 2, 6, 3, -4, -2]);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use hccs::hccs::attention::{hccs_attention, AttentionInputs, AttentionScratch};
 use hccs::hccs::{
     hccs_batch, hccs_row, hccs_row_into, HccsParams, OutputPath, Reciprocal, T_I16, T_I8,
 };
+use hccs::linalg::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, PackedGemm};
 use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
 use hccs::proptest_lite::{check, shrink_int, Config};
 use hccs::rng::Xoshiro256;
@@ -274,6 +275,206 @@ fn prop_attention_key_value_permutation_equivariance() {
                     return Err(format!(
                         "p̂·V changed under K/V row permutation ({op:?}/{rc:?})"
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// linalg GEMM core vs the scalar oracle
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct GemmCase {
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    x: Vec<i8>,
+    w: Vec<i8>,
+}
+
+fn gen_gemm(rng: &mut Xoshiro256) -> GemmCase {
+    // Ragged everywhere: rows crossing the MC=64 block edge, d_out
+    // crossing the NR=8 panel edge, sub-lane and wide d_in.
+    let rows = 1 + rng.below(80) as usize;
+    let d_in = 1 + rng.below(70) as usize;
+    let d_out = 1 + rng.below(40) as usize;
+    let x = (0..rows * d_in).map(|_| rng.i8()).collect();
+    let w = (0..d_out * d_in).map(|_| rng.i8()).collect();
+    GemmCase { rows, d_in, d_out, x, w }
+}
+
+fn shrink_gemm(c: &GemmCase) -> Vec<GemmCase> {
+    let mut out = Vec::new();
+    if c.rows > 1 {
+        let rows = c.rows / 2;
+        out.push(GemmCase { rows, x: c.x[..rows * c.d_in].to_vec(), ..c.clone() });
+    }
+    if c.d_out > 1 {
+        let d_out = c.d_out / 2;
+        out.push(GemmCase { d_out, w: c.w[..d_out * c.d_in].to_vec(), ..c.clone() });
+    }
+    out
+}
+
+/// The packed, panel-tiled GEMM must be bit-exact with the scalar
+/// reference oracle on every ragged shape — this is what lets the whole
+/// encoder ride on it without moving a single logit.
+#[test]
+fn prop_packed_gemm_bit_exact_with_scalar_oracle() {
+    check(
+        "packed-gemm-vs-oracle",
+        Config { cases: 200, ..Default::default() },
+        gen_gemm,
+        shrink_gemm,
+        |case| {
+            let packed = PackedGemm::pack(&case.w, case.d_out, case.d_in);
+            let (mut got, mut want) = (Vec::new(), Vec::new());
+            packed.gemm_into(&case.x, &mut got);
+            matmul_i8_ref(&case.x, case.d_in, &case.w, case.d_out, &mut want);
+            if got != want {
+                let bad = got.iter().zip(&want).position(|(a, b)| a != b).unwrap_or(0);
+                return Err(format!(
+                    "packed GEMM diverged at flat index {bad} (row {}, unit {}): {} != {}",
+                    bad / case.d_out,
+                    bad % case.d_out,
+                    got[bad],
+                    want[bad]
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The A·Bᵀ and p̂·V kernels must agree with their per-cell scalar
+/// compositions on ragged shapes (remainder columns, zero-probability
+/// rows).
+#[test]
+fn prop_nt_and_pv_kernels_match_scalar() {
+    check(
+        "nt-pv-vs-scalar",
+        Config { cases: 200, ..Default::default() },
+        |rng| {
+            let m = 1 + rng.below(10) as usize;
+            let n = 1 + rng.below(13) as usize;
+            let kd = 1 + rng.below(24) as usize;
+            let dv = 1 + rng.below(9) as usize;
+            let a: Vec<i8> = (0..m * kd).map(|_| rng.i8()).collect();
+            let b: Vec<i8> = (0..n * kd).map(|_| rng.i8()).collect();
+            let v: Vec<i8> = (0..n * dv).map(|_| rng.i8()).collect();
+            let p: Vec<i32> = (0..m * n)
+                .map(|_| if rng.below(4) == 0 { 0 } else { rng.range_i64(0, 1000) as i32 })
+                .collect();
+            (m, n, kd, dv, a, b, v, p)
+        },
+        |_| vec![],
+        |(m, n, kd, dv, a, b, v, p)| {
+            let (m, n, kd, dv) = (*m, *n, *kd, *dv);
+            let mut nt = vec![0i32; m * n];
+            gemm_nt_into(a, b, m, n, kd, &mut nt);
+            for i in 0..m {
+                for j in 0..n {
+                    let want = dot_i8(&a[i * kd..(i + 1) * kd], &b[j * kd..(j + 1) * kd]);
+                    if nt[i * n + j] != want {
+                        return Err(format!("NT cell ({i},{j}): {} != {want}", nt[i * n + j]));
+                    }
+                }
+            }
+            let mut pv = vec![0i32; m * dv];
+            gemm_pv_into(p, v, m, n, dv, &mut pv);
+            for i in 0..m {
+                for t in 0..dv {
+                    let want: i32 = (0..n).map(|j| p[i * n + j] * i32::from(v[j * dv + t])).sum();
+                    if pv[i * dv + t] != want {
+                        return Err(format!("PV cell ({i},{t}): {} != {want}", pv[i * dv + t]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Batch-axis equivalence of the native encoder
+// ---------------------------------------------------------------------------
+
+/// `forward_batch` must be bit-exact with per-example `forward` for
+/// every softmax backend (all four HCCS modes + the f32 reference),
+/// every batch composition, and with a *reused* scratch that has
+/// already seen other batch sizes — the property that makes the sharded
+/// `NativeBackend`'s dynamic batching bit-drift-free by construction.
+#[test]
+fn prop_forward_batch_bit_exact_with_single_forward() {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        seq_len: task.max_len(),
+        vocab: hccs::data::VOCAB_SIZE as usize,
+        n_classes: 2,
+    };
+    // One model for every case (construction/calibration dominates).
+    let model = NativeModel::new(cfg, task, 7).expect("model build");
+    let backends: Vec<SoftmaxBackend> = std::iter::once(SoftmaxBackend::F32Ref)
+        .chain(SoftmaxBackend::hccs_modes())
+        .collect();
+    check(
+        "forward-batch-bit-exact",
+        Config { cases: 8, ..Default::default() },
+        |rng| {
+            // Two batches of different sizes run back to back through
+            // the same scratch (mixed sizes + scratch reuse).
+            (rng.below(u64::MAX), 1 + rng.below(5) as usize, 1 + rng.below(5) as usize)
+        },
+        |_| vec![],
+        |&(input_seed, bs_a, bs_b)| {
+            let mut generator = WorkloadGen::new(task, input_seed);
+            let examples: Vec<_> = (0..bs_a + bs_b).map(|_| generator.next_example()).collect();
+            let mut batch_scratch = EncoderScratch::default();
+            let mut single_scratch = EncoderScratch::default();
+            for backend in &backends {
+                for (lo, hi) in [(0, bs_a), (bs_a, bs_a + bs_b)] {
+                    let batch = &examples[lo..hi];
+                    let mut ids = Vec::new();
+                    let mut segs = Vec::new();
+                    for ex in batch {
+                        ids.extend_from_slice(&ex.ids);
+                        segs.extend_from_slice(&ex.segments);
+                    }
+                    let stacked = model
+                        .forward_batch(&ids, &segs, *backend, &mut batch_scratch)
+                        .map_err(|e| format!("forward_batch: {e}"))?;
+                    if stacked.len() != batch.len() {
+                        return Err(format!(
+                            "{} inferences for {} examples",
+                            stacked.len(),
+                            batch.len()
+                        ));
+                    }
+                    for (i, (inf, ex)) in stacked.iter().zip(batch).enumerate() {
+                        let single = model
+                            .forward(&ex.ids, &ex.segments, *backend, &mut single_scratch)
+                            .map_err(|e| format!("forward: {e}"))?;
+                        if inf.logits_i32 != single.logits_i32
+                            || inf.predicted != single.predicted
+                            || inf.logits != single.logits
+                        {
+                            return Err(format!(
+                                "batch[{i}] diverged from single forward under {} \
+                                 (batch size {}): {:?} vs {:?}",
+                                backend.name(),
+                                batch.len(),
+                                inf.logits_i32,
+                                single.logits_i32
+                            ));
+                        }
+                    }
                 }
             }
             Ok(())

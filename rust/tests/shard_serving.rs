@@ -12,12 +12,16 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use hccs::coordinator::{BatchPolicy, EngineHandle, InferReply, ScoreConfig, ScoreEngine};
-use hccs::data::TaskKind;
+use hccs::data::{build_vocab, TaskKind, WorkloadGen};
 use hccs::error::Result;
 use hccs::hccs::{HccsParams, OutputPath, Reciprocal};
+use hccs::model::{
+    EncoderScratch, ModelConfig, NativeBackend, NativeModel, NativeServeConfig, SoftmaxBackend,
+};
 use hccs::server::{self, InferBackend};
 use hccs::tokenizer::Tokenizer;
 
@@ -187,4 +191,152 @@ fn multi_shard_serve_output_is_identical_to_single_shard() {
     let (served4, text4, _) = serve_through(4, &input, &tok);
     assert_eq!(served1, served4);
     assert_eq!(text1, text4, "sharding must not change served bytes");
+}
+
+// ---------------------------------------------------------------------------
+// Native full-model backend through shards
+// ---------------------------------------------------------------------------
+
+/// One shared small native model (construction/calibration is the
+/// expensive step; the serving tests only need *a* calibrated model).
+fn native_model() -> Arc<NativeModel> {
+    static MODEL: OnceLock<Arc<NativeModel>> = OnceLock::new();
+    MODEL
+        .get_or_init(|| {
+            let task = TaskKind::Sst2s;
+            let cfg = ModelConfig {
+                layers: 2,
+                heads: 2,
+                d_model: 32,
+                d_ff: 64,
+                seq_len: task.max_len(),
+                vocab: hccs::data::VOCAB_SIZE as usize,
+                n_classes: 2,
+            };
+            Arc::new(NativeModel::new(cfg, task, 42).unwrap())
+        })
+        .clone()
+}
+
+fn native_backend(shards: usize) -> NativeBackend {
+    NativeBackend::with_config(
+        native_model(),
+        SoftmaxBackend::parse("i16_div").unwrap(),
+        NativeServeConfig {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+            shards,
+        },
+    )
+    .unwrap()
+}
+
+/// Text lines for the native server, covering distinct vocab words so
+/// distinct requests produce distinct forwards.
+fn native_input(requests: usize) -> String {
+    let mut input = String::from("# native shard serving\n\n");
+    for k in 0..requests {
+        input.push_str(&format!(
+            "w{:03} good{:02} not bad{:02} w{:03}\n",
+            k % 40,
+            k % 8,
+            (k + 3) % 8,
+            (requests - k) % 40
+        ));
+        if k % 6 == 2 {
+            input.push_str("# interleaved comment\n");
+        }
+        if k % 9 == 4 {
+            input.push('\n');
+        }
+    }
+    input
+}
+
+/// `server::serve` through the sharded NativeBackend: the 4-shard
+/// engine must emit byte-identical output to the 1-shard engine (reply
+/// order == input order, and forward_batch bit-exactness means batch
+/// composition cannot leak into the bytes), while actually spreading
+/// work across every shard.
+#[test]
+fn native_multi_shard_serve_is_byte_identical_to_single_shard() {
+    let tok = Tokenizer::from_tokens(build_vocab()).unwrap();
+    let input = native_input(48);
+    let mut outputs = Vec::new();
+    for shards in [1usize, 4] {
+        let backend = native_backend(shards);
+        let mut out = Vec::new();
+        let served = server::serve(
+            &backend,
+            &tok,
+            TaskKind::Sst2s,
+            std::io::BufReader::new(input.as_bytes()),
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(served, 48, "{shards} shards served {served}");
+        backend.shutdown();
+        if shards == 4 {
+            let m = &backend.metrics;
+            assert_eq!(m.counter("native.requests").get(), 48);
+            assert_eq!(m.sum_counters("native.requests.shard"), 48);
+            for shard in 0..4 {
+                let per = m.counter(&format!("native.requests.shard{shard}")).get();
+                assert!(per > 0, "shard {shard} never served a request");
+            }
+            // The observed-batch-size histogram saw every flush.
+            let bh = m.histogram("native.batch_rows");
+            assert!(bh.count() >= 12, "only {} batches recorded", bh.count());
+            assert!(bh.max_us() <= 4, "batch above max_batch recorded");
+        }
+        outputs.push(String::from_utf8(out).unwrap());
+    }
+    assert_eq!(outputs[0], outputs[1], "native sharding must not change served bytes");
+}
+
+/// Four jittered concurrent clients against a 4-shard native backend:
+/// each client's replies must arrive in its submission order and be
+/// bit-exact with a direct single-threaded `forward` of the same
+/// inputs (per-request reply channels + batch-invariant forward_batch).
+#[test]
+fn native_concurrent_jittered_clients_get_ordered_bit_exact_replies() {
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 12;
+    let model = native_model();
+    let backend = Arc::new(native_backend(4));
+    let mode = SoftmaxBackend::parse("i16_div").unwrap();
+
+    let mut joins = Vec::new();
+    for client in 0..CLIENTS {
+        let backend = backend.clone();
+        joins.push(std::thread::spawn(move || {
+            let task = TaskKind::Sst2s;
+            let mut generator = WorkloadGen::new(task, 1000 + client as u64);
+            let mut inputs = Vec::new();
+            let mut rxs = Vec::new();
+            for k in 0..PER_CLIENT {
+                let ex = generator.next_example();
+                rxs.push(backend.submit_request(ex.ids.clone(), ex.segments.clone()).unwrap());
+                inputs.push((ex.ids, ex.segments));
+                // Deterministic per-client jitter scrambles interleaving
+                // across shards and batch flushes.
+                let jitter_us = ((client * 7 + k * 3) % 11) as u64 * 100;
+                std::thread::sleep(Duration::from_micros(jitter_us));
+            }
+            let replies: Vec<InferReply> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().expect("native inference ok"))
+                .collect();
+            (inputs, replies)
+        }));
+    }
+    let mut scratch = EncoderScratch::default();
+    for join in joins {
+        let (inputs, replies) = join.join().unwrap();
+        assert_eq!(replies.len(), PER_CLIENT);
+        for (k, ((ids, segs), reply)) in inputs.iter().zip(&replies).enumerate() {
+            let want = model.forward(ids, segs, mode, &mut scratch).unwrap();
+            assert_eq!(reply.predicted, want.predicted, "client reply {k} out of order");
+            assert_eq!(reply.logits, want.logits, "client reply {k} not bit-exact");
+        }
+    }
 }

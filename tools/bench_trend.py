@@ -1,0 +1,268 @@
+#!/usr/bin/env python3
+"""Bench-trajectory delta report (zero dependencies, stdlib only).
+
+CI's `bench-smoke` job has been uploading `BENCH_*.json` artifacts every
+run, but nothing read them back — the trajectory existed only as dead
+zip files.  This tool closes the loop:
+
+1. collects the current run's `BENCH_*.json` documents from `--dir`;
+2. fetches the previous successful run's `bench-trajectory-*` artifact
+   for the same workflow/branch through the GitHub Actions API
+   (``GITHUB_TOKEN`` / ``GITHUB_REPOSITORY`` / ``GITHUB_RUN_ID`` are
+   provided by the runner), or reads a local baseline via
+   ``--baseline DIR`` for offline use/testing;
+3. prints a per-bench markdown delta table (written to
+   ``$GITHUB_STEP_SUMMARY`` when set, stdout otherwise);
+4. emits a ``::warning::`` annotation for every throughput metric that
+   regressed by more than ``--threshold`` (default 25%).
+
+Metric extraction is schema-agnostic: every numeric field whose key
+contains ``per_s`` (``rows_per_s``, ``examples_per_s``,
+``macs_per_second``, ...) is treated as a throughput sample, addressed
+by its JSON path with array elements labeled by their identifying
+string field (``name`` / ``backend`` / ``mode`` / ``shards`` / ...).
+
+The tool NEVER fails the job: bench numbers from smoke budgets are
+noisy, so regressions warn loudly but exit 0.  Missing token, first run
+on a branch, or API hiccups degrade to "no baseline" with a note.
+"""
+
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import os
+import sys
+import tempfile
+import urllib.error
+import urllib.request
+import zipfile
+
+THROUGHPUT_KEY_MARKER = "per_s"  # matches *_per_s and *_per_second
+ID_KEYS = ("name", "backend", "mode", "case", "shards", "batch", "rows", "kernel", "n")
+
+
+def log(msg: str) -> None:
+    print(f"bench_trend: {msg}", file=sys.stderr)
+
+
+# ---------------------------------------------------------------------------
+# Metric extraction
+# ---------------------------------------------------------------------------
+
+
+def element_label(value, index):
+    """Stable label for an array element: its identifying field(s), or index."""
+    if isinstance(value, dict):
+        parts = []
+        for key in ID_KEYS:
+            if key in value and isinstance(value[key], (str, int, float)):
+                parts.append(f"{key}={value[key]}" if key != "name" else str(value[key]))
+        if parts:
+            return " ".join(parts[:2])
+    return f"[{index}]"
+
+
+def walk(node, path, out):
+    if isinstance(node, dict):
+        for key, value in sorted(node.items()):
+            if isinstance(value, (int, float)) and not isinstance(value, bool):
+                if THROUGHPUT_KEY_MARKER in key:
+                    out[f"{path}.{key}" if path else key] = float(value)
+            else:
+                walk(value, f"{path}.{key}" if path else key, out)
+    elif isinstance(node, list):
+        for i, value in enumerate(node):
+            walk(value, f"{path}[{element_label(value, i)}]", out)
+
+
+def extract_metrics(doc):
+    """{json-path: throughput} for every *per_s* field in the document."""
+    out = {}
+    walk(doc, "", out)
+    return out
+
+
+def load_bench_dir(directory):
+    """{bench-file-name: {path: value}} for every BENCH_*.json in dir."""
+    benches = {}
+    try:
+        names = sorted(os.listdir(directory))
+    except OSError as e:
+        log(f"cannot list {directory}: {e}")
+        return benches
+    for fname in names:
+        if not (fname.startswith("BENCH_") and fname.endswith(".json")):
+            continue
+        fpath = os.path.join(directory, fname)
+        try:
+            with open(fpath, "r", encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError) as e:
+            log(f"skipping unreadable {fname}: {e}")
+            continue
+        benches[fname] = extract_metrics(doc)
+    return benches
+
+
+# ---------------------------------------------------------------------------
+# Previous-run artifact download (GitHub Actions API, stdlib urllib)
+# ---------------------------------------------------------------------------
+
+
+def api_get(url, token, raw=False):
+    req = urllib.request.Request(url)
+    req.add_header("Authorization", f"Bearer {token}")
+    req.add_header("Accept", "application/vnd.github+json")
+    req.add_header("User-Agent", "bench-trend")
+    with urllib.request.urlopen(req, timeout=30) as resp:
+        data = resp.read()
+    return data if raw else json.loads(data)
+
+
+def fetch_previous_baseline(workdir):
+    """Download the previous successful run's bench artifact; returns a
+    directory with its BENCH_*.json files, or None."""
+    token = os.environ.get("GITHUB_TOKEN")
+    repo = os.environ.get("GITHUB_REPOSITORY")
+    run_id = os.environ.get("GITHUB_RUN_ID", "")
+    # On pull_request events GITHUB_REF_NAME is "<n>/merge", which never
+    # matches a run's head_branch — prefer the PR head branch, then the
+    # push ref, then main.
+    branch = (
+        os.environ.get("GITHUB_HEAD_REF")
+        or os.environ.get("GITHUB_REF_NAME")
+        or "main"
+    )
+    workflow = os.environ.get("BENCH_TREND_WORKFLOW", "ci.yml")
+    if not token or not repo:
+        log("no GITHUB_TOKEN/GITHUB_REPOSITORY; skipping remote baseline")
+        return None
+    base = f"https://api.github.com/repos/{repo}"
+    try:
+        runs = api_get(
+            f"{base}/actions/workflows/{workflow}/runs"
+            f"?branch={branch}&status=success&per_page=10",
+            token,
+        )
+        candidates = [
+            r for r in runs.get("workflow_runs", []) if str(r.get("id")) != str(run_id)
+        ]
+        for run in candidates:
+            arts = api_get(f"{base}/actions/runs/{run['id']}/artifacts", token)
+            for art in arts.get("artifacts", []):
+                if not art.get("name", "").startswith("bench-trajectory-"):
+                    continue
+                if art.get("expired"):
+                    continue
+                log(f"baseline: run {run['id']} artifact {art['name']}")
+                blob = api_get(art["archive_download_url"], token, raw=True)
+                outdir = os.path.join(workdir, "baseline")
+                os.makedirs(outdir, exist_ok=True)
+                with zipfile.ZipFile(io.BytesIO(blob)) as zf:
+                    for member in zf.namelist():
+                        if member.startswith("BENCH_") and member.endswith(".json"):
+                            zf.extract(member, outdir)
+                return outdir
+        log("no previous successful run with a bench-trajectory artifact")
+    except (urllib.error.URLError, OSError, ValueError, KeyError) as e:
+        log(f"baseline fetch failed ({e}); continuing without one")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Report
+# ---------------------------------------------------------------------------
+
+
+def fmt_rate(v):
+    if v >= 1e9:
+        return f"{v / 1e9:.2f}G/s"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f}M/s"
+    if v >= 1e3:
+        return f"{v / 1e3:.1f}k/s"
+    return f"{v:.1f}/s"
+
+
+def build_report(current, baseline, threshold):
+    lines = ["## Bench trajectory vs previous run", ""]
+    warnings = []
+    if not current:
+        lines.append("_No BENCH_*.json documents found in the current run._")
+        return lines, warnings
+    if baseline is None:
+        lines.append("_No baseline available (first run on this branch, or artifact "
+                     "expired) — current numbers recorded for the next run._")
+        baseline = {}
+    lines.append("| bench | metric | previous | current | delta |")
+    lines.append("|---|---|---:|---:|---:|")
+    for fname in sorted(current):
+        bench = fname[len("BENCH_"):-len(".json")]
+        prev_metrics = baseline.get(fname, {})
+        for path, value in sorted(current[fname].items()):
+            prev = prev_metrics.get(path)
+            if prev is None or prev <= 0:
+                delta = "(new)"
+            else:
+                pct = (value - prev) / prev * 100.0
+                delta = f"{pct:+.1f}%"
+                if value < prev * (1.0 - threshold):
+                    delta += " ⚠️"
+                    warnings.append(
+                        f"{bench}: {path} regressed {abs(pct):.1f}% "
+                        f"({fmt_rate(prev)} -> {fmt_rate(value)})"
+                    )
+            lines.append(
+                f"| {bench} | `{path}` | "
+                f"{fmt_rate(prev) if prev else '—'} | {fmt_rate(value)} | {delta} |"
+            )
+    if warnings:
+        lines.append("")
+        lines.append(f"**{len(warnings)} metric(s) regressed more than "
+                     f"{threshold * 100:.0f}%** (smoke budgets are noisy — "
+                     "treat as a flag to re-measure, not a verdict).")
+    return lines, warnings
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".", help="directory with the current BENCH_*.json")
+    ap.add_argument("--baseline", default=None,
+                    help="local baseline directory (skips the GitHub API)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="warn when a throughput metric drops by more than this fraction")
+    ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    help="markdown output file (defaults to $GITHUB_STEP_SUMMARY, else stdout)")
+    args = ap.parse_args()
+
+    current = load_bench_dir(args.dir)
+    baseline = None
+    if args.baseline:
+        baseline = load_bench_dir(args.baseline)
+    else:
+        with tempfile.TemporaryDirectory() as workdir:
+            bl_dir = fetch_previous_baseline(workdir)
+            if bl_dir is not None:
+                baseline = load_bench_dir(bl_dir)
+
+    lines, warnings = build_report(current, baseline, args.threshold)
+    text = "\n".join(lines) + "\n"
+    if args.summary:
+        try:
+            with open(args.summary, "a", encoding="utf-8") as fh:
+                fh.write(text)
+        except OSError as e:
+            log(f"cannot write summary {args.summary}: {e}")
+            print(text)
+    else:
+        print(text)
+    for w in warnings:
+        # GitHub Actions warning annotations; harmless noise elsewhere.
+        print(f"::warning title=bench regression::{w}")
+    return 0  # advisory only: never fail the job on noisy smoke numbers
+
+
+if __name__ == "__main__":
+    sys.exit(main())
