@@ -8,8 +8,9 @@
 //!   (`rust/src/model/`), seeded + calibrated at startup: runs on a
 //!   fresh clone with **zero artifacts**.  `--mode` picks the softmax
 //!   backend (i16_div | i16_clb | i8_div | i8_clb | f32); `--shards`,
-//!   `--max-batch`, and `--wait-ms` configure the sharded executor
-//!   pool batching requests into `forward_batch` tiles.
+//!   `--max-batch`, `--wait-ms`, and `--length-bands` configure the
+//!   sharded executor pool batching requests into `forward_batch`
+//!   tiles (length bands keep short-traffic tiles narrow).
 //! * `--backend pjrt` — the QAT-retrained HCCS BERT executable through
 //!   the sharded coordinator (requires `make artifacts`).
 //!
@@ -29,7 +30,7 @@ use hccs::server::InferBackend;
 
 const KNOWN: &[&str] = &[
     "artifacts=", "model=", "task=", "variant=", "requests=", "batch=", "max-batch=",
-    "wait-ms=", "seed=", "shards=", "backend=", "mode=", "model-seed=",
+    "wait-ms=", "seed=", "shards=", "length-bands=", "backend=", "mode=", "model-seed=",
 ];
 
 /// Open-loop client over any inference backend: submit everything,
@@ -109,12 +110,13 @@ fn main() -> Result<()> {
                 .context("bad --mode (i16_div|i16_clb|i8_div|i8_clb|f32)")?;
             let model_seed = args.parse_num("model-seed", 42u64)?;
             let max_batch = args.parse_num_at_least("max-batch", 8usize, 1)?;
+            let length_bands = args.parse_num_at_least("length-bands", 1usize, 1)?;
             let cfg = ModelConfig::parse(&model, task)
                 .with_context(|| format!("unknown --model {model:?} (bert-tiny|bert-small)"))?;
             println!(
                 "== serve_classifier: native {model}/{task_name} softmax={}, \
-                 {requests} requests, max batch {max_batch}, {shards} shard(s) \
-                 (zero artifacts)",
+                 {requests} requests, max batch {max_batch}, {shards} shard(s), \
+                 {length_bands} length band(s) (zero artifacts)",
                 mode.name()
             );
             let native = NativeModel::new(cfg, task, model_seed)?;
@@ -127,6 +129,7 @@ fn main() -> Result<()> {
                         max_wait: Duration::from_millis(wait_ms),
                     },
                     shards,
+                    length_bands,
                 },
             )?;
             let (correct, latencies, wall) = run_workload(&front, task, requests, seed)?;

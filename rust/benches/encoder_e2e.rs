@@ -8,11 +8,14 @@
 //! workload, then a **batch-axis sweep**: `forward_batch` examples/s at
 //! batch ∈ {1, 2, 4, 8, 16} on the pinned i16_div mode, showing the
 //! stacked-GEMM + single-HCCS-dispatch-per-head win over the
-//! one-example baseline.  Ends with a machine-readable JSON document
-//! (see EXPERIMENTS.md §encoder_e2e for the schema, including the
-//! `batch_sweep` array).  When `HCCS_BENCH_JSON` is set the document is
-//! also written to `BENCH_encoder_e2e.json`; budgets honor
-//! `HCCS_BENCH_*_MS`.
+//! one-example baseline, then a **length-distribution sweep**:
+//! examples/s at avg_len/max_len ∈ {0.25, 0.5, 0.75, 1.0} (synthetic
+//! examples padded to the full task width), showing the valid-length
+//! masked path's speedup tracking the density ratio.  Ends with a
+//! machine-readable JSON document (see EXPERIMENTS.md §encoder_e2e for
+//! the schema, including the `batch_sweep` and `length_sweep` arrays).
+//! When `HCCS_BENCH_JSON` is set the document is also written to
+//! `BENCH_encoder_e2e.json`; budgets honor `HCCS_BENCH_*_MS`.
 
 use hccs::aie_sim::gemm::encoder_macro_tiles;
 use hccs::aie_sim::trace::EncoderTrace;
@@ -129,6 +132,67 @@ fn main() {
     }
     println!("{}", sweep_table.render());
 
+    // Length-distribution sweep: synthetic examples at a controlled
+    // valid length, padded to the full task width and run through
+    // forward_batch at a fixed batch size — so the measured speedup is
+    // purely the masked path skipping pad rows/keys (density ratio),
+    // with dense (1.0) as the baseline.  Densities descend so the
+    // baseline is measured first.
+    const LENGTH_SWEEP_BATCH: usize = 8;
+    let seq = model.cfg.seq_len;
+    let mut len_table = Table::new(
+        &format!("valid-length sweep (i16_div, batch {LENGTH_SWEEP_BATCH}, max_len {seq})"),
+        &["avg/max", "valid tokens", "examples/s", "vs dense"],
+    );
+    let mut len_sweep: Vec<Value> = Vec::new();
+    let mut dense_eps = 0.0f64;
+    let mut filler = hccs::rng::Xoshiro256::new(4242);
+    for &density in &[1.0f64, 0.75, 0.5, 0.25] {
+        let valid = ((seq as f64 * density).round() as usize).clamp(3, seq);
+        // [CLS] + fillers + [SEP], padded to the full width.
+        let mut ids = Vec::with_capacity(LENGTH_SWEEP_BATCH * seq);
+        let mut segs = Vec::with_capacity(LENGTH_SWEEP_BATCH * seq);
+        for _ in 0..LENGTH_SWEEP_BATCH {
+            let mut ex = vec![0i32; seq];
+            ex[0] = 1; // [CLS]
+            for slot in ex[1..valid - 1].iter_mut() {
+                *slot = 4 + filler.below(150) as i32;
+            }
+            ex[valid - 1] = 2; // [SEP]
+            ids.extend_from_slice(&ex);
+            segs.extend(std::iter::repeat_n(0i32, seq));
+        }
+        let r = bench(&format!("length sweep d={density:.2}"), || {
+            let inferences = model
+                .forward_batch(&ids, &segs, sweep_backend, &mut scratch)
+                .expect("forward_batch");
+            sink(inferences.len());
+        });
+        let eps = r.per_second(LENGTH_SWEEP_BATCH as f64);
+        if density == 1.0 {
+            dense_eps = eps;
+        }
+        let speedup = eps / dense_eps.max(1e-9);
+        len_table.row(&[
+            format!("{density:.2}"),
+            valid.to_string(),
+            format!("{eps:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("density".to_string(), Value::from(density));
+        case.insert("avg_len".to_string(), Value::from(valid as i64));
+        case.insert("max_len".to_string(), Value::from(seq as i64));
+        case.insert("examples_per_s".to_string(), Value::from(eps));
+        case.insert("speedup_vs_dense".to_string(), Value::from(speedup));
+        case.insert(
+            "gemm_macro_tiles".to_string(),
+            Value::from(hccs::aie_sim::gemm::encoder_macro_tiles_at(&cfg, valid) as i64),
+        );
+        len_sweep.push(Value::Obj(case));
+    }
+    println!("{}", len_table.render());
+
     let mut doc = std::collections::BTreeMap::new();
     doc.insert("bench".to_string(), Value::from("encoder_e2e"));
     doc.insert("model".to_string(), Value::from("bert-tiny"));
@@ -145,6 +209,7 @@ fn main() {
     );
     doc.insert("cases".to_string(), Value::Arr(cases));
     doc.insert("batch_sweep".to_string(), Value::Arr(sweep));
+    doc.insert("length_sweep".to_string(), Value::Arr(len_sweep));
     let doc = Value::Obj(doc);
     println!("{}", doc.to_string_pretty());
     write_json("encoder_e2e", &doc);

@@ -86,7 +86,19 @@ pub fn mac_utilization(device: &Device, shape: &GemmShape) -> f64 {
 /// `(label, shape, calls per inference)`.  Shapes come from the actual
 /// model config, mirroring `forward_impl` call for call.
 pub fn encoder_gemms(cfg: &ModelConfig) -> Vec<(&'static str, GemmShape, u64)> {
-    let (l, d, ff, dk) = (cfg.seq_len, cfg.d_model, cfg.d_ff, cfg.dk());
+    encoder_gemms_at(cfg, cfg.seq_len)
+}
+
+/// The GEMM workload of one inference whose example carries `tokens`
+/// **valid** positions (1..= `seq_len`).  The masked forward pass drops
+/// pad rows and pad keys entirely, so the token axis of every shape
+/// shrinks to `tokens`: the projections/FFN scale linearly with the
+/// density ratio and the attention GEMMs quadratically — which is
+/// exactly the length-distribution sweep `benches/encoder_e2e.rs`
+/// measures on the CPU.
+pub fn encoder_gemms_at(cfg: &ModelConfig, tokens: usize) -> Vec<(&'static str, GemmShape, u64)> {
+    let l = tokens.clamp(1, cfg.seq_len);
+    let (d, ff, dk) = (cfg.d_model, cfg.d_ff, cfg.dk());
     let layers = cfg.layers as u64;
     let heads = (cfg.layers * cfg.heads) as u64;
     vec![
@@ -103,12 +115,25 @@ pub fn encoder_gemms(cfg: &ModelConfig) -> Vec<(&'static str, GemmShape, u64)> {
 /// Total GEMM macro-tiles per inference (the capacity-planning count
 /// `encoder_e2e` reports next to softmax rows).
 pub fn encoder_macro_tiles(cfg: &ModelConfig) -> u64 {
-    encoder_gemms(cfg).iter().map(|(_, s, count)| count * s.macro_tiles()).sum()
+    encoder_macro_tiles_at(cfg, cfg.seq_len)
+}
+
+/// Macro-tiles per inference at `tokens` valid positions.
+pub fn encoder_macro_tiles_at(cfg: &ModelConfig, tokens: usize) -> u64 {
+    encoder_gemms_at(cfg, tokens).iter().map(|(_, s, count)| count * s.macro_tiles()).sum()
 }
 
 /// Total GEMM cycles per inference on one tile of `device`.
 pub fn encoder_gemm_cycles(device: &Device, cfg: &ModelConfig) -> u64 {
-    encoder_gemms(cfg).iter().map(|(_, s, count)| count * gemm_cycles(device, s)).sum()
+    encoder_gemm_cycles_at(device, cfg, cfg.seq_len)
+}
+
+/// GEMM cycles per inference at `tokens` valid positions.
+pub fn encoder_gemm_cycles_at(device: &Device, cfg: &ModelConfig, tokens: usize) -> u64 {
+    encoder_gemms_at(cfg, tokens)
+        .iter()
+        .map(|(_, s, count)| count * gemm_cycles(device, s))
+        .sum()
 }
 
 #[cfg(test)]
@@ -163,6 +188,31 @@ mod tests {
             assert!(count >= 1, "{label}");
             assert!(shape.macro_tiles() >= 1, "{label}");
         }
+    }
+
+    #[test]
+    fn length_sweep_cycles_track_the_density_ratio() {
+        // Halving the valid length must save at least the linear factor
+        // (projections) and at most the quadratic one (attention), and
+        // full length must reproduce the dense model exactly.
+        let cfg = ModelConfig::bert_tiny(TaskKind::Sst2s);
+        let full = encoder_gemm_cycles_at(&ml(), &cfg, cfg.seq_len);
+        assert_eq!(full, encoder_gemm_cycles(&ml(), &cfg));
+        assert_eq!(
+            encoder_macro_tiles_at(&cfg, cfg.seq_len),
+            encoder_macro_tiles(&cfg)
+        );
+        let half = encoder_gemm_cycles_at(&ml(), &cfg, cfg.seq_len / 2);
+        let quarter = encoder_gemm_cycles_at(&ml(), &cfg, cfg.seq_len / 4);
+        assert!(half * 2 <= full + full / 8, "half-length saves < the linear factor");
+        assert!(quarter < half, "cycles must fall monotonically with length");
+        assert!(
+            half * 4 >= full,
+            "half-length cannot beat the quadratic bound: {half} vs {full}"
+        );
+        // Degenerate lengths clamp instead of panicking.
+        assert!(encoder_gemm_cycles_at(&ml(), &cfg, 0) > 0);
+        assert!(encoder_gemm_cycles_at(&ml(), &cfg, 10 * cfg.seq_len) == full);
     }
 
     #[test]

@@ -94,6 +94,21 @@ impl<T> DynamicBatcher<T> {
         None
     }
 
+    /// Drain **every** expired batch at `now`, not just the oldest.
+    /// [`Self::poll`] flushes at most `max_batch` requests per call, so
+    /// when more than one batch's worth of requests have expired by the
+    /// time the event loop wakes (a long flush, a busy executor), the
+    /// later ones used to wait for extra wakeup round-trips; the event
+    /// loops now call this instead so one wakeup clears the whole
+    /// backlog.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch<T>> {
+        let mut out = Vec::new();
+        while let Some(batch) = self.poll(now) {
+            out.push(batch);
+        }
+        out
+    }
+
     /// Time until the oldest request's deadline (for `recv_timeout`).
     pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
         self.queue.front().map(|h| {
@@ -117,6 +132,25 @@ impl<T> DynamicBatcher<T> {
         let items = self.queue.drain(..n).collect();
         Batch { items, reason }
     }
+}
+
+/// Drain every expired batch from a *set* of batchers (one per length
+/// band in the banded engines; a 1-element slice for the classic
+/// single-queue engines) in one pass — the deadline arm of the shared
+/// executor event loops.  Returns `(queue index, batch)` pairs in queue
+/// order, so no expired queue ever waits on another queue's next
+/// wakeup.
+pub(crate) fn drain_expired<T>(
+    batchers: &mut [DynamicBatcher<T>],
+    now: Instant,
+) -> Vec<(usize, Batch<T>)> {
+    let mut out = Vec::new();
+    for (i, b) in batchers.iter_mut().enumerate() {
+        for batch in b.poll_expired(now) {
+            out.push((i, batch));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -155,6 +189,42 @@ mod tests {
         let batch = b.poll(later).unwrap();
         assert_eq!(batch.reason, FlushReason::Deadline);
         assert_eq!(batch.items.len(), 2);
+    }
+
+    #[test]
+    fn poll_expired_flushes_the_whole_backlog_at_once() {
+        let mut b = DynamicBatcher::new(policy(8, 5));
+        let now = t0();
+        b.push("a", now);
+        b.push("b", now + Duration::from_millis(1));
+        assert!(b.poll_expired(now + Duration::from_millis(4)).is_empty());
+        let batches = b.poll_expired(now + Duration::from_millis(5));
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].items.len(), 2);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_expired_frees_every_expired_queue_in_one_call() {
+        // The multi-queue (length-band) regression the event loops fix:
+        // two queues' partial batches expire within one wakeup.  A
+        // single per-wakeup poll of the earliest queue would leave the
+        // second waiting a further recv_timeout round; drain_expired
+        // must flush both immediately.
+        let now = t0();
+        let mut bands =
+            vec![DynamicBatcher::new(policy(8, 5)), DynamicBatcher::new(policy(8, 5))];
+        bands[0].push("band0-a", now);
+        bands[0].push("band0-b", now);
+        bands[1].push("band1-a", now + Duration::from_millis(1));
+        assert!(drain_expired(&mut bands, now + Duration::from_millis(4)).is_empty());
+        let flushed = drain_expired(&mut bands, now + Duration::from_millis(5));
+        assert_eq!(flushed.len(), 2, "both expired queues must flush in one wakeup");
+        assert_eq!(flushed[0].0, 0);
+        assert_eq!(flushed[0].1.items.len(), 2);
+        assert_eq!(flushed[1].0, 1);
+        assert_eq!(flushed[1].1.items.len(), 1);
+        assert!(bands.iter().all(|b| b.is_empty()));
     }
 
     #[test]

@@ -180,24 +180,66 @@ impl RolledHistogram {
 /// dropped).  All three sharded engines — [`Coordinator`],
 /// [`ScoreEngine`], and the native model's
 /// `crate::model::NativeBackend` — run this with their own `run`
-/// callback.
+/// callback.  This is the 1-band special case of
+/// [`banded_batching_event_loop`].
 pub(crate) fn batching_event_loop<T>(
     policy: BatchPolicy,
     rx: Receiver<EngineMsg<T>>,
     req_ctr: &RolledCounter,
     mut run: impl FnMut(Vec<QueuedRequest<T>>),
 ) {
-    let mut batcher: DynamicBatcher<T> = DynamicBatcher::new(policy);
+    banded_batching_event_loop(policy, 1, |_| 0, rx, req_ctr, |_, items| run(items));
+}
+
+/// Length-banded executor event loop: one [`DynamicBatcher`] per band
+/// (`band_of` routes each work item), so every flushed batch holds
+/// only requests of one length band and the engine's tiles stay dense
+/// under mixed-length traffic.  The deadline arm drains **all** expired
+/// bands in one wakeup ([`super::batcher::drain_expired`]) — the fix
+/// for the flush-only-the-oldest poll bug, where a second
+/// simultaneously-expired batch waited out an extra `recv_timeout`
+/// round.  `n_bands == 1` reproduces the classic single-queue loop
+/// exactly.
+pub(crate) fn banded_batching_event_loop<T>(
+    policy: BatchPolicy,
+    n_bands: usize,
+    band_of: impl Fn(&T) -> usize,
+    rx: Receiver<EngineMsg<T>>,
+    req_ctr: &RolledCounter,
+    mut run: impl FnMut(usize, Vec<QueuedRequest<T>>),
+) {
+    assert!(n_bands >= 1, "at least one band required");
+    let mut bands: Vec<DynamicBatcher<T>> =
+        (0..n_bands).map(|_| DynamicBatcher::new(policy)).collect();
+    let accept = |item: T, bands: &mut Vec<DynamicBatcher<T>>,
+                  run: &mut dyn FnMut(usize, Vec<QueuedRequest<T>>)| {
+        req_ctr.inc();
+        let band = band_of(&item).min(n_bands - 1);
+        if let Some(batch) = bands[band].push(item, Instant::now()) {
+            run(band, batch.items);
+        }
+    };
     loop {
+        // Flush everything already expired BEFORE (possibly) blocking:
+        // under sustained traffic `recv_timeout` keeps returning work
+        // and the Timeout arm may never run, so an expired band that
+        // other bands' traffic can't size-flush would otherwise starve
+        // past its deadline indefinitely.  Draining here bounds every
+        // request's extra wait by one batch execution, traffic or not.
+        for (band, batch) in super::batcher::drain_expired(&mut bands, Instant::now()) {
+            run(band, batch.items);
+        }
+        // Re-read the clock AFTER the drained batches ran (each `run`
+        // is a full batch execution), so the sleep below cannot
+        // overshoot a deadline that crept closer meanwhile.
         let now = Instant::now();
-        let timeout = batcher.next_deadline_in(now).unwrap_or(IDLE_TIMEOUT);
+        let timeout = bands
+            .iter()
+            .filter_map(|b| b.next_deadline_in(now))
+            .min()
+            .unwrap_or(IDLE_TIMEOUT);
         match rx.recv_timeout(timeout) {
-            Ok(EngineMsg::Work(item)) => {
-                req_ctr.inc();
-                if let Some(batch) = batcher.push(item, Instant::now()) {
-                    run(batch.items);
-                }
-            }
+            Ok(EngineMsg::Work(item)) => accept(item, &mut bands, &mut run),
             Ok(EngineMsg::Shutdown) => {
                 // Drain work already sitting in the channel behind the
                 // shutdown signal, so a submit that succeeded before
@@ -206,24 +248,21 @@ pub(crate) fn batching_event_loop<T>(
                 // channel — callers see `recv()` fail, not a hang.)
                 for msg in rx.try_iter() {
                     if let EngineMsg::Work(item) = msg {
-                        req_ctr.inc();
-                        if let Some(batch) = batcher.push(item, Instant::now()) {
-                            run(batch.items);
-                        }
+                        accept(item, &mut bands, &mut run);
                     }
                 }
                 break;
             }
-            Err(RecvTimeoutError::Timeout) => {
-                if let Some(batch) = batcher.poll(Instant::now()) {
-                    run(batch.items);
-                }
-            }
+            // Deadlines are handled at the top of the loop; a timeout
+            // just re-enters it.
+            Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    for batch in batcher.drain() {
-        run(batch.items);
+    for (band, batcher) in bands.iter_mut().enumerate() {
+        for batch in batcher.drain() {
+            run(band, batch.items);
+        }
     }
 }
 

@@ -51,6 +51,11 @@ pub struct Example {
     pub ids: Vec<i32>,
     pub segments: Vec<i32>,
     pub label: i32,
+    /// True token count before padding (`ids[valid_len..]` is `[PAD]`).
+    /// The binary format carries no explicit length, so readers recover
+    /// it from the pad tail ([`crate::data::valid_len`]); the generator
+    /// stamps it directly from the unpadded example.
+    pub valid_len: usize,
 }
 
 /// An in-memory evaluation dataset.
@@ -97,7 +102,8 @@ impl Dataset {
             if label < 0 || label as usize >= n_classes {
                 bail!("label {label} out of range");
             }
-            examples.push(Example { ids, segments, label });
+            let valid_len = crate::data::valid_len(&ids);
+            examples.push(Example { ids, segments, label, valid_len });
         }
         Ok(Dataset { seq_len, n_classes, has_segments, examples })
     }
@@ -140,6 +146,8 @@ mod tests {
         assert_eq!(ds.seq_len, 8);
         assert_eq!(ds.examples[1].label, 1);
         assert_eq!(ds.examples[0].ids[5], 5);
+        // ids are 0..8 with no pad tail: the recovered length is full.
+        assert_eq!(ds.examples[0].valid_len, 8);
     }
 
     #[test]

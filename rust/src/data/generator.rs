@@ -213,7 +213,9 @@ impl WorkloadGen {
         Self { task, rng: SplitMix64::new(seed) }
     }
 
-    /// Next example, padded to the task's max length.
+    /// Next example, padded to the task's max length; `valid_len` is
+    /// the pre-padding token count (the true length masked attention
+    /// and the length-band batcher key on).
     pub fn next_example(&mut self) -> Example {
         let max_len = self.task.max_len();
         let g = match self.task {
@@ -222,9 +224,10 @@ impl WorkloadGen {
         };
         let mut ids = g.ids;
         let mut segments = g.segments;
+        let valid_len = ids.len();
         ids.resize(max_len, PAD);
         segments.resize(max_len, 0);
-        Example { ids, segments, label: g.label }
+        Example { ids, segments, label: g.label, valid_len }
     }
 }
 
@@ -338,5 +341,8 @@ mod tests {
         let e = g.next_example();
         assert_eq!(e.ids.len(), 128);
         assert_eq!(e.segments.len(), 128);
+        assert!(e.valid_len <= 128);
+        assert!(e.ids[e.valid_len..].iter().all(|&t| t == PAD));
+        assert_ne!(e.ids[e.valid_len - 1], PAD);
     }
 }

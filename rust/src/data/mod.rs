@@ -9,3 +9,40 @@ pub mod generator;
 
 pub use dataset::{Dataset, Example, TaskKind};
 pub use generator::{build_vocab, gen_mnlis, gen_sst2s, Generated, WorkloadGen, VOCAB_SIZE};
+
+/// True token count of a padded id row: the prefix up to (and
+/// including) the last non-`[PAD]` position.  Both emitters in this
+/// repo (the workload generator and the tokenizer) pad exclusively at
+/// the tail, so this recovers exactly the `valid_len` they report —
+/// and it is what the model layer derives when a caller hands it raw
+/// padded ids without an explicit length.
+pub fn valid_len(ids: &[i32]) -> usize {
+    ids.iter()
+        .rposition(|&t| t != generator::PAD)
+        .map_or(0, |p| p + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn valid_len_scans_the_pad_tail() {
+        assert_eq!(valid_len(&[1, 5, 2, 0, 0]), 3);
+        assert_eq!(valid_len(&[1, 5, 2]), 3);
+        assert_eq!(valid_len(&[0, 0]), 0);
+        assert_eq!(valid_len(&[]), 0);
+        // Interior pads are inside the valid span (only the tail is a mask).
+        assert_eq!(valid_len(&[1, 0, 2, 0]), 3);
+    }
+
+    #[test]
+    fn generator_examples_report_their_scan_length() {
+        let mut g = WorkloadGen::new(TaskKind::Sst2s, 3);
+        for _ in 0..20 {
+            let ex = g.next_example();
+            assert_eq!(ex.valid_len, valid_len(&ex.ids));
+            assert!(ex.valid_len >= 2 && ex.valid_len <= ex.ids.len());
+        }
+    }
+}

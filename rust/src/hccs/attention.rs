@@ -7,8 +7,11 @@
 //! row-at-a-time composition.  [`hccs_attention_from_acc`] is the
 //! batch-axis entry point: `groups` independent calls sharing one θ
 //! (one head across a stacked batch) run stages 2-7 as a single tile
-//! pass, which is what `NativeModel::forward_batch` dispatches per head
-//! per layer.
+//! pass.  [`hccs_attention_ragged_from_acc`] is its valid-length
+//! sibling — per-group active lengths, masked HCCS (pad keys exact
+//! `p̂ = 0`) and column-bounded GEMMs so no MAC touches a pad key —
+//! which is what `NativeModel::forward_batch` dispatches per head per
+//! layer.
 //!
 //! Mirrors the fused Pallas kernel (`python/compile/kernels/hccs.py::
 //! hccs_attention`) with identical integer semantics, so the two are
@@ -19,7 +22,7 @@
 //! rational factor `num/den` applied with floor division, matching the
 //! Pallas kernel's compile-time constants.
 
-use super::batch::hccs_batch_into;
+use super::batch::{hccs_batch_into, hccs_batch_masked_into};
 use super::kernel::{OutputPath, Reciprocal};
 use super::params::HccsParams;
 use crate::linalg;
@@ -73,6 +76,8 @@ pub struct AttentionScratch {
     logits: Vec<i32>,
     xq: Vec<i8>,
     phat: Vec<i32>,
+    /// Per-row active widths of the ragged entry point.
+    lens: Vec<usize>,
 }
 
 /// Fused integer attention for one head.
@@ -187,6 +192,115 @@ pub fn hccs_attention_from_acc(
             dv,
             &mut out[g * r * dv..(g + 1) * r * dv],
         );
+    }
+    Ok(())
+}
+
+/// Valid-length masked self-attention over a **ragged batch axis** of
+/// `group_lens.len()` independent groups sharing one θ — the same head
+/// across a stacked batch of examples whose valid lengths differ.
+///
+/// Group `g` is one example's self-attention for this head: it owns
+/// `group_lens[g]` consecutive rows (its valid query positions), and
+/// each of those rows attends to exactly the group's `group_lens[g]`
+/// valid keys.  `acc` is the stacked accumulator tile,
+/// `(Σ group_lens, c_stride)` row-major with each row's active QK^T
+/// products in its first `group_lens[g]` columns (the layout
+/// [`crate::linalg::gemm_nt_bounded_into`] writes); pad columns are
+/// never read.  `v` is the stacked `(Σ group_lens, dv)` valid-key value
+/// tensor.  The rescale and the five HCCS stages run over **all** rows
+/// in one [`hccs_batch_masked_into`] call — pad columns come back as
+/// exact `p̂ = 0` — and the mix runs per group through
+/// [`crate::linalg::gemm_pv_bounded_into`], so no MAC ever touches a
+/// pad key.  When every group has `len == c_stride` this is bit-exact
+/// with [`hccs_attention_from_acc`] at `r = c = c_stride`.
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_attention_ragged_from_acc(
+    acc: &[i32],
+    v: &[i8],
+    group_lens: &[usize],
+    c_stride: usize,
+    dv: usize,
+    params: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    scale_num: i32,
+    scale_den: i32,
+    scratch: &mut AttentionScratch,
+    out: &mut [i32],
+) -> Result<(), String> {
+    if group_lens.is_empty() || c_stride == 0 || dv == 0 {
+        return Err("empty attention dims".into());
+    }
+    if let Some(&bad) = group_lens.iter().find(|&&l| l == 0 || l > c_stride) {
+        return Err(format!("group length {bad} outside 1..={c_stride}"));
+    }
+    if scale_den <= 0 || scale_num <= 0 {
+        return Err("rescale factors must be positive".into());
+    }
+    let rows: usize = group_lens.iter().sum();
+    if acc.len() != rows * c_stride {
+        return Err(format!("acc len {} != {rows}x{c_stride}", acc.len()));
+    }
+    if v.len() != rows * dv {
+        return Err(format!("v len {} != {rows}x{dv}", v.len()));
+    }
+    if out.len() != rows * dv {
+        return Err(format!("out len {} != {rows}x{dv}", out.len()));
+    }
+    // Masked validation: the Z ≤ T bound binds at the widest active
+    // row, but the Eq. (11) floor bound must NOT be enforced at the
+    // batch's max length — it *grows* as rows get shorter, so a batch
+    // of legitimately short requests (lmax = 3 needs floor ≥ 86) would
+    // reject a θ calibrated over realistic lengths.  Short rows are
+    // i32-safe with any positive floor (kernel contract).
+    params.validate_masked(c_stride).map_err(|e| e.to_string())?;
+
+    // Expand the per-group lengths to per-row active widths.
+    scratch.lens.clear();
+    for &len in group_lens {
+        scratch.lens.extend(std::iter::repeat_n(len, len));
+    }
+    scratch.xq.resize(rows * c_stride, 0);
+    scratch.phat.resize(rows * c_stride, 0);
+    // Rescale each row's active prefix onto the int8 logit grid (pad
+    // columns of `acc` hold zeros from the bounded GEMM and are never
+    // consumed downstream).
+    for ((xr, ar), &len) in scratch
+        .xq
+        .chunks_exact_mut(c_stride)
+        .zip(acc.chunks_exact(c_stride))
+        .zip(scratch.lens.iter())
+    {
+        for (x, &l) in xr[..len].iter_mut().zip(&ar[..len]) {
+            let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
+            *x = scaled.clamp(-128, 127) as i8;
+        }
+    }
+    // ONE masked batched HCCS call over every row of every group.
+    hccs_batch_masked_into(
+        &scratch.xq,
+        rows,
+        c_stride,
+        &scratch.lens,
+        params,
+        out_path,
+        recip,
+        &mut scratch.phat,
+    );
+    // p̂ @ V per group, bounded to the group's valid keys.
+    let mut off = 0usize;
+    for &len in group_lens {
+        linalg::gemm_pv_bounded_into(
+            &scratch.phat[off * c_stride..(off + len) * c_stride],
+            &v[off * dv..(off + len) * dv],
+            len,
+            c_stride,
+            len,
+            dv,
+            &mut out[off * dv..(off + len) * dv],
+        );
+        off += len;
     }
     Ok(())
 }
@@ -345,6 +459,122 @@ mod tests {
                 assert_eq!(got[g * r * dv..(g + 1) * r * dv], want[..], "group {g} {op:?}/{rc:?}");
             }
         }
+    }
+
+    #[test]
+    fn ragged_matches_per_group_dense_attention() {
+        // Groups of different valid lengths through ONE ragged call must
+        // equal one dense hccs_attention per group (r = c = len), bit
+        // for bit, in every mode — the masked path adds nothing but the
+        // skipped pad work.
+        let mut rng = Xoshiro256::new(91);
+        let (c_stride, dk, dv) = (16usize, 8usize, 5usize);
+        let group_lens = [3usize, 16, 1, 9];
+        // Feasible for every active length down to 1 (floor >= 256).
+        let p = HccsParams::checked(400, 1, 64, c_stride).unwrap();
+        assert!(p.validate(1).is_ok(), "test θ must cover the shortest group");
+        let cases: Vec<(Vec<i8>, Vec<i8>, Vec<i8>)> = group_lens
+            .iter()
+            .map(|&len| inputs(&mut rng, len, len, dk, dv))
+            .collect();
+        let rows: usize = group_lens.iter().sum();
+        let mut acc = vec![0i32; rows * c_stride];
+        let mut v_all = Vec::new();
+        let mut off = 0usize;
+        for (&len, (q, k, v)) in group_lens.iter().zip(&cases) {
+            crate::linalg::gemm_nt_bounded_into(
+                q,
+                k,
+                len,
+                c_stride,
+                len,
+                dk,
+                &mut acc[off * c_stride..(off + len) * c_stride],
+            );
+            v_all.extend_from_slice(v);
+            off += len;
+        }
+        let mut scratch = AttentionScratch::default();
+        for (op, rc) in [
+            (OutputPath::I16, Reciprocal::Div),
+            (OutputPath::I16, Reciprocal::Clb),
+            (OutputPath::I8, Reciprocal::Div),
+            (OutputPath::I8, Reciprocal::Clb),
+        ] {
+            let mut got = vec![0i32; rows * dv];
+            hccs_attention_ragged_from_acc(
+                &acc,
+                &v_all,
+                &group_lens,
+                c_stride,
+                dv,
+                &p,
+                op,
+                rc,
+                1,
+                8,
+                &mut scratch,
+                &mut got,
+            )
+            .unwrap();
+            let mut off = 0usize;
+            for (&len, (q, k, v)) in group_lens.iter().zip(&cases) {
+                let inp = AttentionInputs { q, k, v, r: len, c: len, dk, dv };
+                let mut want = vec![0i32; len * dv];
+                let mut s = AttentionScratch::default();
+                hccs_attention(&inp, &p, op, rc, 1, 8, &mut s, &mut want).unwrap();
+                assert_eq!(
+                    got[off * dv..(off + len) * dv],
+                    want[..],
+                    "group len {len} {op:?}/{rc:?}"
+                );
+                off += len;
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_rejects_bad_group_lens() {
+        let p = HccsParams::checked(400, 1, 64, 8).unwrap();
+        let mut scratch = AttentionScratch::default();
+        let acc = vec![0i32; 3 * 8];
+        let v = vec![0i8; 3 * 2];
+        let mut out = vec![0i32; 3 * 2];
+        // Zero-length and over-wide groups reject; a valid split passes.
+        assert!(hccs_attention_ragged_from_acc(
+            &acc, &v, &[3], 8, 2, &p, OutputPath::I16, Reciprocal::Div, 1, 4, &mut scratch,
+            &mut out
+        )
+        .is_ok());
+        assert!(hccs_attention_ragged_from_acc(
+            &acc, &v, &[0, 3], 8, 2, &p, OutputPath::I16, Reciprocal::Div, 1, 4, &mut scratch,
+            &mut out
+        )
+        .is_err());
+        assert!(hccs_attention_ragged_from_acc(
+            &acc, &v, &[9], 8, 2, &p, OutputPath::I16, Reciprocal::Div, 1, 4, &mut scratch,
+            &mut out
+        )
+        .is_err());
+        // Row-sum-overflow θ (8·32000 > 32767) still rejects; a θ whose
+        // floor only covers long rows is accepted (masked relaxation:
+        // short active rows ride the i32 headroom, see validate_masked).
+        let overflow = HccsParams::new(32000, 1, 64);
+        assert!(hccs_attention_ragged_from_acc(
+            &acc, &v, &[3], 8, 2, &overflow, OutputPath::I16, Reciprocal::Div, 1, 4,
+            &mut scratch, &mut out
+        )
+        .is_err());
+        let low_floor = HccsParams::checked(282, 4, 64, 64).unwrap(); // floor 26
+        assert!(low_floor.validate(3).is_err(), "dense validation would reject len 3");
+        let short_acc = vec![5i32; 3 * 8];
+        let short_v = vec![1i8; 3 * 2];
+        let mut short_out = vec![0i32; 3 * 2];
+        assert!(hccs_attention_ragged_from_acc(
+            &short_acc, &short_v, &[3], 8, 2, &low_floor, OutputPath::I16, Reciprocal::Div,
+            1, 4, &mut scratch, &mut short_out
+        )
+        .is_ok());
     }
 
     #[test]

@@ -172,6 +172,128 @@ pub fn hccs_batch_into(
     }
 }
 
+/// Valid-length masked variant of [`hccs_batch_into`]: row `r` of the
+/// `rows x cols` tile is scored over its first `lens[r]` columns only
+/// (stages 1-5 never read past the active width), and the remaining
+/// `cols - lens[r]` pad columns are written as **exact `p̂ = 0`** — a
+/// true hard mask, unlike the positive score floor `B - S·Dmax` that a
+/// fully-clamped pad logit would otherwise receive.
+///
+/// Bit-exactness contract: `out[r][..lens[r]]` equals
+/// [`super::kernel::hccs_row_into`] run on `x[r][..lens[r]]` alone, for
+/// every mode; `out[r][lens[r]..]` is all zeros.  With `lens[r] == cols`
+/// for every row this is bit-identical to [`hccs_batch_into`].
+///
+/// θ feasibility: the row-sum bound must hold at the *widest* active
+/// length (`Z ≤ n·B ≤ 32767` needs the longest row) and the score
+/// floor must be positive — which is exactly
+/// [`HccsParams::validate_masked`]`(cols)`, the check the masked
+/// attention entry point applies.  Shorter active rows only shrink Z;
+/// every stage still fits the kernel's i32 lanes because `s_i ≤ Z`
+/// bounds the reciprocal products by `T << R` (the int16-ρ₈ guarantee
+/// of §IV-C holds for rows with `len·floor ≥ 256`; shorter rows ride
+/// the i32 headroom).
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_batch_masked_into(
+    x: &[i8],
+    rows: usize,
+    cols: usize,
+    lens: &[usize],
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    out: &mut [i32],
+) {
+    assert!(rows > 0, "empty tile (rows = 0)");
+    assert!(cols > 0, "empty row");
+    assert_eq!(x.len(), rows * cols, "x is not a rows x cols tile");
+    assert_eq!(out.len(), x.len(), "output length mismatch");
+    assert_eq!(lens.len(), rows, "one active length per row required");
+    assert!(
+        lens.iter().all(|&l| (1..=cols).contains(&l)),
+        "active lengths must be in 1..=cols"
+    );
+
+    // Stages 1-4 over each row's active prefix; pad tail zeroed here so
+    // stage 5 can scale whole prefixes without touching pads again.
+    let mut z_inline = [0i32; Z_INLINE_ROWS];
+    let mut z_spill: Vec<i32>;
+    let z: &mut [i32] = if rows <= Z_INLINE_ROWS {
+        &mut z_inline[..rows]
+    } else {
+        z_spill = vec![0i32; rows];
+        &mut z_spill
+    };
+    for (((xr, or), zr), &len) in x
+        .chunks_exact(cols)
+        .zip(out.chunks_exact_mut(cols))
+        .zip(z.iter_mut())
+        .zip(lens)
+    {
+        let m = row_max_unrolled(&xr[..len]);
+        *zr = fused_scores(&xr[..len], &mut or[..len], m, p);
+        or[len..].fill(0);
+        debug_assert!(*zr > 0);
+    }
+
+    // Stage 5 over the active prefixes (divides pipelined first, as in
+    // the dense engine).
+    match (out_path, recip) {
+        (OutputPath::I16, Reciprocal::Div) => {
+            for zr in z.iter_mut() {
+                *zr = T_I16 / *zr;
+            }
+            for ((or, &rho), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
+                for o in &mut or[..len] {
+                    *o *= rho;
+                }
+            }
+        }
+        (OutputPath::I16, Reciprocal::Clb) => {
+            for ((or, &zr), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
+                let k = floor_log2(zr);
+                for o in &mut or[..len] {
+                    *o = ((*o * T_I16) >> k).min(T_I16);
+                }
+            }
+        }
+        (OutputPath::I8, Reciprocal::Div) => {
+            for zr in z.iter_mut() {
+                *zr = (T_I8 << INV_SHIFT) / *zr;
+            }
+            for ((or, &rho8), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
+                for o in &mut or[..len] {
+                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
+                }
+            }
+        }
+        (OutputPath::I8, Reciprocal::Clb) => {
+            for ((or, &zr), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
+                let rho8 = (T_I8 << INV_SHIFT) >> floor_log2(zr);
+                for o in &mut or[..len] {
+                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
+                }
+            }
+        }
+    }
+}
+
+/// Allocating convenience wrapper around [`hccs_batch_masked_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_batch_masked(
+    x: &[i8],
+    rows: usize,
+    cols: usize,
+    lens: &[usize],
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+) -> Vec<i32> {
+    let mut out = vec![0i32; x.len()];
+    hccs_batch_masked_into(x, rows, cols, lens, p, out_path, recip, &mut out);
+    out
+}
+
 /// Allocating convenience wrapper around [`hccs_batch_into`].
 pub fn hccs_batch(
     x: &[i8],
@@ -254,6 +376,66 @@ mod tests {
             let naive = *x.iter().max().unwrap() as i32;
             assert_eq!(row_max_unrolled(&x), naive, "n={n}");
         }
+    }
+
+    #[test]
+    fn masked_matches_prefix_row_kernel_and_zeroes_pads() {
+        let mut rng = Xoshiro256::new(23);
+        let (rows, cols) = (7usize, 48usize);
+        let (lo, hi) = HccsParams::feasible_b_band(2, 32, cols).expect("band");
+        let p = HccsParams::checked((lo + hi) / 2, 2, 32, cols).unwrap();
+        let x: Vec<i8> = (0..rows * cols).map(|_| rng.i8()).collect();
+        let lens = [1usize, 2, 7, 16, 33, 48, 5];
+        for (op, rc) in MODES {
+            let got = hccs_batch_masked(&x, rows, cols, &lens, &p, op, rc);
+            for (r, &len) in lens.iter().enumerate() {
+                let mut want = vec![0i32; len];
+                hccs_row_into(&x[r * cols..r * cols + len], &p, op, rc, &mut want);
+                assert_eq!(
+                    got[r * cols..r * cols + len],
+                    want[..],
+                    "row {r} len {len} {op:?}/{rc:?}"
+                );
+                assert!(
+                    got[r * cols + len..(r + 1) * cols].iter().all(|&v| v == 0),
+                    "pad columns of row {r} not exactly zero under {op:?}/{rc:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_full_width_is_bit_identical_to_dense_batch() {
+        let mut rng = Xoshiro256::new(29);
+        let (rows, cols) = (5usize, 33usize);
+        let (lo, hi) = HccsParams::feasible_b_band(1, 16, cols).expect("band");
+        let p = HccsParams::checked((lo + hi) / 2, 1, 16, cols).unwrap();
+        let x: Vec<i8> = (0..rows * cols).map(|_| rng.i8()).collect();
+        let lens = vec![cols; rows];
+        for (op, rc) in MODES {
+            assert_eq!(
+                hccs_batch_masked(&x, rows, cols, &lens, &p, op, rc),
+                hccs_batch(&x, rows, cols, &p, op, rc),
+                "{op:?}/{rc:?}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "active lengths")]
+    fn masked_rejects_zero_length_row() {
+        let p = HccsParams::new(300, 4, 64);
+        let mut out = vec![0i32; 8];
+        hccs_batch_masked_into(
+            &[0i8; 8],
+            2,
+            4,
+            &[3, 0],
+            &p,
+            OutputPath::I16,
+            Reciprocal::Div,
+            &mut out,
+        );
     }
 
     #[test]

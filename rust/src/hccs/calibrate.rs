@@ -7,7 +7,8 @@
 //! Rust test suite (both implementations use the identical grid, feasible
 //! band construction and int16-space KL objective).
 
-use super::kernel::{hccs_rows, OutputPath, Reciprocal};
+use super::batch::hccs_batch_masked_into;
+use super::kernel::{OutputPath, Reciprocal};
 use super::params::HccsParams;
 use super::stats::{kl, mean, normalize_phat, softmax};
 
@@ -53,25 +54,65 @@ pub fn quantize_i8(logits: &[f64], gamma: f64) -> Vec<i8> {
 /// uint8 one and transfers to the int8 output path).
 pub fn calibrate_rows(rows: &[Vec<f64>], n: usize, gamma: f64) -> Calibration {
     assert!(rows.iter().all(|r| r.len() == n), "ragged calibration rows");
-    let p_ref: Vec<Vec<f64>> = rows.iter().map(|r| softmax(r)).collect();
-    let xq: Vec<i8> = rows.iter().flat_map(|r| quantize_i8(r, gamma)).collect();
+    calibrate_rows_ragged(rows, n, gamma)
+}
 
+/// Ragged (valid-length) grid search: rows may have differing active
+/// lengths, as long as every length fits in `n_max` — the masked
+/// attention regime, where one head's θ must serve rows whose valid
+/// width varies per example.  The candidate band is the intersection of
+/// Eq. (11) over `[min observed length, n_max]`
+/// ([`HccsParams::feasible_b_band_range`]), so the winning θ is
+/// feasible both for the shortest calibration row and for a
+/// full-width `n_max` row at serve time; the objective is evaluated
+/// with the masked i16+div kernel ([`hccs_batch_masked_into`]), so the
+/// calibrated statistics match exactly what the masked serving kernel
+/// computes.  With uniform row lengths `== n_max` this is identical to
+/// the historical dense search ([`calibrate_rows`] delegates here).
+pub fn calibrate_rows_ragged(rows: &[Vec<f64>], n_max: usize, gamma: f64) -> Calibration {
+    assert!(!rows.is_empty() && n_max > 0, "empty calibration set");
+    let lens: Vec<usize> = rows.iter().map(|r| r.len()).collect();
+    assert!(
+        lens.iter().all(|&l| (1..=n_max).contains(&l)),
+        "calibration row lengths must be in 1..={n_max}"
+    );
+    let n_min = *lens.iter().min().expect("non-empty rows");
+    let p_ref: Vec<Vec<f64>> = rows.iter().map(|r| softmax(r)).collect();
+    // Padded (rows, n_max) int8 tile; pad columns are never read by the
+    // masked kernel.
+    let mut xq = vec![0i8; rows.len() * n_max];
+    for (tile_row, row) in xq.chunks_exact_mut(n_max).zip(rows) {
+        tile_row[..row.len()].copy_from_slice(&quantize_i8(row, gamma));
+    }
+
+    let mut phat = vec![0i32; xq.len()];
     let mut best: Option<Calibration> = None;
     let mut evaluated = 0usize;
     for &dmax in &DMAX_GRID {
         for &s in &S_GRID {
-            let Some((lo, hi)) = HccsParams::feasible_b_band(s, dmax, n) else {
+            let Some((lo, hi)) = HccsParams::feasible_b_band_range(s, dmax, n_min, n_max)
+            else {
                 continue;
             };
             for b in sample_band(lo, hi, N_B_SAMPLES) {
                 let p = HccsParams::new(b, s, dmax);
                 evaluated += 1;
-                let params_per_row = vec![p; rows.len()];
-                let phat = hccs_rows(&xq, n, &params_per_row, OutputPath::I16, Reciprocal::Div);
+                hccs_batch_masked_into(
+                    &xq,
+                    rows.len(),
+                    n_max,
+                    &lens,
+                    &p,
+                    OutputPath::I16,
+                    Reciprocal::Div,
+                    &mut phat,
+                );
                 let kls: Vec<f64> = p_ref
                     .iter()
                     .enumerate()
-                    .map(|(r, pr)| kl(pr, &normalize_phat(&phat[r * n..(r + 1) * n])))
+                    .map(|(r, pr)| {
+                        kl(pr, &normalize_phat(&phat[r * n_max..r * n_max + lens[r]]))
+                    })
                     .collect();
                 let obj = mean(&kls);
                 if best.as_ref().is_none_or(|b| obj < b.kl) {
@@ -82,7 +123,7 @@ pub fn calibrate_rows(rows: &[Vec<f64>], n: usize, gamma: f64) -> Calibration {
     }
     let mut best = best.expect("empty feasible region");
     best.evaluated = evaluated;
-    best.params.validate(n).expect("search produced infeasible params");
+    best.params.validate(n_max).expect("search produced infeasible params");
     best
 }
 
@@ -109,6 +150,7 @@ pub(crate) fn sample_band(lo: i32, hi: i32, count: usize) -> Vec<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hccs::kernel::hccs_rows;
     use crate::rng::Xoshiro256;
 
     fn synth_rows(n: usize, rows: usize, spread: f64, seed: u64) -> Vec<Vec<f64>> {
@@ -167,6 +209,60 @@ mod tests {
             cal.kl,
             kl_uniform
         );
+    }
+
+    #[test]
+    fn ragged_search_handles_mixed_lengths_and_respects_both_bounds() {
+        let mut rng = Xoshiro256::new(21);
+        // Valid lengths 12..=64 on a 64-wide grid — the masked regime.
+        let rows: Vec<Vec<f64>> = (0..48)
+            .map(|i| {
+                let len = 12 + (i * 7) % 53;
+                (0..len)
+                    .map(|_| (rng.f64() + rng.f64() + rng.f64() - 1.5) * 3.0)
+                    .collect()
+            })
+            .collect();
+        let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
+        let gamma = calibrate_scale(&flat, 99.9);
+        let cal = calibrate_rows_ragged(&rows, 64, gamma);
+        assert!(cal.kl.is_finite() && cal.kl >= 0.0);
+        assert!(cal.evaluated > 50, "grid too small: {}", cal.evaluated);
+        // Feasible at the full serve width AND at the shortest observed
+        // row (the range-band construction).
+        cal.params.validate(64).unwrap();
+        assert!(
+            cal.params.floor() >= 256_i32.div_ceil(12),
+            "floor {} below the shortest row's Z >= 256 bound",
+            cal.params.floor()
+        );
+    }
+
+    #[test]
+    fn uniform_search_matches_historical_dense_evaluation() {
+        // With uniform row lengths, the masked-kernel objective must
+        // reproduce the pre-masking dense evaluation exactly: re-score
+        // the winning θ through the historical hccs_rows path and check
+        // the achieved KL is bit-identical.
+        let rows = synth_rows(32, 24, 4.0, 9);
+        let gamma = calibrate_scale(&rows.iter().flatten().cloned().collect::<Vec<_>>(), 99.9);
+        let cal = calibrate_rows(&rows, 32, gamma);
+        let xq: Vec<i8> = rows.iter().flat_map(|r| quantize_i8(r, gamma)).collect();
+        let phat = hccs_rows(
+            &xq,
+            32,
+            &vec![cal.params; rows.len()],
+            OutputPath::I16,
+            Reciprocal::Div,
+        );
+        let want = mean(
+            &rows
+                .iter()
+                .enumerate()
+                .map(|(r, row)| kl(&softmax(row), &normalize_phat(&phat[r * 32..(r + 1) * 32])))
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(cal.kl, want, "masked objective diverged from dense at uniform lengths");
     }
 
     #[test]

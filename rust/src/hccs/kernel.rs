@@ -171,6 +171,46 @@ pub fn hccs_rows(
     out
 }
 
+/// Valid-length masked sibling of [`hccs_rows`]: row `r` is scored over
+/// its first `lens[r]` columns only, pad columns come back as exact
+/// `p̂ = 0` (see [`super::batch::hccs_batch_masked_into`] for the
+/// contract).  Uniform-θ runs are still grouped into single masked tile
+/// calls, so ragged serving traffic keeps the batched engine's
+/// amortization.
+pub fn hccs_rows_masked(
+    x: &[i8],
+    n: usize,
+    lens: &[usize],
+    params: &[HccsParams],
+    out_path: OutputPath,
+    recip: Reciprocal,
+) -> Vec<i32> {
+    assert!(n > 0 && x.len() % n == 0, "x not a whole number of rows");
+    let rows = x.len() / n;
+    assert_eq!(rows, params.len(), "one θ per row required");
+    assert_eq!(rows, lens.len(), "one active length per row required");
+    let mut out = vec![0i32; x.len()];
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let mut r1 = r0 + 1;
+        while r1 < rows && params[r1] == params[r0] {
+            r1 += 1;
+        }
+        super::batch::hccs_batch_masked_into(
+            &x[r0 * n..r1 * n],
+            r1 - r0,
+            n,
+            &lens[r0..r1],
+            &params[r0],
+            out_path,
+            recip,
+            &mut out[r0 * n..r1 * n],
+        );
+        r0 = r1;
+    }
+    out
+}
+
 /// Dequantize integer p̂ to a float simplex (divide by actual row sum) —
 /// what the model datapath does before the `p @ V` mix.
 pub fn phat_to_probs(phat: &[i32]) -> Vec<f32> {
@@ -280,6 +320,23 @@ mod tests {
         let out = hccs_rows(&x, n, &[p1, p2], OutputPath::I16, Reciprocal::Div);
         assert_eq!(out[..n], hccs_row(&x[..n], &p1, OutputPath::I16, Reciprocal::Div)[..]);
         assert_eq!(out[n..], hccs_row(&x[n..], &p2, OutputPath::I16, Reciprocal::Div)[..]);
+    }
+
+    #[test]
+    fn rows_masked_matches_per_row_prefixes() {
+        let n = 32;
+        let p1 = HccsParams::checked(900, 8, 96, n).unwrap();
+        let p2 = HccsParams::checked(500, 2, 127, n).unwrap();
+        let mut rng = crate::rng::Xoshiro256::new(8);
+        let x: Vec<i8> = (0..3 * n).map(|_| rng.i8()).collect();
+        let lens = [12usize, 32, 5];
+        let out =
+            hccs_rows_masked(&x, n, &lens, &[p1, p1, p2], OutputPath::I16, Reciprocal::Div);
+        for (r, (&len, p)) in lens.iter().zip([&p1, &p1, &p2]).enumerate() {
+            let want = hccs_row(&x[r * n..r * n + len], p, OutputPath::I16, Reciprocal::Div);
+            assert_eq!(out[r * n..r * n + len], want[..], "row {r}");
+            assert!(out[r * n + len..(r + 1) * n].iter().all(|&v| v == 0), "row {r} pads");
+        }
     }
 
     #[test]

@@ -97,11 +97,57 @@ impl HccsParams {
         Ok(())
     }
 
+    /// Validate θ for **masked** tiles whose active rows are at most
+    /// `n_max` wide.  The row-sum bound (`n·B ≤ 32767`, the Z ≤ T
+    /// requirement that keeps `ρ = ⌊T/Z⌋ ≥ 1`) binds at the *longest*
+    /// active row, so it is checked at `n_max`; the score-floor bound
+    /// is relaxed to `floor ≥ 1` (positive scores, `Z > 0`) because a
+    /// masked row's active length is not known statically — rows with
+    /// `len·floor ≥ 256` keep the §IV-C int16-ρ₈ guarantee, shorter
+    /// ones ride the kernel's i32 headroom (see
+    /// [`crate::hccs::batch::hccs_batch_masked_into`]).  Without this
+    /// relaxation a θ calibrated over realistic lengths would reject
+    /// a legitimately short request (e.g. `[CLS] w [SEP]`, len 3,
+    /// which would need `floor ≥ ⌈256/3⌉ = 86`).
+    pub fn validate_masked(&self, n_max: usize) -> Result<(), ParamError> {
+        if self.dmax < 1 || self.dmax > 127 {
+            return Err(ParamError::DmaxRange(self.dmax));
+        }
+        if self.s < 0 {
+            return Err(ParamError::NegativeSlope(self.s));
+        }
+        if self.floor() < 1 {
+            return Err(ParamError::FloorTooLow(self.floor(), 1, n_max));
+        }
+        let nb = n_max as i64 * self.b as i64;
+        if nb > T_I16 as i64 {
+            return Err(ParamError::RowSumOverflow(nb, n_max));
+        }
+        Ok(())
+    }
+
     /// The Eq. (11) band of feasible B for a given (S, Dmax, n), or `None`
     /// if the band is empty (slope too steep for the row length).
     pub fn feasible_b_band(s: i32, dmax: i32, n: usize) -> Option<(i32, i32)> {
-        let lo = s * dmax + ceil_div(256, n as i32);
-        let hi = T_I16 / n as i32;
+        Self::feasible_b_band_range(s, dmax, n, n)
+    }
+
+    /// Feasible-B band for a *range* of active row lengths
+    /// `[n_min, n_max]` — the valid-length-masked regime, where one θ
+    /// must serve rows whose active width varies per example.  The score
+    /// floor bound tightens with the shortest row (`Z >= 256` needs
+    /// `floor >= ceil(256/n_min)`), the row-sum bound with the longest
+    /// (`n_max·B <= 32767`), so the band is the intersection over the
+    /// whole range.
+    pub fn feasible_b_band_range(
+        s: i32,
+        dmax: i32,
+        n_min: usize,
+        n_max: usize,
+    ) -> Option<(i32, i32)> {
+        debug_assert!(0 < n_min && n_min <= n_max);
+        let lo = s * dmax + ceil_div(256, n_min as i32);
+        let hi = T_I16 / n_max as i32;
         (lo <= hi).then_some((lo, hi))
     }
 }
@@ -149,6 +195,40 @@ mod tests {
             HccsParams::checked(600, 1, 64, 64), // 64*600 > 32767
             Err(ParamError::RowSumOverflow(38400, 64))
         ));
+    }
+
+    #[test]
+    fn masked_validation_relaxes_floor_but_keeps_the_row_sum_bound() {
+        // Feasible at n=64, floor 26: validate(3) rejects (needs 86)
+        // but validate_masked accepts — short masked rows only shrink Z.
+        let p = HccsParams::checked(282, 4, 64, 64).unwrap();
+        assert_eq!(p.floor(), 26);
+        assert!(p.validate(3).is_err());
+        assert!(p.validate_masked(64).is_ok());
+        // The overflow-relevant bounds still reject.
+        assert!(HccsParams::new(600, 1, 64).validate_masked(64).is_err()); // 64·600 > T
+        assert!(HccsParams::new(100, 4, 64).validate_masked(64).is_err()); // floor < 1
+        assert!(HccsParams::new(300, 4, 128).validate_masked(64).is_err()); // Dmax
+        assert!(HccsParams::new(300, -1, 64).validate_masked(64).is_err()); // slope
+        // Everything validate() accepts, validate_masked accepts too.
+        let q = HccsParams::checked(300, 4, 64, 64).unwrap();
+        assert!(q.validate_masked(64).is_ok());
+    }
+
+    #[test]
+    fn range_band_is_intersection_over_lengths() {
+        // n in [10, 64]: lo uses n=10 (ceil(256/10)=26), hi uses n=64.
+        let (lo, hi) = HccsParams::feasible_b_band_range(4, 64, 10, 64).unwrap();
+        assert_eq!(lo, 4 * 64 + 26);
+        assert_eq!(hi, 511);
+        // A point band collapses to the single-length band.
+        assert_eq!(
+            HccsParams::feasible_b_band_range(4, 64, 64, 64),
+            HccsParams::feasible_b_band(4, 64, 64)
+        );
+        // The endpoints are feasible at both extremes of the range.
+        assert!(HccsParams::checked(lo, 4, 64, 64).is_ok());
+        assert!(HccsParams::checked(hi, 4, 64, 10).is_ok());
     }
 
     #[test]

@@ -145,13 +145,35 @@ impl PackedGemm {
 /// each A row is loaded once per four output columns.  Bit-exact with
 /// `dot_i8` per cell.
 pub fn gemm_nt_into(a: &[i8], b: &[i8], m: usize, n: usize, kd: usize, out: &mut [i32]) {
+    gemm_nt_bounded_into(a, b, m, n, n, kd, out);
+}
+
+/// Column-bounded A·Bᵀ: only the first `n_active` output columns are
+/// computed (`b` holds exactly the `n_active` active rows — for QK^T,
+/// the valid keys); columns `n_active..n` of every output row are
+/// **zeroed**.  This is how the valid-length attention path skips
+/// pad-key MACs entirely while keeping the `(m, n)` tile stride of the
+/// dense layout.  `n_active == n` is exactly [`gemm_nt_into`].
+/// Bit-exact with `dot_i8` per active cell.
+pub fn gemm_nt_bounded_into(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    n_active: usize,
+    kd: usize,
+    out: &mut [i32],
+) {
     assert!(m > 0 && n > 0 && kd > 0, "empty GEMM operand");
+    assert!((1..=n).contains(&n_active), "n_active must be in 1..=n");
     assert_eq!(a.len(), m * kd, "a is not (m, kd)");
-    assert_eq!(b.len(), n * kd, "b is not (n, kd)");
+    assert_eq!(b.len(), n_active * kd, "b is not (n_active, kd)");
     assert_eq!(out.len(), m * n, "out is not (m, n)");
     for (arow, orow) in a.chunks_exact(kd).zip(out.chunks_exact_mut(n)) {
+        orow[n_active..].fill(0);
+        let orow = &mut orow[..n_active];
         let mut j = 0usize;
-        while j + 4 <= n {
+        while j + 4 <= n_active {
             let b0 = &b[j * kd..(j + 1) * kd];
             let b1 = &b[(j + 1) * kd..(j + 2) * kd];
             let b2 = &b[(j + 2) * kd..(j + 3) * kd];
@@ -184,13 +206,32 @@ pub fn gemm_nt_into(a: &[i8], b: &[i8], m: usize, n: usize, kd: usize, out: &mut
 /// Accumulation order per output cell is ascending j, matching that
 /// loop bit for bit.
 pub fn gemm_pv_into(p: &[i32], v: &[i8], m: usize, c: usize, dv: usize, out: &mut [i32]) {
+    gemm_pv_bounded_into(p, v, m, c, c, dv, out);
+}
+
+/// Column-bounded p̂·V: only the first `c_active` probabilities of each
+/// `(m, c)`-strided p̂ row enter the mix (`v` holds exactly the
+/// `c_active` active value rows — the valid keys), so pad-key MACs are
+/// skipped structurally rather than relying on the `p̂ = 0` shortcut to
+/// scan past them.  `c_active == c` is exactly [`gemm_pv_into`];
+/// accumulation order per output cell stays ascending j.
+pub fn gemm_pv_bounded_into(
+    p: &[i32],
+    v: &[i8],
+    m: usize,
+    c: usize,
+    c_active: usize,
+    dv: usize,
+    out: &mut [i32],
+) {
     assert!(m > 0 && c > 0 && dv > 0, "empty GEMM operand");
+    assert!((1..=c).contains(&c_active), "c_active must be in 1..=c");
     assert_eq!(p.len(), m * c, "p is not (m, c)");
-    assert_eq!(v.len(), c * dv, "v is not (c, dv)");
+    assert_eq!(v.len(), c_active * dv, "v is not (c_active, dv)");
     assert_eq!(out.len(), m * dv, "out is not (m, dv)");
     for (prow, orow) in p.chunks_exact(c).zip(out.chunks_exact_mut(dv)) {
         orow.fill(0);
-        for (j, &pv) in prow.iter().enumerate() {
+        for (j, &pv) in prow[..c_active].iter().enumerate() {
             if pv == 0 {
                 continue;
             }
@@ -284,6 +325,62 @@ mod tests {
                 assert_eq!(out[i * dv + t], want, "cell ({i},{t})");
             }
         }
+    }
+
+    #[test]
+    fn nt_bounded_computes_active_columns_and_zeroes_pads() {
+        let mut rng = Xoshiro256::new(13);
+        let (m, n, kd) = (3usize, 9usize, 7usize);
+        let a = rand_i8(&mut rng, m * kd);
+        let full_b = rand_i8(&mut rng, n * kd);
+        for n_active in [1usize, 4, 8, 9] {
+            let b = &full_b[..n_active * kd];
+            let mut out = vec![77i32; m * n]; // stale scratch must be overwritten
+            gemm_nt_bounded_into(&a, b, m, n, n_active, kd, &mut out);
+            for i in 0..m {
+                for j in 0..n_active {
+                    let want = dot_i8(&a[i * kd..(i + 1) * kd], &b[j * kd..(j + 1) * kd]);
+                    assert_eq!(out[i * n + j], want, "n_active={n_active} cell ({i},{j})");
+                }
+                assert!(
+                    out[i * n + n_active..(i + 1) * n].iter().all(|&v| v == 0),
+                    "pad columns not zeroed at n_active={n_active}, row {i}"
+                );
+            }
+        }
+        // Full width is exactly gemm_nt_into.
+        let mut bounded = vec![0i32; m * n];
+        let mut dense = vec![0i32; m * n];
+        gemm_nt_bounded_into(&a, &full_b, m, n, n, kd, &mut bounded);
+        gemm_nt_into(&a, &full_b, m, n, kd, &mut dense);
+        assert_eq!(bounded, dense);
+    }
+
+    #[test]
+    fn pv_bounded_ignores_pad_columns() {
+        let mut rng = Xoshiro256::new(17);
+        let (m, c, dv) = (2usize, 8usize, 3usize);
+        // Nonzero garbage in the pad columns must not leak into the mix.
+        let p: Vec<i32> = (0..m * c).map(|_| rng.range_i64(-50, 300) as i32).collect();
+        let v = rand_i8(&mut rng, c * dv);
+        for c_active in [1usize, 5, 8] {
+            let mut out = vec![9i32; m * dv];
+            gemm_pv_bounded_into(&p, &v[..c_active * dv], m, c, c_active, dv, &mut out);
+            for i in 0..m {
+                for t in 0..dv {
+                    let want: i32 = (0..c_active)
+                        .map(|j| p[i * c + j] * i32::from(v[j * dv + t]))
+                        .sum();
+                    assert_eq!(out[i * dv + t], want, "c_active={c_active} cell ({i},{t})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "n_active")]
+    fn nt_bounded_rejects_zero_active() {
+        gemm_nt_bounded_into(&[0i8; 4], &[0i8; 4], 1, 2, 0, 4, &mut [0i32; 2]);
     }
 
     #[test]

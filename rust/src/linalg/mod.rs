@@ -22,8 +22,14 @@
 //!   sides are *activations*: Q against K).  No packing — K changes
 //!   every call — but the kernel register-blocks four B rows per pass
 //!   so each A row is loaded once per four outputs.
+//!   [`gemm_nt_bounded_into`] is the column-bounded form: only the
+//!   first `n_active` output columns (the valid keys of a masked
+//!   attention row) are computed, the pad columns are zeroed — no MAC
+//!   is ever issued against a pad key.
 //! * [`gemm_pv_into`] — the i32×int8 probability mix p̂·V, with the
 //!   p̂ = 0 sparsity shortcut the clamped HCCS tails make profitable.
+//!   [`gemm_pv_bounded_into`] bounds the mix to the first `c_active`
+//!   keys so masked pad columns are skipped structurally.
 //!
 //! [`matmul_i8_ref`] is the scalar reference oracle (the old
 //! `norm.rs::matmul_i8` loop, verbatim): slow, obviously correct, and
@@ -37,4 +43,7 @@
 
 pub mod gemm;
 
-pub use gemm::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, PackedGemm};
+pub use gemm::{
+    dot_i8, gemm_nt_bounded_into, gemm_nt_into, gemm_pv_bounded_into, gemm_pv_into,
+    matmul_i8_ref, PackedGemm,
+};

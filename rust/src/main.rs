@@ -6,7 +6,8 @@
 //!              [--modes i16_div,i8_clb,...]          (native: zero artifacts needed)
 //!              [--artifacts DIR] [--variant float|hccs]          (pjrt backend only)
 //! hccs serve   [--backend native|pjrt] [--model M] [--task T] [--seed S] [--mode i16_div|f32]
-//!              [--shards S] [--max-batch B] [--wait-ms W]      (native sharded executor pool)
+//!              [--shards S] [--max-batch B] [--wait-ms W] [--length-bands N]
+//!                                (native sharded executor pool; N length bands per shard)
 //!              [--artifacts DIR] [--variant V] [--batch B]               (pjrt backend only)
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
 //!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile table)
@@ -38,8 +39,8 @@ use hccs::tokenizer::Tokenizer;
 
 const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
-    "batch=", "max-batch=", "wait-ms=", "shards=", "device=", "kernel=", "n=", "tiles=",
-    "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "help",
+    "batch=", "max-batch=", "wait-ms=", "shards=", "length-bands=", "device=", "kernel=",
+    "n=", "tiles=", "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "help",
 ];
 
 fn main() -> Result<()> {
@@ -170,6 +171,12 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
              coordinator's batch dimension is --batch (fixed at AOT time)"
         );
     }
+    if args.get("length-bands").is_some() {
+        eprintln!(
+            "warning: --length-bands applies to --backend native; the pjrt \
+             executable's sequence length is fixed at AOT time"
+        );
+    }
     let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let cfg = CoordinatorConfig {
         artifacts: artifacts.to_path_buf(),
@@ -210,6 +217,7 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
     let shards = args.parse_num_at_least("shards", 1usize, 1)?;
     let max_batch = args.parse_num_at_least("max-batch", 8usize, 1)?;
     let wait_ms = args.parse_num("wait-ms", 2u64)?;
+    let length_bands = args.parse_num_at_least("length-bands", 1usize, 1)?;
     let cfg = ModelConfig::parse(model_name, task)
         .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
     eprintln!(
@@ -228,11 +236,12 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
                 max_wait: std::time::Duration::from_millis(wait_ms),
             },
             shards,
+            length_bands,
         },
     )?;
     eprintln!(
-        "serving on stdin across {shards} shard(s), max batch {max_batch} \
-         (one request per line; Ctrl-D to finish)"
+        "serving on stdin across {shards} shard(s), max batch {max_batch}, \
+         {length_bands} length band(s) (one request per line; Ctrl-D to finish)"
     );
     let n = server::serve(
         &backend,
@@ -326,6 +335,27 @@ fn cmd_sim(args: &Args) -> Result<()> {
             "    total: {total_tiles} macro-tiles, {total_cycles} cycles \
              ({inf_per_s:.0} inf/s GEMM-bound on one tile)"
         );
+        // Valid-length sweep: the masked forward drops pad rows/keys,
+        // so the GEMM cost of an inference scales with the density
+        // ratio avg_len / max_len (linear for projections, quadratic
+        // for attention).
+        println!("  length-distribution sweep (valid tokens per example):");
+        println!(
+            "    {:<10} {:>6} {:>12} {:>10} {:>10}",
+            "density", "tokens", "macro-tiles", "cycles", "vs dense"
+        );
+        for density in [0.25f64, 0.5, 0.75, 1.0] {
+            let tokens = ((cfg.seq_len as f64 * density).round() as usize).max(1);
+            let cycles = gemm::encoder_gemm_cycles_at(&device, &cfg, tokens);
+            println!(
+                "    {:<10} {:>6} {:>12} {:>10} {:>9.2}x",
+                format!("{density:.2}"),
+                tokens,
+                gemm::encoder_macro_tiles_at(&cfg, tokens),
+                cycles,
+                total_cycles as f64 / cycles as f64,
+            );
+        }
     }
     Ok(())
 }

@@ -63,17 +63,35 @@ impl Histogram {
         if us <= 1 {
             return 0;
         }
-        let log2 = 63 - us.leading_zeros() as u64;
-        let frac = (us >> log2.saturating_sub(4)) & 0xF; // 4 fractional bits
-        ((log2 as usize) * BUCKETS_PER_OCTAVE + frac as usize * BUCKETS_PER_OCTAVE / 16)
-            .min(N_BUCKETS - 1)
+        let log2 = (63 - us.leading_zeros() as u64) as usize;
+        // The 4 fractional bits directly below the leading bit.  For
+        // small octaves (log2 < 4) the value has fewer than 4 bits
+        // below the leading one, so they must be shifted *up* into
+        // place — the old `us >> saturating_sub` extracted the wrong
+        // bits there and skewed every value in [2, 32) into the upper
+        // buckets of its octave.
+        let frac = if log2 >= 4 {
+            (us >> (log2 - 4)) & 0xF
+        } else {
+            (us << (4 - log2)) & 0xF
+        };
+        (log2 * BUCKETS_PER_OCTAVE + frac as usize).min(N_BUCKETS - 1)
     }
 
-    /// Upper edge (µs) represented by bucket `i` (inverse of `bucket_of`).
+    /// Lower edge (µs) represented by bucket `i` — the exact inverse of
+    /// [`Self::bucket_of`]'s truncation: `bucket_value(bucket_of(v))`
+    /// is `v` with everything below its top 5 bits dropped, so it never
+    /// exceeds `v` and sits within one bucket width
+    /// (`max(1, 2^(⌊log2 v⌋-4))`) of it.  Values below 32 round-trip
+    /// exactly.
     fn bucket_value(i: usize) -> u64 {
         let log2 = i / BUCKETS_PER_OCTAVE;
-        let frac = i % BUCKETS_PER_OCTAVE;
-        (1u64 << log2) + ((1u64 << log2) >> 4) * frac as u64
+        let frac = (i % BUCKETS_PER_OCTAVE) as u64;
+        if log2 >= 4 {
+            (16 + frac) << (log2 - 4)
+        } else {
+            (16 + frac) >> (4 - log2)
+        }
     }
 
     pub fn record(&self, d: Duration) {
@@ -213,6 +231,50 @@ mod tests {
         assert!((450..=560).contains(&p50), "p50={p50}");
         assert!((880..=1060).contains(&p95), "p95={p95}");
         assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn bucket_round_trip_is_within_one_bucket_width_up_to_1e9() {
+        // Regression for the small-value fractional-bit extraction:
+        // values in [2, 32) used to land in skewed buckets, so
+        // percentile_us misreported sub-32µs latencies.  The round-trip
+        // contract: bucket_value(bucket_of(v)) never exceeds v and sits
+        // within one bucket width (max(1, 2^(log2 v)/16)) below it;
+        // below 32 it is exact.
+        fn check(v: u64) {
+            let bv = Histogram::bucket_value(Histogram::bucket_of(v));
+            let vc = v.max(1); // 0 and 1 share the first bucket
+            let log2 = 63 - vc.leading_zeros() as u64;
+            let width = ((1u64 << log2) >> 4).max(1);
+            assert!(bv <= vc, "bucket_value {bv} above v={v}");
+            assert!(vc - bv < width, "v={v}: edge {bv} further than width {width}");
+            if (1..32).contains(&vc) {
+                assert_eq!(bv, vc, "sub-32 values must round-trip exactly");
+            }
+        }
+        for v in 0..=65536u64 {
+            check(v);
+        }
+        let mut v = 65536u64;
+        while v <= 1_000_000_000 {
+            check(v - 1);
+            check(v);
+            check(v + 1);
+            v = v * 3 / 2;
+        }
+    }
+
+    #[test]
+    fn sub_32us_percentiles_are_faithful() {
+        // 1..=20µs uniformly: the median must come back as ~10µs, not
+        // skewed into the octave tops as the old extraction did.
+        let h = Histogram::new();
+        for v in 1..=20u64 {
+            h.record_value(v);
+        }
+        assert_eq!(h.percentile_us(50.0), 10);
+        assert_eq!(h.percentile_us(100.0), 20);
+        assert_eq!(h.percentile_us(5.0), 1);
     }
 
     #[test]

@@ -15,6 +15,18 @@
 //! batch-composition-invariant (pinned in `tests/proptests.rs`), which
 //! is what lets `--shards`/`--max-batch` finally apply to native
 //! serving without any bit-drift risk.
+//!
+//! With `length_bands > 1` each shard batches requests by **length
+//! band**: a request's true token count (pad-tail scan at submit)
+//! routes it to one of `n` equal-width bands, each band flushes
+//! independently, and a flushed band-`k` batch is stacked at the
+//! band's upper width and run through
+//! [`NativeModel::forward_batch_at`] — so a mostly-short traffic mix
+//! pays for short tiles instead of `seq_len`-wide ones.  Padding
+//! invariance (same example, any padding → bit-identical logits) makes
+//! the banding reply-invariant, so `--length-bands` is a pure
+//! throughput knob.  Per-band rollups land under
+//! `native.band_rows.band<K>` next to the aggregate.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -22,7 +34,9 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::engine::{batching_event_loop, EngineMsg, RolledCounter, RolledHistogram};
+use crate::coordinator::engine::{
+    banded_batching_event_loop, EngineMsg, RolledCounter, RolledHistogram,
+};
 use crate::coordinator::{BatchPolicy, InferReply, QueuedRequest, ShardRouter, ShardTicket};
 use crate::error::{anyhow, Context, Result};
 use crate::hccs::kernel::parse_mode;
@@ -81,6 +95,16 @@ pub struct NativeServeConfig {
     pub policy: BatchPolicy,
     /// Executor shards (>= 1); each owns a scratch and a batcher.
     pub shards: usize,
+    /// Length bands per shard (>= 1).  With `n` bands, `[1, seq_len]`
+    /// is split into `n` equal-width ranges and each shard batches
+    /// every band separately; a flushed band-`k` batch is stacked at
+    /// the band's upper width ([`NativeModel::band_width`]) instead of
+    /// the full `seq_len`, so short-traffic tiles stay dense and
+    /// `forward_batch_at` pays only for the tokens the band can hold.
+    /// `1` reproduces the classic single-queue, full-width batcher.
+    /// Padding invariance makes the banding bit-drift-free: a request
+    /// produces the same reply whichever band (or width) serves it.
+    pub length_bands: usize,
 }
 
 impl Default for NativeServeConfig {
@@ -90,6 +114,7 @@ impl Default for NativeServeConfig {
         Self {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
             shards: 1,
+            length_bands: 1,
         }
     }
 }
@@ -98,6 +123,9 @@ struct NativeEnvelope {
     id: u64,
     ids: Vec<i32>,
     segments: Vec<i32>,
+    /// Length band (computed at submit from the request's valid
+    /// length), consumed by the banded executor loop.
+    band: usize,
     reply: Sender<std::result::Result<InferReply, String>>,
     /// Router claim, released when the envelope is dropped (after the
     /// reply is sent) so the load view tracks completion.
@@ -116,6 +144,7 @@ pub struct NativeBackend {
     txs: Vec<Sender<EngineMsg<NativeEnvelope>>>,
     router: ShardRouter,
     next_id: AtomicU64,
+    length_bands: usize,
     handles: Vec<JoinHandle<()>>,
     pub metrics: Arc<Registry>,
 }
@@ -140,6 +169,12 @@ impl NativeBackend {
         if cfg.policy.max_batch == 0 {
             return Err(anyhow!("max_batch must be >= 1"));
         }
+        if cfg.length_bands == 0 || cfg.length_bands > model.cfg.seq_len {
+            return Err(anyhow!(
+                "length_bands must be in 1..={} (one band per possible length at most)",
+                model.cfg.seq_len
+            ));
+        }
         let metrics = Arc::new(Registry::default());
         let router = ShardRouter::new(cfg.shards);
         let mut txs = Vec::with_capacity(cfg.shards);
@@ -149,9 +184,10 @@ impl NativeBackend {
             let m = model.clone();
             let reg = metrics.clone();
             let policy = cfg.policy;
+            let bands = cfg.length_bands;
             let handle = std::thread::Builder::new()
                 .name(format!("hccs-native-{shard}"))
-                .spawn(move || native_executor_main(m, backend, shard, policy, rx, reg))
+                .spawn(move || native_executor_main(m, backend, shard, policy, bands, rx, reg))
                 .with_context(|| format!("spawning native executor shard {shard}"))?;
             txs.push(tx);
             handles.push(handle);
@@ -162,9 +198,15 @@ impl NativeBackend {
             txs,
             router,
             next_id: AtomicU64::new(1),
+            length_bands: cfg.length_bands,
             handles,
             metrics,
         })
+    }
+
+    /// Number of length bands per shard.
+    pub fn length_bands(&self) -> usize {
+        self.length_bands
     }
 
     pub fn model(&self) -> &NativeModel {
@@ -225,12 +267,18 @@ impl InferBackend for NativeBackend {
             return Ok(rx);
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Route by true length so same-band requests batch together and
+        // the executor can stack them at the band's (short) width.
+        let band = self
+            .model
+            .band_of(crate::data::valid_len(&ids), self.length_bands);
         let ticket = self.router.route();
         self.txs[ticket.shard()]
             .send(EngineMsg::Work(NativeEnvelope {
                 id,
                 ids,
                 segments,
+                band,
                 reply: tx,
                 _ticket: ticket,
             }))
@@ -244,6 +292,7 @@ fn native_executor_main(
     backend: SoftmaxBackend,
     shard: usize,
     policy: BatchPolicy,
+    length_bands: usize,
     rx: Receiver<EngineMsg<NativeEnvelope>>,
     metrics: Arc<Registry>,
 ) {
@@ -257,42 +306,69 @@ fn native_executor_main(
     let queue_hist = RolledHistogram::new(&metrics, "native.queue_us", shard);
     let exec_hist = RolledHistogram::new(&metrics, "native.execute_us", shard);
     let batch_rows = RolledHistogram::new(&metrics, "native.batch_rows", shard);
+    let batch_width = RolledHistogram::new(&metrics, "native.batch_width", shard);
     let batch_ctr = RolledCounter::new(&metrics, "native.batches", shard);
     let req_ctr = RolledCounter::new(&metrics, "native.requests", shard);
+    // Per-band rollups next to the aggregate, mirroring the per-shard
+    // scheme: `native.band_rows` == Σ `native.band_rows.band<K>`.
+    let band_rows_total = metrics.counter("native.band_rows");
+    let band_rows: Vec<_> = (0..length_bands)
+        .map(|k| metrics.counter(&format!("native.band_rows.band{k}")))
+        .collect();
 
-    batching_event_loop(policy, rx, &req_ctr, |items: Vec<QueuedRequest<NativeEnvelope>>| {
-        let started = Instant::now();
-        ids_tile.clear();
-        segs_tile.clear();
-        for q in &items {
-            queue_hist.record(started.duration_since(q.arrived));
-            ids_tile.extend_from_slice(&q.payload.ids);
-            segs_tile.extend_from_slice(&q.payload.segments);
-        }
-        batch_rows.record_value(items.len() as u64);
-        batch_ctr.inc();
-        match model.forward_batch(&ids_tile, &segs_tile, backend, &mut scratch) {
-            Ok(inferences) => {
-                exec_hist.record(started.elapsed());
-                for (q, inf) in items.into_iter().zip(inferences) {
-                    let _ = q.payload.reply.send(Ok(InferReply {
-                        id: q.payload.id,
-                        predicted: inf.predicted,
-                        logits: inf.logits,
-                        latency: q.arrived.elapsed(),
-                    }));
+    banded_batching_event_loop(
+        policy,
+        length_bands,
+        |env: &NativeEnvelope| env.band,
+        rx,
+        &req_ctr,
+        |band, items: Vec<QueuedRequest<NativeEnvelope>>| {
+            let started = Instant::now();
+            // Stack the batch at the band's width: every request's ids
+            // are truncated (pad tail only — the band invariant
+            // `valid_len <= width` guarantees it) or pad-extended to
+            // the common stride, and the model runs a tile exactly that
+            // wide.  Padding invariance makes this reply-identical to
+            // the full-width path.
+            let width = model.band_width(band, length_bands);
+            ids_tile.clear();
+            segs_tile.clear();
+            for q in &items {
+                queue_hist.record(started.duration_since(q.arrived));
+                let take = q.payload.ids.len().min(width);
+                ids_tile.extend_from_slice(&q.payload.ids[..take]);
+                ids_tile.resize(ids_tile.len() + width - take, 0);
+                segs_tile.extend_from_slice(&q.payload.segments[..take]);
+                segs_tile.resize(segs_tile.len() + width - take, 0);
+            }
+            batch_rows.record_value(items.len() as u64);
+            batch_width.record_value(width as u64);
+            batch_ctr.inc();
+            band_rows_total.add(items.len() as u64);
+            band_rows[band].add(items.len() as u64);
+            match model.forward_batch_at(&ids_tile, &segs_tile, width, backend, &mut scratch) {
+                Ok(inferences) => {
+                    exec_hist.record(started.elapsed());
+                    for (q, inf) in items.into_iter().zip(inferences) {
+                        let _ = q.payload.reply.send(Ok(InferReply {
+                            id: q.payload.id,
+                            predicted: inf.predicted,
+                            logits: inf.logits,
+                            latency: q.arrived.elapsed(),
+                        }));
+                    }
+                }
+                Err(e) => {
+                    // Requests are pre-validated at submit, so this is an
+                    // internal failure; every rider gets the message.
+                    let msg = format!("{e:#}");
+                    for q in items {
+                        let _ = q.payload.reply.send(Err(msg.clone()));
+                    }
                 }
             }
-            Err(e) => {
-                // Requests are pre-validated at submit, so this is an
-                // internal failure; every rider gets the message.
-                let msg = format!("{e:#}");
-                for q in items {
-                    let _ = q.payload.reply.send(Err(msg.clone()));
-                }
-            }
-        }
-    });
+        },
+    );
 }
 
 #[cfg(test)]
@@ -345,6 +421,7 @@ mod tests {
             NativeServeConfig {
                 policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
                 shards: 2,
+                length_bands: 1,
             },
         )
         .unwrap();
@@ -388,5 +465,81 @@ mod tests {
         let model = tiny_model();
         let cfg = NativeServeConfig { shards: 0, ..Default::default() };
         assert!(NativeBackend::with_config(model, SoftmaxBackend::F32Ref, cfg).is_err());
+        let model = tiny_model();
+        let cfg = NativeServeConfig { length_bands: 0, ..Default::default() };
+        assert!(NativeBackend::with_config(model, SoftmaxBackend::F32Ref, cfg).is_err());
+    }
+
+    #[test]
+    fn length_bands_serve_mixed_traffic_bit_exact_with_direct_forward() {
+        use crate::data::WorkloadGen;
+        let model = tiny_model();
+        let mode = SoftmaxBackend::parse("i16_div").unwrap();
+        let backend = NativeBackend::with_config(
+            model.clone(),
+            mode,
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards: 1,
+                length_bands: 4,
+            },
+        )
+        .unwrap();
+        assert_eq!(backend.length_bands(), 4);
+        // Mixed-length traffic: natural generator lengths plus handmade
+        // very short requests, all padded to the full seq_len — the
+        // backend re-packs each band at its own width.
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, 77);
+        let n = model.cfg.seq_len;
+        let mut inputs: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+        for k in 0..12 {
+            if k % 3 == 0 {
+                let mut ids = vec![0i32; n];
+                ids[0] = 1; // [CLS]
+                ids[1] = 4 + (k as i32 % 40);
+                ids[2] = 2; // [SEP]
+                inputs.push((ids, vec![0; n]));
+            } else {
+                let ex = generator.next_example();
+                inputs.push((ex.ids, ex.segments));
+            }
+        }
+        // One guaranteed full-length request pins the widest band.
+        let mut full = vec![4i32; n];
+        full[0] = 1;
+        full[n - 1] = 2;
+        inputs.push((full, vec![0; n]));
+        let rxs: Vec<_> = inputs
+            .iter()
+            .map(|(ids, segs)| backend.submit_request(ids.clone(), segs.clone()).unwrap())
+            .collect();
+        let mut scratch = EncoderScratch::default();
+        for ((ids, segs), rx) in inputs.iter().zip(rxs) {
+            let reply = rx.recv().unwrap().expect("banded inference ok");
+            let want = model.forward(ids, segs, mode, &mut scratch).unwrap();
+            assert_eq!(reply.predicted, want.predicted);
+            assert_eq!(reply.logits, want.logits, "band re-packing changed a reply");
+        }
+        backend.shutdown();
+        // Per-band rollup: the short handmade requests and the natural
+        // ones land in different bands, and the band counters sum to
+        // the aggregate.
+        let m = &backend.metrics;
+        assert_eq!(m.counter("native.band_rows").get(), 13);
+        assert_eq!(m.sum_counters("native.band_rows.band"), 13);
+        assert!(
+            m.counter("native.band_rows.band0").get() >= 4,
+            "short requests must land in the shortest band"
+        );
+        // Short-band tiles really ran narrow: some observed batch width
+        // is below the full seq_len.
+        let bw = m.histogram("native.batch_width");
+        assert!(bw.count() >= 2);
+        assert!(
+            bw.percentile_us(1.0) <= (n / 4) as u64,
+            "no narrow tile observed (min width {})",
+            bw.percentile_us(1.0)
+        );
+        assert_eq!(bw.max_us(), n as u64, "full-length traffic uses the widest band");
     }
 }

@@ -1,18 +1,26 @@
 //! The native integer encoder: seeded weights, construction-time
 //! calibration, and the dual-backend forward pass.
 //!
-//! ## Datapath (per layer, post-LN BERT)
+//! ## Datapath (per layer, post-LN BERT; pad positions dropped)
 //!
 //! ```text
-//! ids ── int8 embed (tok+pos+seg) ── int LN ──> x (i8, RMS≈32)
-//! x ──[Wq|Wk|Wv i8 MAC]── requant ──> q,k,v (i8)
-//! per head h:  QK^T (i32) ──÷d_h──> int8 logit grid xq
-//!              xq ──[HCCS θ_h | f32 softmax·γ_h]──> p̂ (int)
+//! ids ── valid_len scan ── compact to Σlen valid rows
+//!     ── int8 embed (tok+pos+seg) ── int LN ──> x (i8, RMS≈32)
+//! x ──[Wq|Wk|Wv i8 MAC]── requant ──> q,k,v (i8)   (valid rows only)
+//! per head h:  QK^T over valid keys (i32) ──÷d_h──> int8 logit grid xq
+//!              xq ──[masked HCCS θ_h | f32 softmax·γ_h]──> p̂ (int,
+//!                    pad keys exactly 0 — no score-floor leak)
 //!              ctx = 256·(p̂·V)/Σp̂      (sum-normalized integer mix)
 //! ctx ── requant ──[Wo]── requant(damped) ──+x── int LN ──> x
 //! x ──[W1]── requant ── relu ──[W2]── requant(damped) ──+x── int LN ──> x
-//! mean-pool over positions ──[Wcls]── −bias ──> class logits (i32)
+//! mean-pool over valid tokens ──[Wcls]── −bias ──> class logits (i32)
 //! ```
+//!
+//! Because no stage reads a pad position, the same example padded to
+//! different lengths produces bit-identical logits (the
+//! padding-invariance proptest), and throughput on short traffic scales
+//! with the density ratio `avg_len / max_len` rather than paying full
+//! `max_len` tiles.
 //!
 //! Every matmul — projections, FFN, classifier, and the QK^T / p̂·V
 //! stages — runs through [`crate::linalg`] (weights packed once at
@@ -31,10 +39,14 @@
 //!
 //! One batch of [`CALIB_EXAMPLES`] generated examples runs through the
 //! f32 path; every requant divisor is set from the 99.9th percentile of
-//! the observed accumulators; each head gets `d_h` (logit grid), `γ_h`
-//! (softmax temperature hitting a unit logit std — flat enough that the
-//! clipped-linear surrogate tracks softmax closely, Eq. 10), and θ_h
-//! via [`crate::hccs::calibrate::calibrate_rows`] on its actual rows.
+//! the observed accumulators **over valid tokens only** (pad rows no
+//! longer exist to dilute the percentiles); each head gets `d_h` (logit
+//! grid), `γ_h` (softmax temperature hitting a unit logit std — flat
+//! enough that the clipped-linear surrogate tracks softmax closely,
+//! Eq. 10), and θ_h via
+//! [`crate::hccs::calibrate::calibrate_rows_ragged`] on its actual
+//! masked rows — so the calibrated statistics match exactly what the
+//! masked serving kernel computes.
 //! The attention/FFN residual writes are damped 4× relative to the
 //! percentile grid so the (unperturbed) embedding stream keeps its
 //! margin over surrogate noise — the untrained-model stand-in for the
@@ -44,10 +56,10 @@
 use crate::coordinator::HeadParamStore;
 use crate::data::{TaskKind, WorkloadGen};
 use crate::error::{anyhow, bail, Result};
-use crate::hccs::attention::{hccs_attention_from_acc, AttentionScratch};
-use crate::hccs::calibrate::calibrate_rows;
+use crate::hccs::attention::{hccs_attention_ragged_from_acc, AttentionScratch};
+use crate::hccs::calibrate::calibrate_rows_ragged;
 use crate::hccs::{HccsParams, T_I16};
-use crate::linalg::{gemm_nt_into, PackedGemm};
+use crate::linalg::{gemm_nt_bounded_into, PackedGemm};
 use crate::rng::Xoshiro256;
 
 use super::backend::SoftmaxBackend;
@@ -211,9 +223,26 @@ impl CalibCtx<'_> {
         }
     }
 
-    /// Per-head calibration from the head's full (batch·q, k) logit
-    /// accumulator tile; `n` is the attention row length.
-    fn head(&mut self, li: usize, h: usize, heads: usize, accs: &[i32], n: usize) -> Result<Head> {
+    /// Per-head calibration from the head's stacked valid-row logit
+    /// accumulator tile: `acc` is `(Σ lens, c_stride)` row-major, where
+    /// example `b` owns `lens[b]` consecutive rows whose first `lens[b]`
+    /// columns are active (the layout the masked attention path
+    /// computes).  Only valid entries enter the statistics — d_h, γ_h,
+    /// and the θ_h grid search are all derived over the tokens the
+    /// masked kernel will actually see — and the search runs ragged
+    /// ([`calibrate_rows_ragged`]) so θ_h is feasible from the shortest
+    /// calibration row up to a full `n_serve`-wide row.
+    #[allow(clippy::too_many_arguments)]
+    fn head(
+        &mut self,
+        li: usize,
+        h: usize,
+        heads: usize,
+        acc: &[i32],
+        lens: &[usize],
+        c_stride: usize,
+        n_serve: usize,
+    ) -> Result<Head> {
         match self {
             CalibCtx::Run(c) => {
                 let i = li * heads + h;
@@ -221,22 +250,33 @@ impl CalibCtx<'_> {
                 Ok(Head { dh: c.dh[i], gamma, theta: *p })
             }
             CalibCtx::Build(b) => {
-                let dh = quant_div(accs);
-                let xq: Vec<f64> = accs.iter().map(|&a| f64::from(logit_grid(a, dh))).collect();
+                // Valid entries, row by row (pad columns never read).
+                let mut vals: Vec<i32> = Vec::new();
+                let mut row = 0usize;
+                let mut ragged: Vec<std::ops::Range<usize>> = Vec::new();
+                for &len in lens {
+                    for _ in 0..len {
+                        let lo = vals.len();
+                        vals.extend_from_slice(&acc[row * c_stride..row * c_stride + len]);
+                        ragged.push(lo..vals.len());
+                        row += 1;
+                    }
+                }
+                let dh = quant_div(&vals);
+                let xq: Vec<f64> = vals.iter().map(|&a| f64::from(logit_grid(a, dh))).collect();
                 let mean = xq.iter().sum::<f64>() / xq.len() as f64;
                 let var = xq.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
                     / xq.len() as f64;
                 let gamma = TGT_LOGIT_STD / var.sqrt().max(1e-6);
-                let total_rows = xq.len() / n;
-                let stride = total_rows.div_ceil(CALIB_ROWS_CAP).max(1);
-                let rows: Vec<Vec<f64>> = xq
-                    .chunks_exact(n)
+                let stride = ragged.len().div_ceil(CALIB_ROWS_CAP).max(1);
+                let rows: Vec<Vec<f64>> = ragged
+                    .iter()
                     .step_by(stride)
-                    .map(|r| r.iter().map(|&v| v * gamma).collect())
+                    .map(|r| xq[r.clone()].iter().map(|&v| v * gamma).collect())
                     .collect();
-                let cal = calibrate_rows(&rows, n, gamma);
+                let cal = calibrate_rows_ragged(&rows, n_serve, gamma);
                 cal.params
-                    .validate(n)
+                    .validate(n_serve)
                     .map_err(|e| anyhow!("calibrated θ infeasible at L{li}H{h}: {e}"))?;
                 b.dh.push(dh);
                 b.thetas.push(cal.params);
@@ -257,10 +297,13 @@ struct Head {
 }
 
 /// Reusable forward-pass buffers (allocation-free after warmup).  All
-/// tensors carry the whole stacked batch — `(nb·seq, ·)` tiles — so a
-/// scratch warmed on one batch size re-warms once when the batch grows.
+/// tensors carry the whole stacked batch **compacted to its valid
+/// rows** — `(Σ valid_len, ·)` tiles — so a scratch warmed on one batch
+/// size re-warms once when the batch grows.
 #[derive(Default)]
 pub struct EncoderScratch {
+    /// Per-example valid lengths of the current batch (pad-tail scan).
+    lens: Vec<usize>,
     x: Vec<i8>,
     x32: Vec<i32>,
     acc: Vec<i32>,
@@ -270,7 +313,8 @@ pub struct EncoderScratch {
     c8: Vec<i8>,
     h8: Vec<i8>,
     ctx32: Vec<i32>,
-    /// Stacked per-head QK^T accumulators, `(nb·seq, seq)`.
+    /// Stacked per-head QK^T accumulators, `(Σ valid_len, lmax)` with
+    /// each row's active products in its first `valid_len` columns.
     acc_head: Vec<i32>,
     qh: Vec<i8>,
     kh: Vec<i8>,
@@ -337,6 +381,7 @@ impl NativeModel {
             &weights,
             &ids,
             &segs,
+            cfg.seq_len,
             SoftmaxBackend::F32Ref,
             &mut CalibCtx::Build(&mut builder),
             &mut scratch,
@@ -369,7 +414,11 @@ impl NativeModel {
         &self.calib.store
     }
 
-    /// Forward one example (`ids`/`segments` of length `seq_len`).
+    /// Forward one example.  `ids`/`segments` may be padded to any
+    /// length up to `seq_len` — the pad tail is hard-masked, so the
+    /// same example padded to different lengths produces **bit-identical
+    /// logits** (the padding-invariance contract, property-pinned in
+    /// `tests/proptests.rs`).
     pub fn forward(
         &self,
         ids: &[i32],
@@ -377,27 +426,17 @@ impl NativeModel {
         backend: SoftmaxBackend,
         scratch: &mut EncoderScratch,
     ) -> Result<Inference> {
-        if ids.len() != self.cfg.seq_len || segments.len() != self.cfg.seq_len {
-            bail!(
-                "expected {} ids/segments, got {}/{}",
-                self.cfg.seq_len,
-                ids.len(),
-                segments.len()
-            );
-        }
-        let mut batch = self.forward_batch(ids, segments, backend, scratch)?;
+        let mut batch = self.forward_batch_at(ids, segments, ids.len(), backend, scratch)?;
         Ok(batch.pop().expect("one example in, one inference out"))
     }
 
     /// Forward a stacked batch of `ids.len() / seq_len` examples in one
-    /// pass: every projection/FFN GEMM runs on the whole `(nb·seq, d)`
-    /// activation tile, and each head's attention is one
-    /// [`hccs_attention_from_acc`] call (one batched HCCS dispatch per
-    /// head per layer across the batch).  **Bit-exact with calling
-    /// [`Self::forward`] per example** — every stage is row- or
-    /// example-independent, and the calibrated divisors are fixed at
-    /// construction, so batch composition cannot change any output
-    /// (property-pinned in `tests/proptests.rs`).
+    /// pass (each example padded to the full `seq_len` stride).  See
+    /// [`Self::forward_batch_at`] for the length-aware mechanics.
+    /// **Bit-exact with calling [`Self::forward`] per example** — every
+    /// stage is row- or example-independent, and the calibrated
+    /// divisors are fixed at construction, so batch composition cannot
+    /// change any output (property-pinned in `tests/proptests.rs`).
     pub fn forward_batch(
         &self,
         ids: &[i32],
@@ -405,10 +444,34 @@ impl NativeModel {
         backend: SoftmaxBackend,
         scratch: &mut EncoderScratch,
     ) -> Result<Vec<Inference>> {
-        let l = self.cfg.seq_len;
-        if ids.is_empty() || ids.len() % l != 0 || ids.len() != segments.len() {
+        self.forward_batch_at(ids, segments, self.cfg.seq_len, backend, scratch)
+    }
+
+    /// Forward a stacked batch with an explicit per-example stride
+    /// `seq` (1..= `seq_len`) — the entry point the length-band serving
+    /// path uses so short-traffic batches pay for short tiles.  Each
+    /// example's true length is recovered from its pad tail
+    /// ([`crate::data::valid_len`]); pad positions are then **dropped
+    /// from the computation entirely**: the activation tiles hold only
+    /// the `Σ valid_len` valid rows, per-head attention masks every row
+    /// to its example's valid keys (pad p̂ is exactly 0, no pad-key
+    /// MACs), and the classifier mean-pools over valid tokens only.
+    /// Because no stage reads a pad, the stride — and therefore the
+    /// amount of padding — cannot change any output bit.
+    pub fn forward_batch_at(
+        &self,
+        ids: &[i32],
+        segments: &[i32],
+        seq: usize,
+        backend: SoftmaxBackend,
+        scratch: &mut EncoderScratch,
+    ) -> Result<Vec<Inference>> {
+        if seq == 0 || seq > self.cfg.seq_len {
+            bail!("example stride {seq} outside 1..={}", self.cfg.seq_len);
+        }
+        if ids.is_empty() || ids.len() % seq != 0 || ids.len() != segments.len() {
             bail!(
-                "batch must be a whole number of length-{l} examples, got {}/{} ids/segments",
+                "batch must be a whole number of length-{seq} examples, got {}/{} ids/segments",
                 ids.len(),
                 segments.len()
             );
@@ -418,6 +481,7 @@ impl NativeModel {
             &self.weights,
             ids,
             segments,
+            seq,
             backend,
             &mut CalibCtx::Run(&self.calib),
             scratch,
@@ -443,9 +507,9 @@ impl NativeModel {
     /// malformed request can be rejected alone instead of failing the
     /// whole flushed batch it would have ridden in.
     pub fn check_request(&self, ids: &[i32], segments: &[i32]) -> Result<()> {
-        if ids.len() != self.cfg.seq_len || segments.len() != self.cfg.seq_len {
+        if ids.is_empty() || ids.len() > self.cfg.seq_len || ids.len() != segments.len() {
             bail!(
-                "expected {} ids/segments, got {}/{}",
+                "expected 1..={} ids with matching segments, got {}/{}",
                 self.cfg.seq_len,
                 ids.len(),
                 segments.len()
@@ -454,7 +518,29 @@ impl NativeModel {
         for (&id, &seg) in ids.iter().zip(segments) {
             check_token(id, seg, self.cfg.vocab)?;
         }
+        if crate::data::valid_len(ids) == 0 {
+            bail!("request is all [PAD] — no valid tokens to attend");
+        }
         Ok(())
+    }
+
+    /// The band an example of true length `valid_len` belongs to when
+    /// `[1, seq_len]` is split into `bands` equal-width length bands
+    /// (band `k` covers lengths up to [`Self::band_width`]).  Used by
+    /// the length-aware serving path to keep `forward_batch_at` tiles
+    /// dense under mixed-length traffic.
+    pub fn band_of(&self, valid_len: usize, bands: usize) -> usize {
+        debug_assert!(bands >= 1);
+        let v = valid_len.clamp(1, self.cfg.seq_len);
+        (0..bands)
+            .find(|&k| self.band_width(k, bands) >= v)
+            .unwrap_or(bands - 1)
+    }
+
+    /// Upper length bound (== the tile stride) of band `k` of `bands`.
+    pub fn band_width(&self, k: usize, bands: usize) -> usize {
+        debug_assert!(bands >= 1 && k < bands);
+        (self.cfg.seq_len * (k + 1)).div_ceil(bands)
     }
 }
 
@@ -504,43 +590,90 @@ fn logit_grid(acc: i32, dh: i32) -> i32 {
     acc.div_euclid(dh).clamp(-128, 127)
 }
 
-/// The shared forward pass over a batch of `ids.len() / seq_len`
-/// examples; returns bias-corrected class logits, `(examples, classes)`
-/// row-major.  `CalibCtx::Build` derives divisors/θ as it goes (batch
-/// statistics), `CalibCtx::Run` replays them on any batch size.
+/// The shared forward pass over a batch of `ids.len() / seq` examples
+/// (`seq` is the per-example padded stride); returns bias-corrected
+/// class logits, `(examples, classes)` row-major.  `CalibCtx::Build`
+/// derives divisors/θ as it goes (batch statistics), `CalibCtx::Run`
+/// replays them on any batch size.
+///
+/// ## Valid-length masking (the padding-invariance contract)
+///
+/// Each example's true length is its pad-tail scan
+/// ([`crate::data::valid_len`]).  Pad positions never enter the
+/// computation: the activation tiles are **compacted** to the
+/// `Σ valid_len` valid rows (projections, LayerNorm, FFN, and residual
+/// writes run on valid rows only), each attention row is masked to its
+/// example's valid keys (QK^T through
+/// [`crate::linalg::gemm_nt_bounded_into`], normalization through the
+/// masked HCCS engine with exact `p̂ = 0` on pads, the mix through the
+/// bounded p̂·V), and the classifier mean-pools over valid tokens.
+/// Since no stage reads a pad, padding the same example to a different
+/// `seq` cannot change any output bit.
+#[allow(clippy::too_many_arguments)]
 fn forward_impl(
     cfg: &ModelConfig,
     w: &EncoderWeights,
     ids: &[i32],
     segs: &[i32],
+    seq: usize,
     backend: SoftmaxBackend,
     calib: &mut CalibCtx,
     s: &mut EncoderScratch,
 ) -> Result<Vec<i32>> {
-    let (l, d) = (cfg.seq_len, cfg.d_model);
+    let d = cfg.d_model;
     let (heads, dk) = (cfg.heads, cfg.dk());
-    if l == 0 || ids.len() % l != 0 || ids.len() != segs.len() || ids.is_empty() {
-        bail!("ids/segments must be a whole number of length-{l} examples");
+    if seq == 0
+        || seq > cfg.seq_len
+        || ids.len() % seq != 0
+        || ids.len() != segs.len()
+        || ids.is_empty()
+    {
+        bail!("ids/segments must be a whole number of length-{seq} examples");
     }
-    let nb = ids.len() / l;
+    let nb = ids.len() / seq;
 
-    // Embedding: tok + pos + seg in i32, then integer LayerNorm.
-    s.x32.resize(nb * l * d, 0);
-    for (row, (&id, &seg)) in ids.iter().zip(segs).enumerate() {
+    // Per-example true lengths (pad-tail scan) + the compacted row
+    // count.  Every token — pads included — is still validated, so a
+    // malformed id can't hide in a pad tail.
+    for (&id, &seg) in ids.iter().zip(segs) {
         check_token(id, seg, cfg.vocab)?;
-        let t = row % l;
-        let tok = &w.tok_emb[id as usize * d..(id as usize + 1) * d];
-        let pos = &w.pos_emb[t * d..(t + 1) * d];
-        let sg = &w.seg_emb[seg as usize * d..(seg as usize + 1) * d];
-        for (j, o) in s.x32[row * d..(row + 1) * d].iter_mut().enumerate() {
-            *o = i32::from(tok[j]) + i32::from(pos[j]) + i32::from(sg[j]);
+    }
+    s.lens.clear();
+    for b in 0..nb {
+        let len = crate::data::valid_len(&ids[b * seq..(b + 1) * seq]);
+        if len == 0 {
+            bail!("example {b} is all [PAD] — no valid tokens to attend");
+        }
+        s.lens.push(len);
+    }
+    let total: usize = s.lens.iter().sum();
+    let lmax = *s.lens.iter().max().expect("non-empty batch");
+
+    // Embedding of the valid rows only: tok + pos + seg in i32, then
+    // integer LayerNorm.  Row `off_b + t` of the compacted tile is
+    // example b's position t, so the position embedding is unchanged
+    // by how far the example was padded.
+    s.x32.resize(total * d, 0);
+    let mut row = 0usize;
+    for (b, &len) in s.lens.iter().enumerate() {
+        for t in 0..len {
+            let id = ids[b * seq + t] as usize;
+            let seg = segs[b * seq + t] as usize;
+            let tok = &w.tok_emb[id * d..(id + 1) * d];
+            let pos = &w.pos_emb[t * d..(t + 1) * d];
+            let sg = &w.seg_emb[seg * d..(seg + 1) * d];
+            for (j, o) in s.x32[row * d..(row + 1) * d].iter_mut().enumerate() {
+                *o = i32::from(tok[j]) + i32::from(pos[j]) + i32::from(sg[j]);
+            }
+            row += 1;
         }
     }
     layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
 
     for (li, lay) in w.layers.iter().enumerate() {
         // Q/K/V projections: one packed GEMM each over the whole
-        // stacked (nb·l, d) activation tile.
+        // compacted (Σ len, d) activation tile — pad rows never exist,
+        // so short traffic pays for short tiles.
         lay.wq.gemm_into(&s.x, &mut s.acc);
         let div = calib.div(li, Slot::Q, 1, &s.acc);
         requant(&s.acc, div, &mut s.q8);
@@ -552,45 +685,48 @@ fn forward_impl(
         requant(&s.acc, div, &mut s.v8);
 
         // Attention, head by head across the whole batch: gather the
-        // head's Q/K, build the stacked block-diagonal (nb·l, l) QK^T
-        // accumulator tile (one linalg A·Bᵀ GEMM per example), then
-        // normalize every row of every example in ONE batched HCCS (or
-        // f32 softmax) pass.  Calibration reads the same tile.
-        s.ctx32.resize(nb * l * d, 0);
+        // head's Q/K, build the stacked (Σ len, lmax) QK^T accumulator
+        // tile — one column-bounded A·Bᵀ GEMM per example, valid keys
+        // only — then normalize every valid row of every example in ONE
+        // masked batched HCCS (or f32 softmax) pass.  Calibration reads
+        // the same tile.
+        s.ctx32.resize(total * d, 0);
         for h in 0..heads {
             let off = h * dk;
             gather_head(&s.q8, d, off, dk, &mut s.qh);
             gather_head(&s.k8, d, off, dk, &mut s.kh);
-            s.acc_head.resize(nb * l * l, 0);
-            for b in 0..nb {
-                gemm_nt_into(
-                    &s.qh[b * l * dk..(b + 1) * l * dk],
-                    &s.kh[b * l * dk..(b + 1) * l * dk],
-                    l,
-                    l,
+            s.acc_head.resize(total * lmax, 0);
+            let mut roff = 0usize;
+            for &len in s.lens.iter() {
+                gemm_nt_bounded_into(
+                    &s.qh[roff * dk..(roff + len) * dk],
+                    &s.kh[roff * dk..(roff + len) * dk],
+                    len,
+                    lmax,
+                    len,
                     dk,
-                    &mut s.acc_head[b * l * l..(b + 1) * l * l],
+                    &mut s.acc_head[roff * lmax..(roff + len) * lmax],
                 );
+                roff += len;
             }
-            let head = calib.head(li, h, heads, &s.acc_head, l)?;
+            let head = calib.head(li, h, heads, &s.acc_head, &s.lens, lmax, cfg.seq_len)?;
 
             match backend {
                 SoftmaxBackend::Hccs { out_path, recip } => {
                     // V augmented with a ones column so out[:, dk] is
-                    // the true Σp̂ of each row; one grouped attention
-                    // call covers the whole batch.
+                    // the true Σp̂ of each row; one ragged grouped
+                    // attention call covers the whole batch.
                     s.vh.clear();
-                    for row in s.v8.chunks_exact(d) {
-                        s.vh.extend_from_slice(&row[off..off + dk]);
+                    for vrow in s.v8.chunks_exact(d) {
+                        s.vh.extend_from_slice(&vrow[off..off + dk]);
                         s.vh.push(1);
                     }
-                    s.out_aug.resize(nb * l * (dk + 1), 0);
-                    hccs_attention_from_acc(
+                    s.out_aug.resize(total * (dk + 1), 0);
+                    hccs_attention_ragged_from_acc(
                         &s.acc_head,
                         &s.vh,
-                        nb,
-                        l,
-                        l,
+                        &s.lens,
+                        lmax,
                         dk + 1,
                         &head.theta,
                         out_path,
@@ -601,45 +737,57 @@ fn forward_impl(
                         &mut s.out_aug,
                     )
                     .map_err(|e| anyhow!("hccs_attention L{li}H{h}: {e}"))?;
-                    for (row, orow) in s.out_aug.chunks_exact(dk + 1).enumerate() {
+                    for (orow, dst) in s
+                        .out_aug
+                        .chunks_exact(dk + 1)
+                        .zip(s.ctx32.chunks_exact_mut(d))
+                    {
                         let srow = i64::from(orow[dk]).max(1);
-                        let clo = row * d + off;
-                        let dst = &mut s.ctx32[clo..clo + dk];
-                        for (o, &raw) in dst.iter_mut().zip(&orow[..dk]) {
+                        for (o, &raw) in dst[off..off + dk].iter_mut().zip(&orow[..dk]) {
                             *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
                         }
                     }
                 }
                 SoftmaxBackend::F32Ref => {
-                    // Same grid, exact softmax, same integer mix — row
-                    // by row over the same stacked accumulator tile.
-                    for (row, rowacc) in s.acc_head.chunks_exact(l).enumerate() {
-                        let base = (row / l) * l; // this example's first row
-                        s.phat.resize(l, 0);
-                        s.grid.clear();
-                        s.grid.extend(
-                            rowacc.iter().map(|&a| f64::from(logit_grid(a, head.dh)) * head.gamma),
-                        );
-                        let m = s.grid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-                        s.exps.clear();
-                        s.exps.extend(s.grid.iter().map(|&v| (v - m).exp()));
-                        let z: f64 = s.exps.iter().sum();
-                        let mut srow = 0i64;
-                        for (p, &e) in s.phat.iter_mut().zip(&s.exps) {
-                            *p = (e / z * f64::from(T_I16)).floor() as i32;
-                            srow += i64::from(*p);
-                        }
-                        let srow = srow.max(1);
-                        let clo = row * d + off;
-                        for (j, dst) in s.ctx32[clo..clo + dk].iter_mut().enumerate() {
-                            let mut raw = 0i32;
-                            for (c, &p) in s.phat.iter().enumerate() {
-                                if p != 0 {
-                                    raw += p * i32::from(s.v8[(base + c) * d + off + j]);
-                                }
+                    // Same grid, exact softmax over the valid keys,
+                    // same integer mix — row by row over the same
+                    // masked accumulator tile.
+                    let mut row = 0usize;
+                    let mut base = 0usize;
+                    for &len in s.lens.iter() {
+                        for _ in 0..len {
+                            let rowacc = &s.acc_head[row * lmax..row * lmax + len];
+                            s.phat.resize(len, 0);
+                            s.grid.clear();
+                            s.grid.extend(
+                                rowacc
+                                    .iter()
+                                    .map(|&a| f64::from(logit_grid(a, head.dh)) * head.gamma),
+                            );
+                            let m =
+                                s.grid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                            s.exps.clear();
+                            s.exps.extend(s.grid.iter().map(|&v| (v - m).exp()));
+                            let z: f64 = s.exps.iter().sum();
+                            let mut srow = 0i64;
+                            for (p, &e) in s.phat.iter_mut().zip(&s.exps) {
+                                *p = (e / z * f64::from(T_I16)).floor() as i32;
+                                srow += i64::from(*p);
                             }
-                            *dst = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            let srow = srow.max(1);
+                            let clo = row * d + off;
+                            for (j, dst) in s.ctx32[clo..clo + dk].iter_mut().enumerate() {
+                                let mut raw = 0i32;
+                                for (c, &p) in s.phat.iter().enumerate() {
+                                    if p != 0 {
+                                        raw += p * i32::from(s.v8[(base + c) * d + off + j]);
+                                    }
+                                }
+                                *dst = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            }
+                            row += 1;
                         }
+                        base += len;
                     }
                 }
             }
@@ -672,20 +820,23 @@ fn forward_impl(
         layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
     }
 
-    // Mean-pool over positions (each pooled value is a floor mean of
-    // int8 activations, so it stays on the int8 grid), then classify
-    // with one packed GEMM over the (nb, d) pooled tile.  i32
-    // accumulation is exact here: |pooled·w| ≤ 127·128·d ≪ 2³¹.
+    // Mean-pool over each example's *valid* positions (each pooled
+    // value is a floor mean of int8 activations, so it stays on the
+    // int8 grid), then classify with one packed GEMM over the (nb, d)
+    // pooled tile.  i32 accumulation is exact here:
+    // |pooled·w| ≤ 127·128·d ≪ 2³¹.
     let nc = cfg.n_classes;
     s.pool8.clear();
-    for b in 0..nb {
+    let mut row0 = 0usize;
+    for &len in s.lens.iter() {
         for j in 0..d {
             let mut sum = 0i64;
-            for t in 0..l {
-                sum += i64::from(s.x[(b * l + t) * d + j]);
+            for t in 0..len {
+                sum += i64::from(s.x[(row0 + t) * d + j]);
             }
-            s.pool8.push(sum.div_euclid(l as i64) as i8);
+            s.pool8.push(sum.div_euclid(len as i64) as i8);
         }
+        row0 += len;
     }
     w.w_cls.gemm_into(&s.pool8, &mut s.acc);
     let mut logits = s.acc[..nb * nc].to_vec();
@@ -795,15 +946,93 @@ mod tests {
         let mut s = EncoderScratch::default();
         let n = m.cfg.seq_len;
         let backend = SoftmaxBackend::F32Ref;
-        assert!(m.forward(&vec![1; n - 1], &vec![0; n - 1], backend, &mut s).is_err());
+        // Shorter-than-seq_len examples are now legal (the pad tail is
+        // masked anyway)...
+        assert!(m.forward(&vec![1; n - 1], &vec![0; n - 1], backend, &mut s).is_ok());
+        // ...but empty, over-long, mismatched, all-pad, and
+        // out-of-range inputs still reject.
+        assert!(m.forward(&[], &[], backend, &mut s).is_err());
+        assert!(m.forward(&vec![1; n + 1], &vec![0; n + 1], backend, &mut s).is_err());
+        assert!(m.forward(&vec![1; n], &vec![0; n - 1], backend, &mut s).is_err());
+        assert!(m.forward(&vec![0; n], &vec![0; n], backend, &mut s).is_err());
         assert!(m.forward(&vec![-1; n], &vec![0; n], backend, &mut s).is_err());
         assert!(m.forward(&vec![100_000; n], &vec![0; n], backend, &mut s).is_err());
         assert!(m.forward(&vec![1; n], &vec![7; n], backend, &mut s).is_err());
+        // A bad token hiding in the pad tail is still caught.
+        let mut tail_garbage = vec![1; n];
+        tail_garbage[3..].fill(0);
+        let mut bad_tail = tail_garbage.clone();
+        bad_tail[n - 1] = -5;
+        assert!(m.forward(&tail_garbage, &vec![0; n], backend, &mut s).is_ok());
+        assert!(m.forward(&bad_tail, &vec![0; n], backend, &mut s).is_err());
         // check_request mirrors the forward validation without running.
         assert!(m.check_request(&vec![1; n], &vec![0; n]).is_ok());
-        assert!(m.check_request(&vec![1; n - 1], &vec![0; n - 1]).is_err());
+        assert!(m.check_request(&vec![1; n - 1], &vec![0; n - 1]).is_ok());
+        assert!(m.check_request(&[], &[]).is_err());
+        assert!(m.check_request(&vec![1; n + 1], &vec![0; n + 1]).is_err());
+        assert!(m.check_request(&vec![0; n], &vec![0; n]).is_err());
         assert!(m.check_request(&vec![-1; n], &vec![0; n]).is_err());
         assert!(m.check_request(&vec![1; n], &vec![7; n]).is_err());
+    }
+
+    #[test]
+    fn padding_to_different_lengths_is_bit_identical() {
+        // The load-bearing masking contract at unit scale (the full
+        // property test lives in tests/proptests.rs): one example,
+        // padded to several different lengths, must produce identical
+        // integer logits under every backend.
+        let m = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 21).unwrap();
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, 9);
+        let ex = std::iter::repeat_with(|| generator.next_example())
+            .find(|ex| ex.valid_len < m.cfg.seq_len)
+            .expect("generator yields a padded example");
+        let (ids, segs) = (ex.ids, ex.segments);
+        let v = ex.valid_len;
+        let mut s = EncoderScratch::default();
+        for backend in [
+            SoftmaxBackend::F32Ref,
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Clb },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Div },
+            SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb },
+        ] {
+            let full = m.forward(&ids, &segs, backend, &mut s).unwrap();
+            for pad_to in [v, v + 1, (v + m.cfg.seq_len) / 2] {
+                let short = m
+                    .forward(&ids[..pad_to], &segs[..pad_to], backend, &mut s)
+                    .unwrap();
+                assert_eq!(
+                    short.logits_i32, full.logits_i32,
+                    "{backend:?} diverged between pad {pad_to} and {}",
+                    m.cfg.seq_len
+                );
+                assert_eq!(short.predicted, full.predicted);
+                assert_eq!(short.logits, full.logits);
+            }
+        }
+    }
+
+    #[test]
+    fn band_helpers_cover_the_length_range() {
+        let m = NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 3).unwrap();
+        let n = m.cfg.seq_len; // 64
+        assert_eq!(m.band_width(0, 4), 16);
+        assert_eq!(m.band_width(3, 4), n);
+        assert_eq!(m.band_of(1, 4), 0);
+        assert_eq!(m.band_of(16, 4), 0);
+        assert_eq!(m.band_of(17, 4), 1);
+        assert_eq!(m.band_of(n, 4), 3);
+        // One band degenerates to the dense path.
+        assert_eq!(m.band_of(n, 1), 0);
+        assert_eq!(m.band_width(0, 1), n);
+        // Every length lands in a band whose width covers it.
+        for bands in [1usize, 2, 3, 4, 5, 7] {
+            for v in 1..=n {
+                let k = m.band_of(v, bands);
+                assert!(m.band_width(k, bands) >= v, "len {v} bands {bands}");
+                assert!(k == 0 || m.band_width(k - 1, bands) < v, "len {v} not minimal");
+            }
+        }
     }
 
     #[test]

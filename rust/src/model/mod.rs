@@ -36,11 +36,16 @@
 //! QK^T, p̂·V — runs on the [`crate::linalg`] packed-GEMM core (weights
 //! transposed + packed once at construction), and
 //! [`NativeModel::forward_batch`] stacks a whole batch into one
-//! `(batch·seq, d)` tile per layer so every head pays one batched HCCS
-//! dispatch per layer across the batch.  [`NativeBackend`] serves that
-//! path through per-shard executor workers (router + dynamic batcher,
-//! same substrate as the coordinator engines), so `--shards` and
-//! `--max-batch` apply to native serving.
+//! activation tile per layer **compacted to each example's valid
+//! tokens** (pad positions are hard-masked out of the entire datapath:
+//! attention gives pad keys exact `p̂ = 0` and the classifier pools
+//! valid tokens only), so every head pays one masked batched HCCS
+//! dispatch per layer across the batch and the same example padded to
+//! any length produces bit-identical logits.  [`NativeBackend`] serves
+//! that path through per-shard executor workers (router + per-band
+//! dynamic batchers, same substrate as the coordinator engines), so
+//! `--shards`, `--max-batch`, and `--length-bands` apply to native
+//! serving.
 //!
 //! Submodules: [`config`] (model shapes), [`norm`] (integer LN /
 //! requant helpers), [`encoder`] (weights + calibration + forward),

@@ -22,7 +22,7 @@ use crate::error::{anyhow, Context, Result};
 
 use crate::coordinator::{Coordinator, InferReply};
 use crate::data::TaskKind;
-use crate::tokenizer::Tokenizer;
+use crate::tokenizer::{Encoded, Tokenizer};
 
 /// Anything that can answer tokenized inference requests through a
 /// per-request reply channel.  Production uses the sharded
@@ -64,8 +64,8 @@ pub fn serve<E: InferBackend, R: BufRead, W: Write>(
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
-        let (ids, segments) = encode_request(tokenizer, task, line, max_len);
-        pending.push(coordinator.submit_request(ids, segments)?);
+        let enc = encode_request(tokenizer, task, line, max_len)?;
+        pending.push(coordinator.submit_request(enc.ids, enc.segments)?);
     }
     let mut served = 0u64;
     for rx in pending {
@@ -82,13 +82,15 @@ pub fn serve<E: InferBackend, R: BufRead, W: Write>(
 }
 
 /// Tokenize one request line; `[SEP]` in the text splits premise from
-/// hypothesis for pair tasks.
+/// hypothesis for pair tasks.  The returned [`Encoded`] carries the
+/// true token count alongside the padded ids, which is what the native
+/// backend's length-band router batches on.
 pub fn encode_request(
     tokenizer: &Tokenizer,
     task: TaskKind,
     line: &str,
     max_len: usize,
-) -> (Vec<i32>, Vec<i32>) {
+) -> Result<Encoded> {
     match task {
         TaskKind::Sst2s => tokenizer.encode(line, max_len),
         TaskKind::Mnlis => match line.split_once("[SEP]") {
@@ -122,16 +124,18 @@ mod tests {
 
     #[test]
     fn pair_request_splits_on_sep() {
-        let (ids, segs) = encode_request(&tok(), TaskKind::Mnlis, "e001 [SEP] ant_a00", 8);
-        assert_eq!(ids[..5], [CLS, 5, SEP, 6, SEP]);
-        assert_eq!(segs[..5], [0, 0, 0, 1, 1]);
+        let e = encode_request(&tok(), TaskKind::Mnlis, "e001 [SEP] ant_a00", 8).unwrap();
+        assert_eq!(e.ids[..5], [CLS, 5, SEP, 6, SEP]);
+        assert_eq!(e.segments[..5], [0, 0, 0, 1, 1]);
+        assert_eq!(e.valid_len, 5);
     }
 
     #[test]
     fn single_request_is_one_segment() {
-        let (ids, segs) = encode_request(&tok(), TaskKind::Sst2s, "w000 w000", 8);
-        assert_eq!(ids[..4], [CLS, 4, 4, SEP]);
-        assert!(segs.iter().all(|&s| s == 0));
+        let e = encode_request(&tok(), TaskKind::Sst2s, "w000 w000", 8).unwrap();
+        assert_eq!(e.ids[..4], [CLS, 4, 4, SEP]);
+        assert!(e.segments.iter().all(|&s| s == 0));
+        assert_eq!(e.valid_len, 4);
     }
 
     #[test]

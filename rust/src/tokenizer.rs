@@ -18,6 +18,18 @@ pub const CLS: i32 = 1;
 pub const SEP: i32 = 2;
 pub const UNK: i32 = 3;
 
+/// One encoded request: padded ids/segments plus the true (unpadded)
+/// token count — the `valid_len` every length-aware consumer (masked
+/// attention, length-band batching, valid-token pooling) keys on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Encoded {
+    pub ids: Vec<i32>,
+    pub segments: Vec<i32>,
+    /// Number of leading non-pad positions (`[CLS]`+tokens+`[SEP]`
+    /// framing included); `ids[valid_len..]` is all `[PAD]`.
+    pub valid_len: usize,
+}
+
 /// Closed-vocabulary tokenizer.
 #[derive(Clone, Debug)]
 pub struct Tokenizer {
@@ -68,23 +80,36 @@ impl Tokenizer {
     }
 
     /// Encode a single segment: `[CLS] tokens... [SEP]`, padded/truncated
-    /// to `max_len`.  Returns (ids, segment_ids all zero).
-    pub fn encode(&self, text: &str, max_len: usize) -> (Vec<i32>, Vec<i32>) {
+    /// to `max_len`.  `max_len` must be at least 2 (the `[CLS]`/`[SEP]`
+    /// framing); smaller values used to underflow `max_len - 1` and
+    /// panic.  The returned [`Encoded`] carries the true token count
+    /// (`valid_len`) alongside the padded ids, so every downstream
+    /// consumer can hard-mask the pad tail.
+    pub fn encode(&self, text: &str, max_len: usize) -> Result<Encoded> {
+        if max_len < 2 {
+            bail!("max_len {max_len} too small: [CLS] + [SEP] framing needs at least 2");
+        }
         let mut ids = vec![CLS];
         for tok in text.split_whitespace() {
-            if ids.len() >= max_len - 1 {
+            if ids.len() >= max_len.saturating_sub(1) {
                 break;
             }
             ids.push(self.id(tok));
         }
         ids.push(SEP);
+        let valid_len = ids.len();
         ids.resize(max_len, PAD);
         let segs = vec![0; max_len];
-        (ids, segs)
+        Ok(Encoded { ids, segments: segs, valid_len })
     }
 
     /// Encode a pair: `[CLS] a [SEP] b [SEP]` with segment ids 0/1.
-    pub fn encode_pair(&self, a: &str, b: &str, max_len: usize) -> (Vec<i32>, Vec<i32>) {
+    /// `max_len` must be at least 3 (the `[CLS]`/`[SEP]`/`[SEP]`
+    /// framing); smaller values used to underflow and panic.
+    pub fn encode_pair(&self, a: &str, b: &str, max_len: usize) -> Result<Encoded> {
+        if max_len < 3 {
+            bail!("max_len {max_len} too small: pair framing needs at least 3");
+        }
         let mut ids = vec![CLS];
         for tok in a.split_whitespace() {
             if ids.len() >= max_len.saturating_sub(2) {
@@ -95,19 +120,19 @@ impl Tokenizer {
         ids.push(SEP);
         let seg0 = ids.len();
         for tok in b.split_whitespace() {
-            if ids.len() >= max_len - 1 {
+            if ids.len() >= max_len.saturating_sub(1) {
                 break;
             }
             ids.push(self.id(tok));
         }
         ids.push(SEP);
-        let used = ids.len();
+        let valid_len = ids.len();
         ids.resize(max_len, PAD);
         let mut segs = vec![0; max_len];
-        for s in segs.iter_mut().take(used).skip(seg0) {
+        for s in segs.iter_mut().take(valid_len).skip(seg0) {
             *s = 1;
         }
-        (ids, segs)
+        Ok(Encoded { ids, segments: segs, valid_len })
     }
 
     /// Decode ids back to a readable string (debugging / server echo).
@@ -136,36 +161,67 @@ mod tests {
 
     #[test]
     fn encode_frames_and_pads() {
-        let (ids, segs) = tok().encode("w000 not good01", 8);
-        assert_eq!(ids, vec![CLS, 4, 6, 5, SEP, PAD, PAD, PAD]);
-        assert_eq!(segs, vec![0; 8]);
+        let e = tok().encode("w000 not good01", 8).unwrap();
+        assert_eq!(e.ids, vec![CLS, 4, 6, 5, SEP, PAD, PAD, PAD]);
+        assert_eq!(e.segments, vec![0; 8]);
+        assert_eq!(e.valid_len, 5, "CLS + 3 tokens + SEP");
     }
 
     #[test]
     fn unknown_token_maps_to_unk() {
-        let (ids, _) = tok().encode("zzz", 4);
-        assert_eq!(ids[1], UNK);
+        let e = tok().encode("zzz", 4).unwrap();
+        assert_eq!(e.ids[1], UNK);
     }
 
     #[test]
     fn encode_pair_sets_segments() {
-        let (ids, segs) = tok().encode_pair("w000", "good01 not", 8);
-        assert_eq!(ids, vec![CLS, 4, SEP, 5, 6, SEP, PAD, PAD]);
-        assert_eq!(segs, vec![0, 0, 0, 1, 1, 1, 0, 0]);
+        let e = tok().encode_pair("w000", "good01 not", 8).unwrap();
+        assert_eq!(e.ids, vec![CLS, 4, SEP, 5, 6, SEP, PAD, PAD]);
+        assert_eq!(e.segments, vec![0, 0, 0, 1, 1, 1, 0, 0]);
+        assert_eq!(e.valid_len, 6);
     }
 
     #[test]
     fn truncation_respects_max_len() {
-        let (ids, _) = tok().encode("w000 w000 w000 w000 w000", 4);
-        assert_eq!(ids.len(), 4);
-        assert_eq!(ids[3], SEP);
+        let e = tok().encode("w000 w000 w000 w000 w000", 4).unwrap();
+        assert_eq!(e.ids.len(), 4);
+        assert_eq!(e.ids[3], SEP);
+        assert_eq!(e.valid_len, 4, "fully truncated examples have no pad tail");
     }
 
     #[test]
     fn decode_roundtrips_tokens() {
         let t = tok();
-        let (ids, _) = t.encode("w000 good01", 6);
-        assert_eq!(t.decode(&ids), "[CLS] w000 good01 [SEP]");
+        let e = t.encode("w000 good01", 6).unwrap();
+        assert_eq!(t.decode(&e.ids), "[CLS] w000 good01 [SEP]");
+    }
+
+    #[test]
+    fn tiny_max_len_is_an_error_not_a_panic() {
+        // Regression: max_len <= 1 used to underflow `max_len - 1` and
+        // panic; pairs additionally used raw `- 1` after a saturating
+        // `- 2`.  Every degenerate size must now be a proper Error.
+        let t = tok();
+        for max_len in [0usize, 1] {
+            assert!(t.encode("w000", max_len).is_err(), "encode max_len={max_len}");
+        }
+        for max_len in [0usize, 1, 2] {
+            assert!(
+                t.encode_pair("w000", "good01", max_len).is_err(),
+                "encode_pair max_len={max_len}"
+            );
+        }
+        // The smallest legal sizes produce pure framing.
+        let e = t.encode("w000 not", 2).unwrap();
+        assert_eq!(e.ids, vec![CLS, SEP]);
+        assert_eq!(e.valid_len, 2);
+        let e = t.encode("", 3).unwrap();
+        assert_eq!(e.ids, vec![CLS, SEP, PAD]);
+        assert_eq!(e.valid_len, 2);
+        let e = t.encode_pair("w000", "good01", 3).unwrap();
+        assert_eq!(e.ids, vec![CLS, SEP, SEP]);
+        assert_eq!(e.segments, vec![0, 0, 1]);
+        assert_eq!(e.valid_len, 3);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! 3. bit-exactly against [`hccs_batch`] (the batched engine, 1×n).
 
 use hccs::hccs::kernel::parse_mode;
-use hccs::hccs::{hccs_batch, hccs_row, HccsParams, OutputPath, Reciprocal};
+use hccs::hccs::{
+    hccs_batch, hccs_batch_masked, hccs_row, HccsParams, OutputPath, Reciprocal,
+};
 use hccs::json::Value;
 
 const GOLDEN: &str = include_str!("golden_vectors.json");
@@ -109,6 +111,88 @@ fn kernel_matches_committed_vectors_and_independent_oracle() {
         }
     }
     assert!(checked >= 80, "only {checked} golden vectors checked");
+}
+
+fn load_masked_cases() -> Vec<Value> {
+    let golden = Value::parse(GOLDEN).expect("golden_vectors.json must parse");
+    golden.req("masked_cases").as_arr().expect("masked_cases array").to_vec()
+}
+
+/// Valid-length masked vectors: the masked engine must reproduce the
+/// committed p̂ values — the active prefix equals the straight-line
+/// oracle run on that prefix alone, and every pad column is **exactly
+/// zero** (the hard mask, not the score floor).  Checked three ways,
+/// like the dense suite: independent i64 oracle, masked batched
+/// engine, and the prefix through the scalar row kernel.
+#[test]
+fn masked_kernel_matches_committed_vectors_and_oracle() {
+    let cases = load_masked_cases();
+    assert!(cases.len() >= 3, "only {} masked golden cases", cases.len());
+    let mut checked = 0usize;
+    for case in cases {
+        let n = case.req("n").as_i64().unwrap() as usize;
+        let len = case.req("len").as_i64().unwrap() as usize;
+        assert!((1..=n).contains(&len));
+        let x: Vec<i8> = case.req("x").flat_f64().iter().map(|&v| v as i8).collect();
+        assert_eq!(x.len(), n);
+        let (b, s, dmax) = (
+            case.req("B").as_i64().unwrap(),
+            case.req("S").as_i64().unwrap(),
+            case.req("Dmax").as_i64().unwrap(),
+        );
+        let p = HccsParams::checked(b as i32, s as i32, dmax as i32, n)
+            .expect("masked golden params feasible at full width");
+        let Value::Obj(outs) = case.req("out") else { panic!("out must be an object") };
+        assert_eq!(outs.len(), 4, "expected 4 modes per masked case");
+        for (mode, want_v) in outs {
+            let (op, rc) = parse_mode(mode).unwrap();
+            let want: Vec<i64> = want_v.flat_f64().iter().map(|&v| v as i64).collect();
+            assert_eq!(want.len(), n);
+            assert!(want[len..].iter().all(|&v| v == 0), "committed pads nonzero");
+            // 1. Independent oracle on the active prefix + zero pads.
+            let mut oracle = oracle_row(&x[..len], b, s, dmax, op, rc);
+            oracle.resize(n, 0);
+            assert_eq!(oracle, want, "oracle n={n} len={len} {mode}");
+            // 2. Masked batched engine is bit-exact, pads included.
+            let got: Vec<i64> = hccs_batch_masked(&x, 1, n, &[len], &p, op, rc)
+                .iter()
+                .map(|&v| i64::from(v))
+                .collect();
+            assert_eq!(got, want, "hccs_batch_masked n={n} len={len} {mode}");
+            // 3. The active prefix equals the scalar row kernel run on
+            // the prefix alone (masking == truncation, bit for bit).
+            let prefix: Vec<i64> =
+                hccs_row(&x[..len], &p, op, rc).iter().map(|&v| i64::from(v)).collect();
+            assert_eq!(prefix[..], want[..len], "prefix row kernel n={n} len={len} {mode}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 12, "only {checked} masked golden vectors checked");
+}
+
+/// The masked file must contain the hand-derived masked worked example
+/// (same guard as the dense suite: a broken regenerator can't slip by).
+#[test]
+fn hand_checked_masked_case_is_present() {
+    // n=64 masked to len=16, θ=(300,4,64), x = all −100 except x0=90,
+    // x7=80: m=90 → scores 300, 260, 44 over the 16 active columns;
+    // Z = 300 + 260 + 14·44 = 1176; ρ = ⌊32767/1176⌋ = 27 →
+    // p̂ = 8100 / 7020 / 1188, pads exactly 0.
+    let found = load_masked_cases().iter().any(|case| {
+        let x: Vec<i64> = case.req("x").flat_f64().iter().map(|&v| v as i64).collect();
+        if x.len() != 64
+            || x[0] != 90
+            || x[7] != 80
+            || x[1] != -100
+            || case.req("len").as_i64() != Some(16)
+        {
+            return false;
+        }
+        let out: Vec<i64> =
+            case.req("out").req("i16_div").flat_f64().iter().map(|&v| v as i64).collect();
+        out[0] == 8100 && out[7] == 7020 && out[1] == 44 * 27 && out[16..].iter().all(|&v| v == 0)
+    });
+    assert!(found, "hand-checked masked example missing from golden_vectors.json");
 }
 
 /// The committed file must contain the §III worked example with the

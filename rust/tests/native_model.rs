@@ -121,7 +121,8 @@ fn serving_reply_matches_direct_forward() {
     let mode = SoftmaxBackend::parse("i8_clb").unwrap();
     let backend = NativeBackend::new(model.clone(), mode);
 
-    let (ids, segs) = server::encode_request(&tokenizer, task, "good00 not bad03 w001", 64);
+    let enc = server::encode_request(&tokenizer, task, "good00 not bad03 w001", 64).unwrap();
+    let (ids, segs) = (enc.ids, enc.segments);
     let reply = backend
         .submit_request(ids.clone(), segs.clone())
         .unwrap()

@@ -7,7 +7,8 @@ use hccs::coordinator::{BatchPolicy, DynamicBatcher};
 use hccs::data::{TaskKind, WorkloadGen};
 use hccs::hccs::attention::{hccs_attention, AttentionInputs, AttentionScratch};
 use hccs::hccs::{
-    hccs_batch, hccs_row, hccs_row_into, HccsParams, OutputPath, Reciprocal, T_I16, T_I8,
+    hccs_batch, hccs_batch_masked, hccs_row, hccs_row_into, HccsParams, OutputPath, Reciprocal,
+    T_I16, T_I8,
 };
 use hccs::linalg::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, PackedGemm};
 use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
@@ -483,6 +484,103 @@ fn prop_forward_batch_bit_exact_with_single_forward() {
 }
 
 // ---------------------------------------------------------------------------
+// Padding invariance of the native encoder (the valid-length contract)
+// ---------------------------------------------------------------------------
+
+/// The same example, padded to different `max_len` values, must produce
+/// **bit-identical** logits under all four HCCS modes and the f32
+/// reference — the load-bearing contract of the valid-length masked
+/// stack.  Before masking this was impossible: the clipped-linear score
+/// floor `B - S·Dmax` is deliberately positive, so every extra `[PAD]`
+/// column received probability mass and shifted the mix.
+#[test]
+fn prop_padding_invariance_bit_identical_logits() {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        seq_len: task.max_len(),
+        vocab: hccs::data::VOCAB_SIZE as usize,
+        n_classes: 2,
+    };
+    let model = NativeModel::new(cfg, task, 17).expect("model build");
+    let backends: Vec<SoftmaxBackend> = std::iter::once(SoftmaxBackend::F32Ref)
+        .chain(SoftmaxBackend::hccs_modes())
+        .collect();
+    let seq = cfg.seq_len;
+    check(
+        "padding-invariance",
+        Config { cases: 10, ..Default::default() },
+        |rng| (rng.below(u64::MAX), rng.below(u64::MAX)),
+        |_| vec![],
+        |&(input_seed, pad_seed)| {
+            let mut generator = WorkloadGen::new(task, input_seed);
+            let ex = std::iter::repeat_with(|| generator.next_example())
+                .find(|ex| ex.valid_len < seq)
+                .expect("generator yields a padded example");
+            // Candidate paddings: the bare example, one extra pad, two
+            // random intermediates, and the full task width.
+            let mut rng = Xoshiro256::new(pad_seed);
+            let span = (seq - ex.valid_len) as u64;
+            let mut pads = vec![ex.valid_len, ex.valid_len + 1, seq];
+            pads.push(ex.valid_len + rng.below(span + 1) as usize);
+            pads.push(ex.valid_len + rng.below(span + 1) as usize);
+            let mut scratch = EncoderScratch::default();
+            for backend in &backends {
+                let base = model
+                    .forward(&ex.ids[..pads[0]], &ex.segments[..pads[0]], *backend, &mut scratch)
+                    .map_err(|e| format!("forward at pad {}: {e}", pads[0]))?;
+                for &pad_to in &pads[1..] {
+                    let inf = model
+                        .forward(&ex.ids[..pad_to], &ex.segments[..pad_to], *backend, &mut scratch)
+                        .map_err(|e| format!("forward at pad {pad_to}: {e}"))?;
+                    if inf.logits_i32 != base.logits_i32
+                        || inf.predicted != base.predicted
+                        || inf.logits != base.logits
+                    {
+                        return Err(format!(
+                            "{} diverged between pad {} and pad {pad_to} \
+                             (valid_len {}): {:?} vs {:?}",
+                            backend.name(),
+                            pads[0],
+                            ex.valid_len,
+                            base.logits_i32,
+                            inf.logits_i32
+                        ));
+                    }
+                }
+            }
+            // Batch composition with mixed paddings is equally inert:
+            // stack the example at full width next to itself and check
+            // against the unpadded single forward.
+            let mut ids = ex.ids.clone();
+            ids.extend_from_slice(&ex.ids);
+            let mut segs = ex.segments.clone();
+            segs.extend_from_slice(&ex.segments);
+            let batch = model
+                .forward_batch(&ids, &segs, SoftmaxBackend::hccs_modes()[0], &mut scratch)
+                .map_err(|e| format!("forward_batch: {e}"))?;
+            let single = model
+                .forward(
+                    &ex.ids[..ex.valid_len],
+                    &ex.segments[..ex.valid_len],
+                    SoftmaxBackend::hccs_modes()[0],
+                    &mut scratch,
+                )
+                .map_err(|e| format!("single forward: {e}"))?;
+            for inf in &batch {
+                if inf.logits_i32 != single.logits_i32 {
+                    return Err("batched padded example diverged from bare example".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Native encoder determinism
 // ---------------------------------------------------------------------------
 
@@ -630,6 +728,57 @@ fn prop_batch_bit_exact_with_row_kernel() {
                         got[bad],
                         want[bad]
                     ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The masked engine equals the row kernel on each row's valid prefix
+/// and writes exact zeros on the pad tail — for every tile shape, every
+/// per-row length mix, and all four modes.
+#[test]
+fn prop_masked_batch_bit_exact_with_prefix_rows_and_zero_pads() {
+    check(
+        "masked-batch-vs-prefix-rows",
+        Config { cases: 300, ..Default::default() },
+        |rng| {
+            let case = gen_tile(rng);
+            let lens: Vec<usize> =
+                (0..case.rows).map(|_| 1 + rng.below(case.cols as u64) as usize).collect();
+            (case, lens)
+        },
+        |_| vec![],
+        |(case, lens)| {
+            for (op, rc) in [
+                (OutputPath::I16, Reciprocal::Div),
+                (OutputPath::I16, Reciprocal::Clb),
+                (OutputPath::I8, Reciprocal::Div),
+                (OutputPath::I8, Reciprocal::Clb),
+            ] {
+                let got =
+                    hccs_batch_masked(&case.x, case.rows, case.cols, lens, &case.theta, op, rc);
+                for (r, &len) in lens.iter().enumerate() {
+                    let mut want = vec![0i32; len];
+                    hccs_row_into(
+                        &case.x[r * case.cols..r * case.cols + len],
+                        &case.theta,
+                        op,
+                        rc,
+                        &mut want,
+                    );
+                    if got[r * case.cols..r * case.cols + len] != want[..] {
+                        return Err(format!(
+                            "masked row {r} (len {len}) diverged from prefix row kernel \
+                             under {op:?}/{rc:?}"
+                        ));
+                    }
+                    if got[r * case.cols + len..(r + 1) * case.cols].iter().any(|&v| v != 0) {
+                        return Err(format!(
+                            "pad columns of row {r} not exactly zero under {op:?}/{rc:?}"
+                        ));
+                    }
                 }
             }
             Ok(())

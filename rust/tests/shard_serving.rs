@@ -127,8 +127,8 @@ fn build_input(tok: &Tokenizer, requests: usize) -> (String, Vec<usize>) {
             input.push('\n');
             continue;
         }
-        let (ids, _) = server::encode_request(tok, TaskKind::Sst2s, t, max_len);
-        expected.push(hot_position(&ids));
+        let enc = server::encode_request(tok, TaskKind::Sst2s, t, max_len).unwrap();
+        expected.push(hot_position(&enc.ids));
         input.push_str(line);
         input.push('\n');
     }
@@ -225,6 +225,7 @@ fn native_backend(shards: usize) -> NativeBackend {
         NativeServeConfig {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
             shards,
+            length_bands: 1,
         },
     )
     .unwrap()

@@ -40,7 +40,9 @@ import urllib.request
 import zipfile
 
 THROUGHPUT_KEY_MARKER = "per_s"  # matches *_per_s and *_per_second
-ID_KEYS = ("name", "backend", "mode", "case", "shards", "batch", "rows", "kernel", "n")
+ID_KEYS = (
+    "name", "backend", "mode", "case", "shards", "batch", "density", "rows", "kernel", "n",
+)
 
 
 def log(msg: str) -> None:
