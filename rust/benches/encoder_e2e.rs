@@ -13,12 +13,15 @@
 //! examples padded to the full task width), showing the valid-length
 //! masked path's speedup tracking the density ratio.  Ends with a
 //! machine-readable JSON document (see EXPERIMENTS.md §encoder_e2e for
-//! the schema, including the `batch_sweep` and `length_sweep` arrays).
+//! the schema, including the `batch_sweep` and `length_sweep` arrays
+//! and the whole-encoder `roofline_pct` / `host_gemm_macs_per_s`
+//! measured-vs-modeled fields tracked by `tools/bench_trend.py`).
 //! When `HCCS_BENCH_JSON` is set the document is also written to
 //! `BENCH_encoder_e2e.json`; budgets honor `HCCS_BENCH_*_MS`.
 
-use hccs::aie_sim::gemm::encoder_macro_tiles;
+use hccs::aie_sim::gemm::{encoder_gemm_cycles, encoder_gemms, encoder_macro_tiles};
 use hccs::aie_sim::trace::EncoderTrace;
+use hccs::aie_sim::{Device, DeviceKind};
 use hccs::benchkit::{bench, sink, write_json};
 use hccs::data::{TaskKind, WorkloadGen};
 use hccs::json::Value;
@@ -105,6 +108,7 @@ fn main() {
     let mut sweep: Vec<Value> = Vec::new();
     let mut scratch = EncoderScratch::default();
     let mut b1_eps = 0.0f64;
+    let mut b16_eps = 0.0f64;
     for &bs in &[1usize, 2, 4, 8, 16] {
         let mut ids = Vec::with_capacity(bs * model.cfg.seq_len);
         let mut segs = Vec::with_capacity(bs * model.cfg.seq_len);
@@ -121,6 +125,9 @@ fn main() {
         let eps = r.per_second(bs as f64);
         if bs == 1 {
             b1_eps = eps;
+        }
+        if bs == 16 {
+            b16_eps = eps;
         }
         let speedup = eps / b1_eps.max(1e-9);
         sweep_table.row(&[bs.to_string(), format!("{eps:.1}"), format!("{speedup:.2}x")]);
@@ -193,6 +200,28 @@ fn main() {
     }
     println!("{}", len_table.render());
 
+    // Host-vs-model roofline on the whole-encoder GEMM workload: what
+    // fraction of one modeled AIE-MLv2 tile's GEMM-only inference rate
+    // the measured batch-16 end-to-end rate achieves.  The host number
+    // also pays embedding/HCCS/layernorm time the model ignores, so
+    // this is a conservative lower bound on the GEMM-core gap.
+    let device = Device::new(DeviceKind::AieMlV2);
+    let macs_per_example: u64 =
+        encoder_gemms(&cfg).iter().map(|(_, s, calls)| calls * s.macs()).sum();
+    let modeled_gemm_inf_per_s =
+        device.freq_ghz * 1e9 / encoder_gemm_cycles(&device, &cfg) as f64;
+    let host_gemm_macs_per_s = b16_eps * macs_per_example as f64;
+    let roofline_pct = 100.0 * b16_eps / modeled_gemm_inf_per_s.max(1e-9);
+    println!(
+        "roofline: host batch-16 {} = {:.1} examples/s ({:.0} MMAC/s of encoder GEMM work) \
+         vs one modeled AIE-MLv2 tile at {:.1} GEMM-only inferences/s -> {:.2}% of modeled",
+        sweep_backend.name(),
+        b16_eps,
+        host_gemm_macs_per_s / 1e6,
+        modeled_gemm_inf_per_s,
+        roofline_pct
+    );
+
     let mut doc = std::collections::BTreeMap::new();
     doc.insert("bench".to_string(), Value::from("encoder_e2e"));
     doc.insert("model".to_string(), Value::from("bert-tiny"));
@@ -207,6 +236,13 @@ fn main() {
         "agreement_examples".to_string(),
         Value::from(AGREEMENT_EXAMPLES as i64),
     );
+    doc.insert("simd_path".to_string(), Value::from(hccs::simd::active().name()));
+    doc.insert("host_gemm_macs_per_s".to_string(), Value::from(host_gemm_macs_per_s));
+    doc.insert(
+        "modeled_gemm_inf_per_s".to_string(),
+        Value::from(modeled_gemm_inf_per_s),
+    );
+    doc.insert("roofline_pct".to_string(), Value::from(roofline_pct));
     doc.insert("cases".to_string(), Value::Arr(cases));
     doc.insert("batch_sweep".to_string(), Value::Arr(sweep));
     doc.insert("length_sweep".to_string(), Value::Arr(len_sweep));

@@ -4,20 +4,30 @@
 //! rows (what `NativeModel::forward_batch` does) amortizes the packed
 //! panel streaming.
 //!
+//! With the SIMD dispatch layer, every case additionally times the
+//! packed kernel on **both** dispatch paths (AVX2 vs forced-scalar,
+//! same algorithm) and reports `simd_speedup_vs_scalar_path` — the
+//! number the CI bench-smoke gate checks (≥ 1.5× on the bert-small
+//! shapes, warn < 2.5×) — plus `roofline_pct`, the measured fraction of
+//! one modeled AIE-MLv2 tile's MAC throughput on the same shape
+//! (tracked by `tools/bench_trend.py`).
+//!
 //! Prints one table row per shape with MMAC/s for both kernels and the
 //! speedup, then a machine-readable JSON document (see EXPERIMENTS.md
 //! §gemm for the schema).  When `HCCS_BENCH_JSON` is set the document
 //! is also written to `BENCH_gemm.json`; budgets honor
-//! `HCCS_BENCH_*_MS`.  Every case asserts packed == scalar before
-//! timing, so the bench doubles as an oracle smoke test.
+//! `HCCS_BENCH_*_MS`.  Every case asserts packed == scalar (and AVX2
+//! path == scalar path) before timing, so the bench doubles as an
+//! oracle smoke test.
 
 use hccs::aie_sim::gemm::{mac_utilization, GemmShape};
-use hccs::aie_sim::{Device, DeviceKind};
+use hccs::aie_sim::{roofline, Device, DeviceKind};
 use hccs::benchkit::{bench, sink, write_json};
 use hccs::json::Value;
 use hccs::linalg::{matmul_i8_ref, PackedGemm};
 use hccs::report::Table;
 use hccs::rng::Xoshiro256;
+use hccs::simd::{self, SimdPath};
 
 /// Encoder shapes: bert-tiny/-small projections, FFN halves, and a
 /// classifier-style skinny GEMM ((m, k, n) = activations (m, k) times
@@ -34,9 +44,10 @@ const SHAPES: [(&str, usize, usize, usize); 6] = [
 fn main() {
     let mut rng = Xoshiro256::new(2024);
     let device = Device::new(DeviceKind::AieMlV2);
+    let avx2 = simd::avx2_available();
     let mut table = Table::new(
         "packed GEMM vs scalar oracle (this machine)",
-        &["shape", "scalar MMAC/s", "packed MMAC/s", "speedup", "aie MAC%"],
+        &["shape", "scalar MMAC/s", "packed MMAC/s", "speedup", "simd/x", "roofline", "aie MAC%"],
     );
     let mut cases: Vec<Value> = Vec::new();
 
@@ -45,11 +56,18 @@ fn main() {
         let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
         let packed = PackedGemm::pack(&w, n, k);
         // Oracle check before timing: the bench never reports a number
-        // for a kernel that disagrees with the reference.
+        // for a kernel that disagrees with the reference — on either
+        // dispatch path.
         let (mut got, mut want) = (Vec::new(), Vec::new());
         packed.gemm_into(&x, &mut got);
         matmul_i8_ref(&x, k, &w, n, &mut want);
         assert_eq!(got, want, "{name}: packed GEMM diverged from the scalar oracle");
+        if avx2 {
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            packed.gemm_into_with_path(SimdPath::Avx2, &x, &mut a);
+            packed.gemm_into_with_path(SimdPath::Scalar, &x, &mut b);
+            assert_eq!(a, b, "{name}: AVX2 path diverged from the scalar path");
+        }
 
         let macs = (m * k * n) as f64;
         let mut out = Vec::new();
@@ -61,15 +79,35 @@ fn main() {
             packed.gemm_into(&x, &mut out);
             sink(out.len());
         });
+        // Forced-path pair: the honest SIMD speedup (same blocked
+        // algorithm, only the lane implementation differs).
+        let rpath_scalar = bench(&format!("packed/scalar-path {name}"), || {
+            packed.gemm_into_with_path(SimdPath::Scalar, &x, &mut out);
+            sink(out.len());
+        });
+        let path_scalar_mps = rpath_scalar.per_second(macs) / 1e6;
+        let simd_speedup = if avx2 {
+            let rpath_avx2 = bench(&format!("packed/avx2-path {name}"), || {
+                packed.gemm_into_with_path(SimdPath::Avx2, &x, &mut out);
+                sink(out.len());
+            });
+            rpath_avx2.per_second(macs) / 1e6 / path_scalar_mps.max(1e-9)
+        } else {
+            1.0
+        };
         let scalar_mps = rs.per_second(macs) / 1e6;
         let packed_mps = rp.per_second(macs) / 1e6;
         let speedup = packed_mps / scalar_mps.max(1e-9);
         let shape = GemmShape::new(m, k, n);
+        let modeled_mps = roofline::modeled_mmacs(&device, &shape);
+        let roofline_pct = 100.0 * packed_mps / modeled_mps.max(1e-9);
         table.row(&[
             name.to_string(),
             format!("{scalar_mps:.0}"),
             format!("{packed_mps:.0}"),
             format!("{speedup:.2}x"),
+            if avx2 { format!("{simd_speedup:.2}x") } else { "n/a".to_string() },
+            format!("{roofline_pct:.1}%"),
             format!("{:.0}%", mac_utilization(&device, &shape) * 100.0),
         ]);
         let mut case = std::collections::BTreeMap::new();
@@ -80,6 +118,11 @@ fn main() {
         case.insert("scalar_macs_per_s".to_string(), Value::from(scalar_mps * 1e6));
         case.insert("packed_macs_per_s".to_string(), Value::from(packed_mps * 1e6));
         case.insert("speedup_vs_scalar".to_string(), Value::from(speedup));
+        case.insert(
+            "simd_speedup_vs_scalar_path".to_string(),
+            Value::from(simd_speedup),
+        );
+        case.insert("roofline_pct".to_string(), Value::from(roofline_pct));
         case.insert("macro_tiles".to_string(), Value::from(shape.macro_tiles() as i64));
         cases.push(Value::Obj(case));
     }
@@ -118,11 +161,56 @@ fn main() {
     }
     println!("{}", sweep_table.render());
 
+    // Worker-pool sweep on a tall tile: the intra-op scaling of one
+    // gemm_into pass (thread counts beyond the host's cores simply
+    // converge to the core-bound rate).
+    let (pk, pn, prows) = (128usize, 128usize, 512usize);
+    let pw: Vec<i8> = (0..pn * pk).map(|_| rng.i8()).collect();
+    let ppacked = PackedGemm::pack(&pw, pn, pk);
+    let px: Vec<i8> = (0..prows * pk).map(|_| rng.i8()).collect();
+    let mut pool_sweep: Vec<Value> = Vec::new();
+    let mut pool_table = Table::new(
+        "worker-pool sweep (512x128x128, one gemm_into pass)",
+        &["threads", "MMAC/s", "vs 1 thread"],
+    );
+    let mut one_thread = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let pool = hccs::runtime::pool::WorkerPool::new(threads);
+        let mut out = Vec::new();
+        let r = hccs::runtime::pool::with_pool(&pool, || {
+            bench(&format!("pool threads={threads}"), || {
+                ppacked.gemm_into(&px, &mut out);
+                sink(out.len());
+            })
+        });
+        let mps = r.per_second((prows * pk * pn) as f64) / 1e6;
+        if threads == 1 {
+            one_thread = mps;
+        }
+        pool_table.row(&[
+            threads.to_string(),
+            format!("{mps:.0}"),
+            format!("{:.2}x", mps / one_thread.max(1e-9)),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("threads".to_string(), Value::from(threads as i64));
+        case.insert("macs_per_s".to_string(), Value::from(mps * 1e6));
+        case.insert(
+            "speedup_vs_one_thread".to_string(),
+            Value::from(mps / one_thread.max(1e-9)),
+        );
+        pool_sweep.push(Value::Obj(case));
+    }
+    println!("{}", pool_table.render());
+
     let mut doc = std::collections::BTreeMap::new();
     doc.insert("bench".to_string(), Value::from("gemm"));
     doc.insert("units".to_string(), Value::from("macs_per_second"));
+    doc.insert("avx2_available".to_string(), Value::from(avx2));
+    doc.insert("active_path".to_string(), Value::from(simd::active().name()));
     doc.insert("cases".to_string(), Value::Arr(cases));
     doc.insert("row_sweep".to_string(), Value::Arr(sweep));
+    doc.insert("pool_sweep".to_string(), Value::Arr(pool_sweep));
     let doc = Value::Obj(doc);
     println!("{}", doc.to_string_pretty());
     write_json("gemm", &doc);

@@ -23,7 +23,10 @@
 //! [`tile::TileSim`] walks a schedule iteration by iteration (a miniature
 //! discrete simulator), [`gemm`] costs the encoder's matmul workload in
 //! GEMM macro-tiles (the `aie_sim` mirror of the `linalg` packed GEMM —
-//! `hccs sim --model M` prints the per-shape table), [`scaling`] adds
+//! `hccs sim --model M` prints the per-shape table), [`roofline`] closes
+//! the loop by *measuring* the host packed GEMM on those same shapes and
+//! reporting measured-vs-modeled MMAC/s (`hccs sim --roofline`, and the
+//! `roofline_pct` bench-trajectory field), [`scaling`] adds
 //! the embarrassingly-parallel
 //! multi-tile row partitioning of paper §IV-D / Fig. 3, and
 //! [`tile::MultiTileSim`] adds the shard-parallel dispatch schedule
@@ -35,6 +38,7 @@
 pub mod device;
 pub mod gemm;
 pub mod kernels;
+pub mod roofline;
 pub mod scaling;
 pub mod schedule;
 pub mod tile;

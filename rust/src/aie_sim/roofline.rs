@@ -1,0 +1,136 @@
+//! Host-vs-model roofline: how close the *measured* packed-GEMM MMAC/s
+//! on this machine comes to the *modeled* int8 MAC throughput of an AIE
+//! tile on the same shapes.
+//!
+//! The ROADMAP's "close the gap to the modeled hardware" item needs a
+//! number, not a vibe: [`gemm_cycles`](super::gemm::gemm_cycles) says
+//! what one AIE tile *would* spend on a shape, and this module times the
+//! real [`crate::linalg::PackedGemm`] kernel on the same shape, so
+//! `hccs sim --roofline` (and `benches/gemm.rs` / `encoder_e2e.rs`, via
+//! the `roofline_pct` field in their JSON documents) report
+//!
+//! ```text
+//! roofline_pct = 100 · measured_mmacs / modeled_mmacs
+//! ```
+//!
+//! per encoder GEMM shape.  Expectations are calibrated in
+//! `EXPERIMENTS.md`: one host core with AVX2 lands in the tens of
+//! percent of one modeled AIE-MLv2 tile (32 int8 lanes × 8 MACs/lane at
+//! 1.25 GHz ≫ one AVX2 port), and the scalar fallback runs several
+//! times lower — the point is the *trajectory* of the gap, tracked by
+//! `tools/bench_trend.py`, not beating a dedicated MAC array.
+
+use super::device::Device;
+use super::gemm::{encoder_gemms, gemm_cycles, GemmShape};
+use crate::benchkit;
+use crate::linalg::PackedGemm;
+use crate::model::ModelConfig;
+use crate::rng::Xoshiro256;
+use crate::simd::{self, SimdPath};
+use std::time::Duration;
+
+/// One shape's measured-vs-modeled comparison.
+pub struct RooflinePoint {
+    pub label: &'static str,
+    pub shape: GemmShape,
+    /// Calls per inference in the encoder workload (1 for ad-hoc shapes).
+    pub calls: u64,
+    /// Host packed-GEMM throughput on this shape, in 10⁶ MAC/s.
+    pub measured_mmacs: f64,
+    /// Modeled single-AIE-tile throughput on this shape, in 10⁶ MAC/s.
+    pub modeled_mmacs: f64,
+}
+
+impl RooflinePoint {
+    /// Measured as a percentage of modeled (the bench-trajectory field).
+    pub fn roofline_pct(&self) -> f64 {
+        100.0 * self.measured_mmacs / self.modeled_mmacs.max(1e-9)
+    }
+}
+
+/// Modeled MAC throughput of one AIE tile on `shape`, in 10⁶ MAC/s:
+/// `macs · freq / cycles`.
+pub fn modeled_mmacs(device: &Device, shape: &GemmShape) -> f64 {
+    let cycles = gemm_cycles(device, shape) as f64;
+    shape.macs() as f64 * device.freq_ghz * 1e9 / cycles / 1e6
+}
+
+/// Time the packed GEMM on `shape` (seeded random operands) under
+/// `path`, returning 10⁶ MAC/s.
+pub fn measure_host_mmacs(
+    shape: &GemmShape,
+    path: SimdPath,
+    warmup: Duration,
+    measure: Duration,
+) -> f64 {
+    let mut rng = Xoshiro256::new(0x0f11e);
+    let x: Vec<i8> = (0..shape.m * shape.k).map(|_| rng.i8()).collect();
+    let w: Vec<i8> = (0..shape.n * shape.k).map(|_| rng.i8()).collect();
+    let packed = PackedGemm::pack(&w, shape.n, shape.k);
+    let mut out = Vec::new();
+    let r = benchkit::bench_with("roofline", warmup, measure, &mut || {
+        packed.gemm_into_with_path(path, benchkit::sink(&x), &mut out);
+        benchkit::sink(&out);
+    });
+    r.per_second(shape.macs() as f64) / 1e6
+}
+
+/// Measure every encoder GEMM shape of `cfg` against the device model,
+/// on the currently [`simd::active`] dispatch path.
+pub fn host_roofline(
+    device: &Device,
+    cfg: &ModelConfig,
+    warmup: Duration,
+    measure: Duration,
+) -> Vec<RooflinePoint> {
+    let path = simd::active();
+    encoder_gemms(cfg)
+        .into_iter()
+        .map(|(label, shape, calls)| {
+            let measured = measure_host_mmacs(&shape, path, warmup, measure);
+            let modeled = modeled_mmacs(device, &shape);
+            RooflinePoint { label, shape, calls, measured_mmacs: measured, modeled_mmacs: modeled }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aie_sim::DeviceKind;
+
+    #[test]
+    fn modeled_mmacs_is_positive_and_below_peak() {
+        let device = Device::new(DeviceKind::AieMlV2);
+        let shape = GemmShape { m: 128, k: 128, n: 128 };
+        let mm = modeled_mmacs(&device, &shape);
+        assert!(mm > 0.0);
+        // Cannot exceed the device's peak MAC rate.
+        let peak = device.peak_int8_macs as f64 * device.freq_ghz * 1e9 / 1e6;
+        assert!(mm <= peak, "modeled {mm} MMAC/s above peak {peak}");
+    }
+
+    #[test]
+    fn measure_host_reports_finite_throughput() {
+        let shape = GemmShape { m: 16, k: 32, n: 24 };
+        let mm = measure_host_mmacs(
+            &shape,
+            SimdPath::Scalar,
+            Duration::from_millis(2),
+            Duration::from_millis(10),
+        );
+        assert!(mm.is_finite() && mm > 0.0);
+    }
+
+    #[test]
+    fn roofline_pct_guards_division() {
+        let p = RooflinePoint {
+            label: "x",
+            shape: GemmShape { m: 1, k: 1, n: 1 },
+            calls: 1,
+            measured_mmacs: 50.0,
+            modeled_mmacs: 100.0,
+        };
+        assert!((p.roofline_pct() - 50.0).abs() < 1e-9);
+    }
+}

@@ -13,25 +13,35 @@
 //! through a primed pipeline):
 //!
 //! 1. per-row max via chunked, 8-wide unrolled reductions;
-//! 2. fused distance/clamp/affine-score/sum in 8-wide i32 lanes (manual
-//!    unrolling so LLVM autovectorizes the int8 MAC structure to
-//!    SSE/NEON);
+//! 2. fused distance/clamp/affine-score/sum in 8-wide i32 lanes;
 //! 3. a vectorized stage-5 normalization that first computes *all* row
 //!    reciprocals in one tight loop (pipelining the scalar divides that
 //!    the row-at-a-time path serializes) and then scales the tile.
 //!
+//! Both engines dispatch through [`crate::simd`]: the scalar loops above
+//! are the reference path, and an explicit AVX2 path runs stage 1 as
+//! 32-lane `max_epi8`, stages 2–4 as 16-lane i16 arithmetic
+//! (`min_epi16`/`mullo_epi16`/`madd_epi16`) and stage 5 as 8-lane i32
+//! multiply/shift/min.  The i16 lanes are exact because feasibility
+//! (Eq. 11) bounds every intermediate: raw δ = m−x ≤ 255, S·δ ≤ B−1 ≤
+//! 32766, sᵢ ∈ [1, 32767], Z ≤ n·B ≤ 32767, and the stage-5 products
+//! are ≤ 255·2¹⁵ (i8 paths, since sᵢ ≤ Z) or ≤ 32767² (i16 paths) —
+//! all exact in i32 lanes.
+//!
 //! **Bit-exactness:** every row of [`hccs_batch_into`] is the same
-//! integer computation, in the same per-element order, as
-//! `hccs_row_into`; only loop structure differs.  (The stage-4 sum uses
-//! eight lane accumulators, which is exact because i32 addition is
-//! associative modulo 2³² and under feasible [`HccsParams`] cannot
-//! overflow at all.)  The equivalence is property-tested across all four
-//! `OutputPath` × `Reciprocal` modes in `tests/proptests.rs` and unit
-//! tested below, so the paper's golden vectors hold for both entry
-//! points.
+//! integer computation as `hccs_row_into` on **both** dispatch paths;
+//! only loop/lane structure differs.  (The stage-4 sum uses lane
+//! accumulators, which is exact because i32 addition without overflow is
+//! associative and commutative, and under feasible [`HccsParams`] it
+//! cannot overflow at all.)  The equivalence is property-tested across
+//! all four `OutputPath` × `Reciprocal` modes in `tests/proptests.rs`,
+//! and the AVX2 path is pinned to the scalar path cell-for-cell in
+//! `tests/differential.rs`, so the paper's golden vectors hold for every
+//! entry point × path combination.
 
 use super::kernel::{floor_log2, OutputPath, Reciprocal};
 use super::params::{HccsParams, INV_SHIFT, OUT_SHIFT, T_I16, T_I8};
+use crate::simd::{self, SimdPath};
 
 /// Stage 1: row max with eight independent accumulators (breaks the
 /// serial max dependency chain so the reduction vectorizes).
@@ -83,6 +93,60 @@ fn fused_scores(row: &[i8], out: &mut [i32], m: i32, p: &HccsParams) -> i32 {
     z
 }
 
+// --- per-stage dispatch helpers -------------------------------------------
+
+#[inline]
+fn row_max_path(path: SimdPath, row: &[i8]) -> i32 {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 only reaches the engines through simd::require.
+        SimdPath::Avx2 => unsafe { avx2::row_max(row) },
+        _ => row_max_unrolled(row),
+    }
+}
+
+#[inline]
+fn fused_scores_path(path: SimdPath, row: &[i8], out: &mut [i32], m: i32, p: &HccsParams) -> i32 {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as row_max_path.
+        SimdPath::Avx2 => unsafe { avx2::fused_scores(row, out, m, p.b, p.s, p.dmax) },
+        _ => fused_scores(row, out, m, p),
+    }
+}
+
+/// Stage 5, i16-div flavor: `o *= rho`.
+#[inline]
+fn scale_mul_path(path: SimdPath, or: &mut [i32], rho: i32) {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as row_max_path.
+        SimdPath::Avx2 => unsafe { avx2::scale_mul(or, rho) },
+        _ => {
+            for o in or {
+                *o *= rho;
+            }
+        }
+    }
+}
+
+/// Stage 5, shifted flavors: `o = ((o * mul) >> shift).min(cap)` —
+/// covers i16-clb (`T_I16`, `k`, `T_I16`) and both i8 modes
+/// (`rho8`, `INV_SHIFT + OUT_SHIFT`, `T_I8`).
+#[inline]
+fn scale_mulshift_min_path(path: SimdPath, or: &mut [i32], mul: i32, shift: u32, cap: i32) {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as row_max_path.
+        SimdPath::Avx2 => unsafe { avx2::scale_mulshift_min(or, mul, shift, cap) },
+        _ => {
+            for o in or {
+                *o = ((*o * mul) >> shift).min(cap);
+            }
+        }
+    }
+}
+
 /// Row-sum scratch held on the stack for the common tile heights
 /// (attention matrices and batcher flushes are well under 64 rows), so
 /// the kernel stays allocation-free on the hot paths; taller tiles
@@ -95,7 +159,26 @@ const Z_INLINE_ROWS: usize = 64;
 /// Bit-exact with calling [`super::kernel::hccs_row_into`] on each row;
 /// see the module docs for why the batched structure is faster.
 /// Allocation-free for tiles up to `Z_INLINE_ROWS` (64) rows.
+/// Dispatches on [`simd::active`].
 pub fn hccs_batch_into(
+    x: &[i8],
+    rows: usize,
+    cols: usize,
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    out: &mut [i32],
+) {
+    hccs_batch_into_with_path(simd::active(), x, rows, cols, p, out_path, recip, out);
+}
+
+/// [`hccs_batch_into`] with an explicit dispatch path (the differential
+/// harness drives both).  The AVX2 path's i16 lanes are exact only
+/// under **feasible** θ — the same precondition the scalar engine's
+/// stage-4 no-overflow argument already requires.
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_batch_into_with_path(
+    path: SimdPath,
     x: &[i8],
     rows: usize,
     cols: usize,
@@ -108,6 +191,7 @@ pub fn hccs_batch_into(
     assert!(cols > 0, "empty row");
     assert_eq!(x.len(), rows * cols, "x is not a rows x cols tile");
     assert_eq!(out.len(), x.len(), "output length mismatch");
+    let path = simd::require(path);
 
     // Stages 1-4 over the whole tile; z holds one stage-4 sum per row.
     let mut z_inline = [0i32; Z_INLINE_ROWS];
@@ -123,8 +207,8 @@ pub fn hccs_batch_into(
         .zip(out.chunks_exact_mut(cols))
         .zip(z.iter_mut())
     {
-        let m = row_max_unrolled(xr);
-        *zr = fused_scores(xr, or, m, p);
+        let m = row_max_path(path, xr);
+        *zr = fused_scores_path(path, xr, or, m, p);
         debug_assert!(*zr > 0);
     }
 
@@ -138,17 +222,13 @@ pub fn hccs_batch_into(
                 *zr = T_I16 / *zr;
             }
             for (or, &rho) in out.chunks_exact_mut(cols).zip(z.iter()) {
-                for o in or {
-                    *o *= rho;
-                }
+                scale_mul_path(path, or, rho);
             }
         }
         (OutputPath::I16, Reciprocal::Clb) => {
             for (or, &zr) in out.chunks_exact_mut(cols).zip(z.iter()) {
                 let k = floor_log2(zr);
-                for o in or {
-                    *o = ((*o * T_I16) >> k).min(T_I16);
-                }
+                scale_mulshift_min_path(path, or, T_I16, k, T_I16);
             }
         }
         (OutputPath::I8, Reciprocal::Div) => {
@@ -156,17 +236,13 @@ pub fn hccs_batch_into(
                 *zr = (T_I8 << INV_SHIFT) / *zr;
             }
             for (or, &rho8) in out.chunks_exact_mut(cols).zip(z.iter()) {
-                for o in or {
-                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
-                }
+                scale_mulshift_min_path(path, or, rho8, INV_SHIFT + OUT_SHIFT, T_I8);
             }
         }
         (OutputPath::I8, Reciprocal::Clb) => {
             for (or, &zr) in out.chunks_exact_mut(cols).zip(z.iter()) {
                 let rho8 = (T_I8 << INV_SHIFT) >> floor_log2(zr);
-                for o in or {
-                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
-                }
+                scale_mulshift_min_path(path, or, rho8, INV_SHIFT + OUT_SHIFT, T_I8);
             }
         }
     }
@@ -204,6 +280,22 @@ pub fn hccs_batch_masked_into(
     recip: Reciprocal,
     out: &mut [i32],
 ) {
+    hccs_batch_masked_into_with_path(simd::active(), x, rows, cols, lens, p, out_path, recip, out);
+}
+
+/// [`hccs_batch_masked_into`] with an explicit dispatch path.
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_batch_masked_into_with_path(
+    path: SimdPath,
+    x: &[i8],
+    rows: usize,
+    cols: usize,
+    lens: &[usize],
+    p: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    out: &mut [i32],
+) {
     assert!(rows > 0, "empty tile (rows = 0)");
     assert!(cols > 0, "empty row");
     assert_eq!(x.len(), rows * cols, "x is not a rows x cols tile");
@@ -213,6 +305,7 @@ pub fn hccs_batch_masked_into(
         lens.iter().all(|&l| (1..=cols).contains(&l)),
         "active lengths must be in 1..=cols"
     );
+    let path = simd::require(path);
 
     // Stages 1-4 over each row's active prefix; pad tail zeroed here so
     // stage 5 can scale whole prefixes without touching pads again.
@@ -230,8 +323,8 @@ pub fn hccs_batch_masked_into(
         .zip(z.iter_mut())
         .zip(lens)
     {
-        let m = row_max_unrolled(&xr[..len]);
-        *zr = fused_scores(&xr[..len], &mut or[..len], m, p);
+        let m = row_max_path(path, &xr[..len]);
+        *zr = fused_scores_path(path, &xr[..len], &mut or[..len], m, p);
         or[len..].fill(0);
         debug_assert!(*zr > 0);
     }
@@ -244,17 +337,13 @@ pub fn hccs_batch_masked_into(
                 *zr = T_I16 / *zr;
             }
             for ((or, &rho), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
-                for o in &mut or[..len] {
-                    *o *= rho;
-                }
+                scale_mul_path(path, &mut or[..len], rho);
             }
         }
         (OutputPath::I16, Reciprocal::Clb) => {
             for ((or, &zr), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
                 let k = floor_log2(zr);
-                for o in &mut or[..len] {
-                    *o = ((*o * T_I16) >> k).min(T_I16);
-                }
+                scale_mulshift_min_path(path, &mut or[..len], T_I16, k, T_I16);
             }
         }
         (OutputPath::I8, Reciprocal::Div) => {
@@ -262,17 +351,13 @@ pub fn hccs_batch_masked_into(
                 *zr = (T_I8 << INV_SHIFT) / *zr;
             }
             for ((or, &rho8), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
-                for o in &mut or[..len] {
-                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
-                }
+                scale_mulshift_min_path(path, &mut or[..len], rho8, INV_SHIFT + OUT_SHIFT, T_I8);
             }
         }
         (OutputPath::I8, Reciprocal::Clb) => {
             for ((or, &zr), &len) in out.chunks_exact_mut(cols).zip(z.iter()).zip(lens) {
                 let rho8 = (T_I8 << INV_SHIFT) >> floor_log2(zr);
-                for o in &mut or[..len] {
-                    *o = ((*o * rho8) >> (INV_SHIFT + OUT_SHIFT)).min(T_I8);
-                }
+                scale_mulshift_min_path(path, &mut or[..len], rho8, INV_SHIFT + OUT_SHIFT, T_I8);
             }
         }
     }
@@ -306,6 +391,146 @@ pub fn hccs_batch(
     let mut out = vec![0i32; x.len()];
     hccs_batch_into(x, rows, cols, p, out_path, recip, &mut out);
     out
+}
+
+/// Explicit AVX2 implementations of the five stages.  Exactness bounds
+/// (all consequences of Eq. 11 feasibility, see the module docs):
+/// raw δ ≤ 255 so `min(dmax, 255)` clamps identically in i16;
+/// `S·δ ≤ B−1 ≤ 32766` makes `mullo_epi16` exact; `sᵢ ∈ [1, 32767]`
+/// fits i16; Z ≤ 32767 so `madd_epi16` lane sums cannot overflow; the
+/// stage-5 products fit i32 because `sᵢ ≤ Z` bounds `sᵢ·ρ₈ ≤ 255·2¹⁵`
+/// and `sᵢ·T_I16 ≤ 32767²`.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let s = _mm_hadd_epi32(s, s);
+        let s = _mm_hadd_epi32(s, s);
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Stage 1: 32-lane `max_epi8`.  The horizontal reduce spills to a
+    /// stack array instead of shift-based shuffles: byte shifts inject
+    /// zero lanes, which would corrupt the max of an all-negative row.
+    ///
+    /// SAFETY: requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_max(row: &[i8]) -> i32 {
+        let mut chunks = row.chunks_exact(32);
+        let mut acc = _mm256_set1_epi8(i8::MIN);
+        for c in chunks.by_ref() {
+            acc = _mm256_max_epi8(acc, _mm256_loadu_si256(c.as_ptr() as *const __m256i));
+        }
+        let mut tmp = [i8::MIN; 32];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+        let mut m = i8::MIN;
+        for v in tmp {
+            m = m.max(v);
+        }
+        for &v in chunks.remainder() {
+            m = m.max(v);
+        }
+        m as i32
+    }
+
+    /// Stages 2-4 fused, 16 int8 lanes per step: δ/clamp/affine in i16,
+    /// widened stores to the i32 score tile, Z via `madd_epi16` against
+    /// ones.
+    ///
+    /// SAFETY: requires AVX2; `row.len() == out.len()`; θ feasible.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fused_scores(
+        row: &[i8],
+        out: &mut [i32],
+        m: i32,
+        b: i32,
+        s: i32,
+        dmax: i32,
+    ) -> i32 {
+        debug_assert_eq!(row.len(), out.len());
+        let m16 = _mm256_set1_epi16(m as i16);
+        let b16 = _mm256_set1_epi16(b as i16);
+        let s16 = _mm256_set1_epi16(s as i16);
+        // Raw δ = m − x ≤ 255, so clamping against min(dmax, 255) is
+        // identical to clamping against dmax while staying in i16 range.
+        let d16 = _mm256_set1_epi16(dmax.min(255) as i16);
+        let ones = _mm256_set1_epi16(1);
+        let mut zacc = _mm256_setzero_si256();
+        let n = row.len();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let x16 =
+                _mm256_cvtepi8_epi16(_mm_loadu_si128(row.as_ptr().add(i) as *const __m128i));
+            let delta = _mm256_min_epi16(_mm256_sub_epi16(m16, x16), d16); // stage 2
+            let si = _mm256_sub_epi16(b16, _mm256_mullo_epi16(s16, delta)); // stage 3
+            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(si));
+            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(si));
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, lo);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i + 8) as *mut __m256i, hi);
+            zacc = _mm256_add_epi32(zacc, _mm256_madd_epi16(si, ones)); // stage 4
+            i += 16;
+        }
+        let mut z = hsum_epi32(zacc);
+        while i < n {
+            let delta = (m - row[i] as i32).min(dmax);
+            let si = b - s * delta;
+            debug_assert!(si >= 0, "infeasible params produced negative score");
+            out[i] = si;
+            z += si;
+            i += 1;
+        }
+        z
+    }
+
+    /// Stage 5, i16-div: `o *= rho` (8 i32 lanes; products ≤ 32767²).
+    ///
+    /// SAFETY: requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_mul(or: &mut [i32], rho: i32) {
+        let rv = _mm256_set1_epi32(rho);
+        let n = or.len();
+        let mut t = 0usize;
+        while t + 8 <= n {
+            let v = _mm256_loadu_si256(or.as_ptr().add(t) as *const __m256i);
+            _mm256_storeu_si256(
+                or.as_mut_ptr().add(t) as *mut __m256i,
+                _mm256_mullo_epi32(v, rv),
+            );
+            t += 8;
+        }
+        while t < n {
+            or[t] *= rho;
+            t += 1;
+        }
+    }
+
+    /// Stage 5, shifted flavors: `o = ((o·mul) >> shift).min(cap)`.
+    /// `sra_epi32` is an arithmetic shift, matching Rust `>>` on i32
+    /// (all inputs here are non-negative anyway).
+    ///
+    /// SAFETY: requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_mulshift_min(or: &mut [i32], mul: i32, shift: u32, cap: i32) {
+        let mv = _mm256_set1_epi32(mul);
+        let cv = _mm256_set1_epi32(cap);
+        let sh = _mm_cvtsi32_si128(shift as i32);
+        let n = or.len();
+        let mut t = 0usize;
+        while t + 8 <= n {
+            let v = _mm256_loadu_si256(or.as_ptr().add(t) as *const __m256i);
+            let v = _mm256_sra_epi32(_mm256_mullo_epi32(v, mv), sh);
+            let v = _mm256_min_epi32(v, cv);
+            _mm256_storeu_si256(or.as_mut_ptr().add(t) as *mut __m256i, v);
+            t += 8;
+        }
+        while t < n {
+            or[t] = ((or[t] * mul) >> shift).min(cap);
+            t += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -356,6 +581,31 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_paths_agree_all_modes() {
+        if !simd::avx2_available() {
+            return; // AVX2 leg exercised on x86-64 CI
+        }
+        let mut rng = Xoshiro256::new(41);
+        // Widths straddling the 16-lane step (tail-only, one step + tail,
+        // exact multiples) and an all-negative row to stress row_max.
+        for (rows, cols) in [(1usize, 5usize), (3, 16), (4, 23), (2, 200), (65, 33)] {
+            let (lo, hi) = HccsParams::feasible_b_band(1, 16, cols).expect("band");
+            let p = HccsParams::checked((lo + hi) / 2, 1, 16, cols).unwrap();
+            let mut x: Vec<i8> = (0..rows * cols).map(|_| rng.i8()).collect();
+            for v in x.iter_mut().take(cols) {
+                *v = -(v.unsigned_abs() as i8).max(1); // row 0 all-negative
+            }
+            for (op, rc) in MODES {
+                let mut a = vec![0i32; x.len()];
+                let mut b = vec![0i32; x.len()];
+                hccs_batch_into_with_path(SimdPath::Avx2, &x, rows, cols, &p, op, rc, &mut a);
+                hccs_batch_into_with_path(SimdPath::Scalar, &x, rows, cols, &p, op, rc, &mut b);
+                assert_eq!(a, b, "rows={rows} cols={cols} {op:?}/{rc:?}");
+            }
+        }
+    }
+
+    #[test]
     fn single_row_matches_row_kernel_exactly() {
         let mut rng = Xoshiro256::new(9);
         let n = 64;
@@ -375,7 +625,23 @@ mod tests {
             let x: Vec<i8> = (0..n).map(|_| rng.i8()).collect();
             let naive = *x.iter().max().unwrap() as i32;
             assert_eq!(row_max_unrolled(&x), naive, "n={n}");
+            if simd::avx2_available() {
+                // SAFETY: availability just checked.
+                assert_eq!(unsafe { avx2::row_max(&x) }, naive, "avx2 n={n}");
+            }
         }
+    }
+
+    #[test]
+    fn avx2_row_max_handles_all_negative_rows() {
+        if !simd::avx2_available() {
+            return;
+        }
+        // 33 elements: one full 32-lane chunk plus remainder, all < 0.
+        let x: Vec<i8> = (0..33).map(|i| -1 - (i % 100) as i8).collect();
+        let naive = *x.iter().max().unwrap() as i32;
+        // SAFETY: availability just checked.
+        assert_eq!(unsafe { avx2::row_max(&x) }, naive);
     }
 
     #[test]
@@ -401,6 +667,46 @@ mod tests {
                     "pad columns of row {r} not exactly zero under {op:?}/{rc:?}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn masked_paths_agree_all_modes() {
+        if !simd::avx2_available() {
+            return;
+        }
+        let mut rng = Xoshiro256::new(43);
+        let (rows, cols) = (6usize, 40usize);
+        let (lo, hi) = HccsParams::feasible_b_band(2, 32, cols).expect("band");
+        let p = HccsParams::checked((lo + hi) / 2, 2, 32, cols).unwrap();
+        let x: Vec<i8> = (0..rows * cols).map(|_| rng.i8()).collect();
+        let lens = [1usize, 15, 16, 17, 40, 7];
+        for (op, rc) in MODES {
+            let mut a = vec![1i32; x.len()];
+            let mut b = vec![2i32; x.len()];
+            hccs_batch_masked_into_with_path(
+                SimdPath::Avx2,
+                &x,
+                rows,
+                cols,
+                &lens,
+                &p,
+                op,
+                rc,
+                &mut a,
+            );
+            hccs_batch_masked_into_with_path(
+                SimdPath::Scalar,
+                &x,
+                rows,
+                cols,
+                &lens,
+                &p,
+                op,
+                rc,
+                &mut b,
+            );
+            assert_eq!(a, b, "{op:?}/{rc:?}");
         }
     }
 

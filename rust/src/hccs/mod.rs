@@ -19,6 +19,9 @@ pub mod kernel;
 pub mod params;
 pub mod stats;
 
-pub use batch::{hccs_batch, hccs_batch_into, hccs_batch_masked, hccs_batch_masked_into};
+pub use batch::{
+    hccs_batch, hccs_batch_into, hccs_batch_into_with_path, hccs_batch_masked,
+    hccs_batch_masked_into, hccs_batch_masked_into_with_path,
+};
 pub use kernel::{hccs_row, hccs_row_into, hccs_rows, hccs_rows_masked, OutputPath, Reciprocal};
 pub use params::{HccsParams, ParamError, T_I16, T_I8};

@@ -44,8 +44,11 @@
 //! [`linalg`] (packed int8 GEMM core — every MAC loop in the stack),
 //! [`model`] (native integer encoder — the artifact-free full-model
 //! path with pluggable HCCS/f32 softmax backends),
-//! [`aie_sim`] (AIE cycle model), [`coordinator`] (serving engines),
-//! [`runtime`] (artifact loading / PJRT), [`server`] (text protocol),
+//! [`simd`] (runtime AVX2/scalar kernel dispatch — every hot kernel
+//! ships both paths, bit-exact), [`aie_sim`] (AIE cycle model),
+//! [`coordinator`] (serving engines), [`runtime`] (artifact loading /
+//! PJRT, plus the [`runtime::pool`] worker pool that spans one GEMM
+//! pass across cores), [`server`] (text protocol),
 //! [`data`] / [`tokenizer`] (workloads), [`experiments`] / [`report`] /
 //! [`benchkit`] / [`metrics`] (harnesses), [`error`] / [`json`] /
 //! [`rng`] / [`proptest_lite`] / [`cli`] / [`xla_stub`] (offline
@@ -68,6 +71,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod server;
+pub mod simd;
 pub mod tokenizer;
 pub mod xla_stub;
 

@@ -1,21 +1,35 @@
 //! The int8 GEMM kernels (see the module docs in [`super`]).
 //!
-//! Bit-exactness contract: every output cell of every kernel here is
-//! the i32 sum `Σ_k a[k]·b[k]` accumulated in **ascending k order** in
-//! a single i32 accumulator — exactly what [`dot_i8`] computes — so the
-//! blocked kernels, the scalar reference, and the old per-site loops
-//! all agree bit for bit (i32 addition of in-range products cannot
-//! overflow under the §IV-A shape limits enforced by
-//! [`crate::model::ModelConfig::validate`]).
+//! Bit-exactness contract (revised for SIMD dispatch): every output
+//! cell of every kernel here is the i32 sum `Σ_k a[k]·b[k]` of int8
+//! products.  Under the §IV-A shape limits enforced by
+//! [`crate::model::ModelConfig::validate`] no partial sum can overflow
+//! i32 — and i32 addition without overflow is exactly associative and
+//! commutative, so **any accumulation order** (the ascending-k scalar
+//! loop, `NR`-lane register blocking, AVX2 `_mm256_madd_epi16` pairwise
+//! reduction, horizontal sums) yields the same bits.  The scalar loop
+//! of [`dot_i8`] remains the canonical definition; the AVX2 path is
+//! pinned to it cell-for-cell by `tests/differential.rs`.
+//!
+//! The AVX2 kernels sign-extend int8 lanes to i16
+//! (`_mm256_cvtepi8_epi16`) and reduce pairs with `_mm256_madd_epi16`
+//! — NOT `_mm256_maddubs_epi16`, whose u8×i8 i16 saturation would be
+//! inexact.  `madd_epi16` saturates only when both products in a pair
+//! are `(-32768)²`, impossible for i8-range inputs, so every lane is
+//! exact.
+
+use crate::runtime::pool;
+use crate::simd::{self, SimdPath};
 
 /// Output units per packed panel (the register-block width of the
-/// weights-stationary kernel; 8 i32 accumulator lanes vectorize to one
-/// or two SIMD registers on every target we care about).
+/// weights-stationary kernel; 8 i32 accumulator lanes fill exactly one
+/// AVX2 register, or two SSE2 registers on the scalar fallback).
 pub const NR: usize = 8;
 
 /// Activation rows per cache block: a panel (`d_in · NR` int8, ≤ 2 KiB
 /// at the repo's widest `d_in = 256`) stays L1-resident while `MC` rows
-/// stream through it.
+/// stream through it.  `MC`-row blocks are also the unit of multi-core
+/// work distribution ([`crate::runtime::pool::run_blocks`]).
 pub const MC: usize = 64;
 
 /// int8 MAC dot product (i32 accumulation, ascending k) — the canonical
@@ -60,7 +74,8 @@ pub fn matmul_i8_ref(x: &[i8], d_in: usize, w: &[i8], d_out: usize, out: &mut Ve
 /// so the inner loop reads one contiguous `NR`-wide stripe per k and
 /// broadcasts one activation against it.  The last panel is zero-padded
 /// to `NR` (an all-zero weight column contributes nothing, so padding
-/// never changes results).
+/// never changes results).  Two consecutive k-stripes are 16 contiguous
+/// bytes — exactly one `_mm_loadu_si128` for the AVX2 madd pair.
 pub struct PackedGemm {
     /// `ceil(d_out / NR)` panels of `d_in · NR` int8 each.
     packed: Vec<i8>,
@@ -102,37 +117,78 @@ impl PackedGemm {
     /// Blocked GEMM: `x` is row-major `(rows, d_in)`, `out` becomes
     /// `(rows, d_out)` with `out[r][o] = Σ_k x[r][k]·w[o][k]`.
     ///
-    /// Loop nest (row block → panel → row → k): the packed panel stays
-    /// L1-resident for a whole [`MC`]-row block, each activation row is
-    /// read once per panel, and the inner k-loop issues `NR`
-    /// independent broadcast-MACs per element.  Bit-exact with
-    /// [`matmul_i8_ref`] (same per-cell accumulation order).
+    /// Dispatches on [`simd::active`] and spans the current worker pool
+    /// (one [`MC`]-row block per work item) — see
+    /// [`Self::gemm_into_with_path`].
     pub fn gemm_into(&self, x: &[i8], out: &mut Vec<i32>) {
+        self.gemm_into_with_path(simd::active(), x, out);
+    }
+
+    /// [`Self::gemm_into`] with an explicit dispatch path (the
+    /// differential harness drives both).
+    ///
+    /// Multi-core dataflow: rows are cut into `MC`-row blocks and
+    /// claimed dynamically by the active worker pool
+    /// ([`pool::run_blocks`]).  Each block writes a disjoint
+    /// `(rend-rb) · d_out` output region, so results are independent of
+    /// claim order — thread-count invariance is structural, not
+    /// scheduling luck.
+    pub fn gemm_into_with_path(&self, path: SimdPath, x: &[i8], out: &mut Vec<i32>) {
         assert!(x.len() % self.d_in == 0, "x is not a whole number of d_in rows");
+        let path = simd::require(path);
         let rows = x.len() / self.d_in;
         out.resize(rows * self.d_out, 0);
-        let d_in = self.d_in;
-        let d_out = self.d_out;
-        let mut rb = 0usize;
-        while rb < rows {
+        if rows == 0 {
+            return;
+        }
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        let nblocks = rows.div_ceil(MC);
+        struct SyncPtr(*mut i32);
+        unsafe impl Send for SyncPtr {}
+        unsafe impl Sync for SyncPtr {}
+        let outp = SyncPtr(out.as_mut_ptr());
+        pool::run_blocks(nblocks, &|blk| {
+            let rb = blk * MC;
             let rend = (rb + MC).min(rows);
-            for (p, panel) in self.packed.chunks_exact(d_in * NR).enumerate() {
-                let o0 = p * NR;
-                let take = NR.min(d_out - o0);
-                for r in rb..rend {
-                    let xrow = &x[r * d_in..(r + 1) * d_in];
-                    let mut acc = [0i32; NR];
-                    for (k, &xv) in xrow.iter().enumerate() {
-                        let stripe = &panel[k * NR..(k + 1) * NR];
-                        let xv = i32::from(xv);
-                        for (a, &wv) in acc.iter_mut().zip(stripe) {
-                            *a += xv * i32::from(wv);
+            // SAFETY: block `blk` exclusively owns out rows rb..rend;
+            // the regions of distinct blocks are disjoint and `out` is
+            // not resized while the pool runs (caller blocks in
+            // run_blocks until every block completes).
+            let ob = unsafe {
+                std::slice::from_raw_parts_mut(outp.0.add(rb * d_out), (rend - rb) * d_out)
+            };
+            self.gemm_block(path, &x[rb * d_in..rend * d_in], ob);
+        });
+    }
+
+    /// One ≤`MC`-row block: panel loop → row loop → k loop.  `out` is
+    /// exactly `(x.len()/d_in) · d_out`.
+    fn gemm_block(&self, path: SimdPath, x: &[i8], out: &mut [i32]) {
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        match path {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `path == Avx2` only passes `simd::require` when
+            // runtime detection confirmed AVX2 support.
+            SimdPath::Avx2 => unsafe { avx2::gemm_block(&self.packed, d_in, d_out, x, out) },
+            _ => {
+                let rows = x.len() / d_in;
+                for (p, panel) in self.packed.chunks_exact(d_in * NR).enumerate() {
+                    let o0 = p * NR;
+                    let take = NR.min(d_out - o0);
+                    for r in 0..rows {
+                        let xrow = &x[r * d_in..(r + 1) * d_in];
+                        let mut acc = [0i32; NR];
+                        for (k, &xv) in xrow.iter().enumerate() {
+                            let stripe = &panel[k * NR..(k + 1) * NR];
+                            let xv = i32::from(xv);
+                            for (a, &wv) in acc.iter_mut().zip(stripe) {
+                                *a += xv * i32::from(wv);
+                            }
                         }
+                        out[r * d_out + o0..r * d_out + o0 + take].copy_from_slice(&acc[..take]);
                     }
-                    out[r * d_out + o0..r * d_out + o0 + take].copy_from_slice(&acc[..take]);
                 }
             }
-            rb = rend;
         }
     }
 }
@@ -143,7 +199,7 @@ impl PackedGemm {
 /// This is the QK^T stage: both sides are activations, so there is no
 /// pack step — instead four B rows are register-blocked per pass, so
 /// each A row is loaded once per four output columns.  Bit-exact with
-/// `dot_i8` per cell.
+/// `dot_i8` per cell on both dispatch paths.
 pub fn gemm_nt_into(a: &[i8], b: &[i8], m: usize, n: usize, kd: usize, out: &mut [i32]) {
     gemm_nt_bounded_into(a, b, m, n, n, kd, out);
 }
@@ -164,11 +220,35 @@ pub fn gemm_nt_bounded_into(
     kd: usize,
     out: &mut [i32],
 ) {
+    gemm_nt_bounded_into_with_path(simd::active(), a, b, m, n, n_active, kd, out);
+}
+
+/// [`gemm_nt_bounded_into`] with an explicit dispatch path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_bounded_into_with_path(
+    path: SimdPath,
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    n_active: usize,
+    kd: usize,
+    out: &mut [i32],
+) {
     assert!(m > 0 && n > 0 && kd > 0, "empty GEMM operand");
     assert!((1..=n).contains(&n_active), "n_active must be in 1..=n");
     assert_eq!(a.len(), m * kd, "a is not (m, kd)");
     assert_eq!(b.len(), n_active * kd, "b is not (n_active, kd)");
     assert_eq!(out.len(), m * n, "out is not (m, n)");
+    match simd::require(path) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: require() verified AVX2 is available.
+        SimdPath::Avx2 => unsafe { avx2::gemm_nt_bounded(a, b, m, n, n_active, kd, out) },
+        _ => nt_bounded_scalar(a, b, n, n_active, kd, out),
+    }
+}
+
+fn nt_bounded_scalar(a: &[i8], b: &[i8], n: usize, n_active: usize, kd: usize, out: &mut [i32]) {
     for (arow, orow) in a.chunks_exact(kd).zip(out.chunks_exact_mut(n)) {
         orow[n_active..].fill(0);
         let orow = &mut orow[..n_active];
@@ -202,9 +282,8 @@ pub fn gemm_nt_bounded_into(
 /// `(c, dv)` int8, `out` (len `m·dv`) gets `out[i][:] = Σ_j p[i][j]·v[j][:]`.
 ///
 /// Rows with `p̂ = 0` (clamped HCCS tails, frequent on the i8 path) are
-/// skipped — the sparsity shortcut the old inline attention loop had.
-/// Accumulation order per output cell is ascending j, matching that
-/// loop bit for bit.
+/// skipped — the sparsity shortcut the old inline attention loop had
+/// (preserved on both dispatch paths).
 pub fn gemm_pv_into(p: &[i32], v: &[i8], m: usize, c: usize, dv: usize, out: &mut [i32]) {
     gemm_pv_bounded_into(p, v, m, c, c, dv, out);
 }
@@ -213,9 +292,23 @@ pub fn gemm_pv_into(p: &[i32], v: &[i8], m: usize, c: usize, dv: usize, out: &mu
 /// `(m, c)`-strided p̂ row enter the mix (`v` holds exactly the
 /// `c_active` active value rows — the valid keys), so pad-key MACs are
 /// skipped structurally rather than relying on the `p̂ = 0` shortcut to
-/// scan past them.  `c_active == c` is exactly [`gemm_pv_into`];
-/// accumulation order per output cell stays ascending j.
+/// scan past them.  `c_active == c` is exactly [`gemm_pv_into`].
 pub fn gemm_pv_bounded_into(
+    p: &[i32],
+    v: &[i8],
+    m: usize,
+    c: usize,
+    c_active: usize,
+    dv: usize,
+    out: &mut [i32],
+) {
+    gemm_pv_bounded_into_with_path(simd::active(), p, v, m, c, c_active, dv, out);
+}
+
+/// [`gemm_pv_bounded_into`] with an explicit dispatch path.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_pv_bounded_into_with_path(
+    path: SimdPath,
     p: &[i32],
     v: &[i8],
     m: usize,
@@ -229,6 +322,15 @@ pub fn gemm_pv_bounded_into(
     assert_eq!(p.len(), m * c, "p is not (m, c)");
     assert_eq!(v.len(), c_active * dv, "v is not (c_active, dv)");
     assert_eq!(out.len(), m * dv, "out is not (m, dv)");
+    match simd::require(path) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: require() verified AVX2 is available.
+        SimdPath::Avx2 => unsafe { avx2::gemm_pv_bounded(p, v, c, c_active, dv, out) },
+        _ => pv_bounded_scalar(p, v, c, c_active, dv, out),
+    }
+}
+
+fn pv_bounded_scalar(p: &[i32], v: &[i8], c: usize, c_active: usize, dv: usize, out: &mut [i32]) {
     for (prow, orow) in p.chunks_exact(c).zip(out.chunks_exact_mut(dv)) {
         orow.fill(0);
         for (j, &pv) in prow[..c_active].iter().enumerate() {
@@ -238,6 +340,277 @@ pub fn gemm_pv_bounded_into(
             let vrow = &v[j * dv..(j + 1) * dv];
             for (o, &vv) in orow.iter_mut().zip(vrow) {
                 *o += pv * i32::from(vv);
+            }
+        }
+    }
+}
+
+/// Explicit AVX2 int8/int16 kernels.  Exactness argument per kernel:
+/// int8 operands sign-extend to i16, `_mm256_madd_epi16` products are
+/// ≤ 127² = 16129 so pair sums fit i16×i16→i32 exactly (madd saturates
+/// only at both-pairs-(-32768)², impossible here), and i32 accumulation
+/// never overflows under the repo's shape limits — so any lane/reduce
+/// order matches the scalar loops bit for bit.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::NR;
+    use std::arch::x86_64::*;
+
+    /// Load two consecutive k-stripes (16 contiguous int8) and
+    /// interleave them into madd pair order:
+    /// i16 lane `2j` = `w[k][j]`, lane `2j+1` = `w[k+1][j]`.
+    ///
+    /// SAFETY: caller guarantees 16 readable bytes at `ptr` and AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_wpair(ptr: *const i8) -> __m256i {
+        let v = _mm_loadu_si128(ptr as *const __m128i);
+        let lo = _mm_cvtepi8_epi16(v); // w[k][0..8] as i16
+        let hi = _mm_cvtepi8_epi16(_mm_srli_si128::<8>(v)); // w[k+1][0..8]
+        _mm256_set_m128i(_mm_unpackhi_epi16(lo, hi), _mm_unpacklo_epi16(lo, hi))
+    }
+
+    /// Final odd-k stripe: only 8 bytes exist at `ptr` (a 16-byte load
+    /// would read past the packed buffer), partner lanes are zero.
+    ///
+    /// SAFETY: caller guarantees 8 readable bytes at `ptr` and AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_wlast(ptr: *const i8) -> __m256i {
+        let v = _mm_loadl_epi64(ptr as *const __m128i);
+        let lo = _mm_cvtepi8_epi16(v);
+        let z = _mm_setzero_si128();
+        _mm256_set_m128i(_mm_unpackhi_epi16(lo, z), _mm_unpacklo_epi16(lo, z))
+    }
+
+    /// Broadcast the activation pair `(x[k], x[k+1])` into every i32
+    /// lane (low i16 = `x[k]`, high i16 = `x[k+1]`), matching
+    /// [`load_wpair`]'s interleave.
+    #[target_feature(enable = "avx2")]
+    unsafe fn xpair(x: &[i8], k: usize) -> __m256i {
+        let lo = x[k] as i16 as u16 as u32;
+        let hi = x[k + 1] as i16 as u16 as u32;
+        _mm256_set1_epi32(((hi << 16) | lo) as i32)
+    }
+
+    /// Broadcast a lone activation (partner i16 lane zero, matching
+    /// [`load_wlast`]).
+    #[target_feature(enable = "avx2")]
+    unsafe fn xlast(x: &[i8], k: usize) -> __m256i {
+        _mm256_set1_epi32(x[k] as i16 as u16 as u32 as i32)
+    }
+
+    /// Store the 8 accumulator lanes into `out[..take]`.
+    ///
+    /// SAFETY: caller guarantees `out.len() >= take` and AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn store_acc(acc: __m256i, out: &mut [i32], take: usize) {
+        if take == NR {
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, acc);
+        } else {
+            let mut tmp = [0i32; NR];
+            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+            out[..take].copy_from_slice(&tmp[..take]);
+        }
+    }
+
+    /// AVX2 packed-GEMM block: same loop nest as the scalar
+    /// `gemm_block`, with the `NR`-lane k-loop fused two k's at a time
+    /// through `madd_epi16`, and four rows register-blocked so each
+    /// weight-pair load is reused 4×.
+    ///
+    /// SAFETY: requires AVX2; `packed` is whole panels of `d_in·NR`,
+    /// `x` is whole `d_in` rows, `out` is `rows·d_out`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_block(packed: &[i8], d_in: usize, d_out: usize, x: &[i8], out: &mut [i32]) {
+        let rows = x.len() / d_in;
+        for (p, panel) in packed.chunks_exact(d_in * NR).enumerate() {
+            let o0 = p * NR;
+            let take = NR.min(d_out - o0);
+            let mut r = 0usize;
+            while r + 4 <= rows {
+                let x0 = &x[r * d_in..(r + 1) * d_in];
+                let x1 = &x[(r + 1) * d_in..(r + 2) * d_in];
+                let x2 = &x[(r + 2) * d_in..(r + 3) * d_in];
+                let x3 = &x[(r + 3) * d_in..(r + 4) * d_in];
+                let mut a0 = _mm256_setzero_si256();
+                let mut a1 = _mm256_setzero_si256();
+                let mut a2 = _mm256_setzero_si256();
+                let mut a3 = _mm256_setzero_si256();
+                let mut k = 0usize;
+                while k + 2 <= d_in {
+                    let w = load_wpair(panel.as_ptr().add(k * NR));
+                    a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(w, xpair(x0, k)));
+                    a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(w, xpair(x1, k)));
+                    a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(w, xpair(x2, k)));
+                    a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(w, xpair(x3, k)));
+                    k += 2;
+                }
+                if k < d_in {
+                    let w = load_wlast(panel.as_ptr().add(k * NR));
+                    a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(w, xlast(x0, k)));
+                    a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(w, xlast(x1, k)));
+                    a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(w, xlast(x2, k)));
+                    a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(w, xlast(x3, k)));
+                }
+                store_acc(a0, &mut out[r * d_out + o0..], take);
+                store_acc(a1, &mut out[(r + 1) * d_out + o0..], take);
+                store_acc(a2, &mut out[(r + 2) * d_out + o0..], take);
+                store_acc(a3, &mut out[(r + 3) * d_out + o0..], take);
+                r += 4;
+            }
+            while r < rows {
+                let xrow = &x[r * d_in..(r + 1) * d_in];
+                let mut acc = _mm256_setzero_si256();
+                let mut k = 0usize;
+                while k + 2 <= d_in {
+                    let w = load_wpair(panel.as_ptr().add(k * NR));
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xpair(xrow, k)));
+                    k += 2;
+                }
+                if k < d_in {
+                    let w = load_wlast(panel.as_ptr().add(k * NR));
+                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xlast(xrow, k)));
+                }
+                store_acc(acc, &mut out[r * d_out + o0..], take);
+                r += 1;
+            }
+        }
+    }
+
+    /// Horizontal i32 sum of all 8 lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
+        let s = _mm_hadd_epi32(s, s);
+        let s = _mm_hadd_epi32(s, s);
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// One A-row × one B-row dot, 16 int8 per madd step.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot1(a: &[i8], b: &[i8], kd: usize) -> i32 {
+        let mut acc = _mm256_setzero_si256();
+        let mut t = 0usize;
+        while t + 16 <= kd {
+            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(t) as *const __m128i));
+            let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(t) as *const __m128i));
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            t += 16;
+        }
+        let mut s = hsum_epi32(acc);
+        while t < kd {
+            s += i32::from(a[t]) * i32::from(b[t]);
+            t += 1;
+        }
+        s
+    }
+
+    /// AVX2 A·Bᵀ with the same 4-B-row register blocking as the scalar
+    /// kernel (each 16-wide A load serves four madd streams).
+    ///
+    /// SAFETY: requires AVX2; shapes pre-validated by the dispatcher.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_nt_bounded(
+        a: &[i8],
+        b: &[i8],
+        m: usize,
+        n: usize,
+        n_active: usize,
+        kd: usize,
+        out: &mut [i32],
+    ) {
+        for i in 0..m {
+            let arow = &a[i * kd..(i + 1) * kd];
+            let orow = &mut out[i * n..(i + 1) * n];
+            orow[n_active..].fill(0);
+            let mut j = 0usize;
+            while j + 4 <= n_active {
+                let b0 = &b[j * kd..(j + 1) * kd];
+                let b1 = &b[(j + 1) * kd..(j + 2) * kd];
+                let b2 = &b[(j + 2) * kd..(j + 3) * kd];
+                let b3 = &b[(j + 3) * kd..(j + 4) * kd];
+                let mut a0 = _mm256_setzero_si256();
+                let mut a1 = _mm256_setzero_si256();
+                let mut a2 = _mm256_setzero_si256();
+                let mut a3 = _mm256_setzero_si256();
+                let mut t = 0usize;
+                while t + 16 <= kd {
+                    let av =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(arow.as_ptr().add(t) as *const __m128i));
+                    let l0 =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.as_ptr().add(t) as *const __m128i));
+                    let l1 =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.as_ptr().add(t) as *const __m128i));
+                    let l2 =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.as_ptr().add(t) as *const __m128i));
+                    let l3 =
+                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.as_ptr().add(t) as *const __m128i));
+                    a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(av, l0));
+                    a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(av, l1));
+                    a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(av, l2));
+                    a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(av, l3));
+                    t += 16;
+                }
+                let (mut s0, mut s1, mut s2, mut s3) =
+                    (hsum_epi32(a0), hsum_epi32(a1), hsum_epi32(a2), hsum_epi32(a3));
+                while t < kd {
+                    let av = i32::from(arow[t]);
+                    s0 += av * i32::from(b0[t]);
+                    s1 += av * i32::from(b1[t]);
+                    s2 += av * i32::from(b2[t]);
+                    s3 += av * i32::from(b3[t]);
+                    t += 1;
+                }
+                orow[j] = s0;
+                orow[j + 1] = s1;
+                orow[j + 2] = s2;
+                orow[j + 3] = s3;
+                j += 4;
+            }
+            while j < n_active {
+                orow[j] = dot1(arow, &b[j * kd..(j + 1) * kd], kd);
+                j += 1;
+            }
+        }
+    }
+
+    /// AVX2 p̂·V mix: broadcast each nonzero p̂ and FMA it against the
+    /// value row 8 i32 lanes at a time (`p̂·v ≤ 32767·127` — exact in
+    /// `mullo_epi32`).  Keeps the scalar kernel's `p̂ = 0` shortcut.
+    ///
+    /// SAFETY: requires AVX2; shapes pre-validated by the dispatcher.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gemm_pv_bounded(
+        p: &[i32],
+        v: &[i8],
+        c: usize,
+        c_active: usize,
+        dv: usize,
+        out: &mut [i32],
+    ) {
+        for (prow, orow) in p.chunks_exact(c).zip(out.chunks_exact_mut(dv)) {
+            orow.fill(0);
+            for (j, &pv) in prow[..c_active].iter().enumerate() {
+                if pv == 0 {
+                    continue;
+                }
+                let vrow = &v[j * dv..(j + 1) * dv];
+                let pvv = _mm256_set1_epi32(pv);
+                let mut t = 0usize;
+                while t + 8 <= dv {
+                    let vv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                        vrow.as_ptr().add(t) as *const __m128i
+                    ));
+                    let cur = _mm256_loadu_si256(orow.as_ptr().add(t) as *const __m256i);
+                    _mm256_storeu_si256(
+                        orow.as_mut_ptr().add(t) as *mut __m256i,
+                        _mm256_add_epi32(cur, _mm256_mullo_epi32(pvv, vv)),
+                    );
+                    t += 8;
+                }
+                while t < dv {
+                    orow[t] += pv * i32::from(vrow[t]);
+                    t += 1;
+                }
             }
         }
     }
@@ -275,6 +648,56 @@ mod tests {
             packed.gemm_into(&x, &mut got);
             matmul_i8_ref(&x, d_in, &w, d_out, &mut want);
             assert_eq!(got, want, "rows={rows} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    #[test]
+    fn packed_paths_agree_on_ragged_shapes() {
+        if !simd::avx2_available() {
+            return; // AVX2 leg covered on x86-64 CI
+        }
+        let mut rng = Xoshiro256::new(29);
+        for (rows, d_in, d_out) in [
+            (1usize, 1usize, 1usize),
+            (1, 2, 8),
+            (2, 3, 8), // odd-k tail hits load_wlast
+            (5, 16, 9),
+            (4, 13, 17),
+            (67, 31, 24),
+        ] {
+            let x = rand_i8(&mut rng, rows * d_in);
+            let w = rand_i8(&mut rng, d_out * d_in);
+            let packed = PackedGemm::pack(&w, d_out, d_in);
+            let (mut simd_out, mut scalar_out) = (Vec::new(), Vec::new());
+            packed.gemm_into_with_path(SimdPath::Avx2, &x, &mut simd_out);
+            packed.gemm_into_with_path(SimdPath::Scalar, &x, &mut scalar_out);
+            assert_eq!(simd_out, scalar_out, "rows={rows} d_in={d_in} d_out={d_out}");
+        }
+    }
+
+    #[test]
+    fn nt_and_pv_paths_agree() {
+        if !simd::avx2_available() {
+            return;
+        }
+        let mut rng = Xoshiro256::new(31);
+        let (m, n, kd) = (5usize, 11usize, 35usize); // 16-chunk + tail
+        let a = rand_i8(&mut rng, m * kd);
+        let b = rand_i8(&mut rng, n * kd);
+        for n_active in [1usize, 4, 7, 11] {
+            let (mut x, mut y) = (vec![3i32; m * n], vec![4i32; m * n]);
+            gemm_nt_bounded_into_with_path(SimdPath::Avx2, &a, &b[..n_active * kd], m, n, n_active, kd, &mut x);
+            gemm_nt_bounded_into_with_path(SimdPath::Scalar, &a, &b[..n_active * kd], m, n, n_active, kd, &mut y);
+            assert_eq!(x, y, "nt n_active={n_active}");
+        }
+        let (c, dv) = (9usize, 13usize); // 8-chunk + tail
+        let p: Vec<i32> = (0..m * c).map(|_| rng.range_i64(0, 32767) as i32).collect();
+        let v = rand_i8(&mut rng, c * dv);
+        for c_active in [1usize, 5, 9] {
+            let (mut x, mut y) = (vec![3i32; m * dv], vec![4i32; m * dv]);
+            gemm_pv_bounded_into_with_path(SimdPath::Avx2, &p, &v[..c_active * dv], m, c, c_active, dv, &mut x);
+            gemm_pv_bounded_into_with_path(SimdPath::Scalar, &p, &v[..c_active * dv], m, c, c_active, dv, &mut y);
+            assert_eq!(x, y, "pv c_active={c_active}");
         }
     }
 

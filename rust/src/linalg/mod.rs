@@ -5,8 +5,15 @@
 //! FFN, QK^T, and p̂·V through its own scalar dot loop (`norm.rs` had a
 //! `matmul_i8`, `encoder.rs` a private `dot_i8`, `attention.rs` two
 //! inline MAC loops).  Everything now routes through three kernels with
-//! a shared contract — i32 accumulation, **k-ascending per-cell order**
-//! so every entry point is bit-exact with the scalar reference:
+//! a shared contract — every output cell is an i32 sum of bounded int8
+//! products that **cannot overflow** under the repo's shape limits, so
+//! i32 addition is exactly associative/commutative and *any*
+//! accumulation order (scalar ascending-k, lane blocking, AVX2 madd
+//! pairs) is bit-exact with the scalar reference.  Each kernel ships a
+//! scalar and an explicit-AVX2 implementation behind
+//! [`crate::simd::active`] runtime dispatch (`HCCS_FORCE_SCALAR=1`
+//! forces the fallback; `*_with_path` variants pin a path for the
+//! differential harness):
 //!
 //! * [`PackedGemm`] — weights-stationary int8×int8→i32 GEMM.  The
 //!   weight matrix is transposed and packed **once** (at
@@ -15,9 +22,12 @@
 //!   walks activation rows in blocks of [`gemm::MC`] so a panel stays
 //!   L1-resident while a row block streams through it.  This is the
 //!   paper-§IV MAC-array mapping on the CPU: the inner loop is a
-//!   broadcast-multiply-accumulate over `NR` independent i32 lanes,
-//!   which LLVM autovectorizes the same way the batched HCCS kernel's
-//!   8-wide stages do.
+//!   broadcast-multiply-accumulate over `NR` independent i32 lanes
+//!   (scalar path) or an `_mm256_madd_epi16` two-k fusion over one
+//!   AVX2 register (SIMD path).  One `gemm_into` pass additionally
+//!   spans the [`crate::runtime::pool`] worker pool, one [`gemm::MC`]
+//!   row block per work item — disjoint output regions make the result
+//!   independent of thread count and claim order.
 //! * [`gemm_nt_into`] — A·Bᵀ for two row-major int8 operands (both
 //!   sides are *activations*: Q against K).  No packing — K changes
 //!   every call — but the kernel register-blocks four B rows per pass
@@ -44,6 +54,6 @@
 pub mod gemm;
 
 pub use gemm::{
-    dot_i8, gemm_nt_bounded_into, gemm_nt_into, gemm_pv_bounded_into, gemm_pv_into,
-    matmul_i8_ref, PackedGemm,
+    dot_i8, gemm_nt_bounded_into, gemm_nt_bounded_into_with_path, gemm_nt_into,
+    gemm_pv_bounded_into, gemm_pv_bounded_into_with_path, gemm_pv_into, matmul_i8_ref, PackedGemm,
 };

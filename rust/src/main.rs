@@ -11,6 +11,8 @@
 //!              [--artifacts DIR] [--variant V] [--batch B]               (pjrt backend only)
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
 //!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile table)
+//!              [--roofline]  (measures the host packed GEMM on the encoder shapes and
+//!                             reports measured vs modeled MMAC/s; honors HCCS_FORCE_SCALAR)
 //! hccs calibrate [--n N] [--rows R] [--spread X]   (synthetic logit demo)
 //! ```
 //!
@@ -25,7 +27,7 @@ use hccs::error::{anyhow, bail, Context, Result};
 
 use hccs::aie_sim::device::{Device, DeviceKind};
 use hccs::aie_sim::kernels::KernelKind;
-use hccs::aie_sim::{gemm, scaling, tile};
+use hccs::aie_sim::{gemm, roofline, scaling, tile};
 use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::TaskKind;
@@ -40,7 +42,8 @@ use hccs::tokenizer::Tokenizer;
 const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
     "batch=", "max-batch=", "wait-ms=", "shards=", "length-bands=", "device=", "kernel=",
-    "n=", "tiles=", "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "help",
+    "n=", "tiles=", "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "roofline",
+    "help",
 ];
 
 fn main() -> Result<()> {
@@ -306,9 +309,11 @@ fn cmd_sim(args: &Args) -> Result<()> {
     if kernel.is_hccs() {
         println!("  int8 MAC utilization: {:.1}%", sim.mac_utilization(n) * 100.0);
     }
-    if let Some(model_name) = args.get("model") {
+    let roofline = args.flag("roofline");
+    if args.get("model").is_some() || roofline {
         // Encoder GEMM macro-tile table: the matmul side of an
         // inference (the softmax side is the schedule above).
+        let model_name = args.get_or("model", "bert-tiny");
         let task = TaskKind::parse(args.get_or("task", "sst2s")).context("bad --task")?;
         let cfg = ModelConfig::parse(model_name, task)
             .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
@@ -354,6 +359,42 @@ fn cmd_sim(args: &Args) -> Result<()> {
                 gemm::encoder_macro_tiles_at(&cfg, tokens),
                 cycles,
                 total_cycles as f64 / cycles as f64,
+            );
+        }
+        if roofline {
+            // Host roofline: time the *real* packed GEMM on the same
+            // shapes the cycle model costs, on the active dispatch path
+            // (HCCS_FORCE_SCALAR=1 measures the fallback).
+            let (warmup, measure) = hccs::benchkit::budgets();
+            println!(
+                "  host roofline ({} path vs one modeled {} tile):",
+                hccs::simd::active().name(),
+                device.name()
+            );
+            println!(
+                "    {:<28} {:>14} {:>12} {:>12} {:>10}",
+                "gemm", "m x k x n", "host MMAC/s", "model MMAC/s", "% of model"
+            );
+            let points = roofline::host_roofline(&device, &cfg, warmup, measure);
+            let (mut meas_time, mut model_time) = (0.0f64, 0.0f64);
+            for pt in &points {
+                println!(
+                    "    {:<28} {:>14} {:>12.1} {:>12.1} {:>9.1}%",
+                    pt.label,
+                    format!("{}x{}x{}", pt.shape.m, pt.shape.k, pt.shape.n),
+                    pt.measured_mmacs,
+                    pt.modeled_mmacs,
+                    pt.roofline_pct(),
+                );
+                let work = (pt.calls * pt.shape.macs()) as f64;
+                meas_time += work / pt.measured_mmacs.max(1e-9);
+                model_time += work / pt.modeled_mmacs.max(1e-9);
+            }
+            // Workload-weighted aggregate (time-based, so big GEMMs
+            // dominate the way they dominate an inference).
+            println!(
+                "    workload aggregate: {:.1}% of the modeled tile",
+                100.0 * model_time / meas_time.max(1e-9)
             );
         }
     }

@@ -24,7 +24,11 @@
 //!
 //! Every matmul — projections, FFN, classifier, and the QK^T / p̂·V
 //! stages — runs through [`crate::linalg`] (weights packed once at
-//! construction, activations processed as whole `(nb·seq, ·)` tiles),
+//! construction, activations processed as whole `(nb·seq, ·)` tiles;
+//! the packed-GEMM passes dispatch to scalar or AVX2 lanes via
+//! [`crate::simd`] and span the [`crate::runtime::pool`] worker pool
+//! one MC-row block at a time — both transparently bit-exact, so the
+//! encoder itself needs no thread- or ISA-awareness),
 //! and the HCCS path routes each head through
 //! [`crate::hccs::attention::hccs_attention_from_acc`] (scale 1/d_h, V
 //! augmented with a ones column so the true row sum Σp̂ comes back with

@@ -13,8 +13,14 @@
 //! Weights are uploaded to device once per [`ModelRunner`] and reused
 //! across calls via `execute_b` — only the (ids, segments) tensors cross
 //! the host/device boundary per request.
+//!
+//! [`pool`] is the native-path counterpart: a zero-dependency worker
+//! pool that spans one packed-GEMM pass across cores (intra-op
+//! parallelism, complementing the shard-level request parallelism of
+//! the serving layer).
 
 pub mod manifest;
+pub mod pool;
 pub mod weights;
 
 use std::path::{Path, PathBuf};

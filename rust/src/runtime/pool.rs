@@ -1,0 +1,394 @@
+//! Zero-dependency worker pool: intra-op parallelism for the GEMM
+//! block loop.
+//!
+//! The serving layer already spreads *requests* across shards
+//! ([`crate::serve`]); this pool spreads the row blocks of **one**
+//! [`crate::linalg::PackedGemm::gemm_into`] pass across cores, so a
+//! single `forward_batch` call scales with the machine instead of with
+//! the request mix.
+//!
+//! Design (all std, no channels crate):
+//!
+//! * `threads - 1` persistent workers block on a condvar'd job queue;
+//!   the **caller participates** too, so a pool of size 1 spawns no
+//!   threads and is exactly the serial loop.
+//! * A job is a borrowed closure plus an atomic block cursor: each
+//!   participant claims blocks with `fetch_add(1)` until the cursor
+//!   passes `total`.  That *is* work-stealing — a slow worker simply
+//!   claims fewer blocks; no per-thread deques needed at this
+//!   granularity (a block is ≥ tens of µs of MACs).
+//! * Determinism is structural: blocks write disjoint output regions,
+//!   so results are bit-identical for every pool size and every claim
+//!   interleaving — pinned by `tests/differential.rs`.
+//! * A panicking block is caught (`catch_unwind`), recorded, and
+//!   re-thrown **in the caller** after every in-flight block of that
+//!   job finishes: the request fails, the workers survive, the pool
+//!   stays usable.
+//! * [`run_blocks`] (the free function) routes through the
+//!   thread-local pool installed by [`with_pool`], else the process
+//!   [`global`] pool (sized by `HCCS_POOL_THREADS`, default
+//!   `available_parallelism`).
+//!
+//! Safety model: the job closure is borrowed from the caller's stack
+//! and type-erased to a raw `*const dyn Fn`.  The caller blocks inside
+//! [`WorkerPool::run_blocks`] until `done == total`, so the borrow
+//! outlives every dereference; exhausted jobs left in the queue are
+//! recognized by their spent cursor and popped without being called.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// One fan-out: a borrowed block closure + claim cursor + completion
+/// latch.
+struct Job {
+    /// Type- and lifetime-erased `&closure` — see the module safety
+    /// model: never dereferenced after `done == total`.
+    f: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed block index (may run past `total`; claims beyond
+    /// it are no-ops).
+    next: AtomicUsize,
+    total: usize,
+    state: Mutex<JobState>,
+    cv: Condvar,
+}
+
+struct JobState {
+    done: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+// SAFETY: `f` points at a `Sync` closure (callable from any thread) and
+// is only dereferenced while the owning `run_blocks` frame is alive.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.total
+    }
+
+    /// Claim and run blocks until the cursor is spent.  Every
+    /// participant (workers and the submitting caller) funnels through
+    /// here.
+    fn run(&self) {
+        loop {
+            let b = self.next.fetch_add(1, Ordering::Relaxed);
+            if b >= self.total {
+                return;
+            }
+            // SAFETY: b < total ⇒ done < total ⇒ the caller is still
+            // parked in run_blocks and the closure borrow is live.
+            let f = unsafe { &*self.f };
+            let result = catch_unwind(AssertUnwindSafe(|| f(b)));
+            let mut st = self.state.lock().unwrap();
+            if let Err(payload) = result {
+                // Keep the first panic; later ones are duplicates of
+                // the same logical failure.
+                if st.panic.is_none() {
+                    st.panic = Some(payload);
+                }
+            }
+            st.done += 1;
+            if st.done == self.total {
+                self.cv.notify_all();
+            }
+        }
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    work_cv: Condvar,
+}
+
+/// A fixed-size pool; see the module docs for the dataflow.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total participants (clamped to ≥ 1).  Size 1
+    /// spawns no OS threads: the caller runs everything inline.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hccs-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers, threads }
+    }
+
+    /// Total participants (workers + the submitting caller).
+    pub fn parallelism(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..blocks)` across the pool, returning when every block
+    /// has completed.  Panics in `f` are re-thrown here (first one
+    /// wins) after all in-flight blocks finish, so output buffers are
+    /// never left racing.  `f` must tolerate any block→thread
+    /// assignment; blocks writing disjoint data makes the result
+    /// deterministic by construction.
+    pub fn run_blocks<F: Fn(usize) + Sync>(&self, blocks: usize, f: &F) {
+        if blocks == 0 {
+            return;
+        }
+        if blocks == 1 || self.threads == 1 {
+            for b in 0..blocks {
+                f(b);
+            }
+            return;
+        }
+        // SAFETY (lifetime erasure): we block below until done == total,
+        // so the erased borrow of `f` cannot outlive this frame.
+        let erased: *const (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f as &(dyn Fn(usize) + Sync)) };
+        let job = Arc::new(Job {
+            f: erased,
+            next: AtomicUsize::new(0),
+            total: blocks,
+            state: Mutex::new(JobState { done: 0, panic: None }),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.push_back(Arc::clone(&job));
+        }
+        self.shared.work_cv.notify_all();
+        job.run(); // caller participates
+        let payload = {
+            let mut st = self.state_wait_done(&job);
+            st.panic.take()
+        };
+        {
+            // Drop our job from the queue if a worker hasn't already
+            // popped it lazily; after this point nothing can observe
+            // the erased pointer.
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(p) = payload {
+            resume_unwind(p);
+        }
+    }
+
+    fn state_wait_done<'a>(&self, job: &'a Job) -> std::sync::MutexGuard<'a, JobState> {
+        let st = job.state.lock().unwrap();
+        job.cv.wait_while(st, |st| st.done < job.total).unwrap()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            // A worker that panicked outside catch_unwind would poison
+            // nothing of ours; surface it rather than hide it.
+            h.join().expect("pool worker panicked outside a job");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return;
+                }
+                // Lazily drop exhausted jobs so the queue never grows
+                // unbounded; their submitters have (or will have)
+                // retain()-removed them too — both removals are safe
+                // because exhausted jobs are never dereferenced.
+                while q.jobs.front().is_some_and(|j| j.exhausted()) {
+                    q.jobs.pop_front();
+                }
+                if let Some(j) = q.jobs.front() {
+                    break Arc::clone(j);
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        job.run();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ambient pool selection
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static CURRENT: std::cell::Cell<Option<*const WorkerPool>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// Run `f` with `pool` installed as this thread's ambient pool (what
+/// the free [`run_blocks`] uses).  Restores the previous ambient pool
+/// on exit, panic included.
+pub fn with_pool<R>(pool: &WorkerPool, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<*const WorkerPool>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(CURRENT.with(|c| c.replace(Some(pool as *const WorkerPool))));
+    f()
+}
+
+/// The process-wide pool, created on first use: `HCCS_POOL_THREADS`
+/// participants if set (≥ 1), else `available_parallelism`, else 1.
+pub fn global() -> &'static WorkerPool {
+    static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let threads = std::env::var("HCCS_POOL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        WorkerPool::new(threads)
+    })
+}
+
+/// Participant count of the ambient pool ([`with_pool`] override, else
+/// the global pool).
+pub fn parallelism() -> usize {
+    match CURRENT.with(|c| c.get()) {
+        // SAFETY: with_pool keeps the pool borrowed for the install scope.
+        Some(p) => unsafe { &*p }.parallelism(),
+        None => global().parallelism(),
+    }
+}
+
+/// [`WorkerPool::run_blocks`] on the ambient pool.
+pub fn run_blocks<F: Fn(usize) + Sync>(blocks: usize, f: &F) {
+    match CURRENT.with(|c| c.get()) {
+        // SAFETY: with_pool keeps the pool borrowed for the install scope.
+        Some(p) => unsafe { &*p }.run_blocks(blocks, f),
+        None => global().run_blocks(blocks, f),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn covers_every_block_exactly_once() {
+        for threads in [1usize, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let hits: Vec<AtomicU32> = (0..97).map(|_| AtomicU32::new(0)).collect();
+            pool.run_blocks(hits.len(), &|b| {
+                hits[b].fetch_add(1, Ordering::Relaxed);
+            });
+            for (b, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "threads={threads} block {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_and_one_block_short_circuit() {
+        let pool = WorkerPool::new(4);
+        pool.run_blocks(0, &|_| panic!("no blocks to run"));
+        let ran = AtomicU32::new(0);
+        pool.run_blocks(1, &|b| {
+            assert_eq!(b, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(4);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_blocks(16, &|b| {
+                if b == 7 {
+                    panic!("poisoned block");
+                }
+            });
+        }))
+        .expect_err("panic must propagate to the submitter");
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "poisoned block");
+        // The pool must still be fully usable afterwards.
+        let hits: Vec<AtomicU32> = (0..32).map(|_| AtomicU32::new(0)).collect();
+        pool.run_blocks(hits.len(), &|b| {
+            hits[b].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_same_pool() {
+        let pool = WorkerPool::new(3);
+        for round in 0..10u32 {
+            let sum = AtomicU32::new(0);
+            pool.run_blocks(20, &|b| {
+                sum.fetch_add(b as u32 + round, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 190 + 20 * round);
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = WorkerPool::new(8);
+        pool.run_blocks(64, &|_| {});
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn with_pool_overrides_and_restores() {
+        let small = WorkerPool::new(1);
+        let seen = with_pool(&small, parallelism);
+        assert_eq!(seen, 1);
+        // Outside the scope the ambient pool is the global again.
+        assert_eq!(parallelism(), global().parallelism());
+        // Nested override restores to the outer override.
+        let two = WorkerPool::new(2);
+        with_pool(&two, || {
+            assert_eq!(parallelism(), 2);
+            with_pool(&small, || assert_eq!(parallelism(), 1));
+            assert_eq!(parallelism(), 2);
+        });
+    }
+
+    #[test]
+    fn caller_participates_in_size_one_pool() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.parallelism(), 1);
+        let tid = std::thread::current().id();
+        pool.run_blocks(5, &|_| {
+            assert_eq!(std::thread::current().id(), tid, "size-1 pool must run inline");
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! Runtime SIMD dispatch for the integer kernels.
+//!
+//! The hot kernels ([`crate::linalg`] packed GEMM, the QK^T / p̂·V
+//! forms, and the batched HCCS engine in [`crate::hccs::batch`]) ship
+//! in two implementations with **bit-identical** outputs:
+//!
+//! * **`Scalar`** — the portable Rust loops (the oracle path; LLVM
+//!   autovectorizes them to the baseline target features, SSE2 on
+//!   x86-64);
+//! * **`Avx2`** — explicit `std::arch` AVX2 int8/int16 intrinsics
+//!   (x86-64 only, runtime-detected), built around sign-extending
+//!   int8 loads and `_mm256_madd_epi16` pairwise MAC reduction.
+//!
+//! Why bit-exactness is even possible: every kernel cell is an i32 sum
+//! of bounded integer products, and under the shape/feasibility limits
+//! the repo enforces (`ModelConfig::validate`, `HccsParams::validate*`)
+//! no partial sum can overflow — and i32 addition without overflow is
+//! exactly associative and commutative, so *any* accumulation order
+//! (lane accumulators, pairwise madd, horizontal reduction) produces
+//! the same bits as the ascending-k scalar loop.  The per-stage
+//! overflow arguments live with each AVX2 kernel; the contract is
+//! pinned by `tests/differential.rs` across both paths.
+//!
+//! Selection order of [`active`]:
+//!
+//! 1. the process-wide [`set_override`] (tests/benches that must pin a
+//!    path in-process without touching the environment);
+//! 2. `HCCS_FORCE_SCALAR` — any value other than empty/`0` forces the
+//!    scalar path for the whole process (read once, at first dispatch:
+//!    the CI test matrix sets it before the process starts);
+//! 3. runtime CPU detection (`is_x86_feature_detected!("avx2")`,
+//!    cached by std).
+//!
+//! Non-x86-64 targets always resolve to `Scalar`; requesting the AVX2
+//! path explicitly there (or on an x86-64 host without AVX2) panics via
+//! [`require`] rather than executing unsupported instructions.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// A dispatchable kernel implementation.  Every `*_with_path` kernel
+/// entry point takes one of these; the plain entry points use
+/// [`active`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdPath {
+    /// Explicit AVX2 intrinsics (x86-64 with runtime AVX2 support).
+    Avx2,
+    /// Portable scalar loops — the reference the AVX2 path is pinned to.
+    Scalar,
+}
+
+impl SimdPath {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Scalar => "scalar",
+        }
+    }
+}
+
+const OVERRIDE_NONE: u8 = 0;
+const OVERRIDE_AVX2: u8 = 1;
+const OVERRIDE_SCALAR: u8 = 2;
+
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVERRIDE_NONE);
+
+/// True when the AVX2 path can run on this host.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The path runtime detection alone would pick (no override, no env).
+pub fn detected() -> SimdPath {
+    if avx2_available() {
+        SimdPath::Avx2
+    } else {
+        SimdPath::Scalar
+    }
+}
+
+fn env_forces_scalar() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("HCCS_FORCE_SCALAR")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// The dispatch path the plain kernel entry points use right now.
+pub fn active() -> SimdPath {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        OVERRIDE_AVX2 => SimdPath::Avx2,
+        OVERRIDE_SCALAR => SimdPath::Scalar,
+        _ => {
+            if env_forces_scalar() {
+                SimdPath::Scalar
+            } else {
+                detected()
+            }
+        }
+    }
+}
+
+/// Process-wide dispatch override (`None` restores env/detection).
+/// Takes precedence over `HCCS_FORCE_SCALAR`.  Because both paths are
+/// bit-exact, flipping this mid-run changes no kernel *result* — only
+/// which implementation computes it — so concurrent tests cannot be
+/// perturbed by another test holding an override.  Panics if `Avx2` is
+/// requested on a host without AVX2.
+pub fn set_override(path: Option<SimdPath>) {
+    let v = match path {
+        None => OVERRIDE_NONE,
+        Some(SimdPath::Avx2) => {
+            assert!(avx2_available(), "cannot force the AVX2 path: host lacks AVX2");
+            OVERRIDE_AVX2
+        }
+        Some(SimdPath::Scalar) => OVERRIDE_SCALAR,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// RAII form of [`set_override`]: forces `path` until the guard drops,
+/// then restores whatever override was in place before.
+pub fn scoped_override(path: SimdPath) -> OverrideGuard {
+    let prev = OVERRIDE.load(Ordering::Relaxed);
+    set_override(Some(path));
+    OverrideGuard { prev }
+}
+
+pub struct OverrideGuard {
+    prev: u8,
+}
+
+impl Drop for OverrideGuard {
+    fn drop(&mut self) {
+        OVERRIDE.store(self.prev, Ordering::Relaxed);
+    }
+}
+
+/// Validate an explicitly requested path against the host: the AVX2
+/// path must never be *executed* where the instructions don't exist.
+/// Every `*_with_path` kernel funnels its argument through this.
+#[inline]
+pub fn require(path: SimdPath) -> SimdPath {
+    if path == SimdPath::Avx2 {
+        assert!(
+            avx2_available(),
+            "AVX2 kernel path requested on a host without AVX2 support \
+             (use SimdPath::Scalar or simd::active())"
+        );
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(SimdPath::Avx2.name(), "avx2");
+        assert_eq!(SimdPath::Scalar.name(), "scalar");
+    }
+
+    #[test]
+    fn detected_matches_availability() {
+        assert_eq!(detected() == SimdPath::Avx2, avx2_available());
+    }
+
+    #[test]
+    fn scalar_override_wins_and_restores() {
+        // Scalar can always be forced; the guard restores the previous
+        // state (NONE or whatever another concurrent test set — either
+        // way active() stays a valid, runnable path).
+        {
+            let _g = scoped_override(SimdPath::Scalar);
+            assert_eq!(active(), SimdPath::Scalar);
+        }
+        let after = active();
+        assert!(after == SimdPath::Scalar || after == SimdPath::Avx2);
+        if after == SimdPath::Avx2 {
+            assert!(avx2_available());
+        }
+    }
+
+    #[test]
+    fn require_passes_scalar_through() {
+        assert_eq!(require(SimdPath::Scalar), SimdPath::Scalar);
+        if avx2_available() {
+            assert_eq!(require(SimdPath::Avx2), SimdPath::Avx2);
+        }
+    }
+
+    #[test]
+    #[cfg(not(target_arch = "x86_64"))]
+    fn avx2_unavailable_off_x86() {
+        assert!(!avx2_available());
+        assert_eq!(detected(), SimdPath::Scalar);
+    }
+}

@@ -1,0 +1,371 @@
+//! Differential-testing harness for the SIMD dispatch layer: every
+//! vectorized kernel runs under **both** dispatch paths (forced scalar
+//! and forced AVX2) on the same inputs and must agree bit-for-bit —
+//! the AVX2 lane implementations are pinned to the scalar oracle, not
+//! merely "close".
+//!
+//! Three layers of coverage:
+//!
+//! 1. **Kernel-level**: seeded random ragged shapes through the packed
+//!    GEMM, the column-bounded `gemm_nt`/`gemm_pv` attention forms, and
+//!    the HCCS batch engine (all four `OutputPath` × `Reciprocal`
+//!    modes, masked and unmasked), with adversarial rows (all-negative,
+//!    constant, max-at-tail) mixed into every tile.  On divergence the
+//!    harness reports the first differing cell plus the full
+//!    reproduction context (seed, shape, θ).
+//! 2. **Golden vectors**: the committed `golden_vectors.json` oracle
+//!    outputs must come back bit-exact from *both* paths — not just
+//!    path-agreement but agreement with the numpy-derived ground truth.
+//! 3. **Full model**: `forward_batch` logits are invariant across
+//!    worker-pool sizes (1/2/8) and across forced-scalar vs default
+//!    dispatch, and a panicking pool job propagates without poisoning
+//!    the pool for subsequent GEMM passes.
+//!
+//! On hosts without AVX2 the path-agreement tests skip loudly (there is
+//! only one path to run); the golden and pool tests still execute.
+
+use hccs::hccs::{
+    hccs_batch_into_with_path, hccs_batch_masked_into_with_path, HccsParams, OutputPath,
+    Reciprocal,
+};
+use hccs::json::Value;
+use hccs::linalg::{
+    gemm_nt_bounded_into_with_path, gemm_pv_bounded_into_with_path, matmul_i8_ref, PackedGemm,
+};
+use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
+use hccs::rng::Xoshiro256;
+use hccs::runtime::pool::{self, WorkerPool};
+use hccs::simd::{self, SimdPath};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+const MODES: [(&str, OutputPath, Reciprocal); 4] = [
+    ("i16_div", OutputPath::I16, Reciprocal::Div),
+    ("i16_clb", OutputPath::I16, Reciprocal::Clb),
+    ("i8_div", OutputPath::I8, Reciprocal::Div),
+    ("i8_clb", OutputPath::I8, Reciprocal::Clb),
+];
+
+/// Run `kernel` under both dispatch paths and assert bit-identical
+/// output; on mismatch, panic with the first diverging cell and the
+/// caller's full reproduction context.  Returns `false` (after a loud
+/// skip message) when the host has no AVX2, so callers can count
+/// effective coverage.
+fn assert_paths_agree<F>(label: &str, ctx: &str, mut kernel: F) -> bool
+where
+    F: FnMut(SimdPath) -> Vec<i32>,
+{
+    if !simd::avx2_available() {
+        eprintln!("SKIP {label}: AVX2 unavailable on this host (single-path)");
+        return false;
+    }
+    let scalar = kernel(SimdPath::Scalar);
+    let avx2 = kernel(SimdPath::Avx2);
+    assert_eq!(
+        scalar.len(),
+        avx2.len(),
+        "{label}: output lengths differ (scalar {} vs avx2 {})\n  context: {ctx}",
+        scalar.len(),
+        avx2.len()
+    );
+    if let Some(i) = (0..scalar.len()).find(|&i| scalar[i] != avx2[i]) {
+        panic!(
+            "{label}: paths diverge at cell {i}: scalar={} avx2={}\n  context: {ctx}",
+            scalar[i], avx2[i]
+        );
+    }
+    true
+}
+
+/// Random i8 tile with adversarial rows mixed in: row 0 all-negative
+/// (horizontal-max zero-injection hazard), row 1 constant (Z at its
+/// band edge), last row max-at-tail (remainder-lane handling).
+fn adversarial_tile(rng: &mut Xoshiro256, rows: usize, cols: usize) -> Vec<i8> {
+    let mut x: Vec<i8> = (0..rows * cols).map(|_| rng.i8()).collect();
+    for v in x[..cols].iter_mut() {
+        *v = -(v.unsigned_abs() as i8).max(1);
+    }
+    if rows > 1 {
+        let c = rng.i8();
+        x[cols..2 * cols].fill(c);
+    }
+    if rows > 2 {
+        let last = x.len() - cols..x.len();
+        for v in x[last.clone()].iter_mut() {
+            *v = (*v).min(50);
+        }
+        x[rows * cols - 1] = 100;
+    }
+    x
+}
+
+#[test]
+fn packed_gemm_paths_agree_on_seeded_ragged_shapes() {
+    // Ragged on every axis: m around the MC=64 row-block edge, k odd
+    // (the half-width madd tail), n off the NR=8 panel edge.
+    let shapes = [
+        (1usize, 1usize, 1usize),
+        (2, 3, 8),
+        (5, 7, 9),
+        (16, 33, 24),
+        (63, 64, 8),
+        (64, 64, 64),
+        (65, 129, 17),
+        (130, 31, 40),
+    ];
+    let mut covered = false;
+    for (seed, &(m, k, n)) in (0u64..).zip(shapes.iter()) {
+        let mut rng = Xoshiro256::new(0xd1ff + seed);
+        let x = adversarial_tile(&mut rng, m, k);
+        let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
+        let packed = PackedGemm::pack(&w, n, k);
+        let ctx = format!("packed GEMM seed={seed:#x} shape m={m} k={k} n={n}");
+        // The scalar path itself is pinned to the reference oracle, so
+        // path-agreement transitively pins AVX2 to the oracle too.
+        let mut want = Vec::new();
+        matmul_i8_ref(&x, k, &w, n, &mut want);
+        let mut got = Vec::new();
+        packed.gemm_into_with_path(SimdPath::Scalar, &x, &mut got);
+        assert_eq!(got, want, "scalar packed GEMM vs reference oracle: {ctx}");
+        covered |= assert_paths_agree("packed GEMM", &ctx, |path| {
+            let mut out = Vec::new();
+            packed.gemm_into_with_path(path, &x, &mut out);
+            out
+        });
+    }
+    if !covered {
+        eprintln!("SKIP packed GEMM differential: no AVX2 (oracle checks still ran)");
+    }
+}
+
+#[test]
+fn nt_bounded_paths_agree_on_seeded_ragged_shapes() {
+    // (m, n, kd) with the column bound sweeping 1 ..= n: the masked
+    // attention form never reads past n_active B-rows.
+    let shapes = [(1usize, 1usize, 8usize), (3, 5, 7), (5, 11, 35), (9, 16, 32), (17, 23, 64)];
+    for (seed, &(m, n, kd)) in (0u64..).zip(shapes.iter()) {
+        let mut rng = Xoshiro256::new(0x5eed + seed);
+        let a = adversarial_tile(&mut rng, m, kd);
+        for n_active in [1, n.div_ceil(2), n] {
+            let b: Vec<i8> = (0..n_active * kd).map(|_| rng.i8()).collect();
+            let ctx =
+                format!("gemm_nt seed={seed:#x} m={m} n={n} n_active={n_active} kd={kd}");
+            assert_paths_agree("gemm_nt_bounded", &ctx, |path| {
+                let mut out = vec![0i32; m * n];
+                gemm_nt_bounded_into_with_path(path, &a, &b, m, n, n_active, kd, &mut out);
+                out
+            });
+        }
+    }
+}
+
+#[test]
+fn pv_bounded_paths_agree_on_seeded_ragged_shapes() {
+    // p carries HCCS probabilities (0 ..= 32767) including exact zeros
+    // (masked pads), v is i8; dv off the 8-lane edge exercises the
+    // scalar tail.
+    let shapes = [(1usize, 1usize, 1usize), (2, 9, 13), (5, 16, 8), (7, 33, 21), (16, 64, 40)];
+    for (seed, &(m, c, dv)) in (0u64..).zip(shapes.iter()) {
+        let mut rng = Xoshiro256::new(0xabcd + seed);
+        for c_active in [1, c.div_ceil(2), c] {
+            let p: Vec<i32> = (0..m * c)
+                .map(|i| if i % 7 == 0 { 0 } else { rng.range_i64(0, 32767) as i32 })
+                .collect();
+            let v: Vec<i8> = (0..c_active * dv).map(|_| rng.i8()).collect();
+            let ctx = format!("gemm_pv seed={seed:#x} m={m} c={c} c_active={c_active} dv={dv}");
+            assert_paths_agree("gemm_pv_bounded", &ctx, |path| {
+                let mut out = vec![0i32; m * dv];
+                gemm_pv_bounded_into_with_path(path, &p, &v, m, c, c_active, dv, &mut out);
+                out
+            });
+        }
+    }
+}
+
+/// Mid-band feasible θ for a row width (the same derivation the golden
+/// generator uses), shrinking `dmax` (then `s`) until the band is
+/// non-empty — wide rows cap `B` at `32767/n`, which squeezes out
+/// steep slopes.
+fn mid_theta(mut s: i32, mut dmax: i32, n: usize) -> HccsParams {
+    loop {
+        if let Some((lo, hi)) = HccsParams::feasible_b_band(s, dmax, n) {
+            return HccsParams::checked((lo + hi) / 2, s, dmax, n).expect("mid-band θ feasible");
+        }
+        if dmax > 1 {
+            dmax /= 2;
+        } else {
+            assert!(s > 0, "no feasible θ at n={n}");
+            s -= 1;
+        }
+    }
+}
+
+#[test]
+fn hccs_batch_paths_agree_all_modes_on_seeded_shapes() {
+    let shapes = [(1usize, 5usize), (3, 16), (4, 23), (2, 200), (65, 33), (8, 128)];
+    for (seed, &(rows, cols)) in (0u64..).zip(shapes.iter()) {
+        let mut rng = Xoshiro256::new(0xcc5 + seed);
+        let x = adversarial_tile(&mut rng, rows, cols);
+        let s = 1 + (seed as i32 % 4);
+        let dmax = [16, 32, 64, 127][seed as usize % 4];
+        let p = mid_theta(s, dmax, cols);
+        for (mode, op, rc) in MODES {
+            let ctx = format!(
+                "hccs_batch seed={seed:#x} rows={rows} cols={cols} mode={mode} θ=({},{},{})",
+                p.b, p.s, p.dmax
+            );
+            assert_paths_agree("hccs_batch", &ctx, |path| {
+                let mut out = vec![0i32; rows * cols];
+                hccs_batch_into_with_path(path, &x, rows, cols, &p, op, rc, &mut out);
+                out
+            });
+        }
+    }
+}
+
+#[test]
+fn hccs_masked_paths_agree_all_modes_on_ragged_lengths() {
+    // Lengths straddling the 16-lane stage-2 width and the 32-lane
+    // stage-1 width, plus full-width and length-1 rows.
+    let (rows, cols) = (6usize, 40usize);
+    let lens = [1usize, 15, 16, 17, 40, 7];
+    let mut rng = Xoshiro256::new(0x3a5c);
+    let x = adversarial_tile(&mut rng, rows, cols);
+    let p = mid_theta(2, 64, cols);
+    for (mode, op, rc) in MODES {
+        let ctx = format!("hccs_batch_masked rows={rows} cols={cols} lens={lens:?} mode={mode}");
+        assert_paths_agree("hccs_batch_masked", &ctx, |path| {
+            let mut out = vec![0i32; rows * cols];
+            hccs_batch_masked_into_with_path(path, &x, rows, cols, &lens, &p, op, rc, &mut out);
+            out
+        });
+    }
+}
+
+/// The committed numpy-oracle vectors must come back bit-exact from
+/// **both** dispatch paths — ground-truth agreement, not just
+/// path-agreement.  Runs the scalar leg even without AVX2.
+#[test]
+fn golden_vectors_pass_through_both_dispatch_paths() {
+    let golden = Value::parse(include_str!("golden_vectors.json")).expect("golden parses");
+    let paths: &[SimdPath] = if simd::avx2_available() {
+        &[SimdPath::Scalar, SimdPath::Avx2]
+    } else {
+        eprintln!("SKIP golden AVX2 leg: unavailable on this host");
+        &[SimdPath::Scalar]
+    };
+    let mut checked = 0usize;
+    for case in golden.req("cases").as_arr().expect("cases") {
+        let n = case.req("n").as_i64().unwrap() as usize;
+        let x: Vec<i8> = case.req("x").flat_f64().iter().map(|&v| v as i8).collect();
+        let p = HccsParams::checked(
+            case.req("B").as_i64().unwrap() as i32,
+            case.req("S").as_i64().unwrap() as i32,
+            case.req("Dmax").as_i64().unwrap() as i32,
+            n,
+        )
+        .expect("golden θ feasible");
+        let Value::Obj(outs) = case.req("out") else { panic!("out must be an object") };
+        for (mode, want_v) in outs {
+            let (op, rc) = hccs::hccs::kernel::parse_mode(mode).unwrap();
+            let want: Vec<i32> = want_v.flat_f64().iter().map(|&v| v as i32).collect();
+            for &path in paths {
+                let mut got = vec![0i32; n];
+                hccs_batch_into_with_path(path, &x, 1, n, &p, op, rc, &mut got);
+                assert_eq!(
+                    got,
+                    want,
+                    "golden n={n} mode={mode} diverges on the {} path",
+                    path.name()
+                );
+                checked += 1;
+            }
+        }
+    }
+    assert!(checked >= 80, "only {checked} golden vectors checked through dispatch");
+}
+
+fn batch_logits(model: &NativeModel, ids: &[i32], segs: &[i32]) -> Vec<i32> {
+    let mut scratch = EncoderScratch::default();
+    let backend = SoftmaxBackend::parse("i16_div").expect("known mode");
+    model
+        .forward_batch(ids, segs, backend, &mut scratch)
+        .expect("forward_batch")
+        .into_iter()
+        .flat_map(|inf| inf.logits_i32)
+        .collect()
+}
+
+fn bench_workload(model: &NativeModel, batch: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut generator = hccs::data::WorkloadGen::new(hccs::data::TaskKind::Sst2s, 11);
+    let mut ids = Vec::with_capacity(batch * model.cfg.seq_len);
+    let mut segs = Vec::with_capacity(batch * model.cfg.seq_len);
+    for _ in 0..batch {
+        let ex = generator.next_example();
+        ids.extend_from_slice(&ex.ids);
+        segs.extend_from_slice(&ex.segments);
+    }
+    (ids, segs)
+}
+
+/// `forward_batch` logits must be byte-identical whichever worker-pool
+/// size executes the GEMM row blocks: blocks write disjoint output
+/// regions, so thread count and claim order are invisible by
+/// construction — this pins that claim end to end through the encoder.
+#[test]
+fn forward_batch_is_invariant_across_pool_sizes() {
+    let task = hccs::data::TaskKind::Sst2s;
+    let model = NativeModel::new(ModelConfig::bert_tiny(task), task, 42).expect("model build");
+    let (ids, segs) = bench_workload(&model, 9);
+    let reference = batch_logits(&model, &ids, &segs);
+    assert!(!reference.is_empty());
+    for threads in [1usize, 2, 8] {
+        let p = WorkerPool::new(threads);
+        let got = pool::with_pool(&p, || batch_logits(&model, &ids, &segs));
+        assert_eq!(
+            got, reference,
+            "forward_batch logits changed under a {threads}-thread pool"
+        );
+    }
+}
+
+/// Forced-scalar dispatch must reproduce the default (possibly AVX2)
+/// dispatch byte-for-byte on full-model logits.
+#[test]
+fn forward_batch_forced_scalar_matches_default_dispatch() {
+    let task = hccs::data::TaskKind::Sst2s;
+    let model = NativeModel::new(ModelConfig::bert_tiny(task), task, 42).expect("model build");
+    let (ids, segs) = bench_workload(&model, 6);
+    let default = batch_logits(&model, &ids, &segs);
+    let forced = {
+        let _guard = simd::scoped_override(SimdPath::Scalar);
+        batch_logits(&model, &ids, &segs)
+    };
+    assert_eq!(forced, default, "forced-scalar logits differ from default dispatch");
+}
+
+/// A panicking block propagates to the submitting thread and does NOT
+/// poison the pool: the very next GEMM pass on the same pool is
+/// correct.
+#[test]
+fn pool_panic_propagates_and_pool_stays_usable_for_gemm() {
+    let p = WorkerPool::new(4);
+    let boom = catch_unwind(AssertUnwindSafe(|| {
+        p.run_blocks(8, &|i| {
+            if i == 3 {
+                panic!("differential-harness boom");
+            }
+        });
+    }));
+    assert!(boom.is_err(), "panic in a pool block must propagate to the caller");
+
+    let mut rng = Xoshiro256::new(77);
+    let (m, k, n) = (130usize, 33, 24);
+    let x: Vec<i8> = (0..m * k).map(|_| rng.i8()).collect();
+    let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
+    let packed = PackedGemm::pack(&w, n, k);
+    let mut want = Vec::new();
+    matmul_i8_ref(&x, k, &w, n, &mut want);
+    let mut got = Vec::new();
+    pool::with_pool(&p, || packed.gemm_into(&x, &mut got));
+    assert_eq!(got, want, "pool produced a wrong GEMM after surviving a panic");
+}

@@ -218,14 +218,14 @@ fn native_model() -> Arc<NativeModel> {
         .clone()
 }
 
-fn native_backend(shards: usize) -> NativeBackend {
+fn native_backend(shards: usize, length_bands: usize) -> NativeBackend {
     NativeBackend::with_config(
         native_model(),
         SoftmaxBackend::parse("i16_div").unwrap(),
         NativeServeConfig {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
             shards,
-            length_bands: 1,
+            length_bands,
         },
     )
     .unwrap()
@@ -264,7 +264,7 @@ fn native_multi_shard_serve_is_byte_identical_to_single_shard() {
     let input = native_input(48);
     let mut outputs = Vec::new();
     for shards in [1usize, 4] {
-        let backend = native_backend(shards);
+        let backend = native_backend(shards, 1);
         let mut out = Vec::new();
         let served = server::serve(
             &backend,
@@ -294,6 +294,58 @@ fn native_multi_shard_serve_is_byte_identical_to_single_shard() {
     assert_eq!(outputs[0], outputs[1], "native sharding must not change served bytes");
 }
 
+/// Text lines with strongly varying word counts, so requests spread
+/// across length bands and ragged batch compositions.
+fn mixed_length_input(requests: usize) -> String {
+    let mut input = String::from("# mixed-length traffic\n");
+    for k in 0..requests {
+        let words = 1 + (k * 5) % 17;
+        let line: Vec<String> = (0..words).map(|j| format!("w{:03}", (k * 3 + j) % 40)).collect();
+        input.push_str(&line.join(" "));
+        input.push('\n');
+        if k % 8 == 5 {
+            input.push_str("# comment between lengths\n");
+        }
+    }
+    input
+}
+
+/// End-to-end SIMD-dispatch parity through the serving stack: the same
+/// mixed-length traffic served by a 4-shard, 2-length-band native
+/// backend must produce **byte-identical** output under forced-scalar
+/// dispatch and under the default (AVX2 where available) dispatch —
+/// the whole vectorized surface (packed GEMM, masked gemm_nt/gemm_pv,
+/// HCCS stages) pinned at the served-bytes level, under concurrent
+/// shard workers and ragged band batching.
+#[test]
+fn native_forced_scalar_serve_is_byte_identical_to_default_dispatch() {
+    let tok = Tokenizer::from_tokens(build_vocab()).unwrap();
+    let input = mixed_length_input(48);
+    let run = |force_scalar: bool| -> String {
+        let _guard = force_scalar
+            .then(|| hccs::simd::scoped_override(hccs::simd::SimdPath::Scalar));
+        let backend = native_backend(4, 2);
+        let mut out = Vec::new();
+        let served = server::serve(
+            &backend,
+            &tok,
+            TaskKind::Sst2s,
+            std::io::BufReader::new(input.as_bytes()),
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(served, 48);
+        backend.shutdown();
+        String::from_utf8(out).unwrap()
+    };
+    let default_text = run(false);
+    let forced_text = run(true);
+    assert_eq!(
+        default_text, forced_text,
+        "forced-scalar dispatch changed served bytes under mixed-length traffic"
+    );
+}
+
 /// Four jittered concurrent clients against a 4-shard native backend:
 /// each client's replies must arrive in its submission order and be
 /// bit-exact with a direct single-threaded `forward` of the same
@@ -303,7 +355,7 @@ fn native_concurrent_jittered_clients_get_ordered_bit_exact_replies() {
     const CLIENTS: usize = 4;
     const PER_CLIENT: usize = 12;
     let model = native_model();
-    let backend = Arc::new(native_backend(4));
+    let backend = Arc::new(native_backend(4, 1));
     let mode = SoftmaxBackend::parse("i16_div").unwrap();
 
     let mut joins = Vec::new();

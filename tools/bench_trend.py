@@ -21,6 +21,9 @@ contains ``per_s`` (``rows_per_s``, ``examples_per_s``,
 ``macs_per_second``, ...) is treated as a throughput sample, addressed
 by its JSON path with array elements labeled by their identifying
 string field (``name`` / ``backend`` / ``mode`` / ``shards`` / ...).
+A small allowlist of non-throughput trajectory metrics rides along:
+``roofline_pct`` (measured host GEMM as a percentage of the modeled
+AIE tile — higher is better, same delta semantics as a throughput).
 
 The tool NEVER fails the job: bench numbers from smoke budgets are
 noisy, so regressions warn loudly but exit 0.  Missing token, first run
@@ -40,6 +43,9 @@ import urllib.request
 import zipfile
 
 THROUGHPUT_KEY_MARKER = "per_s"  # matches *_per_s and *_per_second
+# Non-throughput metrics tracked by exact key: higher-is-better ratios
+# whose regressions matter as much as raw rates.
+EXTRA_METRIC_KEYS = ("roofline_pct",)
 ID_KEYS = (
     "name", "backend", "mode", "case", "shards", "batch", "density", "rows", "kernel", "n",
 )
@@ -70,7 +76,7 @@ def walk(node, path, out):
     if isinstance(node, dict):
         for key, value in sorted(node.items()):
             if isinstance(value, (int, float)) and not isinstance(value, bool):
-                if THROUGHPUT_KEY_MARKER in key:
+                if THROUGHPUT_KEY_MARKER in key or key in EXTRA_METRIC_KEYS:
                     out[f"{path}.{key}" if path else key] = float(value)
             else:
                 walk(value, f"{path}.{key}" if path else key, out)
@@ -178,6 +184,13 @@ def fetch_previous_baseline(workdir):
 # ---------------------------------------------------------------------------
 
 
+def fmt_metric(path, v):
+    """Percent metrics render as percentages, everything else as a rate."""
+    if path.rsplit(".", 1)[-1] in EXTRA_METRIC_KEYS:
+        return f"{v:.2f}%"
+    return fmt_rate(v)
+
+
 def fmt_rate(v):
     if v >= 1e9:
         return f"{v / 1e9:.2f}G/s"
@@ -214,11 +227,11 @@ def build_report(current, baseline, threshold):
                     delta += " ⚠️"
                     warnings.append(
                         f"{bench}: {path} regressed {abs(pct):.1f}% "
-                        f"({fmt_rate(prev)} -> {fmt_rate(value)})"
+                        f"({fmt_metric(path, prev)} -> {fmt_metric(path, value)})"
                     )
             lines.append(
                 f"| {bench} | `{path}` | "
-                f"{fmt_rate(prev) if prev else '—'} | {fmt_rate(value)} | {delta} |"
+                f"{fmt_metric(path, prev) if prev else '—'} | {fmt_metric(path, value)} | {delta} |"
             )
     if warnings:
         lines.append("")

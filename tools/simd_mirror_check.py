@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Offline mirror of the AVX2 lane algorithms in `rust/src/linalg/gemm.rs`
+and `rust/src/hccs/batch.rs` (zero dependencies, stdlib only).
+
+The AVX2 kernels' bit-exactness claim rests on two things: (a) the lane
+*dataflow* (pack indexing, `madd` pair interleave, widening order)
+reproduces the scalar sum, and (b) no intermediate ever leaves its lane
+width (i16 products, i32 accumulators), so wrap-around can never silently
+diverge.  This script re-implements each kernel's lane algorithm
+instruction by instruction — `_mm256_madd_epi16` as explicit
+sign-extended pair products, `_mm256_mullo_epi16/epi32` as truncating
+lane multiplies with range *assertions*, `_mm256_sra_epi32` as an
+arithmetic shift — and fuzzes it against a straight reference over
+seeded ragged shapes and feasible HCCS θ.  A failure here means the
+corresponding Rust intrinsic sequence is wrong (or an overflow bound is
+violated); a pass plus the in-process differential tests
+(`rust/tests/differential.rs`) is the closest this container gets to
+running the kernels (no Rust toolchain is baked in).
+
+Run: python3 tools/simd_mirror_check.py
+"""
+
+import random
+import sys
+
+I8 = (-128, 127)
+NR = 8
+
+
+def check_i16(v, what):
+    assert -(1 << 15) <= v < (1 << 15), f"{what} leaves i16 range: {v}"
+    return v
+
+
+def check_i32(v, what):
+    assert -(1 << 31) <= v < (1 << 31), f"{what} leaves i32 range: {v}"
+    return v
+
+
+def madd_epi16(a16, b16, what="madd"):
+    """_mm256_madd_epi16 on two 16-lane i16 vectors -> 8 i32 lanes.
+
+    Saturation happens only when both pair products are (-32768)^2; the
+    assertion documents that our operands can never get there.
+    """
+    assert len(a16) == len(b16) == 16
+    out = []
+    for l in range(8):
+        p0 = check_i16(a16[2 * l], what + ".a") * check_i16(b16[2 * l], what + ".b")
+        p1 = check_i16(a16[2 * l + 1], what + ".a") * check_i16(b16[2 * l + 1], what + ".b")
+        assert not (p0 == p1 == (1 << 30)), "madd saturation case reached"
+        out.append(check_i32(p0 + p1, what + ".sum"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Packed GEMM micro-kernel mirror (linalg/gemm.rs :: avx2::gemm_block)
+# ---------------------------------------------------------------------------
+
+
+def pack(w, d_out, d_in):
+    """PackedGemm::pack: column panels of NR units, k-major interleaved."""
+    panels = (d_out + NR - 1) // NR
+    packed = [0] * (panels * d_in * NR)
+    for p in range(panels):
+        base = p * d_in * NR
+        for lane in range(NR):
+            unit = p * NR + lane
+            if unit >= d_out:
+                continue
+            for k in range(d_in):
+                packed[base + k * NR + lane] = w[unit * d_in + k]
+    return packed
+
+
+def load_wpair(panel, k):
+    """16 bytes at k*NR: w[k][0..8] then w[k+1][0..8], unpack-interleaved
+    so i16 lane 2j = w[k][j], lane 2j+1 = w[k+1][j]."""
+    lo = panel[k * NR : k * NR + 8]
+    hi = panel[(k + 1) * NR : (k + 1) * NR + 8]
+    lanes = []
+    for j in range(8):
+        lanes.extend([lo[j], hi[j]])
+    return lanes
+
+
+def load_wlast(panel, k):
+    lo = panel[k * NR : k * NR + 8]
+    lanes = []
+    for j in range(8):
+        lanes.extend([lo[j], 0])
+    return lanes
+
+
+def avx2_gemm_row(packed, d_in, d_out, xrow):
+    """One activation row through the madd micro-kernel, all panels."""
+    out = [0] * d_out
+    panels = len(packed) // (d_in * NR)
+    for p in range(panels):
+        panel = packed[p * d_in * NR : (p + 1) * d_in * NR]
+        acc = [0] * 8
+        k = 0
+        while k + 2 <= d_in:
+            w16 = load_wpair(panel, k)
+            # xpair: every i32 lane holds (low i16 = x[k], high = x[k+1])
+            x16 = [xrow[k], xrow[k + 1]] * 8
+            for l, v in enumerate(madd_epi16(w16, x16, "gemm")):
+                acc[l] = check_i32(acc[l] + v, "gemm.acc")
+            k += 2
+        if k < d_in:
+            w16 = load_wlast(panel, k)
+            x16 = [xrow[k], 0] * 8
+            for l, v in enumerate(madd_epi16(w16, x16, "gemm.tail")):
+                acc[l] = check_i32(acc[l] + v, "gemm.acc")
+        take = min(NR, d_out - p * NR)
+        out[p * NR : p * NR + take] = acc[:take]
+    return out
+
+
+def fuzz_packed_gemm(rng, iters):
+    for it in range(iters):
+        d_in = rng.randrange(1, 70)
+        d_out = rng.randrange(1, 40)
+        w = [rng.randint(*I8) for _ in range(d_out * d_in)]
+        x = [rng.randint(*I8) for _ in range(d_in)]
+        packed = pack(w, d_out, d_in)
+        got = avx2_gemm_row(packed, d_in, d_out, x)
+        want = [sum(x[k] * w[o * d_in + k] for k in range(d_in)) for o in range(d_out)]
+        assert got == want, f"gemm mirror diverged: it={it} d_in={d_in} d_out={d_out}"
+    print(f"packed GEMM madd micro-kernel mirror: {iters} shapes OK")
+
+
+# ---------------------------------------------------------------------------
+# dot1 / gemm_nt inner loop mirror (16-wide cvtepi8_epi16 + madd)
+# ---------------------------------------------------------------------------
+
+
+def avx2_dot(a, b):
+    kd = len(a)
+    acc = [0] * 8
+    t = 0
+    while t + 16 <= kd:
+        for l, v in enumerate(madd_epi16(a[t : t + 16], b[t : t + 16], "nt")):
+            acc[l] = check_i32(acc[l] + v, "nt.acc")
+        t += 16
+    s = sum(acc)
+    while t < kd:
+        s += a[t] * b[t]
+        t += 1
+    return s
+
+
+def fuzz_dot(rng, iters):
+    for it in range(iters):
+        kd = rng.randrange(1, 100)
+        a = [rng.randint(*I8) for _ in range(kd)]
+        b = [rng.randint(*I8) for _ in range(kd)]
+        assert avx2_dot(a, b) == sum(x * y for x, y in zip(a, b)), f"dot it={it} kd={kd}"
+    print(f"gemm_nt 16-wide madd dot mirror: {iters} lengths OK")
+
+
+# ---------------------------------------------------------------------------
+# HCCS fused stages 2-4 mirror (hccs/batch.rs :: avx2::fused_scores)
+# ---------------------------------------------------------------------------
+
+
+def mullo_epi16(a, b, what):
+    """Truncating i16 lane multiply; the assertion proves the kernel
+    never actually truncates (S*delta <= B <= 32767)."""
+    full = a * b
+    check_i16(full, what)
+    return full
+
+
+def avx2_fused_scores(row, m, b, s, dmax):
+    n = len(row)
+    out = [0] * n
+    d_eff = min(dmax, 255)
+    zlanes = [0] * 8
+    i = 0
+    while i + 16 <= n:
+        x16 = row[i : i + 16]  # cvtepi8_epi16: exact sign extension
+        delta = [min(check_i16(m - x, "fs.sub"), d_eff) for x in x16]
+        si = [check_i16(b - mullo_epi16(s, d, "fs.mul"), "fs.score") for d in delta]
+        out[i : i + 16] = si  # cvtepi16_epi32 widen + store
+        for l, v in enumerate(madd_epi16(si, [1] * 16, "fs.z")):
+            zlanes[l] = check_i32(zlanes[l] + v, "fs.zacc")
+        i += 16
+    z = sum(zlanes)
+    while i < n:
+        delta = min(m - row[i], dmax)
+        si = b - s * delta
+        assert si >= 0
+        out[i] = si
+        z += si
+        i += 1
+    return out, z
+
+
+def row_max_mirror(row):
+    """32-lane max_epi8 with an i8::MIN-filled accumulator + stack
+    reduce; remainder scalar.  Equivalent to max(row) for ANY row,
+    including all-negative ones (the zero-injection hazard the Rust
+    kernel avoids by not using byte-shift shuffles)."""
+    acc = [-128] * 32
+    t = 0
+    while t + 32 <= len(row):
+        acc = [max(a, v) for a, v in zip(acc, row[t : t + 32])]
+        t += 32
+    m = max(acc)
+    for v in row[t:]:
+        m = max(m, v)
+    return m
+
+
+def mullo_epi32(a, b, what):
+    full = a * b
+    check_i32(full, what)
+    return full
+
+
+def scale_mulshift_min_mirror(scores, mul, shift, cap):
+    # _mm256_sra_epi32 is arithmetic; on our non-negative inputs it is
+    # exactly Rust's `>> shift` (floor division by 2^shift).
+    return [min(mullo_epi32(v, mul, "s5.mul") >> shift, cap) for v in scores]
+
+
+def stage5(scores, z, mode):
+    T16, T8, INV = 32767, 255, 15
+    if mode == "i16_div":
+        rho = T16 // z
+        return [mullo_epi32(v, rho, "s5.div16") for v in scores]
+    if mode == "i16_clb":
+        k = z.bit_length() - 1
+        return scale_mulshift_min_mirror(scores, T16, k, T16)
+    if mode == "i8_div":
+        rho8 = (T8 << INV) // z
+        return scale_mulshift_min_mirror(scores, rho8, INV, T8)
+    rho8 = (T8 << INV) >> (z.bit_length() - 1)
+    return scale_mulshift_min_mirror(scores, rho8, INV, T8)
+
+
+def ref_hccs(row, b, s, dmax, mode):
+    m = max(row)
+    scores = [b - s * min(m - x, dmax) for x in row]
+    z = sum(scores)
+    assert 0 < z <= 32767, f"infeasible fuzz params: Z={z}"
+    T16, T8, INV = 32767, 255, 15
+    if mode == "i16_div":
+        rho = T16 // z
+        return [v * rho for v in scores]
+    if mode == "i16_clb":
+        k = z.bit_length() - 1
+        return [min((v * T16) >> k, T16) for v in scores]
+    if mode == "i8_div":
+        rho8 = (T8 << INV) // z
+        return [min((v * rho8) >> INV, T8) for v in scores]
+    rho8 = (T8 << INV) >> (z.bit_length() - 1)
+    return [min((v * rho8) >> INV, T8) for v in scores]
+
+
+def feasible_theta(rng, n):
+    s = rng.randrange(0, 5)
+    dmax = rng.randrange(1, 128)
+    lo = s * dmax + -(-256 // n)  # ceil(256/n)
+    hi = 32767 // n
+    while lo > hi:
+        dmax = max(1, dmax // 2)
+        if dmax == 1 and s > 0:
+            s -= 1
+        lo = s * dmax + -(-256 // n)
+    return rng.randrange(lo, hi + 1), s, dmax
+
+
+def fuzz_hccs(rng, iters):
+    modes = ["i16_div", "i16_clb", "i8_div", "i8_clb"]
+    for it in range(iters):
+        n = rng.randrange(1, 220)
+        b, s, dmax = feasible_theta(rng, n)
+        row = [rng.randint(*I8) for _ in range(n)]
+        if it % 3 == 0:
+            row = [-abs(v) or -1 for v in row]  # all-negative row-max hazard
+        if it % 5 == 0:
+            row = [row[0]] * n  # constant row: Z at its band edge
+        m = row_max_mirror(row)
+        assert m == max(row), f"row_max mirror diverged: it={it}"
+        scores, z = avx2_fused_scores(row, m, b, s, dmax)
+        ref_scores = [b - s * min(m - x, dmax) for x in row]
+        assert scores == ref_scores and z == sum(ref_scores), (
+            f"fused_scores mirror diverged: it={it} n={n} theta=({b},{s},{dmax})"
+        )
+        for mode in modes:
+            got = stage5(list(scores), z, mode)
+            want = ref_hccs(row, b, s, dmax, mode)
+            assert got == want, f"stage5 mirror diverged: it={it} n={n} mode={mode}"
+    print(f"HCCS stages 1-5 lane mirror: {iters} rows x 4 modes OK")
+
+
+def main():
+    rng = random.Random(0x51D)
+    fuzz_packed_gemm(rng, 400)
+    fuzz_dot(rng, 400)
+    fuzz_hccs(rng, 600)
+    print("all SIMD lane mirrors agree with their references")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
