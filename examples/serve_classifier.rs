@@ -130,6 +130,7 @@ fn main() -> Result<()> {
                     },
                     shards,
                     length_bands,
+                    max_in_flight: None,
                 },
             )?;
             let (correct, latencies, wall) = run_workload(&front, task, requests, seed)?;

@@ -1,18 +1,44 @@
-//! Bench target for **Tables I/II** (the accuracy-table harness) and the
-//! end-to-end serving path: measures PJRT model-execute latency, the
-//! coordinator overhead on top of it, and eval throughput per variant.
+//! End-to-end serving bench: the **overload sweep** that gates graceful
+//! degradation in CI, plus the artifact-gated PJRT latency sections.
 //!
-//! Requires `make artifacts`; prints SKIP lines otherwise so `cargo
-//! bench` stays green on a fresh checkout.
+//! The sweep runs the artifact-free native backend behind the sharded
+//! batching engine with a per-request deadline, measures closed-loop
+//! peak throughput, then offers open-loop load at 0.5x / 1x / 2x peak
+//! and reports goodput (completed within deadline), shed fraction, and
+//! latency percentiles per point.  The CI contract (`bench-smoke`):
+//!
+//! * `goodput_rows_per_s` at 2x offered load stays >= 0.8x peak — the
+//!   engine sheds expired work instead of collapsing under a backlog;
+//! * `shed` > 0 at 2x — overload is actually being shed, not queued;
+//! * `p99_us` at 2x stays bounded — deadline shedding caps queue wait.
+//!
+//! Writes `BENCH_serving_e2e.json` when `HCCS_BENCH_JSON` is set (the
+//! schema is documented in `EXPERIMENTS.md`); honors the
+//! `HCCS_BENCH_WARMUP_MS` / `HCCS_BENCH_MEASURE_MS` budget overrides.
+//!
+//! The PJRT sections (raw model execute, coordinator overhead, table
+//! regeneration) still require `make artifacts` and print SKIP lines
+//! otherwise, so `cargo bench` stays green on a fresh checkout.
 
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::rc::Rc;
-use std::time::Instant;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
 
-use hccs::benchkit::{bench_with, sink};
-use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use hccs::benchkit::{bench_with, budgets, sink, write_json};
+use hccs::coordinator::{is_shed_error, BatchPolicy, Coordinator, CoordinatorConfig, InferReply};
 use hccs::data::{TaskKind, WorkloadGen};
+use hccs::json::{obj, Value};
+use hccs::model::{ModelConfig, NativeBackend, NativeModel, NativeServeConfig, SoftmaxBackend};
 use hccs::runtime::{manifest::summary_path, ModelRunner, PairSummary, Runtime};
+use hccs::server::InferBackend;
+
+/// Per-request SLO for the sweep.  Must dwarf `max_wait` (1ms) so the
+/// deadline bites on *queue backlog*, not on routine batching delay.
+const DEADLINE: Duration = Duration::from_millis(25);
+const WINDOW: usize = 64;
+const OFFERED_X: [f64; 3] = [0.5, 1.0, 2.0];
 
 fn artifacts_dir() -> PathBuf {
     for base in ["artifacts", "../artifacts"] {
@@ -24,16 +50,224 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
+/// Pre-tokenized request pool (the sweep measures serving, not
+/// tokenization).
+fn request_pool(task: TaskKind, n: usize) -> Vec<(Vec<i32>, Vec<i32>)> {
+    let mut generator = WorkloadGen::new(task, 3);
+    (0..n)
+        .map(|_| {
+            let e = generator.next_example();
+            (e.ids, e.segments)
+        })
+        .collect()
+}
+
+fn native_backend() -> NativeBackend {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig {
+        layers: 1,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        seq_len: task.max_len(),
+        vocab: hccs::data::VOCAB_SIZE as usize,
+        n_classes: 2,
+    };
+    let model = std::sync::Arc::new(NativeModel::new(cfg, task, 42).unwrap());
+    NativeBackend::with_config(
+        model,
+        SoftmaxBackend::parse("i16_div").unwrap(),
+        NativeServeConfig {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+            shards: 2,
+            length_bands: 1,
+            // Effectively uncapped: the sweep exercises *deadline*
+            // shedding at flush time, not the admission occupancy gate.
+            max_in_flight: Some(4096),
+        },
+    )
+    .unwrap()
+}
+
+/// Closed-loop peak: keep `WINDOW` requests in flight (no deadline) and
+/// count completions per second — the capacity the sweep offers
+/// multiples of.
+fn measure_peak(backend: &NativeBackend, pool: &[(Vec<i32>, Vec<i32>)], budget: Duration) -> f64 {
+    let t0 = Instant::now();
+    let mut inflight: VecDeque<Receiver<Result<InferReply, String>>> = VecDeque::new();
+    let mut k = 0usize;
+    let submit = |inflight: &mut VecDeque<_>, k: &mut usize| {
+        let (ids, segs) = pool[*k % pool.len()].clone();
+        *k += 1;
+        inflight.push_back(backend.submit_request(ids, segs).expect("peak submit"));
+    };
+    for _ in 0..WINDOW {
+        submit(&mut inflight, &mut k);
+    }
+    let mut done = 0u64;
+    while t0.elapsed() < budget {
+        let rx = inflight.pop_front().expect("window never empties");
+        rx.recv().expect("engine alive").expect("no deadline => no shed");
+        done += 1;
+        submit(&mut inflight, &mut k);
+    }
+    for rx in inflight {
+        rx.recv().expect("engine alive").expect("no deadline => no shed");
+        done += 1;
+    }
+    done as f64 / t0.elapsed().as_secs_f64()
+}
+
+struct SweepPoint {
+    offered_x: f64,
+    offered_rows_per_s: f64,
+    goodput_rows_per_s: f64,
+    shed_fraction: f64,
+    completed: u64,
+    shed: u64,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+/// Open-loop point: pace submissions at `offered` rows/s with a
+/// `DEADLINE` SLO on each, drain replies on a second thread, and
+/// classify completed vs shed.
+fn sweep_point(
+    backend: &NativeBackend,
+    pool: &[(Vec<i32>, Vec<i32>)],
+    peak: f64,
+    offered_x: f64,
+    budget: Duration,
+) -> SweepPoint {
+    let offered = (peak * offered_x).max(1.0);
+    let (tx, rx) = std::sync::mpsc::channel::<Receiver<Result<InferReply, String>>>();
+    let drainer = std::thread::spawn(move || {
+        let (mut completed, mut shed) = (0u64, 0u64);
+        let mut lat_us: Vec<u64> = Vec::new();
+        for reply_rx in rx {
+            match reply_rx.recv().expect("engine alive") {
+                Ok(reply) => {
+                    completed += 1;
+                    lat_us.push(reply.latency.as_micros() as u64);
+                }
+                Err(msg) if is_shed_error(&msg) => shed += 1,
+                Err(msg) => panic!("non-shed serving error: {msg}"),
+            }
+        }
+        lat_us.sort_unstable();
+        (completed, shed, lat_us)
+    });
+
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    let mut shed_at_admission = 0u64;
+    while t0.elapsed() < budget {
+        // Pace to the offered rate: sleep until this request's slot.
+        let target = Duration::from_secs_f64(submitted as f64 / offered);
+        if let Some(wait) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        let (ids, segs) = pool[submitted as usize % pool.len()].clone();
+        match backend.submit_with_deadline(ids, segs, Some(Instant::now() + DEADLINE)) {
+            Ok(reply_rx) => tx.send(reply_rx).expect("drainer alive"),
+            Err(e) if is_shed_error(&format!("{e}")) => shed_at_admission += 1,
+            Err(e) => panic!("non-shed submit error: {e:#}"),
+        }
+        submitted += 1;
+    }
+    drop(tx);
+    let wall = t0.elapsed();
+    let (completed, shed_at_flush, lat_us) = drainer.join().expect("drainer");
+    let shed = shed_at_flush + shed_at_admission;
+    let pct = |q: usize| -> u64 {
+        if lat_us.is_empty() {
+            0
+        } else {
+            lat_us[(lat_us.len() * q / 100).min(lat_us.len() - 1)]
+        }
+    };
+    SweepPoint {
+        offered_x,
+        offered_rows_per_s: submitted as f64 / wall.as_secs_f64(),
+        goodput_rows_per_s: completed as f64 / wall.as_secs_f64(),
+        shed_fraction: shed as f64 / (submitted.max(1)) as f64,
+        completed,
+        shed,
+        p50_us: pct(50),
+        p99_us: pct(99),
+    }
+}
+
+/// The always-on section: native overload sweep + JSON artifact.
+fn native_overload_sweep() {
+    println!("== native overload sweep (deadline {DEADLINE:?}, 2 shards, batch 8) ==");
+    let (warmup, measure) = budgets();
+    let backend = native_backend();
+    let pool = request_pool(TaskKind::Sst2s, 256);
+
+    // Warm the dispatch path and page in the weights before timing.
+    let _ = measure_peak(&backend, &pool, warmup);
+    let peak = measure_peak(&backend, &pool, measure);
+    println!("  closed-loop peak (window {WINDOW}): {peak:.1} rows/s");
+
+    let mut sweep_json: Vec<Value> = Vec::new();
+    for offered_x in OFFERED_X {
+        let p = sweep_point(&backend, &pool, peak, offered_x, measure);
+        println!(
+            "  offered {:>4.1}x ({:>8.1} rows/s): goodput {:>8.1} rows/s, shed {:>5.1}% \
+             ({} completed, {} shed), p50 {}us p99 {}us",
+            p.offered_x,
+            p.offered_rows_per_s,
+            p.goodput_rows_per_s,
+            p.shed_fraction * 100.0,
+            p.completed,
+            p.shed,
+            p.p50_us,
+            p.p99_us,
+        );
+        sweep_json.push(obj(vec![
+            ("offered_x", p.offered_x.into()),
+            ("offered_rows_per_s", p.offered_rows_per_s.into()),
+            ("goodput_rows_per_s", p.goodput_rows_per_s.into()),
+            ("shed_fraction", p.shed_fraction.into()),
+            ("completed", (p.completed as i64).into()),
+            ("shed", (p.shed as i64).into()),
+            ("p50_us", (p.p50_us as i64).into()),
+            ("p99_us", (p.p99_us as i64).into()),
+        ]));
+    }
+    let shed_total = backend.shed_count() + backend.deadline_shed_count();
+    println!(
+        "  engine shed counters: {shed_total} total (deadline {})",
+        backend.deadline_shed_count()
+    );
+    backend.shutdown();
+
+    write_json(
+        "serving_e2e",
+        &obj(vec![
+            ("bench", "serving_e2e".into()),
+            ("backend", "native".into()),
+            ("deadline_ms", (DEADLINE.as_millis() as i64).into()),
+            ("window", (WINDOW as i64).into()),
+            ("peak_rows_per_s", peak.into()),
+            ("sweep", Value::Arr(sweep_json)),
+        ]),
+    );
+}
+
 fn main() {
+    native_overload_sweep();
+
     let artifacts = artifacts_dir();
     let Some(spath) = summary_path(&artifacts, "bert-tiny", "sst2s") else {
-        println!("SKIP serving_e2e: no artifacts (run `make artifacts`)");
+        println!("\nSKIP pjrt sections: no artifacts (run `make artifacts`)");
         return;
     };
     let summary = PairSummary::load(&spath).unwrap();
 
     // 1. Raw PJRT execute latency, float vs HCCS variant, b1 and b8.
-    println!("== raw model execute (PJRT, bert-tiny/sst2s) ==");
+    println!("\n== raw model execute (PJRT, bert-tiny/sst2s) ==");
     let rt = Rc::new(Runtime::cpu().unwrap());
     let mut generator = WorkloadGen::new(TaskKind::Sst2s, 3);
     for variant in ["float", "hccs"] {
@@ -50,8 +284,8 @@ fn main() {
             }
             let r = bench_with(
                 &format!("execute {variant} b{b}"),
-                std::time::Duration::from_millis(200),
-                std::time::Duration::from_millis(600),
+                Duration::from_millis(200),
+                Duration::from_millis(600),
                 &mut || {
                     sink(runner.run(&ids, &segs).unwrap());
                 },
@@ -71,7 +305,7 @@ fn main() {
         model: "bert-tiny".into(),
         task: "sst2s".into(),
         variant: "hccs".into(),
-        policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(5) },
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) },
         max_in_flight: None,
         shards: 1,
     })

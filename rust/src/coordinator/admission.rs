@@ -6,15 +6,26 @@
 //! `max_in_flight` requests admitted but unanswered, with an optional
 //! shed policy that rejects early instead of queueing (the "fail fast
 //! under overload" serving discipline).
+//!
+//! Deadline/SLO awareness rides on the same gate: a request whose
+//! deadline has **already passed** when it asks for a slot is rejected
+//! with [`RejectReason::DeadlineExpired`] — spending a queue slot (let
+//! alone MACs) on it could only ever produce a reply the client has
+//! stopped waiting for.  Requests that blow their deadline *after*
+//! admission are fast-failed by the batcher's flush path instead (see
+//! `super::batcher::partition_expired`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Why a request was not admitted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RejectReason {
     /// In-flight occupancy at capacity.
     Overloaded,
+    /// The request's deadline had already passed at admission time.
+    DeadlineExpired,
 }
 
 /// Shared admission state (clone-per-client).
@@ -24,6 +35,7 @@ pub struct AdmissionControl {
     in_flight: Arc<AtomicU64>,
     admitted: Arc<AtomicU64>,
     rejected: Arc<AtomicU64>,
+    deadline_shed: Arc<AtomicU64>,
 }
 
 /// RAII permit: releases its in-flight slot on drop (even on panic /
@@ -46,7 +58,27 @@ impl AdmissionControl {
             in_flight: Arc::new(AtomicU64::new(0)),
             admitted: Arc::new(AtomicU64::new(0)),
             rejected: Arc::new(AtomicU64::new(0)),
+            deadline_shed: Arc::new(AtomicU64::new(0)),
         }
+    }
+
+    /// Try to admit one request that must complete by `deadline`.
+    ///
+    /// A request whose deadline has already passed at `now` is rejected
+    /// without consuming a slot: the client has stopped waiting, so the
+    /// only useful reply is an immediate fast-fail.  `deadline == None`
+    /// means "no SLO" and degrades to plain occupancy admission.
+    pub fn try_admit_by(
+        &self,
+        deadline: Option<Instant>,
+        now: Instant,
+    ) -> Result<Permit, RejectReason> {
+        if deadline.is_some_and(|d| d <= now) {
+            self.deadline_shed.fetch_add(1, Ordering::Relaxed);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(RejectReason::DeadlineExpired);
+        }
+        self.try_admit()
     }
 
     /// Try to admit one request.
@@ -83,6 +115,12 @@ impl AdmissionControl {
     pub fn rejected(&self) -> u64 {
         self.rejected.load(Ordering::Relaxed)
     }
+
+    /// Requests rejected specifically because their deadline had
+    /// already passed at admission time (subset of `rejected`).
+    pub fn deadline_shed(&self) -> u64 {
+        self.deadline_shed.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +140,29 @@ mod tests {
         let _p4 = ac.try_admit().unwrap();
         assert_eq!(ac.admitted(), 4);
         assert_eq!(ac.rejected(), 1);
+    }
+
+    #[test]
+    fn expired_deadline_is_rejected_without_consuming_a_slot() {
+        let ac = AdmissionControl::new(1);
+        let now = Instant::now();
+        let past = now - std::time::Duration::from_millis(1);
+        assert_eq!(
+            ac.try_admit_by(Some(past), now).err(),
+            Some(RejectReason::DeadlineExpired)
+        );
+        assert_eq!(ac.in_flight(), 0, "expired request must not hold a slot");
+        assert_eq!(ac.deadline_shed(), 1);
+        assert_eq!(ac.rejected(), 1);
+
+        // A live deadline (or none) admits normally.
+        let future = now + std::time::Duration::from_secs(1);
+        let p = ac.try_admit_by(Some(future), now).unwrap();
+        drop(p);
+        let p = ac.try_admit_by(None, now).unwrap();
+        drop(p);
+        assert_eq!(ac.admitted(), 2);
+        assert_eq!(ac.deadline_shed(), 1, "occupancy rejects don't count as deadline sheds");
     }
 
     #[test]

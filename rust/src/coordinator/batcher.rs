@@ -153,6 +153,29 @@ pub(crate) fn drain_expired<T>(
     out
 }
 
+/// Split a flushed batch's items into `(live, expired)` by per-request
+/// deadline, preserving FIFO order within both halves.  The executors
+/// call this at the top of every flush so requests that blew their SLO
+/// while queued are fast-failed with a shed reply instead of spending
+/// MACs on an answer nobody is waiting for.  `deadline_of` returning
+/// `None` means "no SLO" — always live.
+pub(crate) fn partition_expired<T>(
+    items: Vec<QueuedRequest<T>>,
+    now: Instant,
+    deadline_of: impl Fn(&T) -> Option<Instant>,
+) -> (Vec<QueuedRequest<T>>, Vec<QueuedRequest<T>>) {
+    let mut live = Vec::with_capacity(items.len());
+    let mut expired = Vec::new();
+    for q in items {
+        if deadline_of(&q.payload).is_some_and(|d| d <= now) {
+            expired.push(q);
+        } else {
+            live.push(q);
+        }
+    }
+    (live, expired)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +248,25 @@ mod tests {
         assert_eq!(flushed[1].0, 1);
         assert_eq!(flushed[1].1.items.len(), 1);
         assert!(bands.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn partition_expired_splits_by_deadline_and_keeps_fifo() {
+        let now = t0();
+        let later = now + Duration::from_millis(10);
+        // Payload = (id, deadline).
+        let items: Vec<QueuedRequest<(u32, Option<Instant>)>> = vec![
+            QueuedRequest { payload: (1, Some(now)), arrived: now },
+            QueuedRequest { payload: (2, None), arrived: now },
+            QueuedRequest { payload: (3, Some(later + Duration::from_millis(1))), arrived: now },
+            QueuedRequest { payload: (4, Some(later)), arrived: now },
+            QueuedRequest { payload: (5, None), arrived: now },
+        ];
+        let (live, expired) = partition_expired(items, later, |p| p.1);
+        let live_ids: Vec<u32> = live.iter().map(|q| q.payload.0).collect();
+        let expired_ids: Vec<u32> = expired.iter().map(|q| q.payload.0).collect();
+        assert_eq!(live_ids, vec![2, 3, 5], "None and future deadlines stay live, in order");
+        assert_eq!(expired_ids, vec![1, 4], "at-or-past deadlines expire, in order");
     }
 
     #[test]

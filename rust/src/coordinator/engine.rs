@@ -65,6 +65,10 @@ pub struct InferReply {
 struct Envelope {
     req: InferRequest,
     reply: Sender<Result<InferReply, String>>,
+    /// Complete-by deadline (None = no SLO).  Checked at admission and
+    /// again at flush time: a request that expires while queued is
+    /// fast-failed with a [`SHED_PREFIX`] reply instead of running.
+    deadline: Option<Instant>,
     /// Admission slot, released when the envelope (and so the reply) is
     /// done — including on error paths.
     _permit: Option<super::admission::Permit>,
@@ -112,20 +116,71 @@ impl EngineHandle {
 /// How long an idle executor sleeps when no deadline is pending.
 const IDLE_TIMEOUT: Duration = Duration::from_secs(3600);
 
+/// Every load-shed error reply (overload reject, deadline fast-fail)
+/// starts with this prefix, so callers — the serving tiers, the
+/// overload bench — can classify shed vs. genuine failure without
+/// parsing prose.
+pub const SHED_PREFIX: &str = "shed:";
+
+/// True when an engine error string is a load-shed reply (see
+/// [`SHED_PREFIX`]) rather than a malformed request or an executor
+/// failure.
+pub fn is_shed_error(msg: &str) -> bool {
+    msg.trim_start().starts_with(SHED_PREFIX)
+}
+
 /// Acquire an admission permit (`Ok(None)` when unbounded), shedding
-/// with an "overloaded" error at capacity.  Shared by both engine
-/// handles so backpressure behaviour cannot drift between them.
-fn try_permit(
+/// with a [`SHED_PREFIX`] error at capacity or when the request's
+/// deadline has already passed.  Shared by all engine handles
+/// (including the native backend) so backpressure behaviour cannot
+/// drift between them.
+pub(crate) fn try_permit(
     admission: &Option<super::admission::AdmissionControl>,
+    deadline: Option<Instant>,
     unit: &str,
 ) -> Result<Option<super::admission::Permit>> {
+    let now = Instant::now();
     match admission {
-        None => Ok(None),
-        Some(ac) => ac
-            .try_admit()
-            .map(Some)
-            .map_err(|_| anyhow!("overloaded: {} {unit} in flight", ac.in_flight())),
+        None => {
+            // No occupancy limit, but an already-dead request is still
+            // not worth a queue slot.
+            if deadline.is_some_and(|d| d <= now) {
+                return Err(anyhow!("{SHED_PREFIX} deadline expired before admission"));
+            }
+            Ok(None)
+        }
+        Some(ac) => ac.try_admit_by(deadline, now).map(Some).map_err(|r| match r {
+            super::admission::RejectReason::DeadlineExpired => {
+                anyhow!("{SHED_PREFIX} deadline expired before admission")
+            }
+            super::admission::RejectReason::Overloaded => {
+                anyhow!("{SHED_PREFIX} overloaded: {} {unit} in flight", ac.in_flight())
+            }
+        }),
     }
+}
+
+/// Fast-fail the expired half of a flushed batch (see
+/// [`super::batcher::partition_expired`]): every expired request gets a
+/// [`SHED_PREFIX`] reply and a `shed_deadline` count, and the live rest
+/// is returned for the kernel.  Shared by all three executors so the
+/// deadline contract cannot drift between engines.
+pub(crate) fn shed_expired<T>(
+    items: Vec<QueuedRequest<T>>,
+    deadline_of: impl Fn(&T) -> Option<Instant>,
+    shed_ctr: &RolledCounter,
+    mut fail: impl FnMut(T, String),
+) -> Vec<QueuedRequest<T>> {
+    let (live, expired) = super::batcher::partition_expired(items, Instant::now(), deadline_of);
+    for q in expired {
+        let waited = q.arrived.elapsed();
+        shed_ctr.inc();
+        fail(
+            q.payload,
+            format!("{SHED_PREFIX} deadline expired after {waited:?} in queue"),
+        );
+    }
+    live
 }
 
 /// One metric kept under both its aggregate name and a per-shard
@@ -350,13 +405,33 @@ impl Coordinator {
         self.admission.as_ref().map_or(0, |a| a.rejected())
     }
 
-    /// Submit a request; returns the channel the reply will arrive on.
+    /// Deadline-shed count: requests fast-failed because their SLO had
+    /// already expired, at admission or while queued.
+    pub fn deadline_shed_count(&self) -> u64 {
+        self.admission.as_ref().map_or(0, |a| a.deadline_shed())
+            + self.metrics.counter("coordinator.shed_deadline").get()
+    }
+
+    /// Submit a request with no deadline; returns the reply channel.
     pub fn submit(
         &self,
         ids: Vec<i32>,
         segments: Vec<i32>,
     ) -> Result<Receiver<Result<InferReply, String>>> {
-        let permit = try_permit(&self.admission, "requests")?;
+        self.submit_deadline(ids, segments, None)
+    }
+
+    /// Submit a request that must complete by `deadline` (None = no
+    /// SLO); returns the channel the reply will arrive on.  An
+    /// already-expired deadline sheds immediately; one that expires
+    /// while queued is fast-failed at flush time.
+    pub fn submit_deadline(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        let permit = try_permit(&self.admission, deadline, "requests")?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = mpsc::channel();
         let ticket = self.router.route();
@@ -364,6 +439,7 @@ impl Coordinator {
             .send(EngineMsg::Work(Envelope {
                 req: InferRequest { id, ids, segments },
                 reply: reply_tx,
+                deadline,
                 _permit: permit,
                 _ticket: ticket,
             }))
@@ -430,8 +506,15 @@ fn executor_main(
     let batch_ctr = RolledCounter::new(&metrics, "coordinator.batches", shard);
     let req_ctr = RolledCounter::new(&metrics, "coordinator.requests", shard);
     let pad_ctr = RolledCounter::new(&metrics, "coordinator.padding_rows", shard);
+    let shed_ctr = RolledCounter::new(&metrics, "coordinator.shed_deadline", shard);
 
     batching_event_loop(cfg.policy, rx, &req_ctr, |items| {
+        let items = shed_expired(items, |env| env.deadline, &shed_ctr, |env, msg| {
+            let _ = env.reply.send(Err(msg));
+        });
+        if items.is_empty() {
+            return;
+        }
         run_batch(&runner, items, &queue_hist, &exec_hist, &pad_ctr);
         batch_ctr.inc();
     });
@@ -447,7 +530,7 @@ fn run_batch(
     let b = runner.batch();
     let l = runner.seq_len();
     let c = runner.n_classes();
-    debug_assert!(items.len() <= b);
+    debug_assert!(!items.is_empty() && items.len() <= b);
     let started = Instant::now();
     for q in &items {
         queue_hist.record(started.duration_since(q.arrived));
@@ -528,6 +611,8 @@ pub struct ScoreConfig {
 struct ScoreEnvelope {
     x: Vec<i8>,
     reply: Sender<Result<ScoreReply, String>>,
+    /// Complete-by deadline (None = no SLO), as in [`Envelope::deadline`].
+    deadline: Option<Instant>,
     _permit: Option<super::admission::Permit>,
     _ticket: ShardTicket,
 }
@@ -592,18 +677,37 @@ impl ScoreEngine {
         self.admission.as_ref().map_or(0, |a| a.rejected())
     }
 
-    /// Submit one int8 logit row; returns the reply channel.
+    /// Deadline-shed count, as in [`Coordinator::deadline_shed_count`].
+    pub fn deadline_shed_count(&self) -> u64 {
+        self.admission.as_ref().map_or(0, |a| a.deadline_shed())
+            + self.metrics.counter("scorer.shed_deadline").get()
+    }
+
+    /// Submit one int8 logit row with no deadline; returns the reply
+    /// channel.
     pub fn submit(&self, x: Vec<i8>) -> Result<Receiver<Result<ScoreReply, String>>> {
+        self.submit_deadline(x, None)
+    }
+
+    /// Submit one int8 logit row that must complete by `deadline`
+    /// (None = no SLO); deadline semantics as in
+    /// [`Coordinator::submit_deadline`].
+    pub fn submit_deadline(
+        &self,
+        x: Vec<i8>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<ScoreReply, String>>> {
         if x.len() != self.n {
             return Err(anyhow!("row length {} != engine n {}", x.len(), self.n));
         }
-        let permit = try_permit(&self.admission, "rows")?;
+        let permit = try_permit(&self.admission, deadline, "rows")?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let ticket = self.router.route();
         self.txs[ticket.shard()]
             .send(EngineMsg::Work(ScoreEnvelope {
                 x,
                 reply: reply_tx,
+                deadline,
                 _permit: permit,
                 _ticket: ticket,
             }))
@@ -642,9 +746,16 @@ fn score_executor_main(
     let batch_ctr = RolledCounter::new(&metrics, "scorer.batches", shard);
     let req_ctr = RolledCounter::new(&metrics, "scorer.requests", shard);
     let row_ctr = RolledCounter::new(&metrics, "scorer.rows_scored", shard);
+    let shed_ctr = RolledCounter::new(&metrics, "scorer.shed_deadline", shard);
 
     batching_event_loop(cfg.policy, rx, &req_ctr, |items| {
+        let items = shed_expired(items, |env| env.deadline, &shed_ctr, |env, msg| {
+            let _ = env.reply.send(Err(msg));
+        });
         let rows = items.len();
+        if rows == 0 {
+            return;
+        }
         debug_assert!((1..=cfg.policy.max_batch).contains(&rows));
         let started = Instant::now();
         tile.clear();
@@ -805,6 +916,42 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().is_ok(), "request dropped on shutdown");
         }
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn expired_deadlines_are_fast_failed_with_shed_errors() {
+        let mut c = cfg(16, 8, 20);
+        c.max_in_flight = Some(16);
+        let (engine, handle) = ScoreEngine::start(c).unwrap();
+
+        // Already expired at submit: shed at admission, no slot spent.
+        let err = engine
+            .submit_deadline(vec![0i8; 16], Some(Instant::now() - Duration::from_millis(1)))
+            .err()
+            .expect("expired deadline must shed at submit");
+        assert!(is_shed_error(&format!("{err:#}")), "{err:#}");
+        assert_eq!(engine.deadline_shed_count(), 1);
+
+        // Expires while queued (1ms SLO, 20ms flush wait): the flush
+        // fast-fails it with a shed reply instead of scoring it.
+        let rx = engine
+            .submit_deadline(vec![0i8; 16], Some(Instant::now() + Duration::from_millis(1)))
+            .unwrap();
+        let msg = rx.recv().unwrap().expect_err("queued-past-deadline must shed");
+        assert!(is_shed_error(&msg), "{msg}");
+        assert_eq!(engine.metrics.counter("scorer.shed_deadline").get(), 1);
+        assert_eq!(engine.deadline_shed_count(), 2);
+
+        // A request with headroom (and one with no SLO) still completes.
+        let ok = engine
+            .submit_deadline(vec![0i8; 16], Some(Instant::now() + Duration::from_secs(60)))
+            .unwrap();
+        assert!(ok.recv().unwrap().is_ok());
+        assert!(engine.score(vec![0i8; 16]).is_ok());
+        assert_eq!(engine.metrics.counter("scorer.rows_scored").get(), 2);
+
+        engine.shutdown();
         handle.join().unwrap();
     }
 

@@ -31,8 +31,8 @@ pub mod state;
 pub use admission::{AdmissionControl, Permit, RejectReason};
 pub use batcher::{Batch, BatchPolicy, DynamicBatcher, QueuedRequest};
 pub use engine::{
-    Coordinator, CoordinatorConfig, EngineHandle, InferReply, InferRequest, ScoreConfig,
-    ScoreEngine, ScoreReply,
+    is_shed_error, Coordinator, CoordinatorConfig, EngineHandle, InferReply, InferRequest,
+    ScoreConfig, ScoreEngine, ScoreReply, SHED_PREFIX,
 };
 pub use router::{ShardRouter, ShardTicket};
 pub use state::{HeadParamStore, ModelCalib};

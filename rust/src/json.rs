@@ -4,6 +4,15 @@
 //! `python/compile/aot.py` (objects, arrays, numbers incl. scientific
 //! notation, strings with escapes, booleans, null).  Not a general
 //! purpose serializer — but round-trips everything this repo produces.
+//!
+//! For the connection tier (`crate::net`) this module also provides
+//! [`StreamingFramer`]: a push-based, bounded-memory frame scanner that
+//! yields complete top-level JSON objects from arbitrarily chunked
+//! reads (1-byte reads included) without ever buffering more than
+//! [`FrameLimits::max_payload`] bytes.  Framing is a pure byte-at-a-time
+//! state machine, so the emitted frame sequence is invariant under
+//! re-chunking by construction (pinned by a proptest in
+//! `tests/proptests.rs`).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -117,6 +126,14 @@ impl Value {
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, 0, true);
+        s
+    }
+
+    /// Single-line emission (no newlines) — one reply per line on the
+    /// wire protocol, so clients can split on `\n`.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
         s
     }
 
@@ -398,6 +415,185 @@ impl Parser<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming framer: bounded-memory frame extraction from a byte stream
+// ---------------------------------------------------------------------------
+
+/// Hard caps enforced *while scanning*, before any allocation grows —
+/// the framer's memory use is bounded by `max_payload` no matter what
+/// bytes a client sends.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameLimits {
+    /// Maximum bytes per frame (braces included).  Also the upper bound
+    /// on the framer's buffered state.
+    pub max_payload: usize,
+    /// Maximum `{`/`[` nesting depth inside a frame.
+    pub max_depth: usize,
+    /// Maximum bytes inside one string token (escapes counted as the
+    /// bytes they occupy on the wire).
+    pub max_string: usize,
+}
+
+impl Default for FrameLimits {
+    fn default() -> Self {
+        Self { max_payload: 64 * 1024, max_depth: 16, max_string: 16 * 1024 }
+    }
+}
+
+/// Push-based streaming frame scanner: feed it raw reads, get back the
+/// complete top-level objects they finish.
+///
+/// A *frame* is one top-level JSON object (`{` ... matching `}`);
+/// frames may be separated by whitespace only.  Anything else between
+/// frames — a scalar, an array, protocol garbage — is a **connection
+/// error**: the framer poisons itself and every later `push` fails, so
+/// a desynchronized stream can never be silently resynchronized onto a
+/// wrong frame boundary.
+///
+/// The scanner tracks only `(depth, in_string, escaped, string_len)`
+/// plus the bytes of the current partial frame, which caps memory at
+/// [`FrameLimits::max_payload`].  Completed frames are returned as raw
+/// byte buffers for the caller to decode ([`Value::parse`] or a lazy
+/// field scan) — a frame that balances its braces but fails to parse is
+/// the *caller's* per-request error, not a framing error.
+pub struct StreamingFramer {
+    limits: FrameLimits,
+    buf: Vec<u8>,
+    depth: usize,
+    in_string: bool,
+    escaped: bool,
+    str_len: usize,
+    /// Absolute stream offset of `buf[0]` (for error positions).
+    consumed: u64,
+    poisoned: Option<String>,
+}
+
+impl StreamingFramer {
+    pub fn new(limits: FrameLimits) -> Self {
+        Self {
+            limits,
+            buf: Vec::new(),
+            depth: 0,
+            in_string: false,
+            escaped: false,
+            str_len: 0,
+            consumed: 0,
+            poisoned: None,
+        }
+    }
+
+    /// Bytes currently buffered (always <= `limits.max_payload`).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True between frames — the only place a stream may end cleanly.
+    pub fn is_idle(&self) -> bool {
+        self.buf.is_empty() && self.poisoned.is_none()
+    }
+
+    /// Feed a chunk; returns every frame it completed, in stream order.
+    /// An error is terminal: the framer stays poisoned and all later
+    /// pushes return the same error.
+    pub fn push(&mut self, chunk: &[u8]) -> Result<Vec<Vec<u8>>, JsonError> {
+        if let Some(msg) = &self.poisoned {
+            return Err(JsonError { msg: msg.clone(), pos: self.pos() });
+        }
+        let mut out = Vec::new();
+        for &b in chunk {
+            if let Err(e) = self.step(b, &mut out) {
+                self.poisoned = Some(e.msg.clone());
+                self.buf = Vec::new(); // release the partial frame
+                return Err(e);
+            }
+        }
+        Ok(out)
+    }
+
+    fn pos(&self) -> usize {
+        self.consumed as usize + self.buf.len()
+    }
+
+    fn fail(&self, msg: String) -> JsonError {
+        JsonError { msg, pos: self.pos() }
+    }
+
+    fn step(&mut self, b: u8, out: &mut Vec<Vec<u8>>) -> Result<(), JsonError> {
+        if self.buf.is_empty() {
+            // Between frames: whitespace passes, '{' opens, all else is
+            // a protocol violation.
+            match b {
+                b' ' | b'\t' | b'\n' | b'\r' => {
+                    self.consumed += 1;
+                    return Ok(());
+                }
+                b'{' => {
+                    self.depth = 0;
+                    self.in_string = false;
+                    self.escaped = false;
+                }
+                _ => {
+                    return Err(self.fail(format!(
+                        "expected '{{' between frames, got {:?}",
+                        b as char
+                    )))
+                }
+            }
+        }
+        if self.buf.len() >= self.limits.max_payload {
+            return Err(self.fail(format!(
+                "frame exceeds max_payload ({} bytes)",
+                self.limits.max_payload
+            )));
+        }
+        self.buf.push(b);
+        if self.in_string {
+            self.str_len += 1;
+            if self.str_len > self.limits.max_string {
+                return Err(self.fail(format!(
+                    "string exceeds max_string ({} bytes)",
+                    self.limits.max_string
+                )));
+            }
+            if self.escaped {
+                self.escaped = false;
+            } else if b == b'\\' {
+                self.escaped = true;
+            } else if b == b'"' {
+                self.in_string = false;
+            }
+            return Ok(());
+        }
+        match b {
+            b'"' => {
+                self.in_string = true;
+                self.str_len = 0;
+            }
+            b'{' | b'[' => {
+                self.depth += 1;
+                if self.depth > self.limits.max_depth {
+                    return Err(self.fail(format!(
+                        "nesting exceeds max_depth ({})",
+                        self.limits.max_depth
+                    )));
+                }
+            }
+            b'}' | b']' => {
+                // depth >= 1 here: a non-empty buf implies an open
+                // frame whose closers haven't balanced yet.
+                self.depth -= 1;
+                if self.depth == 0 {
+                    let frame = std::mem::take(&mut self.buf);
+                    self.consumed += frame.len() as u64;
+                    out.push(frame);
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -444,5 +640,97 @@ mod tests {
     fn emits_integers_without_fraction() {
         assert_eq!(Value::Num(3.0).to_string_pretty(), "3");
         assert_eq!(Value::Num(3.25).to_string_pretty(), "3.25");
+    }
+
+    #[test]
+    fn compact_emission_is_one_line_and_round_trips() {
+        let v = Value::parse(r#"{"a": [1, 2, {"b": "x\ny"}], "c": -3.5e2}"#).unwrap();
+        let compact = v.to_string_compact();
+        assert!(!compact.contains('\n'), "{compact:?}");
+        assert_eq!(Value::parse(&compact).unwrap(), v);
+    }
+
+    // -- streaming framer ----------------------------------------------------
+
+    fn framer() -> StreamingFramer {
+        StreamingFramer::new(FrameLimits::default())
+    }
+
+    #[test]
+    fn framer_yields_complete_objects_across_chunks() {
+        let mut f = framer();
+        assert!(f.push(b"  {\"id\": 1, \"te").unwrap().is_empty());
+        assert_eq!(f.buffered(), 13);
+        let frames = f.push(b"xt\": \"a b\"}\n{\"id\":2,\"text\":\"c\"}").unwrap();
+        assert_eq!(frames.len(), 2);
+        let v = Value::parse(std::str::from_utf8(&frames[0]).unwrap()).unwrap();
+        assert_eq!(v.req("id").as_i64(), Some(1));
+        assert_eq!(v.req("text").as_str(), Some("a b"));
+        assert!(f.is_idle());
+    }
+
+    #[test]
+    fn framer_one_byte_reads_match_one_push() {
+        let stream = b" {\"a\": [1, {\"b\": \"x{y}\\\"\"}]} \n {\"c\": null}";
+        let whole = framer().push(stream).unwrap();
+        let mut f = framer();
+        let mut bytewise = Vec::new();
+        for &b in stream.iter() {
+            bytewise.extend(f.push(&[b]).unwrap());
+        }
+        assert_eq!(whole, bytewise);
+        assert_eq!(whole.len(), 2);
+    }
+
+    #[test]
+    fn framer_rejects_garbage_between_frames_and_stays_poisoned() {
+        let mut f = framer();
+        assert_eq!(f.push(b"{\"a\":1}").unwrap().len(), 1);
+        let err = f.push(b"hello").unwrap_err();
+        assert!(err.msg.contains("between frames"), "{err}");
+        // Poisoned: a later well-formed frame must NOT be accepted.
+        assert!(f.push(b"{\"a\":1}").is_err());
+        assert!(!f.is_idle());
+    }
+
+    #[test]
+    fn framer_enforces_payload_depth_and_string_caps() {
+        let limits = FrameLimits { max_payload: 32, max_depth: 3, max_string: 8 };
+        let mut f = StreamingFramer::new(limits);
+        let err = f.push(b"{\"k\": \"0123456789\"}").unwrap_err();
+        assert!(err.msg.contains("max_string"), "{err}");
+
+        let mut f = StreamingFramer::new(limits);
+        let err = f.push(b"{\"k\": [[[1]]]}").unwrap_err();
+        assert!(err.msg.contains("max_depth"), "{err}");
+
+        let mut f = StreamingFramer::new(limits);
+        // Numbers dodge the string/depth caps, so only max_payload can
+        // stop an endless digit run.
+        let mut long = b"{\"k\": ".to_vec();
+        long.extend(std::iter::repeat(b'9').take(40));
+        let err = f.push(&long).unwrap_err();
+        assert!(err.msg.contains("max_payload"), "{err}");
+        assert!(f.buffered() <= limits.max_payload);
+    }
+
+    #[test]
+    fn framer_never_buffers_more_than_max_payload() {
+        let limits = FrameLimits { max_payload: 16, ..FrameLimits::default() };
+        let mut f = StreamingFramer::new(limits);
+        // An attacker streaming an endless open string: the framer must
+        // fail at the cap, not grow.
+        let mut failed = false;
+        for _ in 0..1000 {
+            match f.push(b"{\"s\": \"aaaaaaaa") {
+                Ok(_) => assert!(f.buffered() <= 16),
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        assert!(failed, "oversized frame never rejected");
+        assert!(f.buffered() <= 16);
     }
 }

@@ -46,9 +46,12 @@
 //! path with pluggable HCCS/f32 softmax backends),
 //! [`simd`] (runtime AVX2/scalar kernel dispatch — every hot kernel
 //! ships both paths, bit-exact), [`aie_sim`] (AIE cycle model),
-//! [`coordinator`] (serving engines), [`runtime`] (artifact loading /
-//! PJRT, plus the [`runtime::pool`] worker pool that spans one GEMM
-//! pass across cores), [`server`] (text protocol),
+//! [`coordinator`] (serving engines with deadline-aware admission),
+//! [`runtime`] (artifact loading / PJRT, plus the [`runtime::pool`]
+//! worker pool that spans one GEMM pass across cores), [`server`]
+//! (framed serving loop + text protocol), [`net`] (persistent
+//! multi-client TCP tier: streaming JSON framing, per-connection
+//! backpressure, load shedding),
 //! [`data`] / [`tokenizer`] (workloads), [`experiments`] / [`report`] /
 //! [`benchkit`] / [`metrics`] (harnesses), [`error`] / [`json`] /
 //! [`rng`] / [`proptest_lite`] / [`cli`] / [`xla_stub`] (offline
@@ -66,6 +69,7 @@ pub mod json;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod proptest_lite;
 pub mod report;
 pub mod rng;

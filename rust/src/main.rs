@@ -8,6 +8,10 @@
 //! hccs serve   [--backend native|pjrt] [--model M] [--task T] [--seed S] [--mode i16_div|f32]
 //!              [--shards S] [--max-batch B] [--wait-ms W] [--length-bands N]
 //!                                (native sharded executor pool; N length bands per shard)
+//!              [--tcp ADDR] [--deadline-ms MS] [--max-inflight N]
+//!                                (persistent multi-client TCP tier: newline-delimited JSON
+//!                                 frames, per-connection backpressure window N, requests
+//!                                 shed once MS elapses; both flags also apply on stdin)
 //!              [--artifacts DIR] [--variant V] [--batch B]               (pjrt backend only)
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
 //!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile table)
@@ -43,7 +47,7 @@ const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
     "batch=", "max-batch=", "wait-ms=", "shards=", "length-bands=", "device=", "kernel=",
     "n=", "tiles=", "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "roofline",
-    "help",
+    "tcp=", "deadline-ms=", "max-inflight=", "help",
 ];
 
 fn main() -> Result<()> {
@@ -181,6 +185,7 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
         );
     }
     let shards = args.parse_num_at_least("shards", 1usize, 1)?;
+    let (deadline, max_inflight) = serve_slo(args)?;
     let cfg = CoordinatorConfig {
         artifacts: artifacts.to_path_buf(),
         model,
@@ -190,23 +195,97 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
             max_batch: args.parse_num("batch", 8usize)?,
             max_wait: std::time::Duration::from_millis(args.parse_num("wait-ms", 5u64)?),
         },
-        max_in_flight: None,
+        max_in_flight: max_inflight,
         shards,
     };
     let tokenizer = Tokenizer::load(&artifacts.join("vocab.json"))?;
     let (coord, handle) = Coordinator::start(cfg)?;
-    eprintln!("serving on stdin across {shards} shard(s) (one request per line; Ctrl-D to finish)");
-    let n = server::serve(
-        &coord,
-        &tokenizer,
-        task,
-        stdin().lock(),
-        BufWriter::new(stdout().lock()),
-    )?;
+    let coord = std::sync::Arc::new(coord);
+    eprintln!("serving across {shards} shard(s)");
+    let n =
+        run_serve(std::sync::Arc::clone(&coord), tokenizer, task, args, deadline, max_inflight)?;
     coord.shutdown();
     let _ = handle.join();
     eprintln!("served {n} requests\n{}", coord.metrics.render());
     Ok(())
+}
+
+/// Shared `serve` SLO flags: `--deadline-ms` is the per-request budget
+/// (requests past it are shed with a `shed:` error instead of queueing),
+/// `--max-inflight` caps engine admission *and* sizes the TCP tier's
+/// per-connection backpressure window.
+fn serve_slo(args: &Args) -> Result<(Option<std::time::Duration>, Option<usize>)> {
+    let deadline = match args.get("deadline-ms") {
+        Some(_) => {
+            let ms = args.parse_num_at_least("deadline-ms", 1u64, 1)?;
+            Some(std::time::Duration::from_millis(ms))
+        }
+        None => None,
+    };
+    let max_inflight = match args.get("max-inflight") {
+        Some(_) => Some(args.parse_num_at_least("max-inflight", 1usize, 1)?),
+        None => None,
+    };
+    Ok((deadline, max_inflight))
+}
+
+/// Drive a started backend either over TCP (`--tcp ADDR`: persistent
+/// multi-client connections, one JSON object per line) or over stdin
+/// (the newline-delimited text protocol).  Returns the reply count.
+fn run_serve<E>(
+    backend: std::sync::Arc<E>,
+    tokenizer: Tokenizer,
+    task: TaskKind,
+    args: &Args,
+    deadline: Option<std::time::Duration>,
+    max_inflight: Option<usize>,
+) -> Result<u64>
+where
+    E: server::InferBackend + Send + Sync + 'static,
+{
+    match args.get("tcp") {
+        Some(addr) => {
+            let cfg = hccs::net::NetConfig {
+                max_inflight: max_inflight.unwrap_or(hccs::net::NetConfig::default().max_inflight),
+                deadline,
+                ..Default::default()
+            };
+            let srv = hccs::net::TcpServer::start(
+                backend,
+                std::sync::Arc::new(tokenizer),
+                task,
+                addr,
+                cfg,
+            )?;
+            eprintln!(
+                "serving TCP on {} (one JSON object per line, e.g. \
+                 {{\"id\":1,\"text\":\"...\"}}; close stdin / Ctrl-D to stop)",
+                srv.local_addr()
+            );
+            // Block until stdin closes, then drain every connection.
+            let mut sink = String::new();
+            while stdin().read_line(&mut sink)? > 0 {
+                sink.clear();
+            }
+            let metrics = std::sync::Arc::clone(&srv.metrics);
+            srv.shutdown();
+            let n = metrics.counter("net.replies").get();
+            eprintln!("{}", metrics.render());
+            Ok(n)
+        }
+        None => {
+            eprintln!("reading stdin (one request per line; Ctrl-D to finish)");
+            server::serve_with_framer(
+                backend.as_ref(),
+                &tokenizer,
+                task,
+                stdin().lock(),
+                BufWriter::new(stdout().lock()),
+                server::LineFramer::default(),
+                deadline,
+            )
+        }
+    }
 }
 
 /// Serve the native integer model from stdin — zero artifacts needed.
@@ -230,7 +309,8 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
     );
     let model = NativeModel::new(cfg, task, seed)?;
     let tokenizer = Tokenizer::from_tokens(hccs::data::build_vocab())?;
-    let backend = NativeBackend::with_config(
+    let (deadline, max_inflight) = serve_slo(args)?;
+    let backend = std::sync::Arc::new(NativeBackend::with_config(
         std::sync::Arc::new(model),
         mode,
         hccs::model::NativeServeConfig {
@@ -240,19 +320,15 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
             },
             shards,
             length_bands,
+            max_in_flight: max_inflight,
         },
-    )?;
+    )?);
     eprintln!(
-        "serving on stdin across {shards} shard(s), max batch {max_batch}, \
-         {length_bands} length band(s) (one request per line; Ctrl-D to finish)"
+        "serving across {shards} shard(s), max batch {max_batch}, \
+         {length_bands} length band(s)"
     );
-    let n = server::serve(
-        &backend,
-        &tokenizer,
-        task,
-        stdin().lock(),
-        BufWriter::new(stdout().lock()),
-    )?;
+    let n =
+        run_serve(std::sync::Arc::clone(&backend), tokenizer, task, args, deadline, max_inflight)?;
     backend.shutdown();
     eprintln!("served {n} requests\n{}", backend.metrics.render());
     Ok(())

@@ -3,7 +3,7 @@
 //! benchmark harnesses.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -23,6 +23,35 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down level gauge (lock-free) — current value, not event count.
+/// Used for live state like open connections.
+#[derive(Default, Debug)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, n: i64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.v.load(Ordering::Relaxed)
     }
 }
@@ -145,12 +174,22 @@ impl Histogram {
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -187,6 +226,9 @@ impl Registry {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name} = {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} = {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             // Unit lives in the metric name by convention (`_us` for
@@ -304,6 +346,20 @@ mod tests {
         r.counter("x").inc();
         assert_eq!(r.counter("x").get(), 2);
         assert!(r.render().contains("x = 2"));
+    }
+
+    #[test]
+    fn gauge_goes_up_and_down() {
+        let r = Registry::default();
+        let g = r.gauge("net.active");
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        assert_eq!(r.gauge("net.active").get(), 1, "registry shares gauges");
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+        assert!(r.render().contains("net.active = -3"));
     }
 
     #[test]

@@ -34,8 +34,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::admission::{AdmissionControl, Permit};
 use crate::coordinator::engine::{
-    banded_batching_event_loop, EngineMsg, RolledCounter, RolledHistogram,
+    banded_batching_event_loop, shed_expired, try_permit, EngineMsg, RolledCounter,
+    RolledHistogram,
 };
 use crate::coordinator::{BatchPolicy, InferReply, QueuedRequest, ShardRouter, ShardTicket};
 use crate::error::{anyhow, Context, Result};
@@ -105,6 +107,11 @@ pub struct NativeServeConfig {
     /// Padding invariance makes the banding bit-drift-free: a request
     /// produces the same reply whichever band (or width) serves it.
     pub length_bands: usize,
+    /// Backpressure: maximum admitted-but-unanswered requests (None =
+    /// unbounded; Some(n) sheds with a
+    /// [`crate::coordinator::SHED_PREFIX`] "overloaded" error beyond
+    /// n), as in [`crate::coordinator::CoordinatorConfig::max_in_flight`].
+    pub max_in_flight: Option<usize>,
 }
 
 impl Default for NativeServeConfig {
@@ -115,6 +122,7 @@ impl Default for NativeServeConfig {
             policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) },
             shards: 1,
             length_bands: 1,
+            max_in_flight: None,
         }
     }
 }
@@ -126,7 +134,14 @@ struct NativeEnvelope {
     /// Length band (computed at submit from the request's valid
     /// length), consumed by the banded executor loop.
     band: usize,
+    /// Complete-by deadline (None = no SLO); requests that expire while
+    /// queued are fast-failed with a
+    /// [`crate::coordinator::SHED_PREFIX`] reply at flush.
+    deadline: Option<Instant>,
     reply: Sender<std::result::Result<InferReply, String>>,
+    /// Admission slot, released with the envelope (error paths
+    /// included) so shedding cannot leak capacity.
+    _permit: Option<Permit>,
     /// Router claim, released when the envelope is dropped (after the
     /// reply is sent) so the load view tracks completion.
     _ticket: ShardTicket,
@@ -145,6 +160,7 @@ pub struct NativeBackend {
     router: ShardRouter,
     next_id: AtomicU64,
     length_bands: usize,
+    admission: Option<AdmissionControl>,
     handles: Vec<JoinHandle<()>>,
     pub metrics: Arc<Registry>,
 }
@@ -199,9 +215,22 @@ impl NativeBackend {
             router,
             next_id: AtomicU64::new(1),
             length_bands: cfg.length_bands,
+            admission: cfg.max_in_flight.map(AdmissionControl::new),
             handles,
             metrics,
         })
+    }
+
+    /// Rejected-by-backpressure count (0 when unbounded).
+    pub fn shed_count(&self) -> u64 {
+        self.admission.as_ref().map_or(0, |a| a.rejected())
+    }
+
+    /// Deadline-shed count: requests fast-failed because their SLO had
+    /// already expired, at admission or while queued.
+    pub fn deadline_shed_count(&self) -> u64 {
+        self.admission.as_ref().map_or(0, |a| a.deadline_shed())
+            + self.metrics.counter("native.shed_deadline").get()
     }
 
     /// Number of length bands per shard.
@@ -258,14 +287,26 @@ impl InferBackend for NativeBackend {
         ids: Vec<i32>,
         segments: Vec<i32>,
     ) -> Result<Receiver<std::result::Result<InferReply, String>>> {
+        self.submit_with_deadline(ids, segments, None)
+    }
+
+    fn submit_with_deadline(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<std::result::Result<InferReply, String>>> {
         let (tx, rx) = mpsc::channel();
-        // Per-request admission check: a malformed request is answered
-        // on its own channel (matching the old synchronous backend)
+        // Per-request validation: a malformed request is answered on
+        // its own channel (matching the old synchronous backend)
         // instead of poisoning the batch it would have been stacked in.
+        // Validation precedes admission so a malformed request never
+        // spends a backpressure slot.
         if let Err(e) = self.model.check_request(&ids, &segments) {
             let _ = tx.send(Err(format!("{e:#}")));
             return Ok(rx);
         }
+        let permit = try_permit(&self.admission, deadline, "requests")?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         // Route by true length so same-band requests batch together and
         // the executor can stack them at the band's (short) width.
@@ -279,7 +320,9 @@ impl InferBackend for NativeBackend {
                 ids,
                 segments,
                 band,
+                deadline,
                 reply: tx,
+                _permit: permit,
                 _ticket: ticket,
             }))
             .map_err(|_| anyhow!("native engine is down"))?;
@@ -315,6 +358,7 @@ fn native_executor_main(
     let band_rows: Vec<_> = (0..length_bands)
         .map(|k| metrics.counter(&format!("native.band_rows.band{k}")))
         .collect();
+    let shed_ctr = RolledCounter::new(&metrics, "native.shed_deadline", shard);
 
     banded_batching_event_loop(
         policy,
@@ -323,6 +367,12 @@ fn native_executor_main(
         rx,
         &req_ctr,
         |band, items: Vec<QueuedRequest<NativeEnvelope>>| {
+            let items = shed_expired(items, |env| env.deadline, &shed_ctr, |env, msg| {
+                let _ = env.reply.send(Err(msg));
+            });
+            if items.is_empty() {
+                return;
+            }
             let started = Instant::now();
             // Stack the batch at the band's width: every request's ids
             // are truncated (pad tail only — the band invariant
@@ -422,6 +472,7 @@ mod tests {
                 policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
                 shards: 2,
                 length_bands: 1,
+                max_in_flight: None,
             },
         )
         .unwrap();
@@ -461,6 +512,52 @@ mod tests {
     }
 
     #[test]
+    fn native_backpressure_and_deadline_shedding() {
+        let model = tiny_model();
+        let n = model.cfg.seq_len;
+        let backend = NativeBackend::with_config(
+            model,
+            SoftmaxBackend::F32Ref,
+            NativeServeConfig {
+                // Nothing flushes before shutdown, so admitted requests
+                // hold their slots for the whole test.
+                policy: BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(60) },
+                shards: 1,
+                length_bands: 1,
+                max_in_flight: Some(2),
+            },
+        )
+        .unwrap();
+        let held: Vec<_> = (0..2)
+            .map(|_| backend.submit_request(vec![1; n], vec![0; n]).unwrap())
+            .collect();
+        let err = backend
+            .submit_request(vec![1; n], vec![0; n])
+            .err()
+            .expect("3rd in-flight request must shed");
+        assert!(crate::coordinator::is_shed_error(&format!("{err:#}")), "{err:#}");
+        assert_eq!(backend.shed_count(), 1);
+        assert_eq!(backend.deadline_shed_count(), 0);
+
+        // An already-expired deadline sheds distinctly, even at capacity.
+        let err = backend
+            .submit_with_deadline(
+                vec![1; n],
+                vec![0; n],
+                Some(Instant::now() - Duration::from_millis(1)),
+            )
+            .err()
+            .expect("expired deadline must shed");
+        assert!(format!("{err:#}").contains("deadline"), "{err:#}");
+        assert_eq!(backend.deadline_shed_count(), 1);
+
+        backend.shutdown();
+        for rx in held {
+            assert!(rx.recv().unwrap().is_ok(), "admitted request lost at shutdown");
+        }
+    }
+
+    #[test]
     fn zero_shards_rejected() {
         let model = tiny_model();
         let cfg = NativeServeConfig { shards: 0, ..Default::default() };
@@ -482,6 +579,7 @@ mod tests {
                 policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
                 shards: 1,
                 length_bands: 4,
+                max_in_flight: None,
             },
         )
         .unwrap();

@@ -1,0 +1,628 @@
+//! Persistent multi-client TCP serving tier.
+//!
+//! One listener accepts connections; each connection gets a **reader**
+//! thread (this module) and a **writer** thread, joined by a bounded
+//! channel:
+//!
+//! ```text
+//! socket ──read──> JsonFramer ──frame──> stage(submit) ──Pending──┐
+//!                                                                 │ sync_channel(max_inflight)
+//! socket <─write── encode_reply_json <── resolve_reply <──────────┘
+//! ```
+//!
+//! * **Framing.** Requests are newline-free single JSON objects
+//!   (`{"id": 7, "text": "w012 good03"}`), framed incrementally by
+//!   [`crate::json::StreamingFramer`] — bounded memory by construction
+//!   (payload/depth/string caps), torn reads are the normal case.  A
+//!   framing error (garbage between frames, oversized frame) is a
+//!   *connection* error: one final error reply, then close.  A frame
+//!   that parses but can't be served (missing `text`) is a
+//!   *per-request* error; the connection lives on.
+//! * **Backpressure.** The reader blocks sending into the bounded
+//!   reply queue, so a client that stops reading replies stops getting
+//!   its bytes read after `max_inflight` outstanding requests — memory
+//!   per connection is capped by the framer limits plus the window.
+//! * **Deadlines.** Each request is stamped `now + deadline` at frame
+//!   time; the engines shed expired requests at admission or flush
+//!   ([`crate::coordinator::SHED_PREFIX`] replies, `"shed": true` on
+//!   the wire).
+//! * **Parity.** The reply `result` field is exactly the line the
+//!   in-process [`crate::server::serve`] loop would write for the same
+//!   request (both render through
+//!   [`crate::server::format_reply`]) — pinned byte-for-byte by
+//!   `tests/tcp_serving.rs`.
+//!
+//! Metrics land in the server's [`Registry`] on the shard-rollup
+//! pattern: `net.requests` aggregates `net.requests.conn<K>` slot
+//! counters (connections round-robin into [`CONN_SLOTS`] slots), alongside
+//! `net.connections`, `net.active` (gauge), `net.replies`, `net.shed`,
+//! `net.frame_errors`, and `net.read_bytes`.
+
+use std::io::{BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::data::TaskKind;
+use crate::error::{Context, Result};
+use crate::json::{obj, FrameLimits, StreamingFramer, Value};
+use crate::metrics::{Gauge, Registry};
+use crate::server::{
+    format_reply, resolve_reply, stage, FramedRequest, Framer, InferBackend, Outcome, Pending,
+};
+use crate::tokenizer::Tokenizer;
+
+/// Per-connection metric slots (`net.requests.conn<K>`): connections
+/// round-robin into this many rolled counters, so per-connection
+/// visibility doesn't grow the registry without bound under connection
+/// churn.
+pub const CONN_SLOTS: usize = 8;
+
+/// Connection-tier configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Per-connection in-flight window: submitted requests whose reply
+    /// has not been written yet.  Reads pause at the cap.
+    pub max_inflight: usize,
+    /// Complete-by budget stamped on every request at frame time
+    /// (None = no SLO, nothing is deadline-shed).
+    pub deadline: Option<Duration>,
+    /// Framer memory caps (payload / nesting / string).
+    pub limits: FrameLimits,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self { max_inflight: 64, deadline: None, limits: FrameLimits::default() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON request framing
+// ---------------------------------------------------------------------------
+
+/// [`Framer`] for the TCP wire protocol: incremental JSON objects in,
+/// single-line JSON replies out.  Wraps the bounded-memory
+/// [`StreamingFramer`] and decodes each complete frame into a
+/// [`FramedRequest`] (client `id` honored, else a per-connection
+/// sequence number).
+pub struct JsonFramer {
+    inner: StreamingFramer,
+    next_seq: u64,
+}
+
+impl JsonFramer {
+    pub fn new(limits: FrameLimits) -> Self {
+        Self { inner: StreamingFramer::new(limits), next_seq: 0 }
+    }
+}
+
+impl Framer for JsonFramer {
+    fn push(
+        &mut self,
+        bytes: &[u8],
+        out: &mut Vec<FramedRequest>,
+    ) -> std::result::Result<(), String> {
+        let frames =
+            self.inner.push(bytes).map_err(|e| format!("{} at byte {}", e.msg, e.pos))?;
+        for frame in frames {
+            self.next_seq += 1;
+            out.push(decode_request(&frame, self.next_seq));
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, _out: &mut Vec<FramedRequest>) -> std::result::Result<(), String> {
+        if self.inner.buffered() > 0 {
+            return Err(format!(
+                "connection closed mid-frame ({} bytes buffered)",
+                self.inner.buffered()
+            ));
+        }
+        Ok(())
+    }
+
+    fn is_idle(&self) -> bool {
+        self.inner.is_idle()
+    }
+
+    fn encode_reply(&self, id: u64, outcome: &Outcome) -> String {
+        encode_reply_json(id, outcome)
+    }
+}
+
+/// Decode one complete frame: lazy flat-object scan first, full parse
+/// as fallback.  Never errors the connection — an unusable frame is a
+/// per-request `Err` text.
+fn decode_request(frame: &[u8], seq: u64) -> FramedRequest {
+    if let Some((id, text)) = lazy_scan_request(frame) {
+        return FramedRequest { id: id.unwrap_or(seq), text: Ok(text) };
+    }
+    decode_request_full(frame, seq)
+}
+
+/// The slow path: full [`Value::parse`], tolerant of escapes, nesting,
+/// extra fields, and any field order.
+fn decode_request_full(frame: &[u8], seq: u64) -> FramedRequest {
+    let s = match std::str::from_utf8(frame) {
+        Ok(s) => s,
+        Err(_) => {
+            return FramedRequest { id: seq, text: Err("request is not valid UTF-8".into()) }
+        }
+    };
+    let v = match Value::parse(s) {
+        Ok(v) => v,
+        Err(e) => {
+            return FramedRequest {
+                id: seq,
+                text: Err(format!("bad json: {} at byte {}", e.msg, e.pos)),
+            }
+        }
+    };
+    let id = v
+        .get("id")
+        .and_then(Value::as_i64)
+        .and_then(|i| u64::try_from(i).ok())
+        .unwrap_or(seq);
+    match v.get("text").and_then(Value::as_str) {
+        Some(t) => FramedRequest { id, text: Ok(t.to_string()) },
+        None => {
+            FramedRequest { id, text: Err("request object missing string field \"text\"".into()) }
+        }
+    }
+}
+
+/// Cheap path for the dominant flat request shape
+/// (`{"id": 7, "text": "..."}`, any order, `id` optional): scan the
+/// fields in place without building a [`Value`] tree — the
+/// lazy-field-access idiom.  Bails to `None` (→ full parser) on
+/// anything beyond that shape: string escapes, nested values, unknown
+/// keys, non-digit ids.  Because it only ever *skips*, it cannot
+/// disagree with the full parser (pinned by
+/// `lazy_scan_agrees_with_full_parse`).
+fn lazy_scan_request(frame: &[u8]) -> Option<(Option<u64>, String)> {
+    let mut s = Scan { b: frame, i: 0 };
+    s.ws();
+    if !s.eat(b'{') {
+        return None;
+    }
+    let mut id = None;
+    let mut text: Option<String> = None;
+    loop {
+        s.ws();
+        if s.eat(b'}') {
+            break;
+        }
+        let key = s.string()?;
+        s.ws();
+        if !s.eat(b':') {
+            return None;
+        }
+        s.ws();
+        match key {
+            "id" => id = Some(s.digits()?),
+            "text" => text = Some(s.string()?.to_string()),
+            _ => return None,
+        }
+        s.ws();
+        if s.eat(b',') {
+            continue;
+        }
+        if s.eat(b'}') {
+            break;
+        }
+        return None;
+    }
+    s.ws();
+    if s.i != s.b.len() {
+        return None;
+    }
+    Some((id, text?))
+}
+
+/// Byte cursor for [`lazy_scan_request`].
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, c: u8) -> bool {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Escape-free string literal, or None to bail to the full parser.
+    fn string(&mut self) -> Option<&'a str> {
+        if !self.eat(b'"') {
+            return None;
+        }
+        let start = self.i;
+        loop {
+            match self.b.get(self.i)? {
+                b'"' => break,
+                b'\\' => return None,
+                _ => self.i += 1,
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).ok()?;
+        self.i += 1;
+        Some(s)
+    }
+
+    /// Unsigned decimal integer, or None to bail.  Bounded to the
+    /// f64-exact range so the lazy path can never yield an id the full
+    /// parser (which routes numbers through f64) would round
+    /// differently.
+    fn digits(&mut self) -> Option<u64> {
+        const F64_EXACT_MAX: u64 = 1 << 53;
+        let start = self.i;
+        let mut v: u64 = 0;
+        while let Some(d) = self.b.get(self.i).filter(|b| b.is_ascii_digit()) {
+            v = v.checked_mul(10)?.checked_add((d - b'0') as u64)?;
+            if v > F64_EXACT_MAX {
+                return None;
+            }
+            self.i += 1;
+        }
+        (self.i > start).then_some(v)
+    }
+}
+
+/// Render one outcome as a single-line JSON reply (`\n`-terminated).
+/// Success carries the canonical text line in `result`, so TCP replies
+/// stay byte-identical to the in-process serve path.
+pub(crate) fn encode_reply_json(id: u64, outcome: &Outcome) -> String {
+    let v = match outcome {
+        Outcome::Ok(reply) => obj(vec![
+            ("id", (id as i64).into()),
+            ("latency_us", (reply.latency.as_micros() as i64).into()),
+            ("result", format_reply(reply).into()),
+        ]),
+        Outcome::Err { msg, shed } => obj(vec![
+            ("error", msg.as_str().into()),
+            ("id", (id as i64).into()),
+            ("shed", (*shed).into()),
+        ]),
+    };
+    let mut s = v.to_string_compact();
+    s.push('\n');
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Listener + per-connection threads
+// ---------------------------------------------------------------------------
+
+/// RAII increment/decrement of a gauge (connection liveness).
+struct GaugeGuard(Arc<Gauge>);
+
+impl GaugeGuard {
+    fn new(g: Arc<Gauge>) -> Self {
+        g.inc();
+        Self(g)
+    }
+}
+
+impl Drop for GaugeGuard {
+    fn drop(&mut self) {
+        self.0.dec();
+    }
+}
+
+/// Handle to a running TCP serving tier: owns the accept thread and a
+/// registry of open connections so shutdown can unblock everything.
+pub struct TcpServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    pub metrics: Arc<Registry>,
+}
+
+impl TcpServer {
+    /// Bind `addr` and start serving `backend` until [`shutdown`].
+    /// `addr` may use port 0; the chosen port is in [`local_addr`].
+    ///
+    /// [`shutdown`]: TcpServer::shutdown
+    /// [`local_addr`]: TcpServer::local_addr
+    pub fn start<E>(
+        backend: Arc<E>,
+        tokenizer: Arc<Tokenizer>,
+        task: TaskKind,
+        addr: &str,
+        cfg: NetConfig,
+    ) -> Result<TcpServer>
+    where
+        E: InferBackend + Send + Sync + 'static,
+    {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding tcp listener on {addr}"))?;
+        let local = listener.local_addr().context("resolving bound address")?;
+        let metrics = Arc::new(Registry::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (stop, conns, metrics) = (stop.clone(), conns.clone(), metrics.clone());
+            std::thread::Builder::new()
+                .name("hccs-net-accept".into())
+                .spawn(move || {
+                    accept_main(listener, backend, tokenizer, task, cfg, stop, conns, metrics)
+                })
+                .context("spawning accept thread")?
+        };
+        Ok(TcpServer { local, stop, accept: Some(accept), conns, metrics })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, force every open connection to EOF (queued
+    /// replies still drain), and join all serving threads.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept() call with a throwaway connection; the
+        // stop flag makes the accept loop drop it and exit.
+        let _ = TcpStream::connect(self.local);
+        for c in self.conns.lock().unwrap().iter() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.stop_and_join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_main<E: InferBackend + Send + Sync + 'static>(
+    listener: TcpListener,
+    backend: Arc<E>,
+    tokenizer: Arc<Tokenizer>,
+    task: TaskKind,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    metrics: Arc<Registry>,
+) {
+    let mut handlers = Vec::new();
+    let mut count = 0usize;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        if let Ok(clone) = stream.try_clone() {
+            conns.lock().unwrap().push(clone);
+        }
+        let slot = count % CONN_SLOTS;
+        count += 1;
+        let (backend, tokenizer, metrics) = (backend.clone(), tokenizer.clone(), metrics.clone());
+        if let Ok(h) = std::thread::Builder::new()
+            .name(format!("hccs-net-conn{slot}"))
+            .spawn(move || conn_main(stream, backend, tokenizer, task, cfg, metrics, slot))
+        {
+            handlers.push(h);
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// One connection: this thread reads and frames; a paired writer
+/// thread resolves replies in submit order.  The bounded channel
+/// between them is the backpressure window.
+fn conn_main<E: InferBackend>(
+    stream: TcpStream,
+    backend: Arc<E>,
+    tokenizer: Arc<Tokenizer>,
+    task: TaskKind,
+    cfg: NetConfig,
+    metrics: Arc<Registry>,
+    slot: usize,
+) {
+    metrics.counter("net.connections").inc();
+    let _active = GaugeGuard::new(metrics.gauge("net.active"));
+    let write_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::sync_channel::<Pending>(cfg.max_inflight.max(1));
+
+    let writer = {
+        let metrics = metrics.clone();
+        std::thread::Builder::new()
+            .name("hccs-net-writer".into())
+            .spawn(move || writer_main(write_stream, rx, metrics))
+            .expect("spawning connection writer thread")
+    };
+
+    let mut framer = JsonFramer::new(cfg.limits);
+    let max_len = task.max_len();
+    let read_bytes = metrics.counter("net.read_bytes");
+    let req_total = metrics.counter("net.requests");
+    let req_conn = metrics.counter(&format!("net.requests.conn{slot}"));
+    let mut reader = &stream;
+    let mut buf = [0u8; 4096];
+    let mut requests: Vec<FramedRequest> = Vec::new();
+    'read: loop {
+        let n = match reader.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        read_bytes.add(n as u64);
+        let pushed = framer.push(&buf[..n], &mut requests);
+        for req in requests.drain(..) {
+            req_total.inc();
+            req_conn.inc();
+            let staged = stage(backend.as_ref(), &*tokenizer, task, max_len, req, cfg.deadline);
+            // Blocking send: the in-flight window is full, so reading
+            // pauses until the writer drains a reply.
+            if tx.send(staged).is_err() {
+                break 'read;
+            }
+        }
+        if let Err(msg) = pushed {
+            // The byte stream is unrecoverable: one final error reply,
+            // then close the connection.
+            metrics.counter("net.frame_errors").inc();
+            let _ = tx.send(Pending::Ready(
+                0,
+                Outcome::Err { msg: format!("framing: {msg}"), shed: false },
+            ));
+            break;
+        }
+    }
+    drop(tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Writer half of a connection: resolve each staged request (FIFO, so
+/// reply order matches submit order) and write one JSON line per
+/// reply.
+fn writer_main(stream: TcpStream, rx: mpsc::Receiver<Pending>, metrics: Arc<Registry>) {
+    let replies = metrics.counter("net.replies");
+    let shed = metrics.counter("net.shed");
+    let mut out = BufWriter::new(stream);
+    for p in rx {
+        let (id, outcome) = match p {
+            Pending::Ready(id, o) => (id, o),
+            Pending::Wait(id, reply_rx) => (id, resolve_reply(&reply_rx)),
+        };
+        if matches!(&outcome, Outcome::Err { shed: true, .. }) {
+            shed.inc();
+        }
+        replies.inc();
+        if out.write_all(encode_reply_json(id, &outcome).as_bytes()).is_err() {
+            break;
+        }
+        if out.flush().is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::InferReply;
+
+    fn text_of(r: &FramedRequest) -> (u64, std::result::Result<&str, &str>) {
+        (r.id, r.text.as_deref().map_err(|e| e.as_str()))
+    }
+
+    /// The lazy scanner may only *skip* (return None), never disagree:
+    /// wherever it engages, its (id, text) must equal the full parse.
+    #[test]
+    fn lazy_scan_agrees_with_full_parse() {
+        let engages = [
+            r#"{"id": 7, "text": "w012 good03"}"#,
+            r#"{"text": "no id here"}"#,
+            r#"{"text":"tight","id":0}"#,
+            "{ \"id\"\t:\n42 , \"text\" : \"spaced\" }",
+        ];
+        for s in engages {
+            let lazy = lazy_scan_request(s.as_bytes());
+            assert!(lazy.is_some(), "lazy path must engage on flat shape: {s}");
+            assert_eq!(
+                text_of(&decode_request(s.as_bytes(), 99)),
+                text_of(&decode_request_full(s.as_bytes(), 99)),
+                "lazy and full disagree on {s}"
+            );
+        }
+        // Shapes the lazy path must bail on — escapes, nesting, extra
+        // fields, negative/quoted ids — where the full parser decides.
+        let bails = [
+            r#"{"id": 7, "text": "esc \" ape"}"#,
+            r#"{"id": -3, "text": "negative id"}"#,
+            r#"{"id": "7", "text": "quoted id"}"#,
+            r#"{"id": 7, "text": "x", "extra": 1}"#,
+            r#"{"meta": {"a": 1}, "text": "nested"}"#,
+            r#"{"id": 7}"#,
+            r#"{}"#,
+        ];
+        for s in bails {
+            assert!(
+                lazy_scan_request(s.as_bytes()).is_none(),
+                "lazy path must bail to the full parser on {s}"
+            );
+            // The fallback still yields a usable (or per-request-error)
+            // decode — never a panic.
+            let _ = decode_request(s.as_bytes(), 99);
+        }
+        // Escaped text goes through the full parser and unescapes.
+        let r = decode_request(br#"{"text": "a\nb"}"#, 5);
+        assert_eq!(r.text.as_deref(), Ok("a\nb"));
+        assert_eq!(r.id, 5, "id-less request takes the sequence number");
+    }
+
+    #[test]
+    fn reply_encoding_is_single_line_json() {
+        let ok = Outcome::Ok(InferReply {
+            id: 3,
+            predicted: 1,
+            logits: vec![0.0, 1.0],
+            latency: Duration::from_micros(250),
+        });
+        let line = encode_reply_json(3, &ok);
+        assert!(line.ends_with('\n'));
+        assert_eq!(line.matches('\n').count(), 1, "reply must be one line");
+        let v = Value::parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(3));
+        assert_eq!(v.get("latency_us").and_then(Value::as_i64), Some(250));
+        let result = v.get("result").and_then(Value::as_str).unwrap();
+        assert!(result.starts_with("1 "), "{result}");
+
+        let err = Outcome::Err { msg: "shed: overloaded".into(), shed: true };
+        let v = Value::parse(encode_reply_json(9, &err).trim()).unwrap();
+        assert_eq!(v.get("shed").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(9));
+        assert!(v.get("error").and_then(Value::as_str).unwrap().contains("shed:"));
+    }
+
+    #[test]
+    fn json_framer_assigns_sequence_ids_and_reports_mid_frame_eof() {
+        let mut f = JsonFramer::new(FrameLimits::default());
+        let mut out = Vec::new();
+        f.push(br#"{"text": "a"} {"text": "b"}"#, &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].id, out[1].id), (1, 2));
+        assert!(f.finish(&mut out).is_ok(), "clean boundary EOF is fine");
+
+        f.push(br#"{"text": "tr"#, &mut out).unwrap();
+        let err = f.finish(&mut out).expect_err("mid-frame EOF must error");
+        assert!(err.contains("mid-frame"), "{err}");
+    }
+}

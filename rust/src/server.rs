@@ -14,19 +14,37 @@
 //! FIFO, so ordering holds no matter which shard answers first.
 //! Designed for `stdin`/`stdout` piping and for in-process use by the
 //! examples and tests (pass any `BufRead`/`Write`).
+//!
+//! A request that fails — bad encoding, engine overload, executor error
+//! — gets a per-request `error: <msg>` line and the stream keeps being
+//! served; only transport problems (I/O errors on the input) abort the
+//! loop.  Load-shed failures are distinguishable by the
+//! [`crate::coordinator::SHED_PREFIX`] inside the message.
+//!
+//! **Framing.** Wire format lives behind the [`Framer`] trait: a framer
+//! turns raw bytes (arbitrary chunk boundaries — torn reads are the
+//! normal case on a socket) into [`FramedRequest`]s and renders
+//! [`Outcome`]s back into reply lines.  [`LineFramer`] is the classic
+//! newline protocol above; `crate::net::JsonFramer` speaks
+//! length-unprefixed streaming JSON over TCP.  Both drive the same
+//! [`serve_with_framer`] loop, so reply bytes for a given request are
+//! identical no matter which transport carried it (pinned by
+//! `tests/tcp_serving.rs`).
 
 use std::io::{BufRead, Write};
 use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
 
-use crate::error::{anyhow, Context, Result};
+use crate::error::{Context, Result};
 
-use crate::coordinator::{Coordinator, InferReply};
+use crate::coordinator::{is_shed_error, Coordinator, InferReply};
 use crate::data::TaskKind;
 use crate::tokenizer::{Encoded, Tokenizer};
 
 /// Anything that can answer tokenized inference requests through a
 /// per-request reply channel.  Production uses the sharded
-/// [`Coordinator`]; tests substitute lighter engines (e.g. a
+/// [`Coordinator`] or the native `crate::model::NativeBackend`; tests
+/// substitute lighter engines (e.g. a
 /// [`crate::coordinator::ScoreEngine`] adapter) so the full serve loop
 /// — including multi-shard reply ordering — runs without PJRT
 /// artifacts.
@@ -36,6 +54,18 @@ pub trait InferBackend {
         ids: Vec<i32>,
         segments: Vec<i32>,
     ) -> Result<Receiver<Result<InferReply, String>>>;
+
+    /// Submit with a complete-by deadline (None = no SLO).  Backends
+    /// with deadline-aware admission override this; the default ignores
+    /// the deadline so simple test backends keep working unchanged.
+    fn submit_with_deadline(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+        _deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        self.submit_request(ids, segments)
+    }
 }
 
 impl InferBackend for Coordinator {
@@ -46,38 +76,270 @@ impl InferBackend for Coordinator {
     ) -> Result<Receiver<Result<InferReply, String>>> {
         self.submit(ids, segments)
     }
+
+    fn submit_with_deadline(
+        &self,
+        ids: Vec<i32>,
+        segments: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<InferReply, String>>> {
+        self.submit_deadline(ids, segments, deadline)
+    }
 }
 
-/// Serve until EOF; returns the number of requests answered.
+/// The resolved fate of one request, ready for a framer to render.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    Ok(InferReply),
+    Err {
+        msg: String,
+        /// True when the engine shed this request (overload or blown
+        /// deadline) rather than failing it.
+        shed: bool,
+    },
+}
+
+/// One request as decoded by a [`Framer`].  `text` is `Err` when the
+/// frame itself was intelligible enough to answer (a valid JSON object
+/// missing its `text` field, say) but cannot be served — that is a
+/// per-request error, not a connection error.
+#[derive(Clone, Debug)]
+pub struct FramedRequest {
+    /// Client-supplied correlation id, or a framer-assigned sequence
+    /// number for id-less protocols.
+    pub id: u64,
+    pub text: std::result::Result<String, String>,
+}
+
+/// A wire protocol: raw bytes in (any chunking), requests out, and
+/// outcomes rendered back to reply lines.
+pub trait Framer: Send {
+    /// Feed one chunk of input bytes; complete requests are appended to
+    /// `out`.  `Err` means the byte stream itself is broken (oversized
+    /// frame, garbage between frames) — the connection must be failed,
+    /// no further pushes will succeed.
+    fn push(
+        &mut self,
+        bytes: &[u8],
+        out: &mut Vec<FramedRequest>,
+    ) -> std::result::Result<(), String>;
+
+    /// End of input.  A line protocol flushes a trailing unterminated
+    /// line; a JSON protocol errors if EOF lands mid-frame.
+    fn finish(&mut self, out: &mut Vec<FramedRequest>) -> std::result::Result<(), String>;
+
+    /// True when no partial frame is buffered.
+    fn is_idle(&self) -> bool;
+
+    /// Render one outcome as a complete reply line (trailing `\n`
+    /// included).
+    fn encode_reply(&self, id: u64, outcome: &Outcome) -> String;
+}
+
+/// The classic newline-delimited text protocol (stdin/stdout piping):
+/// one request per line, `#` comments and blank lines skipped, replies
+/// as `"<pred> <p0> <p1> ..."` or `"error: <msg>"`.
+#[derive(Default)]
+pub struct LineFramer {
+    partial: Vec<u8>,
+    next_id: u64,
+}
+
+impl LineFramer {
+    fn take_line(&mut self, out: &mut Vec<FramedRequest>) {
+        let bytes = std::mem::take(&mut self.partial);
+        let line = String::from_utf8_lossy(&bytes);
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return;
+        }
+        self.next_id += 1;
+        out.push(FramedRequest { id: self.next_id, text: Ok(line.to_string()) });
+    }
+}
+
+impl Framer for LineFramer {
+    fn push(
+        &mut self,
+        bytes: &[u8],
+        out: &mut Vec<FramedRequest>,
+    ) -> std::result::Result<(), String> {
+        for &b in bytes {
+            if b == b'\n' {
+                self.take_line(out);
+            } else {
+                self.partial.push(b);
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, out: &mut Vec<FramedRequest>) -> std::result::Result<(), String> {
+        if !self.partial.is_empty() {
+            self.take_line(out);
+        }
+        Ok(())
+    }
+
+    fn is_idle(&self) -> bool {
+        self.partial.is_empty()
+    }
+
+    fn encode_reply(&self, _id: u64, outcome: &Outcome) -> String {
+        match outcome {
+            Outcome::Ok(reply) => format!("{}\n", format_reply(reply)),
+            Outcome::Err { msg, .. } => format!("error: {}\n", msg.replace('\n', " ")),
+        }
+    }
+}
+
+/// Render one successful reply as the canonical text line:
+/// `"<predicted> <p0> <p1> ..."` with softmaxed probabilities at 4
+/// decimals.  Shared by every framer's success path so transports
+/// cannot drift.
+pub fn format_reply(reply: &InferReply) -> String {
+    let probs = softmax_f32(&reply.logits);
+    let cells: Vec<String> = probs.iter().map(|p| format!("{p:.4}")).collect();
+    format!("{} {}", reply.predicted, cells.join(" "))
+}
+
+/// Encode one request text and submit it with an optional deadline.
+/// Failures come back as a ready [`Outcome::Err`] with the shed flag
+/// already classified — the shared submit path for the line loop and
+/// the TCP tier.
+pub fn submit_text<E: InferBackend>(
+    backend: &E,
+    tokenizer: &Tokenizer,
+    task: TaskKind,
+    max_len: usize,
+    text: &str,
+    deadline: Option<Instant>,
+) -> std::result::Result<Receiver<Result<InferReply, String>>, Outcome> {
+    let enc = encode_request(tokenizer, task, text, max_len)
+        .map_err(|e| Outcome::Err { msg: format!("bad request: {e:#}"), shed: false })?;
+    backend.submit_with_deadline(enc.ids, enc.segments, deadline).map_err(|e| {
+        let msg = format!("{e:#}");
+        let shed = is_shed_error(&msg);
+        Outcome::Err { msg, shed }
+    })
+}
+
+/// Wait for a submitted request's reply and classify it.
+pub fn resolve_reply(rx: &Receiver<Result<InferReply, String>>) -> Outcome {
+    match rx.recv() {
+        Ok(Ok(reply)) => Outcome::Ok(reply),
+        Ok(Err(msg)) => {
+            let shed = is_shed_error(&msg);
+            Outcome::Err { msg, shed }
+        }
+        Err(_) => Outcome::Err { msg: "engine dropped request".into(), shed: false },
+    }
+}
+
+/// A request staged by a serve loop: already failed, or waiting on its
+/// reply channel.  Shared with the TCP tier (`crate::net`), whose
+/// writer thread resolves these incrementally instead of at EOF.
+pub enum Pending {
+    Ready(u64, Outcome),
+    Wait(u64, Receiver<Result<InferReply, String>>),
+}
+
+/// Encode + submit one framed request, stamping `now + budget` as its
+/// deadline.  Failures become a ready outcome.
+pub fn stage<E: InferBackend>(
+    backend: &E,
+    tokenizer: &Tokenizer,
+    task: TaskKind,
+    max_len: usize,
+    req: FramedRequest,
+    budget: Option<Duration>,
+) -> Pending {
+    match req.text {
+        Err(msg) => Pending::Ready(req.id, Outcome::Err { msg, shed: false }),
+        Ok(text) => {
+            let deadline = budget.map(|d| Instant::now() + d);
+            match submit_text(backend, tokenizer, task, max_len, &text, deadline) {
+                Ok(rx) => Pending::Wait(req.id, rx),
+                Err(out) => Pending::Ready(req.id, out),
+            }
+        }
+    }
+}
+
+/// Serve the newline text protocol until EOF; returns the number of
+/// reply lines written (successes and per-request errors alike).
 pub fn serve<E: InferBackend, R: BufRead, W: Write>(
     coordinator: &E,
     tokenizer: &Tokenizer,
     task: TaskKind,
     input: R,
+    output: W,
+) -> Result<u64> {
+    serve_with_framer(coordinator, tokenizer, task, input, output, LineFramer::default(), None)
+}
+
+/// Serve any framed protocol until EOF: read chunks, frame them, submit
+/// each request (stamping `now + deadline_budget` when given), then
+/// answer every request **in input order**.  A request that fails gets
+/// a per-request error reply and serving continues — only input I/O
+/// errors abort.  A framing error fails the remainder of the stream
+/// (one final error reply, then stop reading), matching the
+/// close-the-connection contract of the TCP tier.
+pub fn serve_with_framer<E: InferBackend, R: BufRead, W: Write, F: Framer>(
+    backend: &E,
+    tokenizer: &Tokenizer,
+    task: TaskKind,
+    mut input: R,
     mut output: W,
+    mut framer: F,
+    deadline_budget: Option<Duration>,
 ) -> Result<u64> {
     let max_len = task.max_len();
-    let mut pending = Vec::new();
-    for line in input.lines() {
-        let line = line.context("reading request line")?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+    let mut pending: Vec<Pending> = Vec::new();
+    let mut requests: Vec<FramedRequest> = Vec::new();
+    loop {
+        let (n, pushed) = {
+            let chunk = input.fill_buf().context("reading request stream")?;
+            if chunk.is_empty() {
+                (0, Ok(()))
+            } else {
+                (chunk.len(), framer.push(chunk, &mut requests))
+            }
+        };
+        if n == 0 {
+            if let Err(msg) = framer.finish(&mut requests) {
+                requests.push(FramedRequest { id: 0, text: Err(format!("framing: {msg}")) });
+            }
+            for req in requests.drain(..) {
+                pending.push(stage(backend, tokenizer, task, max_len, req, deadline_budget));
+            }
+            break;
         }
-        let enc = encode_request(tokenizer, task, line, max_len)?;
-        pending.push(coordinator.submit_request(enc.ids, enc.segments)?);
+        input.consume(n);
+        let framing_err = pushed.err();
+        for req in requests.drain(..) {
+            pending.push(stage(backend, tokenizer, task, max_len, req, deadline_budget));
+        }
+        if let Some(msg) = framing_err {
+            // The byte stream is unrecoverable; answer what we framed,
+            // report the break, and stop reading.
+            pending.push(Pending::Ready(
+                0,
+                Outcome::Err { msg: format!("framing: {msg}"), shed: false },
+            ));
+            break;
+        }
     }
     let mut served = 0u64;
-    for rx in pending {
-        let reply = rx
-            .recv()
-            .context("engine dropped request")?
-            .map_err(|e| anyhow!("{e}"))?;
-        let probs = softmax_f32(&reply.logits);
-        let cells: Vec<String> = probs.iter().map(|p| format!("{p:.4}")).collect();
-        writeln!(output, "{} {}", reply.predicted, cells.join(" "))?;
+    for p in pending {
+        let (id, outcome) = match p {
+            Pending::Ready(id, out) => (id, out),
+            Pending::Wait(id, rx) => (id, resolve_reply(&rx)),
+        };
+        output.write_all(framer.encode_reply(id, &outcome).as_bytes())?;
         served += 1;
     }
+    output.flush()?;
     Ok(served)
 }
 
@@ -110,7 +372,9 @@ fn softmax_f32(logits: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::anyhow;
     use crate::tokenizer::{Tokenizer, CLS, SEP};
+    use std::sync::mpsc;
 
     fn tok() -> Tokenizer {
         Tokenizer::from_tokens(
@@ -143,5 +407,120 @@ mod tests {
         let p = softmax_f32(&[0.0, 1.0, 2.0]);
         assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-5);
         assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn line_framer_is_chunking_invariant_and_flushes_trailing_line() {
+        let input = b"# comment\nw000 w000\n\n  e001  \nno newline at eof";
+        let frame_all = |chunks: &[&[u8]]| -> Vec<String> {
+            let mut f = LineFramer::default();
+            let mut out = Vec::new();
+            for c in chunks {
+                f.push(c, &mut out).unwrap();
+            }
+            f.finish(&mut out).unwrap();
+            assert!(f.is_idle());
+            out.into_iter().map(|r| r.text.unwrap()).collect()
+        };
+        let whole = frame_all(&[input]);
+        assert_eq!(whole, vec!["w000 w000", "e001", "no newline at eof"]);
+        let byte_at_a_time: Vec<&[u8]> = input.chunks(1).collect();
+        assert_eq!(frame_all(&byte_at_a_time), whole, "1-byte reads diverged");
+    }
+
+    /// A backend that exercises every per-request failure arm the serve
+    /// loop must survive: submit-time rejection (arm 1, e.g. admission
+    /// shed) and an executor error on the reply channel (arm 2).
+    struct FlakyBackend {
+        calls: std::cell::Cell<u32>,
+    }
+
+    impl InferBackend for FlakyBackend {
+        fn submit_request(
+            &self,
+            _ids: Vec<i32>,
+            _segments: Vec<i32>,
+        ) -> Result<Receiver<Result<InferReply, String>>> {
+            let k = self.calls.get();
+            self.calls.set(k + 1);
+            match k % 3 {
+                1 => Err(anyhow!("shed: overloaded: 9 requests in flight")),
+                arm => {
+                    let (tx, rx) = mpsc::channel();
+                    let msg = if arm == 2 {
+                        Err("executor exploded mid-batch".to_string())
+                    } else {
+                        Ok(InferReply {
+                            id: k as u64,
+                            predicted: 1,
+                            logits: vec![0.0, 1.0],
+                            latency: Duration::ZERO,
+                        })
+                    };
+                    tx.send(msg).unwrap();
+                    Ok(rx)
+                }
+            }
+        }
+    }
+
+    /// Regression: a mid-stream per-request failure used to abort the
+    /// whole serve loop (fatal `?` on the encode/submit/reply path);
+    /// it must instead produce one `error:` line and keep serving.
+    #[test]
+    fn per_request_failures_do_not_kill_the_stream() {
+        let backend = FlakyBackend { calls: std::cell::Cell::new(0) };
+        let input = "w000\nw000\nw000\nw000\n";
+        let mut out = Vec::new();
+        let served = serve(
+            &backend,
+            &tok(),
+            TaskKind::Sst2s,
+            std::io::BufReader::new(input.as_bytes()),
+            &mut out,
+        )
+        .unwrap();
+        assert_eq!(served, 4, "every request must be answered");
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("1 "), "line 0 should succeed: {}", lines[0]);
+        assert!(
+            lines[1].starts_with("error:") && lines[1].contains("shed:"),
+            "line 1 should be the shed error: {}",
+            lines[1]
+        );
+        assert!(
+            lines[2].starts_with("error:") && lines[2].contains("exploded"),
+            "line 2 should be the executor error: {}",
+            lines[2]
+        );
+        assert!(lines[3].starts_with("1 "), "line 3 should succeed: {}", lines[3]);
+    }
+
+    struct UnreachableBackend;
+
+    impl InferBackend for UnreachableBackend {
+        fn submit_request(
+            &self,
+            _ids: Vec<i32>,
+            _segments: Vec<i32>,
+        ) -> Result<Receiver<Result<InferReply, String>>> {
+            unreachable!("encode failure must short-circuit before submit")
+        }
+    }
+
+    #[test]
+    fn bad_encode_is_a_per_request_outcome_not_a_fatal_error() {
+        // max_len < 2 is the only way `encode` can fail; the shared
+        // submit path must turn it into a non-shed error outcome.
+        let out = submit_text(&UnreachableBackend, &tok(), TaskKind::Sst2s, 1, "w000", None);
+        match out {
+            Err(Outcome::Err { msg, shed }) => {
+                assert!(!shed, "encode failure is not a shed");
+                assert!(msg.starts_with("bad request:"), "{msg}");
+            }
+            _ => panic!("expected a ready error outcome"),
+        }
     }
 }

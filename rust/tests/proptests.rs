@@ -1,5 +1,6 @@
 //! Property-based tests (proptest_lite) on the coordinator, kernel,
-//! attention, and native-encoder invariants called out in DESIGN.md §7.
+//! attention, native-encoder, and streaming-framer invariants called
+//! out in DESIGN.md §7.
 
 use std::time::{Duration, Instant};
 
@@ -10,6 +11,7 @@ use hccs::hccs::{
     hccs_batch, hccs_batch_masked, hccs_row, hccs_row_into, HccsParams, OutputPath, Reciprocal,
     T_I16, T_I8,
 };
+use hccs::json::{FrameLimits, StreamingFramer};
 use hccs::linalg::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, PackedGemm};
 use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
 use hccs::proptest_lite::{check, shrink_int, Config};
@@ -873,6 +875,173 @@ fn prop_batcher_conserves_and_orders() {
             }
             if !b.is_empty() {
                 return Err("requests left in queue after drain".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Streaming JSON framer (the TCP wire protocol)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct FrameStream {
+    bytes: Vec<u8>,
+    /// Chunk-size schedules to replay the stream under (cycled).
+    schedules: Vec<Vec<usize>>,
+}
+
+fn gen_frame_stream(rng: &mut Xoshiro256) -> FrameStream {
+    let n_frames = 1 + rng.below(6) as usize;
+    let mut bytes = Vec::new();
+    for k in 0..n_frames {
+        // Inter-frame whitespace, sometimes none.
+        for _ in 0..rng.below(3) {
+            bytes.push(*[b' ', b'\n', b'\t', b'\r'].get(rng.below(4) as usize).unwrap());
+        }
+        match rng.below(4) {
+            0 => bytes.extend_from_slice(
+                format!("{{\"id\": {k}, \"text\": \"w{:03} good\"}}", k % 40).as_bytes(),
+            ),
+            // Escapes that hide structural bytes inside strings.
+            1 => bytes.extend_from_slice(br#"{"text": "esc \" brace \\ } inside"}"#),
+            // Nesting: braces/brackets the depth tracker must balance.
+            2 => bytes.extend_from_slice(
+                br#"{"meta": {"a": [1, 2, {"b": "}"}]}, "text": "nested"}"#,
+            ),
+            _ => bytes.extend_from_slice(
+                format!("{{\"text\": \"{}\"}}", "x".repeat(1 + rng.below(40) as usize)).as_bytes(),
+            ),
+        }
+    }
+    bytes.push(b'\n');
+    // The 1-byte-read worst case, plus random small-read schedules.
+    let mut schedules = vec![vec![1]];
+    for _ in 0..3 {
+        schedules.push((0..1 + rng.below(8)).map(|_| 1 + rng.below(13) as usize).collect());
+    }
+    FrameStream { bytes, schedules }
+}
+
+/// The emitted frame sequence is invariant under re-chunking (1-byte
+/// reads included), and the framer never buffers past `max_payload` —
+/// the bounded-memory-by-construction contract of the TCP tier.
+#[test]
+fn prop_streaming_framer_chunking_invariant() {
+    check(
+        "framer-chunking-invariance",
+        Config { cases: 300, ..Default::default() },
+        gen_frame_stream,
+        |_| vec![],
+        |case| {
+            let limits = FrameLimits::default();
+            let mut reference = StreamingFramer::new(limits);
+            let want = reference
+                .push(&case.bytes)
+                .map_err(|e| format!("reference push failed: {e}"))?;
+            if reference.buffered() != 0 {
+                return Err("reference left bytes buffered on a frame boundary".into());
+            }
+            for sched in &case.schedules {
+                let mut f = StreamingFramer::new(limits);
+                let mut got: Vec<Vec<u8>> = Vec::new();
+                let (mut i, mut s) = (0usize, 0usize);
+                while i < case.bytes.len() {
+                    let n = sched[s % sched.len()].min(case.bytes.len() - i);
+                    s += 1;
+                    got.extend(
+                        f.push(&case.bytes[i..i + n])
+                            .map_err(|e| format!("chunked push failed: {e}"))?,
+                    );
+                    if f.buffered() > limits.max_payload {
+                        return Err(format!("buffered {} > max_payload", f.buffered()));
+                    }
+                    i += n;
+                }
+                if got != want {
+                    return Err(format!(
+                        "frames differ under schedule {sched:?}: {} vs {} frames",
+                        got.len(),
+                        want.len()
+                    ));
+                }
+                if !f.is_idle() {
+                    return Err("framer not idle after a boundary-complete stream".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[derive(Clone, Debug)]
+struct AdversarialStream {
+    bytes: Vec<u8>,
+    chunk: usize,
+    must_error: bool,
+}
+
+fn gen_adversarial(rng: &mut Xoshiro256) -> AdversarialStream {
+    let (bytes, must_error) = match rng.below(4) {
+        // A string that never closes: must die at max_string, not grow.
+        0 => {
+            let mut b = b"{\"s\": \"".to_vec();
+            b.resize(b.len() + 4096, b'a');
+            (b, true)
+        }
+        // Pathological nesting: must die at max_depth.
+        1 => {
+            let mut b = b"{\"d\": ".to_vec();
+            b.extend(vec![b'['; 256]);
+            (b, true)
+        }
+        // Garbage between frames: a desynchronized stream must poison
+        // the connection, never resync onto the trailing frame.
+        2 => {
+            let mut b = br#"{"text": "ok"}"#.to_vec();
+            b.extend_from_slice(b" SYN/ACK <<garbage>> ");
+            b.extend_from_slice(br#"{"text": "late"}"#);
+            (b, true)
+        }
+        // Uniform random bytes (may happen to be almost-valid).
+        _ => ((0..2048).map(|_| rng.below(256) as u8).collect(), false),
+    };
+    AdversarialStream { bytes, chunk: 1 + rng.below(64) as usize, must_error }
+}
+
+/// Adversarial input produces a *connection error*, never a panic or
+/// unbounded buffering — and a poisoned framer stays poisoned (no
+/// silent resynchronization after garbage).
+#[test]
+fn prop_streaming_framer_bounded_memory_under_attack() {
+    check(
+        "framer-adversarial-bounded",
+        Config { cases: 300, ..Default::default() },
+        gen_adversarial,
+        |_| vec![],
+        |case| {
+            let limits = FrameLimits { max_payload: 128, max_depth: 8, max_string: 32 };
+            let mut f = StreamingFramer::new(limits);
+            let mut errored = false;
+            for c in case.bytes.chunks(case.chunk) {
+                match f.push(c) {
+                    Ok(_) if errored => {
+                        return Err("push succeeded after the framer was poisoned".into())
+                    }
+                    Ok(_) => {}
+                    Err(_) => errored = true,
+                }
+                if f.buffered() > limits.max_payload {
+                    return Err(format!(
+                        "buffered {} > max_payload {} mid-attack",
+                        f.buffered(),
+                        limits.max_payload
+                    ));
+                }
+            }
+            if case.must_error && !errored {
+                return Err("adversarial stream was accepted without a connection error".into());
             }
             Ok(())
         },

@@ -226,6 +226,7 @@ fn native_backend(shards: usize, length_bands: usize) -> NativeBackend {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
             shards,
             length_bands,
+            max_in_flight: None,
         },
     )
     .unwrap()

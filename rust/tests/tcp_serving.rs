@@ -1,0 +1,290 @@
+//! Integration tests for the TCP connection tier (`hccs::net`) over a
+//! real loopback socket: persistent multi-request clients, torn writes,
+//! mid-stream disconnects, wire garbage, deadline shedding — and
+//! byte-parity of TCP `result` fields with the in-process serve loop.
+//!
+//! Every test body runs under [`with_timeout`] so a wedged reader or
+//! writer thread fails the suite instead of hanging CI.  The whole file
+//! is dispatch-agnostic and runs on both `HCCS_FORCE_SCALAR` legs.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+use hccs::coordinator::BatchPolicy;
+use hccs::data::TaskKind;
+use hccs::json::Value;
+use hccs::model::{ModelConfig, NativeBackend, NativeModel, NativeServeConfig, SoftmaxBackend};
+use hccs::net::{NetConfig, TcpServer};
+use hccs::server;
+use hccs::tokenizer::Tokenizer;
+
+/// Fail loudly instead of hanging: socket tests that deadlock (reader
+/// waiting on a reply that never comes) must kill the suite.
+fn with_timeout<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let body = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = body.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => panic!("test timed out after {secs}s"),
+    }
+}
+
+/// One tiny calibrated model shared by every test in this binary
+/// (construction calibrates per-head HCCS parameters, so do it once).
+fn native_model() -> Arc<NativeModel> {
+    static MODEL: OnceLock<Arc<NativeModel>> = OnceLock::new();
+    MODEL
+        .get_or_init(|| {
+            let task = TaskKind::Sst2s;
+            let cfg = ModelConfig {
+                layers: 1,
+                heads: 2,
+                d_model: 32,
+                d_ff: 64,
+                seq_len: task.max_len(),
+                vocab: hccs::data::VOCAB_SIZE as usize,
+                n_classes: 2,
+            };
+            Arc::new(NativeModel::new(cfg, task, 42).unwrap())
+        })
+        .clone()
+}
+
+fn native_backend() -> Arc<NativeBackend> {
+    Arc::new(
+        NativeBackend::with_config(
+            native_model(),
+            SoftmaxBackend::parse("i16_div").unwrap(),
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards: 2,
+                length_bands: 1,
+                max_in_flight: None,
+            },
+        )
+        .unwrap(),
+    )
+}
+
+fn tokenizer() -> Arc<Tokenizer> {
+    Arc::new(Tokenizer::from_tokens(hccs::data::build_vocab()).unwrap())
+}
+
+fn start_server(cfg: NetConfig) -> (TcpServer, Arc<NativeBackend>) {
+    let backend = native_backend();
+    let srv =
+        TcpServer::start(backend.clone(), tokenizer(), TaskKind::Sst2s, "127.0.0.1:0", cfg)
+            .unwrap();
+    (srv, backend)
+}
+
+/// Distinct in-vocab request texts (same word family as the shard
+/// serving suite, so every request produces a real forward).
+fn texts(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|k| {
+            format!(
+                "w{:03} good{:02} not bad{:02} w{:03}",
+                k % 40,
+                k % 8,
+                (k + 3) % 8,
+                (40 - k) % 40
+            )
+        })
+        .collect()
+}
+
+/// Reference replies from the in-process serve loop — the parity
+/// baseline the TCP `result` fields must match byte-for-byte.
+fn in_process_lines(texts: &[String]) -> Vec<String> {
+    let backend = native_backend();
+    let input = texts.join("\n") + "\n";
+    let mut out: Vec<u8> = Vec::new();
+    let n = server::serve(
+        backend.as_ref(),
+        &tokenizer(),
+        TaskKind::Sst2s,
+        input.as_bytes(),
+        &mut out,
+    )
+    .unwrap();
+    backend.shutdown();
+    assert_eq!(n as usize, texts.len());
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// Write `bytes` in `chunk`-sized slices so the server's reads observe
+/// torn frames (every boundary, including mid-token and mid-string).
+fn write_torn(stream: &mut TcpStream, bytes: &[u8], chunk: usize) {
+    for c in bytes.chunks(chunk.max(1)) {
+        stream.write_all(c).unwrap();
+        stream.flush().unwrap();
+    }
+}
+
+#[test]
+fn tcp_replies_match_in_process_serve_across_concurrent_clients() {
+    with_timeout(120, || {
+        let reqs = texts(8);
+        let expected = in_process_lines(&reqs);
+        let (srv, backend) = start_server(NetConfig::default());
+        let addr = srv.local_addr();
+
+        // 4 persistent clients, each a full request/reply round trip per
+        // request, each tearing its writes at a different grain.
+        let clients: Vec<_> = [1usize, 2, 3, 7]
+            .into_iter()
+            .enumerate()
+            .map(|(k, chunk)| {
+                let (reqs, expected) = (reqs.clone(), expected.clone());
+                std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let mut replies = BufReader::new(stream.try_clone().unwrap());
+                    for (i, text) in reqs.iter().enumerate() {
+                        let id = (k * 100 + i) as u64;
+                        let frame = format!("{{\"id\": {id}, \"text\": \"{text}\"}}\n");
+                        write_torn(&mut stream, frame.as_bytes(), chunk);
+                        let mut line = String::new();
+                        assert!(replies.read_line(&mut line).unwrap() > 0, "reply {i}");
+                        let v = Value::parse(line.trim()).unwrap();
+                        assert_eq!(v.get("id").and_then(Value::as_i64), Some(id as i64));
+                        assert!(v.get("error").is_none(), "client {k} req {i}: {line}");
+                        assert_eq!(
+                            v.get("result").and_then(Value::as_str),
+                            Some(expected[i].as_str()),
+                            "client {k} req {i}: TCP result must be byte-identical \
+                             to the in-process serve line"
+                        );
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+
+        assert_eq!(srv.metrics.counter("net.connections").get(), 4);
+        assert_eq!(srv.metrics.counter("net.requests").get(), 32);
+        assert_eq!(srv.metrics.counter("net.replies").get(), 32);
+        assert_eq!(
+            srv.metrics.sum_counters("net.requests.conn"),
+            32,
+            "per-connection slot counters must roll up to the aggregate"
+        );
+        assert_eq!(srv.metrics.counter("net.frame_errors").get(), 0);
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+#[test]
+fn mid_stream_disconnect_leaves_other_connections_serving() {
+    with_timeout(120, || {
+        let reqs = texts(2);
+        let expected = in_process_lines(&reqs);
+        let (srv, backend) = start_server(NetConfig::default());
+        let addr = srv.local_addr();
+
+        // Client A: one good round trip, then vanish mid-frame.
+        {
+            let mut a = TcpStream::connect(addr).unwrap();
+            let mut replies = BufReader::new(a.try_clone().unwrap());
+            a.write_all(format!("{{\"text\": \"{}\"}}\n", reqs[0]).as_bytes()).unwrap();
+            let mut line = String::new();
+            assert!(replies.read_line(&mut line).unwrap() > 0);
+            assert!(line.contains("\"result\""), "{line}");
+            a.write_all(b"{\"text\": \"torn off mid-fra").unwrap();
+            // Drop: the server sees EOF with a partial frame buffered.
+        }
+
+        // Client B on a fresh connection is unaffected.
+        let mut b = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(b.try_clone().unwrap());
+        b.write_all(format!("{{\"text\": \"{}\"}}\n", reqs[1]).as_bytes()).unwrap();
+        let mut line = String::new();
+        assert!(replies.read_line(&mut line).unwrap() > 0);
+        let v = Value::parse(line.trim()).unwrap();
+        assert_eq!(v.get("result").and_then(Value::as_str), Some(expected[1].as_str()));
+
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+#[test]
+fn garbage_on_the_wire_errors_the_connection_not_the_server() {
+    with_timeout(120, || {
+        let reqs = texts(1);
+        let (srv, backend) = start_server(NetConfig::default());
+        let addr = srv.local_addr();
+
+        // Garbage between frames desynchronizes the stream: the server
+        // answers with one framing error, then closes this connection.
+        let mut bad = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(bad.try_clone().unwrap());
+        bad.write_all(b"hello, this is not json\n").unwrap();
+        let mut line = String::new();
+        assert!(replies.read_line(&mut line).unwrap() > 0, "framing error reply expected");
+        let v = Value::parse(line.trim()).unwrap();
+        let err = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("framing"), "{err}");
+        assert_eq!(v.get("shed").and_then(Value::as_bool), Some(false));
+        line.clear();
+        assert_eq!(replies.read_line(&mut line).unwrap(), 0, "connection must close");
+
+        // The listener and other connections keep serving.
+        let mut ok = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(ok.try_clone().unwrap());
+        ok.write_all(format!("{{\"text\": \"{}\"}}\n", reqs[0]).as_bytes()).unwrap();
+        line.clear();
+        assert!(replies.read_line(&mut line).unwrap() > 0);
+        assert!(line.contains("\"result\""), "{line}");
+
+        assert!(srv.metrics.counter("net.frame_errors").get() >= 1);
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+#[test]
+fn zero_deadline_sheds_every_request_with_shed_replies() {
+    with_timeout(120, || {
+        let (srv, backend) = start_server(NetConfig {
+            deadline: Some(Duration::ZERO),
+            ..NetConfig::default()
+        });
+        let addr = srv.local_addr();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(stream.try_clone().unwrap());
+        let n = 5;
+        for (i, text) in texts(n).iter().enumerate() {
+            stream
+                .write_all(format!("{{\"id\": {i}, \"text\": \"{text}\"}}\n").as_bytes())
+                .unwrap();
+            let mut line = String::new();
+            assert!(replies.read_line(&mut line).unwrap() > 0);
+            let v = Value::parse(line.trim()).unwrap();
+            assert_eq!(v.get("shed").and_then(Value::as_bool), Some(true), "{line}");
+            let err = v.get("error").and_then(Value::as_str).unwrap();
+            assert!(err.trim_start().starts_with("shed:"), "{err}");
+        }
+        drop(stream);
+        drop(replies);
+
+        assert_eq!(srv.metrics.counter("net.shed").get(), n as u64);
+        assert_eq!(srv.metrics.counter("net.replies").get(), n as u64);
+        srv.shutdown();
+        backend.shutdown();
+    });
+}

@@ -23,7 +23,9 @@ by its JSON path with array elements labeled by their identifying
 string field (``name`` / ``backend`` / ``mode`` / ``shards`` / ...).
 A small allowlist of non-throughput trajectory metrics rides along:
 ``roofline_pct`` (measured host GEMM as a percentage of the modeled
-AIE tile — higher is better, same delta semantics as a throughput).
+AIE tile — higher is better, same delta semantics as a throughput) and
+``shed_fraction`` (share of requests shed at each overload sweep point
+— lower is better, so the regression warning fires on increases).
 
 The tool NEVER fails the job: bench numbers from smoke budgets are
 noisy, so regressions warn loudly but exit 0.  Missing token, first run
@@ -43,11 +45,18 @@ import urllib.request
 import zipfile
 
 THROUGHPUT_KEY_MARKER = "per_s"  # matches *_per_s and *_per_second
-# Non-throughput metrics tracked by exact key: higher-is-better ratios
-# whose regressions matter as much as raw rates.
-EXTRA_METRIC_KEYS = ("roofline_pct",)
+# Non-throughput metrics tracked by exact key, riding along with the
+# throughput samples:
+#   roofline_pct  — measured host GEMM as a % of the modeled AIE tile
+#                   (higher is better, throughput delta semantics);
+#   shed_fraction — share of requests shed per overload sweep point
+#                   (0..1, LOWER is better: a rising shed fraction at
+#                   the same offered load means capacity regressed).
+EXTRA_METRIC_KEYS = ("roofline_pct", "shed_fraction")
+LOWER_IS_BETTER_KEYS = ("shed_fraction",)
 ID_KEYS = (
     "name", "backend", "mode", "case", "shards", "batch", "density", "rows", "kernel", "n",
+    "offered_x",
 )
 
 
@@ -184,9 +193,17 @@ def fetch_previous_baseline(workdir):
 # ---------------------------------------------------------------------------
 
 
+def metric_key(path):
+    """Trailing key of a JSON path (strips dict prefixes, not [labels])."""
+    return path.rsplit(".", 1)[-1]
+
+
 def fmt_metric(path, v):
     """Percent metrics render as percentages, everything else as a rate."""
-    if path.rsplit(".", 1)[-1] in EXTRA_METRIC_KEYS:
+    key = metric_key(path)
+    if key.endswith("_fraction"):
+        return f"{v * 100:.1f}%"
+    if key in EXTRA_METRIC_KEYS:
         return f"{v:.2f}%"
     return fmt_rate(v)
 
@@ -223,7 +240,13 @@ def build_report(current, baseline, threshold):
             else:
                 pct = (value - prev) / prev * 100.0
                 delta = f"{pct:+.1f}%"
-                if value < prev * (1.0 - threshold):
+                lower_better = metric_key(path) in LOWER_IS_BETTER_KEYS
+                regressed = (
+                    value > prev * (1.0 + threshold)
+                    if lower_better
+                    else value < prev * (1.0 - threshold)
+                )
+                if regressed:
                     delta += " ⚠️"
                     warnings.append(
                         f"{bench}: {path} regressed {abs(pct):.1f}% "
