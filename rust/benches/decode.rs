@@ -1,0 +1,206 @@
+//! Bench target for the **autoregressive decode path**: cached-K/V
+//! tokens/s of the native causal decoder (bert-tiny shapes) under every
+//! softmax backend, plus the batched-session sweep and the causal
+//! prefill rate.
+//!
+//! Three measurements feed the trajectory:
+//!
+//! * **batch-1 steady-state decode** — one session, one decoder step
+//!   per iteration against its K/V ring; when the ring fills the cache
+//!   is reset and re-prefilled inside the measured loop, so the number
+//!   is the amortized tokens/s of long generations (prefill cost
+//!   included at its real duty cycle).  One row per backend (f32
+//!   reference + all four HCCS modes).
+//! * **batched-session sweep** — `step_batch` over B independent
+//!   sessions at B ∈ {1, 2, 4, 8} on the pinned i16_div mode: the
+//!   projections stack across sessions into one GEMM dispatch per
+//!   layer, so total tokens/s should rise with B (CI gates B=8 against
+//!   the B=1 baseline).
+//! * **causal prefill + end-to-end generate** — `prefill_batch` rows/s
+//!   over a batch of real workload prompts, and `generate` tokens/s
+//!   (prefill + greedy cached-K/V steps + stop scan) on a pinned
+//!   prompt.
+//!
+//! Ends with a machine-readable JSON document (see EXPERIMENTS.md
+//! §decode for the schema; every `*_per_s` field is tracked by
+//! `tools/bench_trend.py`).  When `HCCS_BENCH_JSON` is set the
+//! document is also written to `BENCH_decode.json`; budgets honor
+//! `HCCS_BENCH_*_MS`.
+
+use hccs::benchkit::{bench, sink, write_json};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::json::Value;
+use hccs::model::decoder::greedy_token;
+use hccs::model::{DecoderScratch, KvCache, ModelConfig, NativeDecoder, SoftmaxBackend};
+use hccs::report::Table;
+
+const PROMPTS: usize = 8;
+
+/// Reset every session's ring, re-prefill its prompt, and leave each
+/// session's next greedy token in `tokens`.
+fn refill(
+    dec: &NativeDecoder,
+    prompts: &[Vec<i32>],
+    mode: SoftmaxBackend,
+    caches: &mut [KvCache],
+    tokens: &mut Vec<i32>,
+    s: &mut DecoderScratch,
+) {
+    let vocab = dec.cfg.vocab;
+    tokens.clear();
+    for (i, cache) in caches.iter_mut().enumerate() {
+        cache.reset();
+        let prompt = &prompts[i % prompts.len()];
+        let rows = dec.prefill(prompt, mode, cache, s).expect("prefill");
+        tokens.push(greedy_token(&rows[(prompt.len() - 1) * vocab..]));
+    }
+}
+
+fn main() {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig::bert_tiny(task);
+    eprintln!("calibrating native decoder bert-tiny/{}...", task.name());
+    let dec = NativeDecoder::new(cfg, task, 42).expect("decoder build");
+
+    // Prompts are the valid prefixes of real workload examples ([CLS]
+    // .. [SEP]), capped so every session has at least 16 free ring
+    // slots to decode into before a refill.
+    let mut generator = WorkloadGen::new(task, 7);
+    let prompts: Vec<Vec<i32>> = (0..PROMPTS)
+        .map(|_| {
+            let ex = generator.next_example();
+            let n = ex.valid_len.clamp(1, cfg.seq_len - 16);
+            ex.ids[..n].to_vec()
+        })
+        .collect();
+
+    // ---- batch-1 steady-state decode, per backend --------------------
+    let backends: Vec<SoftmaxBackend> = std::iter::once(SoftmaxBackend::F32Ref)
+        .chain(SoftmaxBackend::hccs_modes())
+        .collect();
+    let mut table = Table::new(
+        "cached-K/V decode, batch 1 (bert-tiny/sst2s, this machine)",
+        &["backend", "tokens/s", "vs f32"],
+    );
+    let mut cases: Vec<Value> = Vec::new();
+    let mut f32_tps = 0.0f64;
+    for backend in backends {
+        let mut scratch = DecoderScratch::default();
+        let mut caches = vec![dec.new_cache()];
+        let mut tokens = Vec::new();
+        refill(&dec, &prompts, backend, &mut caches, &mut tokens, &mut scratch);
+        let r = bench(&format!("decode b1 {}", backend.name()), || {
+            if caches[0].remaining() == 0 {
+                refill(&dec, &prompts, backend, &mut caches, &mut tokens, &mut scratch);
+            }
+            let logits = dec.step(tokens[0], backend, &mut caches[0], &mut scratch).expect("step");
+            tokens[0] = greedy_token(&logits);
+            sink(tokens[0]);
+        });
+        let tps = r.per_second(1.0);
+        if backend == SoftmaxBackend::F32Ref {
+            f32_tps = tps;
+        }
+        table.row(&[
+            backend.name().to_string(),
+            format!("{tps:.1}"),
+            format!("{:.2}x", tps / f32_tps.max(1e-9)),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("backend".to_string(), Value::from(backend.name()));
+        case.insert("tokens_per_s".to_string(), Value::from(tps));
+        case.insert("median_ns".to_string(), Value::from(r.median.as_nanos() as i64));
+        case.insert("speedup_vs_f32".to_string(), Value::from(tps / f32_tps.max(1e-9)));
+        cases.push(Value::Obj(case));
+    }
+    println!("{}", table.render());
+
+    // ---- batched-session sweep (i16_div) -----------------------------
+    let mode = SoftmaxBackend::parse("i16_div").expect("known mode");
+    let mut sweep_table = Table::new(
+        "step_batch session sweep (i16_div)",
+        &["sessions", "tokens/s", "vs b=1"],
+    );
+    let mut sweep: Vec<Value> = Vec::new();
+    let mut b1_tps = 0.0f64;
+    for &bs in &[1usize, 2, 4, 8] {
+        let mut scratch = DecoderScratch::default();
+        let mut caches: Vec<KvCache> = (0..bs).map(|_| dec.new_cache()).collect();
+        let mut tokens = Vec::with_capacity(bs);
+        refill(&dec, &prompts, mode, &mut caches, &mut tokens, &mut scratch);
+        let r = bench(&format!("step_batch b={bs}"), || {
+            if caches.iter().any(|c| c.remaining() == 0) {
+                refill(&dec, &prompts, mode, &mut caches, &mut tokens, &mut scratch);
+            }
+            let out =
+                dec.step_batch(&tokens, mode, &mut caches, &mut scratch).expect("step_batch");
+            for (t, logits) in tokens.iter_mut().zip(&out) {
+                *t = greedy_token(logits);
+            }
+            sink(tokens.len());
+        });
+        let tps = r.per_second(bs as f64);
+        if bs == 1 {
+            b1_tps = tps;
+        }
+        let speedup = tps / b1_tps.max(1e-9);
+        sweep_table.row(&[bs.to_string(), format!("{tps:.1}"), format!("{speedup:.2}x")]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("batch".to_string(), Value::from(bs as i64));
+        case.insert("tokens_per_s".to_string(), Value::from(tps));
+        case.insert("speedup_vs_b1".to_string(), Value::from(speedup));
+        sweep.push(Value::Obj(case));
+    }
+    println!("{}", sweep_table.render());
+
+    // ---- causal prefill + end-to-end generate ------------------------
+    let mut scratch = DecoderScratch::default();
+    let mut ids = Vec::new();
+    let mut lens = Vec::new();
+    for prompt in &prompts {
+        ids.extend_from_slice(prompt);
+        lens.push(prompt.len());
+    }
+    let prefill_rows: usize = lens.iter().sum();
+    let r = bench("prefill_batch", || {
+        let rows = dec.prefill_batch(&ids, &lens, mode, &mut scratch).expect("prefill_batch");
+        sink(rows.len());
+    });
+    let prefill_rows_per_s = r.per_second(prefill_rows as f64);
+
+    // End-to-end generate on a pinned prompt: greedy decode is
+    // deterministic, so the token count per call is a constant and
+    // per_second stays well-defined even when a stop token ends the
+    // stream before the budget.
+    const GEN_BUDGET: usize = 16;
+    let gen_prompt = &prompts[0];
+    let warm = dec.generate(gen_prompt, GEN_BUDGET, mode, &mut scratch).expect("generate");
+    let gen_tokens = warm.tokens.len().max(1);
+    let r = bench("generate e2e", || {
+        let g = dec.generate(gen_prompt, GEN_BUDGET, mode, &mut scratch).expect("generate");
+        sink(g.tokens.len());
+    });
+    let generate_tokens_per_s = r.per_second(gen_tokens as f64);
+    println!(
+        "prefill: {prefill_rows} rows/call at {prefill_rows_per_s:.1} rows/s; \
+         generate: prompt {} + {gen_tokens} tokens ({:?}) at {generate_tokens_per_s:.1} tokens/s",
+        gen_prompt.len(),
+        warm.stop,
+    );
+
+    let mut doc = std::collections::BTreeMap::new();
+    doc.insert("bench".to_string(), Value::from("decode"));
+    doc.insert("model".to_string(), Value::from("bert-tiny"));
+    doc.insert("task".to_string(), Value::from(task.name()));
+    doc.insert("units".to_string(), Value::from("tokens_per_second"));
+    doc.insert("simd_path".to_string(), Value::from(hccs::simd::active().name()));
+    doc.insert("prompt_len".to_string(), Value::from(prompts[0].len() as i64));
+    doc.insert("cases".to_string(), Value::Arr(cases));
+    doc.insert("batch_sweep".to_string(), Value::Arr(sweep));
+    doc.insert("prefill_rows_per_s".to_string(), Value::from(prefill_rows_per_s));
+    doc.insert("generate_tokens_per_s".to_string(), Value::from(generate_tokens_per_s));
+    doc.insert("generate_tokens".to_string(), Value::from(gen_tokens as i64));
+    let doc = Value::Obj(doc);
+    println!("{}", doc.to_string_pretty());
+    write_json("decode", &doc);
+}

@@ -305,6 +305,168 @@ pub fn hccs_attention_ragged_from_acc(
     Ok(())
 }
 
+/// Causal masked self-attention over a ragged batch axis: like
+/// [`hccs_attention_ragged_from_acc`], but row `i` of a length-`l`
+/// group attends to keys `0..=i` only (active width `i + 1`), not to
+/// the group's full `l` keys — the autoregressive prefill form.
+///
+/// `acc` layout is unchanged (each group's `(l, c_stride)` tile as
+/// written by [`crate::linalg::gemm_nt_bounded_into`] at `n_active =
+/// l`); the strictly-upper-triangle products it may contain are simply
+/// never read, because the masked HCCS pass runs with per-row widths
+/// `1, 2, …, l`.  The p̂ tile then has **exact zeros** on every future
+/// key, so the per-group [`crate::linalg::gemm_pv_bounded_into`] mix at
+/// `c_active = l` adds exact integer zeros for them — which is what
+/// makes prefill row `i` bit-identical to a decode step at `t = i + 1`
+/// over the same cached K/V ([`hccs_attention_step_from_acc`]), on
+/// either SIMD path.
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_attention_causal_from_acc(
+    acc: &[i32],
+    v: &[i8],
+    group_lens: &[usize],
+    c_stride: usize,
+    dv: usize,
+    params: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    scale_num: i32,
+    scale_den: i32,
+    scratch: &mut AttentionScratch,
+    out: &mut [i32],
+) -> Result<(), String> {
+    if group_lens.is_empty() || c_stride == 0 || dv == 0 {
+        return Err("empty attention dims".into());
+    }
+    if let Some(&bad) = group_lens.iter().find(|&&l| l == 0 || l > c_stride) {
+        return Err(format!("group length {bad} outside 1..={c_stride}"));
+    }
+    if scale_den <= 0 || scale_num <= 0 {
+        return Err("rescale factors must be positive".into());
+    }
+    let rows: usize = group_lens.iter().sum();
+    if acc.len() != rows * c_stride {
+        return Err(format!("acc len {} != {rows}x{c_stride}", acc.len()));
+    }
+    if v.len() != rows * dv {
+        return Err(format!("v len {} != {rows}x{dv}", v.len()));
+    }
+    if out.len() != rows * dv {
+        return Err(format!("out len {} != {rows}x{dv}", out.len()));
+    }
+    params.validate_masked(c_stride).map_err(|e| e.to_string())?;
+
+    // Per-row causal widths: 1..=l within each group.
+    scratch.lens.clear();
+    for &len in group_lens {
+        scratch.lens.extend(1..=len);
+    }
+    scratch.xq.resize(rows * c_stride, 0);
+    scratch.phat.resize(rows * c_stride, 0);
+    for ((xr, ar), &len) in scratch
+        .xq
+        .chunks_exact_mut(c_stride)
+        .zip(acc.chunks_exact(c_stride))
+        .zip(scratch.lens.iter())
+    {
+        for (x, &l) in xr[..len].iter_mut().zip(&ar[..len]) {
+            let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
+            *x = scaled.clamp(-128, 127) as i8;
+        }
+    }
+    hccs_batch_masked_into(
+        &scratch.xq,
+        rows,
+        c_stride,
+        &scratch.lens,
+        params,
+        out_path,
+        recip,
+        &mut scratch.phat,
+    );
+    // p̂ @ V per group at the group's full width: future-key columns
+    // hold exact p̂ = 0, so they contribute exact zeros.
+    let mut off = 0usize;
+    for &len in group_lens {
+        linalg::gemm_pv_bounded_into(
+            &scratch.phat[off * c_stride..(off + len) * c_stride],
+            &v[off * dv..(off + len) * dv],
+            len,
+            c_stride,
+            len,
+            dv,
+            &mut out[off * dv..(off + len) * dv],
+        );
+        off += len;
+    }
+    Ok(())
+}
+
+/// One autoregressive decode step from a precomputed q·Kᵀ accumulator
+/// row: the `len = t` special case of the causal form, for a single
+/// query attending to `t` cached keys.
+///
+/// `acc_row` is one `(c_stride,)` accumulator row with the `t` active
+/// products in front (the layout `gemm_nt_bounded_into(q, k_cache, 1,
+/// c_stride, t, dk, …)` writes); `v` is the session's `(t, dv)` cached
+/// value rows.  Produces the `(dv,)` i32 context row.  Bit-identical to
+/// row `t - 1` of [`hccs_attention_causal_from_acc`] over the same
+/// prefix — the contract `tests` in `rust/src/model/decoder.rs` pin
+/// end to end.
+#[allow(clippy::too_many_arguments)]
+pub fn hccs_attention_step_from_acc(
+    acc_row: &[i32],
+    v: &[i8],
+    t: usize,
+    c_stride: usize,
+    dv: usize,
+    params: &HccsParams,
+    out_path: OutputPath,
+    recip: Reciprocal,
+    scale_num: i32,
+    scale_den: i32,
+    scratch: &mut AttentionScratch,
+    out: &mut [i32],
+) -> Result<(), String> {
+    if t == 0 || t > c_stride || dv == 0 {
+        return Err(format!("step width {t} outside 1..={c_stride}"));
+    }
+    if scale_den <= 0 || scale_num <= 0 {
+        return Err("rescale factors must be positive".into());
+    }
+    if acc_row.len() != c_stride {
+        return Err(format!("acc row len {} != {c_stride}", acc_row.len()));
+    }
+    if v.len() != t * dv {
+        return Err(format!("v len {} != {t}x{dv}", v.len()));
+    }
+    if out.len() != dv {
+        return Err(format!("out len {} != {dv}", out.len()));
+    }
+    params.validate_masked(c_stride).map_err(|e| e.to_string())?;
+
+    scratch.lens.clear();
+    scratch.lens.push(t);
+    scratch.xq.resize(c_stride, 0);
+    scratch.phat.resize(c_stride, 0);
+    for (x, &l) in scratch.xq[..t].iter_mut().zip(&acc_row[..t]) {
+        let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
+        *x = scaled.clamp(-128, 127) as i8;
+    }
+    hccs_batch_masked_into(
+        &scratch.xq,
+        1,
+        c_stride,
+        &scratch.lens,
+        params,
+        out_path,
+        recip,
+        &mut scratch.phat,
+    );
+    linalg::gemm_pv_bounded_into(&scratch.phat, v, 1, c_stride, t, dv, out);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -530,6 +692,172 @@ mod tests {
                 );
                 off += len;
             }
+        }
+    }
+
+    const MODES: [(OutputPath, Reciprocal); 4] = [
+        (OutputPath::I16, Reciprocal::Div),
+        (OutputPath::I16, Reciprocal::Clb),
+        (OutputPath::I8, Reciprocal::Div),
+        (OutputPath::I8, Reciprocal::Clb),
+    ];
+
+    #[test]
+    fn causal_matches_per_prefix_dense_attention() {
+        // Row i of a causal group must equal a dense attention call over
+        // that row's prefix alone (q = row i, K/V = keys 0..=i), bit for
+        // bit, in every mode — including the len = 1 first step.
+        let mut rng = Xoshiro256::new(77);
+        let (c_stride, dk, dv) = (16usize, 8usize, 5usize);
+        let group_lens = [4usize, 1, 16, 7];
+        // Feasible down to single-key rows under dense validation, so
+        // the per-prefix reference can be computed with hccs_attention.
+        let p = HccsParams::checked(400, 1, 64, c_stride).unwrap();
+        assert!(p.validate(1).is_ok());
+        let cases: Vec<(Vec<i8>, Vec<i8>, Vec<i8>)> = group_lens
+            .iter()
+            .map(|&len| inputs(&mut rng, len, len, dk, dv))
+            .collect();
+        let rows: usize = group_lens.iter().sum();
+        let mut acc = vec![0i32; rows * c_stride];
+        let mut v_all = Vec::new();
+        let mut off = 0usize;
+        for (&len, (q, k, v)) in group_lens.iter().zip(&cases) {
+            crate::linalg::gemm_nt_bounded_into(
+                q,
+                k,
+                len,
+                c_stride,
+                len,
+                dk,
+                &mut acc[off * c_stride..(off + len) * c_stride],
+            );
+            v_all.extend_from_slice(v);
+            off += len;
+        }
+        let mut scratch = AttentionScratch::default();
+        for (op, rc) in MODES {
+            let mut got = vec![0i32; rows * dv];
+            hccs_attention_causal_from_acc(
+                &acc, &v_all, &group_lens, c_stride, dv, &p, op, rc, 1, 8, &mut scratch, &mut got,
+            )
+            .unwrap();
+            let mut off = 0usize;
+            for (&len, (q, k, v)) in group_lens.iter().zip(&cases) {
+                for i in 0..len {
+                    let t = i + 1;
+                    let inp = AttentionInputs {
+                        q: &q[i * dk..(i + 1) * dk],
+                        k: &k[..t * dk],
+                        v: &v[..t * dv],
+                        r: 1,
+                        c: t,
+                        dk,
+                        dv,
+                    };
+                    let mut want = vec![0i32; dv];
+                    let mut s = AttentionScratch::default();
+                    hccs_attention(&inp, &p, op, rc, 1, 8, &mut s, &mut want).unwrap();
+                    assert_eq!(
+                        got[(off + i) * dv..(off + i + 1) * dv],
+                        want[..],
+                        "group len {len} row {i} {op:?}/{rc:?}"
+                    );
+                }
+                off += len;
+            }
+        }
+    }
+
+    #[test]
+    fn step_matches_causal_rows_with_cached_kv() {
+        // A decode loop over t = 1..=len via hccs_attention_step_from_acc
+        // (fresh q·Kᵀ row against the growing cache each step) must
+        // reproduce the causal prefill rows bit-identically — with a θ
+        // whose floor would FAIL dense validation at short lengths, to
+        // pin the masked-relaxation regime the decoder actually runs in.
+        let mut rng = Xoshiro256::new(78);
+        let (c_stride, dk, dv) = (24usize, 8usize, 6usize);
+        let len = 24usize;
+        let p = HccsParams::checked(900, 8, 64, c_stride).unwrap(); // floor 388
+        let p_low = HccsParams::new(500, 6, 64); // floor 116: validate(1) fails
+        assert!(p_low.validate(1).is_err());
+        assert!(p_low.validate_masked(c_stride).is_ok());
+        let (q, k, v) = inputs(&mut rng, len, len, dk, dv);
+        let mut acc = vec![0i32; len * c_stride];
+        crate::linalg::gemm_nt_bounded_into(&q, &k, len, c_stride, len, dk, &mut acc);
+        let mut scratch = AttentionScratch::default();
+        for theta in [p, p_low] {
+            for (op, rc) in MODES {
+                let mut prefill = vec![0i32; len * dv];
+                hccs_attention_causal_from_acc(
+                    &acc, &v, &[len], c_stride, dv, &theta, op, rc, 1, 8, &mut scratch,
+                    &mut prefill,
+                )
+                .unwrap();
+                for t in 1..=len {
+                    // Step t: query row t-1 against the t cached keys.
+                    let mut acc_row = vec![0i32; c_stride];
+                    crate::linalg::gemm_nt_bounded_into(
+                        &q[(t - 1) * dk..t * dk],
+                        &k[..t * dk],
+                        1,
+                        c_stride,
+                        t,
+                        dk,
+                        &mut acc_row,
+                    );
+                    let mut step = vec![0i32; dv];
+                    hccs_attention_step_from_acc(
+                        &acc_row,
+                        &v[..t * dv],
+                        t,
+                        c_stride,
+                        dv,
+                        &theta,
+                        op,
+                        rc,
+                        1,
+                        8,
+                        &mut scratch,
+                        &mut step,
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        step[..],
+                        prefill[(t - 1) * dv..t * dv],
+                        "step t={t} θ={theta:?} {op:?}/{rc:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_rejects_bad_shapes() {
+        let p = HccsParams::checked(400, 1, 64, 8).unwrap();
+        let mut scratch = AttentionScratch::default();
+        let acc = vec![0i32; 8];
+        let v = vec![0i8; 3 * 2];
+        let mut out = vec![0i32; 2];
+        let ok = hccs_attention_step_from_acc(
+            &acc, &v, 3, 8, 2, &p, OutputPath::I16, Reciprocal::Div, 1, 4, &mut scratch, &mut out,
+        );
+        assert!(ok.is_ok());
+        let bad: [(usize, usize, usize, usize); 5] =
+            [(0, 6, 2, 8), (9, 6, 2, 8), (3, 5, 2, 8), (3, 6, 1, 8), (3, 6, 2, 7)];
+        for (t, v_len, out_len, acc_len) in bad {
+            let v = vec![0i8; v_len];
+            let acc = vec![0i32; acc_len];
+            let mut out = vec![0i32; out_len];
+            assert!(
+                hccs_attention_step_from_acc(
+                    &acc, &v, t, 8, 2, &p, OutputPath::I16, Reciprocal::Div, 1, 4, &mut scratch,
+                    &mut out,
+                )
+                .is_err(),
+                "t={t} v={v_len} out={out_len} acc={acc_len} must reject"
+            );
         }
     }
 

@@ -229,13 +229,42 @@ mod tests {
         assert!(cal.kl.is_finite() && cal.kl >= 0.0);
         assert!(cal.evaluated > 50, "grid too small: {}", cal.evaluated);
         // Feasible at the full serve width AND at the shortest observed
-        // row (the range-band construction).
+        // row (the range-band construction): the exact minimum row sum
+        // — B for the row max plus floor for every other key — clears
+        // the Z >= 256 reciprocal guarantee at len 12.
         cal.params.validate(64).unwrap();
         assert!(
-            cal.params.floor() >= 256_i32.div_ceil(12),
-            "floor {} below the shortest row's Z >= 256 bound",
-            cal.params.floor()
+            cal.params.min_row_sum(12) >= 256,
+            "min row sum {} at the shortest row below the Z >= 256 bound",
+            cal.params.min_row_sum(12)
         );
+    }
+
+    #[test]
+    fn causal_rows_with_single_key_prefix_calibrate() {
+        // The autoregressive-decode regime: calibration rows are causal
+        // prefixes 1..=n, so n_min = 1.  The historical per-element
+        // short-row bound emptied the feasible band for most of the
+        // (S, Dmax) grid here; the exact row-sum bound keeps it alive.
+        let mut rng = Xoshiro256::new(33);
+        let rows: Vec<Vec<f64>> = (0..40)
+            .map(|i| {
+                let len = 1 + i % 20;
+                (0..len)
+                    .map(|_| (rng.f64() + rng.f64() + rng.f64() - 1.5) * 3.0)
+                    .collect()
+            })
+            .collect();
+        let flat: Vec<f64> = rows.iter().flatten().cloned().collect();
+        let gamma = calibrate_scale(&flat, 99.9);
+        let cal = calibrate_rows_ragged(&rows, 20, gamma);
+        assert!(cal.kl.is_finite() && cal.kl >= 0.0);
+        cal.params.validate(20).unwrap();
+        assert!(cal.params.validate_masked(20).is_ok());
+        // Every causal prefix length keeps the exact Z >= 256 floor.
+        for n in 1..=20usize {
+            assert!(cal.params.min_row_sum(n) >= 256, "Z floor violated at n={n}");
+        }
     }
 
     #[test]

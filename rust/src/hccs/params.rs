@@ -134,11 +134,22 @@ impl HccsParams {
 
     /// Feasible-B band for a *range* of active row lengths
     /// `[n_min, n_max]` — the valid-length-masked regime, where one θ
-    /// must serve rows whose active width varies per example.  The score
-    /// floor bound tightens with the shortest row (`Z >= 256` needs
-    /// `floor >= ceil(256/n_min)`), the row-sum bound with the longest
-    /// (`n_max·B <= 32767`), so the band is the intersection over the
-    /// whole range.
+    /// must serve rows whose active width varies per example.  The
+    /// row-sum bound tightens with the longest row (`n_max·B <= 32767`);
+    /// the `Z >= 256` bound with the shortest, but as the **exact** row
+    /// minimum, not the per-element floor: the row max always scores
+    /// exactly `B`, so the smallest possible sum of an `n`-key row is
+    /// `B + (n-1)·floor`, giving `B >= ceil((256 + (n-1)·S·Dmax) / n)`.
+    /// The historical per-element form (`floor >= ceil(256/n_min)`) is
+    /// strictly looser information-wise but *stricter* as a constraint —
+    /// at `n_min = 1` it demanded `B >= S·Dmax + 256` when `B >= 256`
+    /// already guarantees `Z = B >= 256`, which could empty the band and
+    /// reject every θ for a legitimate single-key (causal first step)
+    /// row.  The dense-width term (`floor >= ceil(256/n_max)`) is kept
+    /// so the winning θ still satisfies [`Self::validate`] at `n_max`
+    /// (full-width serve rows keep the per-element §IV-C guarantee); a
+    /// point band (`n_min == n_max`) therefore reproduces
+    /// [`Self::feasible_b_band`] exactly.
     pub fn feasible_b_band_range(
         s: i32,
         dmax: i32,
@@ -146,9 +157,19 @@ impl HccsParams {
         n_max: usize,
     ) -> Option<(i32, i32)> {
         debug_assert!(0 < n_min && n_min <= n_max);
-        let lo = s * dmax + ceil_div(256, n_min as i32);
+        let dense = s * dmax + ceil_div(256, n_max as i32);
+        let short = ceil_div(256 + (n_min as i32 - 1) * s * dmax, n_min as i32);
+        let lo = dense.max(short);
         let hi = T_I16 / n_max as i32;
         (lo <= hi).then_some((lo, hi))
+    }
+
+    /// Exact minimum achievable row sum for an `n`-key row under θ: the
+    /// row max scores `B` (δ = 0 by construction), every other key at
+    /// worst the clamp floor.  This is the quantity the
+    /// [`Self::feasible_b_band_range`] short-row bound keeps ≥ 256.
+    pub fn min_row_sum(&self, n: usize) -> i64 {
+        self.b as i64 + (n as i64 - 1) * self.floor() as i64
     }
 }
 
@@ -217,18 +238,46 @@ mod tests {
 
     #[test]
     fn range_band_is_intersection_over_lengths() {
-        // n in [10, 64]: lo uses n=10 (ceil(256/10)=26), hi uses n=64.
+        // n in [10, 64]: the dense-width term gives 256 + ceil(256/64)
+        // = 260, the exact 10-key row-sum term gives ceil(2560/10) =
+        // 256; lo is their max, hi uses n=64.
         let (lo, hi) = HccsParams::feasible_b_band_range(4, 64, 10, 64).unwrap();
-        assert_eq!(lo, 4 * 64 + 26);
+        assert_eq!(lo, 260);
         assert_eq!(hi, 511);
         // A point band collapses to the single-length band.
         assert_eq!(
             HccsParams::feasible_b_band_range(4, 64, 64, 64),
             HccsParams::feasible_b_band(4, 64, 64)
         );
-        // The endpoints are feasible at both extremes of the range.
+        // The low endpoint is feasible at full width, and its exact
+        // minimum row sum at the shortest length still clears 256 (the
+        // guarantee the short-row term encodes; the per-element
+        // validate(10) floor is intentionally NOT required).
         assert!(HccsParams::checked(lo, 4, 64, 64).is_ok());
+        let p = HccsParams::new(lo, 4, 64);
+        assert!(p.min_row_sum(10) >= 256, "min row sum {}", p.min_row_sum(10));
         assert!(HccsParams::checked(hi, 4, 64, 10).is_ok());
+    }
+
+    #[test]
+    fn single_key_rows_keep_a_nonempty_band() {
+        // Regression: with S·Dmax = 256 the historical short-row bound
+        // demanded B >= 512 while hi = floor(32767/64) = 511 — an empty
+        // band, so a θ search over causal rows (n_min = 1, the first
+        // decode step) found nothing.  A 1-key row's sum is exactly B,
+        // so B >= 256 suffices.
+        let (lo, hi) = HccsParams::feasible_b_band_range(4, 64, 1, 64)
+            .expect("single-key band must not be empty");
+        assert_eq!(lo, 260, "dense-width term binds: 256 + ceil(256/64)");
+        assert_eq!(hi, 511);
+        let p = HccsParams::new(lo, 4, 64);
+        assert!(p.validate(64).is_ok(), "band lo must stay full-width feasible");
+        assert!(p.validate_masked(64).is_ok());
+        for n in 1..=64usize {
+            assert!(p.min_row_sum(n) >= 256, "Z floor violated at n={n}");
+        }
+        // Steeper slopes shrink but need not empty the band either.
+        assert!(HccsParams::feasible_b_band_range(6, 64, 1, 64).is_some());
     }
 
     #[test]

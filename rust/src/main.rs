@@ -1,4 +1,4 @@
-//! `hccs` — the leader binary: serve, eval, calibrate, sim, tables.
+//! `hccs` — the leader binary: serve, generate, eval, calibrate, sim, tables.
 //!
 //! ```text
 //! hccs tables  [--artifacts DIR] [--table 1|2|3] [--fig 2|3] [--limit N] [--remeasure]
@@ -12,7 +12,14 @@
 //!                                (persistent multi-client TCP tier: newline-delimited JSON
 //!                                 frames, per-connection backpressure window N, requests
 //!                                 shed once MS elapses; both flags also apply on stdin)
+//!              [--decode]        (native + --tcp: also serve streaming generation frames
+//!                                 {"generate": "<prompt>", "max_new": n} — one reply frame
+//!                                 per token; --deadline-ms applies per decode step)
 //!              [--artifacts DIR] [--variant V] [--batch B]               (pjrt backend only)
+//! hccs generate [--model M] [--task T] [--seed S] [--mode i16_div|f32]
+//!               [--prompt "w012 good03"] [--max-new N]
+//!                                (seed-built causal decoder: cached-K/V greedy decode,
+//!                                 prints the generated tokens and tokens/s)
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
 //!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile table)
 //!              [--roofline]  (measures the host packed GEMM on the encoder shapes and
@@ -47,7 +54,7 @@ const KNOWN: &[&str] = &[
     "artifacts=", "table=", "fig=", "limit=", "remeasure", "model=", "task=", "variant=",
     "batch=", "max-batch=", "wait-ms=", "shards=", "length-bands=", "device=", "kernel=",
     "n=", "tiles=", "rows=", "spread=", "backend=", "seed=", "modes=", "mode=", "roofline",
-    "tcp=", "deadline-ms=", "max-inflight=", "help",
+    "tcp=", "deadline-ms=", "max-inflight=", "decode", "prompt=", "max-new=", "help",
 ];
 
 fn main() -> Result<()> {
@@ -61,6 +68,7 @@ fn main() -> Result<()> {
         "tables" => cmd_tables(&args, &artifacts),
         "eval" => cmd_eval(&args, &artifacts),
         "serve" => cmd_serve(&args, &artifacts),
+        "generate" => cmd_generate(&args),
         "sim" => cmd_sim(&args),
         "calibrate" => cmd_calibrate(&args),
         other => bail!("unknown subcommand {other:?}\n{}", usage()),
@@ -68,7 +76,7 @@ fn main() -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "usage: hccs <tables|eval|serve|sim|calibrate> [flags]\n\
+    "usage: hccs <tables|eval|serve|generate|sim|calibrate> [flags]\n\
      run with a subcommand; see module docs (src/main.rs) for flags"
 }
 
@@ -202,8 +210,18 @@ fn cmd_serve(args: &Args, artifacts: &Path) -> Result<()> {
     let (coord, handle) = Coordinator::start(cfg)?;
     let coord = std::sync::Arc::new(coord);
     eprintln!("serving across {shards} shard(s)");
-    let n =
-        run_serve(std::sync::Arc::clone(&coord), tokenizer, task, args, deadline, max_inflight)?;
+    if args.flag("decode") {
+        eprintln!("warning: --decode applies to --backend native; ignored");
+    }
+    let n = run_serve(
+        std::sync::Arc::clone(&coord),
+        None,
+        tokenizer,
+        task,
+        args,
+        deadline,
+        max_inflight,
+    )?;
     coord.shutdown();
     let _ = handle.join();
     eprintln!("served {n} requests\n{}", coord.metrics.render());
@@ -232,8 +250,11 @@ fn serve_slo(args: &Args) -> Result<(Option<std::time::Duration>, Option<usize>)
 /// Drive a started backend either over TCP (`--tcp ADDR`: persistent
 /// multi-client connections, one JSON object per line) or over stdin
 /// (the newline-delimited text protocol).  Returns the reply count.
+/// `streaming` (native `--decode`) upgrades the TCP tier to also serve
+/// `{"generate": ...}` frames against that backend's decode sessions.
 fn run_serve<E>(
     backend: std::sync::Arc<E>,
+    streaming: Option<std::sync::Arc<NativeBackend>>,
     tokenizer: Tokenizer,
     task: TaskKind,
     args: &Args,
@@ -250,13 +271,13 @@ where
                 deadline,
                 ..Default::default()
             };
-            let srv = hccs::net::TcpServer::start(
-                backend,
-                std::sync::Arc::new(tokenizer),
-                task,
-                addr,
-                cfg,
-            )?;
+            let tokenizer = std::sync::Arc::new(tokenizer);
+            let srv = match streaming {
+                Some(native) => {
+                    hccs::net::TcpServer::start_streaming(native, tokenizer, task, addr, cfg)?
+                }
+                None => hccs::net::TcpServer::start(backend, tokenizer, task, addr, cfg)?,
+            };
             eprintln!(
                 "serving TCP on {} (one JSON object per line, e.g. \
                  {{\"id\":1,\"text\":\"...\"}}; close stdin / Ctrl-D to stop)",
@@ -310,27 +331,91 @@ fn cmd_serve_native(args: &Args, model_name: &str, task: TaskKind) -> Result<()>
     let model = NativeModel::new(cfg, task, seed)?;
     let tokenizer = Tokenizer::from_tokens(hccs::data::build_vocab())?;
     let (deadline, max_inflight) = serve_slo(args)?;
-    let backend = std::sync::Arc::new(NativeBackend::with_config(
-        std::sync::Arc::new(model),
-        mode,
-        hccs::model::NativeServeConfig {
-            policy: BatchPolicy {
-                max_batch,
-                max_wait: std::time::Duration::from_millis(wait_ms),
-            },
-            shards,
-            length_bands,
-            max_in_flight: max_inflight,
-        },
-    )?);
+    let serve_cfg = hccs::model::NativeServeConfig {
+        policy: BatchPolicy { max_batch, max_wait: std::time::Duration::from_millis(wait_ms) },
+        shards,
+        length_bands,
+        max_in_flight: max_inflight,
+    };
+    let decode = args.flag("decode");
+    let backend = if decode {
+        eprintln!("calibrating the causal decoder (seed {seed})...");
+        let decoder = std::sync::Arc::new(hccs::model::NativeDecoder::new(cfg, task, seed)?);
+        std::sync::Arc::new(NativeBackend::with_decoder(
+            std::sync::Arc::new(model),
+            decoder,
+            mode,
+            serve_cfg,
+        )?)
+    } else {
+        let model = std::sync::Arc::new(model);
+        std::sync::Arc::new(NativeBackend::with_config(model, mode, serve_cfg)?)
+    };
+    if decode && args.get("tcp").is_none() {
+        eprintln!(
+            "warning: --decode streams tokens over the TCP tier only; \
+             add --tcp ADDR to accept {{\"generate\": ...}} frames"
+        );
+    }
     eprintln!(
         "serving across {shards} shard(s), max batch {max_batch}, \
          {length_bands} length band(s)"
     );
-    let n =
-        run_serve(std::sync::Arc::clone(&backend), tokenizer, task, args, deadline, max_inflight)?;
+    let streaming = (decode && args.get("tcp").is_some())
+        .then(|| std::sync::Arc::clone(&backend));
+    let n = run_serve(
+        std::sync::Arc::clone(&backend),
+        streaming,
+        tokenizer,
+        task,
+        args,
+        deadline,
+        max_inflight,
+    )?;
     backend.shutdown();
     eprintln!("served {n} requests\n{}", backend.metrics.render());
+    Ok(())
+}
+
+/// Greedy autoregressive decode on the seed-built causal decoder —
+/// the CLI face of the cached-K/V step path (zero artifacts needed).
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "bert-tiny");
+    let task = TaskKind::parse(args.get_or("task", "sst2s")).context("bad --task")?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let mode = SoftmaxBackend::parse(args.get_or("mode", "i16_div"))
+        .context("bad --mode (i16_div|i16_clb|i8_div|i8_clb|f32)")?;
+    let max_new = args.parse_num_at_least("max-new", 16usize, 1)?;
+    let prompt_text = args.get_or("prompt", "w012 good03 w044");
+    let cfg = ModelConfig::parse(model_name, task)
+        .with_context(|| format!("unknown --model {model_name:?} (bert-tiny|bert-small)"))?;
+    eprintln!(
+        "building + calibrating native decoder {model_name}/{} (seed {seed}, softmax {})...",
+        task.name(),
+        mode.name()
+    );
+    let decoder = hccs::model::NativeDecoder::new(cfg, task, seed)?;
+    let tokenizer = Tokenizer::from_tokens(hccs::data::build_vocab())?;
+    let enc = server::encode_request(&tokenizer, task, prompt_text, task.max_len())?;
+    let prompt = enc.ids[..enc.valid_len].to_vec();
+    let mut scratch = hccs::model::DecoderScratch::default();
+    let started = std::time::Instant::now();
+    let generation = decoder.generate(&prompt, max_new, mode, &mut scratch)?;
+    let elapsed = started.elapsed();
+    println!("prompt  ({:>3} tokens): {}", prompt.len(), tokenizer.decode(&prompt));
+    println!(
+        "decoded ({:>3} tokens): {}",
+        generation.tokens.len(),
+        tokenizer.decode(&generation.tokens)
+    );
+    eprintln!(
+        "stop: {:?}; {:.1} tokens/s (prefill {} + {} cached-K/V steps in {:.1} ms)",
+        generation.stop,
+        generation.tokens.len() as f64 / elapsed.as_secs_f64().max(1e-9),
+        prompt.len(),
+        generation.tokens.len(),
+        elapsed.as_secs_f64() * 1e3,
+    );
     Ok(())
 }
 

@@ -27,7 +27,26 @@
 //! the banding reply-invariant, so `--length-bands` is a pure
 //! throughput knob.  Per-band rollups land under
 //! `native.band_rows.band<K>` next to the aggregate.
+//!
+//! ## Decode sessions on the same shards
+//!
+//! A backend built with [`NativeBackend::with_decoder`] additionally
+//! serves **long-lived autoregressive decode sessions**, interleaved
+//! with classification on the *same* shard threads: decode operations
+//! ride the banded event loop in one extra dedicated band (band index
+//! `length_bands`), so the existing FIFO-per-band, deadline-shedding,
+//! and drain-on-shutdown machinery applies to them unchanged.  Each
+//! executor owns its shard's session table — the per-session
+//! [`KvCache`] never crosses a thread — and a session is pinned to the
+//! shard that opened it (its [`crate::coordinator::ShardTicket`] lives
+//! in the table, so the router sees live sessions as load).  A decode
+//! step that sheds on deadline is failed **before** the session state
+//! is touched, so the cache is never poisoned: retrying the step
+//! yields exactly the token the shed step would have produced.
+//! Dropping a [`DecodeSessionHandle`] closes the session, freeing the
+//! cache and the shard claim even when a connection dies mid-stream.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -46,6 +65,7 @@ use crate::hccs::{OutputPath, Reciprocal};
 use crate::metrics::Registry;
 use crate::server::InferBackend;
 
+use super::decoder::{greedy_token, is_stop_token, DecoderScratch, KvCache, NativeDecoder};
 use super::encoder::{EncoderScratch, NativeModel};
 
 /// How attention probability rows are produced.
@@ -147,6 +167,128 @@ struct NativeEnvelope {
     _ticket: ShardTicket,
 }
 
+/// One decode operation against a shard's session table.
+enum DecodeOp {
+    /// Create the session: causal prefill of the prompt, predict the
+    /// first token.  Carries the router claim that pins the session to
+    /// this shard for its whole life.
+    Open { prompt: Vec<i32>, ticket: ShardTicket },
+    /// Append the session's pending token, predict the next one.
+    Step,
+    /// Free the session (cache + shard claim).  Idempotent.
+    Close,
+}
+
+struct DecodeReq {
+    session: u64,
+    op: DecodeOp,
+    deadline: Option<Instant>,
+    reply: Sender<std::result::Result<DecodeReply, String>>,
+    /// Admission slot, held until the reply is sent.
+    _permit: Option<Permit>,
+}
+
+/// A unit of shard work: short classification or a decode operation.
+/// Classification items carry a length band in `0..length_bands`;
+/// decode items all land in the dedicated extra band `length_bands`,
+/// so both traffic classes share one FIFO event loop per shard.
+enum NativeWork {
+    Classify(NativeEnvelope),
+    Decode(DecodeReq),
+}
+
+impl NativeWork {
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            NativeWork::Classify(env) => env.deadline,
+            NativeWork::Decode(req) => req.deadline,
+        }
+    }
+
+    /// Fail this work item on its own reply channel (shed path).
+    fn fail(self, msg: String) {
+        match self {
+            NativeWork::Classify(env) => {
+                let _ = env.reply.send(Err(msg));
+            }
+            NativeWork::Decode(req) => {
+                let _ = req.reply.send(Err(msg));
+            }
+        }
+    }
+}
+
+/// One streamed decode event: the token an `open`/`step` op predicted.
+#[derive(Clone, Debug)]
+pub struct DecodeReply {
+    pub session: u64,
+    /// The newly predicted token id ([`crate::tokenizer::PAD`] on a
+    /// close acknowledgement).
+    pub token: i32,
+    /// 1-based index of this token within the generation.
+    pub step: usize,
+    /// The generation cannot continue: a stop token was emitted or the
+    /// K/V ring reached the context window.
+    pub done: bool,
+    /// Submit-to-reply latency of this op.
+    pub latency: Duration,
+}
+
+/// Executor-side state of one live decode session.
+struct DecodeState {
+    cache: KvCache,
+    /// The last predicted token — consumed (appended to the cache) by
+    /// the next step.  A shed step leaves it unconsumed, so a retry
+    /// reproduces the shed step exactly.
+    next: i32,
+    step: usize,
+    done: bool,
+    /// Holding the claim makes the router count live sessions as shard
+    /// load for the whole session lifetime.
+    _ticket: ShardTicket,
+}
+
+/// Client handle of one decode session, pinned to its owning shard.
+/// Obtain via [`NativeBackend::open_session`]; request tokens with
+/// [`NativeBackend::step_session`].  Steps of one session may be
+/// pipelined: the shard executes its band FIFO, and each step consumes
+/// the prediction of the previous one server-side, so `k` queued steps
+/// stream exactly the next `k` greedy tokens.  Dropping the handle
+/// closes the session on the shard (cache and router claim freed).
+pub struct DecodeSessionHandle {
+    tx: Sender<EngineMsg<NativeWork>>,
+    session: u64,
+    shard: usize,
+}
+
+impl DecodeSessionHandle {
+    /// Executor shard this session is pinned to.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Backend-wide unique session id.
+    pub fn session(&self) -> u64 {
+        self.session
+    }
+
+    /// Explicitly close the session (same as dropping the handle).
+    pub fn close(self) {}
+}
+
+impl Drop for DecodeSessionHandle {
+    fn drop(&mut self) {
+        let (tx, _rx) = mpsc::channel();
+        let _ = self.tx.send(EngineMsg::Work(NativeWork::Decode(DecodeReq {
+            session: self.session,
+            op: DecodeOp::Close,
+            deadline: None,
+            reply: tx,
+            _permit: None,
+        })));
+    }
+}
+
 /// Sharded serving adapter for a calibrated [`NativeModel`]: tokenized
 /// requests are validated at submit, routed to the least-loaded shard,
 /// batched, and answered through per-request reply channels.  Metrics
@@ -155,10 +297,12 @@ struct NativeEnvelope {
 /// histogram of observed batch sizes.
 pub struct NativeBackend {
     model: Arc<NativeModel>,
+    decoder: Option<Arc<NativeDecoder>>,
     backend: SoftmaxBackend,
-    txs: Vec<Sender<EngineMsg<NativeEnvelope>>>,
+    txs: Vec<Sender<EngineMsg<NativeWork>>>,
     router: ShardRouter,
     next_id: AtomicU64,
+    next_session: AtomicU64,
     length_bands: usize,
     admission: Option<AdmissionControl>,
     handles: Vec<JoinHandle<()>>,
@@ -173,9 +317,29 @@ impl NativeBackend {
             .expect("default native serve config is valid")
     }
 
-    /// Start one executor thread per shard.
+    /// Start one executor thread per shard (classification only).
     pub fn with_config(
         model: Arc<NativeModel>,
+        backend: SoftmaxBackend,
+        cfg: NativeServeConfig,
+    ) -> Result<NativeBackend> {
+        Self::build(model, None, backend, cfg)
+    }
+
+    /// Start a backend that serves classification **and** decode
+    /// sessions on the same shards (see the module docs).
+    pub fn with_decoder(
+        model: Arc<NativeModel>,
+        decoder: Arc<NativeDecoder>,
+        backend: SoftmaxBackend,
+        cfg: NativeServeConfig,
+    ) -> Result<NativeBackend> {
+        Self::build(model, Some(decoder), backend, cfg)
+    }
+
+    fn build(
+        model: Arc<NativeModel>,
+        decoder: Option<Arc<NativeDecoder>>,
         backend: SoftmaxBackend,
         cfg: NativeServeConfig,
     ) -> Result<NativeBackend> {
@@ -196,29 +360,95 @@ impl NativeBackend {
         let mut txs = Vec::with_capacity(cfg.shards);
         let mut handles = Vec::with_capacity(cfg.shards);
         for shard in 0..cfg.shards {
-            let (tx, rx) = mpsc::channel::<EngineMsg<NativeEnvelope>>();
+            let (tx, rx) = mpsc::channel::<EngineMsg<NativeWork>>();
             let m = model.clone();
+            let dec = decoder.clone();
             let reg = metrics.clone();
             let policy = cfg.policy;
             let bands = cfg.length_bands;
             let handle = std::thread::Builder::new()
                 .name(format!("hccs-native-{shard}"))
-                .spawn(move || native_executor_main(m, backend, shard, policy, bands, rx, reg))
+                .spawn(move || native_executor_main(m, dec, backend, shard, policy, bands, rx, reg))
                 .with_context(|| format!("spawning native executor shard {shard}"))?;
             txs.push(tx);
             handles.push(handle);
         }
         Ok(NativeBackend {
             model,
+            decoder,
             backend,
             txs,
             router,
             next_id: AtomicU64::new(1),
+            next_session: AtomicU64::new(1),
             length_bands: cfg.length_bands,
             admission: cfg.max_in_flight.map(AdmissionControl::new),
             handles,
             metrics,
         })
+    }
+
+    /// The decoder served by this backend, if decode is enabled.
+    pub fn decoder(&self) -> Option<&NativeDecoder> {
+        self.decoder.as_deref()
+    }
+
+    /// Open a decode session: the prompt is causally prefilled on the
+    /// least-loaded shard and the first greedy token comes back on the
+    /// returned channel.  The session stays pinned to that shard until
+    /// the handle is dropped (or [`DecodeSessionHandle::close`]d).
+    /// `deadline` bounds the prefill op only; pass a fresh per-step
+    /// deadline to each [`Self::step_session`] call.
+    pub fn open_session(
+        &self,
+        prompt: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<(DecodeSessionHandle, Receiver<std::result::Result<DecodeReply, String>>)> {
+        let decoder = self
+            .decoder
+            .as_ref()
+            .ok_or_else(|| anyhow!("decode serving not enabled on this backend"))?;
+        decoder.check_prompt(&prompt)?;
+        let permit = try_permit(&self.admission, deadline, "requests")?;
+        let session = self.next_session.fetch_add(1, Ordering::Relaxed);
+        let ticket = self.router.route();
+        let shard = ticket.shard();
+        let (tx, rx) = mpsc::channel();
+        self.txs[shard]
+            .send(EngineMsg::Work(NativeWork::Decode(DecodeReq {
+                session,
+                op: DecodeOp::Open { prompt, ticket },
+                deadline,
+                reply: tx,
+                _permit: permit,
+            })))
+            .map_err(|_| anyhow!("native engine is down"))?;
+        Ok((DecodeSessionHandle { tx: self.txs[shard].clone(), session, shard }, rx))
+    }
+
+    /// Request the session's next greedy token.  The op goes to the
+    /// session's pinned shard; if `deadline` expires while it queues,
+    /// the step fast-fails with a [`crate::coordinator::SHED_PREFIX`]
+    /// reply **without touching the session's K/V state**, so the
+    /// caller may retry (or close) the session.
+    pub fn step_session(
+        &self,
+        handle: &DecodeSessionHandle,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<std::result::Result<DecodeReply, String>>> {
+        let permit = try_permit(&self.admission, deadline, "requests")?;
+        let (tx, rx) = mpsc::channel();
+        handle
+            .tx
+            .send(EngineMsg::Work(NativeWork::Decode(DecodeReq {
+                session: handle.session,
+                op: DecodeOp::Step,
+                deadline,
+                reply: tx,
+                _permit: permit,
+            })))
+            .map_err(|_| anyhow!("native engine is down"))?;
+        Ok(rx)
     }
 
     /// Rejected-by-backpressure count (0 when unbounded).
@@ -315,7 +545,7 @@ impl InferBackend for NativeBackend {
             .band_of(crate::data::valid_len(&ids), self.length_bands);
         let ticket = self.router.route();
         self.txs[ticket.shard()]
-            .send(EngineMsg::Work(NativeEnvelope {
+            .send(EngineMsg::Work(NativeWork::Classify(NativeEnvelope {
                 id,
                 ids,
                 segments,
@@ -324,7 +554,7 @@ impl InferBackend for NativeBackend {
                 reply: tx,
                 _permit: permit,
                 _ticket: ticket,
-            }))
+            })))
             .map_err(|_| anyhow!("native engine is down"))?;
         Ok(rx)
     }
@@ -332,11 +562,12 @@ impl InferBackend for NativeBackend {
 
 fn native_executor_main(
     model: Arc<NativeModel>,
+    decoder: Option<Arc<NativeDecoder>>,
     backend: SoftmaxBackend,
     shard: usize,
     policy: BatchPolicy,
     length_bands: usize,
-    rx: Receiver<EngineMsg<NativeEnvelope>>,
+    rx: Receiver<EngineMsg<NativeWork>>,
     metrics: Arc<Registry>,
 ) {
     // This shard's private forward-pass scratch and request staging
@@ -345,6 +576,10 @@ fn native_executor_main(
     let seq = model.cfg.seq_len;
     let mut ids_tile: Vec<i32> = Vec::with_capacity(policy.max_batch * seq);
     let mut segs_tile: Vec<i32> = Vec::with_capacity(policy.max_batch * seq);
+    // Decode state lives entirely on the executor thread: one K/V ring
+    // plus the next-token cursor per open session, keyed by session id.
+    let mut sessions: HashMap<u64, DecodeState> = HashMap::new();
+    let mut dec_scratch = DecoderScratch::default();
 
     let queue_hist = RolledHistogram::new(&metrics, "native.queue_us", shard);
     let exec_hist = RolledHistogram::new(&metrics, "native.execute_us", shard);
@@ -359,21 +594,61 @@ fn native_executor_main(
         .map(|k| metrics.counter(&format!("native.band_rows.band{k}")))
         .collect();
     let shed_ctr = RolledCounter::new(&metrics, "native.shed_deadline", shard);
+    let decode_steps = RolledCounter::new(&metrics, "native.decode_steps", shard);
+    let decode_sessions = RolledCounter::new(&metrics, "native.decode_sessions", shard);
 
+    // Band `length_bands` (one past the classification bands) carries
+    // decode ops; it exists even without a decoder so a stray decode
+    // request degrades to an Err reply instead of a panic.
     banded_batching_event_loop(
         policy,
-        length_bands,
-        |env: &NativeEnvelope| env.band,
+        length_bands + 1,
+        |w: &NativeWork| match w {
+            NativeWork::Classify(env) => env.band,
+            NativeWork::Decode(_) => length_bands,
+        },
         rx,
         &req_ctr,
-        |band, items: Vec<QueuedRequest<NativeEnvelope>>| {
-            let items = shed_expired(items, |env| env.deadline, &shed_ctr, |env, msg| {
-                let _ = env.reply.send(Err(msg));
-            });
+        |band, items: Vec<QueuedRequest<NativeWork>>| {
+            // Deadline shedding happens before any session state is
+            // touched: a shed decode step leaves its K/V ring exactly
+            // as it was, so the caller can retry the same step.
+            let items = shed_expired(items, |w| w.deadline(), &shed_ctr, |w, msg| w.fail(msg));
             if items.is_empty() {
                 return;
             }
             let started = Instant::now();
+            if band == length_bands {
+                // Decode band: strict FIFO, one op at a time (each step
+                // depends on the session state the previous one wrote).
+                for q in items {
+                    queue_hist.record(started.duration_since(q.arrived));
+                    let NativeWork::Decode(req) = q.payload else {
+                        unreachable!("band_of routes only decode ops to the decode band")
+                    };
+                    run_decode_op(
+                        decoder.as_deref(),
+                        backend,
+                        &mut sessions,
+                        &mut dec_scratch,
+                        req,
+                        q.arrived,
+                        &decode_steps,
+                        &decode_sessions,
+                    );
+                }
+                exec_hist.record(started.elapsed());
+                return;
+            }
+            let items: Vec<(Instant, NativeEnvelope)> = items
+                .into_iter()
+                .map(|q| match q.payload {
+                    NativeWork::Classify(env) => (q.arrived, env),
+                    NativeWork::Decode(_) => {
+                        unreachable!("band_of routes decode ops to the decode band")
+                    }
+                })
+                .collect();
             // Stack the batch at the band's width: every request's ids
             // are truncated (pad tail only — the band invariant
             // `valid_len <= width` guarantees it) or pad-extended to
@@ -383,12 +658,12 @@ fn native_executor_main(
             let width = model.band_width(band, length_bands);
             ids_tile.clear();
             segs_tile.clear();
-            for q in &items {
-                queue_hist.record(started.duration_since(q.arrived));
-                let take = q.payload.ids.len().min(width);
-                ids_tile.extend_from_slice(&q.payload.ids[..take]);
+            for (arrived, env) in &items {
+                queue_hist.record(started.duration_since(*arrived));
+                let take = env.ids.len().min(width);
+                ids_tile.extend_from_slice(&env.ids[..take]);
                 ids_tile.resize(ids_tile.len() + width - take, 0);
-                segs_tile.extend_from_slice(&q.payload.segments[..take]);
+                segs_tile.extend_from_slice(&env.segments[..take]);
                 segs_tile.resize(segs_tile.len() + width - take, 0);
             }
             batch_rows.record_value(items.len() as u64);
@@ -399,12 +674,12 @@ fn native_executor_main(
             match model.forward_batch_at(&ids_tile, &segs_tile, width, backend, &mut scratch) {
                 Ok(inferences) => {
                     exec_hist.record(started.elapsed());
-                    for (q, inf) in items.into_iter().zip(inferences) {
-                        let _ = q.payload.reply.send(Ok(InferReply {
-                            id: q.payload.id,
+                    for ((arrived, env), inf) in items.into_iter().zip(inferences) {
+                        let _ = env.reply.send(Ok(InferReply {
+                            id: env.id,
                             predicted: inf.predicted,
                             logits: inf.logits,
-                            latency: q.arrived.elapsed(),
+                            latency: arrived.elapsed(),
                         }));
                     }
                 }
@@ -412,13 +687,102 @@ fn native_executor_main(
                     // Requests are pre-validated at submit, so this is an
                     // internal failure; every rider gets the message.
                     let msg = format!("{e:#}");
-                    for q in items {
-                        let _ = q.payload.reply.send(Err(msg.clone()));
+                    for (_, env) in items {
+                        let _ = env.reply.send(Err(msg.clone()));
                     }
                 }
             }
         },
     );
+}
+
+/// Execute one decode op against the executor-owned session table.
+/// Called only after `shed_expired`, so by the time session state is
+/// touched the op is committed to run — a shed never mutates a ring.
+#[allow(clippy::too_many_arguments)]
+fn run_decode_op(
+    decoder: Option<&NativeDecoder>,
+    backend: SoftmaxBackend,
+    sessions: &mut HashMap<u64, DecodeState>,
+    scratch: &mut DecoderScratch,
+    req: DecodeReq,
+    arrived: Instant,
+    decode_steps: &RolledCounter,
+    decode_sessions: &RolledCounter,
+) {
+    let session = req.session;
+    let reply = |r: std::result::Result<DecodeReply, String>| {
+        let _ = req.reply.send(r);
+    };
+    let Some(decoder) = decoder else {
+        reply(Err("decode serving not enabled on this backend".into()));
+        return;
+    };
+    match req.op {
+        DecodeOp::Open { prompt, ticket } => {
+            decode_sessions.inc();
+            let mut cache = decoder.new_cache();
+            let rows = match decoder.prefill(&prompt, backend, &mut cache, scratch) {
+                Ok(rows) => rows,
+                Err(e) => {
+                    reply(Err(format!("prefill failed: {e:#}")));
+                    return;
+                }
+            };
+            let vocab = decoder.cfg.vocab;
+            let token = greedy_token(&rows[(prompt.len() - 1) * vocab..]);
+            let done = is_stop_token(token) || cache.remaining() == 0;
+            sessions.insert(
+                session,
+                DecodeState { cache, next: token, step: 1, done, _ticket: ticket },
+            );
+            reply(Ok(DecodeReply { session, token, step: 1, done, latency: arrived.elapsed() }));
+        }
+        DecodeOp::Step => {
+            decode_steps.inc();
+            let Some(st) = sessions.get_mut(&session) else {
+                reply(Err(format!("unknown decode session {session}")));
+                return;
+            };
+            if st.done {
+                reply(Err(format!("decode session {session} already finished")));
+                return;
+            }
+            match decoder.step(st.next, backend, &mut st.cache, scratch) {
+                Ok(row) => {
+                    let token = greedy_token(&row);
+                    st.next = token;
+                    st.step += 1;
+                    st.done = is_stop_token(token) || st.cache.remaining() == 0;
+                    reply(Ok(DecodeReply {
+                        session,
+                        token,
+                        step: st.step,
+                        done: st.done,
+                        latency: arrived.elapsed(),
+                    }));
+                }
+                Err(e) => {
+                    // A failed step (e.g. ring exhausted by a racing
+                    // close/reopen) terminates the session; the ring is
+                    // only advanced by successful steps.
+                    st.done = true;
+                    reply(Err(format!("decode step failed: {e:#}")));
+                }
+            }
+        }
+        DecodeOp::Close => {
+            // Close is idempotent (handle drop races an explicit close).
+            sessions.remove(&session);
+            reply(Ok(DecodeReply {
+                session,
+                token: crate::tokenizer::PAD,
+                step: 0,
+                done: true,
+                latency: arrived.elapsed(),
+            }));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -639,5 +1003,164 @@ mod tests {
             bw.percentile_us(1.0)
         );
         assert_eq!(bw.max_us(), n as u64, "full-length traffic uses the widest band");
+    }
+
+    fn tiny_decoder() -> Arc<NativeDecoder> {
+        let task = TaskKind::Sst2s;
+        let cfg = ModelConfig {
+            layers: 1,
+            heads: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: task.max_len(),
+            vocab: crate::data::VOCAB_SIZE as usize,
+            n_classes: 2,
+        };
+        Arc::new(NativeDecoder::new(cfg, task, 5).unwrap())
+    }
+
+    #[test]
+    fn decode_session_streams_exactly_the_direct_greedy_tokens() {
+        let model = tiny_model();
+        let decoder = tiny_decoder();
+        let mode = SoftmaxBackend::parse("i16_div").unwrap();
+        let backend = NativeBackend::with_decoder(
+            model,
+            decoder.clone(),
+            mode,
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards: 2,
+                length_bands: 2,
+                max_in_flight: None,
+            },
+        )
+        .unwrap();
+        let prompt = vec![1i32, 5, 9, 40, 7];
+        let max_new = 6usize;
+        let mut scratch = DecoderScratch::default();
+        let want = decoder.generate(&prompt, max_new, mode, &mut scratch).unwrap();
+
+        let (handle, rx) = backend.open_session(prompt, None).unwrap();
+        let first = rx.recv().unwrap().expect("open reply");
+        assert_eq!(first.step, 1);
+        let mut got = vec![first.token];
+        let mut done = first.done;
+        while !done && got.len() < max_new {
+            let rx = backend.step_session(&handle, None).unwrap();
+            let r = rx.recv().unwrap().expect("step reply");
+            assert_eq!(r.step, got.len() + 1, "steps are strictly ordered");
+            got.push(r.token);
+            done = r.done;
+        }
+        assert_eq!(got, want.tokens, "session stream diverged from direct generate");
+        // A finished session rejects further steps instead of stepping
+        // past its stop condition.
+        if done {
+            let rx = backend.step_session(&handle, None).unwrap();
+            let err = rx.recv().unwrap().expect_err("finished session must reject steps");
+            assert!(err.contains("finished"), "{err}");
+        }
+        handle.close();
+        assert!(backend.metrics.counter("native.decode_sessions").get() >= 1);
+        backend.shutdown();
+    }
+
+    #[test]
+    fn decode_sessions_interleave_with_classification_on_one_shard() {
+        let model = tiny_model();
+        let decoder = tiny_decoder();
+        let mode = SoftmaxBackend::parse("i8_clb").unwrap();
+        let backend = NativeBackend::with_decoder(
+            model.clone(),
+            decoder.clone(),
+            mode,
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards: 1,
+                length_bands: 2,
+                max_in_flight: None,
+            },
+        )
+        .unwrap();
+        let n = model.cfg.seq_len;
+        let prompt = vec![1i32, 17, 23];
+        let mut scratch = DecoderScratch::default();
+        let want = decoder.generate(&prompt, 3, mode, &mut scratch).unwrap();
+
+        // Open a session, then alternate classification and decode steps
+        // through the same executor thread.
+        let (handle, rx) = backend.open_session(prompt, None).unwrap();
+        let first = rx.recv().unwrap().expect("open reply");
+        let mut got = vec![first.token];
+        let mut done = first.done;
+        while !done && got.len() < 3 {
+            let cls = backend.submit_request(vec![1; n], vec![0; n]).unwrap();
+            let step = backend.step_session(&handle, None).unwrap();
+            assert!(cls.recv().unwrap().is_ok(), "classification starved by decode");
+            let r = step.recv().unwrap().expect("step reply");
+            got.push(r.token);
+            done = r.done;
+        }
+        assert_eq!(got, want.tokens, "interleaving perturbed the stream");
+        drop(handle);
+        backend.shutdown();
+    }
+
+    #[test]
+    fn decode_requires_with_decoder_and_validates_prompts() {
+        let model = tiny_model();
+        // Classification-only backends refuse decode sessions.
+        let plain = NativeBackend::new(model.clone(), SoftmaxBackend::F32Ref);
+        assert!(plain.open_session(vec![1, 2, 3], None).is_err());
+        plain.shutdown();
+
+        let decoder = tiny_decoder();
+        let backend = NativeBackend::with_decoder(
+            model.clone(),
+            decoder,
+            SoftmaxBackend::F32Ref,
+            NativeServeConfig::default(),
+        )
+        .unwrap();
+        // Malformed prompts are rejected at submit, before routing.
+        assert!(backend.open_session(vec![], None).is_err(), "empty prompt");
+        assert!(backend.open_session(vec![-1], None).is_err(), "negative token id");
+        let too_long = vec![1i32; model.cfg.seq_len + 1];
+        assert!(backend.open_session(too_long, None).is_err(), "prompt over seq_len");
+        // Steps against a session this backend never opened fail with a
+        // reply (not a wedge or a panic).
+        let forged =
+            DecodeSessionHandle { tx: backend.txs[0].clone(), session: 987654, shard: 0 };
+        let rx = backend.step_session(&forged, None).unwrap();
+        let err = rx.recv().unwrap().expect_err("unknown session must fail");
+        assert!(err.contains("unknown decode session"), "{err}");
+        drop(forged);
+        backend.shutdown();
+    }
+
+    #[test]
+    fn dropping_a_session_handle_frees_the_session() {
+        let model = tiny_model();
+        let decoder = tiny_decoder();
+        let backend = NativeBackend::with_decoder(
+            model,
+            decoder,
+            SoftmaxBackend::F32Ref,
+            NativeServeConfig::default(),
+        )
+        .unwrap();
+        let (handle, rx) = backend.open_session(vec![1, 8, 12], None).unwrap();
+        rx.recv().unwrap().expect("open reply");
+        let session = handle.session();
+        let tx = handle.tx.clone();
+        drop(handle); // sends Close to the shard
+        // A later step on the same session id sees it gone.
+        let probe = DecodeSessionHandle { tx, session, shard: 0 };
+        let rx = backend.step_session(&probe, None).unwrap();
+        let err = rx.recv().unwrap().expect_err("closed session must be unknown");
+        assert!(err.contains("unknown decode session"), "{err}");
+        drop(probe);
+        backend.shutdown();
     }
 }

@@ -1,0 +1,1247 @@
+//! The native integer decoder: a causal sibling of
+//! [`super::encoder::NativeModel`] for the autoregressive decode
+//! workload — seeded weights, construction-time calibration on causal
+//! prefill rows, and a cached-K/V incremental step path.
+//!
+//! ## Datapath
+//!
+//! The decoder reuses the encoder's integer recipe wholesale (int8
+//! embeddings/weights, i32 MAC accumulation, floor-division requants,
+//! integer LayerNorm, the same [`crate::linalg`] packed GEMMs) with
+//! two structural changes:
+//!
+//! * **Causal attention.** Position `t` attends keys `0..=t` — the
+//!   `len = t + 1` special case of the PR 5 masked kernels.  Prefill
+//!   normalizes every causal row in one grouped dispatch
+//!   ([`hccs_attention_causal_from_acc`]); a decode step normalizes
+//!   its single new row ([`hccs_attention_step_from_acc`]).  The first
+//!   step is a *single-key* row (`len = 1`), which is exactly the edge
+//!   the [`crate::hccs::params::feasible_b_band_range`] short-row
+//!   floor now keeps feasible.
+//! * **LM head.** Instead of mean-pool + classifier, every position's
+//!   final activation row goes through a `(vocab, d_model)` packed
+//!   GEMM; the calibrated bias recentres the per-vocab logits so
+//!   greedy decoding is example-driven, not init-driven.
+//!
+//! ## The K/V ring and the bit-exactness contract
+//!
+//! [`KvCache`] holds, per layer, a fixed-capacity `(seq_len, d_model)`
+//! int8 arena pair for the *post-requant* K and V rows — the same
+//! values the prefill tiles hold, appended one row per decoded token
+//! at the absolute position cursor.  Capacity equals the calibrated
+//! context window, so the ring never wraps: a full ring ends the
+//! generation (callers shed or stop) rather than silently evicting
+//! positions out from under the absolute position embedding.
+//!
+//! Because every stage of the datapath is row-independent (packed
+//! GEMMs, requant, LayerNorm) and the requant divisors are frozen at
+//! construction, a decode loop over `t = 1..=n` steps against the
+//! cache reproduces the full causal prefill at length `n` **bit for
+//! bit**, per step, in all four HCCS modes and on both SIMD dispatch
+//! legs — pinned by `decode_loop_matches_prefill_bit_exact` below and
+//! re-run under `HCCS_FORCE_SCALAR` in CI.
+//!
+//! ## Calibration (in [`NativeDecoder::new`])
+//!
+//! One batch of [`CALIB_EXAMPLES`] generated prompts (trimmed to their
+//! valid lengths) runs through the f32-softmax *causal* path; requant
+//! divisors come off 99.9th-percentile accumulator magnitudes, and
+//! each head's grid divisor `d_h`, temperature `γ_h`, and θ_h are
+//! derived from its actual causal rows — lengths `1..=len`, so the
+//! ragged θ grid search spans `n_min = 1` (the decode first step) up
+//! to the full context width, making the short-row band floor
+//! load-bearing here.
+
+use crate::coordinator::HeadParamStore;
+use crate::data::{TaskKind, WorkloadGen};
+use crate::error::{anyhow, bail, Result};
+use crate::hccs::attention::{
+    hccs_attention_causal_from_acc, hccs_attention_step_from_acc, AttentionScratch,
+};
+use crate::hccs::calibrate::calibrate_rows_ragged;
+use crate::hccs::{HccsParams, T_I16};
+use crate::linalg::{gemm_nt_bounded_into, PackedGemm};
+use crate::rng::Xoshiro256;
+use crate::tokenizer::{PAD, SEP};
+
+use super::backend::SoftmaxBackend;
+use super::config::ModelConfig;
+use super::encoder::CALIB_EXAMPLES;
+use super::norm::{layernorm_rows, quant_div, requant};
+
+/// Cap on causal logit rows fed to the per-head θ grid search.
+const CALIB_ROWS_CAP: usize = 96;
+/// Target std of the dequantized attention logits γ_h·xq.
+const TGT_LOGIT_STD: f64 = 1.0;
+/// Residual-write damping (same margin story as the encoder).
+const OUT_DAMP: i32 = 4;
+/// Numerator of the sum-normalized attention mix `256·(p̂·V)/Σp̂`.
+const CTX_NORM: i64 = 256;
+/// Target std of the reported float LM logits.
+const LM_LOGIT_STD: f64 = 2.0;
+
+/// One decoder layer's seeded weights (packed at construction).
+struct LayerWeights {
+    wq: PackedGemm,
+    wk: PackedGemm,
+    wv: PackedGemm,
+    wo: PackedGemm,
+    ln1_gamma: Vec<i8>,
+    ln1_beta: Vec<i8>,
+    w1: PackedGemm,
+    w2: PackedGemm,
+    ln2_gamma: Vec<i8>,
+    ln2_beta: Vec<i8>,
+}
+
+/// All seeded decoder weights.  Single-stream (no segment embedding);
+/// the classifier of the encoder recipe is replaced by the LM head.
+struct DecoderWeights {
+    tok_emb: Vec<i8>,
+    pos_emb: Vec<i8>,
+    ln_emb_gamma: Vec<i8>,
+    ln_emb_beta: Vec<i8>,
+    layers: Vec<LayerWeights>,
+    w_lm: PackedGemm,
+}
+
+fn fill_i8(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.i8()).collect()
+}
+
+fn fill_ln_gamma(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (48 + rng.below(33) as i64) as i8).collect()
+}
+
+fn fill_ln_beta(rng: &mut Xoshiro256, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.below(17) as i64 - 8) as i8).collect()
+}
+
+fn fill_packed(rng: &mut Xoshiro256, d_out: usize, d_in: usize) -> PackedGemm {
+    let raw = fill_i8(rng, d_out * d_in);
+    PackedGemm::pack(&raw, d_out, d_in)
+}
+
+impl DecoderWeights {
+    /// Deterministic init: one xoshiro256** stream, fixed draw order.
+    fn seeded(cfg: &ModelConfig, seed: u64) -> DecoderWeights {
+        let mut rng = Xoshiro256::new(seed);
+        let d = cfg.d_model;
+        let tok_emb = fill_i8(&mut rng, cfg.vocab * d);
+        let pos_emb = fill_i8(&mut rng, cfg.seq_len * d);
+        let ln_emb_gamma = fill_ln_gamma(&mut rng, d);
+        let ln_emb_beta = fill_ln_beta(&mut rng, d);
+        let layers = (0..cfg.layers)
+            .map(|_| LayerWeights {
+                wq: fill_packed(&mut rng, d, d),
+                wk: fill_packed(&mut rng, d, d),
+                wv: fill_packed(&mut rng, d, d),
+                wo: fill_packed(&mut rng, d, d),
+                ln1_gamma: fill_ln_gamma(&mut rng, d),
+                ln1_beta: fill_ln_beta(&mut rng, d),
+                w1: fill_packed(&mut rng, cfg.d_ff, d),
+                w2: fill_packed(&mut rng, d, cfg.d_ff),
+                ln2_gamma: fill_ln_gamma(&mut rng, d),
+                ln2_beta: fill_ln_beta(&mut rng, d),
+            })
+            .collect();
+        let w_lm = fill_packed(&mut rng, cfg.vocab, d);
+        DecoderWeights { tok_emb, pos_emb, ln_emb_gamma, ln_emb_beta, layers, w_lm }
+    }
+}
+
+/// Requant divisor slots of one layer.
+#[derive(Clone, Copy, Debug, Default)]
+struct LayerDivs([i32; 7]);
+
+#[derive(Clone, Copy)]
+enum Slot {
+    Q = 0,
+    K,
+    V,
+    Ctx,
+    O,
+    F1,
+    F2,
+}
+
+/// Frozen calibration products.
+struct Calibrated {
+    divs: Vec<LayerDivs>,
+    dh: Vec<i32>,
+    store: HeadParamStore,
+    lm_bias: Vec<i32>,
+    lm_scale: f64,
+}
+
+/// State accumulated while the calibration batch runs forward.
+#[derive(Default)]
+struct CalibBuilder {
+    divs: Vec<LayerDivs>,
+    dh: Vec<i32>,
+    thetas: Vec<HccsParams>,
+    gammas: Vec<f64>,
+    kls: Vec<f64>,
+    lm_bias: Vec<i32>,
+    lm_scale: f64,
+}
+
+enum CalibCtx<'a> {
+    Run(&'a Calibrated),
+    Build(&'a mut CalibBuilder),
+}
+
+impl CalibCtx<'_> {
+    fn div(&mut self, li: usize, slot: Slot, damp: i32, accs: &[i32]) -> i32 {
+        match self {
+            CalibCtx::Run(c) => c.divs[li].0[slot as usize],
+            CalibCtx::Build(b) => {
+                let d = quant_div(accs) * damp;
+                b.divs[li].0[slot as usize] = d;
+                d
+            }
+        }
+    }
+
+    /// Per-head calibration from the head's stacked **causal** logit
+    /// tile: `acc` is `(Σ lens, c_stride)` row-major; example `e`'s
+    /// row `t` has `t + 1` active (causal) columns.  Only those causal
+    /// entries enter the statistics, and the θ grid search runs ragged
+    /// over rows of length `1..=len` — so the calibrated band must
+    /// admit the single-key decode first step.
+    #[allow(clippy::too_many_arguments)]
+    fn head(
+        &mut self,
+        li: usize,
+        h: usize,
+        heads: usize,
+        acc: &[i32],
+        lens: &[usize],
+        c_stride: usize,
+        n_serve: usize,
+    ) -> Result<Head> {
+        match self {
+            CalibCtx::Run(c) => {
+                let i = li * heads + h;
+                let (p, gamma) = c.store.per_head.at(li, h);
+                Ok(Head { dh: c.dh[i], gamma, theta: *p })
+            }
+            CalibCtx::Build(b) => {
+                let mut vals: Vec<i32> = Vec::new();
+                let mut ragged: Vec<std::ops::Range<usize>> = Vec::new();
+                let mut row = 0usize;
+                for &len in lens {
+                    for t in 0..len {
+                        let lo = vals.len();
+                        vals.extend_from_slice(&acc[row * c_stride..row * c_stride + t + 1]);
+                        ragged.push(lo..vals.len());
+                        row += 1;
+                    }
+                }
+                let dh = quant_div(&vals);
+                let xq: Vec<f64> = vals.iter().map(|&a| f64::from(logit_grid(a, dh))).collect();
+                let mean = xq.iter().sum::<f64>() / xq.len() as f64;
+                let var =
+                    xq.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / xq.len() as f64;
+                let gamma = TGT_LOGIT_STD / var.sqrt().max(1e-6);
+                // Stride sampling always keeps ragged[0] — an example's
+                // `t = 0` row — so the search sees a length-1 row and
+                // the band floor covers the decode first step.
+                let stride = ragged.len().div_ceil(CALIB_ROWS_CAP).max(1);
+                let rows: Vec<Vec<f64>> = ragged
+                    .iter()
+                    .step_by(stride)
+                    .map(|r| xq[r.clone()].iter().map(|&v| v * gamma).collect())
+                    .collect();
+                let cal = calibrate_rows_ragged(&rows, n_serve, gamma);
+                cal.params
+                    .validate(n_serve)
+                    .map_err(|e| anyhow!("calibrated decoder θ infeasible at L{li}H{h}: {e}"))?;
+                cal.params
+                    .validate_masked(n_serve)
+                    .map_err(|e| anyhow!("decoder θ masked-infeasible at L{li}H{h}: {e}"))?;
+                b.dh.push(dh);
+                b.thetas.push(cal.params);
+                b.gammas.push(gamma);
+                b.kls.push(cal.kl);
+                Ok(Head { dh, gamma, theta: cal.params })
+            }
+        }
+    }
+}
+
+/// One head's runtime parameters.
+#[derive(Clone, Copy)]
+struct Head {
+    dh: i32,
+    gamma: f64,
+    theta: HccsParams,
+}
+
+/// Per-sequence cached K/V: one fixed-capacity `(seq_len, d_model)`
+/// int8 arena pair per layer holding the post-requant K and V rows,
+/// plus the absolute position cursor `t`.  See the module docs for the
+/// ring/no-wrap rationale.
+pub struct KvCache {
+    k8: Vec<Vec<i8>>,
+    v8: Vec<Vec<i8>>,
+    cap: usize,
+    d: usize,
+    t: usize,
+}
+
+impl KvCache {
+    fn new(layers: usize, cap: usize, d: usize) -> KvCache {
+        KvCache {
+            k8: (0..layers).map(|_| vec![0i8; cap * d]).collect(),
+            v8: (0..layers).map(|_| vec![0i8; cap * d]).collect(),
+            cap,
+            d,
+            t: 0,
+        }
+    }
+
+    /// Number of cached positions (== the next token's position).
+    pub fn len(&self) -> usize {
+        self.t
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t == 0
+    }
+
+    /// Ring capacity (the model's context window).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Positions left before the ring is full.
+    pub fn remaining(&self) -> usize {
+        self.cap - self.t
+    }
+
+    /// Drop all cached positions (the arena is reused in place).
+    pub fn reset(&mut self) {
+        self.t = 0;
+    }
+
+    /// Write layer `li`'s K/V rows for positions `at..at + rows`.
+    fn store_rows(&mut self, li: usize, at: usize, k8: &[i8], v8: &[i8]) {
+        let d = self.d;
+        let rows = k8.len() / d;
+        debug_assert!(at + rows <= self.cap && k8.len() == v8.len());
+        self.k8[li][at * d..(at + rows) * d].copy_from_slice(k8);
+        self.v8[li][at * d..(at + rows) * d].copy_from_slice(v8);
+    }
+}
+
+/// Reusable decoder forward buffers (allocation-free after warmup).
+#[derive(Default)]
+pub struct DecoderScratch {
+    x: Vec<i8>,
+    x32: Vec<i32>,
+    acc: Vec<i32>,
+    q8: Vec<i8>,
+    k8: Vec<i8>,
+    v8: Vec<i8>,
+    c8: Vec<i8>,
+    h8: Vec<i8>,
+    ctx32: Vec<i32>,
+    acc_head: Vec<i32>,
+    qh: Vec<i8>,
+    kh: Vec<i8>,
+    vh: Vec<i8>,
+    out_aug: Vec<i32>,
+    phat: Vec<i32>,
+    grid: Vec<f64>,
+    exps: Vec<f64>,
+    attn: AttentionScratch,
+}
+
+/// Why a [`NativeDecoder::generate`] loop ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The model emitted `[SEP]` (or `[PAD]`) — a natural stop.
+    Stop,
+    /// The K/V ring reached the context window.
+    ContextFull,
+    /// The `max_new` budget ran out.
+    Budget,
+}
+
+/// Result of one greedy generation.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    /// Newly generated token ids (prompt not included).
+    pub tokens: Vec<i32>,
+    pub stop: StopReason,
+}
+
+/// A fully calibrated native integer decoder.
+pub struct NativeDecoder {
+    pub cfg: ModelConfig,
+    pub task: TaskKind,
+    pub seed: u64,
+    weights: DecoderWeights,
+    calib: Calibrated,
+}
+
+impl NativeDecoder {
+    /// Seed the weights and calibrate on [`CALIB_EXAMPLES`] generated
+    /// prompts run through the f32 causal path (calibration stream
+    /// seed `seed + 1`, skipping [`super::eval::EVAL_SEED`] — same
+    /// convention as the encoder).
+    pub fn new(cfg: ModelConfig, task: TaskKind, seed: u64) -> Result<NativeDecoder> {
+        cfg.validate()?;
+        if cfg.seq_len != task.max_len() {
+            bail!("cfg.seq_len {} != task max_len {}", cfg.seq_len, task.max_len());
+        }
+        let weights = DecoderWeights::seeded(&cfg, seed);
+        let mut calib_seed = seed.wrapping_add(1);
+        if calib_seed == super::eval::EVAL_SEED {
+            calib_seed = calib_seed.wrapping_add(1);
+        }
+        let mut generator = WorkloadGen::new(task, calib_seed);
+        let mut ids = Vec::with_capacity(CALIB_EXAMPLES * cfg.seq_len);
+        let mut lens = Vec::with_capacity(CALIB_EXAMPLES);
+        for _ in 0..CALIB_EXAMPLES {
+            let ex = generator.next_example();
+            let len = crate::data::valid_len(&ex.ids).max(1);
+            ids.extend_from_slice(&ex.ids[..len]);
+            lens.push(len);
+        }
+        let mut builder = CalibBuilder {
+            divs: vec![LayerDivs::default(); cfg.layers],
+            ..CalibBuilder::default()
+        };
+        let mut scratch = DecoderScratch::default();
+        forward_causal_impl(
+            &cfg,
+            &weights,
+            &ids,
+            &lens,
+            SoftmaxBackend::F32Ref,
+            &mut CalibCtx::Build(&mut builder),
+            None,
+            &mut scratch,
+        )?;
+        let store = HeadParamStore::from_per_head(
+            cfg.layers,
+            cfg.heads,
+            &builder.thetas,
+            &builder.gammas,
+            &builder.kls,
+            cfg.seq_len,
+        )?;
+        Ok(NativeDecoder {
+            cfg,
+            task,
+            seed,
+            weights,
+            calib: Calibrated {
+                divs: builder.divs,
+                dh: builder.dh,
+                store,
+                lm_bias: builder.lm_bias,
+                lm_scale: builder.lm_scale,
+            },
+        })
+    }
+
+    /// The calibrated per-head parameter store (θ_h, γ_h, KL).
+    pub fn params(&self) -> &HeadParamStore {
+        &self.calib.store
+    }
+
+    /// Calibrated scale mapping integer LM logits onto the float grid.
+    pub fn lm_scale(&self) -> f64 {
+        self.calib.lm_scale
+    }
+
+    /// A fresh, empty K/V ring sized for this model.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.cfg.layers, self.cfg.seq_len, self.cfg.d_model)
+    }
+
+    /// Shape/range validation for a prompt, without running the model —
+    /// the submit-time admission check of the decode serving path.
+    pub fn check_prompt(&self, ids: &[i32]) -> Result<()> {
+        if ids.is_empty() || ids.len() > self.cfg.seq_len {
+            bail!("prompt must be 1..={} tokens, got {}", self.cfg.seq_len, ids.len());
+        }
+        for &id in ids {
+            check_lm_token(id, self.cfg.vocab)?;
+        }
+        Ok(())
+    }
+
+    /// Causal prefill of one prompt into a fresh cache: every position
+    /// attends its prefix, the cache is filled with the prompt's K/V
+    /// rows, and the per-position LM logits come back `(len, vocab)`
+    /// row-major — position `t`'s row is bit-identical to what a
+    /// decode loop's step `t + 1` produces (the decode contract).
+    pub fn prefill(
+        &self,
+        ids: &[i32],
+        backend: SoftmaxBackend,
+        cache: &mut KvCache,
+        scratch: &mut DecoderScratch,
+    ) -> Result<Vec<i32>> {
+        if !cache.is_empty() {
+            bail!("prefill requires an empty cache (has {} cached positions)", cache.len());
+        }
+        if cache.cap != self.cfg.seq_len || cache.d != self.cfg.d_model {
+            bail!("cache shape mismatch: not built by this model's new_cache()");
+        }
+        self.check_prompt(ids)?;
+        forward_causal_impl(
+            &self.cfg,
+            &self.weights,
+            ids,
+            &[ids.len()],
+            backend,
+            &mut CalibCtx::Run(&self.calib),
+            Some(cache),
+            scratch,
+        )
+    }
+
+    /// Batched causal prefill without cache capture (the bench /
+    /// throughput path): `lens[e]` consecutive ids form example `e`,
+    /// logits come back `(Σ lens, vocab)` row-major.
+    pub fn prefill_batch(
+        &self,
+        ids: &[i32],
+        lens: &[usize],
+        backend: SoftmaxBackend,
+        scratch: &mut DecoderScratch,
+    ) -> Result<Vec<i32>> {
+        forward_causal_impl(
+            &self.cfg,
+            &self.weights,
+            ids,
+            lens,
+            backend,
+            &mut CalibCtx::Run(&self.calib),
+            None,
+            scratch,
+        )
+    }
+
+    /// One decode step for one session.  See [`Self::step_batch`].
+    pub fn step(
+        &self,
+        token: i32,
+        backend: SoftmaxBackend,
+        cache: &mut KvCache,
+        scratch: &mut DecoderScratch,
+    ) -> Result<Vec<i32>> {
+        let mut out =
+            self.step_batch(&[token], backend, std::slice::from_mut(cache), scratch)?;
+        Ok(out.pop().expect("one step in, one logit row out"))
+    }
+
+    /// One decode step for a batch of independent sessions: append
+    /// `tokens[i]` at session `i`'s cursor, run the single new row
+    /// through every layer (projections batched across sessions, the
+    /// causal attention step per session against its cached K/V), and
+    /// return each session's next-token logits `(vocab,)`.
+    ///
+    /// **Bit-exact with the prefill path and with batch-of-1 steps**:
+    /// every stage is row-independent and the divisors are frozen, so
+    /// neither batching sessions together nor replaying a prompt
+    /// step-by-step can change any logit bit (pinned in tests below).
+    pub fn step_batch(
+        &self,
+        tokens: &[i32],
+        backend: SoftmaxBackend,
+        caches: &mut [KvCache],
+        scratch: &mut DecoderScratch,
+    ) -> Result<Vec<Vec<i32>>> {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let (heads, dk) = (cfg.heads, cfg.dk());
+        if tokens.is_empty() || tokens.len() != caches.len() {
+            bail!("need one cache per token, got {}/{}", tokens.len(), caches.len());
+        }
+        for (i, (&id, cache)) in tokens.iter().zip(caches.iter()).enumerate() {
+            check_lm_token(id, cfg.vocab)?;
+            if cache.cap != cfg.seq_len || cache.d != d {
+                bail!("session {i}: cache shape mismatch");
+            }
+            if cache.remaining() == 0 {
+                bail!("session {i}: K/V ring full at {} positions", cache.cap);
+            }
+        }
+        let nb = tokens.len();
+        let s = scratch;
+        let w = &self.weights;
+
+        // Embed each session's new token at its own absolute position.
+        s.x32.resize(nb * d, 0);
+        for (i, (&id, cache)) in tokens.iter().zip(caches.iter()).enumerate() {
+            let tok = &w.tok_emb[id as usize * d..(id as usize + 1) * d];
+            let pos = &w.pos_emb[cache.t * d..(cache.t + 1) * d];
+            for (j, o) in s.x32[i * d..(i + 1) * d].iter_mut().enumerate() {
+                *o = i32::from(tok[j]) + i32::from(pos[j]);
+            }
+        }
+        layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
+
+        for (li, lay) in w.layers.iter().enumerate() {
+            let divs = &self.calib.divs[li].0;
+            lay.wq.gemm_into(&s.x, &mut s.acc);
+            requant(&s.acc, divs[Slot::Q as usize], &mut s.q8);
+            lay.wk.gemm_into(&s.x, &mut s.acc);
+            requant(&s.acc, divs[Slot::K as usize], &mut s.k8);
+            lay.wv.gemm_into(&s.x, &mut s.acc);
+            requant(&s.acc, divs[Slot::V as usize], &mut s.v8);
+            for (i, cache) in caches.iter_mut().enumerate() {
+                let at = cache.t;
+                cache.store_rows(li, at, &s.k8[i * d..(i + 1) * d], &s.v8[i * d..(i + 1) * d]);
+            }
+
+            s.ctx32.resize(nb * d, 0);
+            for h in 0..heads {
+                let off = h * dk;
+                let hp = heads_at(&self.calib, li, h, heads);
+                for (i, cache) in caches.iter().enumerate() {
+                    let t_new = cache.t + 1; // active width incl. the new token
+                    // Gather the head's cached K (the new row included)
+                    // and the query row, then one bounded QK^T row.
+                    s.qh.clear();
+                    s.qh.extend_from_slice(&s.q8[i * d + off..i * d + off + dk]);
+                    s.kh.clear();
+                    for r in 0..t_new {
+                        s.kh.extend_from_slice(&cache.k8[li][r * d + off..r * d + off + dk]);
+                    }
+                    s.acc_head.resize(t_new, 0);
+                    gemm_nt_bounded_into(&s.qh, &s.kh, 1, t_new, t_new, dk, &mut s.acc_head);
+
+                    match backend {
+                        SoftmaxBackend::Hccs { out_path, recip } => {
+                            s.vh.clear();
+                            for r in 0..t_new {
+                                s.vh.extend_from_slice(
+                                    &cache.v8[li][r * d + off..r * d + off + dk],
+                                );
+                                s.vh.push(1);
+                            }
+                            s.out_aug.resize(dk + 1, 0);
+                            hccs_attention_step_from_acc(
+                                &s.acc_head,
+                                &s.vh,
+                                t_new,
+                                t_new,
+                                dk + 1,
+                                &hp.theta,
+                                out_path,
+                                recip,
+                                1,
+                                hp.dh,
+                                &mut s.attn,
+                                &mut s.out_aug,
+                            )
+                            .map_err(|e| anyhow!("decode step L{li}H{h}: {e}"))?;
+                            let srow = i64::from(s.out_aug[dk]).max(1);
+                            for (o, &raw) in s.ctx32[i * d + off..i * d + off + dk]
+                                .iter_mut()
+                                .zip(&s.out_aug[..dk])
+                            {
+                                *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            }
+                        }
+                        SoftmaxBackend::F32Ref => {
+                            f32_causal_row(
+                                &s.acc_head,
+                                t_new,
+                                hp.dh,
+                                hp.gamma,
+                                &mut s.grid,
+                                &mut s.exps,
+                                &mut s.phat,
+                            );
+                            let srow: i64 =
+                                s.phat.iter().map(|&p| i64::from(p)).sum::<i64>().max(1);
+                            for (j, o) in
+                                s.ctx32[i * d + off..i * d + off + dk].iter_mut().enumerate()
+                            {
+                                let mut raw = 0i32;
+                                for (r, &p) in s.phat.iter().enumerate() {
+                                    if p != 0 {
+                                        raw += p * i32::from(cache.v8[li][r * d + off + j]);
+                                    }
+                                }
+                                *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            }
+                        }
+                    }
+                }
+            }
+
+            requant(&s.ctx32, divs[Slot::Ctx as usize], &mut s.c8);
+            lay.wo.gemm_into(&s.c8, &mut s.acc);
+            requant(&s.acc, divs[Slot::O as usize], &mut s.c8);
+            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                *o = i32::from(a) + i32::from(b);
+            }
+            layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+
+            lay.w1.gemm_into(&s.x, &mut s.acc);
+            requant(&s.acc, divs[Slot::F1 as usize], &mut s.h8);
+            for v in s.h8.iter_mut() {
+                *v = (*v).max(0);
+            }
+            lay.w2.gemm_into(&s.h8, &mut s.acc);
+            requant(&s.acc, divs[Slot::F2 as usize], &mut s.c8);
+            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                *o = i32::from(a) + i32::from(b);
+            }
+            layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
+        }
+
+        w.w_lm.gemm_into(&s.x, &mut s.acc);
+        let nc = cfg.vocab;
+        let out = s.acc[..nb * nc]
+            .chunks_exact(nc)
+            .map(|row| {
+                row.iter().zip(&self.calib.lm_bias).map(|(&v, &b)| v - b).collect::<Vec<i32>>()
+            })
+            .collect();
+        for cache in caches.iter_mut() {
+            cache.t += 1;
+        }
+        Ok(out)
+    }
+
+    /// Greedy generation: causal prefill of `prompt`, then argmax
+    /// decode steps until `[SEP]`/`[PAD]`, the context window, or the
+    /// `max_new` budget.  Deterministic for a given (seed, prompt,
+    /// backend) — there is no sampling temperature in the integer
+    /// recipe.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        backend: SoftmaxBackend,
+        scratch: &mut DecoderScratch,
+    ) -> Result<Generation> {
+        let mut cache = self.new_cache();
+        let logits = self.prefill(prompt, backend, &mut cache, scratch)?;
+        let nc = self.cfg.vocab;
+        let mut next = argmax_first(&logits[(prompt.len() - 1) * nc..prompt.len() * nc]) as i32;
+        let mut tokens = Vec::new();
+        let stop = loop {
+            if tokens.len() >= max_new {
+                break StopReason::Budget;
+            }
+            tokens.push(next);
+            if is_stop_token(next) {
+                break StopReason::Stop;
+            }
+            if cache.remaining() == 0 {
+                break StopReason::ContextFull;
+            }
+            let row = self.step(next, backend, &mut cache, scratch)?;
+            next = argmax_first(&row) as i32;
+        };
+        Ok(Generation { tokens, stop })
+    }
+}
+
+/// Greedy choice over one vocab logit row (first-max argmax — the
+/// single decoding policy of the integer recipe, shared by
+/// [`NativeDecoder::generate`] and the serving step executor).
+pub fn greedy_token(row: &[i32]) -> i32 {
+    argmax_first(row) as i32
+}
+
+/// Whether `id` naturally ends a generation (`[SEP]` or `[PAD]`).
+pub fn is_stop_token(id: i32) -> bool {
+    id == SEP || id == PAD
+}
+
+/// Run-mode head parameters straight off the frozen calibration.
+fn heads_at(c: &Calibrated, li: usize, h: usize, heads: usize) -> Head {
+    let (p, gamma) = c.store.per_head.at(li, h);
+    Head { dh: c.dh[li * heads + h], gamma, theta: *p }
+}
+
+/// LM token validity (vocab range only — a decoder prompt has no
+/// segment stream and PAD carries no masking meaning here).
+#[inline]
+fn check_lm_token(id: i32, vocab: usize) -> Result<()> {
+    if id < 0 || id as usize >= vocab {
+        bail!("token id {id} outside vocab 0..{vocab}");
+    }
+    Ok(())
+}
+
+/// First-max argmax (numpy semantics; ties take the lowest id).
+fn argmax_first(v: &[i32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// The int8 attention-logit grid (identical to the encoder's): QK
+/// accumulator → floor division by d_h, clamped to the rails.
+#[inline]
+fn logit_grid(acc: i32, dh: i32) -> i32 {
+    acc.div_euclid(dh).clamp(-128, 127)
+}
+
+/// Exact f32 softmax over one causal row of the int8 grid, floored
+/// onto the integer probability scale (the same realization the
+/// encoder's `F32Ref` branch uses) — shared by the prefill row loop
+/// and the step path so they cannot drift.
+fn f32_causal_row(
+    rowacc: &[i32],
+    width: usize,
+    dh: i32,
+    gamma: f64,
+    grid: &mut Vec<f64>,
+    exps: &mut Vec<f64>,
+    phat: &mut Vec<i32>,
+) {
+    grid.clear();
+    grid.extend(rowacc[..width].iter().map(|&a| f64::from(logit_grid(a, dh)) * gamma));
+    let m = grid.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    exps.clear();
+    exps.extend(grid.iter().map(|&v| (v - m).exp()));
+    let z: f64 = exps.iter().sum();
+    phat.resize(width, 0);
+    for (p, &e) in phat.iter_mut().zip(exps.iter()) {
+        *p = (e / z * f64::from(T_I16)).floor() as i32;
+    }
+}
+
+/// The shared causal forward over `lens.len()` stacked prompts
+/// (example `e` owns `lens[e]` consecutive ids); returns
+/// bias-corrected LM logits, `(Σ lens, vocab)` row-major.
+/// `CalibCtx::Build` derives divisors/θ as it goes; `CalibCtx::Run`
+/// replays them.  With `cache: Some(..)` (single example only) the
+/// per-layer K/V rows are captured for the decode loop.
+#[allow(clippy::too_many_arguments)]
+fn forward_causal_impl(
+    cfg: &ModelConfig,
+    w: &DecoderWeights,
+    ids: &[i32],
+    lens: &[usize],
+    backend: SoftmaxBackend,
+    calib: &mut CalibCtx,
+    mut cache: Option<&mut KvCache>,
+    s: &mut DecoderScratch,
+) -> Result<Vec<i32>> {
+    let d = cfg.d_model;
+    let (heads, dk) = (cfg.heads, cfg.dk());
+    if lens.is_empty() || lens.iter().any(|&l| l == 0 || l > cfg.seq_len) {
+        bail!("prompt lengths must all be 1..={}", cfg.seq_len);
+    }
+    let total: usize = lens.iter().sum();
+    if ids.len() != total {
+        bail!("ids len {} != Σ lens {total}", ids.len());
+    }
+    for &id in ids {
+        check_lm_token(id, cfg.vocab)?;
+    }
+    if cache.is_some() && lens.len() != 1 {
+        bail!("K/V capture requires a single-prompt prefill");
+    }
+    let lmax = *lens.iter().max().expect("non-empty batch");
+
+    // Embed: tok + pos (positions restart per example), integer LN.
+    s.x32.resize(total * d, 0);
+    let mut row = 0usize;
+    for &len in lens {
+        for t in 0..len {
+            let id = ids[row] as usize;
+            let tok = &w.tok_emb[id * d..(id + 1) * d];
+            let pos = &w.pos_emb[t * d..(t + 1) * d];
+            for (j, o) in s.x32[row * d..(row + 1) * d].iter_mut().enumerate() {
+                *o = i32::from(tok[j]) + i32::from(pos[j]);
+            }
+            row += 1;
+        }
+    }
+    layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
+
+    for (li, lay) in w.layers.iter().enumerate() {
+        lay.wq.gemm_into(&s.x, &mut s.acc);
+        let div = calib.div(li, Slot::Q, 1, &s.acc);
+        requant(&s.acc, div, &mut s.q8);
+        lay.wk.gemm_into(&s.x, &mut s.acc);
+        let div = calib.div(li, Slot::K, 1, &s.acc);
+        requant(&s.acc, div, &mut s.k8);
+        lay.wv.gemm_into(&s.x, &mut s.acc);
+        let div = calib.div(li, Slot::V, 1, &s.acc);
+        requant(&s.acc, div, &mut s.v8);
+        if let Some(cache) = cache.as_deref_mut() {
+            cache.store_rows(li, 0, &s.k8[..total * d], &s.v8[..total * d]);
+        }
+
+        // Attention, head by head: the full (len, len) QK^T tile per
+        // example (upper triangle computed but never read — the causal
+        // dispatch masks it), then one grouped causal HCCS pass (or
+        // the f32 row loop) over every position of every example.
+        s.ctx32.resize(total * d, 0);
+        for h in 0..heads {
+            let off = h * dk;
+            gather_head(&s.q8, d, off, dk, &mut s.qh);
+            gather_head(&s.k8, d, off, dk, &mut s.kh);
+            s.acc_head.resize(total * lmax, 0);
+            let mut roff = 0usize;
+            for &len in lens {
+                gemm_nt_bounded_into(
+                    &s.qh[roff * dk..(roff + len) * dk],
+                    &s.kh[roff * dk..(roff + len) * dk],
+                    len,
+                    lmax,
+                    len,
+                    dk,
+                    &mut s.acc_head[roff * lmax..(roff + len) * lmax],
+                );
+                roff += len;
+            }
+            let head = calib.head(li, h, heads, &s.acc_head, lens, lmax, cfg.seq_len)?;
+
+            match backend {
+                SoftmaxBackend::Hccs { out_path, recip } => {
+                    s.vh.clear();
+                    for vrow in s.v8[..total * d].chunks_exact(d) {
+                        s.vh.extend_from_slice(&vrow[off..off + dk]);
+                        s.vh.push(1);
+                    }
+                    s.out_aug.resize(total * (dk + 1), 0);
+                    hccs_attention_causal_from_acc(
+                        &s.acc_head,
+                        &s.vh,
+                        lens,
+                        lmax,
+                        dk + 1,
+                        &head.theta,
+                        out_path,
+                        recip,
+                        1,
+                        head.dh,
+                        &mut s.attn,
+                        &mut s.out_aug,
+                    )
+                    .map_err(|e| anyhow!("causal attention L{li}H{h}: {e}"))?;
+                    for (orow, dst) in
+                        s.out_aug.chunks_exact(dk + 1).zip(s.ctx32.chunks_exact_mut(d))
+                    {
+                        let srow = i64::from(orow[dk]).max(1);
+                        for (o, &raw) in dst[off..off + dk].iter_mut().zip(&orow[..dk]) {
+                            *o = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                        }
+                    }
+                }
+                SoftmaxBackend::F32Ref => {
+                    let mut row = 0usize;
+                    let mut base = 0usize;
+                    for &len in lens {
+                        for t in 0..len {
+                            let width = t + 1;
+                            f32_causal_row(
+                                &s.acc_head[row * lmax..row * lmax + width],
+                                width,
+                                head.dh,
+                                head.gamma,
+                                &mut s.grid,
+                                &mut s.exps,
+                                &mut s.phat,
+                            );
+                            let srow: i64 =
+                                s.phat.iter().map(|&p| i64::from(p)).sum::<i64>().max(1);
+                            let clo = row * d + off;
+                            for (j, dst) in s.ctx32[clo..clo + dk].iter_mut().enumerate() {
+                                let mut raw = 0i32;
+                                for (c, &p) in s.phat.iter().enumerate() {
+                                    if p != 0 {
+                                        raw += p * i32::from(s.v8[(base + c) * d + off + j]);
+                                    }
+                                }
+                                *dst = (i64::from(raw) * CTX_NORM).div_euclid(srow) as i32;
+                            }
+                            row += 1;
+                        }
+                        base += len;
+                    }
+                }
+            }
+        }
+
+        let div = calib.div(li, Slot::Ctx, 1, &s.ctx32);
+        requant(&s.ctx32, div, &mut s.c8);
+        lay.wo.gemm_into(&s.c8, &mut s.acc);
+        let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
+        requant(&s.acc, div, &mut s.c8);
+        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+            *o = i32::from(a) + i32::from(b);
+        }
+        layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+
+        lay.w1.gemm_into(&s.x, &mut s.acc);
+        let div = calib.div(li, Slot::F1, 1, &s.acc);
+        requant(&s.acc, div, &mut s.h8);
+        for v in s.h8.iter_mut() {
+            *v = (*v).max(0);
+        }
+        lay.w2.gemm_into(&s.h8, &mut s.acc);
+        let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
+        requant(&s.acc, div, &mut s.c8);
+        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+            *o = i32::from(a) + i32::from(b);
+        }
+        layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
+    }
+
+    // LM head over every position, then the calibrated bias recentre.
+    let nc = cfg.vocab;
+    w.w_lm.gemm_into(&s.x, &mut s.acc);
+    let mut logits = s.acc[..total * nc].to_vec();
+    match calib {
+        CalibCtx::Build(b) => {
+            let mut bias = vec![0i64; nc];
+            for row in logits.chunks_exact(nc) {
+                for (acc, &v) in bias.iter_mut().zip(row) {
+                    *acc += i64::from(v);
+                }
+            }
+            b.lm_bias =
+                bias.iter().map(|&v| v.div_euclid(total as i64) as i32).collect();
+            let vals: Vec<f64> = logits.iter().map(|&v| f64::from(v)).collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            b.lm_scale = LM_LOGIT_STD / var.sqrt().max(1e-6);
+            for row in logits.chunks_exact_mut(nc) {
+                for (v, &bb) in row.iter_mut().zip(&b.lm_bias) {
+                    *v -= bb;
+                }
+            }
+        }
+        CalibCtx::Run(c) => {
+            for row in logits.chunks_exact_mut(nc) {
+                for (v, &bb) in row.iter_mut().zip(&c.lm_bias) {
+                    *v -= bb;
+                }
+            }
+        }
+    }
+    if let Some(cache) = cache {
+        cache.t = lens[0];
+    }
+    Ok(logits)
+}
+
+/// Gather one head's `(rows, dk)` slice of a `(rows, d_model)` tensor.
+fn gather_head(src: &[i8], d: usize, off: usize, dk: usize, dst: &mut Vec<i8>) {
+    dst.clear();
+    for row in src.chunks_exact(d) {
+        dst.extend_from_slice(&row[off..off + dk]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hccs::{OutputPath, Reciprocal};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            layers: 2,
+            heads: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: TaskKind::Sst2s.max_len(),
+            vocab: crate::data::VOCAB_SIZE as usize,
+            n_classes: 2,
+        }
+    }
+
+    fn prompt(seed: u64, min_len: usize) -> Vec<i32> {
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, seed);
+        loop {
+            let ex = generator.next_example();
+            let len = crate::data::valid_len(&ex.ids);
+            if len >= min_len {
+                return ex.ids[..len].to_vec();
+            }
+        }
+    }
+
+    const BACKENDS: [SoftmaxBackend; 5] = [
+        SoftmaxBackend::F32Ref,
+        SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div },
+        SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Clb },
+        SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Div },
+        SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb },
+    ];
+
+    /// THE decode contract (tentpole acceptance): a decode loop over
+    /// `t = 1..=n` steps with the K/V cache produces bit-identical
+    /// per-step logits to the full causal prefill at length `n`, in
+    /// all 4 HCCS modes (and the f32 reference).  CI re-runs this
+    /// whole suite under `HCCS_FORCE_SCALAR=1`, covering both SIMD
+    /// dispatch legs.
+    #[test]
+    fn decode_loop_matches_prefill_bit_exact() {
+        let m = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 17).unwrap();
+        let ids = prompt(5, 8);
+        let n = ids.len();
+        let nc = m.cfg.vocab;
+        let mut s = DecoderScratch::default();
+        for backend in BACKENDS {
+            let mut cache = m.new_cache();
+            let full = m.prefill(&ids, backend, &mut cache, &mut s).unwrap();
+            assert_eq!(full.len(), n * nc);
+            assert_eq!(cache.len(), n);
+            let mut step_cache = m.new_cache();
+            for (t, &id) in ids.iter().enumerate() {
+                let row = m.step(id, backend, &mut step_cache, &mut s).unwrap();
+                assert_eq!(
+                    row,
+                    full[t * nc..(t + 1) * nc].to_vec(),
+                    "{backend:?} step {} diverged from prefill",
+                    t + 1
+                );
+            }
+            assert_eq!(step_cache.len(), n);
+        }
+    }
+
+    /// Batching independent sessions into one step must not change any
+    /// logit bit vs stepping each session alone — the property the
+    /// sharded decode executor relies on to flush mixed batches.
+    #[test]
+    fn step_batch_matches_single_steps() {
+        let m = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 23).unwrap();
+        let a = prompt(7, 6);
+        let b = prompt(11, 3);
+        let backend = SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div };
+        let mut s = DecoderScratch::default();
+        // Two sessions prefilled at different lengths.
+        let mut caches = vec![m.new_cache(), m.new_cache()];
+        m.prefill(&a, backend, &mut caches[0], &mut s).unwrap();
+        m.prefill(&b[..3], backend, &mut caches[1], &mut s).unwrap();
+        let mut solo = vec![m.new_cache(), m.new_cache()];
+        m.prefill(&a, backend, &mut solo[0], &mut s).unwrap();
+        m.prefill(&b[..3], backend, &mut solo[1], &mut s).unwrap();
+        for step in 0i32..4 {
+            let toks = [4 + step, 7 + 2 * step];
+            let batched = m.step_batch(&toks, backend, &mut caches, &mut s).unwrap();
+            for (i, row) in batched.iter().enumerate() {
+                let alone = m.step(toks[i], backend, &mut solo[i], &mut s).unwrap();
+                assert_eq!(*row, alone, "session {i} step {step}");
+            }
+        }
+        assert_eq!(caches[0].len(), a.len() + 4);
+        assert_eq!(caches[1].len(), 3 + 4);
+    }
+
+    #[test]
+    fn calibrated_decoder_admits_single_key_steps() {
+        let m = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 3).unwrap();
+        let store = m.params();
+        assert_eq!(store.n, m.cfg.seq_len);
+        for p in &store.per_head.params {
+            p.validate(m.cfg.seq_len).unwrap();
+            p.validate_masked(m.cfg.seq_len).unwrap();
+            // The causal calibration rows include length-1 rows, so
+            // the short-row band floor guarantees Z ≥ 256 even for a
+            // single-key first step.
+            assert!(p.min_row_sum(1) >= 256, "single-key row sum {}", p.min_row_sum(1));
+        }
+        assert!(m.lm_scale() > 0.0);
+        // And the decode first step actually runs: a 1-token prefill
+        // equals a single step from an empty cache.
+        let mut s = DecoderScratch::default();
+        let backend = SoftmaxBackend::Hccs { out_path: OutputPath::I8, recip: Reciprocal::Clb };
+        let mut c1 = m.new_cache();
+        let full = m.prefill(&[5], backend, &mut c1, &mut s).unwrap();
+        let mut c2 = m.new_cache();
+        let row = m.step(5, backend, &mut c2, &mut s).unwrap();
+        assert_eq!(full, row);
+    }
+
+    #[test]
+    fn same_seed_same_decoder_bit_exact() {
+        let a = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 31).unwrap();
+        let b = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 31).unwrap();
+        let ids = prompt(9, 4);
+        let mut s = DecoderScratch::default();
+        let backend = SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Clb };
+        let ga = a.generate(&ids, 8, backend, &mut s).unwrap();
+        let gb = b.generate(&ids, 8, backend, &mut s).unwrap();
+        assert_eq!(ga.tokens, gb.tokens);
+        assert_eq!(ga.stop, gb.stop);
+        assert!(ga.tokens.len() <= 8);
+        assert!(ga.tokens.iter().all(|&t| t >= 0 && (t as usize) < a.cfg.vocab));
+        // Different seeds genuinely differ somewhere in the logits.
+        let c = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 32).unwrap();
+        let mut ca = a.new_cache();
+        let mut cc = c.new_cache();
+        let la = a.prefill(&ids, backend, &mut ca, &mut s).unwrap();
+        let lc = c.prefill(&ids, backend, &mut cc, &mut s).unwrap();
+        assert_ne!(la, lc);
+    }
+
+    #[test]
+    fn generate_respects_budget_and_context() {
+        let m = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 41).unwrap();
+        let mut s = DecoderScratch::default();
+        let backend = SoftmaxBackend::Hccs { out_path: OutputPath::I16, recip: Reciprocal::Div };
+        let ids = prompt(3, 4);
+        // Zero budget: prefill only, no tokens.
+        let g = m.generate(&ids, 0, backend, &mut s).unwrap();
+        assert!(g.tokens.is_empty());
+        assert_eq!(g.stop, StopReason::Budget);
+        // A huge budget must stop at SEP/PAD or the context window.
+        let g = m.generate(&ids, 10_000, backend, &mut s).unwrap();
+        assert!(g.tokens.len() <= m.cfg.seq_len - ids.len() + 1);
+        match g.stop {
+            StopReason::Stop => {
+                let last = *g.tokens.last().unwrap();
+                assert!(last == SEP || last == PAD);
+            }
+            StopReason::ContextFull => {}
+            StopReason::Budget => panic!("10k budget cannot be the binding constraint"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let m = NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 3).unwrap();
+        let n = m.cfg.seq_len;
+        let backend = SoftmaxBackend::F32Ref;
+        let mut s = DecoderScratch::default();
+        // Prompt shape/range violations.
+        assert!(m.check_prompt(&[]).is_err());
+        assert!(m.check_prompt(&vec![1; n + 1]).is_err());
+        assert!(m.check_prompt(&[-1]).is_err());
+        assert!(m.check_prompt(&[m.cfg.vocab as i32]).is_err());
+        assert!(m.check_prompt(&vec![1; n]).is_ok());
+        // Prefill demands an empty, shape-matched cache.
+        let mut cache = m.new_cache();
+        m.prefill(&[5, 6], backend, &mut cache, &mut s).unwrap();
+        assert!(m.prefill(&[5], backend, &mut cache, &mut s).is_err());
+        cache.reset();
+        assert!(m.prefill(&[5], backend, &mut cache, &mut s).is_ok());
+        // Steps reject bad tokens, mismatched batch shapes, full rings.
+        assert!(m.step(-1, backend, &mut cache, &mut s).is_err());
+        assert!(m
+            .step_batch(&[1, 2], backend, std::slice::from_mut(&mut cache), &mut s)
+            .is_err());
+        assert!(m.step_batch(&[], backend, &mut [], &mut s).is_err());
+        let mut full = m.new_cache();
+        m.prefill(&vec![5; n], backend, &mut full, &mut s).unwrap();
+        assert_eq!(full.remaining(), 0);
+        assert!(m.step(5, backend, &mut full, &mut s).is_err());
+    }
+}

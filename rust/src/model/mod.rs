@@ -49,17 +49,23 @@
 //!
 //! Submodules: [`config`] (model shapes), [`norm`] (integer LN /
 //! requant helpers), [`encoder`] (weights + calibration + forward),
+//! [`decoder`] (the causal cached-K/V sibling for autoregressive
+//! decode — prefill + step paths pinned bit-identical),
 //! [`backend`] (softmax backend + the sharded serving
 //! [`NativeBackend`]),
 //! [`eval`] (accuracy/agreement harness shared by CLI, bench, tests).
 
 pub mod backend;
 pub mod config;
+pub mod decoder;
 pub mod encoder;
 pub mod eval;
 pub mod norm;
 
-pub use backend::{NativeBackend, NativeServeConfig, SoftmaxBackend};
+pub use backend::{
+    DecodeReply, DecodeSessionHandle, NativeBackend, NativeServeConfig, SoftmaxBackend,
+};
 pub use config::ModelConfig;
+pub use decoder::{DecoderScratch, Generation, KvCache, NativeDecoder, StopReason};
 pub use encoder::{EncoderScratch, Inference, NativeModel, CALIB_EXAMPLES};
 pub use eval::{eval_native, ModeReport, NativeEvalReport, EVAL_SEED};

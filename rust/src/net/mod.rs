@@ -32,11 +32,28 @@
 //!   [`crate::server::format_reply`]) — pinned byte-for-byte by
 //!   `tests/tcp_serving.rs`.
 //!
+//! * **Streaming generation.** A tier started with
+//!   [`TcpServer::start_streaming`] additionally serves
+//!   `{"id": 7, "generate": "<prompt>", "max_new": 8}` frames: the
+//!   prompt opens a decode session on the backend's shards
+//!   ([`NativeBackend::open_session`]) and the writer streams **one
+//!   reply frame per generated token** (`{"done": false, "id": 7,
+//!   "step": 1, "token": "w044", ...}`), closing the stream on a stop
+//!   token, the `max_new` budget, the K/V ring filling, or an error
+//!   frame.  The connection's `--deadline-ms` budget is stamped on
+//!   **every step** individually, so a stuck generation sheds that
+//!   step (error frame, session closed) instead of wedging the shard.
+//!   Classification frames interleave freely on the same connection;
+//!   replies stay FIFO, so frames queued behind a stream drain after
+//!   it.  Dropping the connection mid-stream closes the session via
+//!   the handle's RAII close.
+//!
 //! Metrics land in the server's [`Registry`] on the shard-rollup
 //! pattern: `net.requests` aggregates `net.requests.conn<K>` slot
 //! counters (connections round-robin into [`CONN_SLOTS`] slots), alongside
 //! `net.connections`, `net.active` (gauge), `net.replies`, `net.shed`,
-//! `net.frame_errors`, and `net.read_bytes`.
+//! `net.frame_errors`, `net.read_bytes`, and for streaming tiers
+//! `net.streams` / `net.stream_tokens`.
 
 use std::io::{BufWriter, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -44,14 +61,17 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::coordinator::is_shed_error;
 use crate::data::TaskKind;
-use crate::error::{Context, Result};
+use crate::error::{anyhow, Context, Result};
 use crate::json::{obj, FrameLimits, StreamingFramer, Value};
 use crate::metrics::{Gauge, Registry};
+use crate::model::{DecodeReply, DecodeSessionHandle, NativeBackend};
 use crate::server::{
-    format_reply, resolve_reply, stage, FramedRequest, Framer, InferBackend, Outcome, Pending,
+    encode_request, format_reply, resolve_reply, stage, FramedRequest, Framer, InferBackend,
+    Outcome, Pending,
 };
 use crate::tokenizer::Tokenizer;
 
@@ -139,10 +159,17 @@ impl Framer for JsonFramer {
 /// per-request `Err` text.
 fn decode_request(frame: &[u8], seq: u64) -> FramedRequest {
     if let Some((id, text)) = lazy_scan_request(frame) {
-        return FramedRequest { id: id.unwrap_or(seq), text: Ok(text) };
+        return FramedRequest { id: id.unwrap_or(seq), text: Ok(text), generate: None };
     }
     decode_request_full(frame, seq)
 }
+
+/// Cap on `max_new` per generation frame (a client cannot pin a shard
+/// for an unbounded token count; the K/V ring bounds it anyway).
+pub const MAX_NEW_CAP: usize = 1024;
+
+/// Default `max_new` when a generation frame omits it.
+pub const MAX_NEW_DEFAULT: usize = 32;
 
 /// The slow path: full [`Value::parse`], tolerant of escapes, nesting,
 /// extra fields, and any field order.
@@ -150,7 +177,11 @@ fn decode_request_full(frame: &[u8], seq: u64) -> FramedRequest {
     let s = match std::str::from_utf8(frame) {
         Ok(s) => s,
         Err(_) => {
-            return FramedRequest { id: seq, text: Err("request is not valid UTF-8".into()) }
+            return FramedRequest {
+                id: seq,
+                text: Err("request is not valid UTF-8".into()),
+                generate: None,
+            }
         }
     };
     let v = match Value::parse(s) {
@@ -159,6 +190,7 @@ fn decode_request_full(frame: &[u8], seq: u64) -> FramedRequest {
             return FramedRequest {
                 id: seq,
                 text: Err(format!("bad json: {} at byte {}", e.msg, e.pos)),
+                generate: None,
             }
         }
     };
@@ -167,11 +199,30 @@ fn decode_request_full(frame: &[u8], seq: u64) -> FramedRequest {
         .and_then(Value::as_i64)
         .and_then(|i| u64::try_from(i).ok())
         .unwrap_or(seq);
+    // Streaming generation frame: `{"generate": "<prompt>", "max_new": n}`.
+    if let Some(prompt) = v.get("generate").and_then(Value::as_str) {
+        let max_new = match v.get("max_new") {
+            None => MAX_NEW_DEFAULT,
+            Some(m) => match m.as_i64() {
+                Some(n) if n >= 1 && (n as usize) <= MAX_NEW_CAP => n as usize,
+                _ => {
+                    return FramedRequest {
+                        id,
+                        text: Err(format!("max_new must be an integer in 1..={MAX_NEW_CAP}")),
+                        generate: None,
+                    }
+                }
+            },
+        };
+        return FramedRequest { id, text: Ok(prompt.to_string()), generate: Some(max_new) };
+    }
     match v.get("text").and_then(Value::as_str) {
-        Some(t) => FramedRequest { id, text: Ok(t.to_string()) },
-        None => {
-            FramedRequest { id, text: Err("request object missing string field \"text\"".into()) }
-        }
+        Some(t) => FramedRequest { id, text: Ok(t.to_string()), generate: None },
+        None => FramedRequest {
+            id,
+            text: Err("request object missing string field \"text\" (or \"generate\")".into()),
+            generate: None,
+        },
     }
 }
 
@@ -303,6 +354,164 @@ pub(crate) fn encode_reply_json(id: u64, outcome: &Outcome) -> String {
     s
 }
 
+/// Render one generated token as a single-line JSON frame.  `done`
+/// reflects stream end for *any* reason (stop token, full ring, or the
+/// client's `max_new` budget), so a client can read until `done`.
+fn encode_token_json(id: u64, r: &DecodeReply, token: &str, done: bool) -> String {
+    let v = obj(vec![
+        ("done", done.into()),
+        ("id", (id as i64).into()),
+        ("latency_us", (r.latency.as_micros() as i64).into()),
+        ("step", (r.step as i64).into()),
+        ("token", token.into()),
+        ("token_id", i64::from(r.token).into()),
+    ]);
+    let mut s = v.to_string_compact();
+    s.push('\n');
+    s
+}
+
+/// Render a mid-stream failure (shed step, engine error) as the final
+/// frame of a stream.  `step` is the number of tokens already streamed.
+fn encode_stream_err_json(id: u64, step: usize, msg: &str, shed: bool) -> String {
+    let v = obj(vec![
+        ("error", msg.into()),
+        ("id", (id as i64).into()),
+        ("shed", shed.into()),
+        ("step", (step as i64).into()),
+    ]);
+    let mut s = v.to_string_compact();
+    s.push('\n');
+    s
+}
+
+/// One unit of work handed from a connection's reader to its writer.
+enum ConnItem {
+    /// A staged classification request (one reply frame).
+    One(Pending),
+    /// An opened decode session the writer drives to completion,
+    /// writing one frame per token.
+    Stream(Box<StreamJob>),
+}
+
+/// Everything the writer needs to stream a generation: the pinned
+/// session handle (dropping it closes the session — including when the
+/// connection dies mid-stream), the open op's reply channel, and the
+/// client's token budget.
+struct StreamJob {
+    id: u64,
+    handle: DecodeSessionHandle,
+    first: mpsc::Receiver<std::result::Result<DecodeReply, String>>,
+    max_new: usize,
+}
+
+/// Reader-side staging of a generation frame: tokenize the prompt and
+/// open the session.  Failures (generation not enabled, bad prompt,
+/// admission shed) become an ordinary one-frame error reply.
+fn stage_generate(
+    decode: Option<&Arc<NativeBackend>>,
+    tokenizer: &Tokenizer,
+    task: TaskKind,
+    req: FramedRequest,
+    max_new: usize,
+    budget: Option<Duration>,
+) -> ConnItem {
+    let ready_err =
+        |id, msg: String, shed| ConnItem::One(Pending::Ready(id, Outcome::Err { msg, shed }));
+    let Some(backend) = decode else {
+        return ready_err(
+            req.id,
+            "streaming generation not enabled on this server (serve with --decode)".into(),
+            false,
+        );
+    };
+    let text = match req.text {
+        Ok(t) => t,
+        Err(msg) => return ready_err(req.id, msg, false),
+    };
+    let enc = match encode_request(tokenizer, task, &text, task.max_len()) {
+        Ok(e) => e,
+        Err(e) => return ready_err(req.id, format!("bad request: {e:#}"), false),
+    };
+    let prompt = enc.ids[..enc.valid_len].to_vec();
+    let deadline = budget.map(|d| Instant::now() + d);
+    match backend.open_session(prompt, deadline) {
+        Ok((handle, first)) => {
+            ConnItem::Stream(Box::new(StreamJob { id: req.id, handle, first, max_new }))
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let shed = is_shed_error(&msg);
+            ready_err(req.id, msg, shed)
+        }
+    }
+}
+
+/// Writer-side loop of one stream: await each step's reply, write its
+/// token frame, and request the next step with a **fresh** deadline
+/// (`now + budget`), so every step gets the same SLO the connection
+/// grants a classification request.  Returns `Err` only on socket
+/// write failure (the connection is gone).  The session handle drops
+/// at the end of the job — success, error, and early-exit paths alike —
+/// which closes the session on its shard.
+fn drive_stream(
+    out: &mut BufWriter<TcpStream>,
+    job: StreamJob,
+    backend: &NativeBackend,
+    tokenizer: &Tokenizer,
+    budget: Option<Duration>,
+    metrics: &Registry,
+) -> std::io::Result<()> {
+    let replies = metrics.counter("net.replies");
+    let shed = metrics.counter("net.shed");
+    let stream_tokens = metrics.counter("net.stream_tokens");
+    let StreamJob { id, handle, first, max_new } = job;
+    let mut rx = first;
+    let mut emitted = 0usize;
+    loop {
+        let step_result = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("engine dropped generation".to_string()),
+        };
+        let r = match step_result {
+            Ok(r) => r,
+            Err(msg) => {
+                let is_shed = is_shed_error(&msg);
+                if is_shed {
+                    shed.inc();
+                }
+                replies.inc();
+                out.write_all(encode_stream_err_json(id, emitted, &msg, is_shed).as_bytes())?;
+                out.flush()?;
+                return Ok(());
+            }
+        };
+        emitted += 1;
+        let ended = r.done || emitted >= max_new;
+        stream_tokens.inc();
+        replies.inc();
+        out.write_all(encode_token_json(id, &r, tokenizer.token(r.token), ended).as_bytes())?;
+        out.flush()?;
+        if ended {
+            return Ok(());
+        }
+        match backend.step_session(&handle, budget.map(|d| Instant::now() + d)) {
+            Ok(next) => rx = next,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let is_shed = is_shed_error(&msg);
+                if is_shed {
+                    shed.inc();
+                }
+                replies.inc();
+                out.write_all(encode_stream_err_json(id, emitted, &msg, is_shed).as_bytes())?;
+                out.flush()?;
+                return Ok(());
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Listener + per-connection threads
 // ---------------------------------------------------------------------------
@@ -349,6 +558,40 @@ impl TcpServer {
     where
         E: InferBackend + Send + Sync + 'static,
     {
+        Self::start_inner(backend, None, tokenizer, task, addr, cfg)
+    }
+
+    /// Like [`TcpServer::start`], but also serves streaming generation
+    /// frames (`{"generate": ...}`) against `backend`'s decode
+    /// sessions.  The backend must have been built with
+    /// [`NativeBackend::with_decoder`].
+    pub fn start_streaming(
+        backend: Arc<NativeBackend>,
+        tokenizer: Arc<Tokenizer>,
+        task: TaskKind,
+        addr: &str,
+        cfg: NetConfig,
+    ) -> Result<TcpServer> {
+        if backend.decoder().is_none() {
+            return Err(anyhow!(
+                "streaming tier needs a decode-enabled backend (NativeBackend::with_decoder)"
+            ));
+        }
+        let decode = backend.clone();
+        Self::start_inner(backend, Some(decode), tokenizer, task, addr, cfg)
+    }
+
+    fn start_inner<E>(
+        backend: Arc<E>,
+        decode: Option<Arc<NativeBackend>>,
+        tokenizer: Arc<Tokenizer>,
+        task: TaskKind,
+        addr: &str,
+        cfg: NetConfig,
+    ) -> Result<TcpServer>
+    where
+        E: InferBackend + Send + Sync + 'static,
+    {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding tcp listener on {addr}"))?;
         let local = listener.local_addr().context("resolving bound address")?;
@@ -360,7 +603,9 @@ impl TcpServer {
             std::thread::Builder::new()
                 .name("hccs-net-accept".into())
                 .spawn(move || {
-                    accept_main(listener, backend, tokenizer, task, cfg, stop, conns, metrics)
+                    accept_main(
+                        listener, backend, decode, tokenizer, task, cfg, stop, conns, metrics,
+                    )
                 })
                 .context("spawning accept thread")?
         };
@@ -404,6 +649,7 @@ impl Drop for TcpServer {
 fn accept_main<E: InferBackend + Send + Sync + 'static>(
     listener: TcpListener,
     backend: Arc<E>,
+    decode: Option<Arc<NativeBackend>>,
     tokenizer: Arc<Tokenizer>,
     task: TaskKind,
     cfg: NetConfig,
@@ -426,10 +672,11 @@ fn accept_main<E: InferBackend + Send + Sync + 'static>(
         }
         let slot = count % CONN_SLOTS;
         count += 1;
-        let (backend, tokenizer, metrics) = (backend.clone(), tokenizer.clone(), metrics.clone());
+        let (backend, decode, tokenizer, metrics) =
+            (backend.clone(), decode.clone(), tokenizer.clone(), metrics.clone());
         if let Ok(h) = std::thread::Builder::new()
             .name(format!("hccs-net-conn{slot}"))
-            .spawn(move || conn_main(stream, backend, tokenizer, task, cfg, metrics, slot))
+            .spawn(move || conn_main(stream, backend, decode, tokenizer, task, cfg, metrics, slot))
         {
             handlers.push(h);
         }
@@ -442,9 +689,11 @@ fn accept_main<E: InferBackend + Send + Sync + 'static>(
 /// One connection: this thread reads and frames; a paired writer
 /// thread resolves replies in submit order.  The bounded channel
 /// between them is the backpressure window.
+#[allow(clippy::too_many_arguments)]
 fn conn_main<E: InferBackend>(
     stream: TcpStream,
     backend: Arc<E>,
+    decode: Option<Arc<NativeBackend>>,
     tokenizer: Arc<Tokenizer>,
     task: TaskKind,
     cfg: NetConfig,
@@ -457,13 +706,14 @@ fn conn_main<E: InferBackend>(
         Ok(s) => s,
         Err(_) => return,
     };
-    let (tx, rx) = mpsc::sync_channel::<Pending>(cfg.max_inflight.max(1));
+    let (tx, rx) = mpsc::sync_channel::<ConnItem>(cfg.max_inflight.max(1));
 
     let writer = {
-        let metrics = metrics.clone();
+        let (metrics, decode, tokenizer) = (metrics.clone(), decode.clone(), tokenizer.clone());
+        let deadline = cfg.deadline;
         std::thread::Builder::new()
             .name("hccs-net-writer".into())
-            .spawn(move || writer_main(write_stream, rx, metrics))
+            .spawn(move || writer_main(write_stream, rx, decode, tokenizer, deadline, metrics))
             .expect("spawning connection writer thread")
     };
 
@@ -486,10 +736,22 @@ fn conn_main<E: InferBackend>(
         for req in requests.drain(..) {
             req_total.inc();
             req_conn.inc();
-            let staged = stage(backend.as_ref(), &*tokenizer, task, max_len, req, cfg.deadline);
+            let item = match req.generate {
+                Some(max_new) => {
+                    stage_generate(decode.as_ref(), &tokenizer, task, req, max_new, cfg.deadline)
+                }
+                None => ConnItem::One(stage(
+                    backend.as_ref(),
+                    &*tokenizer,
+                    task,
+                    max_len,
+                    req,
+                    cfg.deadline,
+                )),
+            };
             // Blocking send: the in-flight window is full, so reading
             // pauses until the writer drains a reply.
-            if tx.send(staged).is_err() {
+            if tx.send(item).is_err() {
                 break 'read;
             }
         }
@@ -497,10 +759,10 @@ fn conn_main<E: InferBackend>(
             // The byte stream is unrecoverable: one final error reply,
             // then close the connection.
             metrics.counter("net.frame_errors").inc();
-            let _ = tx.send(Pending::Ready(
+            let _ = tx.send(ConnItem::One(Pending::Ready(
                 0,
                 Outcome::Err { msg: format!("framing: {msg}"), shed: false },
-            ));
+            )));
             break;
         }
     }
@@ -511,25 +773,48 @@ fn conn_main<E: InferBackend>(
 
 /// Writer half of a connection: resolve each staged request (FIFO, so
 /// reply order matches submit order) and write one JSON line per
-/// reply.
-fn writer_main(stream: TcpStream, rx: mpsc::Receiver<Pending>, metrics: Arc<Registry>) {
+/// reply — or, for a stream job, one line per generated token.
+fn writer_main(
+    stream: TcpStream,
+    rx: mpsc::Receiver<ConnItem>,
+    decode: Option<Arc<NativeBackend>>,
+    tokenizer: Arc<Tokenizer>,
+    deadline: Option<Duration>,
+    metrics: Arc<Registry>,
+) {
     let replies = metrics.counter("net.replies");
     let shed = metrics.counter("net.shed");
+    let streams = metrics.counter("net.streams");
     let mut out = BufWriter::new(stream);
-    for p in rx {
-        let (id, outcome) = match p {
-            Pending::Ready(id, o) => (id, o),
-            Pending::Wait(id, reply_rx) => (id, resolve_reply(&reply_rx)),
-        };
-        if matches!(&outcome, Outcome::Err { shed: true, .. }) {
-            shed.inc();
-        }
-        replies.inc();
-        if out.write_all(encode_reply_json(id, &outcome).as_bytes()).is_err() {
-            break;
-        }
-        if out.flush().is_err() {
-            break;
+    for item in rx {
+        match item {
+            ConnItem::One(p) => {
+                let (id, outcome) = match p {
+                    Pending::Ready(id, o) => (id, o),
+                    Pending::Wait(id, reply_rx) => (id, resolve_reply(&reply_rx)),
+                };
+                if matches!(&outcome, Outcome::Err { shed: true, .. }) {
+                    shed.inc();
+                }
+                replies.inc();
+                if out.write_all(encode_reply_json(id, &outcome).as_bytes()).is_err() {
+                    break;
+                }
+                if out.flush().is_err() {
+                    break;
+                }
+            }
+            ConnItem::Stream(job) => {
+                streams.inc();
+                let backend = decode
+                    .as_deref()
+                    .expect("stream jobs are staged only when decode serving is enabled");
+                if drive_stream(&mut out, *job, backend, &tokenizer, deadline, &metrics).is_err() {
+                    // The socket is gone; dropping the remaining queue
+                    // items (and their session handles) cleans up.
+                    break;
+                }
+            }
         }
     }
 }
@@ -610,6 +895,54 @@ mod tests {
         assert_eq!(v.get("shed").and_then(Value::as_bool), Some(true));
         assert_eq!(v.get("id").and_then(Value::as_i64), Some(9));
         assert!(v.get("error").and_then(Value::as_str).unwrap().contains("shed:"));
+    }
+
+    #[test]
+    fn generate_frames_decode_with_defaults_and_caps() {
+        let r = decode_request(br#"{"id": 4, "generate": "w012 good03"}"#, 9);
+        assert_eq!(r.id, 4);
+        assert_eq!(r.generate, Some(MAX_NEW_DEFAULT));
+        assert_eq!(r.text.as_deref(), Ok("w012 good03"));
+        let r = decode_request(br#"{"generate": "p", "max_new": 3}"#, 9);
+        assert_eq!((r.id, r.generate), (9, Some(3)));
+        // Out-of-range budgets are per-request errors, not connection
+        // errors — and not silently clamped.
+        for bad in [r#"{"generate": "p", "max_new": 0}"#.to_string(), {
+            format!(r#"{{"generate": "p", "max_new": {}}}"#, MAX_NEW_CAP + 1)
+        }] {
+            let r = decode_request(bad.as_bytes(), 9);
+            assert!(r.text.is_err(), "{bad}");
+            assert!(r.generate.is_none(), "{bad}");
+        }
+        // A classification frame is untouched by the generate path.
+        let r = decode_request(br#"{"id": 7, "text": "w012"}"#, 9);
+        assert_eq!((r.id, r.generate), (7, None));
+    }
+
+    #[test]
+    fn token_frames_are_single_line_json() {
+        let r = DecodeReply {
+            session: 1,
+            token: 44,
+            step: 2,
+            done: false,
+            latency: Duration::from_micros(120),
+        };
+        let line = encode_token_json(5, &r, "w040", true);
+        assert!(line.ends_with('\n'));
+        assert_eq!(line.matches('\n').count(), 1);
+        let v = Value::parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(5));
+        assert_eq!(v.get("step").and_then(Value::as_i64), Some(2));
+        assert_eq!(v.get("token").and_then(Value::as_str), Some("w040"));
+        assert_eq!(v.get("token_id").and_then(Value::as_i64), Some(44));
+        // `done` reflects stream end (here: the max_new budget), not
+        // just the model's stop condition.
+        assert_eq!(v.get("done").and_then(Value::as_bool), Some(true));
+
+        let v = Value::parse(encode_stream_err_json(5, 3, "shed: deadline", true).trim()).unwrap();
+        assert_eq!(v.get("shed").and_then(Value::as_bool), Some(true));
+        assert_eq!(v.get("step").and_then(Value::as_i64), Some(3));
     }
 
     #[test]

@@ -109,6 +109,13 @@ pub struct FramedRequest {
     /// number for id-less protocols.
     pub id: u64,
     pub text: std::result::Result<String, String>,
+    /// `Some(max_new)` marks a **streaming generation** request
+    /// (`{"generate": "<prompt>", "max_new": n}` on the TCP wire):
+    /// `text` carries the prompt, and the reply is one frame per
+    /// generated token instead of a single classification line.  Only
+    /// the TCP tier serves these; [`stage`] fails them on other
+    /// transports.
+    pub generate: Option<usize>,
 }
 
 /// A wire protocol: raw bytes in (any chunking), requests out, and
@@ -154,7 +161,7 @@ impl LineFramer {
             return;
         }
         self.next_id += 1;
-        out.push(FramedRequest { id: self.next_id, text: Ok(line.to_string()) });
+        out.push(FramedRequest { id: self.next_id, text: Ok(line.to_string()), generate: None });
     }
 }
 
@@ -254,6 +261,13 @@ pub fn stage<E: InferBackend>(
     req: FramedRequest,
     budget: Option<Duration>,
 ) -> Pending {
+    if req.generate.is_some() {
+        // Streaming replies need a frame-per-token writer; only the TCP
+        // tier has one (`crate::net`), and it routes generation before
+        // staging.  Reaching here means the transport can't serve it.
+        let msg = "streaming generation is only served over TCP".into();
+        return Pending::Ready(req.id, Outcome::Err { msg, shed: false });
+    }
     match req.text {
         Err(msg) => Pending::Ready(req.id, Outcome::Err { msg, shed: false }),
         Ok(text) => {
@@ -308,7 +322,11 @@ pub fn serve_with_framer<E: InferBackend, R: BufRead, W: Write, F: Framer>(
         };
         if n == 0 {
             if let Err(msg) = framer.finish(&mut requests) {
-                requests.push(FramedRequest { id: 0, text: Err(format!("framing: {msg}")) });
+                requests.push(FramedRequest {
+                    id: 0,
+                    text: Err(format!("framing: {msg}")),
+                    generate: None,
+                });
             }
             for req in requests.drain(..) {
                 pending.push(stage(backend, tokenizer, task, max_len, req, deadline_budget));

@@ -1,0 +1,267 @@
+//! Integration tests for decode sessions on the sharded native
+//! serving substrate (`NativeBackend::with_decoder`): mixed
+//! decode + classification traffic through the same executors,
+//! per-shard FIFO reply integrity, session load accounting, and the
+//! load-bearing shed contract — a deadline-shed decode step fast-fails
+//! **without touching the session's K/V state**, so a retry streams
+//! exactly the tokens an unshed twin would.
+//!
+//! Every test body runs under [`with_timeout`] so a wedged executor or
+//! a starved queue fails the suite instead of hanging CI.  The file is
+//! dispatch-agnostic and runs on both `HCCS_FORCE_SCALAR` legs.
+
+use std::sync::mpsc;
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use hccs::coordinator::{is_shed_error, BatchPolicy};
+use hccs::data::{TaskKind, WorkloadGen};
+use hccs::model::{
+    DecoderScratch, EncoderScratch, ModelConfig, NativeBackend, NativeDecoder, NativeModel,
+    NativeServeConfig, SoftmaxBackend,
+};
+use hccs::server::InferBackend;
+
+/// Fail loudly instead of hanging (same pattern as tcp_serving.rs).
+fn with_timeout<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = mpsc::channel();
+    let body = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(panic) = body.join() {
+                std::panic::resume_unwind(panic);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => panic!("test timed out after {secs}s"),
+    }
+}
+
+fn tiny_cfg() -> ModelConfig {
+    let task = TaskKind::Sst2s;
+    ModelConfig {
+        layers: 1,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        seq_len: task.max_len(),
+        vocab: hccs::data::VOCAB_SIZE as usize,
+        n_classes: 2,
+    }
+}
+
+/// Calibrated once per test binary (the expensive part).
+fn native_model() -> Arc<NativeModel> {
+    static MODEL: OnceLock<Arc<NativeModel>> = OnceLock::new();
+    MODEL
+        .get_or_init(|| Arc::new(NativeModel::new(tiny_cfg(), TaskKind::Sst2s, 42).unwrap()))
+        .clone()
+}
+
+fn native_decoder() -> Arc<NativeDecoder> {
+    static DEC: OnceLock<Arc<NativeDecoder>> = OnceLock::new();
+    DEC.get_or_init(|| Arc::new(NativeDecoder::new(tiny_cfg(), TaskKind::Sst2s, 5).unwrap()))
+        .clone()
+}
+
+fn mode() -> SoftmaxBackend {
+    SoftmaxBackend::parse("i16_div").unwrap()
+}
+
+fn decode_backend(shards: usize) -> Arc<NativeBackend> {
+    Arc::new(
+        NativeBackend::with_decoder(
+            native_model(),
+            native_decoder(),
+            mode(),
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards,
+                length_bands: 2,
+                max_in_flight: None,
+            },
+        )
+        .unwrap(),
+    )
+}
+
+/// Valid-prefix prompts from real workload examples.
+fn prompts(n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut generator = WorkloadGen::new(TaskKind::Sst2s, seed);
+    (0..n)
+        .map(|_| {
+            let ex = generator.next_example();
+            ex.ids[..ex.valid_len].to_vec()
+        })
+        .collect()
+}
+
+/// Drive one open session to completion through the serving path,
+/// collecting up to `budget` greedy tokens.
+fn run_session(backend: &NativeBackend, prompt: Vec<i32>, budget: usize) -> Vec<i32> {
+    let (handle, first) = backend.open_session(prompt, None).unwrap();
+    let r = first.recv().unwrap().unwrap();
+    let mut got = vec![r.token];
+    let mut done = r.done;
+    while !done && got.len() < budget {
+        let r = backend.step_session(&handle, None).unwrap().recv().unwrap().unwrap();
+        got.push(r.token);
+        done = r.done;
+    }
+    got
+}
+
+/// Mixed traffic: concurrent decode sessions and classification
+/// requests share the same shards, and every client sees exactly the
+/// replies the single-threaded reference paths produce — decode
+/// sessions stream the direct greedy tokens, classifications return
+/// the direct forward predictions, and nobody starves (the watchdog is
+/// the starvation bound).
+#[test]
+fn mixed_decode_and_classification_traffic_serves_both_correctly() {
+    with_timeout(120, || {
+        const BUDGET: usize = 5;
+        let backend = decode_backend(2);
+        let dec = native_decoder();
+        let model = native_model();
+
+        // Single-threaded references, computed before any load exists.
+        let mut generator = WorkloadGen::new(TaskKind::Sst2s, 11);
+        let examples: Vec<_> = (0..12).map(|_| generator.next_example()).collect();
+        let mut enc_scratch = EncoderScratch::default();
+        let expected_cls: Vec<i32> = examples
+            .iter()
+            .map(|ex| {
+                model.forward(&ex.ids, &ex.segments, mode(), &mut enc_scratch).unwrap().predicted
+            })
+            .collect();
+        let session_prompts = prompts(4, 23);
+        let mut dec_scratch = DecoderScratch::default();
+        let expected_tokens: Vec<Vec<i32>> = session_prompts
+            .iter()
+            .map(|p| dec.generate(p, BUDGET, mode(), &mut dec_scratch).unwrap().tokens)
+            .collect();
+
+        // Concurrent clients: one thread per decode session, one
+        // classification thread hammering all examples twice.
+        let mut clients = Vec::new();
+        for (prompt, want) in session_prompts.iter().zip(&expected_tokens) {
+            let (backend, prompt, want) = (backend.clone(), prompt.clone(), want.clone());
+            clients.push(std::thread::spawn(move || {
+                let got = run_session(&backend, prompt, BUDGET);
+                assert_eq!(got, want, "served session must stream the direct greedy decode");
+            }));
+        }
+        {
+            let (backend, examples, expected_cls) =
+                (backend.clone(), examples.clone(), expected_cls.clone());
+            clients.push(std::thread::spawn(move || {
+                for round in 0..2 {
+                    for (ex, want) in examples.iter().zip(&expected_cls) {
+                        let rx = backend
+                            .submit_request(ex.ids.clone(), ex.segments.clone())
+                            .unwrap();
+                        let reply = rx.recv().unwrap().unwrap();
+                        assert_eq!(
+                            reply.predicted, *want,
+                            "round {round}: classification under decode load must match \
+                             the direct forward"
+                        );
+                    }
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        backend.shutdown();
+    });
+}
+
+/// The no-poisoning contract: a decode step whose deadline expired in
+/// the queue is shed *before* the executor touches session state, so
+/// the session's `next` cursor and K/V ring are exactly as if the step
+/// was never requested — the retry produces the same tokens as an
+/// unshed twin session on the same prompt.
+#[test]
+fn shed_decode_step_fast_fails_without_poisoning_the_session() {
+    with_timeout(120, || {
+        const BUDGET: usize = 4;
+        let backend = decode_backend(1);
+        let prompt = prompts(1, 31).remove(0);
+
+        // Twin session, never shed: the reference token stream.
+        let want = run_session(&backend, prompt.clone(), BUDGET);
+
+        let (handle, first) = backend.open_session(prompt, None).unwrap();
+        let r = first.recv().unwrap().unwrap();
+        let mut got = vec![r.token];
+        let mut done = r.done;
+
+        // A step whose deadline expires while it queues must fast-fail
+        // with a shed reply.  The budget is far below the 1ms batch
+        // wait, so the op is alive at admission and dead at the
+        // executor's pre-batch sweep — the sweep runs *before* any
+        // session state is touched (that ordering is the contract under
+        // test).  On a slow machine admission itself may catch it;
+        // both paths are a shed, neither consumes the step.
+        let near = Instant::now() + Duration::from_micros(200);
+        let err = match backend.step_session(&handle, Some(near)) {
+            Err(e) => format!("{e:#}"),
+            Ok(rx) => rx.recv().unwrap().expect_err("expired step must shed"),
+        };
+        assert!(is_shed_error(&err), "expected a shed reply, got: {err}");
+
+        // ...and the session is not poisoned: the retry (and every
+        // later step) streams exactly the twin's remaining tokens.
+        while !done && got.len() < BUDGET {
+            let r = backend.step_session(&handle, None).unwrap().recv().unwrap().unwrap();
+            got.push(r.token);
+            done = r.done;
+        }
+        assert_eq!(
+            got, want,
+            "a shed step must leave the K/V ring and token cursor untouched"
+        );
+        backend.shutdown();
+    });
+}
+
+/// Open sessions pin a router ticket, so a shard with long-lived
+/// sessions reports them as outstanding load until the handles drop
+/// (the RAII close path the TCP tier relies on for dead connections).
+#[test]
+fn open_sessions_count_as_shard_load_until_their_handles_drop() {
+    with_timeout(120, || {
+        let backend = decode_backend(2);
+        let outstanding =
+            |b: &NativeBackend| (0..b.shards()).map(|s| b.outstanding(s)).sum::<u64>();
+
+        let mut sessions = Vec::new();
+        for prompt in prompts(3, 47) {
+            let (handle, first) = backend.open_session(prompt, None).unwrap();
+            first.recv().unwrap().unwrap();
+            sessions.push(handle);
+        }
+        assert_eq!(
+            outstanding(&backend),
+            3,
+            "each open session must hold one routed-load ticket"
+        );
+
+        drop(sessions);
+        // Close ops are processed asynchronously by the executors.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while outstanding(&backend) != 0 {
+            assert!(
+                Instant::now() < deadline,
+                "session tickets leaked: {} still outstanding",
+                outstanding(&backend)
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        backend.shutdown();
+    });
+}

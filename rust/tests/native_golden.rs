@@ -16,7 +16,7 @@
 
 use hccs::hccs::kernel::parse_mode;
 use hccs::hccs::{
-    hccs_batch, hccs_batch_masked, hccs_row, HccsParams, OutputPath, Reciprocal,
+    hccs_batch, hccs_batch_masked, hccs_row, hccs_rows_masked, HccsParams, OutputPath, Reciprocal,
 };
 use hccs::json::Value;
 
@@ -127,7 +127,7 @@ fn load_masked_cases() -> Vec<Value> {
 #[test]
 fn masked_kernel_matches_committed_vectors_and_oracle() {
     let cases = load_masked_cases();
-    assert!(cases.len() >= 3, "only {} masked golden cases", cases.len());
+    assert!(cases.len() >= 7, "only {} masked golden cases", cases.len());
     let mut checked = 0usize;
     for case in cases {
         let n = case.req("n").as_i64().unwrap() as usize;
@@ -164,10 +164,46 @@ fn masked_kernel_matches_committed_vectors_and_oracle() {
             let prefix: Vec<i64> =
                 hccs_row(&x[..len], &p, op, rc).iter().map(|&v| i64::from(v)).collect();
             assert_eq!(prefix[..], want[..len], "prefix row kernel n={n} len={len} {mode}");
+            // 4. The per-row grouped entry point (the decode step path)
+            // is bit-exact too.
+            let rows: Vec<i64> = hccs_rows_masked(&x, n, &[len], &[p], op, rc)
+                .iter()
+                .map(|&v| i64::from(v))
+                .collect();
+            assert_eq!(rows, want, "hccs_rows_masked n={n} len={len} {mode}");
             checked += 1;
         }
     }
-    assert!(checked >= 12, "only {checked} masked golden vectors checked");
+    assert!(checked >= 28, "only {checked} masked golden vectors checked");
+}
+
+/// Satellite of the decode work: the single-key (`len = 1`, a causal
+/// first step) and two-key (`len = 2`) edges must be pinned by
+/// committed vectors in every mode — a 1-key row normalizes the lone
+/// score `B` by `Z = B` itself, the shortest path through every
+/// reciprocal realization.
+#[test]
+fn short_row_masked_cases_are_present() {
+    let cases = load_masked_cases();
+    for want_len in [1usize, 2] {
+        let found = cases
+            .iter()
+            .filter(|c| c.req("len").as_i64() == Some(want_len as i64))
+            .count();
+        assert!(found >= 2, "need >= 2 masked golden cases at len={want_len}, have {found}");
+    }
+    // Hand-derived: len=2 prefix [90, 80] under θ=(300,4,64) → scores
+    // 300/260, Z=560, ρ=⌊32767/560⌋=58 → p̂ = 17400 / 15080.
+    let found = cases.iter().any(|case| {
+        let x: Vec<i64> = case.req("x").flat_f64().iter().map(|&v| v as i64).collect();
+        if case.req("len").as_i64() != Some(2) || x[0] != 90 || x[1] != 80 {
+            return false;
+        }
+        let out: Vec<i64> =
+            case.req("out").req("i16_div").flat_f64().iter().map(|&v| v as i64).collect();
+        out[0] == 17400 && out[1] == 15080 && out[2..].iter().all(|&v| v == 0)
+    });
+    assert!(found, "hand-checked len=2 masked example missing from golden_vectors.json");
 }
 
 /// The masked file must contain the hand-derived masked worked example

@@ -16,7 +16,10 @@ use std::time::Duration;
 use hccs::coordinator::BatchPolicy;
 use hccs::data::TaskKind;
 use hccs::json::Value;
-use hccs::model::{ModelConfig, NativeBackend, NativeModel, NativeServeConfig, SoftmaxBackend};
+use hccs::model::{
+    DecoderScratch, ModelConfig, NativeBackend, NativeDecoder, NativeModel, NativeServeConfig,
+    SoftmaxBackend,
+};
 use hccs::net::{NetConfig, TcpServer};
 use hccs::server;
 use hccs::tokenizer::Tokenizer;
@@ -78,6 +81,54 @@ fn native_backend() -> Arc<NativeBackend> {
 
 fn tokenizer() -> Arc<Tokenizer> {
     Arc::new(Tokenizer::from_tokens(hccs::data::build_vocab()).unwrap())
+}
+
+/// One tiny calibrated decoder shared by the streaming tests (same
+/// shapes as [`native_model`]; calibration is the expensive part).
+fn native_decoder() -> Arc<NativeDecoder> {
+    static DEC: OnceLock<Arc<NativeDecoder>> = OnceLock::new();
+    DEC.get_or_init(|| {
+        let task = TaskKind::Sst2s;
+        let cfg = ModelConfig {
+            layers: 1,
+            heads: 2,
+            d_model: 32,
+            d_ff: 64,
+            seq_len: task.max_len(),
+            vocab: hccs::data::VOCAB_SIZE as usize,
+            n_classes: 2,
+        };
+        Arc::new(NativeDecoder::new(cfg, task, 5).unwrap())
+    })
+    .clone()
+}
+
+/// A streaming-enabled tier: same classification substrate as
+/// [`start_server`], plus decode sessions for `{"generate": ...}`.
+fn start_streaming_server(cfg: NetConfig) -> (TcpServer, Arc<NativeBackend>) {
+    let backend = Arc::new(
+        NativeBackend::with_decoder(
+            native_model(),
+            native_decoder(),
+            SoftmaxBackend::parse("i16_div").unwrap(),
+            NativeServeConfig {
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+                shards: 2,
+                length_bands: 1,
+                max_in_flight: None,
+            },
+        )
+        .unwrap(),
+    );
+    let srv = TcpServer::start_streaming(
+        backend.clone(),
+        tokenizer(),
+        TaskKind::Sst2s,
+        "127.0.0.1:0",
+        cfg,
+    )
+    .unwrap();
+    (srv, backend)
 }
 
 fn start_server(cfg: NetConfig) -> (TcpServer, Arc<NativeBackend>) {
@@ -284,6 +335,189 @@ fn zero_deadline_sheds_every_request_with_shed_replies() {
 
         assert_eq!(srv.metrics.counter("net.shed").get(), n as u64);
         assert_eq!(srv.metrics.counter("net.replies").get(), n as u64);
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+#[test]
+fn streaming_generate_matches_direct_decoder_and_stays_fifo() {
+    with_timeout(120, || {
+        let (srv, backend) = start_streaming_server(NetConfig::default());
+        let addr = srv.local_addr();
+        let mode = SoftmaxBackend::parse("i16_div").unwrap();
+
+        // Reference tokens straight from the decoder on the same
+        // prompt the server will tokenize from the wire text.
+        let text = "w012 good03 w044";
+        let tok = tokenizer();
+        let enc =
+            server::encode_request(&tok, TaskKind::Sst2s, text, TaskKind::Sst2s.max_len())
+                .unwrap();
+        let prompt = enc.ids[..enc.valid_len].to_vec();
+        let mut scratch = DecoderScratch::default();
+        let want = native_decoder().generate(&prompt, 6, mode, &mut scratch).unwrap();
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(stream.try_clone().unwrap());
+        // The classification frame queues FIFO *behind* the stream: its
+        // reply must arrive only after the stream's final frame.
+        stream
+            .write_all(
+                format!(
+                    "{{\"id\": 9, \"generate\": \"{text}\", \"max_new\": 6}}\n\
+                     {{\"id\": 10, \"text\": \"{text}\"}}\n"
+                )
+                .as_bytes(),
+            )
+            .unwrap();
+
+        let mut got = Vec::new();
+        loop {
+            let mut line = String::new();
+            assert!(replies.read_line(&mut line).unwrap() > 0, "token frame");
+            let v = Value::parse(line.trim()).unwrap();
+            assert_eq!(v.get("id").and_then(Value::as_i64), Some(9), "{line}");
+            assert!(v.get("error").is_none(), "{line}");
+            let id = v.get("token_id").and_then(Value::as_i64).unwrap() as i32;
+            got.push(id);
+            assert_eq!(
+                v.get("step").and_then(Value::as_i64),
+                Some(got.len() as i64),
+                "step counter must track the stream: {line}"
+            );
+            assert_eq!(
+                v.get("token").and_then(Value::as_str),
+                Some(tok.token(id)),
+                "token text must match the vocab word for token_id: {line}"
+            );
+            if v.get("done").and_then(Value::as_bool) == Some(true) {
+                break;
+            }
+        }
+        assert_eq!(
+            got, want.tokens,
+            "TCP stream must carry exactly the direct greedy decode"
+        );
+
+        let mut line = String::new();
+        assert!(replies.read_line(&mut line).unwrap() > 0, "classification reply");
+        let v = Value::parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(10));
+        assert!(v.get("result").is_some(), "{line}");
+
+        assert_eq!(srv.metrics.counter("net.streams").get(), 1);
+        assert_eq!(srv.metrics.counter("net.stream_tokens").get(), got.len() as u64);
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+/// Satellite regression test: `net.active` is RAII-guarded, so a
+/// client that vanishes mid-stream (token frames still being written)
+/// must still return the gauge to zero once its threads unwind.
+#[test]
+fn killing_a_connection_mid_stream_returns_the_active_gauge_to_zero() {
+    with_timeout(120, || {
+        let (srv, backend) = start_streaming_server(NetConfig::default());
+        let addr = srv.local_addr();
+        let gauge = srv.metrics.gauge("net.active");
+
+        // Conn A opens a long stream, reads exactly one token frame,
+        // then vanishes without reading the rest.
+        let mut a = TcpStream::connect(addr).unwrap();
+        let mut a_replies = BufReader::new(a.try_clone().unwrap());
+        a.write_all(b"{\"id\": 1, \"generate\": \"w012 good03 w044\", \"max_new\": 64}\n")
+            .unwrap();
+        let mut line = String::new();
+        assert!(a_replies.read_line(&mut line).unwrap() > 0, "first token frame");
+        assert!(line.contains("\"token\""), "{line}");
+        assert!(gauge.get() >= 1, "live connection must show in net.active");
+        drop(a_replies);
+        drop(a);
+
+        // Conn B proves the tier still serves while A unwinds.
+        let mut b = TcpStream::connect(addr).unwrap();
+        let mut b_replies = BufReader::new(b.try_clone().unwrap());
+        b.write_all(b"{\"id\": 2, \"text\": \"w012 good03\"}\n").unwrap();
+        line.clear();
+        assert!(b_replies.read_line(&mut line).unwrap() > 0);
+        assert!(line.contains("\"result\""), "{line}");
+        drop(b_replies);
+        drop(b);
+
+        // Both connections are gone; the RAII guards must bring the
+        // gauge back to zero without a graceful server shutdown.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while gauge.get() != 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "net.active stuck at {} after both clients disconnected",
+                gauge.get()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(srv.metrics.counter("net.connections").get(), 2);
+        assert_eq!(srv.metrics.counter("net.streams").get(), 1);
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+#[test]
+fn generate_frame_on_a_classify_only_server_is_a_per_request_error() {
+    with_timeout(120, || {
+        let (srv, backend) = start_server(NetConfig::default());
+        let addr = srv.local_addr();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(s.try_clone().unwrap());
+        s.write_all(b"{\"id\": 5, \"generate\": \"w012 good03\"}\n").unwrap();
+        let mut line = String::new();
+        assert!(replies.read_line(&mut line).unwrap() > 0);
+        let v = Value::parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(5));
+        let err = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.contains("--decode"), "{err}");
+        assert_eq!(v.get("shed").and_then(Value::as_bool), Some(false));
+
+        // Per-request error: the connection lives on.
+        s.write_all(b"{\"id\": 6, \"text\": \"w012 good03\"}\n").unwrap();
+        line.clear();
+        assert!(replies.read_line(&mut line).unwrap() > 0);
+        assert!(line.contains("\"result\""), "{line}");
+        srv.shutdown();
+        backend.shutdown();
+    });
+}
+
+#[test]
+fn zero_deadline_sheds_the_stream_with_a_shed_error_frame() {
+    with_timeout(120, || {
+        let (srv, backend) = start_streaming_server(NetConfig {
+            deadline: Some(Duration::ZERO),
+            ..NetConfig::default()
+        });
+        let addr = srv.local_addr();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut replies = BufReader::new(s.try_clone().unwrap());
+        s.write_all(b"{\"id\": 3, \"generate\": \"w012 good03\"}\n").unwrap();
+        let mut line = String::new();
+        assert!(replies.read_line(&mut line).unwrap() > 0);
+        let v = Value::parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").and_then(Value::as_i64), Some(3));
+        assert_eq!(v.get("shed").and_then(Value::as_bool), Some(true), "{line}");
+        // The shed can land at admission (one plain error reply, no
+        // stream opened) or on the queued prefill op (a stream error
+        // frame carrying `step: 0`); both are a single shed error.
+        if let Some(step) = v.get("step").and_then(Value::as_i64) {
+            assert_eq!(step, 0, "shed before any token streamed: {line}");
+        }
+        let err = v.get("error").and_then(Value::as_str).unwrap();
+        assert!(err.trim_start().starts_with("shed:"), "{err}");
+
+        assert!(srv.metrics.counter("net.shed").get() >= 1);
         srv.shutdown();
         backend.shutdown();
     });

@@ -18,7 +18,8 @@ zip files.  This tool closes the loop:
 
 Metric extraction is schema-agnostic: every numeric field whose key
 contains ``per_s`` (``rows_per_s``, ``examples_per_s``,
-``macs_per_second``, ...) is treated as a throughput sample, addressed
+``tokens_per_s`` from the decode bench, ``macs_per_second``, ...) is
+treated as a throughput sample, addressed
 by its JSON path with array elements labeled by their identifying
 string field (``name`` / ``backend`` / ``mode`` / ``shards`` / ...).
 A small allowlist of non-throughput trajectory metrics rides along:
@@ -235,8 +236,26 @@ def build_report(current, baseline, threshold):
         prev_metrics = baseline.get(fname, {})
         for path, value in sorted(current[fname].items()):
             prev = prev_metrics.get(path)
-            if prev is None or prev <= 0:
+            if prev is None:
+                # Metric absent from the baseline: genuinely new.
                 delta = "(new)"
+            elif prev <= 0:
+                # Zero (or degenerate negative) baseline: the percent
+                # delta is undefined — render the direction instead of
+                # dividing by zero, and keep it distinct from "(new)".
+                # A lower-is-better metric leaving zero (e.g.
+                # shed_fraction 0.0 -> 0.2) is a real regression even
+                # though no ratio exists, so it still warns.
+                if value > prev:
+                    delta = "∞ (from 0)"
+                    if metric_key(path) in LOWER_IS_BETTER_KEYS:
+                        delta += " ⚠️"
+                        warnings.append(
+                            f"{bench}: {path} rose from a zero baseline "
+                            f"({fmt_metric(path, prev)} -> {fmt_metric(path, value)})"
+                        )
+                else:
+                    delta = "0% (both 0)" if value == prev else "-∞ (to below 0)"
             else:
                 pct = (value - prev) / prev * 100.0
                 delta = f"{pct:+.1f}%"
@@ -252,9 +271,12 @@ def build_report(current, baseline, threshold):
                         f"{bench}: {path} regressed {abs(pct):.1f}% "
                         f"({fmt_metric(path, prev)} -> {fmt_metric(path, value)})"
                     )
+            # `prev is None` (no baseline) renders as an em-dash; a real
+            # recorded 0.0 renders as 0 so it is distinguishable.
+            prev_cell = "—" if prev is None else fmt_metric(path, prev)
             lines.append(
                 f"| {bench} | `{path}` | "
-                f"{fmt_metric(path, prev) if prev else '—'} | {fmt_metric(path, value)} | {delta} |"
+                f"{prev_cell} | {fmt_metric(path, value)} | {delta} |"
             )
     if warnings:
         lines.append("")

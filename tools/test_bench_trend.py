@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Offline smoke test for ``bench_trend.py`` (stdlib only, no network).
+
+Run directly (``python3 tools/test_bench_trend.py``) or through
+``python3 -m unittest``; CI's bench-smoke job runs it before the real
+trend step.  Covers the metric walker, the delta/regression report, and
+— the bug this file pins — **zero baselines**: a previous-run value of
+``0.0`` (e.g. ``shed_fraction = 0.0`` under light load) must not divide
+by zero, must render distinctly from a missing baseline, and must still
+warn when a lower-is-better metric leaves zero.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_trend  # noqa: E402
+
+
+def report_text(current, baseline, threshold=0.25):
+    lines, warnings = bench_trend.build_report(current, baseline, threshold)
+    return "\n".join(lines), warnings
+
+
+class ExtractMetrics(unittest.TestCase):
+    def test_walk_finds_per_s_and_extras_with_labels(self):
+        doc = {
+            "bench": "decode",
+            "generate_tokens_per_s": 120.5,
+            "median_ns": 830,  # not a tracked metric
+            "cases": [
+                {"backend": "i16_div", "tokens_per_s": 9000.0},
+                {"backend": "i8_clb", "tokens_per_s": 8500.0},
+            ],
+            "sweep": [{"offered_x": 2.0, "shed_fraction": 0.25}],
+        }
+        m = bench_trend.extract_metrics(doc)
+        self.assertEqual(m["generate_tokens_per_s"], 120.5)
+        self.assertEqual(m["cases[backend=i16_div].tokens_per_s"], 9000.0)
+        self.assertEqual(m["sweep[offered_x=2.0].shed_fraction"], 0.25)
+        self.assertNotIn("median_ns", m)
+        self.assertTrue(all("median" not in k for k in m))
+
+    def test_load_bench_dir_skips_non_bench_and_bad_json(self):
+        with tempfile.TemporaryDirectory() as d:
+            with open(os.path.join(d, "BENCH_ok.json"), "w") as fh:
+                json.dump({"rows_per_s": 5.0}, fh)
+            with open(os.path.join(d, "BENCH_bad.json"), "w") as fh:
+                fh.write("{not json")
+            with open(os.path.join(d, "other.json"), "w") as fh:
+                json.dump({"rows_per_s": 1.0}, fh)
+            benches = bench_trend.load_bench_dir(d)
+            self.assertEqual(list(benches), ["BENCH_ok.json"])
+            self.assertEqual(benches["BENCH_ok.json"], {"rows_per_s": 5.0})
+
+
+class Deltas(unittest.TestCase):
+    def test_improvement_and_regression(self):
+        cur = {"BENCH_a.json": {"rows_per_s": 50.0, "cases[fast].x_per_s": 200.0}}
+        base = {"BENCH_a.json": {"rows_per_s": 100.0, "cases[fast].x_per_s": 100.0}}
+        text, warnings = report_text(cur, base)
+        self.assertIn("-50.0% ⚠️", text)
+        self.assertIn("+100.0%", text)
+        self.assertEqual(len(warnings), 1)
+        self.assertIn("rows_per_s regressed 50.0%", warnings[0])
+
+    def test_lower_is_better_warns_on_increase(self):
+        cur = {"BENCH_a.json": {"sweep[x].shed_fraction": 0.40}}
+        base = {"BENCH_a.json": {"sweep[x].shed_fraction": 0.10}}
+        _, warnings = report_text(cur, base)
+        self.assertEqual(len(warnings), 1)
+        cur = {"BENCH_a.json": {"sweep[x].shed_fraction": 0.05}}
+        _, warnings = report_text(cur, base)
+        self.assertEqual(warnings, [])
+
+    def test_missing_baseline_metric_is_new(self):
+        cur = {"BENCH_a.json": {"tokens_per_s": 10.0}}
+        text, warnings = report_text(cur, {"BENCH_a.json": {}})
+        self.assertIn("(new)", text)
+        self.assertIn("| — |", text)
+        self.assertEqual(warnings, [])
+
+    def test_no_baseline_at_all(self):
+        cur = {"BENCH_a.json": {"tokens_per_s": 10.0}}
+        text, warnings = report_text(cur, None)
+        self.assertIn("No baseline available", text)
+        self.assertIn("(new)", text)
+        self.assertEqual(warnings, [])
+
+
+class ZeroBaseline(unittest.TestCase):
+    """The regression this file exists for: prev == 0.0 must not be
+    treated as prev == missing, and must never divide by zero."""
+
+    def test_zero_baseline_throughput_renders_infinity_not_new(self):
+        cur = {"BENCH_a.json": {"tokens_per_s": 42.0}}
+        base = {"BENCH_a.json": {"tokens_per_s": 0.0}}
+        text, warnings = report_text(cur, base)
+        self.assertIn("∞ (from 0)", text)
+        self.assertNotIn("(new)", text)
+        # The baseline cell shows the recorded zero, not the em-dash.
+        self.assertIn("| 0.0/s |", text)
+        self.assertNotIn("| — |", text)
+        self.assertEqual(warnings, [])
+
+    def test_zero_baseline_lower_is_better_still_warns(self):
+        cur = {"BENCH_a.json": {"sweep[x=2.0].shed_fraction": 0.20}}
+        base = {"BENCH_a.json": {"sweep[x=2.0].shed_fraction": 0.0}}
+        text, warnings = report_text(cur, base)
+        self.assertIn("∞ (from 0) ⚠️", text)
+        self.assertEqual(len(warnings), 1)
+        self.assertIn("rose from a zero baseline", warnings[0])
+
+    def test_zero_to_zero_is_flat(self):
+        cur = {"BENCH_a.json": {"sweep[x=2.0].shed_fraction": 0.0}}
+        base = {"BENCH_a.json": {"sweep[x=2.0].shed_fraction": 0.0}}
+        text, warnings = report_text(cur, base)
+        self.assertIn("0% (both 0)", text)
+        self.assertEqual(warnings, [])
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
