@@ -3,7 +3,7 @@
 //! softmax backend, plus the batched-session sweep and the causal
 //! prefill rate.
 //!
-//! Three measurements feed the trajectory:
+//! Four measurements feed the trajectory:
 //!
 //! * **batch-1 steady-state decode** — one session, one decoder step
 //!   per iteration against its K/V ring; when the ring fills the cache
@@ -16,6 +16,9 @@
 //!   projections stack across sessions into one GEMM dispatch per
 //!   layer, so total tokens/s should rise with B (CI gates B=8 against
 //!   the B=1 baseline).
+//! * **fused-vs-unfused epilogue leg** — the 4-session `step_batch`
+//!   loop with GEMM epilogue fusion forced on and off
+//!   (`fused_speedup`, tracked by the trajectory).
 //! * **causal prefill + end-to-end generate** — `prefill_batch` rows/s
 //!   over a batch of real workload prompts, and `generate` tokens/s
 //!   (prefill + greedy cached-K/V steps + stop scan) on a pinned
@@ -30,6 +33,7 @@
 use hccs::benchkit::{bench, sink, write_json};
 use hccs::data::{TaskKind, WorkloadGen};
 use hccs::json::Value;
+use hccs::linalg::scoped_fused;
 use hccs::model::decoder::greedy_token;
 use hccs::model::{DecoderScratch, KvCache, ModelConfig, NativeDecoder, SoftmaxBackend};
 use hccs::report::Table;
@@ -153,6 +157,43 @@ fn main() {
     }
     println!("{}", sweep_table.render());
 
+    // ---- fused-vs-unfused epilogue dataflow (i16_div, 4 sessions) ----
+    // The decode hot loop's projections run through the fused GEMM
+    // epilogue by default; force it off to measure the standalone-sweep
+    // dataflow it replaced (bit-exact per the proptest pins).
+    const FUSED_SESSIONS: usize = 4;
+    let mut fused_tps = 0.0f64;
+    let mut unfused_tps = 0.0f64;
+    for (label, on) in [("fused", true), ("unfused", false)] {
+        let _guard = scoped_fused(on);
+        let mut scratch = DecoderScratch::default();
+        let mut caches: Vec<KvCache> = (0..FUSED_SESSIONS).map(|_| dec.new_cache()).collect();
+        let mut tokens = Vec::with_capacity(FUSED_SESSIONS);
+        refill(&dec, &prompts, mode, &mut caches, &mut tokens, &mut scratch);
+        let r = bench(&format!("step_batch {label} b={FUSED_SESSIONS}"), || {
+            if caches.iter().any(|c| c.remaining() == 0) {
+                refill(&dec, &prompts, mode, &mut caches, &mut tokens, &mut scratch);
+            }
+            let out =
+                dec.step_batch(&tokens, mode, &mut caches, &mut scratch).expect("step_batch");
+            for (t, logits) in tokens.iter_mut().zip(&out) {
+                *t = greedy_token(logits);
+            }
+            sink(tokens.len());
+        });
+        let tps = r.per_second(FUSED_SESSIONS as f64);
+        if on {
+            fused_tps = tps;
+        } else {
+            unfused_tps = tps;
+        }
+    }
+    let fused_speedup = fused_tps / unfused_tps.max(1e-9);
+    println!(
+        "fused epilogues: {fused_tps:.1} vs {unfused_tps:.1} tokens/s unfused \
+         ({fused_speedup:.2}x measured)"
+    );
+
     // ---- causal prefill + end-to-end generate ------------------------
     let mut scratch = DecoderScratch::default();
     let mut ids = Vec::new();
@@ -197,6 +238,8 @@ fn main() {
     doc.insert("prompt_len".to_string(), Value::from(prompts[0].len() as i64));
     doc.insert("cases".to_string(), Value::Arr(cases));
     doc.insert("batch_sweep".to_string(), Value::Arr(sweep));
+    doc.insert("fused_speedup".to_string(), Value::from(fused_speedup));
+    doc.insert("unfused_tokens_per_s".to_string(), Value::from(unfused_tps));
     doc.insert("prefill_rows_per_s".to_string(), Value::from(prefill_rows_per_s));
     doc.insert("generate_tokens_per_s".to_string(), Value::from(generate_tokens_per_s));
     doc.insert("generate_tokens".to_string(), Value::from(gen_tokens as i64));

@@ -11,7 +11,10 @@
 //! one-example baseline, then a **length-distribution sweep**:
 //! examples/s at avg_len/max_len ∈ {0.25, 0.5, 0.75, 1.0} (synthetic
 //! examples padded to the full task width), showing the valid-length
-//! masked path's speedup tracking the density ratio.  Ends with a
+//! masked path's speedup tracking the density ratio, and a
+//! **fused-vs-unfused epilogue leg**: the same batch-8 workload with
+//! GEMM epilogue fusion forced on and off (`fused_speedup`, gated in
+//! CI, next to the modeled `bytes_moved_ratio`).  Ends with a
 //! machine-readable JSON document (see EXPERIMENTS.md §encoder_e2e for
 //! the schema, including the `batch_sweep` and `length_sweep` arrays
 //! and the whole-encoder `roofline_pct` / `host_gemm_macs_per_s`
@@ -19,12 +22,14 @@
 //! When `HCCS_BENCH_JSON` is set the document is also written to
 //! `BENCH_encoder_e2e.json`; budgets honor `HCCS_BENCH_*_MS`.
 
+use hccs::aie_sim::bytes::bytes_moved_ratio;
 use hccs::aie_sim::gemm::{encoder_gemm_cycles, encoder_gemms, encoder_macro_tiles};
 use hccs::aie_sim::trace::EncoderTrace;
 use hccs::aie_sim::{Device, DeviceKind};
 use hccs::benchkit::{bench, sink, write_json};
 use hccs::data::{TaskKind, WorkloadGen};
 use hccs::json::Value;
+use hccs::linalg::scoped_fused;
 use hccs::model::{eval_native, EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
 use hccs::report::Table;
 
@@ -139,6 +144,45 @@ fn main() {
     }
     println!("{}", sweep_table.render());
 
+    // Fused-vs-unfused epilogue dataflow: the same batch-8 workload
+    // with the GEMM epilogue fusion forced on and off (the unfused leg
+    // is the standalone requant/residual/LayerNorm sweep dataflow —
+    // bit-exact by the differential/proptest pins, so this measures
+    // pure memory traffic).  `bytes_moved_ratio` is the aie_sim model
+    // of the same gap.
+    const FUSED_BATCH: usize = 8;
+    let mut fused_eps = 0.0f64;
+    let mut unfused_eps = 0.0f64;
+    {
+        let mut ids = Vec::with_capacity(FUSED_BATCH * model.cfg.seq_len);
+        let mut segs = Vec::with_capacity(FUSED_BATCH * model.cfg.seq_len);
+        for ex in examples.iter().cycle().take(FUSED_BATCH) {
+            ids.extend_from_slice(&ex.ids);
+            segs.extend_from_slice(&ex.segments);
+        }
+        for (label, on) in [("fused", true), ("unfused", false)] {
+            let _guard = scoped_fused(on);
+            let r = bench(&format!("epilogue {label} b={FUSED_BATCH}"), || {
+                let inferences = model
+                    .forward_batch(&ids, &segs, sweep_backend, &mut scratch)
+                    .expect("forward_batch");
+                sink(inferences.len());
+            });
+            let eps = r.per_second(FUSED_BATCH as f64);
+            if on {
+                fused_eps = eps;
+            } else {
+                unfused_eps = eps;
+            }
+        }
+    }
+    let fused_speedup = fused_eps / unfused_eps.max(1e-9);
+    let modeled_bytes_ratio = bytes_moved_ratio(&cfg, cfg.seq_len);
+    println!(
+        "fused epilogues: {fused_eps:.1} vs {unfused_eps:.1} examples/s unfused \
+         ({fused_speedup:.2}x measured; modeled bytes-moved ratio {modeled_bytes_ratio:.2}x)"
+    );
+
     // Length-distribution sweep: synthetic examples at a controlled
     // valid length, padded to the full task width and run through
     // forward_batch at a fixed batch size — so the measured speedup is
@@ -243,6 +287,9 @@ fn main() {
         Value::from(modeled_gemm_inf_per_s),
     );
     doc.insert("roofline_pct".to_string(), Value::from(roofline_pct));
+    doc.insert("fused_speedup".to_string(), Value::from(fused_speedup));
+    doc.insert("unfused_examples_per_s".to_string(), Value::from(unfused_eps));
+    doc.insert("bytes_moved_ratio".to_string(), Value::from(modeled_bytes_ratio));
     doc.insert("cases".to_string(), Value::Arr(cases));
     doc.insert("batch_sweep".to_string(), Value::Arr(sweep));
     doc.insert("length_sweep".to_string(), Value::Arr(len_sweep));

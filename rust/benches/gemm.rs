@@ -2,7 +2,10 @@
 //! [`PackedGemm`] vs the scalar reference oracle on the encoder's real
 //! shapes, plus a batch-axis row sweep showing how stacking activation
 //! rows (what `NativeModel::forward_batch` does) amortizes the packed
-//! panel streaming.
+//! panel streaming, plus a **fused-epilogue sweep** on the bert-small
+//! shapes (`gemm_fused_into` vs the standalone requant/residual/LN
+//! sweeps it replaced — `fused_speedup` is gated ≥ 1.1x by CI
+//! bench-smoke, warn < 1.25x).
 //!
 //! With the SIMD dispatch layer, every case additionally times the
 //! packed kernel on **both** dispatch paths (AVX2 vs forced-scalar,
@@ -24,7 +27,7 @@ use hccs::aie_sim::gemm::{mac_utilization, GemmShape};
 use hccs::aie_sim::{roofline, Device, DeviceKind};
 use hccs::benchkit::{bench, sink, write_json};
 use hccs::json::Value;
-use hccs::linalg::{matmul_i8_ref, PackedGemm};
+use hccs::linalg::{layernorm_rows, matmul_i8_ref, requant, Epilogue, PackedGemm};
 use hccs::report::Table;
 use hccs::rng::Xoshiro256;
 use hccs::simd::{self, SimdPath};
@@ -161,6 +164,98 @@ fn main() {
     }
     println!("{}", sweep_table.render());
 
+    // Fused-epilogue sweep on the bert-small encoder shapes: the fused
+    // kernel applies requant → residual add → LayerNorm to each MC-row
+    // block while the i32 accumulator is still cache-resident; the
+    // unfused leg is the standalone-sweep composition it replaced
+    // (same vectorized kernels, extra full-tile round trips).
+    // Bit-equality is asserted before timing.  CI bench-smoke gates
+    // `fused_speedup` — the geomean of the residual+LN shapes, where
+    // fusion deletes the most traffic — at ≥ 1.1x (warn < 1.25x); the
+    // ReLU-only case is reported in the sweep but ungated.
+    const FUSED_SHAPES: [(&str, usize, usize, usize, bool); 3] = [
+        ("small proj+res+LN 128x128x128", 128, 128, 128, true),
+        ("small ffn-up+ReLU 128x128x256", 128, 128, 256, false),
+        ("small ffn-down+res+LN 128x256x128", 128, 256, 128, true),
+    ];
+    let mut fused_table = Table::new(
+        "fused epilogue vs standalone sweeps (bert-small shapes)",
+        &["shape", "unfused MMAC/s", "fused MMAC/s", "speedup"],
+    );
+    let mut fused_sweep: Vec<Value> = Vec::new();
+    let mut gated_speedup = 1.0f64;
+    let mut gated_shapes = 0u32;
+    for (name, m, k, n, with_ln) in FUSED_SHAPES {
+        let x: Vec<i8> = (0..m * k).map(|_| rng.i8()).collect();
+        let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
+        let packed = PackedGemm::pack(&w, n, k);
+        let div = 97i32;
+        let residual: Vec<i8> = (0..m * n).map(|_| rng.i8()).collect();
+        let gamma: Vec<i8> = (0..n).map(|_| 48 + rng.below(33) as i8).collect();
+        let beta: Vec<i8> = (0..n).map(|_| (rng.below(17) as i64 - 8) as i8).collect();
+        let ep = if with_ln {
+            Epilogue::RequantResidualLn { div, residual: &residual, gamma: &gamma, beta: &beta }
+        } else {
+            Epilogue::RequantRelu { div }
+        };
+        let mut acc: Vec<i32> = Vec::new();
+        let mut t8: Vec<i8> = Vec::new();
+        let mut x32: Vec<i32> = Vec::new();
+        let mut unfused = |out: &mut Vec<i8>| {
+            packed.gemm_into(&x, &mut acc);
+            requant(&acc, div, &mut t8);
+            if with_ln {
+                x32.clear();
+                x32.extend(residual.iter().zip(&t8).map(|(&r, &b)| i32::from(r) + i32::from(b)));
+                layernorm_rows(&x32, n, &gamma, &beta, out);
+            } else {
+                out.clear();
+                out.extend(t8.iter().map(|&v| v.max(0)));
+            }
+        };
+        let mut fused_out: Vec<i8> = Vec::new();
+        packed.gemm_fused_into(&x, &ep, &mut fused_out);
+        let mut want: Vec<i8> = Vec::new();
+        unfused(&mut want);
+        assert_eq!(fused_out, want, "{name}: fused epilogue diverged from the standalone sweeps");
+
+        let macs = (m * k * n) as f64;
+        let mut out: Vec<i8> = Vec::new();
+        let ru = bench(&format!("unfused {name}"), || {
+            unfused(&mut out);
+            sink(out.len());
+        });
+        let rf = bench(&format!("fused {name}"), || {
+            packed.gemm_fused_into(&x, &ep, &mut fused_out);
+            sink(fused_out.len());
+        });
+        let unfused_mps = ru.per_second(macs) / 1e6;
+        let fused_mps = rf.per_second(macs) / 1e6;
+        let speedup = fused_mps / unfused_mps.max(1e-9);
+        if with_ln {
+            gated_speedup *= speedup;
+            gated_shapes += 1;
+        }
+        fused_table.row(&[
+            name.to_string(),
+            format!("{unfused_mps:.0}"),
+            format!("{fused_mps:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut case = std::collections::BTreeMap::new();
+        case.insert("name".to_string(), Value::from(name));
+        case.insert("m".to_string(), Value::from(m as i64));
+        case.insert("k".to_string(), Value::from(k as i64));
+        case.insert("n".to_string(), Value::from(n as i64));
+        case.insert("gated".to_string(), Value::from(with_ln));
+        case.insert("unfused_macs_per_s".to_string(), Value::from(unfused_mps * 1e6));
+        case.insert("fused_macs_per_s".to_string(), Value::from(fused_mps * 1e6));
+        case.insert("fused_speedup_vs_unfused".to_string(), Value::from(speedup));
+        fused_sweep.push(Value::Obj(case));
+    }
+    let fused_speedup = gated_speedup.powf(1.0 / f64::from(gated_shapes.max(1)));
+    println!("{}", fused_table.render());
+
     // Worker-pool sweep on a tall tile: the intra-op scaling of one
     // gemm_into pass (thread counts beyond the host's cores simply
     // converge to the core-bound rate).
@@ -208,8 +303,17 @@ fn main() {
     doc.insert("units".to_string(), Value::from("macs_per_second"));
     doc.insert("avx2_available".to_string(), Value::from(avx2));
     doc.insert("active_path".to_string(), Value::from(simd::active().name()));
+    doc.insert("fused_speedup".to_string(), Value::from(fused_speedup));
+    doc.insert(
+        "bytes_moved_ratio".to_string(),
+        Value::from(hccs::aie_sim::bytes::bytes_moved_ratio(
+            &hccs::model::ModelConfig::bert_small(hccs::data::TaskKind::Mnlis),
+            128,
+        )),
+    );
     doc.insert("cases".to_string(), Value::Arr(cases));
     doc.insert("row_sweep".to_string(), Value::Arr(sweep));
+    doc.insert("fused_sweep".to_string(), Value::Arr(fused_sweep));
     doc.insert("pool_sweep".to_string(), Value::Arr(pool_sweep));
     let doc = Value::Obj(doc);
     println!("{}", doc.to_string_pretty());

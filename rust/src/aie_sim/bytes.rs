@@ -1,0 +1,236 @@
+//! Memory-traffic model of the encoder's epilogue dataflow — the
+//! `aie_sim` mirror of [`crate::linalg::epilogue`].
+//!
+//! The GEMM cycle model in [`super::gemm`] costs the MAC work, which
+//! fusion does not change: the fused path issues exactly the same int8
+//! products.  What fusion changes is **memory traffic between kernels**:
+//! the unfused dataflow writes each projection's i32 accumulator tile to
+//! memory, reads it back for the requant sweep, writes the int8 result,
+//! reads it again for the residual add, round-trips the i32 residual sum
+//! through the LayerNorm sweep, and so on.  The fused path applies the
+//! whole epilogue to each `MC`-row block while it is still cache-resident,
+//! so the only full-tile traffic left is what the dataflow fundamentally
+//! needs: the residual stream read and the int8 output write.
+//!
+//! This module counts both, per epilogue site, two ways:
+//!
+//! * **passes** — full-tile sweeps over an intermediate activation tile
+//!   (each read or write of a whole `(tokens, d)`-shaped tensor is one
+//!   pass).  This is the loop-structure count the fusion argument is
+//!   about, independent of element width.
+//! * **bytes** — the same sweeps weighted by element width (i32
+//!   accumulator tiles cost 4× their int8 shadows) and tile shape (the
+//!   FFN-up tile is `d_ff` wide).
+//!
+//! Like the cycle model, the point is relative structure — how much of
+//! the inter-kernel traffic the epilogue fusion deletes — not absolute
+//! DRAM bandwidth.  `hccs sim --model M` prints the per-site table and
+//! `benches/encoder_e2e.rs` reports [`bytes_moved_ratio`] next to the
+//! measured `fused_speedup`.
+
+use crate::model::ModelConfig;
+
+/// Bytes per i32 accumulator element.
+const ACC_BYTES: u64 = 4;
+/// Bytes per int8 activation element.
+const I8_BYTES: u64 = 1;
+
+/// One epilogue site's modeled inter-kernel traffic, per inference.
+#[derive(Clone, Copy, Debug)]
+pub struct EpilogueTraffic {
+    pub label: &'static str,
+    /// Calls per inference (the layer count folds in here).
+    pub calls: u64,
+    /// Full-tile sweeps per call on the unfused dataflow.
+    pub unfused_passes: u64,
+    /// Full-tile sweeps per call on the fused dataflow.
+    pub fused_passes: u64,
+    /// Bytes moved per call, unfused.
+    pub unfused_bytes: u64,
+    /// Bytes moved per call, fused.
+    pub fused_bytes: u64,
+}
+
+impl EpilogueTraffic {
+    /// Total unfused bytes over all calls.
+    pub fn unfused_total(&self) -> u64 {
+        self.calls * self.unfused_bytes
+    }
+
+    /// Total fused bytes over all calls.
+    pub fn fused_total(&self) -> u64 {
+        self.calls * self.fused_bytes
+    }
+}
+
+/// The epilogue traffic of one native-encoder inference at the model's
+/// full sequence length, mirroring `forward_impl` site for site.
+pub fn encoder_epilogue_traffic(cfg: &ModelConfig) -> Vec<EpilogueTraffic> {
+    encoder_epilogue_traffic_at(cfg, cfg.seq_len)
+}
+
+/// Epilogue traffic at `tokens` valid positions (1..=`seq_len`); the
+/// masked forward pass drops pad rows, so every tile shrinks linearly.
+///
+/// Pass accounting per site (each read or write of the whole tile is
+/// one pass; the GEMM's own operand/weight streaming is identical on
+/// both dataflows and therefore excluded):
+///
+/// * q/k/v projection, unfused: acc write + acc read + int8 write = 3.
+///   Fused: the int8 write alone = 1.
+/// * attn-out / ffn-down (requant → residual add → LayerNorm), unfused:
+///   acc write + acc read + int8 write + residual read + int8 read +
+///   i32 sum write + i32 sum read + int8 write = 8.  Fused: residual
+///   read + int8 output write = 2.
+/// * ffn-up (requant → ReLU), unfused: acc write + acc read + int8
+///   write + int8 read + int8 write = 5.  Fused: int8 write = 1 (the
+///   ReLU happens in-register).
+/// * ctx requant stays standalone on both dataflows (its producer is
+///   the attention mix, not a GEMM): i32 write + i32 read + int8
+///   write = 3 either way — listed so the table totals are honest.
+pub fn encoder_epilogue_traffic_at(cfg: &ModelConfig, tokens: usize) -> Vec<EpilogueTraffic> {
+    let l = tokens.clamp(1, cfg.seq_len) as u64;
+    let d = cfg.d_model as u64;
+    let ff = cfg.d_ff as u64;
+    let layers = cfg.layers as u64;
+    let tile_d = l * d;
+    let tile_ff = l * ff;
+    vec![
+        EpilogueTraffic {
+            label: "q/k/v requant",
+            calls: 3 * layers,
+            unfused_passes: 3,
+            fused_passes: 1,
+            unfused_bytes: tile_d * (2 * ACC_BYTES + I8_BYTES),
+            fused_bytes: tile_d * I8_BYTES,
+        },
+        EpilogueTraffic {
+            label: "attn out requant+res+LN",
+            calls: layers,
+            unfused_passes: 8,
+            fused_passes: 2,
+            unfused_bytes: tile_d * (4 * ACC_BYTES + 4 * I8_BYTES),
+            fused_bytes: tile_d * 2 * I8_BYTES,
+        },
+        EpilogueTraffic {
+            label: "ffn up requant+ReLU",
+            calls: layers,
+            unfused_passes: 5,
+            fused_passes: 1,
+            unfused_bytes: tile_ff * (2 * ACC_BYTES + 3 * I8_BYTES),
+            fused_bytes: tile_ff * I8_BYTES,
+        },
+        EpilogueTraffic {
+            label: "ffn down requant+res+LN",
+            calls: layers,
+            unfused_passes: 8,
+            fused_passes: 2,
+            unfused_bytes: tile_d * (4 * ACC_BYTES + 4 * I8_BYTES),
+            fused_bytes: tile_d * 2 * I8_BYTES,
+        },
+        EpilogueTraffic {
+            label: "ctx requant (standalone)",
+            calls: layers,
+            unfused_passes: 3,
+            fused_passes: 3,
+            unfused_bytes: tile_d * (2 * ACC_BYTES + I8_BYTES),
+            fused_bytes: tile_d * (2 * ACC_BYTES + I8_BYTES),
+        },
+    ]
+}
+
+/// Full-tile sweeps per encoder layer, `(unfused, fused)` — the count
+/// the fusion argument is stated in (3 projections + the four fused
+/// sites + the standalone ctx requant).
+pub fn layer_pass_counts(cfg: &ModelConfig) -> (u64, u64) {
+    let layers = cfg.layers as u64;
+    let fold = |pick: fn(&EpilogueTraffic) -> u64| -> u64 {
+        encoder_epilogue_traffic(cfg).iter().map(|t| t.calls * pick(t)).sum::<u64>() / layers
+    };
+    (fold(|t| t.unfused_passes), fold(|t| t.fused_passes))
+}
+
+/// Modeled unfused/fused bytes-moved ratio per inference at `tokens`
+/// valid positions (>1: the fused dataflow moves fewer bytes).
+pub fn bytes_moved_ratio(cfg: &ModelConfig, tokens: usize) -> f64 {
+    let traffic = encoder_epilogue_traffic_at(cfg, tokens);
+    let unfused: u64 = traffic.iter().map(EpilogueTraffic::unfused_total).sum();
+    let fused: u64 = traffic.iter().map(EpilogueTraffic::fused_total).sum();
+    unfused as f64 / fused.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TaskKind;
+
+    #[test]
+    fn per_layer_pass_counts_meet_the_fusion_bound() {
+        // 3×3 + 8 + 5 + 8 + 3 = 33 unfused sweeps per layer collapse to
+        // 3×1 + 2 + 1 + 2 + 3 = 11 fused — a 3× reduction, comfortably
+        // over the ≥1.5× acceptance floor.
+        for cfg in [
+            ModelConfig::bert_tiny(TaskKind::Sst2s),
+            ModelConfig::bert_small(TaskKind::Mnlis),
+        ] {
+            let (unfused, fused) = layer_pass_counts(&cfg);
+            assert_eq!(unfused, 33);
+            assert_eq!(fused, 11);
+            assert!(unfused as f64 >= 1.5 * fused as f64);
+        }
+    }
+
+    #[test]
+    fn fused_traffic_never_exceeds_unfused() {
+        let cfg = ModelConfig::bert_small(TaskKind::Mnlis);
+        for t in encoder_epilogue_traffic(&cfg) {
+            assert!(t.fused_passes <= t.unfused_passes, "{}", t.label);
+            assert!(t.fused_bytes <= t.unfused_bytes, "{}", t.label);
+            assert!(t.calls >= 1, "{}", t.label);
+        }
+        // The standalone ctx requant is unchanged by fusion.
+        let ctx = encoder_epilogue_traffic(&cfg)
+            .into_iter()
+            .find(|t| t.label.contains("ctx"))
+            .unwrap();
+        assert_eq!(ctx.fused_bytes, ctx.unfused_bytes);
+        assert_eq!(ctx.fused_passes, ctx.unfused_passes);
+    }
+
+    #[test]
+    fn bytes_ratio_tracks_the_ffn_width() {
+        // With d_ff = 2·d_model (both presets) the ratio works out to
+        // (76d + 11ff)/(16d + ff) = 98/18 = 49/9 exactly.
+        for cfg in [
+            ModelConfig::bert_tiny(TaskKind::Sst2s),
+            ModelConfig::bert_small(TaskKind::Mnlis),
+        ] {
+            assert_eq!(cfg.d_ff, 2 * cfg.d_model, "preset changed; update the pin");
+            let r = bytes_moved_ratio(&cfg, cfg.seq_len);
+            assert!((r - 49.0 / 9.0).abs() < 1e-9, "ratio {r}");
+            assert!(r >= 1.5);
+        }
+    }
+
+    #[test]
+    fn traffic_scales_linearly_with_tokens_and_clamps() {
+        let cfg = ModelConfig::bert_small(TaskKind::Mnlis);
+        let full: u64 = encoder_epilogue_traffic_at(&cfg, cfg.seq_len)
+            .iter()
+            .map(EpilogueTraffic::unfused_total)
+            .sum();
+        let half: u64 = encoder_epilogue_traffic_at(&cfg, cfg.seq_len / 2)
+            .iter()
+            .map(EpilogueTraffic::unfused_total)
+            .sum();
+        assert_eq!(half * 2, full, "epilogue tiles scale linearly with tokens");
+        // The ratio is shape-independent of the token count.
+        assert_eq!(
+            bytes_moved_ratio(&cfg, cfg.seq_len).to_bits(),
+            bytes_moved_ratio(&cfg, 7).to_bits()
+        );
+        // Degenerate lengths clamp instead of panicking.
+        assert!(bytes_moved_ratio(&cfg, 0) > 1.0);
+        assert!(bytes_moved_ratio(&cfg, 10 * cfg.seq_len) > 1.0);
+    }
+}

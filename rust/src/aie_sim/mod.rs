@@ -23,7 +23,10 @@
 //! [`tile::TileSim`] walks a schedule iteration by iteration (a miniature
 //! discrete simulator), [`gemm`] costs the encoder's matmul workload in
 //! GEMM macro-tiles (the `aie_sim` mirror of the `linalg` packed GEMM —
-//! `hccs sim --model M` prints the per-shape table), [`roofline`] closes
+//! `hccs sim --model M` prints the per-shape table), [`bytes`] models
+//! the inter-kernel memory traffic the fused GEMM epilogues delete
+//! (the `--model` traffic table and the bench-trajectory
+//! `bytes_moved_ratio` field), [`roofline`] closes
 //! the loop by *measuring* the host packed GEMM on those same shapes and
 //! reporting measured-vs-modeled MMAC/s (`hccs sim --roofline`, and the
 //! `roofline_pct` bench-trajectory field), [`scaling`] adds
@@ -35,6 +38,7 @@
 //! [`schedule::DispatchModel`] carries the serialized per-tile issue
 //! cost that bounds scaling at high shard counts.
 
+pub mod bytes;
 pub mod device;
 pub mod gemm;
 pub mod kernels;

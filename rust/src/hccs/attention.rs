@@ -101,7 +101,9 @@ pub fn hccs_attention(
     // Stage 1: QK^T through the linalg A·Bᵀ kernel (int8 MAC, i32
     // accumulation — bit-exact with the old inline dot loop).
     let mut logits = std::mem::take(&mut scratch.logits);
-    logits.resize(inp.r * inp.c, 0);
+    // The dense A·Bᵀ kernel writes every cell of the (r, c) tile, so
+    // the accumulator never needs the zero-fill pass.
+    linalg::resize_for_overwrite(&mut logits, inp.r * inp.c);
     linalg::gemm_nt_into(inp.q, inp.k, inp.r, inp.c, inp.dk, &mut logits);
     // Stages 2-8 on the accumulator tile.
     let res = hccs_attention_from_acc(
@@ -171,8 +173,10 @@ pub fn hccs_attention_from_acc(
     }
     params.validate(c).map_err(|e| e.to_string())?;
 
-    scratch.xq.resize(rows * c, 0);
-    scratch.phat.resize(rows * c, 0);
+    // Dense tile: the stage-2 rescale overwrites every xq cell and the
+    // batched engine writes every p̂ cell, so neither needs zero-fill.
+    linalg::resize_for_overwrite(&mut scratch.xq, rows * c);
+    linalg::resize_for_overwrite(&mut scratch.phat, rows * c);
     // Stage 2: rescale the whole stacked tile onto the int8 logit grid
     // (floor division like jnp `//`).
     for (x, &l) in scratch.xq.iter_mut().zip(acc) {
@@ -261,8 +265,13 @@ pub fn hccs_attention_ragged_from_acc(
     for &len in group_lens {
         scratch.lens.extend(std::iter::repeat_n(len, len));
     }
-    scratch.xq.resize(rows * c_stride, 0);
-    scratch.phat.resize(rows * c_stride, 0);
+    // Ragged tile: only each row's active prefix of xq is written, but
+    // the masked engine reads exactly that prefix (never a pad), and it
+    // zero-fills every p̂ pad tail itself — so neither buffer needs the
+    // zero-fill pass here (debug builds poison the slack to enforce
+    // this, see `linalg::resize_for_overwrite`).
+    linalg::resize_for_overwrite(&mut scratch.xq, rows * c_stride);
+    linalg::resize_for_overwrite(&mut scratch.phat, rows * c_stride);
     // Rescale each row's active prefix onto the int8 logit grid (pad
     // columns of `acc` hold zeros from the bounded GEMM and are never
     // consumed downstream).
@@ -361,8 +370,10 @@ pub fn hccs_attention_causal_from_acc(
     for &len in group_lens {
         scratch.lens.extend(1..=len);
     }
-    scratch.xq.resize(rows * c_stride, 0);
-    scratch.phat.resize(rows * c_stride, 0);
+    // Same prefix-only contract as the ragged form above: pads of xq
+    // are never read and p̂ pad tails are zero-filled by the engine.
+    linalg::resize_for_overwrite(&mut scratch.xq, rows * c_stride);
+    linalg::resize_for_overwrite(&mut scratch.phat, rows * c_stride);
     for ((xr, ar), &len) in scratch
         .xq
         .chunks_exact_mut(c_stride)
@@ -447,8 +458,9 @@ pub fn hccs_attention_step_from_acc(
 
     scratch.lens.clear();
     scratch.lens.push(t);
-    scratch.xq.resize(c_stride, 0);
-    scratch.phat.resize(c_stride, 0);
+    // Single-row form of the same prefix-only contract.
+    linalg::resize_for_overwrite(&mut scratch.xq, c_stride);
+    linalg::resize_for_overwrite(&mut scratch.phat, c_stride);
     for (x, &l) in scratch.xq[..t].iter_mut().zip(&acc_row[..t]) {
         let scaled = (l as i64 * scale_num as i64).div_euclid(scale_den as i64);
         *x = scaled.clamp(-128, 127) as i8;

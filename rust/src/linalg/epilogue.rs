@@ -1,0 +1,748 @@
+//! Fused GEMM epilogues: requant → residual add → integer LayerNorm
+//! applied to an output row block while it is still L1/L2-resident.
+//!
+//! Before this module, every encoder/decoder layer did
+//! GEMM → write full i32 tile → requant sweep → residual sweep →
+//! LayerNorm sweep — three to four extra full-tile memory passes per
+//! op on a datapath that is no longer MAC-bound (the SOLE observation,
+//! applied to this integer stack).  [`Epilogue`] is the fusion hook:
+//! [`crate::linalg::PackedGemm::gemm_fused_into`] finishes all NR
+//! column panels of one MC row block and then invokes the epilogue on
+//! those hot rows, so the i32 accumulator tile never round-trips
+//! through memory.  It is an **enum, not a closure**, so the AVX2
+//! kernel stays monomorphic — no indirect call in the hot loop.
+//!
+//! The normalization/requant primitives themselves live here too
+//! (moved from `model/norm.rs`, which re-exports them): the standalone
+//! [`requant`] / [`layernorm_rows`] sweeps used by the call sites that
+//! stay unfused (embeddings, classifier pooling, attention context)
+//! now dispatch scalar vs AVX2 through [`crate::simd::active`] like
+//! every other kernel, with `*_with_path` pins for the differential
+//! harness.
+//!
+//! ## Exactness contract
+//!
+//! Both implementations are **bit-identical**, extending the repo-wide
+//! overflow-free-i32 contract to the epilogue stages:
+//!
+//! * **Requant** divides an i32 by a positive i32 with floor semantics.
+//!   The AVX2 path computes `floor(f64(a) / f64(b))`.  For integers
+//!   `a`, `b > 0` with `|a| < 2^53` this equals `a.div_euclid(b)`
+//!   *exactly*: both operands are exactly representable, the correctly
+//!   rounded quotient errs by at most `(|a|/b)·2⁻⁵³ < 1/b`, and the
+//!   true quotient is at least `1/b` away from the nearest wrong
+//!   integer boundary (or exactly on a boundary, where division is
+//!   exact), so `floor` cannot cross it.  All inputs are i32, far
+//!   inside `2^53`.
+//! * **Clamp-by-pack**: `_mm_packs_epi32` + `_mm_packs_epi16`
+//!   saturate i32 → i16 → i8, which composes to exactly
+//!   `.clamp(-128, 127)` for any i32 — no separate clamp needed on the
+//!   int8-output paths.  The i32-output residual path instead clamps
+//!   on the ±128/127 rails with `_mm256_min/max_epi32` before adding
+//!   the residual.
+//! * **LayerNorm** rows are vectorized only when a per-row guard
+//!   proves every f64 intermediate is an exactly-representable
+//!   integer: with `spread = max − min` of the row, the guard requires
+//!   `d ≤ 2^20`, `spread ≤ 2^21` and `spread²·d < 2^53` (the mean lies
+//!   in `[min, max]`, so `|v − mean| ≤ spread` bounds every centered
+//!   term; the squared-deviation sum then stays below `2^53` and f64
+//!   accumulation is exact in any order).  The per-element chain is
+//!   exact by the same floor-division argument (`|c·32| ≤ 2^26`,
+//!   `|y·g| ≤ 2^33`, divisors `sd ≤ 2^21` and 64 exactly
+//!   representable), and values are clamped in the f64 domain before
+//!   `_mm256_cvtpd_epi32` (which would saturate out-of-range inputs to
+//!   `i32::MIN`).  A row that fails the guard — impossible for real
+//!   datapath magnitudes, reachable in adversarial tests — falls back
+//!   to the scalar row, bit-exactly.
+//!
+//! ## The escape hatch
+//!
+//! `HCCS_FORCE_UNFUSED=1` (env, read once) or [`set_fused_override`] /
+//! [`scoped_fused`] (in-process, tests) force the model layers back
+//! onto the standalone-sweep path.  Because fused and unfused are
+//! bit-exact, flipping this changes no result — it exists so the
+//! differential tests, the CI matrix leg, and the benches can compare
+//! the two dataflows on identical inputs.
+
+use crate::simd::{self, SimdPath};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// LayerNorm output target RMS: a normalized activation row has
+/// (approximately) this integer standard deviation, which keeps every
+/// downstream int8 MAC input well inside the rails.
+pub const LN_TARGET: i64 = 32;
+
+/// Fixed-point denominator of the LayerNorm gain: `gamma = 64` is the
+/// identity gain, seeded gains live in [48, 80] (±25%).
+pub const LN_GAMMA_DIV: i64 = 64;
+
+/// Exact `floor(sqrt(n))` by Newton iteration (no fp round-trip, so
+/// the result is platform-independent for the full u64 range).  The
+/// seed `n/2 + 1` ≥ √n avoids the `n + 1` overflow at `u64::MAX`, and
+/// the iterates stay below it, so nothing here can wrap.
+pub fn isqrt_u64(n: u64) -> u64 {
+    if n < 2 {
+        return n;
+    }
+    let mut x = n / 2 + 1;
+    let mut y = (x + n / x) / 2;
+    while y < x {
+        x = y;
+        y = (x + n / x) / 2;
+    }
+    x
+}
+
+const FUSED_NONE: u8 = 0;
+const FUSED_ON: u8 = 1;
+const FUSED_OFF: u8 = 2;
+
+static FUSED_OVERRIDE: AtomicU8 = AtomicU8::new(FUSED_NONE);
+
+fn env_forces_unfused() -> bool {
+    static FORCED: OnceLock<bool> = OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("HCCS_FORCE_UNFUSED")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// Whether the model layers should route projections through the fused
+/// GEMM epilogue (the default) or the standalone per-layer sweeps.
+/// Selection order mirrors [`crate::simd::active`]: in-process
+/// override, then `HCCS_FORCE_UNFUSED` (read once), then fused.
+pub fn fused_active() -> bool {
+    match FUSED_OVERRIDE.load(Ordering::Relaxed) {
+        FUSED_ON => true,
+        FUSED_OFF => false,
+        _ => !env_forces_unfused(),
+    }
+}
+
+/// Process-wide fusion override (`None` restores env/default).  Both
+/// dataflows are bit-exact, so flipping this mid-run changes no model
+/// *result* — only which loop structure computes it.
+pub fn set_fused_override(fused: Option<bool>) {
+    let v = match fused {
+        None => FUSED_NONE,
+        Some(true) => FUSED_ON,
+        Some(false) => FUSED_OFF,
+    };
+    FUSED_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// RAII form of [`set_fused_override`]: forces the dataflow until the
+/// guard drops, then restores whatever override was in place before.
+pub fn scoped_fused(fused: bool) -> FusedOverrideGuard {
+    let prev = FUSED_OVERRIDE.load(Ordering::Relaxed);
+    set_fused_override(Some(fused));
+    FusedOverrideGuard { prev }
+}
+
+pub struct FusedOverrideGuard {
+    prev: u8,
+}
+
+impl Drop for FusedOverrideGuard {
+    fn drop(&mut self) {
+        FUSED_OVERRIDE.store(self.prev, Ordering::Relaxed);
+    }
+}
+
+/// What [`crate::linalg::PackedGemm::gemm_fused_into`] does to each
+/// finished MC row block while it is cache-hot.  An enum rather than a
+/// closure so the AVX2 block kernel stays monomorphic; every variant
+/// reproduces the corresponding standalone-sweep sequence bit-exactly.
+#[derive(Clone, Copy, Debug)]
+pub enum Epilogue<'a> {
+    /// `out = clamp(floor(acc / div))` — the plain [`requant`] sweep.
+    Requant { div: i32 },
+    /// Requant followed by ReLU (`max(0)`) — the FFN up-projection.
+    RequantRelu { div: i32 },
+    /// Requant, add the int8 residual stream, then integer LayerNorm —
+    /// the attention-output and FFN-down projections.  `residual` is
+    /// the full `rows × d_out` pre-projection activation tile; the
+    /// epilogue indexes the rows belonging to the current block.
+    RequantResidualLn {
+        div: i32,
+        residual: &'a [i8],
+        gamma: &'a [i8],
+        beta: &'a [i8],
+    },
+}
+
+impl Epilogue<'_> {
+    /// Validate operand shapes once per `gemm_fused_into` call (the
+    /// per-block path stays assertion-free).
+    pub(crate) fn check(&self, rows: usize, d_out: usize) {
+        match *self {
+            Epilogue::Requant { div } | Epilogue::RequantRelu { div } => {
+                assert!(div > 0, "epilogue requant divisor must be positive");
+            }
+            Epilogue::RequantResidualLn {
+                div,
+                residual,
+                gamma,
+                beta,
+            } => {
+                assert!(div > 0, "epilogue requant divisor must be positive");
+                assert_eq!(
+                    residual.len(),
+                    rows * d_out,
+                    "epilogue residual is not a rows × d_out tile"
+                );
+                assert_eq!(gamma.len(), d_out, "epilogue gamma width mismatch");
+                assert_eq!(beta.len(), d_out, "epilogue beta width mismatch");
+            }
+        }
+    }
+
+    /// Apply the epilogue to one finished row block.  `acc` holds the
+    /// block's i32 accumulators (`block_rows × d_out`, starting at
+    /// global row `row0`), `dst` the matching int8 output region.  The
+    /// residual variant scribbles over `acc` (requant + residual in
+    /// i32) before normalizing into `dst`.
+    pub(crate) fn apply_block(
+        &self,
+        path: SimdPath,
+        acc: &mut [i32],
+        d_out: usize,
+        row0: usize,
+        dst: &mut [i8],
+    ) {
+        debug_assert_eq!(acc.len() % d_out, 0);
+        debug_assert_eq!(dst.len(), acc.len());
+        match *self {
+            Epilogue::Requant { div } => requant_block(path, acc, div, false, dst),
+            Epilogue::RequantRelu { div } => requant_block(path, acc, div, true, dst),
+            Epilogue::RequantResidualLn {
+                div,
+                residual,
+                gamma,
+                beta,
+            } => {
+                let res = &residual[row0 * d_out..row0 * d_out + acc.len()];
+                requant_add_residual_block(path, acc, res, div);
+                layernorm_block(path, acc, d_out, gamma, beta, dst);
+            }
+        }
+    }
+}
+
+/// Rescale i32 accumulators onto the int8 grid: floor division by a
+/// positive divisor, clamped to the rails — identical semantics to the
+/// QK^T logit rescale inside `hccs_attention` (scale_num = 1).
+pub fn requant(accs: &[i32], div: i32, out: &mut Vec<i8>) {
+    requant_with_path(simd::active(), accs, div, out);
+}
+
+/// [`requant`] with an explicitly pinned dispatch path.
+pub fn requant_with_path(path: SimdPath, accs: &[i32], div: i32, out: &mut Vec<i8>) {
+    let path = simd::require(path);
+    super::gemm::resize_for_overwrite(out, accs.len());
+    requant_block(path, accs, div, false, out);
+}
+
+/// Integer LayerNorm over each width-`d` row of `x32`: integer mean,
+/// integer variance, Newton `isqrt`, then a fixed-point gain/bias.
+/// Output rows have RMS ≈ [`LN_TARGET`] before the ±25% seeded gain.
+pub fn layernorm_rows(x32: &[i32], d: usize, gamma: &[i8], beta: &[i8], out: &mut Vec<i8>) {
+    layernorm_rows_with_path(simd::active(), x32, d, gamma, beta, out);
+}
+
+/// [`layernorm_rows`] with an explicitly pinned dispatch path.
+pub fn layernorm_rows_with_path(
+    path: SimdPath,
+    x32: &[i32],
+    d: usize,
+    gamma: &[i8],
+    beta: &[i8],
+    out: &mut Vec<i8>,
+) {
+    let path = simd::require(path);
+    super::gemm::resize_for_overwrite(out, x32.len());
+    layernorm_block(path, x32, d, gamma, beta, out);
+}
+
+/// Requant one block into int8, optionally fusing the FFN ReLU.
+pub(crate) fn requant_block(path: SimdPath, acc: &[i32], div: i32, relu: bool, dst: &mut [i8]) {
+    debug_assert!(div > 0);
+    debug_assert_eq!(dst.len(), acc.len());
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { avx2::requant(acc, div, relu, dst) },
+        _ => {
+            for (o, &v) in dst.iter_mut().zip(acc) {
+                let y = v.div_euclid(div).clamp(-128, 127) as i8;
+                *o = if relu { y.max(0) } else { y };
+            }
+        }
+    }
+}
+
+/// In-place `acc[i] = residual[i] + clamp(floor(acc[i] / div))` — the
+/// requant + residual-add half of the LayerNorm epilogue, kept in i32
+/// because the sum feeds the normalization (it can reach ±256, outside
+/// int8).
+pub(crate) fn requant_add_residual_block(path: SimdPath, acc: &mut [i32], res: &[i8], div: i32) {
+    debug_assert!(div > 0);
+    debug_assert_eq!(res.len(), acc.len());
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { avx2::requant_add_residual(acc, res, div) },
+        _ => {
+            for (a, &r) in acc.iter_mut().zip(res) {
+                *a = i32::from(r) + a.div_euclid(div).clamp(-128, 127);
+            }
+        }
+    }
+}
+
+/// One LayerNorm output element — the scalar reference transform, also
+/// the tail/fallback of the AVX2 row.
+#[inline]
+fn scalar_ln_elem(v: i32, mean: i64, sd: i64, g: i8, b: i8) -> i8 {
+    let y = ((i64::from(v) - mean) * LN_TARGET).div_euclid(sd);
+    let y = (y * i64::from(g)).div_euclid(LN_GAMMA_DIV) + i64::from(b);
+    y.clamp(-128, 127) as i8
+}
+
+/// One full LayerNorm row, scalar (the original `norm.rs` loop).
+fn scalar_ln_row(xr: &[i32], gamma: &[i8], beta: &[i8], or: &mut [i8]) {
+    let d = xr.len() as i64;
+    let sum: i64 = xr.iter().map(|&v| i64::from(v)).sum();
+    let mean = sum.div_euclid(d);
+    let var = xr
+        .iter()
+        .map(|&v| {
+            let c = i64::from(v) - mean;
+            c * c
+        })
+        .sum::<i64>()
+        .div_euclid(d);
+    let sd = (isqrt_u64(var as u64) as i64).max(1);
+    for ((o, &v), (&g, &b)) in or.iter_mut().zip(xr).zip(gamma.iter().zip(beta)) {
+        *o = scalar_ln_elem(v, mean, sd, g, b);
+    }
+}
+
+/// Whether the AVX2 LayerNorm row is provably exact: `|v − mean| ≤
+/// spread` for every element (the mean lies in `[min, max]`), so the
+/// guard bounds every f64 intermediate below `2^53`.  The `spread ≤
+/// 2^21` cap also keeps the guard product itself inside i64.
+#[cfg(target_arch = "x86_64")]
+fn ln_row_vectorizable(d: usize, spread: i64) -> bool {
+    (d as i64) <= 1 << 20 && spread <= 1 << 21 && spread * spread * (d as i64) < 1 << 53
+}
+
+/// LayerNorm over the rows of one block, dispatching per `path`.  Row
+/// stats (sum, rails) are scalar i64 either way; the AVX2 arm
+/// vectorizes the variance accumulation and the element transform when
+/// [`ln_row_vectorizable`] holds, and falls back to the scalar row —
+/// bit-exactly — when it does not.
+pub(crate) fn layernorm_block(
+    path: SimdPath,
+    x32: &[i32],
+    d: usize,
+    gamma: &[i8],
+    beta: &[i8],
+    out: &mut [i8],
+) {
+    debug_assert!(d > 0 && x32.len() % d == 0);
+    debug_assert_eq!(out.len(), x32.len());
+    debug_assert_eq!(gamma.len(), d);
+    debug_assert_eq!(beta.len(), d);
+    for (xr, or) in x32.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        match path {
+            #[cfg(target_arch = "x86_64")]
+            SimdPath::Avx2 => {
+                let mut sum = 0i64;
+                let (mut lo, mut hi) = (i32::MAX, i32::MIN);
+                for &v in xr {
+                    sum += i64::from(v);
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let spread = i64::from(hi) - i64::from(lo);
+                if ln_row_vectorizable(d, spread) {
+                    let mean = sum.div_euclid(d as i64);
+                    unsafe {
+                        let var = avx2::row_sumsq(xr, mean).div_euclid(d as i64);
+                        let sd = (isqrt_u64(var as u64) as i64).max(1);
+                        avx2::ln_row(xr, mean, sd, gamma, beta, or);
+                    }
+                } else {
+                    scalar_ln_row(xr, gamma, beta, or);
+                }
+            }
+            _ => scalar_ln_row(xr, gamma, beta, or),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 epilogue kernels.  Exactness arguments are in the module
+    //! docs; in short, every f64 operation here either produces an
+    //! exactly-representable integer or is a floor-division whose
+    //! single rounding provably cannot cross an integer boundary.
+    use std::arch::x86_64::*;
+
+    /// `floor(v / div)` for 8 i32 lanes via f64, returned as two 4-lane
+    /// i32 halves (lanes 0–3, lanes 4–7).  Exact for every i32
+    /// numerator and positive i32 divisor; the quotient magnitude never
+    /// exceeds `|v|`, so `_mm256_cvtpd_epi32` (exact on integral
+    /// in-range inputs) cannot saturate.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn floor_div8(v: __m256i, div: __m256d) -> (__m128i, __m128i) {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        let qlo = _mm256_cvtpd_epi32(_mm256_floor_pd(_mm256_div_pd(_mm256_cvtepi32_pd(lo), div)));
+        let qhi = _mm256_cvtpd_epi32(_mm256_floor_pd(_mm256_div_pd(_mm256_cvtepi32_pd(hi), div)));
+        (qlo, qhi)
+    }
+
+    /// Vectorized [`super::requant_block`]: floor-div, then the
+    /// i32→i16→i8 saturating packs (≡ `.clamp(-128, 127)`), then an
+    /// optional ReLU on the packed bytes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn requant(acc: &[i32], div: i32, relu: bool, dst: &mut [i8]) {
+        let divv = _mm256_set1_pd(f64::from(div));
+        let zero = _mm_setzero_si128();
+        let mut i = 0;
+        while i + 8 <= acc.len() {
+            let v = _mm256_loadu_si256(acc.as_ptr().add(i).cast());
+            let (qlo, qhi) = floor_div8(v, divv);
+            let w16 = _mm_packs_epi32(qlo, qhi);
+            let mut w8 = _mm_packs_epi16(w16, w16);
+            if relu {
+                w8 = _mm_max_epi8(w8, zero);
+            }
+            _mm_storel_epi64(dst.as_mut_ptr().add(i).cast(), w8);
+            i += 8;
+        }
+        for j in i..acc.len() {
+            let y = acc[j].div_euclid(div).clamp(-128, 127) as i8;
+            dst[j] = if relu { y.max(0) } else { y };
+        }
+    }
+
+    /// Vectorized [`super::requant_add_residual_block`]: floor-div,
+    /// clamp on the i32 rails (the output stays i32, so the pack trick
+    /// does not apply), add the sign-extended int8 residual, store
+    /// back over `acc`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn requant_add_residual(acc: &mut [i32], res: &[i8], div: i32) {
+        let divv = _mm256_set1_pd(f64::from(div));
+        let lo_rail = _mm256_set1_epi32(-128);
+        let hi_rail = _mm256_set1_epi32(127);
+        let mut i = 0;
+        while i + 8 <= acc.len() {
+            let v = _mm256_loadu_si256(acc.as_ptr().add(i).cast());
+            let (qlo, qhi) = floor_div8(v, divv);
+            let q = _mm256_set_m128i(qhi, qlo);
+            let q = _mm256_min_epi32(_mm256_max_epi32(q, lo_rail), hi_rail);
+            let r = _mm256_cvtepi8_epi32(_mm_loadl_epi64(res.as_ptr().add(i).cast()));
+            let s = _mm256_add_epi32(q, r);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(i).cast(), s);
+            i += 8;
+        }
+        for j in i..acc.len() {
+            acc[j] = i32::from(res[j]) + acc[j].div_euclid(div).clamp(-128, 127);
+        }
+    }
+
+    /// Exact f64 accumulation of `Σ (v − mean)²` over one row.  The
+    /// caller's [`super::ln_row_vectorizable`] guard bounds every
+    /// partial sum below `2^53`, so each f64 add is exact and the
+    /// accumulation order (4 lanes + tail) does not matter.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_sumsq(xr: &[i32], mean: i64) -> i64 {
+        let meanv = _mm256_set1_pd(mean as f64);
+        let mut accv = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= xr.len() {
+            let v = _mm256_cvtepi32_pd(_mm_loadu_si128(xr.as_ptr().add(i).cast()));
+            let c = _mm256_sub_pd(v, meanv);
+            accv = _mm256_add_pd(accv, _mm256_mul_pd(c, c));
+            i += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), accv);
+        let mut total = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+        for &v in &xr[i..] {
+            let c = (i64::from(v) - mean) as f64;
+            total += c * c;
+        }
+        total as i64
+    }
+
+    /// Row-invariant constants of the LayerNorm element transform.
+    struct LnConsts {
+        mean: __m256d,
+        sd: __m256d,
+        tgt: __m256d,
+        gdiv: __m256d,
+        lo: __m256d,
+        hi: __m256d,
+    }
+
+    /// Four output elements: `floor(((v − mean)·32) / sd)` →
+    /// `floor((y·g) / 64) + b` → clamp in f64 (before the convert,
+    /// which saturates out-of-range inputs to `i32::MIN`) → i32.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn ln_lane(v: __m256d, g: __m256d, b: __m256d, k: &LnConsts) -> __m128i {
+        let y = _mm256_floor_pd(_mm256_div_pd(
+            _mm256_mul_pd(_mm256_sub_pd(v, k.mean), k.tgt),
+            k.sd,
+        ));
+        let y = _mm256_add_pd(_mm256_floor_pd(_mm256_div_pd(_mm256_mul_pd(y, g), k.gdiv)), b);
+        let y = _mm256_min_pd(_mm256_max_pd(y, k.lo), k.hi);
+        _mm256_cvtpd_epi32(y)
+    }
+
+    /// Vectorized LayerNorm element transform over one row whose stats
+    /// (`mean`, `sd`) the caller already computed.  Only called under
+    /// the exactness guard.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn ln_row(xr: &[i32], mean: i64, sd: i64, gamma: &[i8], beta: &[i8], or: &mut [i8]) {
+        let k = LnConsts {
+            mean: _mm256_set1_pd(mean as f64),
+            sd: _mm256_set1_pd(sd as f64),
+            tgt: _mm256_set1_pd(super::LN_TARGET as f64),
+            gdiv: _mm256_set1_pd(super::LN_GAMMA_DIV as f64),
+            lo: _mm256_set1_pd(-128.0),
+            hi: _mm256_set1_pd(127.0),
+        };
+        let mut i = 0;
+        while i + 8 <= xr.len() {
+            let v = _mm256_loadu_si256(xr.as_ptr().add(i).cast());
+            let vlo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(v));
+            let vhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(v));
+            let g32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(gamma.as_ptr().add(i).cast()));
+            let glo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(g32));
+            let ghi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(g32));
+            let b32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(beta.as_ptr().add(i).cast()));
+            let blo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(b32));
+            let bhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(b32));
+            let qlo = ln_lane(vlo, glo, blo, &k);
+            let qhi = ln_lane(vhi, ghi, bhi, &k);
+            // Values are clamped to [-128, 127] already, so the
+            // saturating packs are lossless order-preserving narrows.
+            let w16 = _mm_packs_epi32(qlo, qhi);
+            let w8 = _mm_packs_epi16(w16, w16);
+            _mm_storel_epi64(or.as_mut_ptr().add(i).cast(), w8);
+            i += 8;
+        }
+        for j in i..xr.len() {
+            or[j] = super::scalar_ln_elem(xr[j], mean, sd, gamma[j], beta[j]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn assert_both_paths<F: FnMut(SimdPath) -> Vec<i8>>(label: &str, mut f: F) {
+        if !simd::avx2_available() {
+            return;
+        }
+        let scalar = f(SimdPath::Scalar);
+        let avx2 = f(SimdPath::Avx2);
+        assert_eq!(scalar, avx2, "{label}: AVX2 diverged from scalar");
+    }
+
+    #[test]
+    fn isqrt_is_exact_floor() {
+        for n in 0u64..100_000 {
+            let r = isqrt_u64(n);
+            assert!(r * r <= n, "n={n}");
+            assert!((r + 1) * (r + 1) > n, "n={n}");
+        }
+        for n in [u64::MAX, u64::MAX - 1, 1 << 62, (1 << 32) - 1, 1 << 32] {
+            let r = isqrt_u64(n);
+            assert!(r.checked_mul(r).is_some_and(|s| s <= n));
+            assert!((r + 1).checked_mul(r + 1).is_none_or(|s| s > n));
+        }
+    }
+
+    #[test]
+    fn requant_uses_floor_division_and_clamps() {
+        let mut out = Vec::new();
+        requant(&[-5, 5, 10_000, -10_000, 16], 16, &mut out);
+        assert_eq!(out, vec![-1, 0, 127, -128, 1]);
+    }
+
+    #[test]
+    fn requant_paths_agree_on_adversarial_inputs() {
+        let mut rng = Xoshiro256::new(41);
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 257] {
+            for div in [1i32, 2, 3, 7, 127, 4096, i32::MAX] {
+                let mut accs: Vec<i32> = (0..len).map(|_| rng.next_u64() as i32).collect();
+                // Seed the rails explicitly: i32::MIN / 1 is the worst
+                // case for the f64 floor-division and the i32 clamp.
+                for v in [i32::MIN, i32::MAX, 0, -1, 1] {
+                    if !accs.is_empty() {
+                        let at = rng.below(accs.len() as u64) as usize;
+                        accs[at] = v;
+                    }
+                }
+                for relu in [false, true] {
+                    assert_both_paths(&format!("requant len={len} div={div} relu={relu}"), |p| {
+                        let mut dst = vec![0i8; accs.len()];
+                        requant_block(p, &accs, div, relu, &mut dst);
+                        dst
+                    });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_requant_paths_agree_and_match_composition() {
+        let mut rng = Xoshiro256::new(43);
+        for len in [0usize, 3, 8, 40, 129] {
+            for div in [1i32, 5, 1000, i32::MAX] {
+                let accs: Vec<i32> = (0..len).map(|_| rng.next_u64() as i32).collect();
+                let res: Vec<i8> = (0..len).map(|_| rng.i8()).collect();
+                // Reference: the unfused sweep order (requant to int8,
+                // then widen-and-add).
+                let mut q = Vec::new();
+                requant_with_path(SimdPath::Scalar, &accs, div, &mut q);
+                let want: Vec<i32> = q
+                    .iter()
+                    .zip(&res)
+                    .map(|(&v, &r)| i32::from(r) + i32::from(v))
+                    .collect();
+                for path in [SimdPath::Scalar, SimdPath::Avx2] {
+                    if path == SimdPath::Avx2 && !simd::avx2_available() {
+                        continue;
+                    }
+                    let mut acc = accs.clone();
+                    requant_add_residual_block(path, &mut acc, &res, div);
+                    assert_eq!(acc, want, "residual path={path:?} len={len} div={div}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layernorm_standardizes_rows() {
+        // A high-variance row and a shifted copy must normalize to the
+        // same output (shift invariance of (x - mean) / sd).
+        let row: Vec<i32> = (0..64).map(|i| i * 50 - 1600).collect();
+        let shifted: Vec<i32> = row.iter().map(|v| v + 700).collect();
+        let gamma = vec![64i8; 64];
+        let beta = vec![0i8; 64];
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        layernorm_rows(&row, 64, &gamma, &beta, &mut a);
+        layernorm_rows(&shifted, 64, &gamma, &beta, &mut b);
+        assert_eq!(a, b);
+        // RMS lands near LN_TARGET.
+        let rms = (a.iter().map(|&v| f64::from(v) * f64::from(v)).sum::<f64>() / 64.0).sqrt();
+        assert!((20.0..=44.0).contains(&rms), "rms {rms}");
+    }
+
+    #[test]
+    fn layernorm_constant_row_is_beta() {
+        let gamma = vec![64i8; 4];
+        let beta = vec![7i8; 4];
+        let mut out = Vec::new();
+        layernorm_rows(&[5, 5, 5, 5], 4, &gamma, &beta, &mut out);
+        assert_eq!(out, vec![7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn layernorm_paths_agree_including_guard_fallback() {
+        let mut rng = Xoshiro256::new(47);
+        // (d, rows, magnitude): the 2_000_000 magnitude rows exceed the
+        // spread ≤ 2^21 guard, forcing the AVX2 arm onto the bit-exact
+        // scalar fallback; the small rows take the vector route.
+        for &(d, rows, mag) in &[
+            (1usize, 5usize, 400i64),
+            (4, 3, 400),
+            (8, 2, 400),
+            (12, 4, 127),
+            (32, 4, 30_000),
+            (64, 2, 2_000_000),
+            (96, 1, 1),
+        ] {
+            let x32: Vec<i32> =
+                (0..d * rows).map(|_| rng.range_i64(-mag, mag) as i32).collect();
+            let gamma: Vec<i8> = (0..d).map(|_| rng.range_i64(48, 80) as i8).collect();
+            let beta: Vec<i8> = (0..d).map(|_| rng.i8()).collect();
+            assert_both_paths(&format!("layernorm d={d} rows={rows} mag={mag}"), |p| {
+                let mut out = Vec::new();
+                layernorm_rows_with_path(p, &x32, d, &gamma, &beta, &mut out);
+                out
+            });
+        }
+    }
+
+    #[test]
+    fn epilogue_matches_standalone_sweeps() {
+        let mut rng = Xoshiro256::new(53);
+        let (rows, d) = (13usize, 24usize);
+        let accs: Vec<i32> =
+            (0..rows * d).map(|_| rng.range_i64(-100_000, 100_000) as i32).collect();
+        let residual: Vec<i8> = (0..rows * d).map(|_| rng.i8()).collect();
+        let gamma: Vec<i8> = (0..d).map(|_| rng.range_i64(48, 80) as i8).collect();
+        let beta: Vec<i8> = (0..d).map(|_| rng.i8()).collect();
+        let div = 713;
+
+        // Unfused reference: requant → widen+residual → layernorm.
+        let mut q = Vec::new();
+        requant_with_path(SimdPath::Scalar, &accs, div, &mut q);
+        let x32: Vec<i32> = q
+            .iter()
+            .zip(&residual)
+            .map(|(&v, &r)| i32::from(r) + i32::from(v))
+            .collect();
+        let mut want = Vec::new();
+        layernorm_rows_with_path(SimdPath::Scalar, &x32, d, &gamma, &beta, &mut want);
+
+        let ep = Epilogue::RequantResidualLn {
+            div,
+            residual: &residual,
+            gamma: &gamma,
+            beta: &beta,
+        };
+        ep.check(rows, d);
+        // Apply block-at-a-time with a ragged split, as the fused GEMM
+        // loop does, on both paths.
+        for path in [SimdPath::Scalar, SimdPath::Avx2] {
+            if path == SimdPath::Avx2 && !simd::avx2_available() {
+                continue;
+            }
+            let mut dst = vec![0i8; rows * d];
+            for (blk, row0) in [(0usize..5usize, 0usize), (5..13, 5)] {
+                let mut acc = accs[blk.start * d..blk.end * d].to_vec();
+                ep.apply_block(path, &mut acc, d, row0, &mut dst[blk.start * d..blk.end * d]);
+            }
+            assert_eq!(dst, want, "fused epilogue diverged on {path:?}");
+        }
+    }
+
+    #[test]
+    fn fused_override_wins_and_restores() {
+        {
+            let _g = scoped_fused(false);
+            assert!(!fused_active());
+            {
+                let _inner = scoped_fused(true);
+                assert!(fused_active());
+            }
+            assert!(!fused_active());
+        }
+        // Back to env/default — under the test env (no
+        // HCCS_FORCE_UNFUSED) that is fused, but another concurrent
+        // test may hold an override, so only check it is a valid state.
+        let _ = fused_active();
+    }
+}

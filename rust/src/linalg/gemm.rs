@@ -18,13 +18,60 @@
 //! are `(-32768)²`, impossible for i8-range inputs, so every lane is
 //! exact.
 
+use super::epilogue::Epilogue;
 use crate::runtime::pool;
 use crate::simd::{self, SimdPath};
+use std::cell::Cell;
 
 /// Output units per packed panel (the register-block width of the
 /// weights-stationary kernel; 8 i32 accumulator lanes fill exactly one
 /// AVX2 register, or two SSE2 registers on the scalar fallback).
 pub const NR: usize = 8;
+
+/// Scratch element types eligible for [`resize_for_overwrite`]: plain
+/// integers with a recognizable debug-build poison byte pattern.
+pub trait ScratchCell: Copy {
+    /// Value newly exposed scratch cells are filled with in debug
+    /// builds, so a kernel that violates its write-all contract fails
+    /// the differential/oracle tests loudly instead of reading
+    /// leftover zeros that happen to be correct.
+    const POISON: Self;
+}
+
+impl ScratchCell for i32 {
+    const POISON: i32 = 0x5A5A_5A5A;
+}
+
+impl ScratchCell for i8 {
+    const POISON: i8 = 0x5A;
+}
+
+/// Resize a scratch vector to exactly `n` elements **without**
+/// zero-initializing new cells.
+///
+/// Contract (the reason the zero fill is redundant): every caller
+/// passes the result to a kernel that writes **all** `n` cells before
+/// any cell is read — the GEMM family writes every output cell, the
+/// requant/LayerNorm sweeps write every output element.  Debug builds
+/// document and enforce the contract by filling newly exposed cells
+/// with [`ScratchCell::POISON`] instead of leaving them arbitrary, so
+/// a contract violation produces loud garbage, not silent zeros.
+pub fn resize_for_overwrite<T: ScratchCell>(v: &mut Vec<T>, n: usize) {
+    if n <= v.len() {
+        v.truncate(n);
+        return;
+    }
+    if cfg!(debug_assertions) {
+        v.resize(n, T::POISON);
+    } else {
+        v.reserve(n - v.len());
+        // SAFETY: `T` is a plain Copy integer (no drop, every bit
+        // pattern valid), the capacity was just reserved, and the
+        // write-all contract above guarantees no cell is read before
+        // the kernel overwrites it.
+        unsafe { v.set_len(n) };
+    }
+}
 
 /// Activation rows per cache block: a panel (`d_in · NR` int8, ≤ 2 KiB
 /// at the repo's widest `d_in = 256`) stays L1-resident while `MC` rows
@@ -137,7 +184,9 @@ impl PackedGemm {
         assert!(x.len() % self.d_in == 0, "x is not a whole number of d_in rows");
         let path = simd::require(path);
         let rows = x.len() / self.d_in;
-        out.resize(rows * self.d_out, 0);
+        // The block kernel writes every output cell (all panels × all
+        // rows), so the scratch needs no zero fill.
+        resize_for_overwrite(out, rows * self.d_out);
         if rows == 0 {
             return;
         }
@@ -158,6 +207,63 @@ impl PackedGemm {
                 std::slice::from_raw_parts_mut(outp.0.add(rb * d_out), (rend - rb) * d_out)
             };
             self.gemm_block(path, &x[rb * d_in..rend * d_in], ob);
+        });
+    }
+
+    /// Blocked GEMM with a fused epilogue: each `MC`-row block finishes
+    /// **all** `NR` column panels (full output rows complete while
+    /// resident in L1/L2 — [`Self::gemm_block`] is already panel-outer
+    /// *within* a block), then the [`Epilogue`] is applied to those hot
+    /// rows and only the int8 result is written to `out`.  The i32
+    /// accumulator tile lives in a per-worker thread-local and never
+    /// round-trips through the caller's memory — that is the
+    /// bytes-moved win `aie_sim::bytes` models.
+    ///
+    /// Bit-exact with `gemm_into` followed by the standalone
+    /// requant/residual/LayerNorm sweeps, on both dispatch paths.
+    pub fn gemm_fused_into(&self, x: &[i8], ep: &Epilogue<'_>, out: &mut Vec<i8>) {
+        self.gemm_fused_into_with_path(simd::active(), x, ep, out);
+    }
+
+    /// [`Self::gemm_fused_into`] with an explicit dispatch path.
+    pub fn gemm_fused_into_with_path(
+        &self,
+        path: SimdPath,
+        x: &[i8],
+        ep: &Epilogue<'_>,
+        out: &mut Vec<i8>,
+    ) {
+        assert!(x.len() % self.d_in == 0, "x is not a whole number of d_in rows");
+        let path = simd::require(path);
+        let rows = x.len() / self.d_in;
+        ep.check(rows, self.d_out);
+        resize_for_overwrite(out, rows * self.d_out);
+        if rows == 0 {
+            return;
+        }
+        let (d_in, d_out) = (self.d_in, self.d_out);
+        let nblocks = rows.div_ceil(MC);
+        struct SyncPtr(*mut i8);
+        unsafe impl Send for SyncPtr {}
+        unsafe impl Sync for SyncPtr {}
+        let outp = SyncPtr(out.as_mut_ptr());
+        pool::run_blocks(nblocks, &|blk| {
+            let rb = blk * MC;
+            let rend = (rb + MC).min(rows);
+            // SAFETY: same disjoint-region argument as
+            // `gemm_into_with_path` — block `blk` exclusively owns out
+            // rows rb..rend and `out` is not resized while the pool
+            // runs.
+            let db = unsafe {
+                std::slice::from_raw_parts_mut(outp.0.add(rb * d_out), (rend - rb) * d_out)
+            };
+            BLOCK_ACC.with(|cell| {
+                let mut acc = cell.take();
+                resize_for_overwrite(&mut acc, (rend - rb) * d_out);
+                self.gemm_block(path, &x[rb * d_in..rend * d_in], &mut acc);
+                ep.apply_block(path, &mut acc, d_out, rb, db);
+                cell.set(acc);
+            });
         });
     }
 
@@ -191,6 +297,14 @@ impl PackedGemm {
             }
         }
     }
+}
+
+thread_local! {
+    /// Per-worker i32 accumulator tile of [`PackedGemm::gemm_fused_into`]
+    /// (one ≤`MC`-row block).  Thread-local so pool workers never
+    /// contend, retained across calls so the hot loop allocates only on
+    /// the first block a thread processes.
+    static BLOCK_ACC: Cell<Vec<i32>> = const { Cell::new(Vec::new()) };
 }
 
 /// A·Bᵀ for two row-major int8 operands: `a` is `(m, kd)`, `b` is
@@ -713,6 +827,84 @@ mod tests {
         let mut want = Vec::new();
         matmul_i8_ref(&x, 4, &w, 6, &mut want);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn resize_for_overwrite_truncates_and_keeps_prefix() {
+        let mut v: Vec<i32> = vec![1, 2, 3];
+        resize_for_overwrite(&mut v, 2);
+        assert_eq!(v, vec![1, 2]);
+        resize_for_overwrite(&mut v, 5);
+        assert_eq!(v.len(), 5);
+        assert_eq!(&v[..2], &[1, 2]);
+        // The tail is POISON in debug builds / arbitrary in release —
+        // the write-all contract means callers never read it.
+        resize_for_overwrite(&mut v, 0);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn fused_epilogue_matches_unfused_composition() {
+        use crate::linalg::epilogue::{layernorm_rows_with_path, requant_with_path};
+        let mut rng = Xoshiro256::new(37);
+        // Sub-block, ragged, and multi-block (pool-spanning) row counts.
+        for (rows, d_in, d_out) in [(1usize, 4usize, 4usize), (5, 13, 17), (70, 32, 24), (130, 8, 8)]
+        {
+            let x = rand_i8(&mut rng, rows * d_in);
+            let w = rand_i8(&mut rng, d_out * d_in);
+            let packed = PackedGemm::pack(&w, d_out, d_in);
+            let residual: Vec<i8> = (0..rows * d_out).map(|_| rng.i8()).collect();
+            let gamma: Vec<i8> = (0..d_out).map(|_| rng.range_i64(48, 80) as i8).collect();
+            let beta: Vec<i8> = (0..d_out).map(|_| rng.i8()).collect();
+            let div = 3;
+            for path in [SimdPath::Scalar, SimdPath::Avx2] {
+                if path == SimdPath::Avx2 && !simd::avx2_available() {
+                    continue;
+                }
+                let label = format!("rows={rows} d_in={d_in} d_out={d_out} path={path:?}");
+                let mut acc = Vec::new();
+                packed.gemm_into_with_path(path, &x, &mut acc);
+                let mut got = vec![9i8; 3]; // stale scratch must be reshaped
+                // Requant.
+                let mut want = Vec::new();
+                requant_with_path(path, &acc, div, &mut want);
+                packed.gemm_fused_into_with_path(path, &x, &Epilogue::Requant { div }, &mut got);
+                assert_eq!(got, want, "requant {label}");
+                // Requant + ReLU.
+                let want_relu: Vec<i8> = want.iter().map(|&v| v.max(0)).collect();
+                packed.gemm_fused_into_with_path(path, &x, &Epilogue::RequantRelu { div }, &mut got);
+                assert_eq!(got, want_relu, "relu {label}");
+                // Requant + residual + LayerNorm.
+                let x32: Vec<i32> = want
+                    .iter()
+                    .zip(&residual)
+                    .map(|(&q, &r)| i32::from(r) + i32::from(q))
+                    .collect();
+                let mut want_ln = Vec::new();
+                layernorm_rows_with_path(path, &x32, d_out, &gamma, &beta, &mut want_ln);
+                let ep = Epilogue::RequantResidualLn {
+                    div,
+                    residual: &residual,
+                    gamma: &gamma,
+                    beta: &beta,
+                };
+                packed.gemm_fused_into_with_path(path, &x, &ep, &mut got);
+                assert_eq!(got, want_ln, "residual+ln {label}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rows × d_out")]
+    fn fused_rejects_residual_shape_mismatch() {
+        let packed = PackedGemm::pack(&[1i8; 12], 3, 4);
+        let ep = Epilogue::RequantResidualLn {
+            div: 1,
+            residual: &[0i8; 5], // should be 2 rows × 3 = 6
+            gamma: &[64i8; 3],
+            beta: &[0i8; 3],
+        };
+        packed.gemm_fused_into(&[0i8; 8], &ep, &mut Vec::new());
     }
 
     #[test]

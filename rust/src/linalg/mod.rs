@@ -47,13 +47,32 @@
 //! `tests/proptests.rs`.  [`dot_i8`] is the canonical int8 dot product
 //! every other helper folds down to.
 //!
+//! The [`epilogue`] module closes the memory-traffic gap the GEMM
+//! consolidation left open: [`PackedGemm::gemm_fused_into`] applies a
+//! caller-selected [`Epilogue`] (requant → optional residual add →
+//! optional integer LayerNorm) to each finished `MC`-row block while
+//! it is still cache-resident, so the i32 accumulator tile never
+//! round-trips through memory.  The standalone [`requant`] /
+//! [`layernorm_rows`] sweeps (for the call sites that stay unfused)
+//! live there too, vectorized behind the same dispatch;
+//! `HCCS_FORCE_UNFUSED=1` / [`scoped_fused`] flip the model layers
+//! back onto the standalone-sweep dataflow, which stays bit-exact.
+//!
 //! See `docs/ARCHITECTURE.md` §"Layer: linalg" for the packing diagram
-//! and the batch-axis dataflow, and `benches/gemm.rs` for the measured
-//! packed-vs-scalar win (`BENCH_gemm.json`).
+//! and the batch-axis dataflow, §"Layer: fused epilogues" for the
+//! fused loop order and exactness bounds, and `benches/gemm.rs` for
+//! the measured packed-vs-scalar and fused-vs-unfused wins
+//! (`BENCH_gemm.json`).
 
+pub mod epilogue;
 pub mod gemm;
 
+pub use epilogue::{
+    fused_active, layernorm_rows, layernorm_rows_with_path, requant, requant_with_path,
+    scoped_fused, set_fused_override, Epilogue, FusedOverrideGuard,
+};
 pub use gemm::{
     dot_i8, gemm_nt_bounded_into, gemm_nt_bounded_into_with_path, gemm_nt_into,
-    gemm_pv_bounded_into, gemm_pv_bounded_into_with_path, gemm_pv_into, matmul_i8_ref, PackedGemm,
+    gemm_pv_bounded_into, gemm_pv_bounded_into_with_path, gemm_pv_into, matmul_i8_ref,
+    resize_for_overwrite, PackedGemm, ScratchCell,
 };

@@ -21,7 +21,8 @@
 //!                                (seed-built causal decoder: cached-K/V greedy decode,
 //!                                 prints the generated tokens and tokens/s)
 //! hccs sim     [--device ml|mlv2] [--kernel bf16|i16_div|i8_clb] [--n N] [--tiles T] [--shards S]
-//!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile table)
+//!              [--model bert-tiny|bert-small] [--task T]  (adds the GEMM macro-tile and
+//!                             fused-epilogue memory-traffic tables)
 //!              [--roofline]  (measures the host packed GEMM on the encoder shapes and
 //!                             reports measured vs modeled MMAC/s; honors HCCS_FORCE_SCALAR)
 //! hccs calibrate [--n N] [--rows R] [--spread X]   (synthetic logit demo)
@@ -38,7 +39,7 @@ use hccs::error::{anyhow, bail, Context, Result};
 
 use hccs::aie_sim::device::{Device, DeviceKind};
 use hccs::aie_sim::kernels::KernelKind;
-use hccs::aie_sim::{gemm, roofline, scaling, tile};
+use hccs::aie_sim::{bytes, gemm, roofline, scaling, tile};
 use hccs::cli::Args;
 use hccs::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
 use hccs::data::TaskKind;
@@ -500,6 +501,33 @@ fn cmd_sim(args: &Args) -> Result<()> {
         println!(
             "    total: {total_tiles} macro-tiles, {total_cycles} cycles \
              ({inf_per_s:.0} inf/s GEMM-bound on one tile)"
+        );
+        // Epilogue memory-traffic table: the inter-kernel bytes the
+        // fused GEMM epilogues delete (the MAC work above is identical
+        // on both dataflows).
+        println!("  epilogue traffic (full-tile passes / bytes per inference):");
+        println!(
+            "    {:<28} {:>6} {:>14} {:>12} {:>12}",
+            "site", "calls", "passes u->f", "unfused B", "fused B"
+        );
+        let (mut unfused_b, mut fused_b) = (0u64, 0u64);
+        for t in bytes::encoder_epilogue_traffic(&cfg) {
+            println!(
+                "    {:<28} {:>6} {:>14} {:>12} {:>12}",
+                t.label,
+                t.calls,
+                format!("{} -> {}", t.unfused_passes, t.fused_passes),
+                t.unfused_total(),
+                t.fused_total(),
+            );
+            unfused_b += t.unfused_total();
+            fused_b += t.fused_total();
+        }
+        let (pu, pf) = bytes::layer_pass_counts(&cfg);
+        println!(
+            "    total: {unfused_b} -> {fused_b} bytes ({:.2}x less traffic), \
+             {pu} -> {pf} sweeps/layer",
+            bytes::bytes_moved_ratio(&cfg, cfg.seq_len),
         );
         // Valid-length sweep: the masked forward drops pad rows/keys,
         // so the GEMM cost of an inference scales with the density

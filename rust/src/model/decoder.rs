@@ -60,7 +60,9 @@ use crate::hccs::attention::{
 };
 use crate::hccs::calibrate::calibrate_rows_ragged;
 use crate::hccs::{HccsParams, T_I16};
-use crate::linalg::{gemm_nt_bounded_into, PackedGemm};
+use crate::linalg::{
+    fused_active, gemm_nt_bounded_into, resize_for_overwrite, Epilogue, PackedGemm,
+};
 use crate::rng::Xoshiro256;
 use crate::tokenizer::{PAD, SEP};
 
@@ -339,6 +341,8 @@ impl KvCache {
 #[derive(Default)]
 pub struct DecoderScratch {
     x: Vec<i8>,
+    /// Fused-path double buffer (see `EncoderScratch::x2`).
+    x2: Vec<i8>,
     x32: Vec<i32>,
     acc: Vec<i32>,
     q8: Vec<i8>,
@@ -578,7 +582,8 @@ impl NativeDecoder {
         let w = &self.weights;
 
         // Embed each session's new token at its own absolute position.
-        s.x32.resize(nb * d, 0);
+        // Write-all contract: the loop fills every cell.
+        resize_for_overwrite(&mut s.x32, nb * d);
         for (i, (&id, cache)) in tokens.iter().zip(caches.iter()).enumerate() {
             let tok = &w.tok_emb[id as usize * d..(id as usize + 1) * d];
             let pos = &w.pos_emb[cache.t * d..(cache.t + 1) * d];
@@ -588,20 +593,36 @@ impl NativeDecoder {
         }
         layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
 
+        // Divisors are always frozen here (decode never calibrates), so
+        // fusion is gated on the escape hatch alone.  Fused K/V requant
+        // still lands in the same k8/v8 staging rows the cache copies
+        // from — only the i32 round-trip disappears.
+        let fused = fused_active();
+
         for (li, lay) in w.layers.iter().enumerate() {
             let divs = &self.calib.divs[li].0;
-            lay.wq.gemm_into(&s.x, &mut s.acc);
-            requant(&s.acc, divs[Slot::Q as usize], &mut s.q8);
-            lay.wk.gemm_into(&s.x, &mut s.acc);
-            requant(&s.acc, divs[Slot::K as usize], &mut s.k8);
-            lay.wv.gemm_into(&s.x, &mut s.acc);
-            requant(&s.acc, divs[Slot::V as usize], &mut s.v8);
+            if fused {
+                let ep = Epilogue::Requant { div: divs[Slot::Q as usize] };
+                lay.wq.gemm_fused_into(&s.x, &ep, &mut s.q8);
+                let ep = Epilogue::Requant { div: divs[Slot::K as usize] };
+                lay.wk.gemm_fused_into(&s.x, &ep, &mut s.k8);
+                let ep = Epilogue::Requant { div: divs[Slot::V as usize] };
+                lay.wv.gemm_fused_into(&s.x, &ep, &mut s.v8);
+            } else {
+                lay.wq.gemm_into(&s.x, &mut s.acc);
+                requant(&s.acc, divs[Slot::Q as usize], &mut s.q8);
+                lay.wk.gemm_into(&s.x, &mut s.acc);
+                requant(&s.acc, divs[Slot::K as usize], &mut s.k8);
+                lay.wv.gemm_into(&s.x, &mut s.acc);
+                requant(&s.acc, divs[Slot::V as usize], &mut s.v8);
+            }
             for (i, cache) in caches.iter_mut().enumerate() {
                 let at = cache.t;
                 cache.store_rows(li, at, &s.k8[i * d..(i + 1) * d], &s.v8[i * d..(i + 1) * d]);
             }
 
-            s.ctx32.resize(nb * d, 0);
+            // Write-all contract: the head loop covers every column.
+            resize_for_overwrite(&mut s.ctx32, nb * d);
             for h in 0..heads {
                 let off = h * dk;
                 let hp = heads_at(&self.calib, li, h, heads);
@@ -615,7 +636,7 @@ impl NativeDecoder {
                     for r in 0..t_new {
                         s.kh.extend_from_slice(&cache.k8[li][r * d + off..r * d + off + dk]);
                     }
-                    s.acc_head.resize(t_new, 0);
+                    resize_for_overwrite(&mut s.acc_head, t_new);
                     gemm_nt_bounded_into(&s.qh, &s.kh, 1, t_new, t_new, dk, &mut s.acc_head);
 
                     match backend {
@@ -627,7 +648,8 @@ impl NativeDecoder {
                                 );
                                 s.vh.push(1);
                             }
-                            s.out_aug.resize(dk + 1, 0);
+                            // The attention mix overwrites every cell.
+                            resize_for_overwrite(&mut s.out_aug, dk + 1);
                             hccs_attention_step_from_acc(
                                 &s.acc_head,
                                 &s.vh,
@@ -680,24 +702,46 @@ impl NativeDecoder {
             }
 
             requant(&s.ctx32, divs[Slot::Ctx as usize], &mut s.c8);
-            lay.wo.gemm_into(&s.c8, &mut s.acc);
-            requant(&s.acc, divs[Slot::O as usize], &mut s.c8);
-            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
-                *o = i32::from(a) + i32::from(b);
-            }
-            layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+            if fused {
+                let ep = Epilogue::RequantResidualLn {
+                    div: divs[Slot::O as usize],
+                    residual: &s.x,
+                    gamma: &lay.ln1_gamma,
+                    beta: &lay.ln1_beta,
+                };
+                lay.wo.gemm_fused_into(&s.c8, &ep, &mut s.x2);
+                std::mem::swap(&mut s.x, &mut s.x2);
 
-            lay.w1.gemm_into(&s.x, &mut s.acc);
-            requant(&s.acc, divs[Slot::F1 as usize], &mut s.h8);
-            for v in s.h8.iter_mut() {
-                *v = (*v).max(0);
+                let ep = Epilogue::RequantRelu { div: divs[Slot::F1 as usize] };
+                lay.w1.gemm_fused_into(&s.x, &ep, &mut s.h8);
+                let ep = Epilogue::RequantResidualLn {
+                    div: divs[Slot::F2 as usize],
+                    residual: &s.x,
+                    gamma: &lay.ln2_gamma,
+                    beta: &lay.ln2_beta,
+                };
+                lay.w2.gemm_fused_into(&s.h8, &ep, &mut s.x2);
+                std::mem::swap(&mut s.x, &mut s.x2);
+            } else {
+                lay.wo.gemm_into(&s.c8, &mut s.acc);
+                requant(&s.acc, divs[Slot::O as usize], &mut s.c8);
+                for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                    *o = i32::from(a) + i32::from(b);
+                }
+                layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+
+                lay.w1.gemm_into(&s.x, &mut s.acc);
+                requant(&s.acc, divs[Slot::F1 as usize], &mut s.h8);
+                for v in s.h8.iter_mut() {
+                    *v = (*v).max(0);
+                }
+                lay.w2.gemm_into(&s.h8, &mut s.acc);
+                requant(&s.acc, divs[Slot::F2 as usize], &mut s.c8);
+                for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                    *o = i32::from(a) + i32::from(b);
+                }
+                layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
             }
-            lay.w2.gemm_into(&s.h8, &mut s.acc);
-            requant(&s.acc, divs[Slot::F2 as usize], &mut s.c8);
-            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
-                *o = i32::from(a) + i32::from(b);
-            }
-            layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
         }
 
         w.w_lm.gemm_into(&s.x, &mut s.acc);
@@ -855,7 +899,8 @@ fn forward_causal_impl(
     let lmax = *lens.iter().max().expect("non-empty batch");
 
     // Embed: tok + pos (positions restart per example), integer LN.
-    s.x32.resize(total * d, 0);
+    // The loop below writes every element of the freshly-sized tile.
+    resize_for_overwrite(&mut s.x32, total * d);
     let mut row = 0usize;
     for &len in lens {
         for t in 0..len {
@@ -870,16 +915,30 @@ fn forward_causal_impl(
     }
     layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
 
+    // Fused epilogues need frozen divisors: a Build pass derives each
+    // divisor FROM the standalone i32 tile, so calibration always runs
+    // the unfused dataflow and only Run-mode prefills fuse.
+    let fused = matches!(calib, CalibCtx::Run(_)) && fused_active();
+
     for (li, lay) in w.layers.iter().enumerate() {
-        lay.wq.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::Q, 1, &s.acc);
-        requant(&s.acc, div, &mut s.q8);
-        lay.wk.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::K, 1, &s.acc);
-        requant(&s.acc, div, &mut s.k8);
-        lay.wv.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::V, 1, &s.acc);
-        requant(&s.acc, div, &mut s.v8);
+        if fused {
+            let div = calib.div(li, Slot::Q, 1, &[]);
+            lay.wq.gemm_fused_into(&s.x, &Epilogue::Requant { div }, &mut s.q8);
+            let div = calib.div(li, Slot::K, 1, &[]);
+            lay.wk.gemm_fused_into(&s.x, &Epilogue::Requant { div }, &mut s.k8);
+            let div = calib.div(li, Slot::V, 1, &[]);
+            lay.wv.gemm_fused_into(&s.x, &Epilogue::Requant { div }, &mut s.v8);
+        } else {
+            lay.wq.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::Q, 1, &s.acc);
+            requant(&s.acc, div, &mut s.q8);
+            lay.wk.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::K, 1, &s.acc);
+            requant(&s.acc, div, &mut s.k8);
+            lay.wv.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::V, 1, &s.acc);
+            requant(&s.acc, div, &mut s.v8);
+        }
         if let Some(cache) = cache.as_deref_mut() {
             cache.store_rows(li, 0, &s.k8[..total * d], &s.v8[..total * d]);
         }
@@ -888,12 +947,16 @@ fn forward_causal_impl(
         // example (upper triangle computed but never read — the causal
         // dispatch masks it), then one grouped causal HCCS pass (or
         // the f32 row loop) over every position of every example.
-        s.ctx32.resize(total * d, 0);
+        // Each head writes its own dk-column stripe of every ctx32
+        // row, so the heads jointly overwrite the whole tile.
+        resize_for_overwrite(&mut s.ctx32, total * d);
         for h in 0..heads {
             let off = h * dk;
             gather_head(&s.q8, d, off, dk, &mut s.qh);
             gather_head(&s.k8, d, off, dk, &mut s.kh);
-            s.acc_head.resize(total * lmax, 0);
+            // The bounded QK^T kernel zeroes the pad columns itself
+            // and the per-example row spans tile the full height.
+            resize_for_overwrite(&mut s.acc_head, total * lmax);
             let mut roff = 0usize;
             for &len in lens {
                 gemm_nt_bounded_into(
@@ -916,7 +979,8 @@ fn forward_causal_impl(
                         s.vh.extend_from_slice(&vrow[off..off + dk]);
                         s.vh.push(1);
                     }
-                    s.out_aug.resize(total * (dk + 1), 0);
+                    // The attention mix overwrites every cell.
+                    resize_for_overwrite(&mut s.out_aug, total * (dk + 1));
                     hccs_attention_causal_from_acc(
                         &s.acc_head,
                         &s.vh,
@@ -976,29 +1040,54 @@ fn forward_causal_impl(
             }
         }
 
+        // The ctx requant stays standalone even when fused: its
+        // producer is the attention mix, not a GEMM.
         let div = calib.div(li, Slot::Ctx, 1, &s.ctx32);
         requant(&s.ctx32, div, &mut s.c8);
-        lay.wo.gemm_into(&s.c8, &mut s.acc);
-        let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
-        requant(&s.acc, div, &mut s.c8);
-        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
-            *o = i32::from(a) + i32::from(b);
-        }
-        layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+        if fused {
+            let ep = Epilogue::RequantResidualLn {
+                div: calib.div(li, Slot::O, OUT_DAMP, &[]),
+                residual: &s.x,
+                gamma: &lay.ln1_gamma,
+                beta: &lay.ln1_beta,
+            };
+            lay.wo.gemm_fused_into(&s.c8, &ep, &mut s.x2);
+            std::mem::swap(&mut s.x, &mut s.x2);
 
-        lay.w1.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::F1, 1, &s.acc);
-        requant(&s.acc, div, &mut s.h8);
-        for v in s.h8.iter_mut() {
-            *v = (*v).max(0);
+            let div = calib.div(li, Slot::F1, 1, &[]);
+            lay.w1.gemm_fused_into(&s.x, &Epilogue::RequantRelu { div }, &mut s.h8);
+
+            let ep = Epilogue::RequantResidualLn {
+                div: calib.div(li, Slot::F2, OUT_DAMP, &[]),
+                residual: &s.x,
+                gamma: &lay.ln2_gamma,
+                beta: &lay.ln2_beta,
+            };
+            lay.w2.gemm_fused_into(&s.h8, &ep, &mut s.x2);
+            std::mem::swap(&mut s.x, &mut s.x2);
+        } else {
+            lay.wo.gemm_into(&s.c8, &mut s.acc);
+            let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
+            requant(&s.acc, div, &mut s.c8);
+            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                *o = i32::from(a) + i32::from(b);
+            }
+            layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+
+            lay.w1.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::F1, 1, &s.acc);
+            requant(&s.acc, div, &mut s.h8);
+            for v in s.h8.iter_mut() {
+                *v = (*v).max(0);
+            }
+            lay.w2.gemm_into(&s.h8, &mut s.acc);
+            let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
+            requant(&s.acc, div, &mut s.c8);
+            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                *o = i32::from(a) + i32::from(b);
+            }
+            layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
         }
-        lay.w2.gemm_into(&s.h8, &mut s.acc);
-        let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
-        requant(&s.acc, div, &mut s.c8);
-        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
-            *o = i32::from(a) + i32::from(b);
-        }
-        layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
     }
 
     // LM head over every position, then the calibrated bias recentre.

@@ -63,7 +63,9 @@ use crate::error::{anyhow, bail, Result};
 use crate::hccs::attention::{hccs_attention_ragged_from_acc, AttentionScratch};
 use crate::hccs::calibrate::calibrate_rows_ragged;
 use crate::hccs::{HccsParams, T_I16};
-use crate::linalg::{gemm_nt_bounded_into, PackedGemm};
+use crate::linalg::{
+    fused_active, gemm_nt_bounded_into, resize_for_overwrite, Epilogue, PackedGemm,
+};
 use crate::rng::Xoshiro256;
 
 use super::backend::SoftmaxBackend;
@@ -309,6 +311,10 @@ pub struct EncoderScratch {
     /// Per-example valid lengths of the current batch (pad-tail scan).
     lens: Vec<usize>,
     x: Vec<i8>,
+    /// Fused-path double buffer: `RequantResidualLn` reads the residual
+    /// stream out of `x` while writing the normalized layer output
+    /// here, then the two swap.
+    x2: Vec<i8>,
     x32: Vec<i32>,
     acc: Vec<i32>,
     q8: Vec<i8>,
@@ -657,7 +663,9 @@ fn forward_impl(
     // integer LayerNorm.  Row `off_b + t` of the compacted tile is
     // example b's position t, so the position embedding is unchanged
     // by how far the example was padded.
-    s.x32.resize(total * d, 0);
+    // Write-all contract: the loop below fills every cell of every
+    // valid row, so the tile needs no zero fill.
+    resize_for_overwrite(&mut s.x32, total * d);
     let mut row = 0usize;
     for (b, &len) in s.lens.iter().enumerate() {
         for t in 0..len {
@@ -674,19 +682,37 @@ fn forward_impl(
     }
     layernorm_rows(&s.x32, d, &w.ln_emb_gamma, &w.ln_emb_beta, &mut s.x);
 
+    // The fused dataflow needs frozen divisors (the Build pass derives
+    // them *from* the standalone i32 tiles, so calibration always runs
+    // unfused) and honours the HCCS_FORCE_UNFUSED escape hatch.  Both
+    // dataflows are bit-exact — pinned by tests/differential.rs and the
+    // fused proptests.
+    let fused = matches!(calib, CalibCtx::Run(_)) && fused_active();
+
     for (li, lay) in w.layers.iter().enumerate() {
         // Q/K/V projections: one packed GEMM each over the whole
         // compacted (Σ len, d) activation tile — pad rows never exist,
-        // so short traffic pays for short tiles.
-        lay.wq.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::Q, 1, &s.acc);
-        requant(&s.acc, div, &mut s.q8);
-        lay.wk.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::K, 1, &s.acc);
-        requant(&s.acc, div, &mut s.k8);
-        lay.wv.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::V, 1, &s.acc);
-        requant(&s.acc, div, &mut s.v8);
+        // so short traffic pays for short tiles.  Fused: the requant
+        // runs inside the GEMM epilogue on cache-hot row blocks and the
+        // i32 accumulator tile never reaches memory.
+        if fused {
+            let div = calib.div(li, Slot::Q, 1, &[]);
+            lay.wq.gemm_fused_into(&s.x, &Epilogue::Requant { div }, &mut s.q8);
+            let div = calib.div(li, Slot::K, 1, &[]);
+            lay.wk.gemm_fused_into(&s.x, &Epilogue::Requant { div }, &mut s.k8);
+            let div = calib.div(li, Slot::V, 1, &[]);
+            lay.wv.gemm_fused_into(&s.x, &Epilogue::Requant { div }, &mut s.v8);
+        } else {
+            lay.wq.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::Q, 1, &s.acc);
+            requant(&s.acc, div, &mut s.q8);
+            lay.wk.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::K, 1, &s.acc);
+            requant(&s.acc, div, &mut s.k8);
+            lay.wv.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::V, 1, &s.acc);
+            requant(&s.acc, div, &mut s.v8);
+        }
 
         // Attention, head by head across the whole batch: gather the
         // head's Q/K, build the stacked (Σ len, lmax) QK^T accumulator
@@ -694,12 +720,17 @@ fn forward_impl(
         // only — then normalize every valid row of every example in ONE
         // masked batched HCCS (or f32 softmax) pass.  Calibration reads
         // the same tile.
-        s.ctx32.resize(total * d, 0);
+        // Write-all contract: each head h writes columns [h·dk, h·dk+dk)
+        // of every row (both backends), so the union over the head loop
+        // covers the whole tile — no zero fill needed.
+        resize_for_overwrite(&mut s.ctx32, total * d);
         for h in 0..heads {
             let off = h * dk;
             gather_head(&s.q8, d, off, dk, &mut s.qh);
             gather_head(&s.k8, d, off, dk, &mut s.kh);
-            s.acc_head.resize(total * lmax, 0);
+            // Write-all contract: the bounded QK^T computes the active
+            // columns and zeroes the pads of each example's region.
+            resize_for_overwrite(&mut s.acc_head, total * lmax);
             let mut roff = 0usize;
             for &len in s.lens.iter() {
                 gemm_nt_bounded_into(
@@ -725,7 +756,8 @@ fn forward_impl(
                         s.vh.extend_from_slice(&vrow[off..off + dk]);
                         s.vh.push(1);
                     }
-                    s.out_aug.resize(total * (dk + 1), 0);
+                    // The attention mix overwrites every cell.
+                    resize_for_overwrite(&mut s.out_aug, total * (dk + 1));
                     hccs_attention_ragged_from_acc(
                         &s.acc_head,
                         &s.vh,
@@ -761,7 +793,7 @@ fn forward_impl(
                     for &len in s.lens.iter() {
                         for _ in 0..len {
                             let rowacc = &s.acc_head[row * lmax..row * lmax + len];
-                            s.phat.resize(len, 0);
+                            resize_for_overwrite(&mut s.phat, len);
                             s.grid.clear();
                             s.grid.extend(
                                 rowacc
@@ -797,31 +829,63 @@ fn forward_impl(
             }
         }
 
-        // Attention output projection + damped residual write.
+        // Attention output projection + damped residual write.  The
+        // context requant is not a GEMM epilogue (its producer is the
+        // attention mix), so it stays a standalone — now vectorized —
+        // sweep on both dataflows.
         let div = calib.div(li, Slot::Ctx, 1, &s.ctx32);
         requant(&s.ctx32, div, &mut s.c8);
-        lay.wo.gemm_into(&s.c8, &mut s.acc);
-        let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
-        requant(&s.acc, div, &mut s.c8);
-        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
-            *o = i32::from(a) + i32::from(b);
-        }
-        layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+        if fused {
+            // Requant + residual + LayerNorm ride the Wo epilogue: the
+            // residual stream is read out of `x` while the normalized
+            // output lands in the `x2` double buffer, then they swap.
+            let div = calib.div(li, Slot::O, OUT_DAMP, &[]);
+            let ep = Epilogue::RequantResidualLn {
+                div,
+                residual: &s.x,
+                gamma: &lay.ln1_gamma,
+                beta: &lay.ln1_beta,
+            };
+            lay.wo.gemm_fused_into(&s.c8, &ep, &mut s.x2);
+            std::mem::swap(&mut s.x, &mut s.x2);
 
-        // FFN + damped residual write.
-        lay.w1.gemm_into(&s.x, &mut s.acc);
-        let div = calib.div(li, Slot::F1, 1, &s.acc);
-        requant(&s.acc, div, &mut s.h8);
-        for v in s.h8.iter_mut() {
-            *v = (*v).max(0);
+            // FFN: ReLU fuses into the up-projection epilogue, the
+            // residual + LayerNorm into the down-projection epilogue.
+            let div = calib.div(li, Slot::F1, 1, &[]);
+            lay.w1.gemm_fused_into(&s.x, &Epilogue::RequantRelu { div }, &mut s.h8);
+            let div = calib.div(li, Slot::F2, OUT_DAMP, &[]);
+            let ep = Epilogue::RequantResidualLn {
+                div,
+                residual: &s.x,
+                gamma: &lay.ln2_gamma,
+                beta: &lay.ln2_beta,
+            };
+            lay.w2.gemm_fused_into(&s.h8, &ep, &mut s.x2);
+            std::mem::swap(&mut s.x, &mut s.x2);
+        } else {
+            lay.wo.gemm_into(&s.c8, &mut s.acc);
+            let div = calib.div(li, Slot::O, OUT_DAMP, &s.acc);
+            requant(&s.acc, div, &mut s.c8);
+            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                *o = i32::from(a) + i32::from(b);
+            }
+            layernorm_rows(&s.x32, d, &lay.ln1_gamma, &lay.ln1_beta, &mut s.x);
+
+            // FFN + damped residual write.
+            lay.w1.gemm_into(&s.x, &mut s.acc);
+            let div = calib.div(li, Slot::F1, 1, &s.acc);
+            requant(&s.acc, div, &mut s.h8);
+            for v in s.h8.iter_mut() {
+                *v = (*v).max(0);
+            }
+            lay.w2.gemm_into(&s.h8, &mut s.acc);
+            let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
+            requant(&s.acc, div, &mut s.c8);
+            for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
+                *o = i32::from(a) + i32::from(b);
+            }
+            layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
         }
-        lay.w2.gemm_into(&s.h8, &mut s.acc);
-        let div = calib.div(li, Slot::F2, OUT_DAMP, &s.acc);
-        requant(&s.acc, div, &mut s.c8);
-        for ((o, &a), &b) in s.x32.iter_mut().zip(&s.x).zip(&s.c8) {
-            *o = i32::from(a) + i32::from(b);
-        }
-        layernorm_rows(&s.x32, d, &lay.ln2_gamma, &lay.ln2_beta, &mut s.x);
     }
 
     // Mean-pool over each example's *valid* positions (each pooled

@@ -7,19 +7,22 @@
 //! Three layers of coverage:
 //!
 //! 1. **Kernel-level**: seeded random ragged shapes through the packed
-//!    GEMM, the column-bounded `gemm_nt`/`gemm_pv` attention forms, and
-//!    the HCCS batch engine (all four `OutputPath` × `Reciprocal`
-//!    modes, masked and unmasked), with adversarial rows (all-negative,
-//!    constant, max-at-tail) mixed into every tile.  On divergence the
-//!    harness reports the first differing cell plus the full
-//!    reproduction context (seed, shape, θ).
+//!    GEMM, the fused GEMM epilogues and their standalone
+//!    requant/LayerNorm sweeps, the column-bounded `gemm_nt`/`gemm_pv`
+//!    attention forms, and the HCCS batch engine (all four
+//!    `OutputPath` × `Reciprocal` modes, masked and unmasked), with
+//!    adversarial rows (all-negative, constant, max-at-tail) mixed
+//!    into every tile.  On divergence the harness reports the first
+//!    differing cell plus the full reproduction context (seed, shape,
+//!    θ).
 //! 2. **Golden vectors**: the committed `golden_vectors.json` oracle
 //!    outputs must come back bit-exact from *both* paths — not just
 //!    path-agreement but agreement with the numpy-derived ground truth.
 //! 3. **Full model**: `forward_batch` logits are invariant across
-//!    worker-pool sizes (1/2/8) and across forced-scalar vs default
-//!    dispatch, and a panicking pool job propagates without poisoning
-//!    the pool for subsequent GEMM passes.
+//!    worker-pool sizes (1/2/8), across forced-scalar vs default
+//!    dispatch, and across fused vs forced-unfused epilogue dataflows,
+//!    and a panicking pool job propagates without poisoning the pool
+//!    for subsequent GEMM passes.
 //!
 //! On hosts without AVX2 the path-agreement tests skip loudly (there is
 //! only one path to run); the golden and pool tests still execute.
@@ -30,7 +33,8 @@ use hccs::hccs::{
 };
 use hccs::json::Value;
 use hccs::linalg::{
-    gemm_nt_bounded_into_with_path, gemm_pv_bounded_into_with_path, matmul_i8_ref, PackedGemm,
+    gemm_nt_bounded_into_with_path, gemm_pv_bounded_into_with_path, layernorm_rows_with_path,
+    matmul_i8_ref, requant_with_path, scoped_fused, Epilogue, PackedGemm,
 };
 use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
 use hccs::rng::Xoshiro256;
@@ -176,6 +180,85 @@ fn pv_bounded_paths_agree_on_seeded_ragged_shapes() {
                 let mut out = vec![0i32; m * dv];
                 gemm_pv_bounded_into_with_path(path, &p, &v, m, c, c_active, dv, &mut out);
                 out
+            });
+        }
+    }
+}
+
+#[test]
+fn requant_and_layernorm_paths_agree_on_adversarial_inputs() {
+    // The standalone epilogue sweeps (unfused call sites: embeddings,
+    // ctx requant, classifier pooling) run vectorized behind the same
+    // dispatch — pin both paths on rail-heavy accumulators and on a
+    // huge-magnitude row that forces the LN guard's scalar fallback.
+    let shapes = [(1usize, 1usize), (3, 7), (5, 8), (13, 100), (64, 24)];
+    for (seed, &(rows, d)) in (0u64..).zip(shapes.iter()) {
+        let mut rng = Xoshiro256::new(0x9e97 + seed);
+        let mut accs: Vec<i32> =
+            (0..rows * d).map(|_| rng.range_i64(-2_000_000, 2_000_000) as i32).collect();
+        for (i, rail) in [i32::MIN, i32::MAX, 0, -1, 1].into_iter().enumerate() {
+            if i < accs.len() {
+                accs[i] = rail;
+            }
+        }
+        for div in [1i32, 3, 716, i32::MAX] {
+            let ctx = format!("requant seed={seed:#x} rows={rows} d={d} div={div}");
+            assert_paths_agree("requant", &ctx, |path| {
+                let mut out = Vec::new();
+                requant_with_path(path, &accs, div, &mut out);
+                out.iter().map(|&v| i32::from(v)).collect()
+            });
+        }
+        // LN inputs: residual-sum magnitudes (|v| ≤ 255) on most rows,
+        // plus one row pushed past the vectorization guard.
+        let mut x32: Vec<i32> = (0..rows * d).map(|_| rng.range_i64(-255, 255) as i32).collect();
+        for v in x32[..d].iter_mut() {
+            *v = rng.range_i64(-2_000_000, 2_000_000) as i32;
+        }
+        let gamma: Vec<i8> = (0..d).map(|_| 48 + rng.below(33) as i8).collect();
+        let beta: Vec<i8> = (0..d).map(|_| (rng.below(17) as i64 - 8) as i8).collect();
+        let ctx = format!("layernorm seed={seed:#x} rows={rows} d={d}");
+        assert_paths_agree("layernorm_rows", &ctx, |path| {
+            let mut out = Vec::new();
+            layernorm_rows_with_path(path, &x32, d, &gamma, &beta, &mut out);
+            out.iter().map(|&v| i32::from(v)).collect()
+        });
+    }
+}
+
+#[test]
+fn fused_epilogue_paths_agree_on_seeded_shapes() {
+    // The fused GEMM epilogue (requant → residual → LN applied per
+    // MC-row block) through both dispatch paths, across the row-block
+    // and panel edges.
+    let shapes = [(1usize, 1usize, 1usize), (5, 7, 9), (64, 64, 24), (65, 33, 16), (130, 31, 40)];
+    for (seed, &(m, k, n)) in (0u64..).zip(shapes.iter()) {
+        let mut rng = Xoshiro256::new(0xf05e + seed);
+        let x = adversarial_tile(&mut rng, m, k);
+        let w: Vec<i8> = (0..n * k).map(|_| rng.i8()).collect();
+        let packed = PackedGemm::pack(&w, n, k);
+        let residual: Vec<i8> = (0..m * n).map(|_| rng.i8()).collect();
+        let gamma: Vec<i8> = (0..n).map(|_| 48 + rng.below(33) as i8).collect();
+        let beta: Vec<i8> = (0..n).map(|_| (rng.below(17) as i64 - 8) as i8).collect();
+        let eps = [
+            ("requant", Epilogue::Requant { div: 3 }),
+            ("requant+relu", Epilogue::RequantRelu { div: 7 }),
+            (
+                "requant+res+ln",
+                Epilogue::RequantResidualLn {
+                    div: 713,
+                    residual: &residual,
+                    gamma: &gamma,
+                    beta: &beta,
+                },
+            ),
+        ];
+        for (label, ep) in &eps {
+            let ctx = format!("fused epilogue {label} seed={seed:#x} m={m} k={k} n={n}");
+            assert_paths_agree("gemm_fused_into", &ctx, |path| {
+                let mut out = Vec::new();
+                packed.gemm_fused_into_with_path(path, &x, ep, &mut out);
+                out.iter().map(|&v| i32::from(v)).collect()
             });
         }
     }
@@ -341,6 +424,25 @@ fn forward_batch_forced_scalar_matches_default_dispatch() {
         batch_logits(&model, &ids, &segs)
     };
     assert_eq!(forced, default, "forced-scalar logits differ from default dispatch");
+}
+
+/// The fused epilogue dataflow must reproduce the standalone-sweep
+/// dataflow byte-for-byte on full-model logits — the `scoped_fused`
+/// override is the in-process face of `HCCS_FORCE_UNFUSED=1`.
+#[test]
+fn forward_batch_fused_matches_forced_unfused() {
+    let task = hccs::data::TaskKind::Sst2s;
+    let model = NativeModel::new(ModelConfig::bert_tiny(task), task, 42).expect("model build");
+    let (ids, segs) = bench_workload(&model, 6);
+    let fused = {
+        let _guard = scoped_fused(true);
+        batch_logits(&model, &ids, &segs)
+    };
+    let unfused = {
+        let _guard = scoped_fused(false);
+        batch_logits(&model, &ids, &segs)
+    };
+    assert_eq!(fused, unfused, "fused epilogue logits differ from the unfused dataflow");
 }
 
 /// A panicking block propagates to the submitting thread and does NOT

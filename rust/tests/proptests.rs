@@ -12,10 +12,20 @@ use hccs::hccs::{
     T_I16, T_I8,
 };
 use hccs::json::{FrameLimits, StreamingFramer};
-use hccs::linalg::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, PackedGemm};
-use hccs::model::{EncoderScratch, ModelConfig, NativeModel, SoftmaxBackend};
+use hccs::linalg::{dot_i8, gemm_nt_into, gemm_pv_into, matmul_i8_ref, scoped_fused, PackedGemm};
+use hccs::model::{
+    DecoderScratch, EncoderScratch, ModelConfig, NativeDecoder, NativeModel, SoftmaxBackend,
+};
 use hccs::proptest_lite::{check, shrink_int, Config};
 use hccs::rng::Xoshiro256;
+use hccs::simd::{scoped_override, SimdPath};
+
+/// Serializes the two fused-epilogue properties: the fused override is
+/// a process-wide atomic (like the SIMD override, flipping it changes
+/// *which* code computes a result, never the result), so the tests that
+/// compare the two legs take this lock to keep each comparison
+/// meaningful rather than racing each other's guards.
+static FUSED_TOGGLE: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// Draw a feasible θ uniformly from the Eq. (11) region for length n.
 fn feasible_theta(rng: &mut Xoshiro256, n: usize) -> HccsParams {
@@ -580,6 +590,188 @@ fn prop_padding_invariance_bit_identical_logits() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// Fused GEMM epilogues vs the standalone-sweep dataflow
+// ---------------------------------------------------------------------------
+
+/// The fused epilogue path (requant / residual-add / integer LayerNorm
+/// applied per MC row block inside `PackedGemm`) must be **bit-exact**
+/// with the standalone-sweep dataflow it replaced
+/// (`HCCS_FORCE_UNFUSED=1`), for all four HCCS modes, on both SIMD
+/// dispatch legs, across mixed batch sizes with ragged valid lengths
+/// and a reused scratch.  This is the contract that makes the fusion a
+/// pure dataflow change: same integers, fewer full-tile passes.
+#[test]
+fn prop_fused_path_bit_exact_with_forced_unfused() {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        seq_len: task.max_len(),
+        vocab: hccs::data::VOCAB_SIZE as usize,
+        n_classes: 2,
+    };
+    let model = NativeModel::new(cfg, task, 7).expect("model build");
+    // Both dispatch legs when the host has AVX2; twice scalar otherwise
+    // (the second leg is then redundant but still correct).
+    let legs = [hccs::simd::active(), SimdPath::Scalar];
+    let lock = FUSED_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    check(
+        "fused-vs-forced-unfused",
+        Config { cases: 6, ..Default::default() },
+        |rng| (rng.below(u64::MAX), 1 + rng.below(4) as usize, 1 + rng.below(4) as usize),
+        |_| vec![],
+        |&(input_seed, bs_a, bs_b)| {
+            let mut generator = WorkloadGen::new(task, input_seed);
+            let examples: Vec<_> = (0..bs_a + bs_b).map(|_| generator.next_example()).collect();
+            let mut scratch = EncoderScratch::default();
+            for &leg in &legs {
+                let _simd = scoped_override(leg);
+                for backend in SoftmaxBackend::hccs_modes() {
+                    // Two batch sizes back to back through the same
+                    // scratch, each run fused then forced-unfused.
+                    for (lo, hi) in [(0, bs_a), (bs_a, bs_a + bs_b)] {
+                        let batch = &examples[lo..hi];
+                        let mut ids = Vec::new();
+                        let mut segs = Vec::new();
+                        for ex in batch {
+                            ids.extend_from_slice(&ex.ids);
+                            segs.extend_from_slice(&ex.segments);
+                        }
+                        let fused = {
+                            let _g = scoped_fused(true);
+                            model
+                                .forward_batch(&ids, &segs, backend, &mut scratch)
+                                .map_err(|e| format!("fused forward_batch: {e}"))?
+                        };
+                        let unfused = {
+                            let _g = scoped_fused(false);
+                            model
+                                .forward_batch(&ids, &segs, backend, &mut scratch)
+                                .map_err(|e| format!("unfused forward_batch: {e}"))?
+                        };
+                        for (i, (f, u)) in fused.iter().zip(&unfused).enumerate() {
+                            if f.logits_i32 != u.logits_i32
+                                || f.predicted != u.predicted
+                                || f.logits != u.logits
+                            {
+                                return Err(format!(
+                                    "batch[{i}] fused diverged from forced-unfused under {} \
+                                     on {:?} (batch size {}, valid_len {}): {:?} vs {:?}",
+                                    backend.name(),
+                                    leg,
+                                    batch.len(),
+                                    batch[i].valid_len,
+                                    f.logits_i32,
+                                    u.logits_i32
+                                ));
+                            }
+                        }
+                        // The single-example entry point routes through
+                        // the same fused forward; pin it on one example.
+                        let ex = &batch[0];
+                        let fused_one = {
+                            let _g = scoped_fused(true);
+                            model
+                                .forward(&ex.ids, &ex.segments, backend, &mut scratch)
+                                .map_err(|e| format!("fused forward: {e}"))?
+                        };
+                        let unfused_one = {
+                            let _g = scoped_fused(false);
+                            model
+                                .forward(&ex.ids, &ex.segments, backend, &mut scratch)
+                                .map_err(|e| format!("unfused forward: {e}"))?
+                        };
+                        if fused_one.logits_i32 != unfused_one.logits_i32 {
+                            return Err(format!(
+                                "single forward fused diverged from forced-unfused under {} \
+                                 on {leg:?}",
+                                backend.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    drop(lock);
+}
+
+/// The decode contract re-run under the fused epilogue path: a decode
+/// loop over `t = 1..=n` cached-K/V steps produces bit-identical
+/// per-step logits to the full causal prefill at length `n` — and both
+/// equal the forced-unfused prefill — in all four HCCS modes.  The
+/// decoder hot loop routes its projections through the fused epilogues,
+/// so this pins step-vs-prefill *and* fused-vs-unfused at once.
+#[test]
+fn prop_decoder_step_matches_prefill_under_fused_epilogues() {
+    let task = TaskKind::Sst2s;
+    let cfg = ModelConfig {
+        layers: 2,
+        heads: 2,
+        d_model: 32,
+        d_ff: 64,
+        seq_len: task.max_len(),
+        vocab: hccs::data::VOCAB_SIZE as usize,
+        n_classes: 2,
+    };
+    let dec = NativeDecoder::new(cfg, task, 29).expect("decoder build");
+    let nc = dec.cfg.vocab;
+    let lock = FUSED_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    check(
+        "decoder-step-vs-prefill-fused",
+        Config { cases: 4, ..Default::default() },
+        |rng| rng.below(u64::MAX),
+        |_| vec![],
+        |&input_seed| {
+            let mut generator = WorkloadGen::new(task, input_seed);
+            let ex = std::iter::repeat_with(|| generator.next_example())
+                .find(|ex| ex.valid_len >= 4)
+                .expect("generator yields a usable prompt");
+            let ids = &ex.ids[..ex.valid_len];
+            let n = ids.len();
+            let mut s = DecoderScratch::default();
+            for backend in SoftmaxBackend::hccs_modes() {
+                let unfused_full = {
+                    let _g = scoped_fused(false);
+                    let mut cache = dec.new_cache();
+                    dec.prefill(ids, backend, &mut cache, &mut s)
+                        .map_err(|e| format!("unfused prefill: {e}"))?
+                };
+                let _g = scoped_fused(true);
+                let mut cache = dec.new_cache();
+                let full = dec
+                    .prefill(ids, backend, &mut cache, &mut s)
+                    .map_err(|e| format!("fused prefill: {e}"))?;
+                if full != unfused_full {
+                    return Err(format!(
+                        "fused prefill diverged from forced-unfused under {}",
+                        backend.name()
+                    ));
+                }
+                let mut step_cache = dec.new_cache();
+                for (t, &id) in ids.iter().enumerate() {
+                    let row = dec
+                        .step(id, backend, &mut step_cache, &mut s)
+                        .map_err(|e| format!("step {t}: {e}"))?;
+                    if row != full[t * nc..(t + 1) * nc] {
+                        return Err(format!(
+                            "fused step {} diverged from prefill row under {} (prompt len {n})",
+                            t + 1,
+                            backend.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    drop(lock);
 }
 
 // ---------------------------------------------------------------------------

@@ -24,9 +24,12 @@ by its JSON path with array elements labeled by their identifying
 string field (``name`` / ``backend`` / ``mode`` / ``shards`` / ...).
 A small allowlist of non-throughput trajectory metrics rides along:
 ``roofline_pct`` (measured host GEMM as a percentage of the modeled
-AIE tile — higher is better, same delta semantics as a throughput) and
+AIE tile — higher is better, same delta semantics as a throughput),
 ``shed_fraction`` (share of requests shed at each overload sweep point
-— lower is better, so the regression warning fires on increases).
+— lower is better, so the regression warning fires on increases),
+``fused_speedup`` (measured fused-epilogue speedup vs the forced-
+unfused dataflow) and ``bytes_moved_ratio`` (modeled epilogue traffic
+saved by fusion).
 
 The tool NEVER fails the job: bench numbers from smoke budgets are
 noisy, so regressions warn loudly but exit 0.  Missing token, first run
@@ -52,8 +55,14 @@ THROUGHPUT_KEY_MARKER = "per_s"  # matches *_per_s and *_per_second
 #                   (higher is better, throughput delta semantics);
 #   shed_fraction — share of requests shed per overload sweep point
 #                   (0..1, LOWER is better: a rising shed fraction at
-#                   the same offered load means capacity regressed).
-EXTRA_METRIC_KEYS = ("roofline_pct", "shed_fraction")
+#                   the same offered load means capacity regressed);
+#   fused_speedup — measured fused-epilogue speedup over the forced-
+#                   unfused dataflow (gemm/encoder_e2e/decode benches;
+#                   higher is better, CI gates the gemm one);
+#   bytes_moved_ratio — modeled unfused/fused epilogue traffic ratio
+#                   (aie_sim::bytes; analytic, so it only moves when
+#                   the fusion coverage or model shapes change).
+EXTRA_METRIC_KEYS = ("roofline_pct", "shed_fraction", "fused_speedup", "bytes_moved_ratio")
 LOWER_IS_BETTER_KEYS = ("shed_fraction",)
 ID_KEYS = (
     "name", "backend", "mode", "case", "shards", "batch", "density", "rows", "kernel", "n",
@@ -200,10 +209,13 @@ def metric_key(path):
 
 
 def fmt_metric(path, v):
-    """Percent metrics render as percentages, everything else as a rate."""
+    """Percent metrics render as percentages, ratios as a multiplier,
+    everything else as a rate."""
     key = metric_key(path)
     if key.endswith("_fraction"):
         return f"{v * 100:.1f}%"
+    if key.endswith(("_speedup", "_ratio")):
+        return f"{v:.2f}x"
     if key in EXTRA_METRIC_KEYS:
         return f"{v:.2f}%"
     return fmt_rate(v)

@@ -1,6 +1,7 @@
 #!/usr/bin/env python3
-"""Offline mirror of the AVX2 lane algorithms in `rust/src/linalg/gemm.rs`
-and `rust/src/hccs/batch.rs` (zero dependencies, stdlib only).
+"""Offline mirror of the AVX2 lane algorithms in `rust/src/linalg/gemm.rs`,
+`rust/src/linalg/epilogue.rs`, and `rust/src/hccs/batch.rs` (zero
+dependencies, stdlib only).
 
 The AVX2 kernels' bit-exactness claim rests on two things: (a) the lane
 *dataflow* (pack indexing, `madd` pair interleave, widening order)
@@ -20,10 +21,12 @@ running the kernels (no Rust toolchain is baked in).
 Run: python3 tools/simd_mirror_check.py
 """
 
+import math
 import random
 import sys
 
 I8 = (-128, 127)
+I32 = (-(1 << 31), (1 << 31) - 1)
 NR = 8
 
 
@@ -296,11 +299,153 @@ def fuzz_hccs(rng, iters):
     print(f"HCCS stages 1-5 lane mirror: {iters} rows x 4 modes OK")
 
 
+# ---------------------------------------------------------------------------
+# Fused-epilogue requant mirror (linalg/epilogue.rs :: avx2::requant /
+# avx2::requant_add_residual)
+# ---------------------------------------------------------------------------
+
+
+def floor_div_f64(a, b):
+    """One `floor_div8` lane: cvtepi32_pd -> div_pd -> floor_pd ->
+    cvtpd_epi32.  Python floats ARE IEEE f64, so this runs the exact
+    lane computation, and the kernel's exactness claim — `floor(f64(a) /
+    f64(b)) == a.div_euclid(b)` for every i32 `a` and positive i32 `b` —
+    is checked directly by the caller.  (Proof sketch: a non-integer
+    quotient sits >= 1/b away from the next integer, while the single
+    rounding error is <= |a/b| * 2^-52 <= 2^31 * 2^-52 / b < 1/b.)"""
+    q = math.floor(float(a) / float(b))
+    check_i32(q, "fd.q")  # cvtpd_epi32 on an in-range integral input
+    return q
+
+
+def packs_clamp_i8(q):
+    """_mm_packs_epi32 then _mm_packs_epi16: the two saturating narrows
+    compose to an exact clamp(-128, 127) for ANY i32 input."""
+    s16 = min(max(q, -(1 << 15)), (1 << 15) - 1)
+    return min(max(s16, -128), 127)
+
+
+def gen_requant_operand(rng, div):
+    """i32 numerators biased toward the floor-boundary hazard: exact
+    multiples of the divisor and their +-1 neighbors, plus rails."""
+    pick = rng.randrange(3)
+    if pick == 0:
+        return rng.randint(*I32)
+    if pick == 1:
+        return rng.choice([I32[0], I32[1], 0, -1, 1, min(div, I32[1]), -div])
+    k = rng.randint(-(1 << 20), 1 << 20)
+    return max(I32[0], min(I32[1], k * div + rng.choice([-1, 0, 1])))
+
+
+def fuzz_requant(rng, iters):
+    divisors = [1, 2, 3, 7, 97, 716, 1 << 15, (1 << 31) - 1]
+    for it in range(iters):
+        div = divisors[it % len(divisors)] if it % 2 == 0 else rng.randint(1, 1 << 24)
+        relu = it % 3 == 0
+        for _ in range(8):
+            a = gen_requant_operand(rng, div)
+            q = floor_div_f64(a, div)
+            assert q == a // div, f"f64 floor-div diverged: {a}/{div}"
+            y = packs_clamp_i8(q)
+            want = min(max(a // div, -128), 127)
+            if relu:
+                y, want = max(y, 0), max(want, 0)
+            assert y == want, f"requant mirror diverged: {a}/{div}"
+            # requant_add_residual: clamp on i32 rails (no pack), then
+            # add the sign-extended int8 residual, staying in i32.
+            r = rng.randint(*I8)
+            got = min(max(q, -128), 127) + r
+            assert got == r + min(max(a // div, -128), 127)
+            check_i32(got, "rr.sum")
+    print(f"epilogue requant f64 floor-div + pack-clamp mirror: {iters} divisor sets OK")
+
+
+# ---------------------------------------------------------------------------
+# Integer LayerNorm mirror (linalg/epilogue.rs :: avx2::row_sumsq / ln_row)
+# ---------------------------------------------------------------------------
+
+LN_TARGET, LN_GAMMA_DIV = 32, 64
+
+
+def scalar_ln_elem(v, mean, sd, g, b):
+    y = ((v - mean) * LN_TARGET) // sd
+    y = (y * g) // LN_GAMMA_DIV + b
+    return min(max(y, -128), 127)
+
+
+def ln_vectorizable(d, spread):
+    return d <= 1 << 20 and spread <= 1 << 21 and spread * spread * d < 1 << 53
+
+
+def avx2_ln_row_mirror(xr, gamma, beta):
+    """The full AVX2 LayerNorm row: scalar i64 stats, f64 lane variance
+    accumulation, f64 element transform — every f64 step executed in
+    real IEEE arithmetic and asserted against the integer reference."""
+    d = len(xr)
+    mean = sum(xr) // d
+    spread = max(xr) - min(xr)
+    assert ln_vectorizable(d, spread), "fuzz case escaped the caller guard"
+    # row_sumsq: 4 f64 lanes + scalar tail.  Every addend is a perfect
+    # square < 2^53 and every partial sum stays below the full sum, so
+    # each add is exact and lane order cannot matter.
+    lanes = [0.0] * 4
+    i = 0
+    while i + 4 <= d:
+        for l in range(4):
+            c = float(xr[i + l] - mean)
+            lanes[l] += c * c
+        i += 4
+    total = lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    for v in xr[i:]:
+        c = float(v - mean)
+        total += c * c
+    var_f = int(total)
+    assert var_f == sum((v - mean) ** 2 for v in xr), "row_sumsq f64 accumulation inexact"
+    sd = max(math.isqrt(var_f // d), 1)
+    out = []
+    body = (d // 8) * 8  # ln_row handles d % 8 tail with the scalar elem
+    for j, v in enumerate(xr):
+        if j < body:
+            # ln_lane: (v - mean) and *32 exact; /sd one floor-div
+            # rounding (same 1/b-gap argument as requant, numerator
+            # <= spread*32 <= 2^26); *g exact (<= 2^33); /64 a power of
+            # two so exact; clamp in f64 before the convert.
+            y = math.floor((float(v) - float(mean)) * float(LN_TARGET) / float(sd))
+            y = math.floor(y * float(gamma[j]) / float(LN_GAMMA_DIV)) + float(beta[j])
+            y = min(max(y, -128.0), 127.0)
+            out.append(int(y))
+        else:
+            out.append(scalar_ln_elem(v, mean, sd, gamma[j], beta[j]))
+    return out
+
+
+def fuzz_layernorm(rng, iters):
+    dims = [1, 2, 5, 8, 13, 24, 64, 100]
+    for it in range(iters):
+        d = dims[rng.randrange(len(dims))]
+        # |v| <= 255 is the real post-residual band; the wider bands
+        # stress the guard right up to spread^2 * d < 2^53.
+        band = [255, 4096, 1 << 20][it % 3]
+        xr = [rng.randint(-band, band) for _ in range(d)]
+        if it % 7 == 0:
+            xr = [xr[0]] * d  # constant row: var = 0, sd rail = 1
+        gamma = [rng.randint(*I8) for _ in range(d)]
+        beta = [rng.randint(*I8) for _ in range(d)]
+        got = avx2_ln_row_mirror(xr, gamma, beta)
+        mean = sum(xr) // d
+        sd = max(math.isqrt(sum((v - mean) ** 2 for v in xr) // d), 1)
+        want = [scalar_ln_elem(v, mean, sd, g, b) for v, g, b in zip(xr, gamma, beta)]
+        assert got == want, f"LayerNorm lane mirror diverged: it={it} d={d} band={band}"
+    print(f"epilogue LayerNorm f64 lane mirror: {iters} rows OK")
+
+
 def main():
     rng = random.Random(0x51D)
     fuzz_packed_gemm(rng, 400)
     fuzz_dot(rng, 400)
     fuzz_hccs(rng, 600)
+    fuzz_requant(rng, 600)
+    fuzz_layernorm(rng, 600)
     print("all SIMD lane mirrors agree with their references")
     return 0
 

@@ -44,6 +44,22 @@ class ExtractMetrics(unittest.TestCase):
         self.assertNotIn("median_ns", m)
         self.assertTrue(all("median" not in k for k in m))
 
+    def test_walk_finds_fused_ratio_metrics(self):
+        doc = {
+            "bench": "gemm",
+            "fused_speedup": 1.31,
+            "bytes_moved_ratio": 5.44,
+            "fused_sweep": [
+                {"name": "small proj+res+LN", "fused_speedup_vs_unfused": 1.4},
+            ],
+        }
+        m = bench_trend.extract_metrics(doc)
+        self.assertEqual(m["fused_speedup"], 1.31)
+        self.assertEqual(m["bytes_moved_ratio"], 5.44)
+        # Per-case speedups are not allowlisted keys and carry no per_s
+        # marker; only the top-level trajectory fields are tracked.
+        self.assertTrue(all("fused_speedup_vs_unfused" not in k for k in m))
+
     def test_load_bench_dir_skips_non_bench_and_bad_json(self):
         with tempfile.TemporaryDirectory() as d:
             with open(os.path.join(d, "BENCH_ok.json"), "w") as fh:
@@ -113,6 +129,17 @@ class ZeroBaseline(unittest.TestCase):
         self.assertIn("∞ (from 0) ⚠️", text)
         self.assertEqual(len(warnings), 1)
         self.assertIn("rose from a zero baseline", warnings[0])
+
+    def test_ratio_metrics_render_as_multipliers(self):
+        cur = {"BENCH_gemm.json": {"fused_speedup": 1.10, "bytes_moved_ratio": 5.44}}
+        base = {"BENCH_gemm.json": {"fused_speedup": 1.50, "bytes_moved_ratio": 5.44}}
+        text, warnings = report_text(cur, base)
+        self.assertIn("| 1.50x | 1.10x |", text)
+        self.assertIn("| 5.44x | 5.44x |", text)
+        # A >threshold drop in fused_speedup warns like any throughput.
+        self.assertEqual(len(warnings), 1)
+        self.assertIn("fused_speedup regressed", warnings[0])
+        self.assertIn("1.50x -> 1.10x", warnings[0])
 
     def test_zero_to_zero_is_flat(self):
         cur = {"BENCH_a.json": {"sweep[x=2.0].shed_fraction": 0.0}}
