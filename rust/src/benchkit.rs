@@ -43,19 +43,15 @@ impl BenchResult {
     }
 }
 
-fn env_ms(name: &str, default_ms: u64) -> Duration {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .map(Duration::from_millis)
-        .unwrap_or(Duration::from_millis(default_ms))
-}
-
 /// Default warmup/measure budgets: 300ms/700ms, overridable with
 /// `HCCS_BENCH_WARMUP_MS` / `HCCS_BENCH_MEASURE_MS` (the CI smoke job
-/// sets both low — noisier numbers, same schema).
+/// sets both low — noisier numbers, same schema). Reads go through the
+/// `runtime::env` registry; the bench knobs are fresh-read there so the
+/// tests below can set/unset them at runtime.
 pub fn budgets() -> (Duration, Duration) {
-    (env_ms("HCCS_BENCH_WARMUP_MS", 300), env_ms("HCCS_BENCH_MEASURE_MS", 700))
+    let warmup = crate::runtime::env::bench_warmup_ms().unwrap_or(300);
+    let measure = crate::runtime::env::bench_measure_ms().unwrap_or(700);
+    (Duration::from_millis(warmup), Duration::from_millis(measure))
 }
 
 /// Benchmark `f`, auto-scaling the iteration count to the budget.
@@ -69,7 +65,7 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
 /// the variable is unset.  Write failures are reported on stderr, not
 /// fatal — a bench run must never die on artifact IO.
 pub fn write_json(bench_name: &str, doc: &Value) -> Option<PathBuf> {
-    let dir = std::env::var_os("HCCS_BENCH_JSON")?;
+    let dir = crate::runtime::env::bench_json_dir()?;
     let path = PathBuf::from(dir).join(format!("BENCH_{bench_name}.json"));
     let mut text = doc.to_string_pretty();
     text.push('\n');
@@ -148,6 +144,7 @@ mod tests {
     use super::*;
 
     #[test]
+    #[cfg_attr(miri, ignore = "wall-clock timing assertions; meaningless interpreted")]
     fn bench_measures_something() {
         let mut acc = 0u64;
         let r = bench_with(
@@ -170,6 +167,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "touches the real filesystem and process env")]
     fn write_json_honors_env() {
         let dir = std::env::temp_dir().join(format!("hccs_benchjson_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

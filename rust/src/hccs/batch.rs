@@ -99,7 +99,8 @@ fn fused_scores(row: &[i8], out: &mut [i32], m: i32, p: &HccsParams) -> i32 {
 fn row_max_path(path: SimdPath, row: &[i8]) -> i32 {
     match path {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: Avx2 only reaches the engines through simd::require.
+        // SAFETY: Avx2 only reaches the engines through simd::require
+        // (AVX2 available); loads stay in the row's slice bounds.
         SimdPath::Avx2 => unsafe { avx2::row_max(row) },
         _ => row_max_unrolled(row),
     }
@@ -109,7 +110,8 @@ fn row_max_path(path: SimdPath, row: &[i8]) -> i32 {
 fn fused_scores_path(path: SimdPath, row: &[i8], out: &mut [i32], m: i32, p: &HccsParams) -> i32 {
     match path {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: as row_max_path.
+        // SAFETY: as row_max_path — AVX2 verified by simd::require, and
+        // out.len() == row.len() bounds the paired load/stores.
         SimdPath::Avx2 => unsafe { avx2::fused_scores(row, out, m, p.b, p.s, p.dmax) },
         _ => fused_scores(row, out, m, p),
     }
@@ -120,7 +122,8 @@ fn fused_scores_path(path: SimdPath, row: &[i8], out: &mut [i32], m: i32, p: &Hc
 fn scale_mul_path(path: SimdPath, or: &mut [i32], rho: i32) {
     match path {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: as row_max_path.
+        // SAFETY: as row_max_path — AVX2 verified by simd::require;
+        // in-place load/stores stay in `or`'s bounds.
         SimdPath::Avx2 => unsafe { avx2::scale_mul(or, rho) },
         _ => {
             for o in or {
@@ -137,7 +140,8 @@ fn scale_mul_path(path: SimdPath, or: &mut [i32], rho: i32) {
 fn scale_mulshift_min_path(path: SimdPath, or: &mut [i32], mul: i32, shift: u32, cap: i32) {
     match path {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: as row_max_path.
+        // SAFETY: as row_max_path — AVX2 verified by simd::require;
+        // in-place load/stores stay in `or`'s bounds.
         SimdPath::Avx2 => unsafe { avx2::scale_mulshift_min(or, mul, shift, cap) },
         _ => {
             for o in or {
@@ -404,6 +408,9 @@ pub fn hccs_batch(
 mod avx2 {
     use std::arch::x86_64::*;
 
+    /// Horizontal i32 sum of all 8 lanes.
+    ///
+    /// SAFETY: requires AVX2 only — pure register math, no memory.
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32(v: __m256i) -> i32 {
         let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
@@ -416,16 +423,18 @@ mod avx2 {
     /// stack array instead of shift-based shuffles: byte shifts inject
     /// zero lanes, which would corrupt the max of an all-negative row.
     ///
-    /// SAFETY: requires AVX2.
+    /// SAFETY: requires AVX2; loads stay in the row's slice bounds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn row_max(row: &[i8]) -> i32 {
         let mut chunks = row.chunks_exact(32);
         let mut acc = _mm256_set1_epi8(i8::MIN);
         for c in chunks.by_ref() {
-            acc = _mm256_max_epi8(acc, _mm256_loadu_si256(c.as_ptr() as *const __m256i));
+            // SAFETY: each exact chunk is 32 readable bytes.
+            acc = unsafe { _mm256_max_epi8(acc, _mm256_loadu_si256(c.as_ptr() as *const __m256i)) };
         }
         let mut tmp = [i8::MIN; 32];
-        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+        // SAFETY: tmp is exactly 32 writable bytes.
+        unsafe { _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc) };
         let mut m = i8::MIN;
         for v in tmp {
             m = m.max(v);
@@ -462,18 +471,24 @@ mod avx2 {
         let n = row.len();
         let mut i = 0usize;
         while i + 16 <= n {
-            let x16 =
-                _mm256_cvtepi8_epi16(_mm_loadu_si128(row.as_ptr().add(i) as *const __m128i));
-            let delta = _mm256_min_epi16(_mm256_sub_epi16(m16, x16), d16); // stage 2
-            let si = _mm256_sub_epi16(b16, _mm256_mullo_epi16(s16, delta)); // stage 3
-            let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(si));
-            let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(si));
-            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, lo);
-            _mm256_storeu_si256(out.as_mut_ptr().add(i + 8) as *mut __m256i, hi);
-            zacc = _mm256_add_epi32(zacc, _mm256_madd_epi16(si, ones)); // stage 4
+            // SAFETY: i + 16 <= n bounds the 16-byte logits load, and
+            // the two 32-byte stores land at out[i..i+8] and
+            // out[i+8..i+16] — in bounds since out.len() == n.
+            unsafe {
+                let x16 =
+                    _mm256_cvtepi8_epi16(_mm_loadu_si128(row.as_ptr().add(i) as *const __m128i));
+                let delta = _mm256_min_epi16(_mm256_sub_epi16(m16, x16), d16); // stage 2
+                let si = _mm256_sub_epi16(b16, _mm256_mullo_epi16(s16, delta)); // stage 3
+                let lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(si));
+                let hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(si));
+                _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, lo);
+                _mm256_storeu_si256(out.as_mut_ptr().add(i + 8) as *mut __m256i, hi);
+                zacc = _mm256_add_epi32(zacc, _mm256_madd_epi16(si, ones)); // stage 4
+            }
             i += 16;
         }
-        let mut z = hsum_epi32(zacc);
+        // SAFETY: hsum is register-only; AVX2 per the caller contract.
+        let mut z = unsafe { hsum_epi32(zacc) };
         while i < n {
             let delta = (m - row[i] as i32).min(dmax);
             let si = b - s * delta;
@@ -487,18 +502,23 @@ mod avx2 {
 
     /// Stage 5, i16-div: `o *= rho` (8 i32 lanes; products ≤ 32767²).
     ///
-    /// SAFETY: requires AVX2.
+    /// SAFETY: requires AVX2; in-place load/stores stay in `or`'s
+    /// bounds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_mul(or: &mut [i32], rho: i32) {
         let rv = _mm256_set1_epi32(rho);
         let n = or.len();
         let mut t = 0usize;
         while t + 8 <= n {
-            let v = _mm256_loadu_si256(or.as_ptr().add(t) as *const __m256i);
-            _mm256_storeu_si256(
-                or.as_mut_ptr().add(t) as *mut __m256i,
-                _mm256_mullo_epi32(v, rv),
-            );
+            // SAFETY: t + 8 <= n == or.len() bounds the 32-byte
+            // load/store pair.
+            unsafe {
+                let v = _mm256_loadu_si256(or.as_ptr().add(t) as *const __m256i);
+                _mm256_storeu_si256(
+                    or.as_mut_ptr().add(t) as *mut __m256i,
+                    _mm256_mullo_epi32(v, rv),
+                );
+            }
             t += 8;
         }
         while t < n {
@@ -511,7 +531,8 @@ mod avx2 {
     /// `sra_epi32` is an arithmetic shift, matching Rust `>>` on i32
     /// (all inputs here are non-negative anyway).
     ///
-    /// SAFETY: requires AVX2.
+    /// SAFETY: requires AVX2; in-place load/stores stay in `or`'s
+    /// bounds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn scale_mulshift_min(or: &mut [i32], mul: i32, shift: u32, cap: i32) {
         let mv = _mm256_set1_epi32(mul);
@@ -520,10 +541,14 @@ mod avx2 {
         let n = or.len();
         let mut t = 0usize;
         while t + 8 <= n {
-            let v = _mm256_loadu_si256(or.as_ptr().add(t) as *const __m256i);
-            let v = _mm256_sra_epi32(_mm256_mullo_epi32(v, mv), sh);
-            let v = _mm256_min_epi32(v, cv);
-            _mm256_storeu_si256(or.as_mut_ptr().add(t) as *mut __m256i, v);
+            // SAFETY: t + 8 <= n == or.len() bounds the 32-byte
+            // load/store pair.
+            unsafe {
+                let v = _mm256_loadu_si256(or.as_ptr().add(t) as *const __m256i);
+                let v = _mm256_sra_epi32(_mm256_mullo_epi32(v, mv), sh);
+                let v = _mm256_min_epi32(v, cv);
+                _mm256_storeu_si256(or.as_mut_ptr().add(t) as *mut __m256i, v);
+            }
             t += 8;
         }
         while t < n {
@@ -626,7 +651,7 @@ mod tests {
             let naive = *x.iter().max().unwrap() as i32;
             assert_eq!(row_max_unrolled(&x), naive, "n={n}");
             if simd::avx2_available() {
-                // SAFETY: availability just checked.
+                // SAFETY: AVX2 availability just checked.
                 assert_eq!(unsafe { avx2::row_max(&x) }, naive, "avx2 n={n}");
             }
         }
@@ -640,7 +665,7 @@ mod tests {
         // 33 elements: one full 32-lane chunk plus remainder, all < 0.
         let x: Vec<i8> = (0..33).map(|i| -1 - (i % 100) as i8).collect();
         let naive = *x.iter().max().unwrap() as i32;
-        // SAFETY: availability just checked.
+        // SAFETY: AVX2 availability just checked.
         assert_eq!(unsafe { avx2::row_max(&x) }, naive);
     }
 

@@ -57,6 +57,11 @@
 //! [`rng`] / [`proptest_lite`] / [`cli`] / [`xla_stub`] (offline
 //! stand-ins for anyhow / serde / rand / proptest / clap / xla).
 
+// Every unsafe operation must sit in its own `unsafe {}` block with a
+// `// SAFETY:` comment, even inside `unsafe fn` — `tools/analyze.py`
+// enforces the comments; this lint enforces the blocks.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod aie_sim;
 pub mod benchkit;
 pub mod cli;

@@ -66,7 +66,6 @@
 
 use crate::simd::{self, SimdPath};
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
 
 /// LayerNorm output target RMS: a normalized activation row has
 /// (approximately) this integer standard deviation, which keeps every
@@ -101,12 +100,7 @@ const FUSED_OFF: u8 = 2;
 static FUSED_OVERRIDE: AtomicU8 = AtomicU8::new(FUSED_NONE);
 
 fn env_forces_unfused() -> bool {
-    static FORCED: OnceLock<bool> = OnceLock::new();
-    *FORCED.get_or_init(|| {
-        std::env::var("HCCS_FORCE_UNFUSED")
-            .map(|v| !v.is_empty() && v != "0")
-            .unwrap_or(false)
-    })
+    crate::runtime::env::force_unfused()
 }
 
 /// Whether the model layers should route projections through the fused
@@ -272,6 +266,8 @@ pub(crate) fn requant_block(path: SimdPath, acc: &[i32], div: i32, relu: bool, d
     debug_assert_eq!(dst.len(), acc.len());
     match path {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 only reaches here through simd::require (AVX2
+        // available); dst.len() == acc.len() bounds every store.
         SimdPath::Avx2 => unsafe { avx2::requant(acc, div, relu, dst) },
         _ => {
             for (o, &v) in dst.iter_mut().zip(acc) {
@@ -291,6 +287,8 @@ pub(crate) fn requant_add_residual_block(path: SimdPath, acc: &mut [i32], res: &
     debug_assert_eq!(res.len(), acc.len());
     match path {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 only reaches here through simd::require (AVX2
+        // available); res.len() == acc.len() bounds the paired loads.
         SimdPath::Avx2 => unsafe { avx2::requant_add_residual(acc, res, div) },
         _ => {
             for (a, &r) in acc.iter_mut().zip(res) {
@@ -368,6 +366,10 @@ pub(crate) fn layernorm_block(
                 let spread = i64::from(hi) - i64::from(lo);
                 if ln_row_vectorizable(d, spread) {
                     let mean = sum.div_euclid(d as i64);
+                    // SAFETY: path == Avx2 passed simd::require (AVX2
+                    // available); the vectorizable guard bounds every
+                    // f64 intermediate below 2^53, and gamma/beta/or
+                    // share xr's checked row length.
                     unsafe {
                         let var = avx2::row_sumsq(xr, mean).div_euclid(d as i64);
                         let sd = (isqrt_u64(var as u64) as i64).max(1);
@@ -395,6 +397,8 @@ mod avx2 {
     /// numerator and positive i32 divisor; the quotient magnitude never
     /// exceeds `|v|`, so `_mm256_cvtpd_epi32` (exact on integral
     /// in-range inputs) cannot saturate.
+    ///
+    /// SAFETY: requires AVX2 only — register math, no memory.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn floor_div8(v: __m256i, div: __m256d) -> (__m128i, __m128i) {
@@ -408,20 +412,28 @@ mod avx2 {
     /// Vectorized [`super::requant_block`]: floor-div, then the
     /// i32→i16→i8 saturating packs (≡ `.clamp(-128, 127)`), then an
     /// optional ReLU on the packed bytes.
+    ///
+    /// SAFETY: requires AVX2; `dst.len() == acc.len()` (the dispatcher
+    /// asserts it) bounds every load/store pair.
     #[target_feature(enable = "avx2")]
     pub unsafe fn requant(acc: &[i32], div: i32, relu: bool, dst: &mut [i8]) {
         let divv = _mm256_set1_pd(f64::from(div));
         let zero = _mm_setzero_si128();
         let mut i = 0;
         while i + 8 <= acc.len() {
-            let v = _mm256_loadu_si256(acc.as_ptr().add(i).cast());
-            let (qlo, qhi) = floor_div8(v, divv);
-            let w16 = _mm_packs_epi32(qlo, qhi);
-            let mut w8 = _mm_packs_epi16(w16, w16);
-            if relu {
-                w8 = _mm_max_epi8(w8, zero);
+            // SAFETY: i + 8 <= acc.len() bounds the 32-byte load, and
+            // dst (same length) has >= 8 writable bytes at i for the
+            // 8-byte store.
+            unsafe {
+                let v = _mm256_loadu_si256(acc.as_ptr().add(i).cast());
+                let (qlo, qhi) = floor_div8(v, divv);
+                let w16 = _mm_packs_epi32(qlo, qhi);
+                let mut w8 = _mm_packs_epi16(w16, w16);
+                if relu {
+                    w8 = _mm_max_epi8(w8, zero);
+                }
+                _mm_storel_epi64(dst.as_mut_ptr().add(i).cast(), w8);
             }
-            _mm_storel_epi64(dst.as_mut_ptr().add(i).cast(), w8);
             i += 8;
         }
         for j in i..acc.len() {
@@ -434,6 +446,9 @@ mod avx2 {
     /// clamp on the i32 rails (the output stays i32, so the pack trick
     /// does not apply), add the sign-extended int8 residual, store
     /// back over `acc`.
+    ///
+    /// SAFETY: requires AVX2; `res.len() == acc.len()` (the dispatcher
+    /// asserts it) bounds every load/store pair.
     #[target_feature(enable = "avx2")]
     pub unsafe fn requant_add_residual(acc: &mut [i32], res: &[i8], div: i32) {
         let divv = _mm256_set1_pd(f64::from(div));
@@ -441,13 +456,17 @@ mod avx2 {
         let hi_rail = _mm256_set1_epi32(127);
         let mut i = 0;
         while i + 8 <= acc.len() {
-            let v = _mm256_loadu_si256(acc.as_ptr().add(i).cast());
-            let (qlo, qhi) = floor_div8(v, divv);
-            let q = _mm256_set_m128i(qhi, qlo);
-            let q = _mm256_min_epi32(_mm256_max_epi32(q, lo_rail), hi_rail);
-            let r = _mm256_cvtepi8_epi32(_mm_loadl_epi64(res.as_ptr().add(i).cast()));
-            let s = _mm256_add_epi32(q, r);
-            _mm256_storeu_si256(acc.as_mut_ptr().add(i).cast(), s);
+            // SAFETY: i + 8 <= acc.len() bounds the 32-byte acc
+            // load/store and the 8-byte residual load (equal lengths).
+            unsafe {
+                let v = _mm256_loadu_si256(acc.as_ptr().add(i).cast());
+                let (qlo, qhi) = floor_div8(v, divv);
+                let q = _mm256_set_m128i(qhi, qlo);
+                let q = _mm256_min_epi32(_mm256_max_epi32(q, lo_rail), hi_rail);
+                let r = _mm256_cvtepi8_epi32(_mm_loadl_epi64(res.as_ptr().add(i).cast()));
+                let s = _mm256_add_epi32(q, r);
+                _mm256_storeu_si256(acc.as_mut_ptr().add(i).cast(), s);
+            }
             i += 8;
         }
         for j in i..acc.len() {
@@ -459,19 +478,25 @@ mod avx2 {
     /// caller's [`super::ln_row_vectorizable`] guard bounds every
     /// partial sum below `2^53`, so each f64 add is exact and the
     /// accumulation order (4 lanes + tail) does not matter.
+    ///
+    /// SAFETY: requires AVX2; reads stay inside `xr`'s bounds.
     #[target_feature(enable = "avx2")]
     pub unsafe fn row_sumsq(xr: &[i32], mean: i64) -> i64 {
         let meanv = _mm256_set1_pd(mean as f64);
         let mut accv = _mm256_setzero_pd();
         let mut i = 0;
         while i + 4 <= xr.len() {
-            let v = _mm256_cvtepi32_pd(_mm_loadu_si128(xr.as_ptr().add(i).cast()));
-            let c = _mm256_sub_pd(v, meanv);
-            accv = _mm256_add_pd(accv, _mm256_mul_pd(c, c));
+            // SAFETY: i + 4 <= xr.len() bounds the 16-byte load.
+            unsafe {
+                let v = _mm256_cvtepi32_pd(_mm_loadu_si128(xr.as_ptr().add(i).cast()));
+                let c = _mm256_sub_pd(v, meanv);
+                accv = _mm256_add_pd(accv, _mm256_mul_pd(c, c));
+            }
             i += 4;
         }
         let mut lanes = [0.0f64; 4];
-        _mm256_storeu_pd(lanes.as_mut_ptr(), accv);
+        // SAFETY: lanes is exactly 4 f64 — 32 writable bytes.
+        unsafe { _mm256_storeu_pd(lanes.as_mut_ptr(), accv) };
         let mut total = lanes[0] + lanes[1] + lanes[2] + lanes[3];
         for &v in &xr[i..] {
             let c = (i64::from(v) - mean) as f64;
@@ -493,6 +518,8 @@ mod avx2 {
     /// Four output elements: `floor(((v − mean)·32) / sd)` →
     /// `floor((y·g) / 64) + b` → clamp in f64 (before the convert,
     /// which saturates out-of-range inputs to `i32::MIN`) → i32.
+    ///
+    /// SAFETY: requires AVX2 only — register math, no memory.
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn ln_lane(v: __m256d, g: __m256d, b: __m256d, k: &LnConsts) -> __m128i {
@@ -508,6 +535,9 @@ mod avx2 {
     /// Vectorized LayerNorm element transform over one row whose stats
     /// (`mean`, `sd`) the caller already computed.  Only called under
     /// the exactness guard.
+    ///
+    /// SAFETY: requires AVX2; `gamma`/`beta`/`or` share `xr`'s length
+    /// (the dispatcher asserts it), bounding every load/store.
     #[target_feature(enable = "avx2")]
     pub unsafe fn ln_row(xr: &[i32], mean: i64, sd: i64, gamma: &[i8], beta: &[i8], or: &mut [i8]) {
         let k = LnConsts {
@@ -520,22 +550,27 @@ mod avx2 {
         };
         let mut i = 0;
         while i + 8 <= xr.len() {
-            let v = _mm256_loadu_si256(xr.as_ptr().add(i).cast());
-            let vlo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(v));
-            let vhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(v));
-            let g32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(gamma.as_ptr().add(i).cast()));
-            let glo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(g32));
-            let ghi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(g32));
-            let b32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(beta.as_ptr().add(i).cast()));
-            let blo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(b32));
-            let bhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(b32));
-            let qlo = ln_lane(vlo, glo, blo, &k);
-            let qhi = ln_lane(vhi, ghi, bhi, &k);
-            // Values are clamped to [-128, 127] already, so the
-            // saturating packs are lossless order-preserving narrows.
-            let w16 = _mm_packs_epi32(qlo, qhi);
-            let w8 = _mm_packs_epi16(w16, w16);
-            _mm_storel_epi64(or.as_mut_ptr().add(i).cast(), w8);
+            // SAFETY: i + 8 <= xr.len() bounds the 32-byte x load, the
+            // 8-byte gamma/beta loads, and the 8-byte output store —
+            // all four slices share xr's length.
+            unsafe {
+                let v = _mm256_loadu_si256(xr.as_ptr().add(i).cast());
+                let vlo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(v));
+                let vhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(v));
+                let g32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(gamma.as_ptr().add(i).cast()));
+                let glo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(g32));
+                let ghi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(g32));
+                let b32 = _mm256_cvtepi8_epi32(_mm_loadl_epi64(beta.as_ptr().add(i).cast()));
+                let blo = _mm256_cvtepi32_pd(_mm256_castsi256_si128(b32));
+                let bhi = _mm256_cvtepi32_pd(_mm256_extracti128_si256::<1>(b32));
+                let qlo = ln_lane(vlo, glo, blo, &k);
+                let qhi = ln_lane(vhi, ghi, bhi, &k);
+                // Values are clamped to [-128, 127] already, so the
+                // saturating packs are lossless order-preserving narrows.
+                let w16 = _mm_packs_epi32(qlo, qhi);
+                let w8 = _mm_packs_epi16(w16, w16);
+                _mm_storel_epi64(or.as_mut_ptr().add(i).cast(), w8);
+            }
             i += 8;
         }
         for j in i..xr.len() {

@@ -193,7 +193,13 @@ impl PackedGemm {
         let (d_in, d_out) = (self.d_in, self.d_out);
         let nblocks = rows.div_ceil(MC);
         struct SyncPtr(*mut i32);
+        // SAFETY: the pointer targets the caller-owned `out` buffer,
+        // whose borrow outlives the fan-out (run_blocks blocks until
+        // every block completes) and whose rows are written in disjoint
+        // per-block regions.
         unsafe impl Send for SyncPtr {}
+        // SAFETY: as above — shared only for disjoint writes while the
+        // borrow is live.
         unsafe impl Sync for SyncPtr {}
         let outp = SyncPtr(out.as_mut_ptr());
         pool::run_blocks(nblocks, &|blk| {
@@ -244,7 +250,12 @@ impl PackedGemm {
         let (d_in, d_out) = (self.d_in, self.d_out);
         let nblocks = rows.div_ceil(MC);
         struct SyncPtr(*mut i8);
+        // SAFETY: same disjoint-write argument as the `gemm_into`
+        // SyncPtr — the `out` borrow outlives the fan-out and blocks
+        // write disjoint row regions.
         unsafe impl Send for SyncPtr {}
+        // SAFETY: as above — shared only for disjoint writes while the
+        // borrow is live.
         unsafe impl Sync for SyncPtr {}
         let outp = SyncPtr(out.as_mut_ptr());
         pool::run_blocks(nblocks, &|blk| {
@@ -477,7 +488,8 @@ mod avx2 {
     /// SAFETY: caller guarantees 16 readable bytes at `ptr` and AVX2.
     #[target_feature(enable = "avx2")]
     unsafe fn load_wpair(ptr: *const i8) -> __m256i {
-        let v = _mm_loadu_si128(ptr as *const __m128i);
+        // SAFETY: caller contract above — 16 readable bytes at `ptr`.
+        let v = unsafe { _mm_loadu_si128(ptr as *const __m128i) };
         let lo = _mm_cvtepi8_epi16(v); // w[k][0..8] as i16
         let hi = _mm_cvtepi8_epi16(_mm_srli_si128::<8>(v)); // w[k+1][0..8]
         _mm256_set_m128i(_mm_unpackhi_epi16(lo, hi), _mm_unpacklo_epi16(lo, hi))
@@ -489,7 +501,8 @@ mod avx2 {
     /// SAFETY: caller guarantees 8 readable bytes at `ptr` and AVX2.
     #[target_feature(enable = "avx2")]
     unsafe fn load_wlast(ptr: *const i8) -> __m256i {
-        let v = _mm_loadl_epi64(ptr as *const __m128i);
+        // SAFETY: caller contract above — 8 readable bytes at `ptr`.
+        let v = unsafe { _mm_loadl_epi64(ptr as *const __m128i) };
         let lo = _mm_cvtepi8_epi16(v);
         let z = _mm_setzero_si128();
         _mm256_set_m128i(_mm_unpackhi_epi16(lo, z), _mm_unpacklo_epi16(lo, z))
@@ -498,6 +511,8 @@ mod avx2 {
     /// Broadcast the activation pair `(x[k], x[k+1])` into every i32
     /// lane (low i16 = `x[k]`, high i16 = `x[k+1]`), matching
     /// [`load_wpair`]'s interleave.
+    ///
+    /// SAFETY: requires AVX2 only; indexing is slice-bounds-checked.
     #[target_feature(enable = "avx2")]
     unsafe fn xpair(x: &[i8], k: usize) -> __m256i {
         let lo = x[k] as i16 as u16 as u32;
@@ -507,6 +522,8 @@ mod avx2 {
 
     /// Broadcast a lone activation (partner i16 lane zero, matching
     /// [`load_wlast`]).
+    ///
+    /// SAFETY: requires AVX2 only; indexing is slice-bounds-checked.
     #[target_feature(enable = "avx2")]
     unsafe fn xlast(x: &[i8], k: usize) -> __m256i {
         _mm256_set1_epi32(x[k] as i16 as u16 as u32 as i32)
@@ -518,10 +535,13 @@ mod avx2 {
     #[target_feature(enable = "avx2")]
     unsafe fn store_acc(acc: __m256i, out: &mut [i32], take: usize) {
         if take == NR {
-            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, acc);
+            // SAFETY: take == NR ⇒ out has >= NR writable i32 (caller
+            // contract), exactly the 32 bytes this store writes.
+            unsafe { _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, acc) };
         } else {
             let mut tmp = [0i32; NR];
-            _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+            // SAFETY: tmp is exactly NR i32 — 32 writable bytes.
+            unsafe { _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc) };
             out[..take].copy_from_slice(&tmp[..take]);
         }
     }
@@ -551,24 +571,37 @@ mod avx2 {
                 let mut a3 = _mm256_setzero_si256();
                 let mut k = 0usize;
                 while k + 2 <= d_in {
-                    let w = load_wpair(panel.as_ptr().add(k * NR));
-                    a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(w, xpair(x0, k)));
-                    a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(w, xpair(x1, k)));
-                    a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(w, xpair(x2, k)));
-                    a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(w, xpair(x3, k)));
+                    // SAFETY: k + 2 <= d_in keeps the 16-byte pair load
+                    // in bounds of the d_in·NR panel; xpair reads
+                    // x*[k..k+2] via checked indexing.
+                    unsafe {
+                        let w = load_wpair(panel.as_ptr().add(k * NR));
+                        a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(w, xpair(x0, k)));
+                        a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(w, xpair(x1, k)));
+                        a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(w, xpair(x2, k)));
+                        a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(w, xpair(x3, k)));
+                    }
                     k += 2;
                 }
                 if k < d_in {
-                    let w = load_wlast(panel.as_ptr().add(k * NR));
-                    a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(w, xlast(x0, k)));
-                    a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(w, xlast(x1, k)));
-                    a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(w, xlast(x2, k)));
-                    a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(w, xlast(x3, k)));
+                    // SAFETY: the final odd stripe leaves exactly NR = 8
+                    // panel bytes at offset k·NR — load_wlast reads 8.
+                    unsafe {
+                        let w = load_wlast(panel.as_ptr().add(k * NR));
+                        a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(w, xlast(x0, k)));
+                        a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(w, xlast(x1, k)));
+                        a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(w, xlast(x2, k)));
+                        a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(w, xlast(x3, k)));
+                    }
                 }
-                store_acc(a0, &mut out[r * d_out + o0..], take);
-                store_acc(a1, &mut out[(r + 1) * d_out + o0..], take);
-                store_acc(a2, &mut out[(r + 2) * d_out + o0..], take);
-                store_acc(a3, &mut out[(r + 3) * d_out + o0..], take);
+                // SAFETY: each destination row slice holds >= take
+                // writable i32 (out is rows·d_out and o0 + take <= d_out).
+                unsafe {
+                    store_acc(a0, &mut out[r * d_out + o0..], take);
+                    store_acc(a1, &mut out[(r + 1) * d_out + o0..], take);
+                    store_acc(a2, &mut out[(r + 2) * d_out + o0..], take);
+                    store_acc(a3, &mut out[(r + 3) * d_out + o0..], take);
+                }
                 r += 4;
             }
             while r < rows {
@@ -576,21 +609,32 @@ mod avx2 {
                 let mut acc = _mm256_setzero_si256();
                 let mut k = 0usize;
                 while k + 2 <= d_in {
-                    let w = load_wpair(panel.as_ptr().add(k * NR));
-                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xpair(xrow, k)));
+                    // SAFETY: as in the 4-row loop — k + 2 <= d_in
+                    // bounds the 16-byte pair load inside the panel.
+                    unsafe {
+                        let w = load_wpair(panel.as_ptr().add(k * NR));
+                        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xpair(xrow, k)));
+                    }
                     k += 2;
                 }
                 if k < d_in {
-                    let w = load_wlast(panel.as_ptr().add(k * NR));
-                    acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xlast(xrow, k)));
+                    // SAFETY: exactly NR = 8 panel bytes remain at
+                    // offset k·NR — load_wlast reads 8.
+                    unsafe {
+                        let w = load_wlast(panel.as_ptr().add(k * NR));
+                        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(w, xlast(xrow, k)));
+                    }
                 }
-                store_acc(acc, &mut out[r * d_out + o0..], take);
+                // SAFETY: the destination row slice holds >= take writable i32.
+                unsafe { store_acc(acc, &mut out[r * d_out + o0..], take) };
                 r += 1;
             }
         }
     }
 
     /// Horizontal i32 sum of all 8 lanes.
+    ///
+    /// SAFETY: requires AVX2 only — pure register math, no memory.
     #[target_feature(enable = "avx2")]
     unsafe fn hsum_epi32(v: __m256i) -> i32 {
         let s = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256::<1>(v));
@@ -600,17 +644,24 @@ mod avx2 {
     }
 
     /// One A-row × one B-row dot, 16 int8 per madd step.
+    ///
+    /// SAFETY: requires AVX2; `a` and `b` hold at least `kd` bytes.
     #[target_feature(enable = "avx2")]
     unsafe fn dot1(a: &[i8], b: &[i8], kd: usize) -> i32 {
         let mut acc = _mm256_setzero_si256();
         let mut t = 0usize;
         while t + 16 <= kd {
-            let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(t) as *const __m128i));
-            let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(t) as *const __m128i));
-            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            // SAFETY: t + 16 <= kd <= a.len(), b.len() keeps both
+            // 16-byte loads in bounds.
+            unsafe {
+                let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(a.as_ptr().add(t) as *const __m128i));
+                let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(b.as_ptr().add(t) as *const __m128i));
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+            }
             t += 16;
         }
-        let mut s = hsum_epi32(acc);
+        // SAFETY: hsum is register-only; AVX2 per the caller contract.
+        let mut s = unsafe { hsum_epi32(acc) };
         while t < kd {
             s += i32::from(a[t]) * i32::from(b[t]);
             t += 1;
@@ -648,24 +699,36 @@ mod avx2 {
                 let mut a3 = _mm256_setzero_si256();
                 let mut t = 0usize;
                 while t + 16 <= kd {
-                    let av =
-                        _mm256_cvtepi8_epi16(_mm_loadu_si128(arow.as_ptr().add(t) as *const __m128i));
-                    let l0 =
-                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b0.as_ptr().add(t) as *const __m128i));
-                    let l1 =
-                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b1.as_ptr().add(t) as *const __m128i));
-                    let l2 =
-                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b2.as_ptr().add(t) as *const __m128i));
-                    let l3 =
-                        _mm256_cvtepi8_epi16(_mm_loadu_si128(b3.as_ptr().add(t) as *const __m128i));
-                    a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(av, l0));
-                    a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(av, l1));
-                    a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(av, l2));
-                    a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(av, l3));
+                    // SAFETY: t + 16 <= kd bounds all five 16-byte
+                    // loads inside their kd-length rows.
+                    unsafe {
+                        let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            arow.as_ptr().add(t) as *const __m128i
+                        ));
+                        let l0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            b0.as_ptr().add(t) as *const __m128i
+                        ));
+                        let l1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            b1.as_ptr().add(t) as *const __m128i
+                        ));
+                        let l2 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            b2.as_ptr().add(t) as *const __m128i
+                        ));
+                        let l3 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            b3.as_ptr().add(t) as *const __m128i
+                        ));
+                        a0 = _mm256_add_epi32(a0, _mm256_madd_epi16(av, l0));
+                        a1 = _mm256_add_epi32(a1, _mm256_madd_epi16(av, l1));
+                        a2 = _mm256_add_epi32(a2, _mm256_madd_epi16(av, l2));
+                        a3 = _mm256_add_epi32(a3, _mm256_madd_epi16(av, l3));
+                    }
                     t += 16;
                 }
-                let (mut s0, mut s1, mut s2, mut s3) =
-                    (hsum_epi32(a0), hsum_epi32(a1), hsum_epi32(a2), hsum_epi32(a3));
+                // SAFETY: hsum is register-only; AVX2 per the caller
+                // contract.
+                let (mut s0, mut s1, mut s2, mut s3) = unsafe {
+                    (hsum_epi32(a0), hsum_epi32(a1), hsum_epi32(a2), hsum_epi32(a3))
+                };
                 while t < kd {
                     let av = i32::from(arow[t]);
                     s0 += av * i32::from(b0[t]);
@@ -681,7 +744,9 @@ mod avx2 {
                 j += 4;
             }
             while j < n_active {
-                orow[j] = dot1(arow, &b[j * kd..(j + 1) * kd], kd);
+                // SAFETY: both row slices are exactly kd bytes — dot1's
+                // length contract — and AVX2 holds per the caller.
+                orow[j] = unsafe { dot1(arow, &b[j * kd..(j + 1) * kd], kd) };
                 j += 1;
             }
         }
@@ -711,14 +776,19 @@ mod avx2 {
                 let pvv = _mm256_set1_epi32(pv);
                 let mut t = 0usize;
                 while t + 8 <= dv {
-                    let vv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
-                        vrow.as_ptr().add(t) as *const __m128i
-                    ));
-                    let cur = _mm256_loadu_si256(orow.as_ptr().add(t) as *const __m256i);
-                    _mm256_storeu_si256(
-                        orow.as_mut_ptr().add(t) as *mut __m256i,
-                        _mm256_add_epi32(cur, _mm256_mullo_epi32(pvv, vv)),
-                    );
+                    // SAFETY: t + 8 <= dv bounds the 8-byte value load
+                    // and the 32-byte accumulator load/store inside
+                    // their dv-length rows.
+                    unsafe {
+                        let vv = _mm256_cvtepi8_epi32(_mm_loadl_epi64(
+                            vrow.as_ptr().add(t) as *const __m128i
+                        ));
+                        let cur = _mm256_loadu_si256(orow.as_ptr().add(t) as *const __m256i);
+                        _mm256_storeu_si256(
+                            orow.as_mut_ptr().add(t) as *mut __m256i,
+                            _mm256_add_epi32(cur, _mm256_mullo_epi32(pvv, vv)),
+                        );
+                    }
                     t += 8;
                 }
                 while t < dv {

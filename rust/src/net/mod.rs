@@ -69,6 +69,7 @@ use crate::error::{anyhow, Context, Result};
 use crate::json::{obj, FrameLimits, StreamingFramer, Value};
 use crate::metrics::{Gauge, Registry};
 use crate::model::{DecodeReply, DecodeSessionHandle, NativeBackend};
+use crate::runtime::pool::lock_unpoisoned;
 use crate::server::{
     encode_request, format_reply, resolve_reply, stage, FramedRequest, Framer, InferBackend,
     Outcome, Pending,
@@ -628,7 +629,7 @@ impl TcpServer {
         // Unblock the accept() call with a throwaway connection; the
         // stop flag makes the accept loop drop it and exit.
         let _ = TcpStream::connect(self.local);
-        for c in self.conns.lock().unwrap().iter() {
+        for c in lock_unpoisoned(&self.conns).iter() {
             let _ = c.shutdown(Shutdown::Both);
         }
         if let Some(h) = self.accept.take() {
@@ -668,7 +669,7 @@ fn accept_main<E: InferBackend + Send + Sync + 'static>(
             Err(_) => continue,
         };
         if let Ok(clone) = stream.try_clone() {
-            conns.lock().unwrap().push(clone);
+            lock_unpoisoned(&conns).push(clone);
         }
         let slot = count % CONN_SLOTS;
         count += 1;
@@ -714,7 +715,16 @@ fn conn_main<E: InferBackend>(
         std::thread::Builder::new()
             .name("hccs-net-writer".into())
             .spawn(move || writer_main(write_stream, rx, decode, tokenizer, deadline, metrics))
-            .expect("spawning connection writer thread")
+    };
+    let writer = match writer {
+        Ok(h) => h,
+        Err(e) => {
+            // No writer means no replies: tear down this connection,
+            // not the server — the accept loop keeps serving others.
+            eprintln!("hccs-net: writer thread spawn failed ({e}); closing connection");
+            let _ = stream.shutdown(Shutdown::Both);
+            return;
+        }
     };
 
     let mut framer = JsonFramer::new(cfg.limits);
@@ -806,9 +816,14 @@ fn writer_main(
             }
             ConnItem::Stream(job) => {
                 streams.inc();
-                let backend = decode
-                    .as_deref()
-                    .expect("stream jobs are staged only when decode serving is enabled");
+                // Stream jobs are staged only when decode serving is
+                // enabled; reaching here without a backend is a wiring
+                // bug — close this connection instead of panicking the
+                // writer thread.
+                let Some(backend) = decode.as_deref() else {
+                    eprintln!("hccs-net: stream job staged without a decode backend");
+                    break;
+                };
                 if drive_stream(&mut out, *job, backend, &tokenizer, deadline, &metrics).is_err() {
                     // The socket is gone; dropping the remaining queue
                     // items (and their session handles) cleans up.

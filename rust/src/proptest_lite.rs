@@ -18,10 +18,8 @@ pub struct Config {
 impl Default for Config {
     fn default() -> Self {
         // Seed overridable for replay: PROPTEST_SEED=1234 cargo test ...
-        let seed = std::env::var("PROPTEST_SEED")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0xC0FFEE);
+        // (read through the runtime::env registry, like every env knob).
+        let seed = crate::runtime::env::proptest_seed().unwrap_or(0xC0FFEE);
         Self { cases: 256, seed, max_shrink_steps: 500 }
     }
 }

@@ -1,0 +1,185 @@
+//! Central registry for every environment variable the crate reads.
+//!
+//! All process-environment access funnels through this module: the
+//! static analyzer (`tools/analyze.py`, rule `env-read-outside-registry`)
+//! rejects any `env::var` / `env::var_os` call elsewhere in the tree, and
+//! rule `env-var-undocumented` checks that every name registered here has
+//! a row in the README "Environment variables" table. Adding a knob means
+//! adding it to [`REGISTERED`], writing an accessor, and documenting it —
+//! the lint fails the build until all three exist.
+//!
+//! Two read disciplines coexist, chosen per variable:
+//!
+//! * **Read-once** (`HCCS_FORCE_SCALAR`, `HCCS_FORCE_UNFUSED`,
+//!   `HCCS_POOL_THREADS`): cached in a `OnceLock` on first use so the
+//!   whole process sees one consistent answer — SIMD dispatch and pool
+//!   sizing must not flip mid-run. Tests that need to vary these use the
+//!   programmatic overrides (`simd::set_override`, `epilogue::scoped_fused`)
+//!   instead of mutating the environment.
+//! * **Fresh-read** (`HCCS_BENCH_*`, `PROPTEST_SEED`): re-read on every
+//!   call. The bench harness and the proptest replay knob are set/unset
+//!   by tests and wrapper scripts at runtime, so caching would make
+//!   `std::env::set_var` silently ineffective.
+
+use std::ffi::OsString;
+use std::sync::OnceLock;
+
+/// One registered environment variable: name, read discipline, effect.
+///
+/// The table is data (not just docs) so the analyzer and future tooling
+/// can enumerate the supported knobs without parsing accessor bodies.
+pub struct EnvVar {
+    /// Exact variable name as read from the process environment.
+    pub name: &'static str,
+    /// `"read-once"` or `"fresh-read"` (see module docs).
+    pub discipline: &'static str,
+    /// One-line effect, mirrored in the README table.
+    pub effect: &'static str,
+}
+
+/// Every environment variable this crate reads, in README table order.
+pub const REGISTERED: &[EnvVar] = &[
+    EnvVar {
+        name: "HCCS_FORCE_SCALAR",
+        discipline: "read-once",
+        effect: "Force the scalar kernel path even when AVX2 is available",
+    },
+    EnvVar {
+        name: "HCCS_FORCE_UNFUSED",
+        discipline: "read-once",
+        effect: "Disable fused GEMM epilogues (standalone per-layer sweeps)",
+    },
+    EnvVar {
+        name: "HCCS_POOL_THREADS",
+        discipline: "read-once",
+        effect: "Worker count for the global pool (default: available parallelism)",
+    },
+    EnvVar {
+        name: "HCCS_BENCH_WARMUP_MS",
+        discipline: "fresh-read",
+        effect: "Warm-up budget per bench in milliseconds",
+    },
+    EnvVar {
+        name: "HCCS_BENCH_MEASURE_MS",
+        discipline: "fresh-read",
+        effect: "Measurement budget per bench in milliseconds",
+    },
+    EnvVar {
+        name: "HCCS_BENCH_JSON",
+        discipline: "fresh-read",
+        effect: "Directory to write per-bench JSON results into",
+    },
+    EnvVar {
+        name: "PROPTEST_SEED",
+        discipline: "fresh-read",
+        effect: "Replay seed for the property-testing harness",
+    },
+];
+
+/// Truthy flag semantics shared by the `HCCS_FORCE_*` switches: set and
+/// neither empty nor `"0"`.
+fn flag(val: Option<String>) -> bool {
+    val.map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Read a registered variable. `debug_assert` (not the analyzer) catches
+/// accessors that bypass [`REGISTERED`] — the lint only sees this module
+/// from the outside.
+fn read(name: &str) -> Option<String> {
+    debug_assert!(
+        REGISTERED.iter().any(|v| v.name == name),
+        "env var {name} is read but not in runtime::env::REGISTERED"
+    );
+    std::env::var(name).ok()
+}
+
+fn read_os(name: &str) -> Option<OsString> {
+    debug_assert!(
+        REGISTERED.iter().any(|v| v.name == name),
+        "env var {name} is read but not in runtime::env::REGISTERED"
+    );
+    std::env::var_os(name)
+}
+
+/// `HCCS_FORCE_SCALAR` — read once; see module docs for why.
+pub fn force_scalar() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| flag(read("HCCS_FORCE_SCALAR")))
+}
+
+/// `HCCS_FORCE_UNFUSED` — read once.
+pub fn force_unfused() -> bool {
+    static CACHE: OnceLock<bool> = OnceLock::new();
+    *CACHE.get_or_init(|| flag(read("HCCS_FORCE_UNFUSED")))
+}
+
+/// `HCCS_POOL_THREADS` — read once; `None` when unset, unparsable, or
+/// zero (callers fall back to the detected parallelism).
+pub fn pool_threads() -> Option<usize> {
+    static CACHE: OnceLock<Option<usize>> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        read("HCCS_POOL_THREADS")
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+    })
+}
+
+/// `HCCS_BENCH_WARMUP_MS` — fresh-read; `None` when unset or unparsable.
+pub fn bench_warmup_ms() -> Option<u64> {
+    read("HCCS_BENCH_WARMUP_MS").and_then(|v| v.parse().ok())
+}
+
+/// `HCCS_BENCH_MEASURE_MS` — fresh-read; `None` when unset or unparsable.
+pub fn bench_measure_ms() -> Option<u64> {
+    read("HCCS_BENCH_MEASURE_MS").and_then(|v| v.parse().ok())
+}
+
+/// `HCCS_BENCH_JSON` — fresh-read; the bench JSON output directory.
+pub fn bench_json_dir() -> Option<OsString> {
+    read_os("HCCS_BENCH_JSON")
+}
+
+/// `PROPTEST_SEED` — fresh-read; `None` when unset or unparsable.
+pub fn proptest_seed() -> Option<u64> {
+    read("PROPTEST_SEED").and_then(|v| v.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_well_formed() {
+        for (i, v) in REGISTERED.iter().enumerate() {
+            assert!(
+                v.name == "PROPTEST_SEED" || v.name.starts_with("HCCS_"),
+                "unexpected prefix: {}",
+                v.name
+            );
+            assert!(matches!(v.discipline, "read-once" | "fresh-read"));
+            assert!(!v.effect.is_empty());
+            for w in &REGISTERED[i + 1..] {
+                assert_ne!(v.name, w.name, "duplicate registry entry");
+            }
+        }
+    }
+
+    #[test]
+    fn flag_semantics() {
+        assert!(!flag(None));
+        assert!(!flag(Some(String::new())));
+        assert!(!flag(Some("0".into())));
+        assert!(flag(Some("1".into())));
+        assert!(flag(Some("yes".into())));
+    }
+
+    #[test]
+    fn fresh_read_accessors_track_the_environment() {
+        // Only the fresh-read accessors may be exercised via set_var —
+        // the read-once ones are pinned by OnceLock for process life.
+        std::env::set_var("HCCS_BENCH_WARMUP_MS", "123");
+        assert_eq!(bench_warmup_ms(), Some(123));
+        std::env::remove_var("HCCS_BENCH_WARMUP_MS");
+        assert_eq!(bench_warmup_ms(), None);
+    }
+}

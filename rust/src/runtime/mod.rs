@@ -19,6 +19,7 @@
 //! parallelism, complementing the shard-level request parallelism of
 //! the serving layer).
 
+pub mod env;
 pub mod manifest;
 pub mod pool;
 pub mod weights;

@@ -38,8 +38,21 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::thread::JoinHandle;
+
+/// Lock `m`, recovering from poisoning instead of panicking.
+///
+/// Every panic-capable region in this crate's thread subsystems runs
+/// under `catch_unwind` *outside* the lock, so a poisoned mutex only
+/// means "some thread died between lock and unlock while unwinding
+/// through infallible bookkeeping" — the data is still consistent and
+/// the right response is to keep serving, not to cascade the panic into
+/// every other thread that touches the lock.  Used by the pool and the
+/// `net` connection registry.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One fan-out: a borrowed block closure + claim cursor + completion
 /// latch.
@@ -61,8 +74,11 @@ struct JobState {
 }
 
 // SAFETY: `f` points at a `Sync` closure (callable from any thread) and
-// is only dereferenced while the owning `run_blocks` frame is alive.
+// is only dereferenced while the owning `run_blocks` frame keeps the
+// borrow live (the submitter blocks until `done == total`).
 unsafe impl Send for Job {}
+// SAFETY: as above — shared access is `&self` on a `Sync` closure plus
+// atomics/mutexes; the borrow outlives every dereference.
 unsafe impl Sync for Job {}
 
 impl Job {
@@ -83,7 +99,7 @@ impl Job {
             // parked in run_blocks and the closure borrow is live.
             let f = unsafe { &*self.f };
             let result = catch_unwind(AssertUnwindSafe(|| f(b)));
-            let mut st = self.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.state);
             if let Err(payload) = result {
                 // Keep the first panic; later ones are duplicates of
                 // the same logical failure.
@@ -125,15 +141,30 @@ impl WorkerPool {
             queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
             work_cv: Condvar::new(),
         });
-        let workers = (1..threads)
-            .map(|i| {
-                let sh = Arc::clone(&shared);
-                std::thread::Builder::new()
-                    .name(format!("hccs-pool-{i}"))
-                    .spawn(move || worker_loop(&sh))
-                    .expect("spawning pool worker")
-            })
-            .collect();
+        let mut workers = Vec::with_capacity(threads - 1);
+        for i in 1..threads {
+            let sh = Arc::clone(&shared);
+            match std::thread::Builder::new()
+                .name(format!("hccs-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+            {
+                Ok(h) => workers.push(h),
+                Err(e) => {
+                    // Degrade to fewer participants rather than dying:
+                    // the block-claiming protocol is correct at every
+                    // pool size, the caller always participates, and a
+                    // resource-exhausted process should shed capacity,
+                    // not crash mid-request.
+                    eprintln!(
+                        "hccs-pool: worker spawn failed ({e}); \
+                         running with {} participant(s)",
+                        workers.len() + 1
+                    );
+                    break;
+                }
+            }
+        }
+        let threads = workers.len() + 1;
         WorkerPool { shared, workers, threads }
     }
 
@@ -170,7 +201,7 @@ impl WorkerPool {
             cv: Condvar::new(),
         });
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.shared.queue);
             q.jobs.push_back(Arc::clone(&job));
         }
         self.shared.work_cv.notify_all();
@@ -183,7 +214,7 @@ impl WorkerPool {
             // Drop our job from the queue if a worker hasn't already
             // popped it lazily; after this point nothing can observe
             // the erased pointer.
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.shared.queue);
             q.jobs.retain(|j| !Arc::ptr_eq(j, &job));
         }
         if let Some(p) = payload {
@@ -191,23 +222,28 @@ impl WorkerPool {
         }
     }
 
-    fn state_wait_done<'a>(&self, job: &'a Job) -> std::sync::MutexGuard<'a, JobState> {
-        let st = job.state.lock().unwrap();
-        job.cv.wait_while(st, |st| st.done < job.total).unwrap()
+    fn state_wait_done<'a>(&self, job: &'a Job) -> MutexGuard<'a, JobState> {
+        let st = lock_unpoisoned(&job.state);
+        job.cv
+            .wait_while(st, |st| st.done < job.total)
+            .unwrap_or_else(PoisonError::into_inner)
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.shared.queue);
             q.shutdown = true;
         }
         self.shared.work_cv.notify_all();
         for h in self.workers.drain(..) {
-            // A worker that panicked outside catch_unwind would poison
-            // nothing of ours; surface it rather than hide it.
-            h.join().expect("pool worker panicked outside a job");
+            // A worker can only die outside catch_unwind while unwinding
+            // through its own bookkeeping; log it — panicking inside
+            // Drop would abort the process.
+            if h.join().is_err() {
+                eprintln!("hccs-pool: worker exited by panic outside a job");
+            }
         }
     }
 }
@@ -215,7 +251,7 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&shared.queue);
             loop {
                 if q.shutdown {
                     return;
@@ -230,7 +266,7 @@ fn worker_loop(shared: &Shared) {
                 if let Some(j) = q.jobs.front() {
                     break Arc::clone(j);
                 }
-                q = shared.work_cv.wait(q).unwrap();
+                q = shared.work_cv.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
         };
         job.run();
@@ -265,13 +301,9 @@ pub fn with_pool<R>(pool: &WorkerPool, f: impl FnOnce() -> R) -> R {
 pub fn global() -> &'static WorkerPool {
     static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
     GLOBAL.get_or_init(|| {
-        let threads = std::env::var("HCCS_POOL_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            });
+        let threads = crate::runtime::env::pool_threads().unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
         WorkerPool::new(threads)
     })
 }

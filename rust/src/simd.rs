@@ -36,7 +36,6 @@
 //! [`require`] rather than executing unsupported instructions.
 
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
 
 /// A dispatchable kernel implementation.  Every `*_with_path` kernel
 /// entry point takes one of these; the plain entry points use
@@ -65,12 +64,16 @@ const OVERRIDE_SCALAR: u8 = 2;
 static OVERRIDE: AtomicU8 = AtomicU8::new(OVERRIDE_NONE);
 
 /// True when the AVX2 path can run on this host.
+///
+/// Always `false` under Miri: the interpreter has no vector ISA, so the
+/// scalar path is the portable test subset and every AVX2-guarded test
+/// self-skips (see the `miri` CI job).
 pub fn avx2_available() -> bool {
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
     {
         std::arch::is_x86_feature_detected!("avx2")
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
     {
         false
     }
@@ -86,12 +89,7 @@ pub fn detected() -> SimdPath {
 }
 
 fn env_forces_scalar() -> bool {
-    static FORCED: OnceLock<bool> = OnceLock::new();
-    *FORCED.get_or_init(|| {
-        std::env::var("HCCS_FORCE_SCALAR")
-            .map(|v| !v.is_empty() && v != "0")
-            .unwrap_or(false)
-    })
+    crate::runtime::env::force_scalar()
 }
 
 /// The dispatch path the plain kernel entry points use right now.

@@ -1,0 +1,87 @@
+//! Wires the repo-native static analyzer (`tools/analyze.py`) into
+//! `cargo test`: the tree must lint clean, every seeded fixture must
+//! fire, and the analyzer's own unit tests must pass.
+//!
+//! The analyzer is stdlib-only Python. When no Python interpreter is
+//! on `PATH` (minimal build images), these tests skip loudly rather
+//! than fail — CI runs the analyzer as its own blocking job either way.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn repo_root() -> PathBuf {
+    // CARGO_MANIFEST_DIR is rust/; the analyzer lives one level up.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent directory")
+        .to_path_buf()
+}
+
+/// First working Python 3 interpreter on PATH, if any.
+fn python() -> Option<&'static str> {
+    for cand in ["python3", "python"] {
+        let probe = Command::new(cand)
+            .arg("-c")
+            .arg("import sys; sys.exit(0 if sys.version_info[0] >= 3 else 1)")
+            .status();
+        if matches!(probe, Ok(s) if s.success()) {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+fn run_tool(args: &[&str]) {
+    let Some(py) = python() else {
+        eprintln!("skipping: no python3/python on PATH (analyzer runs as its own CI job)");
+        return;
+    };
+    let root = repo_root();
+    let out = Command::new(py)
+        .args(args)
+        .arg("--root")
+        .arg(&root)
+        .current_dir(&root)
+        .output()
+        .expect("spawn python analyzer");
+    assert!(
+        out.status.success(),
+        "`{py} {}` failed\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        args.join(" "),
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "spawns a Python subprocess")]
+fn tree_lints_clean() {
+    run_tool(&["tools/analyze.py"]);
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "spawns a Python subprocess")]
+fn every_seeded_fixture_fires() {
+    run_tool(&["tools/analyze.py", "--fixtures"]);
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "spawns a Python subprocess")]
+fn analyzer_unit_tests_pass() {
+    let Some(py) = python() else {
+        eprintln!("skipping: no python3/python on PATH (analyzer runs as its own CI job)");
+        return;
+    };
+    let root = repo_root();
+    let out = Command::new(py)
+        .arg("tools/test_analyze.py")
+        .current_dir(&root)
+        .output()
+        .expect("spawn analyzer unit tests");
+    assert!(
+        out.status.success(),
+        "`{py} tools/test_analyze.py` failed\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

@@ -522,3 +522,70 @@ fn zero_deadline_sheds_the_stream_with_a_shed_error_frame() {
         backend.shutdown();
     });
 }
+
+#[test]
+fn poisoned_peer_mid_flight_leaves_concurrent_clients_unharmed() {
+    with_timeout(120, || {
+        // Three well-behaved clients pipeline requests WHILE a hostile
+        // peer hammers the server with repeated garbage connections.
+        // Every poisoned connection must die alone (one framing-error
+        // reply, then close) — the regression this pins is a panicking
+        // or poisoned connection thread taking the accept loop or a
+        // sibling connection down with it.
+        const GOOD_CLIENTS: usize = 3;
+        const REQS_PER_CLIENT: usize = 4;
+        const BAD_CONNS: usize = 5;
+        let reqs = texts(GOOD_CLIENTS * REQS_PER_CLIENT);
+        let expected = in_process_lines(&reqs);
+        let (srv, backend) = start_server(NetConfig::default());
+        let addr = srv.local_addr();
+
+        let attacker = std::thread::spawn(move || {
+            for _ in 0..BAD_CONNS {
+                let mut bad = TcpStream::connect(addr).unwrap();
+                let mut replies = BufReader::new(bad.try_clone().unwrap());
+                bad.write_all(b"\x00\xffdefinitely not a frame\n").unwrap();
+                let mut line = String::new();
+                assert!(replies.read_line(&mut line).unwrap() > 0, "error reply expected");
+                assert!(line.contains("\"error\""), "{line}");
+                line.clear();
+                assert_eq!(replies.read_line(&mut line).unwrap(), 0, "connection must close");
+            }
+        });
+
+        let clients: Vec<_> = (0..GOOD_CLIENTS)
+            .map(|c| {
+                let mine: Vec<String> =
+                    reqs[c * REQS_PER_CLIENT..(c + 1) * REQS_PER_CLIENT].to_vec();
+                std::thread::spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    let mut replies = BufReader::new(s.try_clone().unwrap());
+                    let mut out = Vec::new();
+                    for text in &mine {
+                        s.write_all(format!("{{\"text\": \"{text}\"}}\n").as_bytes()).unwrap();
+                        let mut line = String::new();
+                        assert!(replies.read_line(&mut line).unwrap() > 0);
+                        let v = Value::parse(line.trim()).unwrap();
+                        out.push(v.get("result").and_then(Value::as_str).unwrap().to_string());
+                    }
+                    out
+                })
+            })
+            .collect();
+
+        attacker.join().unwrap();
+        for (c, h) in clients.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            let want = &expected[c * REQS_PER_CLIENT..(c + 1) * REQS_PER_CLIENT];
+            assert_eq!(got, want, "client {c} replies diverged");
+        }
+
+        assert!(srv.metrics.counter("net.frame_errors").get() >= BAD_CONNS as u64);
+        let metrics = srv.metrics.clone();
+        srv.shutdown();
+        backend.shutdown();
+        // shutdown() joins every connection thread, so the RAII gauge
+        // guards have all dropped by the time it returns.
+        assert_eq!(metrics.gauge("net.active").get(), 0, "live-connection gauge leaked");
+    });
+}

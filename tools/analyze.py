@@ -1,0 +1,595 @@
+#!/usr/bin/env python3
+"""Repo-native static analyzer for the HCCS tree (stdlib only, offline).
+
+The repo's soundness story rests on invariants the compiler cannot see:
+SAFETY comments that cite real overflow-bounds derivations, AVX2 kernels
+reachable only through `crate::simd` dispatch, hot paths that never
+panic, env knobs registered in one module, metric names that match the
+docs.  This tool walks `rust/src` with a lightweight Rust lexer and
+enforces them as blocking lint rules (CI job `analyze`; also wired into
+`cargo test` via `rust/tests/analyzer.rs`).
+
+Usage:
+    python3 tools/analyze.py [--root DIR]     # lint the tree (exit 1 on hit)
+    python3 tools/analyze.py --fixtures       # each seeded fixture must trip
+    python3 tools/analyze.py --list-rules
+
+Rules (scope in parentheses):
+  unsafe-needs-safety       every `unsafe` token carries a SAFETY comment
+                            (rust/src)
+  safety-underived          SAFETY comments cite a bounds/lifetime
+                            derivation keyword (the four kernel files)
+  target-feature-confined   #[target_feature] only in the avx2 modules of
+                            the kernel files, or simd.rs (rust/src)
+  avx2-outside-dispatch     avx2:: calls outside `mod avx2`/tests must sit
+                            under a SimdPath::Avx2 dispatch arm (rust/src)
+  panic-in-hot-path         no unwrap/expect/panic!/todo!/unimplemented!/
+                            unreachable! in linalg/, hccs/batch.rs, net/,
+                            runtime/pool.rs non-test code
+  env-read-outside-registry env::var/var_os and HCCS_* name literals only
+                            in runtime/env.rs (rust/, examples/)
+  env-var-undocumented      every name registered in runtime/env.rs has a
+                            row in README.md
+  metric-undocumented       every metric name recorded in non-test code
+                            appears in docs/ARCHITECTURE.md or
+                            EXPERIMENTS.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# --------------------------------------------------------------------------
+# Lexer: classify every byte of a Rust source file as code / comment /
+# string so rules never fire on prose or literals.
+# --------------------------------------------------------------------------
+
+
+class Lexed:
+    """`code`: source with comments and literal *contents* blanked
+    (structure and line numbers preserved).  `comments`: {line: text}
+    for every line holding (part of) a comment.  `strings`: list of
+    (line, contents) for every string literal."""
+
+    def __init__(self, code: str, comments: dict[int, str], strings: list[tuple[int, str]]):
+        self.code = code
+        self.comments = comments
+        self.strings = strings
+        self.code_lines = code.split("\n")
+
+
+def lex(src: str) -> Lexed:
+    out: list[str] = []
+    comments: dict[int, str] = {}
+    strings: list[tuple[int, str]] = []
+    i, n, line = 0, len(src), 1
+
+    def emit(ch: str) -> None:
+        out.append(ch)
+
+    def blank(ch: str) -> str:
+        return ch if ch == "\n" else " "
+
+    while i < n:
+        ch = src[i]
+        two = src[i : i + 2]
+        if ch == "\n":
+            emit(ch)
+            line += 1
+            i += 1
+        elif two == "//":
+            j = src.find("\n", i)
+            j = n if j == -1 else j
+            comments[line] = comments.get(line, "") + src[i:j]
+            out.append(" " * (j - i))
+            i = j
+        elif two == "/*":
+            depth, j, l2 = 1, i + 2, line
+            while j < n and depth:
+                if src[j : j + 2] == "/*":
+                    depth, j = depth + 1, j + 2
+                elif src[j : j + 2] == "*/":
+                    depth, j = depth - 1, j + 2
+                else:
+                    if src[j] == "\n":
+                        l2 += 1
+                    j += 1
+            for k, text_line in enumerate(src[i:j].split("\n")):
+                comments[line + k] = comments.get(line + k, "") + text_line
+            out.append("".join(blank(c) for c in src[i:j]))
+            line = l2
+            i = j
+        elif ch == '"' or two in ('r"', 'b"') or re.match(r'(rb?|br?)#*"', src[i : i + 8]):
+            m = re.match(r'(rb?|br?)(#*)"', src[i:]) or re.match(r'()()"', src[i:])
+            prefix, hashes = m.group(1), m.group(2)
+            is_raw = "r" in prefix
+            start = i + len(prefix) + len(hashes) + 1
+            j, start_line = start, line
+            content: list[str] = []
+            while j < n:
+                if not is_raw and src[j] == "\\":
+                    content.append(src[j : j + 2])
+                    j += 2
+                    continue
+                if src[j] == '"' and (is_raw is False or src[j + 1 : j + 1 + len(hashes)] == hashes):
+                    break
+                if src[j] == "\n":
+                    line += 1
+                content.append(src[j])
+                j += 1
+            end = min(n, j + 1 + (len(hashes) if is_raw else 0))
+            strings.append((start_line, "".join(content)))
+            out.append(src[i : len(prefix) + len(hashes) + 1 + i])  # opening quote kept
+            out.append("".join(blank(c) for c in src[start:j]))
+            out.append(src[j:end])
+            i = end
+        elif ch == "'":
+            # Char literal vs lifetime: a char literal closes with a quote.
+            m = re.match(r"'(\\.[^']*|[^'\\])'", src[i:])
+            if m:
+                out.append("' '" + " " * (len(m.group(0)) - 3))
+                i += len(m.group(0))
+            else:
+                emit(ch)
+                i += 1
+        else:
+            emit(ch)
+            i += 1
+    return Lexed("".join(out), comments, strings)
+
+
+# --------------------------------------------------------------------------
+# Span helpers: find `mod NAME { .. }` extents and #[cfg(test)] regions.
+# --------------------------------------------------------------------------
+
+
+def line_of(code: str, pos: int) -> int:
+    return code.count("\n", 0, pos) + 1
+
+
+def brace_span(code: str, open_pos: int) -> tuple[int, int]:
+    """(start_line, end_line) of the brace block opening at `open_pos`."""
+    depth, j = 0, open_pos
+    while j < len(code):
+        if code[j] == "{":
+            depth += 1
+        elif code[j] == "}":
+            depth -= 1
+            if depth == 0:
+                return (line_of(code, open_pos), line_of(code, j))
+        j += 1
+    return (line_of(code, open_pos), line_of(code, len(code) - 1))
+
+
+def mod_spans(lx: Lexed, name: str) -> list[tuple[int, int]]:
+    spans = []
+    for m in re.finditer(r"\bmod\s+" + re.escape(name) + r"\s*\{", lx.code):
+        spans.append(brace_span(lx.code, m.end() - 1))
+    return spans
+
+
+def test_spans(lx: Lexed) -> list[tuple[int, int]]:
+    """Extents of #[cfg(test)]-gated items (mod blocks, mostly)."""
+    spans = []
+    for m in re.finditer(r"#\[\s*cfg\s*\(\s*test\s*\)\s*\]", lx.code):
+        brace = lx.code.find("{", m.end())
+        semi = lx.code.find(";", m.end())
+        if brace != -1 and (semi == -1 or brace < semi):
+            spans.append(brace_span(lx.code, brace))
+    return spans
+
+
+def in_spans(line: int, spans: list[tuple[int, int]]) -> bool:
+    return any(a <= line <= b for a, b in spans)
+
+
+# --------------------------------------------------------------------------
+# Rules
+# --------------------------------------------------------------------------
+
+KERNEL_FILES = {
+    "rust/src/linalg/gemm.rs",
+    "rust/src/linalg/epilogue.rs",
+    "rust/src/hccs/batch.rs",
+    "rust/src/runtime/pool.rs",
+}
+TARGET_FEATURE_FILES = KERNEL_FILES - {"rust/src/runtime/pool.rs"} | {"rust/src/simd.rs"}
+ENV_REGISTRY = "rust/src/runtime/env.rs"
+
+# A SAFETY comment in a kernel file must cite its derivation: bounds
+# arithmetic, exactness, aliasing/lifetime reasoning, or the dispatch
+# precondition.  "trust me" does not lint clean.
+DERIVATION_KEYWORDS = [
+    "overflow",
+    "bound",
+    "exact",
+    "disjoint",
+    "readable",
+    "writable",
+    "write-all",
+    "feasib",
+    "borrow",
+    "lifetime",
+    "avx2",
+    "capacity",
+    "contract",
+    "in range",
+    "len",
+    "bit pattern",
+]
+
+PANIC_SCOPES = ("rust/src/linalg/", "rust/src/net/")
+PANIC_FILES = {"rust/src/hccs/batch.rs", "rust/src/runtime/pool.rs"}
+PANIC_TOKENS = re.compile(
+    r"\.unwrap\s*\(\s*\)|\.expect\s*\(|\bpanic!\s*[(\[{]|\btodo!\s*[(\[{]"
+    r"|\bunimplemented!\s*[(\[{]|\bunreachable!\s*[(\[{]"
+)
+
+METRIC_PATTERNS = [
+    re.compile(r"\.(?:counter|gauge|histogram)\s*\(\s*$"),
+    re.compile(r"Rolled(?:Counter|Histogram)::new\s*\([^)]*$"),
+]
+
+
+class Violation:
+    def __init__(self, rule: str, path: str, line: int, msg: str):
+        self.rule, self.path, self.line, self.msg = rule, path, line, msg
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+def comment_block_containing(lx: Lexed, line: int) -> str:
+    """The contiguous comment block that includes `line` (joined text)."""
+    if line not in lx.comments:
+        return ""
+    lo = line
+    while lo - 1 in lx.comments:
+        lo -= 1
+    hi = line
+    while hi + 1 in lx.comments:
+        hi += 1
+    return " ".join(lx.comments[k] for k in range(lo, hi + 1))
+
+
+def has_safety_near(lx: Lexed, line: int, window: int = 5) -> bool:
+    """SAFETY comment on `line` or within `window` lines above it."""
+    for k in range(max(1, line - window), line + 1):
+        if "SAFETY" in lx.comments.get(k, ""):
+            return True
+    return False
+
+
+def rule_unsafe_needs_safety(path: str, lx: Lexed) -> list[Violation]:
+    out = []
+    for m in re.finditer(r"\bunsafe\b", lx.code):
+        line = line_of(lx.code, m.start())
+        if not has_safety_near(lx, line):
+            out.append(
+                Violation(
+                    "unsafe-needs-safety",
+                    path,
+                    line,
+                    "`unsafe` without a `// SAFETY:` comment on or above it",
+                )
+            )
+    return out
+
+
+def rule_safety_underived(path: str, lx: Lexed) -> list[Violation]:
+    if path not in KERNEL_FILES:
+        return []
+    out = []
+    seen_blocks = set()
+    for line, text in sorted(lx.comments.items()):
+        if "SAFETY" not in text:
+            continue
+        lo = line
+        while lo - 1 in lx.comments:
+            lo -= 1
+        if lo in seen_blocks:
+            continue
+        seen_blocks.add(lo)
+        block = comment_block_containing(lx, line).lower()
+        if not any(k in block for k in DERIVATION_KEYWORDS):
+            out.append(
+                Violation(
+                    "safety-underived",
+                    path,
+                    line,
+                    "SAFETY comment cites no bounds/derivation keyword "
+                    f"(one of: {', '.join(DERIVATION_KEYWORDS[:6])}, ...)",
+                )
+            )
+    return out
+
+
+def rule_target_feature_confined(path: str, lx: Lexed) -> list[Violation]:
+    out = []
+    avx2_spans = mod_spans(lx, "avx2")
+    for m in re.finditer(r"#\[\s*target_feature\b", lx.code):
+        line = line_of(lx.code, m.start())
+        if path == "rust/src/simd.rs":
+            continue
+        if path in TARGET_FEATURE_FILES and in_spans(line, avx2_spans):
+            continue
+        out.append(
+            Violation(
+                "target-feature-confined",
+                path,
+                line,
+                "#[target_feature] outside the kernel files' `mod avx2` "
+                "(new SIMD code must route through crate::simd dispatch)",
+            )
+        )
+    return out
+
+
+def rule_avx2_outside_dispatch(path: str, lx: Lexed) -> list[Violation]:
+    out = []
+    avx2_spans = mod_spans(lx, "avx2")
+    tests = test_spans(lx)
+    fn_re = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?(?:const\s+)?(?:unsafe\s+)?fn\s+\w+")
+    for m in re.finditer(r"\bavx2::", lx.code):
+        line = line_of(lx.code, m.start())
+        if path == "rust/src/simd.rs" or in_spans(line, avx2_spans) or in_spans(line, tests):
+            continue
+        # Find the enclosing fn's first line, then require a
+        # SimdPath::Avx2 dispatch arm between it and the call.
+        fn_line = None
+        for k in range(line, 0, -1):
+            if fn_re.match(lx.code_lines[k - 1]):
+                fn_line = k
+                break
+        window = "\n".join(lx.code_lines[(fn_line or 1) - 1 : line])
+        if "SimdPath::Avx2" not in window:
+            out.append(
+                Violation(
+                    "avx2-outside-dispatch",
+                    path,
+                    line,
+                    "direct avx2:: call without a SimdPath::Avx2 dispatch arm "
+                    "in the enclosing fn (route through crate::simd)",
+                )
+            )
+    return out
+
+
+def rule_panic_in_hot_path(path: str, lx: Lexed) -> list[Violation]:
+    if not (path.startswith(PANIC_SCOPES) or path in PANIC_FILES):
+        return []
+    out = []
+    tests = test_spans(lx)
+    for m in PANIC_TOKENS.finditer(lx.code):
+        line = line_of(lx.code, m.start())
+        if in_spans(line, tests):
+            continue
+        token = m.group(0).strip().rstrip("([{ \t")
+        out.append(
+            Violation(
+                "panic-in-hot-path",
+                path,
+                line,
+                f"`{token}` in a kernel hot path / connection thread "
+                "(use logged teardown or lock_unpoisoned instead)",
+            )
+        )
+    return out
+
+
+def rule_env_outside_registry(path: str, lx: Lexed) -> list[Violation]:
+    if path == ENV_REGISTRY:
+        return []
+    out = []
+    for m in re.finditer(r"\benv\s*::\s*(var_os|var)\b", lx.code):
+        line = line_of(lx.code, m.start())
+        out.append(
+            Violation(
+                "env-read-outside-registry",
+                path,
+                line,
+                f"env::{m.group(1)} outside runtime/env.rs — add the knob "
+                "to the registry and read it through an accessor",
+            )
+        )
+    tests = test_spans(lx)
+    for line, content in lx.strings:
+        if re.fullmatch(r"HCCS_[A-Z0-9_]+", content) and not in_spans(line, tests):
+            out.append(
+                Violation(
+                    "env-read-outside-registry",
+                    path,
+                    line,
+                    f'env var name literal "{content}" outside runtime/env.rs '
+                    "(non-test code must use the registry accessors)",
+                )
+            )
+    return out
+
+
+def registry_names(lx: Lexed) -> list[tuple[int, str]]:
+    return [
+        (line, content)
+        for line, content in lx.strings
+        if re.fullmatch(r"HCCS_[A-Z0-9_]+|PROPTEST_SEED", content)
+    ]
+
+
+def rule_env_undocumented(path: str, lx: Lexed, readme: str) -> list[Violation]:
+    if path != ENV_REGISTRY:
+        return []
+    out = []
+    for line, name in registry_names(lx):
+        if name not in readme:
+            out.append(
+                Violation(
+                    "env-var-undocumented",
+                    path,
+                    line,
+                    f"registered env var {name} has no row in README.md's "
+                    "environment-variable table",
+                )
+            )
+    return out
+
+
+def recorded_metric_names(lx: Lexed) -> list[tuple[int, str]]:
+    """Literal metric names recorded in non-test code.  format!-built
+    names contribute their literal base (the part before `{`)."""
+    tests = test_spans(lx)
+    names = []
+    for line, content in lx.strings:
+        if in_spans(line, tests):
+            continue
+        code_line = lx.code_lines[line - 1]
+        prefix = code_line.split('"')[0]
+        if not any(p.search(prefix) for p in METRIC_PATTERNS):
+            # Multi-line call: look at the previous code line too.
+            prev = lx.code_lines[line - 2] if line >= 2 else ""
+            if not any(p.search(prev + " " + prefix) for p in METRIC_PATTERNS):
+                continue
+        base = content.split("{")[0]
+        if re.fullmatch(r"[a-z0-9_.]{3,}", base):
+            names.append((line, base))
+    return names
+
+
+def rule_metric_undocumented(path: str, lx: Lexed, docs: str) -> list[Violation]:
+    if not path.startswith("rust/src/"):
+        return []
+    out = []
+    for line, name in recorded_metric_names(lx):
+        if name not in docs:
+            out.append(
+                Violation(
+                    "metric-undocumented",
+                    path,
+                    line,
+                    f'metric name "{name}" is not in the documented name set '
+                    "(docs/ARCHITECTURE.md / EXPERIMENTS.md)",
+                )
+            )
+    return out
+
+
+RULES = [
+    "unsafe-needs-safety",
+    "safety-underived",
+    "target-feature-confined",
+    "avx2-outside-dispatch",
+    "panic-in-hot-path",
+    "env-read-outside-registry",
+    "env-var-undocumented",
+    "metric-undocumented",
+]
+
+
+def analyze_file(path: str, src: str, readme: str, docs: str) -> list[Violation]:
+    lx = lex(src)
+    out: list[Violation] = []
+    if path.startswith("rust/src/"):
+        out += rule_unsafe_needs_safety(path, lx)
+        out += rule_safety_underived(path, lx)
+        out += rule_target_feature_confined(path, lx)
+        out += rule_avx2_outside_dispatch(path, lx)
+        out += rule_panic_in_hot_path(path, lx)
+        out += rule_env_undocumented(path, lx, readme)
+        out += rule_metric_undocumented(path, lx, docs)
+    out += rule_env_outside_registry(path, lx)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Tree walking and the fixtures harness
+# --------------------------------------------------------------------------
+
+SCAN_DIRS = ["rust/src", "rust/benches", "rust/tests", "examples"]
+
+
+def read_docs(root: str) -> tuple[str, str]:
+    def slurp(rel: str) -> str:
+        p = os.path.join(root, rel)
+        if not os.path.exists(p):
+            return ""
+        with open(p, encoding="utf-8") as fh:
+            return fh.read()
+
+    readme = slurp("README.md")
+    docs = slurp("docs/ARCHITECTURE.md") + "\n" + slurp("EXPERIMENTS.md")
+    return readme, docs
+
+
+def scan_repo(root: str) -> list[Violation]:
+    readme, docs = read_docs(root)
+    out: list[Violation] = []
+    for d in SCAN_DIRS:
+        base = os.path.join(root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fname in sorted(filenames):
+                if not fname.endswith(".rs"):
+                    continue
+                full = os.path.join(dirpath, fname)
+                rel = os.path.relpath(full, root).replace(os.sep, "/")
+                with open(full, encoding="utf-8") as fh:
+                    src = fh.read()
+                out.extend(analyze_file(rel, src, readme, docs))
+    return out
+
+
+def run_fixtures(root: str, fixture_dir: str) -> int:
+    """Each fixture declares `//! check-as:` (virtual repo path) and
+    `//! expect:` (the rule that must fire).  Exactly that rule — and no
+    other — must trip.  Returns a process exit code."""
+    readme, docs = read_docs(root)
+    failures = 0
+    names = sorted(f for f in os.listdir(fixture_dir) if f.endswith(".rs"))
+    if not names:
+        print(f"no fixtures found in {fixture_dir}", file=sys.stderr)
+        return 1
+    for fname in names:
+        with open(os.path.join(fixture_dir, fname), encoding="utf-8") as fh:
+            src = fh.read()
+        m_as = re.search(r"^//! check-as:\s*(\S+)", src, re.M)
+        m_ex = re.search(r"^//! expect:\s*(\S+)", src, re.M)
+        if not m_as or not m_ex:
+            print(f"FIXTURE {fname}: missing `//! check-as:` or `//! expect:` header")
+            failures += 1
+            continue
+        virtual, expected = m_as.group(1), m_ex.group(1)
+        fired = {v.rule for v in analyze_file(virtual, src, readme, docs)}
+        if fired == {expected}:
+            print(f"fixture {fname}: [{expected}] fired as seeded")
+        else:
+            print(f"FIXTURE {fname}: expected exactly {{{expected}}}, got {sorted(fired)}")
+            failures += 1
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    ap.add_argument("--fixtures", action="store_true", help="run the seeded-violation fixtures")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args()
+    if args.list_rules:
+        print("\n".join(RULES))
+        return 0
+    if args.fixtures:
+        return run_fixtures(args.root, os.path.join(args.root, "tools", "analyze_fixtures"))
+    violations = scan_repo(args.root)
+    for v in violations:
+        print(v)
+    if violations:
+        print(f"\nanalyze: {len(violations)} violation(s)", file=sys.stderr)
+        return 1
+    print("analyze: tree is clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+//! check-as: rust/src/model/fixture2.rs
+//! expect: avx2-outside-dispatch
+//!
+//! Seeded violation: a direct `avx2::` call with no SimdPath::Avx2
+//! dispatch arm in the enclosing fn.  Kernels must be reached through
+//! `crate::simd` so the scalar/AVX2 choice stays centralized.
+
+use crate::hccs::batch::avx2;
+
+pub fn rogue_row_max(x: &[i8]) -> i8 {
+    // SAFETY: requires AVX2 — bounds pre-checked by the caller.
+    unsafe { avx2::row_max(x) }
+}

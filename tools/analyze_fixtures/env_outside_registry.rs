@@ -1,0 +1,9 @@
+//! check-as: rust/src/model/fixture3.rs
+//! expect: env-read-outside-registry
+//!
+//! Seeded violation: a raw env::var read (and an HCCS_* name literal)
+//! outside rust/src/runtime/env.rs.  All knobs go through the registry.
+
+pub fn rogue_flag() -> bool {
+    std::env::var("HCCS_FIXTURE_FLAG").is_ok()
+}

@@ -1,0 +1,7 @@
+//! check-as: rust/src/runtime/env.rs
+//! expect: env-var-undocumented
+//!
+//! Seeded violation: checked as the registry module itself, registering
+//! a knob that has no row in README.md's environment-variable table.
+
+pub const REGISTERED: &[&str] = &["HCCS_TOTALLY_UNDOCUMENTED_KNOB"];

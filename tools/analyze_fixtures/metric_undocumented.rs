@@ -1,0 +1,11 @@
+//! check-as: rust/src/net/fixture_metrics.rs
+//! expect: metric-undocumented
+//!
+//! Seeded violation: recording a metric whose name is absent from the
+//! documented name set in docs/ARCHITECTURE.md / EXPERIMENTS.md.
+
+use crate::metrics::Registry;
+
+pub fn record(reg: &Registry) {
+    reg.counter("net.bogus_requests").inc();
+}

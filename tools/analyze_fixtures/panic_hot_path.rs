@@ -1,0 +1,10 @@
+//! check-as: rust/src/net/fixture.rs
+//! expect: panic-in-hot-path
+//!
+//! Seeded violation: `.unwrap()` on a connection thread.  A poisoned
+//! lock or short read must tear down one connection with a log line,
+//! never the whole server.
+
+pub fn reply_len(header: Option<usize>) -> usize {
+    header.unwrap()
+}

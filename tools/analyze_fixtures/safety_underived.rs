@@ -1,0 +1,12 @@
+//! check-as: rust/src/linalg/gemm.rs
+//! expect: safety-underived
+//!
+//! Seeded violation: checked as a kernel file, where SAFETY comments
+//! must cite a bounds/derivation keyword.  "trust me" satisfies
+//! `unsafe-needs-safety` but not `safety-underived`.
+
+pub fn grow(v: &mut Vec<u8>, n: usize) {
+    v.reserve(n);
+    // SAFETY: trust me.
+    unsafe { v.set_len(n) };
+}

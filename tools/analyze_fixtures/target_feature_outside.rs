@@ -1,0 +1,11 @@
+//! check-as: rust/src/model/fixture.rs
+//! expect: target-feature-confined
+//!
+//! Seeded violation: a #[target_feature] fn outside the kernel files'
+//! `mod avx2` blocks (and outside simd.rs).  The SAFETY doc line keeps
+//! `unsafe-needs-safety` and `safety-underived` quiet so exactly
+//! `target-feature-confined` fires.
+
+/// SAFETY: requires AVX2; register math only, no memory access.
+#[target_feature(enable = "avx2")]
+pub unsafe fn rogue_kernel() {}

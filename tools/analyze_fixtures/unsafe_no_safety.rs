@@ -1,0 +1,10 @@
+//! check-as: rust/src/linalg/fixture.rs
+//! expect: unsafe-needs-safety
+//!
+//! Seeded violation: an `unsafe` block with no safety comment anywhere
+//! near it.  Exactly `unsafe-needs-safety` must fire.
+
+pub fn grow(v: &mut Vec<u8>, n: usize) {
+    v.reserve(n);
+    unsafe { v.set_len(n) };
+}

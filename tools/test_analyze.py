@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/analyze.py (stdlib unittest; no dependencies).
+
+Run: python3 tools/test_analyze.py
+Also wired into `cargo test` through rust/tests/analyzer.rs.
+"""
+
+import os
+import sys
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import analyze  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(ROOT, "tools", "analyze_fixtures")
+
+
+class LexerTests(unittest.TestCase):
+    def test_line_comment_blanked_but_recorded(self):
+        lx = analyze.lex("let x = 1; // SAFETY: bound\nlet y = 2;\n")
+        self.assertNotIn("SAFETY", lx.code)
+        self.assertIn("SAFETY", lx.comments[1])
+        self.assertIn("let y = 2;", lx.code_lines[1])
+
+    def test_nested_block_comment(self):
+        lx = analyze.lex("a /* outer /* inner */ still comment */ b\n")
+        self.assertNotIn("inner", lx.code)
+        self.assertIn("a ", lx.code)
+        self.assertIn(" b", lx.code)
+        self.assertIn("still comment", lx.comments[1])
+
+    def test_block_comment_spans_lines(self):
+        lx = analyze.lex("x\n/* one\ntwo SAFETY\nthree */\ny\n")
+        self.assertIn("SAFETY", lx.comments[3])
+        self.assertEqual(lx.code_lines[0], "x")
+        self.assertEqual(lx.code_lines[4], "y")
+
+    def test_string_contents_blanked_but_recorded(self):
+        lx = analyze.lex('let s = "unsafe // not code";\n')
+        self.assertNotIn("unsafe", lx.code)
+        self.assertEqual(lx.comments, {})
+        self.assertEqual(lx.strings, [(1, "unsafe // not code")])
+
+    def test_raw_string_with_hashes(self):
+        lx = analyze.lex('let s = r#"has "quotes" and unsafe"#;\n')
+        self.assertNotIn("unsafe", lx.code)
+        self.assertEqual(lx.strings[0][1], 'has "quotes" and unsafe')
+
+    def test_escaped_quote_in_string(self):
+        lx = analyze.lex('let s = "a\\"b"; let t = "HCCS_X";\n')
+        self.assertEqual([c for _, c in lx.strings], ['a\\"b', "HCCS_X"])
+
+    def test_char_literal_vs_lifetime(self):
+        lx = analyze.lex("fn f<'a>(x: &'a str) -> char { '\"' }\n")
+        # The lifetime survives as code; the char literal's content is
+        # blanked so it can't open a phantom string.
+        self.assertIn("<'a>", lx.code)
+        self.assertEqual(lx.strings, [])
+
+    def test_line_numbers_preserved(self):
+        src = "a\nb\nc\nunsafe\n"
+        lx = analyze.lex(src)
+        self.assertEqual(analyze.line_of(lx.code, lx.code.index("unsafe")), 4)
+
+
+class SpanTests(unittest.TestCase):
+    SRC = (
+        "pub fn top() {}\n"
+        "mod avx2 {\n"
+        "    fn inner() { { } }\n"
+        "}\n"
+        "#[cfg(test)]\n"
+        "mod tests {\n"
+        "    fn t() {}\n"
+        "}\n"
+    )
+
+    def test_mod_and_test_spans(self):
+        lx = analyze.lex(self.SRC)
+        self.assertEqual(analyze.mod_spans(lx, "avx2"), [(2, 4)])
+        self.assertEqual(analyze.test_spans(lx), [(6, 8)])
+        self.assertTrue(analyze.in_spans(3, analyze.mod_spans(lx, "avx2")))
+        self.assertFalse(analyze.in_spans(1, analyze.test_spans(lx)))
+
+
+class RuleTests(unittest.TestCase):
+    def run_rules(self, path, src, readme="", docs=""):
+        return {v.rule for v in analyze.analyze_file(path, src, readme, docs)}
+
+    def test_safety_window_tolerates_attribute_lines(self):
+        src = (
+            "// SAFETY: bounds checked by the caller.\n"
+            "#[inline]\n"
+            "unsafe fn f() {}\n"
+        )
+        self.assertEqual(self.run_rules("rust/src/model/x.rs", src), set())
+
+    def test_unwrap_or_else_is_not_unwrap(self):
+        src = "fn f(m: L) { m.lock().unwrap_or_else(p); }\n"
+        self.assertEqual(self.run_rules("rust/src/net/x.rs", src), set())
+
+    def test_unwrap_in_test_mod_is_allowed(self):
+        src = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u8>) { x.unwrap(); }\n}\n"
+        self.assertEqual(self.run_rules("rust/src/net/x.rs", src), set())
+
+    def test_panic_scope_excludes_other_modules(self):
+        src = "fn f(x: Option<u8>) { x.unwrap(); }\n"
+        self.assertEqual(self.run_rules("rust/src/report.rs", src), set())
+
+    def test_hccs_literal_in_comment_or_string_doc_ok(self):
+        # In a comment: never a violation. In non-test code: flagged.
+        ok = "// HCCS_FORCE_SCALAR is documented here.\nfn f() {}\n"
+        self.assertEqual(self.run_rules("rust/src/simd.rs", ok), set())
+        bad = 'fn f() -> &\'static str { "HCCS_FORCE_SCALAR" }\n'
+        self.assertEqual(
+            self.run_rules("rust/src/simd.rs", bad), {"env-read-outside-registry"}
+        )
+
+    def test_metric_documented_name_passes(self):
+        src = 'fn f(r: &Registry) { r.counter("net.replies").inc(); }\n'
+        self.assertEqual(
+            self.run_rules("rust/src/net/x.rs", src, docs="`net.replies` counter"),
+            set(),
+        )
+
+
+class TreeTests(unittest.TestCase):
+    def test_real_tree_is_clean(self):
+        violations = analyze.scan_repo(ROOT)
+        self.assertEqual(
+            [], [str(v) for v in violations], "tree must lint clean (see output)"
+        )
+
+    def test_every_rule_has_a_fixture_and_fires(self):
+        readme, docs = analyze.read_docs(ROOT)
+        covered = set()
+        for fname in sorted(os.listdir(FIXTURES)):
+            if not fname.endswith(".rs"):
+                continue
+            with open(os.path.join(FIXTURES, fname), encoding="utf-8") as fh:
+                src = fh.read()
+            virtual = src.split("check-as:")[1].split()[0]
+            expected = src.split("expect:")[1].split()[0]
+            fired = {v.rule for v in analyze.analyze_file(virtual, src, readme, docs)}
+            self.assertEqual(
+                {expected}, fired, f"{fname}: expected exactly {{{expected}}}"
+            )
+            covered.add(expected)
+        self.assertEqual(set(analyze.RULES), covered, "every rule needs a fixture")
+
+
+if __name__ == "__main__":
+    unittest.main()
